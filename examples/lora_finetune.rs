@@ -1,0 +1,72 @@
+//! D2FT-LoRA (paper §II-D): fine-tune with frozen base weights and
+//! per-head LoRA adapters on Q/K/V, scheduling the adapter branches with
+//! the same bi-level knapsack.
+//!
+//!     make artifacts && cargo run --release --example lora_finetune
+
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::data::SyntheticKind;
+use d2ft::metrics::pct;
+use d2ft::runtime::ArtifactRegistry;
+use d2ft::schedule::Budget;
+use d2ft::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    d2ft::util::log::init();
+    let args = Cli::new("lora_finetune", "D2FT-LoRA fine-tuning")
+        .flag("batches", "30", "fine-tuning batches")
+        .flag("rank", "0", "LoRA rank (0 = artifact standard rank)")
+        .flag("budget-full", "3", "p_f micro-batches per device")
+        .flag("budget-fwd", "0", "p_o micro-batches per device")
+        .parse()?;
+
+    let registry = ArtifactRegistry::open_default()?;
+    anyhow::ensure!(!registry.lora_ranks.is_empty(), "artifacts built with --skip-lora");
+    let rank = match args.get_usize("rank")? {
+        0 => registry.lora_standard_rank,
+        r => r,
+    };
+    let manifest = registry.lora_manifest(rank)?;
+    println!(
+        "LoRA rank {rank}: {} tensors ({} trainable adapters per block: A/B x Q/K/V x {} heads)",
+        manifest.n_params(),
+        6,
+        manifest.config.heads
+    );
+
+    let budget = Budget::uniform(5, args.get_usize("budget-full")?, args.get_usize("budget-fwd")?);
+    let cfg = TrainerConfig {
+        batches: args.get_usize("batches")?,
+        lr: 0.05,
+        eval_every: 10,
+        ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
+    };
+    println!(
+        "D2FT-LoRA on Cars-like @ compute {} (of standard LoRA) / comm {}",
+        pct(budget.compute_fraction(0.4)),
+        pct(budget.comm_fraction())
+    );
+    let mut trainer = Trainer::new(&registry, manifest, cfg.clone())?;
+    let r = trainer.run()?;
+    println!(
+        "D2FT-LoRA:     top-1 {} | train loss {:.4} | workload var {:.3}",
+        pct(r.test_top1), r.final_train_loss, r.workload_variance
+    );
+
+    // Standard LoRA reference at the same rank (100% budget).
+    let std_cfg = TrainerConfig {
+        scheduler: SchedulerKind::Standard,
+        budget: Budget::uniform(5, 5, 0),
+        eval_every: 0,
+        ..cfg
+    };
+    let mut trainer = Trainer::new(&registry, manifest, std_cfg)?;
+    let rs = trainer.run()?;
+    println!("Standard LoRA: top-1 {} | train loss {:.4}", pct(rs.test_top1), rs.final_train_loss);
+    println!(
+        "paper shape: D2FT-LoRA within ~4-6 points of standard LoRA at 60% cost ({} vs {})",
+        pct(r.test_top1),
+        pct(rs.test_top1)
+    );
+    Ok(())
+}

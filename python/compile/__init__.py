@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas model definitions + AOT lowering.
+
+Nothing in this package is imported at runtime — the rust coordinator only
+consumes the HLO text + parameter blobs under ``artifacts/``.
+"""

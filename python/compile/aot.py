@@ -1,0 +1,217 @@
+"""AOT lowering: JAX programs -> HLO *text* + parameter blobs.
+
+This is the only place Python runs; ``make artifacts`` invokes it once and
+the rust binary is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published ``xla`` 0.1.6 crate) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+(See /opt/xla-example/README.md.)
+
+Emitted per full-FT preset:
+  trainstep.hlo.txt          (params, momentum, x, y, fwd_mask, bwd_mask, lr)
+                             -> (params', momentum', loss, n_correct)
+  trainstep_mb{N}.hlo.txt    micro-batch-size variants (Table VI)
+  eval.hlo.txt               (params, x, y, fwd_mask) -> (loss, n_correct)
+  scores.hlo.txt             (params, x, y) -> [L, H, 4] contribution probe
+  params_init.bin            flat little-endian f32 blob
+  manifest.json              config + param table (flatten order) + io spec
+
+Per LoRA rank r: lora{r}_trainstep / lora{r}_eval (+ lora{STD}_scores),
+lora{r}_params_init.bin, lora{r}_manifest.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import lora as lora_mod
+from . import model as m
+from .vit import PRESETS, ViTConfig, init_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn: Callable, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def flat_params(cfg: ViTConfig, seed: int) -> List:
+    params = init_params(cfg, seed)
+    names = sorted(params.keys())
+    return names, [params[n] for n in names]
+
+
+def dump_params(cfg: ViTConfig, seed: int, bin_path: str) -> List[Dict]:
+    """Write the init blob; return the manifest param table."""
+    names, leaves = flat_params(cfg, seed)
+    table = []
+    offset = 0
+    with open(bin_path, "wb") as f:
+        for name, leaf in zip(names, leaves):
+            import numpy as np
+
+            arr = np.asarray(leaf, dtype="<f4")
+            f.write(arr.tobytes())
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "size": int(arr.size),
+                    "offset": offset,
+                }
+            )
+            offset += int(arr.size)
+    print(f"  wrote {bin_path} ({offset * 4} bytes, {len(table)} tensors)")
+    return table
+
+
+def config_dict(cfg: ViTConfig) -> Dict:
+    return {
+        "img_size": cfg.img_size,
+        "patch": cfg.patch,
+        "dim": cfg.dim,
+        "depth": cfg.depth,
+        "heads": cfg.heads,
+        "mlp_ratio": cfg.mlp_ratio,
+        "classes": cfg.classes,
+        "lora_rank": cfg.lora_rank,
+        "head_dim": cfg.head_dim,
+        "tokens": cfg.tokens,
+    }
+
+
+def specs(cfg: ViTConfig, mb: int):
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    x = sds((mb, cfg.img_size, cfg.img_size, 3), f32)
+    y = sds((mb,), i32)
+    mask = sds((cfg.depth, cfg.heads), f32)
+    lr = sds((), f32)
+    names, leaves = flat_params(cfg, 0)
+    ptree = {n: sds(l.shape, l.dtype) for n, l in zip(names, leaves)}
+    return ptree, x, y, mask, lr
+
+
+def emit_model_set(cfg: ViTConfig, out_dir: str, prefix: str, mb: int,
+                   mb_variants: List[int], seed: int, with_scores: bool) -> Dict:
+    ptree, x, y, mask, lr = specs(cfg, mb)
+    mtree = ptree  # momentum mirrors params
+
+    def ts(params, momentum, xx, yy, fm, bm, lrr):
+        return m.trainstep(cfg, params, momentum, xx, yy, fm, bm, lrr)
+
+    def ev(params, xx, yy, fm):
+        return m.evalstep(cfg, params, xx, yy, fm)
+
+    def sc(params, xx, yy):
+        return m.scorestep(cfg, params, xx, yy)
+
+    arts = {}
+    path = f"{prefix}trainstep.hlo.txt"
+    lower_to_file(ts, (ptree, mtree, x, y, mask, mask, lr), os.path.join(out_dir, path))
+    arts["trainstep"] = path
+    for v in mb_variants:
+        if v == mb:
+            continue
+        _, xv, yv, _, _ = specs(cfg, v)
+        pathv = f"{prefix}trainstep_mb{v}.hlo.txt"
+        lower_to_file(ts, (ptree, mtree, xv, yv, mask, mask, lr), os.path.join(out_dir, pathv))
+        arts[f"trainstep_mb{v}"] = pathv
+    path = f"{prefix}eval.hlo.txt"
+    lower_to_file(ev, (ptree, x, y, mask), os.path.join(out_dir, path))
+    arts["eval"] = path
+    if with_scores:
+        path = f"{prefix}scores.hlo.txt"
+        lower_to_file(sc, (ptree, x, y), os.path.join(out_dir, path))
+        arts["scores"] = path
+
+    table = dump_params(cfg, seed, os.path.join(out_dir, f"{prefix}params_init.bin"))
+    manifest = {
+        "preset_prefix": prefix,
+        "config": config_dict(cfg),
+        "micro_batch": mb,
+        "mb_variants": [v for v in mb_variants if v != mb],
+        "artifacts": arts,
+        "params_bin": f"{prefix}params_init.bin",
+        "n_params": len(table),
+        "total_elems": sum(t["size"] for t in table),
+        "params": table,
+        "trainstep_io": {
+            "inputs": "params*N, momentum*N, x, y, fwd_mask, bwd_mask, lr",
+            "outputs": "params*N, momentum*N, loss, n_correct",
+        },
+    }
+    mpath = os.path.join(out_dir, f"{prefix}manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="e2e", choices=sorted(PRESETS.keys()))
+    ap.add_argument("--micro-batch", type=int, default=8)
+    ap.add_argument("--mb-variants", default="4,16",
+                    help="extra trainstep micro-batch sizes (Table VI)")
+    ap.add_argument("--lora-micro-batch", type=int, default=5,
+                    help="Cars-like LoRA micro-batch (paper: 25/5)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-lora", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = PRESETS[args.preset]
+    mb_variants = [int(v) for v in args.mb_variants.split(",") if v]
+
+    print(f"[aot] full fine-tuning set (preset={args.preset})")
+    emit_model_set(cfg, args.out_dir, "", args.micro_batch, mb_variants,
+                   args.seed, with_scores=True)
+
+    if not args.skip_lora:
+        for rank in lora_mod.LORA_RANKS:
+            print(f"[aot] LoRA set rank={rank}")
+            lcfg = lora_mod.lora_config(cfg, rank)
+            emit_model_set(
+                lcfg, args.out_dir, f"lora{rank}_", args.lora_micro_batch,
+                [], args.seed, with_scores=(rank == lora_mod.STANDARD_RANK),
+            )
+
+    # Top-level index the rust ArtifactRegistry reads first.
+    index = {
+        "preset": args.preset,
+        "full": "manifest.json",
+        "lora_ranks": [] if args.skip_lora else lora_mod.LORA_RANKS,
+        "lora_standard_rank": lora_mod.STANDARD_RANK,
+        "lora_manifests": {}
+        if args.skip_lora
+        else {str(r): f"lora{r}_manifest.json" for r in lora_mod.LORA_RANKS},
+    }
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

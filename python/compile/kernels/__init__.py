@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the HLO artifacts)."""
+
+from .lora_qkv import lora_delta
+from .masked_attention import masked_attention
+
+__all__ = ["masked_attention", "lora_delta"]

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: per-head-masked low-rank (LoRA) projection.
+
+D2FT-LoRA co-locates each head's six LoRA matrices (A/B for Q, K, V) with
+the frozen head on the same device (paper §II-D). The scheduled mask
+gates the *low-rank delta* per head: a ``p_s`` head contributes no delta
+(and the frozen head itself is masked by the attention kernel).
+
+Grid is ``(heads,)``: one program instance per subnet's LoRA branch. The
+activation tile ``x`` ([N, D], N = B*T) is broadcast to every instance;
+A/B tiles are per-head. Both contractions are MXU-shaped matmuls with the
+rank-r intermediate kept in VMEM (N*r*4B — a few KB at LoRA ranks).
+
+interpret=True for CPU-PJRT execution; pure-jnp custom VJP so the LoRA
+trainstep lowers to a single HLO module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lora_kernel(gate_ref, x_ref, a_ref, b_ref, o_ref):
+    """One head tile: ``o = gate * (x @ A) @ B``.
+
+    Block shapes: gate (1,), x (N, D), a (1, D, r), b (1, r, d_out),
+    o (1, N, d_out).
+    """
+    g = gate_ref[0]
+    x = x_ref[...]
+    a = a_ref[0]
+    b = b_ref[0]
+    # Rank-r bottleneck stays in VMEM between the two MXU contractions.
+    z = jnp.dot(x, a)
+    o_ref[0] = g * jnp.dot(z, b)
+
+
+def _lora_forward(x, a, b, gate):
+    h, d, r = a.shape
+    n = x.shape[0]
+    dout = b.shape[-1]
+    return pl.pallas_call(
+        _lora_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi: (hi,)),
+            pl.BlockSpec((n, d), lambda hi: (0, 0)),
+            pl.BlockSpec((1, d, r), lambda hi: (hi, 0, 0)),
+            pl.BlockSpec((1, r, dout), lambda hi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, dout), lambda hi: (hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dout), x.dtype),
+        interpret=True,
+    )(gate, x, a, b)
+
+
+@jax.custom_vjp
+def lora_delta(x, a, b, gate):
+    """Masked per-head LoRA delta: ``out[h] = gate[h] * (x @ a[h]) @ b[h]``.
+
+    Args:
+      x: ``[N, D]`` activations (N = batch * tokens).
+      a: ``[H, D, r]`` down-projections.
+      b: ``[H, r, d_out]`` up-projections.
+      gate: ``[H]`` f32 forward mask in {0, 1}.
+
+    Returns:
+      ``[H, N, d_out]``.
+    """
+    return _lora_forward(x, a, b, gate)
+
+
+def _lora_fwd(x, a, b, gate):
+    return _lora_forward(x, a, b, gate), (x, a, b, gate)
+
+
+def _lora_bwd(res, do):
+    x, a, b, gate = res
+    g = gate[:, None, None]
+    do = do * g  # masked heads: no gradient into the LoRA branch
+    z = jnp.einsum("nd,hdr->hnr", x, a)
+    da = jnp.einsum("nd,hnr->hdr", x, jnp.einsum("hno,hro->hnr", do, b))
+    db = jnp.einsum("hnr,hno->hro", z, do)
+    dx = jnp.einsum("hno,hro,hdr->nd", do, b, a)
+    dgate = jnp.zeros_like(gate)
+    return dx, da, db, dgate
+
+
+lora_delta.defvjp(_lora_fwd, _lora_bwd)

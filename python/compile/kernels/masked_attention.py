@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: per-head-masked multi-head attention (D2FT's hot spot).
+
+The D2FT insight is *head-granular skip*: a subnet is one attention head
+(plus its FFN chunk), and a scheduled ``p_s`` operation skips the head
+entirely — the residual stream is the paper's "shortcut route".
+
+Hardware adaptation (GPU paper -> TPU kernel, see DESIGN.md
+§Hardware-Adaptation): the grid is ``(batch, heads)`` so one program
+instance owns one (sample, subnet) tile. The per-head fwd mask is read
+first; a masked head writes a zero tile. Q/K/V tiles for a single head are
+mapped into VMEM via BlockSpec (T x d_h each, ~260 KB worst case at
+ViT-small shapes), and both contractions (q.k^T, p.v) are whole-tile
+matmuls shaped for the MXU. Softmax is a VPU-axis reduction inside the
+tile; no cross-program communication is needed because one head's
+attention is self-contained — exactly the property D2FT's partitioning
+exploits.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO ops and the same program
+text is what the rust runtime executes. Real-TPU perf is estimated
+structurally in DESIGN.md.
+
+The backward pass is a pure-jnp custom VJP (standard attention backward,
+masked per head) so the whole fwd+bwd trainstep lowers into one HLO
+module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(mask_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (head) tile over the whole micro-batch: masked attention.
+
+    Block shapes: mask (1,), q/k/v/o (B, 1, T, d_h). Batching the tile
+    over B keeps both contractions as large batched matmuls — better MXU
+    occupancy than per-sample tiles, and one grid step per subnet (the
+    D2FT skip unit) instead of B of them. §Perf L1 iteration 1 measured
+    this at ~3x on the CPU interpret path as well.
+
+    The mask multiply is the *last* op so a skipped head emits an exact
+    zero tile (bitwise, not epsilon) — rust-side tests assert this.
+    """
+    m = mask_ref[0]
+    q = q_ref[:, 0]  # [B, T, d_h] in VMEM
+    k = k_ref[:, 0]
+    v = v_ref[:, 0]
+    # MXU contraction 1 (batched): scores [B, T, T].
+    s = jnp.einsum("btd,bsd->bts", q, k) * scale
+    # VPU softmax with max-subtraction for stability.
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # MXU contraction 2 (batched): output [B, T, d_h].
+    o = jnp.einsum("bts,bsd->btd", p, v)
+    o_ref[:, 0] = m * o
+
+
+def _mha_forward(q, k, v, mask):
+    """pallas_call wrapper. q/k/v: [B, H, T, d_h]; mask: [H] f32 in {0,1}."""
+    b, h, t, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(_mha_kernel, scale=scale)
+    spec_qkv = pl.BlockSpec((b, 1, t, dh), lambda hi: (0, hi, 0, 0))
+    spec_mask = pl.BlockSpec((1,), lambda hi: (hi,))
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[spec_mask, spec_qkv, spec_qkv, spec_qkv],
+        out_specs=spec_qkv,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        interpret=True,
+    )(mask, q, k, v)
+
+
+@jax.custom_vjp
+def masked_attention(q, k, v, mask):
+    """Per-head masked attention: ``out[:, h] = mask[h] * attn(q_h, k_h, v_h)``.
+
+    Args:
+      q, k, v: ``[B, H, T, d_h]`` f32.
+      mask: ``[H]`` f32 forward mask (0 -> head skipped / shortcut ``p_s``).
+
+    Returns:
+      ``[B, H, T, d_h]`` f32.
+    """
+    return _mha_forward(q, k, v, mask)
+
+
+def _mha_fwd(q, k, v, mask):
+    return _mha_forward(q, k, v, mask), (q, k, v, mask)
+
+
+def _mha_bwd(res, do):
+    """Pure-jnp attention backward, masked per head.
+
+    Recomputes p (cheaper than storing the [B,H,T,T] probabilities for
+    ViT-scale T — the rematerialization-vs-memory choice DESIGN.md §Perf
+    records for L2).
+    """
+    q, k, v, mask = res
+    dh = q.shape[-1]
+    scale = 1.0 / (dh**0.5)
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    m = mask[None, :, None, None]
+    do = do * m  # masked heads contribute no gradient
+    dv = jnp.einsum("bhts,bhtd->bhsd", p, do)
+    dp = jnp.einsum("bhtd,bhsd->bhts", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhts,bhsd->bhtd", ds, k) * scale
+    dk = jnp.einsum("bhts,bhtd->bhsd", ds, q) * scale
+    dmask = jnp.zeros_like(mask)  # masks are schedule inputs, never trained
+    return dq, dk, dv, dmask
+
+
+masked_attention.defvjp(_mha_fwd, _mha_bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest + hypothesis assert kernel == ref across shapes/dtypes)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_attention_ref(q, k, v, mask):
+    """Reference per-head masked attention. Same contract as
+    ``masked_attention.masked_attention`` ([B, H, T, d_h], mask [H])."""
+    dh = q.shape[-1]
+    scale = 1.0 / (dh**0.5)
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhts,bhsd->bhtd", p, v)
+    return o * mask[None, :, None, None]
+
+
+def lora_delta_ref(x, a, b, gate):
+    """Reference masked LoRA delta. Same contract as
+    ``lora_qkv.lora_delta`` (x [N, D], a [H, D, r], b [H, r, d_out])."""
+    z = jnp.einsum("nd,hdr->hnr", x, a)
+    o = jnp.einsum("hnr,hro->hno", z, b)
+    return o * gate[:, None, None]

@@ -1,0 +1,125 @@
+"""L2 entry points lowered by aot.py: trainstep / eval / score-probe.
+
+Each function here becomes one HLO artifact. The whole fwd+bwd+SGD update
+is a single fused XLA program so the rust hot loop does exactly one PJRT
+execute per (micro-batch, step) — no host round-trips between phases
+(DESIGN.md §Perf, L2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .vit import ViTConfig, forward, init_params, loss_fn
+
+MOMENTUM = 0.9  # SGD momentum, paper §IV-A ("SGD optimizer with momentum")
+
+
+def param_names(cfg: ViTConfig) -> List[str]:
+    """Names in jax's dict-flatten (sorted-key) order — the exact HLO
+    parameter order, recorded in manifest.json for the rust ParamStore."""
+    return sorted(init_params(cfg).keys())
+
+
+def trainstep(cfg: ViTConfig, params, momentum, x, y, fwd_mask, bwd_mask, lr):
+    """One micro-batch SGD-momentum step under a D2FT schedule row.
+
+    Subnets scheduled p_o / p_s receive exactly-zero gradients (cut by
+    stop_gradient in the model); their momentum decays like a zero-grad
+    PyTorch SGD step.
+
+    Returns ``(new_params, new_momentum, loss, n_correct)``.
+    """
+    grad_fn = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, x, y, fwd_mask, bwd_mask), has_aux=True
+    )
+    (loss, n_correct), grads = grad_fn(params)
+    new_m = jax.tree_util.tree_map(lambda m, g: MOMENTUM * m + g, momentum, grads)
+    new_p = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, new_m, loss, n_correct
+
+
+def evalstep(cfg: ViTConfig, params, x, y, fwd_mask):
+    """Forward-only pass (also the timed ``p_o`` program for Table IV).
+
+    Inference uses all parameters (paper §III-A), i.e. fwd_mask of ones —
+    the mask input exists so the same artifact times partial forwards.
+    """
+    ones = jnp.ones((cfg.depth, cfg.heads), jnp.float32)
+    loss, n_correct = loss_fn(cfg, params, x, y, fwd_mask, ones)
+    return loss, n_correct
+
+
+def _subnet_reduce(cfg: ViTConfig, tree: Dict[str, jax.Array], fn) -> jax.Array:
+    """Reduce per-(block, head) over every tensor slice owned by a subnet.
+
+    Subnet (l, h) owns: the h-th head slice of wqkv/bqkv, the h-th row
+    block of wproj, and the h-th chunk of fc1/fc2 (paper §II-A1). In LoRA
+    mode it additionally owns the six per-head LoRA matrices.
+
+    ``fn`` maps an array to a per-head vector of shape [H] (e.g. sum of
+    squares over all non-head axes). Returns ``[L, H]``.
+    """
+    heads, d, dh, mc = cfg.heads, cfg.dim, cfg.head_dim, cfg.mlp_chunk
+    rows = []
+    for i in range(cfg.depth):
+        p = f"b{i:02d}_"
+        acc = jnp.zeros((heads,), jnp.float32)
+        # wqkv [D, 3D] -> [D, 3, H, dh]: head axis 2.
+        acc += fn(tree[p + "wqkv"].reshape(d, 3, heads, dh), (0, 1, 3))
+        acc += fn(tree[p + "bqkv"].reshape(3, heads, dh), (0, 2))
+        # wproj [D, D] -> [H, dh, D]: head axis 0.
+        acc += fn(tree[p + "wproj"].reshape(heads, dh, d), (1, 2))
+        acc += fn(tree[p + "fc1_w"].reshape(d, heads, mc), (0, 2))
+        acc += fn(tree[p + "fc1_b"].reshape(heads, mc), (1,))
+        acc += fn(tree[p + "fc2_w"].reshape(heads, mc, d), (1, 2))
+        if cfg.lora_rank > 0:
+            for kind in ("q", "k", "v"):
+                acc += fn(tree[p + f"lora_a{kind}"], (1, 2))
+                acc += fn(tree[p + f"lora_b{kind}"], (1, 2))
+        rows.append(acc)
+    return jnp.stack(rows)  # [L, H]
+
+
+def _head_axis_sum(arr, axes, head_axis_fn):
+    return jnp.sum(head_axis_fn(arr), axis=axes)
+
+
+def scorestep(cfg: ViTConfig, params, x, y):
+    """Contribution-score probe for one micro-batch (paper §II-A3).
+
+    Runs fwd+bwd with all-ones masks *without updating weights* and emits
+    the four candidate metrics per subnet, ``[L, H, 4]``:
+
+      [..., 0] Fisher information   sum g^2          (forward score)
+      [..., 1] Gradient magnitude   sum |g|
+      [..., 2] Taylor importance    sum |w * g|
+      [..., 3] Weight magnitude     sum |w|          (backward score)
+
+    The rust ScoreBook averages probes over micro-batches and feeds the
+    selected channels into the bi-level knapsack.
+    """
+    ones = jnp.ones((cfg.depth, cfg.heads), jnp.float32)
+    grad_fn = jax.grad(
+        lambda p: loss_fn(cfg, p, x, y, ones, ones)[0]
+    )
+    grads = grad_fn(params)
+
+    def reduce_with(tree, elem):
+        def fn(arr, axes):
+            return jnp.sum(elem(arr), axis=axes)
+
+        return _subnet_reduce(cfg, tree, fn)
+
+    fisher = reduce_with(grads, jnp.square)
+    gradmag = reduce_with(grads, jnp.abs)
+    taylor = _subnet_reduce(
+        cfg,
+        {k: grads[k] * params[k] for k in grads},
+        lambda arr, axes: jnp.sum(jnp.abs(arr), axis=axes),
+    )
+    weightmag = reduce_with(params, jnp.abs)
+    return jnp.stack([fisher, gradmag, taylor, weightmag], axis=-1)

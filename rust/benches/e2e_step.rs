@@ -1,0 +1,104 @@
+//! Bench: the end-to-end hot path — one fused trainstep execute (fwd +
+//! bwd + SGD under masks), the score probe, the eval pass, and the full
+//! coordinator batch (schedule + 5 steps + accounting).
+//!
+//! This is the profile the §Perf pass iterates on; requires artifacts.
+
+use d2ft::cluster::CostModel;
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::data::{Batcher, DatasetSpec, SyntheticKind};
+use d2ft::partition::Partition;
+use d2ft::runtime::{ArtifactRegistry, Session};
+use d2ft::schedule::bilevel::BiLevel;
+use d2ft::schedule::{Budget, MaskPair, Scheduler};
+use d2ft::scores::{ScoreBook, ScoreConfig};
+use d2ft::tensor::Tensor;
+
+fn main() {
+    let registry = match ArtifactRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping e2e bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let manifest = &registry.full_manifest;
+    let mc = manifest.config.clone();
+    let mb = manifest.micro_batch;
+    let cfg = TrainerConfig::quick(
+        SyntheticKind::Cifar100Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 3, 1),
+    );
+    let trainer = Trainer::new(&registry, manifest, cfg).unwrap();
+    let mut state = trainer.init_state().unwrap();
+    let session = Session::new(&registry, manifest).unwrap();
+    let part = Partition::per_head(&mc);
+
+    let data =
+        DatasetSpec::preset(SyntheticKind::Cifar100Like, mc.img_size, 5 * mb, 7).generate("train");
+    let mut batcher = Batcher::new(&data, mb, 5, 3);
+    let micros = batcher.next_batch().unwrap();
+    let lits: Vec<(xla::Literal, xla::Literal)> = micros
+        .iter()
+        .map(|(x, y)| (session.x_literal(x).unwrap(), session.y_literal(y).unwrap()))
+        .collect();
+    let ones = MaskPair::ones(mc.depth, mc.heads);
+
+    // warmup + compile
+    session.step(&mut state, &lits[0].0, &lits[0].1, &ones, 0.01).unwrap();
+    session.eval(&state, &lits[0].0, &lits[0].1, None).unwrap();
+    session.probe_scores(&state, &lits[0].0, &lits[0].1).unwrap();
+
+    let time = |label: &str, mut f: Box<dyn FnMut() + '_>| {
+        let reps = 5usize;
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        println!("e2e {label:<28} best {best:>10.2}ms");
+        best
+    };
+
+    let step_ms = time(
+        "trainstep (p_f, fused)",
+        Box::new(|| {
+            session.step(&mut state, &lits[0].0, &lits[0].1, &ones, 0.01).unwrap();
+        }),
+    );
+    time(
+        "eval (p_o forward)",
+        Box::new(|| {
+            session.eval(&state, &lits[0].0, &lits[0].1, None).unwrap();
+        }),
+    );
+    time(
+        "score probe",
+        Box::new(|| {
+            session.probe_scores(&state, &lits[0].0, &lits[0].1).unwrap();
+        }),
+    );
+
+    // full coordinator batch: probe-free steady state (scores cached)
+    let probes: Vec<Tensor> = lits
+        .iter()
+        .map(|(x, y)| session.probe_scores(&state, x, y).unwrap())
+        .collect();
+    let book = ScoreBook::from_probes(&part, &probes);
+    let mut sched = BiLevel::new(ScoreConfig::default(), CostModel::paper());
+    let budget = Budget::uniform(5, 3, 1);
+    let batch_ms = time(
+        "coordinator batch (5 steps)",
+        Box::new(|| {
+            let table = sched.schedule(&book, &budget);
+            for (i, (x, y)) in lits.iter().enumerate() {
+                let masks = table.masks_for_micro(&part, i);
+                session.step(&mut state, x, y, &masks, 0.01).unwrap();
+            }
+        }),
+    );
+    let overhead = (batch_ms - 5.0 * step_ms) / batch_ms * 100.0;
+    println!("e2e coordinator overhead        {overhead:>9.1}% of batch (target < 5%)");
+}

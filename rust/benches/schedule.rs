@@ -1,0 +1,65 @@
+//! Bench: scheduling algorithms on the paper's 72-subnet x 5-micro-batch
+//! instance (the L3 hot path that runs once per batch).
+//!
+//! Perf target (DESIGN.md §Perf): full-schedule construction < 1 ms so
+//! scheduling never gates a training step.
+
+use std::time::Duration;
+
+use d2ft::cluster::CostModel;
+use d2ft::partition::Partition;
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::bilevel::BiLevel;
+use d2ft::schedule::dpruning::DPruning;
+use d2ft::schedule::random_sched::RandomSched;
+use d2ft::schedule::scaler::{Lambda, ScalerSched};
+use d2ft::schedule::{Budget, Scheduler};
+use d2ft::scores::{Metric, ScoreBook, ScoreConfig};
+use d2ft::util::bench::{black_box, Bench};
+use d2ft::util::rng::Rng;
+
+fn vit_small() -> ModelConfig {
+    ModelConfig {
+        img_size: 224, patch: 16, dim: 384, depth: 12, heads: 6,
+        mlp_ratio: 4, classes: 196, lora_rank: 0, head_dim: 64, tokens: 197,
+    }
+}
+
+fn book(n_subnets: usize, n_micro: usize) -> ScoreBook {
+    let mut rng = Rng::new(1);
+    let mut b = ScoreBook::zeros(n_subnets, n_micro);
+    for k in 0..n_subnets {
+        for i in 0..n_micro {
+            for m in [Metric::Fisher, Metric::GradMag, Metric::Taylor, Metric::WeightMag] {
+                b.set(m, k, i, rng.next_f64() * 10.0);
+            }
+        }
+    }
+    b
+}
+
+fn main() {
+    let part = Partition::per_head(&vit_small());
+    let b5 = book(part.n_subnets(), 5);
+    let b20 = book(part.n_subnets(), 20);
+    let budget5 = Budget::uniform(5, 3, 1);
+    let budget20 = Budget::uniform(20, 8, 8);
+    let t = Duration::from_millis(800);
+
+    let mut d2ft = BiLevel::new(ScoreConfig::default(), CostModel::paper());
+    Bench::new("d2ft-bilevel-72x5").target_time(t).run(|| black_box(d2ft.schedule(&b5, &budget5))).report();
+    Bench::new("d2ft-bilevel-72x20").target_time(t).run(|| black_box(d2ft.schedule(&b20, &budget20))).report();
+
+    let mut scaler = ScalerSched::new(Lambda::Max, ScoreConfig::default(), CostModel::paper());
+    Bench::new("scaler-max-72x5").target_time(t).run(|| black_box(scaler.schedule(&b5, &budget5))).report();
+
+    let mut random = RandomSched::new(3);
+    Bench::new("random-72x5").target_time(t).run(|| black_box(random.schedule(&b5, &budget5))).report();
+
+    let mut dp = DPruning::magnitude();
+    Bench::new("dpruning-m-72x5").target_time(t).run(|| black_box(dp.schedule(&b5, &budget5))).report();
+
+    // Schedule-to-mask lowering (runs per micro-batch in the hot loop).
+    let table = d2ft.schedule(&b5, &budget5);
+    Bench::new("masks-for-micro-72").target_time(t).run(|| black_box(table.masks_for_micro(&part, 2))).report();
+}

@@ -1,0 +1,62 @@
+//! Bench: paper Table II — per-subnet batch execution time under each
+//! scheduling method, via the V100-calibrated exec-time model (makespan
+//! + mean device time) on the 72-subnet instance.
+
+use std::time::Duration;
+
+use d2ft::cluster::{CostModel, ExecTimeModel};
+use d2ft::partition::Partition;
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::bilevel::BiLevel;
+use d2ft::schedule::dpruning::DPruning;
+use d2ft::schedule::moe_gshard::MoeGshard;
+use d2ft::schedule::random_sched::RandomSched;
+use d2ft::schedule::{Budget, Scheduler};
+use d2ft::scores::{Metric, ScoreBook, ScoreConfig};
+use d2ft::util::bench::{black_box, Bench};
+use d2ft::util::rng::Rng;
+
+fn main() {
+    let cfg = ModelConfig {
+        img_size: 224, patch: 16, dim: 384, depth: 12, heads: 6,
+        mlp_ratio: 4, classes: 196, lora_rank: 0, head_dim: 64, tokens: 197,
+    };
+    let part = Partition::per_head(&cfg);
+    let mut rng = Rng::new(2);
+    let mut book = ScoreBook::zeros(part.n_subnets(), 5);
+    for k in 0..part.n_subnets() {
+        for i in 0..5 {
+            for m in [Metric::Fisher, Metric::GradMag, Metric::Taylor, Metric::WeightMag] {
+                book.set(m, k, i, rng.next_f64() * 10.0);
+            }
+        }
+    }
+    let budget = Budget::uniform(5, 3, 0); // the paper's 60% setting
+    let model = ExecTimeModel::paper();
+
+    let mut methods: Vec<(&str, Box<dyn Scheduler>)> = vec![
+        ("D2FT (Ours)", Box::new(BiLevel::new(ScoreConfig::default(), CostModel::paper()))),
+        ("Random", Box::new(RandomSched::new(7))),
+        ("DPruning M/G", Box::new(DPruning::magnitude_gradient())),
+        ("DPruning M", Box::new(DPruning::magnitude())),
+        ("MoE Gshard", Box::new(MoeGshard::new(9, 6))),
+    ];
+    println!("Table II analogue (V100-calibrated model, 60% budget):");
+    println!("{:<14} {:>12} {:>16}", "method", "makespan", "mean device");
+    for (name, sched) in methods.iter_mut() {
+        let table = sched.schedule(&book, &budget);
+        println!(
+            "{:<14} {:>10.2}ms {:>14.2}ms",
+            name,
+            model.makespan_ms(&table),
+            model.mean_device_time_ms(&table)
+        );
+    }
+    // And the wall-clock cost of the accounting itself:
+    let mut d2ft = BiLevel::new(ScoreConfig::default(), CostModel::paper());
+    let table = d2ft.schedule(&book, &budget);
+    Bench::new("exec-time-makespan-72")
+        .target_time(Duration::from_millis(400))
+        .run(|| black_box(model.makespan_ms(&table)))
+        .report();
+}

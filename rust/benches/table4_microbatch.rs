@@ -1,0 +1,68 @@
+//! Bench: paper Table IV — real PJRT execution time of the fused p_f
+//! trainstep vs the p_o forward pass for 1..5 micro-batches on this
+//! host. Requires `make artifacts`.
+
+use d2ft::cluster::ExecTimeModel;
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::data::{DatasetSpec, SyntheticKind};
+use d2ft::runtime::{ArtifactRegistry, Session};
+use d2ft::schedule::{Budget, MaskPair, Op};
+
+fn main() {
+    let registry = match ArtifactRegistry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping table4 bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let manifest = &registry.full_manifest;
+    let cfg = TrainerConfig::quick(
+        SyntheticKind::Cifar100Like,
+        SchedulerKind::Standard,
+        Budget::uniform(5, 5, 0),
+    );
+    let trainer = Trainer::new(&registry, manifest, cfg).unwrap();
+    let mut state = trainer.init_state().unwrap();
+    let session = Session::new(&registry, manifest).unwrap();
+    let mc = &manifest.config;
+    let mb = manifest.micro_batch;
+    let d = DatasetSpec::preset(SyntheticKind::Cifar100Like, mc.img_size, mb, 5).generate("train");
+    let (xt, yt) = d.gather(&(0..mb).collect::<Vec<_>>());
+    let x = session.x_literal(&xt).unwrap();
+    let y = session.y_literal(&yt).unwrap();
+    let masks = MaskPair::ones(mc.depth, mc.heads);
+    // warmup
+    session.step(&mut state, &x, &y, &masks, 0.0).unwrap();
+    session.eval(&state, &x, &y, None).unwrap();
+
+    let paper = ExecTimeModel::paper();
+    println!(
+        "{:>3} {:>14} {:>14} {:>12} {:>12} {:>10}",
+        "n", "p_f host", "p_o host", "p_f paper", "p_o paper", "ratio"
+    );
+    for n in 1..=5usize {
+        let reps = 3usize;
+        let mut full_best = f64::INFINITY;
+        let mut fwd_best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            for _ in 0..n {
+                session.step(&mut state, &x, &y, &masks, 0.0).unwrap();
+            }
+            full_best = full_best.min(t0.elapsed().as_secs_f64() * 1e3);
+            let t1 = std::time::Instant::now();
+            for _ in 0..n {
+                session.eval(&state, &x, &y, None).unwrap();
+            }
+            fwd_best = fwd_best.min(t1.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{n:>3} {full_best:>12.2}ms {fwd_best:>12.2}ms {:>10.2}ms {:>10.2}ms {:>10.2}",
+            paper.time_ms(Op::Full, n),
+            paper.time_ms(Op::ForwardOnly, n),
+            fwd_best / full_best,
+        );
+    }
+    println!("(paper Table IV ratio ~= 0.40 — the cost model's c_f calibration)");
+}

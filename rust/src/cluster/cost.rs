@@ -1,0 +1,97 @@
+//! The paper's operation cost model (§IV-A).
+//!
+//! Measured on their V100 testbed (Table IV): forward ≈ 40% of a full
+//! forward+backward, independent of micro-batch count, so
+//!
+//! * compute:  p_f = 1.0 full-op, p_o = 0.4, p_s = 0
+//! * comm:     p_f = 1.0 (activations fwd + gradients bwd, equal sizes),
+//!             p_o = 0.5, p_s = 0
+//!
+//! Integer *units* (full = 5, fwd = 2) keep the knapsack DP exact.
+
+use crate::schedule::table::Op;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Integer units of a forward pass (default 2).
+    fwd: usize,
+    /// Integer units of a backward pass (default 3).
+    bwd: usize,
+}
+
+impl CostModel {
+    /// The paper's calibration: c_f = 0.4 * (c_f + c_b).
+    pub fn paper() -> CostModel {
+        CostModel { fwd: 2, bwd: 3 }
+    }
+
+    /// Custom integer calibration (c_f = fwd/(fwd+bwd)).
+    pub fn new(fwd: usize, bwd: usize) -> CostModel {
+        assert!(fwd > 0 && bwd > 0);
+        CostModel { fwd, bwd }
+    }
+
+    /// Units of one full (fwd+bwd) op.
+    pub fn full_units(&self) -> usize {
+        self.fwd + self.bwd
+    }
+
+    /// Units of one forward-only op.
+    pub fn fwd_units(&self) -> usize {
+        self.fwd
+    }
+
+    /// Forward fraction of a full op (paper: 0.4).
+    pub fn fwd_frac(&self) -> f64 {
+        self.fwd as f64 / self.full_units() as f64
+    }
+
+    /// Compute units charged for an op on one micro-batch.
+    pub fn compute_units(&self, op: Op) -> usize {
+        match op {
+            Op::Full => self.full_units(),
+            Op::ForwardOnly => self.fwd,
+            Op::Shortcut => 0,
+        }
+    }
+
+    /// Compute cost in full-op equivalents (p_f = 1.0).
+    pub fn compute_cost(&self, op: Op) -> f64 {
+        self.compute_units(op) as f64 / self.full_units() as f64
+    }
+
+    /// Communication cost in full-op equivalents: a p_o device only ships
+    /// activations (half the traffic), a p_s device ships nothing.
+    pub fn comm_cost(&self, op: Op) -> f64 {
+        match op {
+            Op::Full => 1.0,
+            Op::ForwardOnly => 0.5,
+            Op::Shortcut => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_calibration() {
+        let c = CostModel::paper();
+        assert_eq!(c.full_units(), 5);
+        assert_eq!(c.fwd_units(), 2);
+        assert!((c.fwd_frac() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn op_costs() {
+        let c = CostModel::paper();
+        assert_eq!(c.compute_units(Op::Full), 5);
+        assert_eq!(c.compute_units(Op::ForwardOnly), 2);
+        assert_eq!(c.compute_units(Op::Shortcut), 0);
+        assert_eq!(c.compute_cost(Op::Full), 1.0);
+        assert!((c.compute_cost(Op::ForwardOnly) - 0.4).abs() < 1e-12);
+        assert_eq!(c.comm_cost(Op::ForwardOnly), 0.5);
+        assert_eq!(c.comm_cost(Op::Shortcut), 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Per-subnet execution-time model (paper Tables II & IV).
+//!
+//! The paper measures how long one subnet takes to process 1..5
+//! micro-batches under `p_f` and `p_o` on their V100. We reproduce the
+//! *model*: a calibrated table with linear extrapolation, which the
+//! cluster uses to estimate batch makespan (the slowest device gates the
+//! step — the straggler effect Table II demonstrates). The table can be
+//! calibrated from the paper's numbers or re-measured on this host's
+//! PJRT runtime (`calibrate`).
+
+use crate::schedule::table::{Op, ScheduleTable};
+
+/// Milliseconds for a subnet to process n micro-batches, per op kind.
+#[derive(Clone, Debug)]
+pub struct ExecTimeModel {
+    /// `full_ms[n-1]` = time for n micro-batches under p_f.
+    full_ms: Vec<f64>,
+    /// Same for p_o.
+    fwd_ms: Vec<f64>,
+}
+
+impl ExecTimeModel {
+    /// The paper's Table IV measurements (V100, ViT-small subnet).
+    pub fn paper() -> ExecTimeModel {
+        ExecTimeModel {
+            full_ms: vec![2.01, 2.20, 2.27, 2.74, 3.16],
+            fwd_ms: vec![0.86, 1.01, 1.05, 1.20, 1.48],
+        }
+    }
+
+    /// Calibrate from measured per-micro-batch-count timings.
+    pub fn calibrated(full_ms: Vec<f64>, fwd_ms: Vec<f64>) -> ExecTimeModel {
+        assert!(!full_ms.is_empty() && full_ms.len() == fwd_ms.len());
+        ExecTimeModel { full_ms, fwd_ms }
+    }
+
+    fn lookup(table: &[f64], n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        if n <= table.len() {
+            return table[n - 1];
+        }
+        // Linear extrapolation from the last two points.
+        let m = table.len();
+        let slope = if m >= 2 { table[m - 1] - table[m - 2] } else { table[0] };
+        table[m - 1] + slope * (n - m) as f64
+    }
+
+    /// Time for one subnet to run `n` micro-batches under `op`.
+    pub fn time_ms(&self, op: Op, n: usize) -> f64 {
+        match op {
+            Op::Full => Self::lookup(&self.full_ms, n),
+            Op::ForwardOnly => Self::lookup(&self.fwd_ms, n),
+            Op::Shortcut => 0.0,
+        }
+    }
+
+    /// Time for a device given its schedule row (p_f count + p_o count;
+    /// batched execution, as the paper measures).
+    pub fn device_time_ms(&self, table: &ScheduleTable, subnet: usize) -> f64 {
+        let nf = table.count_row(subnet, Op::Full);
+        let no = table.count_row(subnet, Op::ForwardOnly);
+        self.time_ms(Op::Full, nf) + self.time_ms(Op::ForwardOnly, no)
+    }
+
+    /// Per-device speed multiplier variant (computational heterogeneity,
+    /// §IV-D: "high speed" devices run ops faster).
+    pub fn device_time_scaled_ms(
+        &self,
+        table: &ScheduleTable,
+        subnet: usize,
+        speed: f64,
+    ) -> f64 {
+        assert!(speed > 0.0);
+        self.device_time_ms(table, subnet) / speed
+    }
+
+    /// Batch makespan: the slowest device gates the synchronous step.
+    pub fn makespan_ms(&self, table: &ScheduleTable) -> f64 {
+        (0..table.n_subnets)
+            .map(|k| self.device_time_ms(table, k))
+            .fold(0.0, f64::max)
+    }
+
+    /// Average device time (the "execution time" of paper Table II when
+    /// workloads are balanced: equal to makespan iff variance is 0).
+    pub fn mean_device_time_ms(&self, table: &ScheduleTable) -> f64 {
+        if table.n_subnets == 0 {
+            return 0.0;
+        }
+        (0..table.n_subnets)
+            .map(|k| self.device_time_ms(table, k))
+            .sum::<f64>()
+            / table.n_subnets as f64
+    }
+
+    /// The paper's observed forward/full ratio (≈ 0.4 across counts).
+    pub fn fwd_ratio(&self, n: usize) -> f64 {
+        self.time_ms(Op::ForwardOnly, n) / self.time_ms(Op::Full, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::table::ScheduleTable;
+
+    #[test]
+    fn paper_table_iv_values() {
+        let m = ExecTimeModel::paper();
+        assert_eq!(m.time_ms(Op::Full, 1), 2.01);
+        assert_eq!(m.time_ms(Op::Full, 5), 3.16);
+        assert_eq!(m.time_ms(Op::ForwardOnly, 3), 1.05);
+        assert_eq!(m.time_ms(Op::Shortcut, 4), 0.0);
+        assert_eq!(m.time_ms(Op::Full, 0), 0.0);
+    }
+
+    #[test]
+    fn fwd_ratio_near_forty_percent() {
+        let m = ExecTimeModel::paper();
+        for n in 1..=5 {
+            let r = m.fwd_ratio(n);
+            assert!((0.35..=0.50).contains(&r), "ratio {r} at n={n}");
+        }
+    }
+
+    #[test]
+    fn extrapolates_beyond_table() {
+        let m = ExecTimeModel::paper();
+        let t6 = m.time_ms(Op::Full, 6);
+        assert!((t6 - (3.16 + (3.16 - 2.74))).abs() < 1e-9);
+        assert!(m.time_ms(Op::Full, 7) > t6);
+    }
+
+    #[test]
+    fn makespan_is_max_device_time() {
+        let m = ExecTimeModel::paper();
+        let mut t = ScheduleTable::all(3, 5, Op::Shortcut);
+        // device 0: 3 p_f; device 1: 5 p_o; device 2: idle.
+        for i in 0..3 {
+            t.set(0, i, Op::Full);
+        }
+        for i in 0..5 {
+            t.set(1, i, Op::ForwardOnly);
+        }
+        let d0 = m.device_time_ms(&t, 0);
+        let d1 = m.device_time_ms(&t, 1);
+        assert_eq!(d0, 2.27);
+        assert_eq!(d1, 1.48);
+        assert_eq!(m.device_time_ms(&t, 2), 0.0);
+        assert_eq!(m.makespan_ms(&t), d0.max(d1));
+    }
+
+    #[test]
+    fn speed_scaling() {
+        let m = ExecTimeModel::paper();
+        let t = ScheduleTable::all(1, 2, Op::Full);
+        assert!((m.device_time_scaled_ms(&t, 0, 2.0) - m.device_time_ms(&t, 0) / 2.0).abs() < 1e-12);
+    }
+}

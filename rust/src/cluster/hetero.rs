@@ -1,0 +1,108 @@
+//! Device heterogeneity configurations (paper §IV-D, Tables VII & VIII).
+//!
+//! * **Memory heterogeneity**: "large" devices host two heads + 1/3 FFN
+//!   (a merged 2-head subnet), "small" devices one head + 1/6 FFN —
+//!   expressed through [`crate::partition::Partition::heterogeneous`].
+//! * **Computational heterogeneity**: all devices host one head, but
+//!   "high speed" devices run `3 p_f + 1 p_o` per batch while "slow"
+//!   devices run `2 p_f + 2 p_o` — expressed as per-device budget
+//!   overrides plus a speed multiplier in the exec-time model.
+
+use crate::partition::Partition;
+use crate::runtime::ModelConfig;
+use crate::schedule::table::Budget;
+
+/// A heterogeneous cluster description.
+#[derive(Clone, Debug)]
+pub struct HeteroSpec {
+    /// Merged 2-head subnets (memory heterogeneity); 0 = homogeneous.
+    pub n_large_memory: usize,
+    /// Devices with the fast budget (computational heterogeneity).
+    pub n_high_speed: usize,
+    /// Speed multiplier for high-speed devices (exec-time division).
+    pub speed_factor: f64,
+}
+
+impl HeteroSpec {
+    pub fn homogeneous() -> HeteroSpec {
+        HeteroSpec { n_large_memory: 0, n_high_speed: 0, speed_factor: 1.5 }
+    }
+
+    /// Paper Table VII rows: {9, 14, 19} large-memory devices.
+    pub fn memory(n_large: usize) -> HeteroSpec {
+        HeteroSpec { n_large_memory: n_large, n_high_speed: 0, speed_factor: 1.5 }
+    }
+
+    /// Paper Table VIII rows: {9, 14, 19} high-speed devices.
+    pub fn compute(n_fast: usize) -> HeteroSpec {
+        HeteroSpec { n_large_memory: 0, n_high_speed: n_fast, speed_factor: 1.5 }
+    }
+
+    /// Build the partition this spec induces.
+    pub fn partition(&self, cfg: &ModelConfig) -> Partition {
+        if self.n_large_memory > 0 {
+            Partition::heterogeneous(cfg, self.n_large_memory)
+        } else {
+            Partition::per_head(cfg)
+        }
+    }
+
+    /// Build the budget: slow devices 2 p_f + 2 p_o, fast devices
+    /// 3 p_f + 1 p_o (the paper's §IV-D setting), homogeneous default
+    /// `base`.
+    pub fn budget(&self, base: Budget, n_devices: usize) -> Budget {
+        let mut b = base;
+        for k in 0..self.n_high_speed.min(n_devices) {
+            b = b.with_device_override(k, 3, 1);
+        }
+        b
+    }
+
+    /// Per-device speed multipliers for the exec-time model.
+    pub fn speeds(&self, n_devices: usize) -> Vec<f64> {
+        (0..n_devices)
+            .map(|k| if k < self.n_high_speed { self.speed_factor } else { 1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            img_size: 32, patch: 4, dim: 192, depth: 6, heads: 6,
+            mlp_ratio: 4, classes: 196, lora_rank: 0, head_dim: 32, tokens: 65,
+        }
+    }
+
+    #[test]
+    fn memory_hetero_shrinks_device_count() {
+        let spec = HeteroSpec::memory(9);
+        let p = spec.partition(&cfg());
+        p.validate().unwrap();
+        assert_eq!(p.n_subnets(), 36 - 9);
+        assert_eq!(p.subnets.iter().filter(|s| s.n_heads() == 2).count(), 9);
+    }
+
+    #[test]
+    fn compute_hetero_overrides_budgets() {
+        let spec = HeteroSpec::compute(3);
+        let b = spec.budget(Budget::uniform(5, 2, 2), 10);
+        assert_eq!(b.for_device(0), (3, 1));
+        assert_eq!(b.for_device(2), (3, 1));
+        assert_eq!(b.for_device(3), (2, 2));
+        let speeds = spec.speeds(5);
+        assert_eq!(speeds, vec![1.5, 1.5, 1.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn homogeneous_is_identity() {
+        let spec = HeteroSpec::homogeneous();
+        let p = spec.partition(&cfg());
+        assert_eq!(p.n_subnets(), 36);
+        let b = spec.budget(Budget::uniform(5, 2, 2), 36);
+        assert_eq!(b.for_device(17), (2, 2));
+    }
+}

@@ -1,0 +1,18 @@
+//! Simulated K-device cluster (DESIGN.md Substitution 1).
+//!
+//! The paper's distributed claims are about *scheduling*: which (subnet,
+//! micro-batch) pairs run where, and what that costs. The numerics run
+//! once on the PJRT CPU client — bit-identical to what each simulated
+//! device would compute — while this module charges every simulated
+//! device the paper's cost model and execution-time model, tracks
+//! workloads, and implements the heterogeneity configurations of §IV-D.
+
+pub mod cost;
+pub mod exec_time;
+pub mod hetero;
+pub mod workload;
+
+pub use cost::CostModel;
+pub use exec_time::ExecTimeModel;
+pub use hetero::HeteroSpec;
+pub use workload::WorkloadTracker;

@@ -1,0 +1,220 @@
+//! Per-device workload accounting (paper Table I, §III-B1).
+//!
+//! Accumulates compute / communication cost per device over scheduled
+//! batches and reports the paper's metrics: workload variance (of
+//! per-device compute fraction — 0.00 for D2FT), total compute /
+//! communication fractions relative to standard fine-tuning, and sample
+//! (micro-batch) counts.
+
+use super::cost::CostModel;
+use crate::schedule::table::{Op, ScheduleTable};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct WorkloadTracker {
+    cost: CostModel,
+    n_devices: usize,
+    /// Compute units accumulated per device.
+    compute_units: Vec<f64>,
+    /// Communication cost (full-op equivalents) per device.
+    comm: Vec<f64>,
+    /// Micro-batches processed (not skipped) per device.
+    processed: Vec<usize>,
+    /// Full-fine-tuning compute units that the same batches would cost.
+    standard_units: f64,
+    batches: usize,
+}
+
+impl WorkloadTracker {
+    pub fn new(cost: CostModel, n_devices: usize) -> WorkloadTracker {
+        WorkloadTracker {
+            cost,
+            n_devices,
+            compute_units: vec![0.0; n_devices],
+            comm: vec![0.0; n_devices],
+            processed: vec![0; n_devices],
+            standard_units: 0.0,
+            batches: 0,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Charge one scheduled batch.
+    pub fn record(&mut self, table: &ScheduleTable) {
+        assert_eq!(table.n_subnets, self.n_devices, "table/device mismatch");
+        for k in 0..table.n_subnets {
+            for i in 0..table.n_micro {
+                let op = table.get(k, i);
+                self.compute_units[k] += self.cost.compute_units(op) as f64;
+                self.comm[k] += self.cost.comm_cost(op);
+                if op != Op::Shortcut {
+                    self.processed[k] += 1;
+                }
+            }
+        }
+        self.standard_units += (table.n_micro * self.cost.full_units()) as f64;
+        self.batches += 1;
+    }
+
+    /// Per-device compute fraction relative to standard fine-tuning.
+    pub fn compute_fractions(&self) -> Tensor {
+        let denom = self.standard_units.max(1.0);
+        Tensor::from_vec(
+            &[self.n_devices],
+            self.compute_units.iter().map(|&u| (u / denom) as f32).collect(),
+        )
+    }
+
+    /// The paper's Table I metric: variance of per-device compute
+    /// fraction (0.00 when every device does identical work).
+    pub fn workload_variance(&self) -> f64 {
+        self.compute_fractions().variance() as f64
+    }
+
+    /// Variance of per-device *processed micro-batch counts* (the
+    /// "samples assigned to subnets" phrasing of §III-B1).
+    pub fn sample_count_variance(&self) -> f64 {
+        if self.n_devices == 0 {
+            return 0.0;
+        }
+        let mean =
+            self.processed.iter().sum::<usize>() as f64 / self.n_devices as f64;
+        self.processed
+            .iter()
+            .map(|&c| (c as f64 - mean) * (c as f64 - mean))
+            .sum::<f64>()
+            / self.n_devices as f64
+    }
+
+    /// Total compute cost as a fraction of standard fine-tuning
+    /// (standard = every device runs p_f on every micro-batch).
+    pub fn total_compute_fraction(&self) -> f64 {
+        let denom = self.standard_units * self.n_devices as f64;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        self.compute_units.iter().sum::<f64>() / denom
+    }
+
+    /// Total communication as a fraction of standard fine-tuning (every
+    /// device shipping activations + gradients for every micro-batch).
+    pub fn total_comm_fraction(&self) -> f64 {
+        // standard comm per device = one full-op comm per micro-batch.
+        let per_device_standard = self.standard_units / self.cost.full_units() as f64;
+        let denom = per_device_standard * self.n_devices as f64;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        self.comm.iter().sum::<f64>() / denom
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    pub fn processed_counts(&self) -> &[usize] {
+        &self.processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn cost() -> CostModel {
+        CostModel::paper()
+    }
+
+    #[test]
+    fn standard_schedule_is_fraction_one() {
+        let mut w = WorkloadTracker::new(cost(), 4);
+        w.record(&ScheduleTable::standard(4, 5));
+        assert!((w.total_compute_fraction() - 1.0).abs() < 1e-9);
+        assert!((w.total_comm_fraction() - 1.0).abs() < 1e-9);
+        assert_eq!(w.workload_variance(), 0.0);
+    }
+
+    #[test]
+    fn paper_60pct_budget() {
+        // 3 p_f + 2 p_s of 5 -> 60% compute, 60% comm, variance 0.
+        let mut t = ScheduleTable::all(3, 5, Op::Shortcut);
+        for k in 0..3 {
+            for i in 0..3 {
+                t.set(k, i, Op::Full);
+            }
+        }
+        let mut w = WorkloadTracker::new(cost(), 3);
+        w.record(&t);
+        assert!((w.total_compute_fraction() - 0.6).abs() < 1e-9);
+        assert!((w.total_comm_fraction() - 0.6).abs() < 1e-9);
+        assert_eq!(w.workload_variance(), 0.0);
+        assert_eq!(w.sample_count_variance(), 0.0);
+    }
+
+    #[test]
+    fn po_costs_forty_percent_compute_half_comm() {
+        let mut t = ScheduleTable::all(1, 5, Op::Shortcut);
+        for i in 0..5 {
+            t.set(0, i, Op::ForwardOnly);
+        }
+        let mut w = WorkloadTracker::new(cost(), 1);
+        w.record(&t);
+        assert!((w.total_compute_fraction() - 0.4).abs() < 1e-9);
+        assert!((w.total_comm_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalanced_schedule_has_positive_variance() {
+        let mut t = ScheduleTable::all(2, 5, Op::Shortcut);
+        for i in 0..5 {
+            t.set(0, i, Op::Full);
+        }
+        let mut w = WorkloadTracker::new(cost(), 2);
+        w.record(&t);
+        assert!(w.workload_variance() > 0.2);
+        assert!(w.sample_count_variance() > 0.0);
+    }
+
+    #[test]
+    fn property_variance_zero_iff_uniform_rows() {
+        check("workload-variance-uniform", 30, |g| {
+            let k = g.usize_in(2, 10);
+            let n = g.usize_in(1, 6);
+            let n_full = g.usize_in(0, n);
+            let n_fwd = g.usize_in(0, n - n_full);
+            // identical rows -> variance exactly 0
+            let mut t = ScheduleTable::all(k, n, Op::Shortcut);
+            for dev in 0..k {
+                for i in 0..n_full {
+                    t.set(dev, i, Op::Full);
+                }
+                for i in n_full..n_full + n_fwd {
+                    t.set(dev, i, Op::ForwardOnly);
+                }
+            }
+            let mut w = WorkloadTracker::new(CostModel::paper(), k);
+            w.record(&t);
+            if w.workload_variance() != 0.0 {
+                return Err("uniform rows must give zero variance".into());
+            }
+            // perturb one device -> variance > 0 (if perturbation changes cost)
+            let mut rng = Rng::new(g.usize_in(0, 1 << 20) as u64);
+            let dev = rng.next_below(k as u64) as usize;
+            let i = rng.next_below(n as u64) as usize;
+            let old = t.get(dev, i);
+            let new = if old == Op::Full { Op::Shortcut } else { Op::Full };
+            t.set(dev, i, new);
+            let mut w2 = WorkloadTracker::new(CostModel::paper(), k);
+            w2.record(&t);
+            if w2.workload_variance() <= 0.0 {
+                return Err("perturbed schedule must have positive variance".into());
+            }
+            Ok(())
+        });
+    }
+}

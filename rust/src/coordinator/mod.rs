@@ -1,0 +1,13 @@
+//! Training coordinator: the L3 driver that ties partitioning, scoring,
+//! scheduling, the simulated cluster, and the PJRT runtime into the
+//! fine-tuning loop.
+//!
+//! Per batch: (1) fetch 5 micro-batches, (2) probe contribution scores
+//! (cached per batch index — the paper computes scores once before
+//! fine-tuning, §II-A3), (3) run the scheduler, (4) execute each
+//! micro-batch's fused trainstep under its mask pair, (5) charge the
+//! simulated cluster. Python never runs here.
+
+mod trainer;
+
+pub use trainer::{SchedulerKind, Trainer, TrainerConfig, TrainReport};

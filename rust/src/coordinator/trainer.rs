@@ -1,0 +1,425 @@
+//! The end-to-end fine-tuning driver.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::{CostModel, ExecTimeModel, HeteroSpec, WorkloadTracker};
+use crate::data::{Dataset, DatasetSpec, SyntheticKind};
+use crate::metrics::Meter;
+use crate::partition::Partition;
+use crate::runtime::{ArtifactRegistry, Manifest, ParamStore, Session, TrainState};
+use crate::schedule::scaler::{Lambda, ScalerSched};
+use crate::schedule::{
+    bilevel::{BiLevel, MergeMode},
+    dpruning::DPruning,
+    moe_gshard::MoeGshard,
+    random_sched::RandomSched,
+    Budget, ScheduleTable, Scheduler,
+};
+use crate::scores::{ScoreBook, ScoreConfig};
+use crate::tensor::Tensor;
+
+/// Which scheduling policy to train with (paper baselines + ours).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SchedulerKind {
+    /// D2FT bi-level knapsack (exclusive merge — exact per-device counts).
+    D2ft,
+    /// D2FT with Algorithm 1's verbatim merge (conflicts -> p_f).
+    D2ftPaperMerge,
+    /// Standard full fine-tuning (everything p_f; ignores the budget).
+    Standard,
+    Random,
+    DPruningM,
+    DPruningMG,
+    MoeGshard,
+    Scaler(Lambda),
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "d2ft" => SchedulerKind::D2ft,
+            "d2ft-paper-merge" => SchedulerKind::D2ftPaperMerge,
+            "standard" => SchedulerKind::Standard,
+            "random" => SchedulerKind::Random,
+            "dpruning-m" => SchedulerKind::DPruningM,
+            "dpruning-mg" => SchedulerKind::DPruningMG,
+            "moe" | "moe-gshard" => SchedulerKind::MoeGshard,
+            "scaler-max" => SchedulerKind::Scaler(Lambda::Max),
+            "scaler-min" => SchedulerKind::Scaler(Lambda::Min),
+            "scaler-0.1" => SchedulerKind::Scaler(Lambda::Const(0.1)),
+            "scaler-0.2" => SchedulerKind::Scaler(Lambda::Const(0.2)),
+            _ => anyhow::bail!(
+                "unknown scheduler {s:?} (d2ft|standard|random|dpruning-m|dpruning-mg|moe|scaler-*)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::D2ft => "D2FT (Ours)",
+            SchedulerKind::D2ftPaperMerge => "D2FT (paper merge)",
+            SchedulerKind::Standard => "Standard",
+            SchedulerKind::Random => "Random",
+            SchedulerKind::DPruningM => "DPruning M",
+            SchedulerKind::DPruningMG => "DPruning M/G",
+            SchedulerKind::MoeGshard => "MoE Gshard",
+            SchedulerKind::Scaler(_) => "Scaler",
+        }
+    }
+}
+
+/// Full configuration of one fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub dataset: SyntheticKind,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// Micro-batches per batch (paper: 5).
+    pub micros_per_batch: usize,
+    /// Number of fine-tuning batches to run.
+    pub batches: usize,
+    pub lr: f32,
+    pub budget: Budget,
+    pub scheduler: SchedulerKind,
+    pub scores: ScoreConfig,
+    /// Head-group size for the partition (1 = per-head; Table V).
+    pub partition_group: usize,
+    pub hetero: Option<HeteroSpec>,
+    pub seed: u64,
+    /// Batches of synthetic "pre-training" before fine-tuning
+    /// (DESIGN.md Substitution 4; gives non-degenerate scores).
+    pub pretrain_batches: usize,
+    /// Evaluate on the test split every `eval_every` batches (0 = only
+    /// at the end).
+    pub eval_every: usize,
+}
+
+impl TrainerConfig {
+    pub fn quick(dataset: SyntheticKind, scheduler: SchedulerKind, budget: Budget) -> Self {
+        TrainerConfig {
+            dataset,
+            train_size: 480,
+            test_size: 120,
+            micros_per_batch: 5,
+            batches: 24,
+            lr: 0.03,
+            budget,
+            scheduler,
+            scores: ScoreConfig::default(),
+            partition_group: 1,
+            hetero: None,
+            seed: 17,
+            pretrain_batches: 12,
+            eval_every: 0,
+        }
+    }
+}
+
+/// Everything an experiment needs to print a paper row.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub scheduler: String,
+    pub final_train_loss: f64,
+    pub test_top1: f64,
+    pub test_loss: f64,
+    pub loss_curve: Vec<f32>,
+    pub eval_curve: Vec<(usize, f64)>,
+    pub compute_fraction: f64,
+    pub comm_fraction: f64,
+    pub workload_variance: f64,
+    pub sample_count_variance: f64,
+    /// Modelled mean per-device execution time per batch (ms).
+    pub mean_exec_ms: f64,
+    /// Modelled batch makespan (slowest device, ms).
+    pub makespan_ms: f64,
+    /// Measured wall-clock of the fine-tuning loop (s).
+    pub wall_s: f64,
+    pub batches: usize,
+}
+
+fn build_scheduler(kind: SchedulerKind, scores: ScoreConfig, seed: u64) -> Box<dyn Scheduler> {
+    let cost = CostModel::paper();
+    match kind {
+        SchedulerKind::D2ft => Box::new(BiLevel::new(scores, cost)),
+        SchedulerKind::D2ftPaperMerge => {
+            Box::new(BiLevel::new(scores, cost).with_merge(MergeMode::PaperMerge))
+        }
+        SchedulerKind::Standard => Box::new(StandardSched),
+        SchedulerKind::Random => Box::new(RandomSched::new(seed ^ 0xAB)),
+        SchedulerKind::DPruningM => Box::new(DPruning::magnitude()),
+        SchedulerKind::DPruningMG => Box::new(DPruning::magnitude_gradient()),
+        SchedulerKind::MoeGshard => Box::new(MoeGshardHolder { inner: None, seed }),
+        SchedulerKind::Scaler(l) => Box::new(ScalerSched::new(l, scores, cost)),
+    }
+}
+
+/// Standard fine-tuning as a Scheduler (everything p_f).
+struct StandardSched;
+
+impl Scheduler for StandardSched {
+    fn name(&self) -> &'static str {
+        "Standard"
+    }
+
+    fn schedule(&mut self, scores: &ScoreBook, _budget: &Budget) -> ScheduleTable {
+        ScheduleTable::standard(scores.n_subnets, scores.n_micro)
+    }
+
+    fn needs_scores(&self) -> bool {
+        false
+    }
+}
+
+/// MoeGshard needs subnets-per-block, only known at schedule time.
+struct MoeGshardHolder {
+    inner: Option<MoeGshard>,
+    seed: u64,
+}
+
+impl Scheduler for MoeGshardHolder {
+    fn name(&self) -> &'static str {
+        "MoE Gshard"
+    }
+
+    fn schedule(&mut self, scores: &ScoreBook, budget: &Budget) -> ScheduleTable {
+        let spb = crate::coordinator::trainer::SPB_HINT
+            .with(|h| h.get())
+            .max(1);
+        let inner = self
+            .inner
+            .get_or_insert_with(|| MoeGshard::new(self.seed ^ 0xCD, spb));
+        inner.schedule(scores, budget)
+    }
+}
+
+thread_local! {
+    /// Subnets-per-block hint for schedulers that need block structure.
+    pub(crate) static SPB_HINT: std::cell::Cell<usize> = const { std::cell::Cell::new(1) };
+}
+
+/// The coordinator.
+pub struct Trainer<'a> {
+    cfg: TrainerConfig,
+    registry: &'a ArtifactRegistry,
+    session: Session<'a>,
+    partition: Partition,
+    train: Dataset,
+    test: Dataset,
+    /// Micro-batch size when using a trainstep variant (Table VI).
+    variant_mb: Option<usize>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        registry: &'a ArtifactRegistry,
+        manifest: &'a Manifest,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer<'a>> {
+        let mc = &manifest.config;
+        let partition = match &cfg.hetero {
+            Some(h) => h.partition(mc),
+            None => Partition::grouped(mc, cfg.partition_group),
+        };
+        partition.validate()?;
+        SPB_HINT.with(|h| h.set(partition.n_subnets() / mc.depth));
+        let session = Session::new(registry, manifest)?;
+        let train = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.train_size, cfg.seed)
+            .generate("train");
+        let test = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.test_size, cfg.seed)
+            .generate("test");
+        anyhow::ensure!(
+            train.classes <= mc.classes,
+            "dataset has more classes than the model head"
+        );
+        Ok(Trainer { cfg, registry, session, partition, train, test, variant_mb: None })
+    }
+
+    /// Micro-batch size of the *training* step (variant-aware).
+    fn mb(&self) -> usize {
+        self.variant_mb.unwrap_or(self.session.manifest.micro_batch)
+    }
+
+    /// Trainer over a micro-batch-size *variant* trainstep artifact
+    /// (Table VI): same params/eval, different baked micro-batch.
+    pub fn new_with_trainstep_variant(
+        registry: &'a ArtifactRegistry,
+        manifest: &'a Manifest,
+        cfg: TrainerConfig,
+        mbs: usize,
+    ) -> Result<Trainer<'a>> {
+        let mut t = Trainer::new(registry, manifest, cfg)?;
+        t.session = Session::new(registry, manifest)?.with_trainstep_variant(mbs)?;
+        t.variant_mb = Some(mbs);
+        Ok(t)
+    }
+
+    /// Fresh training state from the shipped init parameters.
+    pub fn init_state(&self) -> Result<TrainState> {
+        TrainState::new(&ParamStore::load(self.session.manifest, self.registry.dir())?)
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    fn micro_literals(
+        &self,
+        micros: &[(Tensor, Vec<i32>)],
+    ) -> Result<Vec<(xla::Literal, xla::Literal)>> {
+        micros
+            .iter()
+            .map(|(x, y)| Ok((self.session.x_literal(x)?, self.session.y_literal(y)?)))
+            .collect()
+    }
+
+    /// Synthetic pre-training: standard schedule on the broad
+    /// distribution so fine-tuning starts from informative weights.
+    fn pretrain(&self, state: &mut TrainState) -> Result<()> {
+        if self.cfg.pretrain_batches == 0 {
+            return Ok(());
+        }
+        let mc = &self.session.manifest.config;
+        let mb = self.mb();
+        let n = self.cfg.pretrain_batches * self.cfg.micros_per_batch * mb;
+        let pre = DatasetSpec::preset(SyntheticKind::Pretrain, mc.img_size, n, self.cfg.seed ^ 0x5A)
+            .generate("train");
+        let mut batcher =
+            crate::data::Batcher::new(&pre, mb, self.cfg.micros_per_batch, self.cfg.seed);
+        let masks = crate::schedule::MaskPair::ones(mc.depth, mc.heads);
+        while let Some(micros) = batcher.next_batch() {
+            for (x, y) in self.micro_literals(&micros)? {
+                self.session.step(state, &x, &y, &masks, self.cfg.lr)?;
+            }
+        }
+        // Fresh optimizer state at the pretrain -> fine-tune boundary
+        // (momentum from the broad distribution destabilizes the first
+        // fine-tuning steps otherwise).
+        state.reset_momentum()?;
+        Ok(())
+    }
+
+    /// Evaluate test top-1 (full forward, all parameters — §III-A).
+    pub fn evaluate(&self, state: &TrainState) -> Result<(f64, f64)> {
+        let mb = self.session.manifest.micro_batch;
+        let mut meter = Meter::new();
+        let mut i = 0;
+        while i + mb <= self.test.len() {
+            let idxs: Vec<usize> = (i..i + mb).collect();
+            let (x, y) = self.test.gather(&idxs);
+            let out = self.session.eval(
+                state,
+                &self.session.x_literal(&x)?,
+                &self.session.y_literal(&y)?,
+                None,
+            )?;
+            meter.push(out.loss, out.n_correct, mb);
+            i += mb;
+        }
+        Ok((meter.top1(), meter.mean_loss()))
+    }
+
+    /// Run the full fine-tuning loop and report paper metrics.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mb = self.mb();
+        let mut state = self.init_state()?;
+        self.pretrain(&mut state)?;
+
+        let mut scheduler = build_scheduler(self.cfg.scheduler, self.cfg.scores, self.cfg.seed);
+        let budget = match &self.cfg.hetero {
+            Some(h) => h.budget(self.cfg.budget.clone(), self.partition.n_subnets()),
+            None => self.cfg.budget.clone(),
+        };
+        let cost = CostModel::paper();
+        let exec_model = ExecTimeModel::paper();
+        let mut workloads = WorkloadTracker::new(cost, self.partition.n_subnets());
+        let mut loss_curve = Vec::with_capacity(self.cfg.batches);
+        let mut eval_curve = Vec::new();
+        let mut score_cache: Vec<Option<ScoreBook>> = Vec::new();
+        let mut exec_ms_sum = 0.0;
+        let mut makespan_sum = 0.0;
+        let mut meter = Meter::new();
+
+        let t0 = Instant::now();
+        let mut batch_idx = 0;
+        let mut epoch = 0u64;
+        'outer: while batch_idx < self.cfg.batches {
+            let mut batcher = crate::data::Batcher::new(
+                &self.train,
+                mb,
+                self.cfg.micros_per_batch,
+                self.cfg.seed, // same order every epoch -> score cache valid
+            );
+            let mut epoch_pos = 0usize;
+            while let Some(micros) = batcher.next_batch() {
+                if batch_idx >= self.cfg.batches {
+                    break 'outer;
+                }
+                let lits = self.micro_literals(&micros)?;
+                // --- contribution scores (cached; paper computes them
+                // once before fine-tuning) ---------------------------------
+                if score_cache.len() <= epoch_pos {
+                    score_cache.resize(epoch_pos + 1, None);
+                }
+                if score_cache[epoch_pos].is_none() {
+                    // The scores artifact is lowered at the manifest's
+                    // micro-batch; variant runs (Table VI) use uniform
+                    // scores — the knapsack still enforces exact counts.
+                    let can_probe = self.variant_mb.is_none();
+                    score_cache[epoch_pos] = Some(if scheduler.needs_scores() && can_probe {
+                        let probes: Vec<Tensor> = lits
+                            .iter()
+                            .map(|(x, y)| self.session.probe_scores(&state, x, y))
+                            .collect::<Result<_>>()?;
+                        ScoreBook::from_probes(&self.partition, &probes)
+                    } else {
+                        // Score-free policies (Standard, Random) skip the
+                        // probe entirely — its artifact never compiles.
+                        ScoreBook::zeros(self.partition.n_subnets(), lits.len())
+                    });
+                }
+                let book = score_cache[epoch_pos].as_ref().unwrap();
+                // --- schedule + execute -----------------------------------
+                let table = scheduler.schedule(book, &budget);
+                for (i, (x, y)) in lits.iter().enumerate() {
+                    let masks = table.masks_for_micro(&self.partition, i);
+                    let out = self.session.step(&mut state, x, y, &masks, self.cfg.lr)?;
+                    meter.push(out.loss, out.n_correct, mb);
+                    loss_curve.push(out.loss);
+                }
+                // --- simulated cluster accounting --------------------------
+                workloads.record(&table);
+                exec_ms_sum += exec_model.mean_device_time_ms(&table);
+                makespan_sum += exec_model.makespan_ms(&table);
+                if self.cfg.eval_every > 0 && (batch_idx + 1) % self.cfg.eval_every == 0 {
+                    let (top1, _) = self.evaluate(&state)?;
+                    eval_curve.push((batch_idx + 1, top1));
+                }
+                batch_idx += 1;
+                epoch_pos += 1;
+            }
+            epoch += 1;
+            let _ = epoch;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let (test_top1, test_loss) = self.evaluate(&state)?;
+        let b = workloads.batches().max(1) as f64;
+        Ok(TrainReport {
+            scheduler: self.cfg.scheduler.label().to_string(),
+            final_train_loss: meter.mean_loss(),
+            test_top1,
+            test_loss,
+            loss_curve,
+            eval_curve,
+            compute_fraction: workloads.total_compute_fraction(),
+            comm_fraction: workloads.total_comm_fraction(),
+            workload_variance: workloads.workload_variance(),
+            sample_count_variance: workloads.sample_count_variance(),
+            mean_exec_ms: exec_ms_sum / b,
+            makespan_ms: makespan_sum / b,
+            wall_s,
+            batches: batch_idx,
+        })
+    }
+}

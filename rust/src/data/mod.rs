@@ -1,0 +1,157 @@
+//! Datasets: synthetic class-conditional Gaussian images (DESIGN.md
+//! Substitution 3) + a real CIFAR-10 binary loader used automatically
+//! when the files are present (no network access assumed).
+
+mod cifar_bin;
+mod synthetic;
+
+pub use cifar_bin::load_cifar10_bin;
+pub use synthetic::{DatasetSpec, SyntheticKind};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// An in-memory labelled image dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub classes: usize,
+    pub img: usize,
+    /// `[n, img, img, 3]` f32.
+    pub images: Tensor,
+    /// `[n]` class ids.
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Copy one example's image into a flat buffer slot.
+    fn copy_example(&self, idx: usize, out: &mut [f32]) {
+        let ex = self.img * self.img * 3;
+        out.copy_from_slice(&self.images.data()[idx * ex..(idx + 1) * ex]);
+    }
+
+    /// Gather examples into a micro-batch tensor pair.
+    pub fn gather(&self, idxs: &[usize]) -> (Tensor, Vec<i32>) {
+        let ex = self.img * self.img * 3;
+        let mut buf = vec![0.0f32; idxs.len() * ex];
+        let mut ys = Vec::with_capacity(idxs.len());
+        for (slot, &i) in idxs.iter().enumerate() {
+            self.copy_example(i, &mut buf[slot * ex..(slot + 1) * ex]);
+            ys.push(self.labels[i]);
+        }
+        (
+            Tensor::from_vec(&[idxs.len(), self.img, self.img, 3], buf),
+            ys,
+        )
+    }
+}
+
+/// Deterministic epoch iterator yielding batches of micro-batches.
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    micro_batch: usize,
+    micros_per_batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(
+        data: &'a Dataset,
+        micro_batch: usize,
+        micros_per_batch: usize,
+        seed: u64,
+    ) -> Batcher<'a> {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        Rng::new(seed).shuffle(&mut order);
+        Batcher { data, micro_batch, micros_per_batch, order, cursor: 0 }
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.len() / (self.micro_batch * self.micros_per_batch)
+    }
+
+    /// Next batch: `micros_per_batch` micro-batches (drops the ragged
+    /// tail; re-shuffles between epochs is the caller's seed choice).
+    pub fn next_batch(&mut self) -> Option<Vec<(Tensor, Vec<i32>)>> {
+        let need = self.micro_batch * self.micros_per_batch;
+        if self.cursor + need > self.order.len() {
+            return None;
+        }
+        let mut micros = Vec::with_capacity(self.micros_per_batch);
+        for m in 0..self.micros_per_batch {
+            let lo = self.cursor + m * self.micro_batch;
+            let idxs = &self.order[lo..lo + self.micro_batch];
+            micros.push(self.data.gather(idxs));
+        }
+        self.cursor += need;
+        Some(micros)
+    }
+
+    /// Restart (same order).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        DatasetSpec {
+            kind: SyntheticKind::Cifar10Like,
+            train_size: 64,
+            img: 16,
+            classes: 4,
+            noise: 0.3,
+            seed: 1,
+        }
+        .generate("train")
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let d = tiny();
+        let (x, y) = d.gather(&[0, 5, 9]);
+        assert_eq!(x.shape(), &[3, 16, 16, 3]);
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|&c| (c as usize) < d.classes));
+    }
+
+    #[test]
+    fn batcher_yields_full_epoch() {
+        let d = tiny();
+        let mut b = Batcher::new(&d, 4, 2, 7);
+        assert_eq!(b.batches_per_epoch(), 8);
+        let mut n = 0;
+        while let Some(batch) = b.next_batch() {
+            assert_eq!(batch.len(), 2);
+            assert_eq!(batch[0].0.shape()[0], 4);
+            n += 1;
+        }
+        assert_eq!(n, 8);
+        b.reset();
+        assert!(b.next_batch().is_some());
+    }
+
+    #[test]
+    fn batcher_is_seed_deterministic() {
+        let d = tiny();
+        let a = Batcher::new(&d, 4, 2, 3).next_batch().unwrap();
+        let b = Batcher::new(&d, 4, 2, 3).next_batch().unwrap();
+        assert_eq!(a[0].1, b[0].1);
+        assert_eq!(a[0].0, b[0].0);
+        let c = Batcher::new(&d, 4, 2, 4).next_batch().unwrap();
+        assert!(a[0].1 != c[0].1 || a[0].0 != c[0].0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Figure regenerators: Fig. 1 / Fig. 2 (full fine-tuning accuracy vs
+//! cost) and Fig. 3 (LoRA).
+
+use anyhow::Result;
+
+use super::registry::ExperimentCtx;
+use super::tables::{budget_points, run_one, section};
+use crate::coordinator::{SchedulerKind, TrainerConfig};
+use crate::data::SyntheticKind;
+use crate::metrics::{pct, Table};
+use crate::schedule::Budget;
+
+/// Methods compared in Figs. 1 & 2 (paper §III-A baselines).
+pub(super) fn figure_methods() -> Vec<SchedulerKind> {
+    vec![
+        SchedulerKind::D2ft,
+        SchedulerKind::Random,
+        SchedulerKind::DPruningM,
+        SchedulerKind::DPruningMG,
+        SchedulerKind::MoeGshard,
+    ]
+}
+
+fn accuracy_sweep(ctx: &ExperimentCtx, dataset: SyntheticKind, title: &str) -> Result<String> {
+    let manifest = &ctx.registry.full_manifest;
+    let mut out = section(title);
+    // Standard fine-tuning reference (100% budget).
+    let std_cfg = TrainerConfig {
+        batches: ctx.batches(16),
+        ..TrainerConfig::quick(dataset, SchedulerKind::Standard, Budget::uniform(5, 5, 0))
+    };
+    let std_report = run_one(ctx, manifest, std_cfg)?;
+    out.push_str(&format!(
+        "Standard fine-tuning: top-1 {} (compute 100%, comm 100%)\n\n",
+        pct(std_report.test_top1)
+    ));
+    let mut table = Table::new(&[
+        "Method", "Budget", "Compute", "Comm", "Top-1", "WkldVar",
+    ]);
+    for (label, budget) in budget_points() {
+        for method in figure_methods() {
+            let cfg = TrainerConfig {
+                batches: ctx.batches(16),
+                ..TrainerConfig::quick(dataset, method, budget.clone())
+            };
+            let r = run_one(ctx, manifest, cfg)?;
+            table.row(&[
+                r.scheduler.clone(),
+                label.to_string(),
+                pct(r.compute_fraction),
+                pct(r.comm_fraction),
+                pct(r.test_top1),
+                format!("{:.3}", r.workload_variance),
+            ]);
+        }
+    }
+    out.push_str(&table.render());
+    out.push('\n');
+    Ok(out)
+}
+
+/// Fig. 1: CIFAR-100-like + Cars-like, full fine-tuning.
+pub fn fig1(ctx: &ExperimentCtx) -> Result<String> {
+    let mut out = accuracy_sweep(
+        ctx,
+        SyntheticKind::Cifar100Like,
+        "Fig. 1a — full FT, CIFAR-100-like",
+    )?;
+    out.push_str(&accuracy_sweep(
+        ctx,
+        SyntheticKind::CarsLike,
+        "Fig. 1b — full FT, Stanford-Cars-like",
+    )?);
+    println!("{out}");
+    Ok(out)
+}
+
+/// Fig. 2: CIFAR-10-like, full fine-tuning.
+pub fn fig2(ctx: &ExperimentCtx) -> Result<String> {
+    let out = accuracy_sweep(
+        ctx,
+        SyntheticKind::Cifar10Like,
+        "Fig. 2 — full FT, CIFAR-10-like",
+    )?;
+    println!("{out}");
+    Ok(out)
+}
+
+/// Fig. 3: LoRA fine-tuning on Cars-like — D2FT vs Standard LoRA
+/// (standard rank) vs LoRA w/ small rank at matched budgets.
+pub fn fig3(ctx: &ExperimentCtx) -> Result<String> {
+    let std_rank = ctx.registry.lora_standard_rank;
+    anyhow::ensure!(std_rank > 0, "artifacts were built with --skip-lora");
+    let mut out = section("Fig. 3 — LoRA fine-tuning, Stanford-Cars-like");
+    let dataset = SyntheticKind::CarsLike;
+
+    // Standard LoRA reference at the standard rank.
+    let m_std = ctx.registry.lora_manifest(std_rank)?;
+    let n_micro = 5;
+    let base_cfg = |sched, budget| TrainerConfig {
+        batches: ctx.batches(16),
+        ..TrainerConfig::quick(dataset, sched, budget)
+    };
+    let r_std = run_one(
+        ctx,
+        m_std,
+        base_cfg(SchedulerKind::Standard, Budget::uniform(n_micro, n_micro, 0)),
+    )?;
+    out.push_str(&format!(
+        "Standard LoRA (rank {std_rank}): top-1 {}\n\n",
+        pct(r_std.test_top1)
+    ));
+
+    // Compute-cost comparison (paper: 95% / 75% / 60% of standard LoRA).
+    let compute_settings: Vec<(&str, Budget)> = vec![
+        ("~95% (3pf,2po)", Budget::uniform(5, 3, 2)),
+        ("~75% (3pf,1po)", Budget::uniform(5, 3, 1)),
+        ("~60% (3pf,0po)", Budget::uniform(5, 3, 0)),
+    ];
+    // Small-rank baselines matched to those budgets (paper: R=200/60/1).
+    // Rank 4 is excluded on this host: its lowered HLO triggers a
+    // pathological multi-minute XLA-CPU compile; ranks 6 and 1 bracket
+    // the same cost range.
+    let small_ranks: Vec<usize> = ctx
+        .registry
+        .lora_ranks
+        .iter()
+        .copied()
+        .filter(|&r| r != std_rank && r != 4)
+        .collect();
+
+    let mut table = Table::new(&["Setting", "Method", "Compute", "Comm", "Top-1"]);
+    for (label, budget) in &compute_settings {
+        let r = run_one(ctx, m_std, base_cfg(SchedulerKind::D2ft, budget.clone()))?;
+        table.row(&[
+            label.to_string(),
+            format!("D2FT LoRA (R={std_rank})"),
+            pct(r.compute_fraction),
+            pct(r.comm_fraction),
+            pct(r.test_top1),
+        ]);
+    }
+    for &rank in &small_ranks {
+        let m = ctx.registry.lora_manifest(rank)?;
+        let r = run_one(
+            ctx,
+            m,
+            base_cfg(SchedulerKind::Standard, Budget::uniform(n_micro, n_micro, 0)),
+        )?;
+        table.row(&[
+            "standard schedule".into(),
+            format!("LoRA w/ small rank (R={rank})"),
+            "100.0%".into(),
+            "100.0%".into(),
+            pct(r.test_top1),
+        ]);
+    }
+    out.push_str("Compute-cost comparison:\n");
+    out.push_str(&table.render());
+
+    // Communication-cost comparison (paper: 90% / 70% / 50%).
+    let comm_settings: Vec<(&str, Budget)> = vec![
+        ("~90% (3pf,2po)", Budget::uniform(5, 3, 2)),
+        ("~70% (3pf,1po)", Budget::uniform(5, 3, 1)),
+        ("~50% (2pf,1po)", Budget::uniform(5, 2, 1)),
+    ];
+    let mut table = Table::new(&["Setting", "Method", "Comm", "Top-1"]);
+    for (label, budget) in &comm_settings {
+        let r = run_one(ctx, m_std, base_cfg(SchedulerKind::D2ft, budget.clone()))?;
+        table.row(&[
+            label.to_string(),
+            format!("D2FT LoRA (R={std_rank})"),
+            pct(r.comm_fraction),
+            pct(r.test_top1),
+        ]);
+    }
+    out.push_str("\nCommunication-cost comparison:\n");
+    out.push_str(&table.render());
+    out.push('\n');
+    println!("{out}");
+    Ok(out)
+}

@@ -1,0 +1,12 @@
+//! Experiment harness: one runner per paper table/figure.
+//!
+//! `repro experiment <id>` regenerates the rows/series of the paper's
+//! evaluation (DESIGN.md "Per-experiment index"). Accuracy experiments
+//! run scaled fine-tuning on the synthetic datasets; timing tables are
+//! additionally covered by `cargo bench` targets.
+
+mod figures;
+mod registry;
+mod tables;
+
+pub use registry::{list_experiments, run_experiment, ExperimentCtx};

@@ -1,0 +1,90 @@
+//! Experiment registry + shared context.
+
+use anyhow::Result;
+
+use crate::runtime::ArtifactRegistry;
+
+/// Shared handles every experiment receives.
+pub struct ExperimentCtx<'a> {
+    pub registry: &'a ArtifactRegistry,
+    /// Scale factor for run length (1 = shipped default; raise for
+    /// closer-to-paper convergence, lower for smoke tests).
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl<'a> ExperimentCtx<'a> {
+    pub fn new(registry: &'a ArtifactRegistry) -> ExperimentCtx<'a> {
+        ExperimentCtx { registry, scale: 1.0, seed: 17 }
+    }
+
+    /// Scaled batch count (min 2).
+    pub fn batches(&self, base: usize) -> usize {
+        ((base as f64 * self.scale).round() as usize).max(2)
+    }
+}
+
+/// (id, description) of every runnable experiment.
+pub fn list_experiments() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig1", "Fig. 1: top-1 vs compute & comm cost, full FT (CIFAR-100- and Cars-like)"),
+        ("fig2", "Fig. 2: top-1 vs compute & comm cost, full FT (CIFAR-10-like)"),
+        ("fig3", "Fig. 3: LoRA fine-tuning comparison (Cars-like)"),
+        ("table1", "Table I: workload variance across devices @60% budget"),
+        ("table2", "Table II: execution time + top-1 @60% budget"),
+        ("table3", "Table III: backward/forward score metric combinations"),
+        ("table4", "Table IV: subnet execution time for 1..5 micro-batches"),
+        ("table5", "Table V: impact of the number of subnets"),
+        ("table6", "Table VI: impact of micro-batch size"),
+        ("table7", "Table VII: memory heterogeneity"),
+        ("table8", "Table VIII: computation heterogeneity"),
+        ("table9", "Table IX: Forward-Only (p_o) effectiveness"),
+        ("table10", "Table X: bi-level vs Scaler-lambda scheduling"),
+        ("tables", "run table1..table10 in one process"),
+        ("all", "run every experiment in sequence"),
+    ]
+}
+
+/// Dispatch by id; prints the paper-shaped table and returns its
+/// markdown rendering (for EXPERIMENTS.md capture).
+pub fn run_experiment(ctx: &ExperimentCtx, id: &str) -> Result<String> {
+    let out = match id {
+        "fig1" => super::figures::fig1(ctx)?,
+        "fig2" => super::figures::fig2(ctx)?,
+        "fig3" => super::figures::fig3(ctx)?,
+        "table1" => super::tables::table1(ctx)?,
+        "table2" => super::tables::table2(ctx)?,
+        "table3" => super::tables::table3(ctx)?,
+        "table4" => super::tables::table4(ctx)?,
+        "table5" => super::tables::table5(ctx)?,
+        "table6" => super::tables::table6(ctx)?,
+        "table7" => super::tables::table7(ctx)?,
+        "table8" => super::tables::table8(ctx)?,
+        "table9" => super::tables::table9(ctx)?,
+        "table10" => super::tables::table10(ctx)?,
+        "tables" => {
+            let mut all = String::new();
+            for i in 1..=10 {
+                all.push_str(&run_experiment(ctx, &format!("table{i}"))?);
+                all.push('\n');
+            }
+            all
+        }
+        "all" => {
+            let mut all = String::new();
+            for (eid, _) in list_experiments() {
+                if eid == "all" || eid == "tables" {
+                    continue;
+                }
+                all.push_str(&run_experiment(ctx, eid)?);
+                all.push('\n');
+            }
+            all
+        }
+        _ => anyhow::bail!(
+            "unknown experiment {id:?}; known: {:?}",
+            list_experiments().iter().map(|(i, _)| *i).collect::<Vec<_>>()
+        ),
+    };
+    Ok(out)
+}

@@ -1,0 +1,43 @@
+//! # D2FT — Distributed Dynamic Fine-Tuning
+//!
+//! Rust + JAX + Pallas reproduction of *"You Don't Need All Attentions:
+//! Distributed Dynamic Fine-Tuning for Foundation Models"* (CS.LG 2025).
+//!
+//! D2FT fine-tunes a partitioned Vision Transformer across `K` devices.
+//! Every (subnet, micro-batch) pair is scheduled one of three operations —
+//! full (`p_f`), forward-only (`p_o`), shortcut (`p_s`) — by a bi-level
+//! knapsack DP over per-subnet *contribution scores*, which cuts ~40% of
+//! training compute and ~50% of communication at a 1–2% accuracy cost
+//! while keeping per-device workloads exactly balanced.
+//!
+//! Architecture (three layers; Python never on the training path):
+//!
+//! * **L3 (this crate)** — partitioning, contribution scores, the
+//!   scheduling algorithms (paper Algorithms 1 & 2 plus all baselines), a
+//!   simulated K-device cluster with the paper's cost/time model, the
+//!   training coordinator, metrics, and the experiment harness that
+//!   regenerates every table and figure.
+//! * **L2** — the masked ViT fwd/bwd + SGD trainstep, written in JAX and
+//!   AOT-lowered to HLO text (`artifacts/`).
+//! * **L1** — Pallas kernels (per-head masked attention, masked LoRA
+//!   deltas) called from L2 and lowered into the same HLO.
+//!
+//! The [`runtime`] module loads the artifacts via the PJRT C API and the
+//! [`coordinator`] drives training end-to-end. See `DESIGN.md` for the
+//! full system inventory and per-experiment index.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod schedule;
+pub mod scores;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, matching the `xla` crate's
+/// error style at the boundary).
+pub type Result<T> = anyhow::Result<T>;

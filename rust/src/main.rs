@@ -1,0 +1,145 @@
+//! `repro` — the D2FT leader binary.
+//!
+//! Subcommands:
+//!   repro train       [flags]   one fine-tuning run, any scheduler
+//!   repro experiment  <id>      regenerate a paper table/figure
+//!   repro list                  list experiments
+//!   repro info                  artifact/manifest summary
+
+use anyhow::Result;
+
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::data::SyntheticKind;
+use d2ft::experiments::{list_experiments, run_experiment, ExperimentCtx};
+use d2ft::metrics::pct;
+use d2ft::runtime::ArtifactRegistry;
+use d2ft::schedule::Budget;
+use d2ft::scores::{Metric, ScoreConfig};
+use d2ft::util::cli::Cli;
+
+fn cli() -> Cli {
+    Cli::new("repro", "D2FT: Distributed Dynamic Fine-Tuning (paper reproduction)")
+        .positional("command", "train | experiment <id> | list | info")
+        .positional("experiment-id", "experiment id for `experiment`")
+        .flag("artifacts", "artifacts", "artifacts directory (make artifacts)")
+        .flag("dataset", "c100", "c10 | c100 | cars")
+        .flag("scheduler", "d2ft", "d2ft | standard | random | dpruning-m | dpruning-mg | moe | scaler-max|min|0.1|0.2")
+        .flag("batches", "30", "fine-tuning batches")
+        .flag("pretrain-batches", "10", "synthetic pre-training batches")
+        .flag("train-size", "480", "training examples")
+        .flag("test-size", "160", "test examples")
+        .flag("micros", "5", "micro-batches per batch")
+        .flag("n-full", "3", "p_f micro-batches per device per batch")
+        .flag("n-fwd", "1", "p_o micro-batches per device per batch")
+        .flag("lr", "0.03", "SGD learning rate")
+        .flag("seed", "17", "run seed")
+        .flag("backward-score", "weightmag", "fisher|gradmag|taylor|weightmag")
+        .flag("forward-score", "fisher", "fisher|gradmag|taylor|weightmag")
+        .flag("partition-group", "1", "heads per subnet (Table V)")
+        .flag("scale", "1.0", "experiment run-length scale factor")
+        .flag("lora-rank", "0", "use the LoRA artifact set at this rank (0 = full FT)")
+        .flag("eval-every", "0", "evaluate test top-1 every N batches")
+        .switch("quiet", "suppress info logging")
+}
+
+fn main() -> Result<()> {
+    d2ft::util::log::init();
+    let args = match cli().parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.get_bool("quiet") {
+        d2ft::util::log::set_level(d2ft::util::log::Level::Warn);
+    }
+    let command = args.positional(0).unwrap_or("info").to_string();
+    match command.as_str() {
+        "list" => {
+            for (id, desc) in list_experiments() {
+                println!("{id:<10} {desc}");
+            }
+            Ok(())
+        }
+        "info" => {
+            let registry = ArtifactRegistry::open(std::path::Path::new(args.get("artifacts")))?;
+            let m = &registry.full_manifest;
+            println!("preset          {}", registry.preset);
+            println!(
+                "model           ViT d{} x{}L x{}H, {}x{} px, {} classes",
+                m.config.dim, m.config.depth, m.config.heads,
+                m.config.img_size, m.config.img_size, m.config.classes
+            );
+            println!("micro-batch     {} (variants {:?})", m.micro_batch, m.mb_variants);
+            println!("parameters      {} tensors, {} elems", m.n_params(), m.total_elems);
+            println!("lora ranks      {:?} (standard {})", registry.lora_ranks, registry.lora_standard_rank);
+            println!("body subnets    {} (+2 = {} devices)", m.config.body_subnets(), m.config.body_subnets() + 2);
+            Ok(())
+        }
+        "experiment" => {
+            let id = args
+                .positional(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: repro experiment <id> (see `repro list`)"))?
+                .to_string();
+            let registry = ArtifactRegistry::open(std::path::Path::new(args.get("artifacts")))?;
+            let mut ctx = ExperimentCtx::new(&registry);
+            ctx.scale = args.get_f64("scale")?;
+            ctx.seed = args.get_u64("seed")?;
+            run_experiment(&ctx, &id)?;
+            Ok(())
+        }
+        "train" => {
+            let registry = ArtifactRegistry::open(std::path::Path::new(args.get("artifacts")))?;
+            let micros = args.get_usize("micros")?;
+            let budget = Budget::uniform(
+                micros,
+                args.get_usize("n-full")?,
+                args.get_usize("n-fwd")?,
+            );
+            let cfg = TrainerConfig {
+                dataset: SyntheticKind::parse(args.get("dataset"))?,
+                train_size: args.get_usize("train-size")?,
+                test_size: args.get_usize("test-size")?,
+                micros_per_batch: micros,
+                batches: args.get_usize("batches")?,
+                lr: args.get_f32("lr")?,
+                budget,
+                scheduler: SchedulerKind::parse(args.get("scheduler"))?,
+                scores: ScoreConfig {
+                    backward: Metric::parse(args.get("backward-score"))?,
+                    forward: Metric::parse(args.get("forward-score"))?,
+                },
+                partition_group: args.get_usize("partition-group")?,
+                hetero: None,
+                seed: args.get_u64("seed")?,
+                pretrain_batches: args.get_usize("pretrain-batches")?,
+                eval_every: args.get_usize("eval-every")?,
+            };
+            let lora_rank = args.get_usize("lora-rank")?;
+            let manifest = if lora_rank > 0 {
+                registry.lora_manifest(lora_rank)?
+            } else {
+                &registry.full_manifest
+            };
+            let mut trainer = Trainer::new(&registry, manifest, cfg)?;
+            let r = trainer.run()?;
+            println!("scheduler            {}", r.scheduler);
+            println!("batches              {}", r.batches);
+            println!("final train loss     {:.4}", r.final_train_loss);
+            println!("test top-1           {}", pct(r.test_top1));
+            println!("test loss            {:.4}", r.test_loss);
+            println!("compute fraction     {}", pct(r.compute_fraction));
+            println!("comm fraction        {}", pct(r.comm_fraction));
+            println!("workload variance    {:.4}", r.workload_variance);
+            println!("mean exec (model)    {:.2}ms", r.mean_exec_ms);
+            println!("makespan (model)     {:.2}ms", r.makespan_ms);
+            println!("wall time            {:.1}s", r.wall_s);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", cli().usage());
+            std::process::exit(2);
+        }
+    }
+}

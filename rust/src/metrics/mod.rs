@@ -1,0 +1,170 @@
+//! Training/eval metrics and report formatting (markdown tables that
+//! mirror the paper's tables; consumed by EXPERIMENTS.md).
+
+/// Online loss/accuracy accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Meter {
+    n: usize,
+    loss_sum: f64,
+    correct: f64,
+    total: f64,
+}
+
+impl Meter {
+    pub fn new() -> Meter {
+        Meter::default()
+    }
+
+    pub fn push(&mut self, loss: f32, n_correct: f32, batch: usize) {
+        self.n += 1;
+        self.loss_sum += loss as f64;
+        self.correct += n_correct as f64;
+        self.total += batch as f64;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.n as f64
+        }
+    }
+
+    pub fn top1(&self) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            self.correct / self.total
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn reset(&mut self) {
+        *self = Meter::default();
+    }
+}
+
+/// Simple exponential moving average for loss curves.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v * (1.0 - self.alpha) + x * self.alpha,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Markdown table writer with aligned columns.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let sep: Vec<String> = widths.iter().map(|&w| "-".repeat(w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format a fraction as a percentage string.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates() {
+        let mut m = Meter::new();
+        m.push(2.0, 3.0, 4);
+        m.push(1.0, 4.0, 4);
+        assert!((m.mean_loss() - 1.5).abs() < 1e-12);
+        assert!((m.top1() - 7.0 / 8.0).abs() < 1e-12);
+        assert_eq!(m.count(), 2);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.push(0.0);
+        for _ in 0..20 {
+            e.push(1.0);
+        }
+        assert!((e.get().unwrap() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "Top-1"]);
+        t.row(&["D2FT (Ours)".into(), "89.4%".into()]);
+        t.row(&["Random".into(), "44.4%".into()]);
+        let s = t.render();
+        assert!(s.contains("| D2FT (Ours) | 89.4% |"));
+        assert!(s.lines().count() == 4);
+        // all lines same width
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.894), "89.4%");
+        assert_eq!(pct(1.0), "100.0%");
+    }
+}

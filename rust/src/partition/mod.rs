@@ -1,0 +1,191 @@
+//! Model partitioning (paper §II-A1, §IV-B, §IV-D).
+//!
+//! The transformer body is partitioned depth-wise (blocks) and width-wise
+//! (attention heads + matching FFN chunks). The minimal subnet is one
+//! head + 1/H of the block's FFN; coarser partitions group consecutive
+//! heads (the paper's 38- and 26-subnet configs, and the "large memory
+//! device" heterogeneity setting). Two extra subnets hold the patch
+//! embedding and the pooling/classifier — they participate in every
+//! operation (the schedule only orchestrates body subnets).
+
+use crate::runtime::ModelConfig;
+
+/// One schedulable subnet: a contiguous group of heads in one block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Subnet {
+    /// Block (layer) index.
+    pub block: usize,
+    /// First head in the group.
+    pub head_lo: usize,
+    /// One past the last head in the group.
+    pub head_hi: usize,
+}
+
+impl Subnet {
+    pub fn n_heads(&self) -> usize {
+        self.head_hi - self.head_lo
+    }
+
+    pub fn heads(&self) -> impl Iterator<Item = usize> {
+        self.head_lo..self.head_hi
+    }
+}
+
+/// A full partitioning of the model body into schedulable subnets.
+///
+/// `n_devices() == subnets.len()` in the default 1:1 placement (paper
+/// footnote 1); heterogeneity experiments remap via `cluster::hetero`.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub depth: usize,
+    pub heads: usize,
+    pub subnets: Vec<Subnet>,
+}
+
+impl Partition {
+    /// Finest partition: one subnet per (block, head) — the paper's
+    /// 74-subnet setting on ViT-small (72 body + embed + classifier).
+    pub fn per_head(cfg: &ModelConfig) -> Partition {
+        Self::grouped(cfg, 1)
+    }
+
+    /// Group `group` consecutive heads per subnet (paper's 38-subnet
+    /// config is group=2 on ViT-small, 26-subnet is group=3).
+    pub fn grouped(cfg: &ModelConfig, group: usize) -> Partition {
+        assert!(group >= 1 && cfg.heads % group == 0,
+                "head count {} not divisible by group {}", cfg.heads, group);
+        let mut subnets = Vec::new();
+        for block in 0..cfg.depth {
+            for g in 0..(cfg.heads / group) {
+                subnets.push(Subnet {
+                    block,
+                    head_lo: g * group,
+                    head_hi: (g + 1) * group,
+                });
+            }
+        }
+        Partition { depth: cfg.depth, heads: cfg.heads, subnets }
+    }
+
+    /// Mixed grouping for memory heterogeneity (paper §IV-D): the first
+    /// `n_large` *pairs* of per-head subnets are merged into 2-head
+    /// subnets ("large memory devices"), the rest stay per-head.
+    pub fn heterogeneous(cfg: &ModelConfig, n_large: usize) -> Partition {
+        let fine = Self::per_head(cfg);
+        let mut subnets = Vec::new();
+        let mut merged = 0;
+        let mut i = 0;
+        while i < fine.subnets.len() {
+            let a = fine.subnets[i];
+            let can_pair = merged < n_large
+                && i + 1 < fine.subnets.len()
+                && fine.subnets[i + 1].block == a.block
+                && fine.subnets[i + 1].head_lo == a.head_hi;
+            if can_pair {
+                subnets.push(Subnet { block: a.block, head_lo: a.head_lo, head_hi: a.head_hi + 1 });
+                merged += 1;
+                i += 2;
+            } else {
+                subnets.push(a);
+                i += 1;
+            }
+        }
+        Partition { depth: cfg.depth, heads: cfg.heads, subnets }
+    }
+
+    /// Number of schedulable (body) subnets.
+    pub fn n_subnets(&self) -> usize {
+        self.subnets.len()
+    }
+
+    /// Total device count including the 2 non-schedulable subnets
+    /// (patch embedding, classifier) — the paper's "74" accounting.
+    pub fn n_devices_total(&self) -> usize {
+        self.subnets.len() + 2
+    }
+
+    /// Check full disjoint cover of the (block, head) grid.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut covered = vec![false; self.depth * self.heads];
+        for s in &self.subnets {
+            anyhow::ensure!(s.block < self.depth, "block {} out of range", s.block);
+            anyhow::ensure!(s.head_lo < s.head_hi && s.head_hi <= self.heads,
+                            "bad head range {}..{}", s.head_lo, s.head_hi);
+            for h in s.heads() {
+                let idx = s.block * self.heads + h;
+                anyhow::ensure!(!covered[idx], "head ({}, {h}) covered twice", s.block);
+                covered[idx] = true;
+            }
+        }
+        anyhow::ensure!(covered.iter().all(|&c| c), "partition does not cover all heads");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn cfg(depth: usize, heads: usize) -> ModelConfig {
+        ModelConfig {
+            img_size: 32, patch: 4, dim: heads * 32, depth, heads,
+            mlp_ratio: 4, classes: 10, lora_rank: 0, head_dim: 32,
+            tokens: 65,
+        }
+    }
+
+    #[test]
+    fn per_head_counts_match_paper() {
+        // ViT-small: 12 blocks x 6 heads -> 72 body subnets + 2 = 74.
+        let p = Partition::per_head(&cfg(12, 6));
+        assert_eq!(p.n_subnets(), 72);
+        assert_eq!(p.n_devices_total(), 74);
+        p.validate().unwrap();
+        // 38- and 26-subnet configs of Table V.
+        assert_eq!(Partition::grouped(&cfg(12, 6), 2).n_devices_total(), 38);
+        assert_eq!(Partition::grouped(&cfg(12, 6), 3).n_devices_total(), 26);
+    }
+
+    #[test]
+    fn grouped_partitions_validate() {
+        for g in [1, 2, 3, 6] {
+            Partition::grouped(&cfg(12, 6), g).validate().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn rejects_bad_group() {
+        Partition::grouped(&cfg(12, 6), 4);
+    }
+
+    #[test]
+    fn heterogeneous_merges_exactly_n_large() {
+        let c = cfg(12, 6);
+        for n_large in [0, 9, 14, 19] {
+            let p = Partition::heterogeneous(&c, n_large);
+            p.validate().unwrap();
+            let large = p.subnets.iter().filter(|s| s.n_heads() == 2).count();
+            assert_eq!(large, n_large);
+            assert_eq!(p.n_subnets(), 72 - n_large);
+        }
+    }
+
+    #[test]
+    fn property_partitions_cover_disjointly() {
+        check("partition-cover", 40, |g| {
+            let depth = g.usize_in(1, 8);
+            let heads = *g.pick(&[2usize, 4, 6]);
+            let c = cfg(depth, heads);
+            let divisors: Vec<usize> = (1..=heads).filter(|d| heads % d == 0).collect();
+            let group = *g.pick(&divisors);
+            let p = Partition::grouped(&c, group);
+            p.validate().map_err(|e| e.to_string())?;
+            if p.n_subnets() != depth * heads / group {
+                return Err("wrong subnet count".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,118 @@
+//! ArtifactRegistry: locate + lazily compile AOT artifacts.
+//!
+//! Compilation (HLO text parse + XLA compile) happens once per artifact
+//! per process; the training hot path only calls `execute`.
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based (not `Send`): all
+//! numerics execute on the runtime thread, and the cluster's "devices"
+//! are a virtual-clock simulation (see `cluster/`), exactly mirroring the
+//! paper's cost model.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use crate::util::json::Json;
+
+/// Top-level view of an `artifacts/` directory (reads `index.json`).
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    pub preset: String,
+    pub full_manifest: Manifest,
+    pub lora_ranks: Vec<usize>,
+    pub lora_standard_rank: usize,
+    lora_manifests: HashMap<usize, Manifest>,
+    client: xla::PjRtClient,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open `dir` (default `artifacts/`); compiles nothing yet.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let index_path = dir.join("index.json");
+        let text = std::fs::read_to_string(&index_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                index_path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let full_manifest = Manifest::load(&dir.join(j.str_at("full")?))?;
+        let lora_ranks: Vec<usize> = j
+            .get("lora_ranks")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        let mut lora_manifests = HashMap::new();
+        if !lora_ranks.is_empty() {
+            let lm = j.get("lora_manifests")?.as_obj()?;
+            for (rank, path) in lm {
+                let r: usize = rank.parse()?;
+                lora_manifests.insert(r, Manifest::load(&dir.join(path.as_str()?))?);
+            }
+        }
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            preset: j.str_at("preset")?,
+            full_manifest,
+            lora_ranks,
+            lora_standard_rank: j.usize_at("lora_standard_rank").unwrap_or(0),
+            lora_manifests,
+            client,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Conventional location: `$D2FT_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("D2FT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn lora_manifest(&self, rank: usize) -> Result<&Manifest> {
+        self.lora_manifests
+            .get(&rank)
+            .ok_or_else(|| anyhow::anyhow!("no LoRA manifest for rank {rank}"))
+    }
+
+    /// Compile (or fetch cached) an artifact by file name.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        crate::info!("compiling artifact {}", path.display());
+        let t0 = std::time::Instant::now();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .map_err(anyhow::Error::msg)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(anyhow::Error::msg)?);
+        crate::info!("compiled {} in {:.2}s", file, t0.elapsed().as_secs_f64());
+        self.compiled.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an artifact referenced by manifest kind.
+    pub fn executable_for(
+        &self,
+        manifest: &Manifest,
+        kind: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        self.executable(manifest.artifact(kind)?)
+    }
+}

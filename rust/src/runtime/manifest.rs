@@ -1,0 +1,213 @@
+//! Artifact manifest: the ABI between aot.py and the rust runtime.
+//!
+//! `manifest.json` records the model config, the micro-batch size baked
+//! into each trainstep HLO, the artifact file map, and the parameter
+//! table in jax's dict-flatten (sorted-key) order — which is exactly the
+//! HLO entry-parameter order.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of `ViTConfig` on the python side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub img_size: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub classes: usize,
+    pub lora_rank: usize,
+    pub head_dim: usize,
+    pub tokens: usize,
+}
+
+impl ModelConfig {
+    /// Number of (block, head) subnets in the transformer body.
+    pub fn body_subnets(&self) -> usize {
+        self.depth * self.heads
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelConfig {
+            img_size: j.usize_at("img_size")?,
+            patch: j.usize_at("patch")?,
+            dim: j.usize_at("dim")?,
+            depth: j.usize_at("depth")?,
+            heads: j.usize_at("heads")?,
+            mlp_ratio: j.usize_at("mlp_ratio")?,
+            classes: j.usize_at("classes")?,
+            lora_rank: j.usize_at("lora_rank")?,
+            head_dim: j.usize_at("head_dim")?,
+            tokens: j.usize_at("tokens")?,
+        })
+    }
+}
+
+/// One tensor in the flat parameter blob.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// Offset in *elements* (not bytes) into the blob.
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub prefix: String,
+    pub config: ModelConfig,
+    pub micro_batch: usize,
+    pub mb_variants: Vec<usize>,
+    /// artifact kind -> file name (relative to the artifacts dir).
+    pub artifacts: Vec<(String, String)>,
+    pub params_bin: String,
+    pub total_elems: usize,
+    pub params: Vec<ParamEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let config = ModelConfig::from_json(j.get("config")?)?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.str_at("name")?,
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    size: p.usize_at("size")?,
+                    offset: p.usize_at("offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .get("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+        let mb_variants = j
+            .get("mb_variants")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            prefix: j.str_at("preset_prefix")?,
+            config,
+            micro_batch: j.usize_at("micro_batch")?,
+            mb_variants,
+            artifacts,
+            params_bin: j.str_at("params_bin")?,
+            total_elems: j.usize_at("total_elems")?,
+            params,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural invariants the runtime depends on.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            anyhow::ensure!(
+                p.offset == off,
+                "param {} offset {} != expected {off}",
+                p.name,
+                p.offset
+            );
+            anyhow::ensure!(
+                p.shape.iter().product::<usize>() == p.size,
+                "param {} shape/size mismatch",
+                p.name
+            );
+            off += p.size;
+        }
+        anyhow::ensure!(off == self.total_elems, "total_elems mismatch");
+        let mut names: Vec<&str> = self.params.iter().map(|p| p.name.as_str()).collect();
+        let orig = names.clone();
+        names.sort_unstable();
+        anyhow::ensure!(orig == names, "params not in sorted (flatten) order");
+        Ok(())
+    }
+
+    pub fn artifact(&self, kind: &str) -> Result<&str> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, v)| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("artifact kind {kind:?} not in manifest"))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn sample_manifest_json() -> String {
+        r#"{
+          "preset_prefix": "",
+          "config": {"img_size": 16, "patch": 4, "dim": 48, "depth": 3,
+                     "heads": 4, "mlp_ratio": 4, "classes": 10,
+                     "lora_rank": 0, "head_dim": 12, "tokens": 17},
+          "micro_batch": 4,
+          "mb_variants": [2],
+          "artifacts": {"trainstep": "trainstep.hlo.txt", "eval": "eval.hlo.txt"},
+          "params_bin": "params_init.bin",
+          "n_params": 2,
+          "total_elems": 14,
+          "params": [
+            {"name": "a_cls", "shape": [1, 1, 8], "size": 8, "offset": 0},
+            {"name": "z_b", "shape": [6], "size": 6, "offset": 8}
+          ],
+          "trainstep_io": {"inputs": "", "outputs": ""}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("d2ft_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(sample_manifest_json().as_bytes()).unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.config.depth, 3);
+        assert_eq!(m.config.body_subnets(), 12);
+        assert_eq!(m.micro_batch, 4);
+        assert_eq!(m.artifact("eval").unwrap(), "eval.hlo.txt");
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(m.params[1].offset, 8);
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let text = sample_manifest_json().replace("\"offset\": 8", "\"offset\": 9");
+        let dir = std::env::temp_dir().join("d2ft_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        std::fs::write(&path, text).unwrap();
+        assert!(Manifest::load(&path).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once per process,
+//! execute from the training hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+mod artifacts;
+mod manifest;
+mod params;
+mod session;
+
+pub use artifacts::ArtifactRegistry;
+pub use manifest::{Manifest, ModelConfig, ParamEntry};
+pub use params::ParamStore;
+pub use session::{EvalOut, Session, StepOut, TrainState};

@@ -1,0 +1,181 @@
+//! ParamStore: the flat f32 parameter blob + per-tensor views and the
+//! XLA `Literal` conversion used to feed the trainstep executable.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, ParamEntry};
+use crate::tensor::Tensor;
+
+/// All model parameters as one contiguous f32 buffer, sliced per tensor
+/// according to the manifest. Momentum buffers share the layout.
+pub struct ParamStore {
+    entries: Vec<ParamEntry>,
+    flat: Vec<f32>,
+}
+
+impl ParamStore {
+    /// Load `params_init.bin` next to the manifest.
+    pub fn load(manifest: &Manifest, artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join(&manifest.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading params blob {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == manifest.total_elems * 4,
+            "blob {} has {} bytes, manifest expects {}",
+            path.display(),
+            bytes.len(),
+            manifest.total_elems * 4
+        );
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(ParamStore { entries: manifest.params.clone(), flat })
+    }
+
+    /// Zero-initialized store with the same layout (momentum buffers).
+    pub fn zeros_like(manifest: &Manifest) -> Self {
+        ParamStore {
+            entries: manifest.params.clone(),
+            flat: vec![0.0; manifest.total_elems],
+        }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.flat.len()
+    }
+
+    pub fn entries(&self) -> &[ParamEntry] {
+        &self.entries
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ParamEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Flat slice for one tensor.
+    pub fn slice(&self, name: &str) -> Option<&[f32]> {
+        let e = self.entry(name)?;
+        Some(&self.flat[e.offset..e.offset + e.size])
+    }
+
+    /// Copy of one tensor.
+    pub fn tensor(&self, name: &str) -> Option<Tensor> {
+        let e = self.entry(name)?;
+        Some(Tensor::from_vec(
+            &e.shape,
+            self.flat[e.offset..e.offset + e.size].to_vec(),
+        ))
+    }
+
+    /// Build the per-tensor `xla::Literal` argument vector, in manifest
+    /// (== HLO parameter) order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let slice = &self.flat[e.offset..e.offset + e.size];
+                let dims: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(slice).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Overwrite the blob from per-tensor literals (post-step write-back).
+    pub fn from_literals(&mut self, literals: &[xla::Literal]) -> Result<()> {
+        anyhow::ensure!(literals.len() == self.entries.len(), "literal count mismatch");
+        for (e, lit) in self.entries.iter().zip(literals) {
+            let v = lit.to_vec::<f32>()?;
+            anyhow::ensure!(v.len() == e.size, "size mismatch for {}", e.name);
+            self.flat[e.offset..e.offset + e.size].copy_from_slice(&v);
+        }
+        Ok(())
+    }
+
+    /// Sum of |w| per tensor-name predicate (weight-magnitude scores use
+    /// per-subnet slices computed in the HLO probe; this host-side variant
+    /// backs tests and the dynamic-pruning baselines).
+    pub fn abs_sum_where(&self, pred: impl Fn(&str) -> bool) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| pred(&e.name))
+            .map(|e| {
+                self.flat[e.offset..e.offset + e.size]
+                    .iter()
+                    .map(|&x| (x as f64).abs())
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelConfig;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            prefix: String::new(),
+            config: ModelConfig {
+                img_size: 16,
+                patch: 4,
+                dim: 8,
+                depth: 1,
+                heads: 2,
+                mlp_ratio: 4,
+                classes: 4,
+                lora_rank: 0,
+                head_dim: 4,
+                tokens: 17,
+            },
+            micro_batch: 2,
+            mb_variants: vec![],
+            artifacts: vec![],
+            params_bin: "p.bin".into(),
+            total_elems: 10,
+            params: vec![
+                ParamEntry { name: "a".into(), shape: vec![2, 3], size: 6, offset: 0 },
+                ParamEntry { name: "b".into(), shape: vec![4], size: 4, offset: 6 },
+            ],
+        }
+    }
+
+    #[test]
+    fn load_and_slice() {
+        let dir = std::env::temp_dir().join("d2ft_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = tiny_manifest();
+        let data: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("p.bin"), bytes).unwrap();
+        let store = ParamStore::load(&m, &dir).unwrap();
+        assert_eq!(store.slice("a").unwrap(), &data[..6]);
+        assert_eq!(store.slice("b").unwrap(), &data[6..]);
+        assert_eq!(store.tensor("a").unwrap().shape(), &[2, 3]);
+        assert!(store.slice("nope").is_none());
+        assert_eq!(store.abs_sum_where(|n| n == "b"), (6..10).sum::<usize>() as f64);
+    }
+
+    #[test]
+    fn zeros_like_layout() {
+        let m = tiny_manifest();
+        let z = ParamStore::zeros_like(&m);
+        assert_eq!(z.total_elems(), 10);
+        assert!(z.slice("a").unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rejects_wrong_blob_size() {
+        let dir = std::env::temp_dir().join("d2ft_params_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("p.bin"), [0u8; 12]).unwrap();
+        assert!(ParamStore::load(&tiny_manifest(), &dir).is_err());
+    }
+}

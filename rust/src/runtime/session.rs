@@ -1,0 +1,207 @@
+//! Session: typed execute wrappers around the AOT artifacts.
+//!
+//! One `Session` owns the compiled executables for a manifest (trainstep,
+//! eval, scores) plus the mutable training state (params + momentum as
+//! per-tensor literals). The hot path is `Session::step`: exactly one
+//! PJRT execute for fwd + bwd + SGD-momentum update.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::artifacts::ArtifactRegistry;
+use super::manifest::Manifest;
+use super::params::ParamStore;
+use crate::schedule::table::MaskPair;
+use crate::tensor::Tensor;
+
+/// Mutable training state: params + momentum in HLO parameter order.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub momentum: Vec<xla::Literal>,
+    n: usize,
+}
+
+impl TrainState {
+    pub fn new(store: &ParamStore) -> Result<Self> {
+        let params = store.to_literals()?;
+        let momentum: Vec<xla::Literal> = store
+            .entries()
+            .iter()
+            .map(|e| {
+                let dims: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&vec![0.0f32; e.size]).reshape(&dims)?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n = params.len();
+        Ok(TrainState { params, momentum, n })
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.n
+    }
+
+    /// Zero the momentum buffers (fresh optimizer state — used at the
+    /// pretrain -> fine-tune boundary).
+    pub fn reset_momentum(&mut self) -> Result<()> {
+        for m in self.momentum.iter_mut() {
+            let shape = m.array_shape()?;
+            let n: usize = shape.dims().iter().map(|&d| d as usize).product();
+            let dims: Vec<i64> = shape.dims().to_vec();
+            *m = xla::Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?;
+        }
+        Ok(())
+    }
+
+    /// Copy current params back into a ParamStore (for host inspection).
+    pub fn write_back(&self, store: &mut ParamStore) -> Result<()> {
+        store.from_literals(&self.params)
+    }
+}
+
+/// Output of one trainstep execute.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    pub n_correct: f32,
+}
+
+/// Output of one eval execute.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub n_correct: f32,
+}
+
+/// Compiled executables + model metadata for one manifest.
+///
+/// The score-probe executable compiles lazily on first use — it is the
+/// most expensive artifact to compile and schedulers that ignore
+/// contribution scores (Standard, Random) never touch it.
+pub struct Session<'a> {
+    registry: &'a ArtifactRegistry,
+    pub manifest: &'a Manifest,
+    trainstep: Rc<xla::PjRtLoadedExecutable>,
+    eval: Rc<xla::PjRtLoadedExecutable>,
+    scores: std::cell::RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(registry: &'a ArtifactRegistry, manifest: &'a Manifest) -> Result<Self> {
+        Ok(Session {
+            registry,
+            manifest,
+            trainstep: registry.executable_for(manifest, "trainstep")?,
+            eval: registry.executable_for(manifest, "eval")?,
+            scores: std::cell::RefCell::new(None),
+        })
+    }
+
+    /// Session over a micro-batch-size variant trainstep (Table VI).
+    pub fn with_trainstep_variant(mut self, mb: usize) -> Result<Self> {
+        let kind = format!("trainstep_mb{mb}");
+        self.trainstep = self.registry.executable_for(self.manifest, &kind)?;
+        Ok(self)
+    }
+
+    fn mask_literal(mask: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = mask.shape().iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(mask.data()).reshape(&dims)?)
+    }
+
+    /// Images -> literal ([mb, img, img, 3] f32).
+    pub fn x_literal(&self, x: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = x.shape().iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(x.data()).reshape(&dims)?)
+    }
+
+    /// Labels -> literal ([mb] s32).
+    pub fn y_literal(&self, y: &[i32]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(y))
+    }
+
+    /// One fused fwd+bwd+SGD step on a micro-batch under a schedule row.
+    /// Exactly one PJRT execute; updates `state` in place.
+    pub fn step(
+        &self,
+        state: &mut TrainState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+        masks: &MaskPair,
+        lr: f32,
+    ) -> Result<StepOut> {
+        let fwd = Self::mask_literal(&masks.fwd)?;
+        let bwd = Self::mask_literal(&masks.bwd)?;
+        let lr_lit = xla::Literal::scalar(lr);
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(2 * state.n_tensors() + 5);
+        args.extend(state.params.iter());
+        args.extend(state.momentum.iter());
+        args.push(x);
+        args.push(y);
+        args.push(&fwd);
+        args.push(&bwd);
+        args.push(&lr_lit);
+        let result = self.trainstep.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        let n = state.n_tensors();
+        anyhow::ensure!(outs.len() == 2 * n + 2, "trainstep arity {}", outs.len());
+        let n_correct = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let momentum = outs.split_off(n);
+        state.params = outs;
+        state.momentum = momentum;
+        Ok(StepOut { loss, n_correct })
+    }
+
+    /// Forward-only pass: loss + correct count (all-subnets mask unless a
+    /// partial fwd mask is given — the timed `p_o` program of Table IV).
+    pub fn eval(
+        &self,
+        state: &TrainState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+        fwd_mask: Option<&Tensor>,
+    ) -> Result<EvalOut> {
+        let cfg = &self.manifest.config;
+        let ones = Tensor::full(&[cfg.depth, cfg.heads], 1.0);
+        let fwd = Self::mask_literal(fwd_mask.unwrap_or(&ones))?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(state.n_tensors() + 3);
+        args.extend(state.params.iter());
+        args.push(x);
+        args.push(y);
+        args.push(&fwd);
+        let result = self.eval.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss, n_correct) = result.to_tuple2()?;
+        Ok(EvalOut {
+            loss: loss.to_vec::<f32>()?[0],
+            n_correct: n_correct.to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Contribution-score probe: `[L, H, 4]` (fisher, grad-mag, taylor,
+    /// weight-mag) for one micro-batch, without updating weights.
+    pub fn probe_scores(
+        &self,
+        state: &TrainState,
+        x: &xla::Literal,
+        y: &xla::Literal,
+    ) -> Result<Tensor> {
+        if self.scores.borrow().is_none() {
+            let file = self.manifest.artifact("scores")?;
+            *self.scores.borrow_mut() = Some(self.registry.executable(file)?);
+        }
+        let scores_ref = self.scores.borrow();
+        let exe = scores_ref.as_ref().unwrap();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(state.n_tensors() + 2);
+        args.extend(state.params.iter());
+        args.push(x);
+        args.push(y);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let cfg = &self.manifest.config;
+        let v = out.to_vec::<f32>()?;
+        Ok(Tensor::from_vec(&[cfg.depth, cfg.heads, 4], v))
+    }
+}

@@ -1,0 +1,259 @@
+//! D2FT's bi-level knapsack scheduler (paper §II-B/C, Algorithms 1 & 2).
+//!
+//! Per device (subnet) k the multi-knapsack (Eq. 4) is decoupled into a
+//! bi-level problem: the **outer** knapsack picks `p_f` micro-batches by
+//! *backward* contribution score under the full-operation capacity
+//! (Eq. 6/7); the **inner** knapsack picks `p_o` micro-batches by
+//! *forward* score under the forward-only capacity (Eq. 8). Both levels
+//! are solved exactly by the Algorithm-2 DP ([`knapsack_01`]).
+//!
+//! Merging follows Algorithm 1: chosen by both -> p_f, by neither -> p_s.
+//! Two merge modes are provided:
+//!
+//! * [`MergeMode::Exclusive`] (default): the inner DP runs over the
+//!   samples the outer level did *not* take, enforcing the paper's
+//!   `1_{p_f} + 1_{p_o} <= 1` constraint exactly — every device emits
+//!   precisely (n_full, n_fwd) operations, which is what makes Table I's
+//!   workload variance exactly 0.
+//! * [`MergeMode::PaperMerge`]: both DPs run over all samples and
+//!   conflicts resolve to p_f verbatim as in Algorithm 1 lines 23-25
+//!   (a device may then emit fewer p_o ops than budgeted).
+
+use super::knapsack::knapsack_01;
+use super::table::{Budget, Op, ScheduleTable};
+use super::Scheduler;
+use crate::cluster::cost::CostModel;
+use crate::scores::{ScoreBook, ScoreConfig};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeMode {
+    Exclusive,
+    PaperMerge,
+}
+
+/// The D2FT scheduler.
+pub struct BiLevel {
+    pub scores: ScoreConfig,
+    pub cost: CostModel,
+    pub merge: MergeMode,
+}
+
+impl BiLevel {
+    pub fn new(scores: ScoreConfig, cost: CostModel) -> Self {
+        BiLevel { scores, cost, merge: MergeMode::Exclusive }
+    }
+
+    pub fn with_merge(mut self, merge: MergeMode) -> Self {
+        self.merge = merge;
+        self
+    }
+
+    /// Schedule one device (= one subnet row). Exposed for tests.
+    pub fn schedule_device(
+        &self,
+        backward_scores: &[f64],
+        forward_scores: &[f64],
+        n_full: usize,
+        n_fwd: usize,
+    ) -> Vec<Op> {
+        let n = backward_scores.len();
+        let w_full = self.cost.full_units();
+        let w_fwd = self.cost.fwd_units();
+        // All weights within one level are equal, so a positive shift is
+        // rank-preserving; it guarantees the DP fills the budget even when
+        // raw scores are zero (exact per-device counts -> Table I's zero
+        // workload variance).
+        let shift = |xs: &[f64]| -> Vec<f64> {
+            let lo = xs.iter().copied().fold(f64::INFINITY, f64::min).min(0.0);
+            xs.iter().map(|&v| v - lo + 1.0).collect()
+        };
+        // Outer level: p_f by backward score, capacity = n_full full ops.
+        let weights_full = vec![w_full; n];
+        let (_, picked_f) = knapsack_01(&shift(backward_scores), &weights_full, n_full * w_full);
+        // Inner level: p_o by forward score, capacity = n_fwd fwd ops.
+        let weights_fwd = vec![w_fwd; n];
+        let picked_o = match self.merge {
+            MergeMode::Exclusive => {
+                // Mask out samples the outer level took (enforce the
+                // 1_{p_f} + 1_{p_o} <= 1 coupling inside the DP): shifted
+                // scores are >= 1, masked items get large negative value
+                // so the maximizing DP never takes them.
+                let masked: Vec<f64> = shift(forward_scores)
+                    .into_iter()
+                    .zip(&picked_f)
+                    .map(|(s, &pf)| if pf { -1e300 } else { s })
+                    .collect();
+                let (_, mut picked) = knapsack_01(&masked, &weights_fwd, n_fwd * w_fwd);
+                for (p, &pf) in picked.iter_mut().zip(&picked_f) {
+                    *p = *p && !pf;
+                }
+                picked
+            }
+            MergeMode::PaperMerge => {
+                let (_, picked) = knapsack_01(&shift(forward_scores), &weights_fwd, n_fwd * w_fwd);
+                picked
+            }
+        };
+        // Algorithm 1 merge: both -> p_f; only outer -> p_f; only inner
+        // -> p_o; neither -> p_s.
+        (0..n)
+            .map(|i| {
+                if picked_f[i] {
+                    Op::Full
+                } else if picked_o[i] {
+                    Op::ForwardOnly
+                } else {
+                    Op::Shortcut
+                }
+            })
+            .collect()
+    }
+}
+
+impl Scheduler for BiLevel {
+    fn name(&self) -> &'static str {
+        "D2FT (Ours)"
+    }
+
+    fn schedule(&mut self, scores: &ScoreBook, budget: &Budget) -> ScheduleTable {
+        let mut table = ScheduleTable::all(scores.n_subnets, scores.n_micro, Op::Shortcut);
+        for k in 0..scores.n_subnets {
+            let (n_full, n_fwd) = budget.for_device(k);
+            let ops = self.schedule_device(
+                scores.row(self.scores.backward, k),
+                scores.row(self.scores.forward, k),
+                n_full,
+                n_fwd,
+            );
+            for (i, op) in ops.into_iter().enumerate() {
+                table.set(k, i, op);
+            }
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Partition;
+    use crate::runtime::ModelConfig;
+    use crate::scores::Metric;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn bilevel() -> BiLevel {
+        BiLevel::new(ScoreConfig::default(), CostModel::paper())
+    }
+
+    fn book_from(n_subnets: usize, n_micro: usize, seed: u64) -> ScoreBook {
+        let mut rng = Rng::new(seed);
+        let mut b = ScoreBook::zeros(n_subnets, n_micro);
+        for k in 0..n_subnets {
+            for i in 0..n_micro {
+                for m in [Metric::Fisher, Metric::GradMag, Metric::Taylor] {
+                    b.set(m, k, i, rng.next_f64() * 10.0);
+                }
+                // weight magnitude is per-subnet (sample independent)
+                b.set(Metric::WeightMag, k, i, (k + 1) as f64);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn device_selects_top_forward_scores() {
+        let d = bilevel();
+        // backward scores equal -> first n_full by DP tie-break; forward
+        // scores favor micro-batches 3, 4.
+        let ops = d.schedule_device(&[1.0; 5], &[0.1, 0.2, 0.3, 9.0, 8.0], 2, 2);
+        let full: Vec<usize> = (0..5).filter(|&i| ops[i] == Op::Full).collect();
+        let fwd: Vec<usize> = (0..5).filter(|&i| ops[i] == Op::ForwardOnly).collect();
+        assert_eq!(full.len(), 2);
+        assert_eq!(fwd, vec![3, 4].into_iter().filter(|i| !full.contains(i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exclusive_mode_emits_exact_counts() {
+        check("bilevel-exact-counts", 40, |g| {
+            let n_micro = g.usize_in(2, 8);
+            let n_full = g.usize_in(0, n_micro);
+            let n_fwd = g.usize_in(0, n_micro - n_full);
+            let n_subnets = g.usize_in(1, 20);
+            let book = book_from(n_subnets, n_micro, g.usize_in(0, 1 << 30) as u64);
+            let mut d = bilevel();
+            let t = d.schedule(&book, &Budget::uniform(n_micro, n_full, n_fwd));
+            for k in 0..n_subnets {
+                if t.count_row(k, Op::Full) != n_full {
+                    return Err(format!("subnet {k}: p_f {} != {n_full}", t.count_row(k, Op::Full)));
+                }
+                if t.count_row(k, Op::ForwardOnly) != n_fwd {
+                    return Err(format!("subnet {k}: p_o count mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_merge_resolves_conflicts_to_full() {
+        let d = bilevel().with_merge(MergeMode::PaperMerge);
+        // forward and backward both favor samples 0, 1 -> conflicts.
+        let ops = d.schedule_device(&[9.0, 8.0, 0.1, 0.1, 0.1], &[9.0, 8.0, 0.2, 0.1, 0.1], 2, 2);
+        assert_eq!(ops[0], Op::Full);
+        assert_eq!(ops[1], Op::Full);
+        // inner picked {0,1} too; merged away, so fewer p_o remain.
+        assert!(ops[2..].iter().filter(|&&o| o == Op::ForwardOnly).count() <= 2);
+    }
+
+    #[test]
+    fn respects_per_device_override() {
+        let book = book_from(4, 5, 7);
+        let mut d = bilevel();
+        let budget = Budget::uniform(5, 2, 2).with_device_override(1, 3, 1);
+        let t = d.schedule(&book, &budget);
+        assert_eq!(t.count_row(0, Op::Full), 2);
+        assert_eq!(t.count_row(1, Op::Full), 3);
+        assert_eq!(t.count_row(1, Op::ForwardOnly), 1);
+    }
+
+    #[test]
+    fn zero_budget_all_shortcut() {
+        let book = book_from(3, 4, 1);
+        let mut d = bilevel();
+        let t = d.schedule(&book, &Budget::uniform(4, 0, 0));
+        for k in 0..3 {
+            assert_eq!(t.count_row(k, Op::Shortcut), 4);
+        }
+    }
+
+    #[test]
+    fn full_budget_all_full() {
+        let book = book_from(3, 4, 2);
+        let mut d = bilevel();
+        let t = d.schedule(&book, &Budget::uniform(4, 4, 0));
+        for k in 0..3 {
+            assert_eq!(t.count_row(k, Op::Full), 4);
+        }
+    }
+
+    #[test]
+    fn workload_variance_is_zero_with_uniform_budget() {
+        // The Table I headline: D2FT emits identical per-device workloads.
+        let cfg = ModelConfig {
+            img_size: 32, patch: 4, dim: 192, depth: 6, heads: 6,
+            mlp_ratio: 4, classes: 196, lora_rank: 0, head_dim: 32, tokens: 65,
+        };
+        let part = Partition::per_head(&cfg);
+        let book = book_from(part.n_subnets(), 5, 3);
+        let mut d = bilevel();
+        let t = d.schedule(&book, &Budget::uniform(5, 3, 0));
+        let cost = CostModel::paper();
+        let loads: Vec<f64> = (0..t.n_subnets)
+            .map(|k| (0..t.n_micro).map(|i| cost.compute_units(t.get(k, i)) as f64).sum())
+            .collect();
+        let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+        let var = loads.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / loads.len() as f64;
+        assert_eq!(var, 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Dynamic-pruning baselines (paper §III-A; Lin et al. [21], Sokar et
+//! al. [31]).
+//!
+//! Every `refresh_every` batches the pruner re-selects the top-scoring
+//! subnets under the compute budget; selected subnets run `p_f` on every
+//! micro-batch, pruned subnets run `p_s` (no `p_o` option — the paper
+//! calls this out as the reason dynamic pruning degrades at high pruning
+//! ratios). Selection is *global* across subnets, so devices are either
+//! fully busy or idle: Table I's variance ≈ 0.25.
+//!
+//! * `DPruningM` ("DPruning M"): score = weight magnitude.
+//! * `DPruningMG` ("DPruning M/G"): score = weight magnitude x gradient
+//!   magnitude (the magnitude-gradient variant).
+
+use super::table::{Budget, Op, ScheduleTable};
+use super::Scheduler;
+use crate::scores::{Metric, ScoreBook};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneScore {
+    Magnitude,
+    MagnitudeGradient,
+}
+
+pub struct DPruning {
+    kind: PruneScore,
+    /// Re-select every this many batches (paper: 16 iterations).
+    refresh_every: usize,
+    batch_idx: usize,
+    selected: Vec<bool>,
+}
+
+impl DPruning {
+    pub fn magnitude() -> DPruning {
+        DPruning {
+            kind: PruneScore::Magnitude,
+            refresh_every: 16,
+            batch_idx: 0,
+            selected: Vec::new(),
+        }
+    }
+
+    pub fn magnitude_gradient() -> DPruning {
+        DPruning {
+            kind: PruneScore::MagnitudeGradient,
+            refresh_every: 16,
+            batch_idx: 0,
+            selected: Vec::new(),
+        }
+    }
+
+    pub fn with_refresh(mut self, every: usize) -> DPruning {
+        assert!(every >= 1);
+        self.refresh_every = every;
+        self
+    }
+
+    fn subnet_score(&self, scores: &ScoreBook, k: usize) -> f64 {
+        match self.kind {
+            PruneScore::Magnitude => scores.subnet_total(Metric::WeightMag, k),
+            PruneScore::MagnitudeGradient => {
+                scores.subnet_total(Metric::WeightMag, k)
+                    * scores.subnet_total(Metric::GradMag, k).max(1e-30)
+            }
+        }
+    }
+
+    fn reselect(&mut self, scores: &ScoreBook, budget: &Budget) {
+        // Match D2FT's compute budget with p_f-only ops: keep a fraction
+        // of subnets equal to the budget's compute fraction.
+        let frac = budget.compute_fraction(0.4);
+        let n_keep = ((scores.n_subnets as f64 * frac).round() as usize).min(scores.n_subnets);
+        let mut order: Vec<usize> = (0..scores.n_subnets).collect();
+        order.sort_by(|&a, &b| {
+            self.subnet_score(scores, b)
+                .partial_cmp(&self.subnet_score(scores, a))
+                .unwrap()
+        });
+        self.selected = vec![false; scores.n_subnets];
+        for &k in order.iter().take(n_keep) {
+            self.selected[k] = true;
+        }
+    }
+}
+
+impl Scheduler for DPruning {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            PruneScore::Magnitude => "DPruning M",
+            PruneScore::MagnitudeGradient => "DPruning M/G",
+        }
+    }
+
+    fn schedule(&mut self, scores: &ScoreBook, budget: &Budget) -> ScheduleTable {
+        if self.batch_idx % self.refresh_every == 0 || self.selected.len() != scores.n_subnets {
+            self.reselect(scores, budget);
+        }
+        self.batch_idx += 1;
+        let mut table = ScheduleTable::all(scores.n_subnets, scores.n_micro, Op::Shortcut);
+        for k in 0..scores.n_subnets {
+            if self.selected[k] {
+                for i in 0..scores.n_micro {
+                    table.set(k, i, Op::Full);
+                }
+            }
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::CostModel;
+    use crate::cluster::workload::WorkloadTracker;
+
+    fn book(n_subnets: usize) -> ScoreBook {
+        let mut b = ScoreBook::zeros(n_subnets, 5);
+        for k in 0..n_subnets {
+            for i in 0..5 {
+                b.set(Metric::WeightMag, k, i, (k + 1) as f64);
+                b.set(Metric::GradMag, k, i, ((n_subnets - k) as f64).sqrt());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn keeps_top_magnitude_subnets() {
+        let mut p = DPruning::magnitude();
+        let b = book(10);
+        let t = p.schedule(&b, &Budget::uniform(5, 3, 0)); // 60% -> keep 6
+        let kept: Vec<usize> = (0..10).filter(|&k| t.get(k, 0) == Op::Full).collect();
+        assert_eq!(kept, vec![4, 5, 6, 7, 8, 9]);
+        // kept subnets run everything, pruned run nothing
+        for &k in &kept {
+            assert_eq!(t.count_row(k, Op::Full), 5);
+        }
+        assert_eq!(t.count_row(0, Op::Shortcut), 5);
+    }
+
+    #[test]
+    fn refresh_interval_respected() {
+        let mut p = DPruning::magnitude().with_refresh(2);
+        let b1 = book(6);
+        let t1 = p.schedule(&b1, &Budget::uniform(5, 3, 0));
+        // change the scores drastically; without refresh the selection holds
+        let mut b2 = ScoreBook::zeros(6, 5);
+        for k in 0..6 {
+            for i in 0..5 {
+                b2.set(Metric::WeightMag, k, i, (6 - k) as f64);
+            }
+        }
+        let t2 = p.schedule(&b2, &Budget::uniform(5, 3, 0));
+        assert_eq!(t1, t2, "selection must persist between refreshes");
+        let t3 = p.schedule(&b2, &Budget::uniform(5, 3, 0));
+        assert_ne!(t1, t3, "refresh must re-rank");
+    }
+
+    #[test]
+    fn all_or_nothing_workload_variance() {
+        // The Table I contrast: pruning is per-subnet, so ~0.24 variance
+        // of per-device compute fraction at a 60% budget.
+        let mut p = DPruning::magnitude();
+        let b = book(72);
+        let t = p.schedule(&b, &Budget::uniform(5, 3, 0));
+        let mut w = WorkloadTracker::new(CostModel::paper(), 72);
+        w.record(&t);
+        let var = w.workload_variance();
+        assert!((var - 0.24).abs() < 0.03, "variance {var}");
+    }
+
+    #[test]
+    fn mg_variant_uses_gradient() {
+        let mut pm = DPruning::magnitude();
+        let mut pmg = DPruning::magnitude_gradient();
+        // magnitude increasing in k, gradient decreasing: the product
+        // reorders the ranking.
+        let mut b = ScoreBook::zeros(4, 2);
+        let mags = [1.0, 2.0, 3.0, 4.0];
+        let grads = [100.0, 1.0, 1.0, 1.0];
+        for k in 0..4 {
+            for i in 0..2 {
+                b.set(Metric::WeightMag, k, i, mags[k]);
+                b.set(Metric::GradMag, k, i, grads[k]);
+            }
+        }
+        let tm = pm.schedule(&b, &Budget::uniform(2, 1, 0)); // keep 2
+        let tmg = pmg.schedule(&b, &Budget::uniform(2, 1, 0));
+        assert_ne!(tm, tmg);
+        assert_eq!(tmg.get(0, 0), Op::Full, "huge gradient rescues subnet 0");
+    }
+}

@@ -1,0 +1,144 @@
+//! 0/1 knapsack by dynamic programming — the paper's Algorithm 2
+//! (`DPSearching`), phase 1 (value table) + phase 2 (backtrack).
+//!
+//! Weights are integer cost units (the cluster cost model uses
+//! c_f = 2, c_b = 3 units so a full op weighs 5 — the paper's measured
+//! "forward ≈ 40% of forward+backward", Table IV). Complexity is
+//! O(N · C) per subnet, with N = micro-batches per batch.
+
+/// Solve max Σ value[i]·x[i] s.t. Σ weight[i]·x[i] ≤ capacity, x ∈ {0,1}.
+///
+/// Returns (best value, selection bitmap). Deterministic tie-break: when
+/// skipping and taking score equally, the DP *skips* (keeps earlier
+/// items out), matching Algorithm 2's `T[k][i-1][w]` preference.
+pub fn knapsack_01(values: &[f64], weights: &[usize], capacity: usize) -> (f64, Vec<bool>) {
+    assert_eq!(values.len(), weights.len());
+    let n = values.len();
+    // Phase 1: full (N+1) x (C+1) table — needed for the exact phase-2
+    // backtrack the paper specifies.
+    let w_cols = capacity + 1;
+    let mut table = vec![0.0f64; (n + 1) * w_cols];
+    for i in 1..=n {
+        let (wi, vi) = (weights[i - 1], values[i - 1]);
+        let (prev, cur) = table.split_at_mut(i * w_cols);
+        let prev_row = &prev[(i - 1) * w_cols..i * w_cols];
+        let cur_row = &mut cur[..w_cols];
+        for w in 0..w_cols {
+            let skip = prev_row[w];
+            cur_row[w] = if w >= wi {
+                let take = prev_row[w - wi] + vi;
+                if take > skip { take } else { skip }
+            } else {
+                skip
+            };
+        }
+    }
+    // Phase 2: backtrack from T[n][C].
+    let mut picked = vec![false; n];
+    let mut w = capacity;
+    for i in (1..=n).rev() {
+        if table[i * w_cols + w] != table[(i - 1) * w_cols + w] {
+            picked[i - 1] = true;
+            w -= weights[i - 1];
+        }
+    }
+    (table[n * w_cols + capacity], picked)
+}
+
+/// Brute-force reference for tests (2^n subsets).
+#[cfg(test)]
+pub fn knapsack_brute(values: &[f64], weights: &[usize], capacity: usize) -> f64 {
+    let n = values.len();
+    let mut best = 0.0f64;
+    for mask in 0..(1u32 << n) {
+        let mut v = 0.0;
+        let mut w = 0usize;
+        for i in 0..n {
+            if mask & (1 << i) != 0 {
+                v += values[i];
+                w += weights[i];
+            }
+        }
+        if w <= capacity && v > best {
+            best = v;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn textbook_instance() {
+        // values 60/100/120, weights 10/20/30, cap 50 -> 220 (items 2,3).
+        let (v, picked) = knapsack_01(&[60.0, 100.0, 120.0], &[10, 20, 30], 50);
+        assert_eq!(v, 220.0);
+        assert_eq!(picked, vec![false, true, true]);
+    }
+
+    #[test]
+    fn zero_capacity_selects_nothing() {
+        let (v, picked) = knapsack_01(&[5.0, 7.0], &[1, 1], 0);
+        assert_eq!(v, 0.0);
+        assert!(picked.iter().all(|&p| !p));
+    }
+
+    #[test]
+    fn capacity_exceeds_total_selects_all_positive() {
+        let (v, picked) = knapsack_01(&[1.0, 2.0, 3.0], &[5, 5, 5], 100);
+        assert_eq!(v, 6.0);
+        assert!(picked.iter().all(|&p| p));
+    }
+
+    #[test]
+    fn equal_values_fill_to_capacity() {
+        // The D2FT weight-magnitude backward score: same value per sample.
+        let (v, picked) = knapsack_01(&[2.0; 5], &[5; 5], 15);
+        assert_eq!(v, 6.0);
+        assert_eq!(picked.iter().filter(|&&p| p).count(), 3);
+    }
+
+    #[test]
+    fn property_matches_brute_force() {
+        check("knapsack-vs-brute", 60, |g| {
+            let n = g.usize_in(1, 10);
+            let values: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 20.0)).collect();
+            let weights: Vec<usize> = (0..n).map(|_| g.usize_in(1, 8)).collect();
+            let cap = g.usize_in(0, 30);
+            let (v, picked) = knapsack_01(&values, &weights, cap);
+            let brute = knapsack_brute(&values, &weights, cap);
+            if (v - brute).abs() > 1e-9 {
+                return Err(format!("dp {v} != brute {brute}"));
+            }
+            // Selection must be feasible and achieve the reported value.
+            let w: usize = picked.iter().zip(&weights).filter(|(p, _)| **p).map(|(_, w)| w).sum();
+            let vv: f64 = picked.iter().zip(&values).filter(|(p, _)| **p).map(|(_, v)| v).sum();
+            if w > cap {
+                return Err(format!("infeasible selection weight {w} > {cap}"));
+            }
+            if (vv - v).abs() > 1e-9 {
+                return Err("selection value mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_monotone_in_capacity() {
+        check("knapsack-monotone", 40, |g| {
+            let n = g.usize_in(1, 8);
+            let values: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 10.0)).collect();
+            let weights: Vec<usize> = (0..n).map(|_| g.usize_in(1, 6)).collect();
+            let c = g.usize_in(0, 20);
+            let (v1, _) = knapsack_01(&values, &weights, c);
+            let (v2, _) = knapsack_01(&values, &weights, c + 1);
+            if v2 + 1e-12 < v1 {
+                return Err(format!("value decreased with capacity: {v1} -> {v2}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,36 @@
+//! Scheduling: the paper's core contribution (Algorithms 1 & 2) plus all
+//! evaluated baselines behind one trait.
+//!
+//! A scheduler maps per-(subnet, micro-batch) contribution scores +
+//! per-device budgets to a [`table::ScheduleTable`] assigning every
+//! (subnet, micro-batch) pair one of `p_f` / `p_o` / `p_s`.
+
+pub mod bilevel;
+pub mod dpruning;
+pub mod knapsack;
+pub mod moe_gshard;
+pub mod random_sched;
+pub mod scaler;
+pub mod table;
+
+pub use table::{Budget, MaskPair, Op, ScheduleTable};
+
+use crate::scores::ScoreBook;
+
+/// Common interface for D2FT and every baseline scheduler.
+pub trait Scheduler {
+    /// Human-readable name used in reports (matches the paper's labels).
+    fn name(&self) -> &'static str;
+
+    /// Build the schedule for one batch of `n_micro` micro-batches.
+    ///
+    /// `scores` carries the per-subnet, per-micro-batch contribution
+    /// scores for this batch; `budget` the per-device operation budget.
+    fn schedule(&mut self, scores: &ScoreBook, budget: &Budget) -> ScheduleTable;
+
+    /// Whether this policy reads contribution scores at all. The
+    /// coordinator skips the (expensive) score probes when false.
+    fn needs_scores(&self) -> bool {
+        true
+    }
+}

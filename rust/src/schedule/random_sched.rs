@@ -1,0 +1,95 @@
+//! "Random" baseline (paper §III-A): every (subnet, micro-batch) pair
+//! independently draws p_f / p_o / p_s with probabilities matching the
+//! global budget — same expected cost as D2FT, no contribution awareness,
+//! no workload balancing (Table I shows its variance ≥ 0.2).
+
+use super::table::{Budget, Op, ScheduleTable};
+use super::Scheduler;
+use crate::scores::ScoreBook;
+use crate::util::rng::Rng;
+
+pub struct RandomSched {
+    rng: Rng,
+}
+
+impl RandomSched {
+    pub fn new(seed: u64) -> RandomSched {
+        RandomSched { rng: Rng::new(seed) }
+    }
+}
+
+impl Scheduler for RandomSched {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn needs_scores(&self) -> bool {
+        false
+    }
+
+    fn schedule(&mut self, scores: &ScoreBook, budget: &Budget) -> ScheduleTable {
+        let n = budget.n_micro as f64;
+        let p_full = budget.n_full as f64 / n;
+        let p_fwd = budget.n_fwd as f64 / n;
+        let mut table = ScheduleTable::all(scores.n_subnets, scores.n_micro, Op::Shortcut);
+        for k in 0..scores.n_subnets {
+            for i in 0..scores.n_micro {
+                let u = self.rng.next_f64();
+                let op = if u < p_full {
+                    Op::Full
+                } else if u < p_full + p_fwd {
+                    Op::ForwardOnly
+                } else {
+                    Op::Shortcut
+                };
+                table.set(k, i, op);
+            }
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::CostModel;
+    use crate::cluster::workload::WorkloadTracker;
+    use crate::schedule::table::Budget;
+
+    #[test]
+    fn expected_cost_matches_budget() {
+        let mut s = RandomSched::new(1);
+        let book = ScoreBook::zeros(72, 5);
+        let budget = Budget::uniform(5, 3, 0); // 60% compute target
+        let cost = CostModel::paper();
+        let mut w = WorkloadTracker::new(cost, 72);
+        for _ in 0..50 {
+            w.record(&s.schedule(&book, &budget));
+        }
+        let frac = w.total_compute_fraction();
+        assert!((frac - 0.6).abs() < 0.03, "fraction {frac}");
+    }
+
+    #[test]
+    fn workload_variance_is_positive() {
+        // The Table I contrast: Random cannot balance workloads.
+        let mut s = RandomSched::new(2);
+        let book = ScoreBook::zeros(72, 5);
+        let budget = Budget::uniform(5, 3, 0);
+        let mut w = WorkloadTracker::new(CostModel::paper(), 72);
+        w.record(&s.schedule(&book, &budget));
+        assert!(w.workload_variance() > 0.0);
+        assert!(w.sample_count_variance() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let book = ScoreBook::zeros(8, 5);
+        let budget = Budget::uniform(5, 2, 2);
+        let a = RandomSched::new(7).schedule(&book, &budget);
+        let b = RandomSched::new(7).schedule(&book, &budget);
+        assert_eq!(a, b);
+        let c = RandomSched::new(8).schedule(&book, &budget);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,196 @@
+//! "Scaler" single-level baseline (paper §IV-F, Table X).
+//!
+//! Instead of the bi-level decoupling, both operations compete in one
+//! knapsack per device: forward scores are scaled by λ to "match" the
+//! backward scale, and each micro-batch contributes two mutually
+//! exclusive items (p_f valued by the backward score, p_o valued by
+//! λ x forward score). λ options mirror the paper: `Max` (every forward
+//! score below every backward score), `Min` (the reverse), or a
+//! constant.
+//!
+//! The single knapsack packs a combined capacity; mutual exclusion is
+//! enforced by a small per-sample group DP (grouped knapsack), which is
+//! the natural exact formulation of Eq. 5.
+
+use super::table::{Budget, Op, ScheduleTable};
+use super::Scheduler;
+use crate::cluster::cost::CostModel;
+use crate::scores::{ScoreBook, ScoreConfig};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Lambda {
+    /// Scale forward scores below the smallest backward score.
+    Max,
+    /// Scale backward scores below the smallest forward score.
+    Min,
+    /// Constant multiplier on forward scores.
+    Const(f64),
+}
+
+pub struct ScalerSched {
+    pub lambda: Lambda,
+    pub scores: ScoreConfig,
+    pub cost: CostModel,
+}
+
+impl ScalerSched {
+    pub fn new(lambda: Lambda, scores: ScoreConfig, cost: CostModel) -> ScalerSched {
+        ScalerSched { lambda, scores, cost }
+    }
+
+    /// Grouped 0/1 knapsack: per sample choose {none, p_o, p_f}.
+    /// DP over samples x capacity; O(N·C) like Algorithm 2.
+    fn schedule_device(
+        &self,
+        backward: &[f64],
+        forward: &[f64],
+        capacity_units: usize,
+    ) -> Vec<Op> {
+        let n = backward.len();
+        let w_full = self.cost.full_units();
+        let w_fwd = self.cost.fwd_units();
+        let (bw, fw): (Vec<f64>, Vec<f64>) = match self.lambda {
+            Lambda::Const(l) => (backward.to_vec(), forward.iter().map(|&f| f * l).collect()),
+            Lambda::Max => {
+                // forward scores strictly below every backward score
+                let bmin = backward.iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
+                let fmax = forward.iter().copied().fold(0.0f64, f64::max).max(1e-12);
+                let l = 0.5 * bmin / fmax;
+                (backward.to_vec(), forward.iter().map(|&f| f * l).collect())
+            }
+            Lambda::Min => {
+                // backward scores strictly below every forward score
+                let fmin = forward.iter().copied().fold(f64::INFINITY, f64::min).max(1e-12);
+                let bmax = backward.iter().copied().fold(0.0f64, f64::max).max(1e-12);
+                let l = 0.5 * fmin / bmax;
+                (backward.iter().map(|&b| b * l).collect(), forward.to_vec())
+            }
+        };
+        let cols = capacity_units + 1;
+        // dp[i][w]: best value using first i samples at weight w; choice
+        // tracked for backtracking: 0 = none, 1 = p_o, 2 = p_f.
+        let mut dp = vec![0.0f64; (n + 1) * cols];
+        let mut choice = vec![0u8; (n + 1) * cols];
+        for i in 1..=n {
+            for w in 0..cols {
+                let mut best = dp[(i - 1) * cols + w];
+                let mut ch = 0u8;
+                if w >= w_fwd {
+                    let v = dp[(i - 1) * cols + (w - w_fwd)] + fw[i - 1];
+                    if v > best {
+                        best = v;
+                        ch = 1;
+                    }
+                }
+                if w >= w_full {
+                    let v = dp[(i - 1) * cols + (w - w_full)] + bw[i - 1];
+                    if v > best {
+                        best = v;
+                        ch = 2;
+                    }
+                }
+                dp[i * cols + w] = best;
+                choice[i * cols + w] = ch;
+            }
+        }
+        let mut ops = vec![Op::Shortcut; n];
+        let mut w = capacity_units;
+        for i in (1..=n).rev() {
+            match choice[i * cols + w] {
+                1 => {
+                    ops[i - 1] = Op::ForwardOnly;
+                    w -= w_fwd;
+                }
+                2 => {
+                    ops[i - 1] = Op::Full;
+                    w -= w_full;
+                }
+                _ => {}
+            }
+        }
+        ops
+    }
+}
+
+impl Scheduler for ScalerSched {
+    fn name(&self) -> &'static str {
+        "Scaler"
+    }
+
+    fn schedule(&mut self, scores: &ScoreBook, budget: &Budget) -> ScheduleTable {
+        let mut table = ScheduleTable::all(scores.n_subnets, scores.n_micro, Op::Shortcut);
+        for k in 0..scores.n_subnets {
+            let (n_full, n_fwd) = budget.for_device(k);
+            let capacity = n_full * self.cost.full_units() + n_fwd * self.cost.fwd_units();
+            let ops = self.schedule_device(
+                scores.row(self.scores.backward, k),
+                scores.row(self.scores.forward, k),
+                capacity,
+            );
+            for (i, op) in ops.into_iter().enumerate() {
+                table.set(k, i, op);
+            }
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scores::Metric;
+
+    fn sched(lambda: Lambda) -> ScalerSched {
+        ScalerSched::new(lambda, ScoreConfig::default(), CostModel::paper())
+    }
+
+    #[test]
+    fn max_scaler_prefers_full_ops() {
+        // With forward scores scaled below backward ones, p_f wins the
+        // capacity — matching the paper's claim that Max ≈ bi-level.
+        let s = sched(Lambda::Max);
+        let ops = s.schedule_device(&[5.0, 4.0, 3.0, 2.0, 1.0], &[9.0, 9.0, 9.0, 9.0, 9.0], 2 * 5 + 2 * 2);
+        let n_full = ops.iter().filter(|&&o| o == Op::Full).count();
+        assert_eq!(n_full, 2);
+        assert!(ops.iter().filter(|&&o| o == Op::ForwardOnly).count() >= 2);
+        assert_eq!(ops[0], Op::Full);
+        assert_eq!(ops[1], Op::Full);
+    }
+
+    #[test]
+    fn min_scaler_prefers_forward_ops() {
+        let s = sched(Lambda::Min);
+        // capacity for 2 p_f + 2 p_o = 14 units; min-scaler floods it
+        // with p_o (2 units each -> up to 5).
+        let ops = s.schedule_device(&[5.0, 4.0, 3.0, 2.0, 1.0], &[1.0, 1.0, 1.0, 1.0, 1.0], 14);
+        let n_fwd = ops.iter().filter(|&&o| o == Op::ForwardOnly).count();
+        assert!(n_fwd >= 4, "{ops:?}");
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let s = sched(Lambda::Const(0.2));
+        let cost = CostModel::paper();
+        for cap in [0, 2, 5, 7, 14, 25] {
+            let ops = s.schedule_device(&[3.0; 5], &[1.0; 5], cap);
+            let used: usize = ops.iter().map(|&o| cost.compute_units(o)).sum();
+            assert!(used <= cap, "capacity {cap} exceeded: {used}");
+        }
+    }
+
+    #[test]
+    fn schedules_all_subnets() {
+        let mut s = sched(Lambda::Const(0.1));
+        let mut book = ScoreBook::zeros(4, 5);
+        for k in 0..4 {
+            for i in 0..5 {
+                book.set(Metric::WeightMag, k, i, 1.0 + k as f64);
+                book.set(Metric::Fisher, k, i, 1.0 + i as f64);
+            }
+        }
+        let t = s.schedule(&book, &Budget::uniform(5, 2, 2));
+        for k in 0..4 {
+            assert!(t.count_row(k, Op::Full) + t.count_row(k, Op::ForwardOnly) > 0);
+        }
+    }
+}

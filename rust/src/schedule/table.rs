@@ -1,0 +1,232 @@
+//! Schedule table + operation set (paper §II-A2, Algorithm 1 output).
+
+use crate::partition::Partition;
+use crate::tensor::Tensor;
+
+/// The three scheduled operations. Numeric values match the paper's
+/// `T_opt` encoding (1 = p_f, 2 = p_o, 3 = p_s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Full forward + backward.
+    Full,
+    /// Forward only (no gradient for this subnet).
+    ForwardOnly,
+    /// Shortcut: skip the subnet entirely (residual route carries).
+    Shortcut,
+}
+
+impl Op {
+    pub fn code(self) -> u8 {
+        match self {
+            Op::Full => 1,
+            Op::ForwardOnly => 2,
+            Op::Shortcut => 3,
+        }
+    }
+}
+
+/// Per-device operation budget for one batch of micro-batches.
+///
+/// The paper expresses budgets as operation counts per batch (e.g. "3
+/// micro-batches perform p_f, 1 p_o, 1 p_s" = 60% compute): `n_full`
+/// p_f slots and `n_fwd` p_o slots per device, out of `n_micro`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Budget {
+    pub n_micro: usize,
+    pub n_full: usize,
+    pub n_fwd: usize,
+    /// Per-device overrides (device heterogeneity, paper §IV-D): device
+    /// k uses `per_device[k]` = (n_full, n_fwd) when present.
+    pub per_device: Vec<Option<(usize, usize)>>,
+}
+
+impl Budget {
+    pub fn uniform(n_micro: usize, n_full: usize, n_fwd: usize) -> Budget {
+        assert!(n_full + n_fwd <= n_micro,
+                "budget ({n_full} p_f + {n_fwd} p_o) exceeds {n_micro} micro-batches");
+        Budget { n_micro, n_full, n_fwd, per_device: Vec::new() }
+    }
+
+    pub fn with_device_override(mut self, device: usize, n_full: usize, n_fwd: usize) -> Budget {
+        if self.per_device.len() <= device {
+            self.per_device.resize(device + 1, None);
+        }
+        assert!(n_full + n_fwd <= self.n_micro);
+        self.per_device[device] = Some((n_full, n_fwd));
+        self
+    }
+
+    /// (n_full, n_fwd) for device `k`.
+    pub fn for_device(&self, k: usize) -> (usize, usize) {
+        self.per_device
+            .get(k)
+            .copied()
+            .flatten()
+            .unwrap_or((self.n_full, self.n_fwd))
+    }
+
+    /// Fraction of full-fine-tuning compute this budget uses, under the
+    /// paper's cost model (c_f = `cost.fwd_frac` of a full op).
+    pub fn compute_fraction(&self, fwd_frac: f64) -> f64 {
+        (self.n_full as f64 + self.n_fwd as f64 * fwd_frac) / self.n_micro as f64
+    }
+
+    /// Fraction of full-fine-tuning communication (p_o = half, p_s = 0).
+    pub fn comm_fraction(&self) -> f64 {
+        (self.n_full as f64 + self.n_fwd as f64 * 0.5) / self.n_micro as f64
+    }
+}
+
+/// Operation assignment for one batch: `table[k][i]` = op of subnet `k`
+/// on micro-batch `i`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScheduleTable {
+    pub n_subnets: usize,
+    pub n_micro: usize,
+    ops: Vec<Op>,
+}
+
+impl ScheduleTable {
+    pub fn all(n_subnets: usize, n_micro: usize, op: Op) -> ScheduleTable {
+        ScheduleTable { n_subnets, n_micro, ops: vec![op; n_subnets * n_micro] }
+    }
+
+    /// Standard fine-tuning: everything p_f.
+    pub fn standard(n_subnets: usize, n_micro: usize) -> ScheduleTable {
+        Self::all(n_subnets, n_micro, Op::Full)
+    }
+
+    pub fn get(&self, subnet: usize, micro: usize) -> Op {
+        self.ops[subnet * self.n_micro + micro]
+    }
+
+    pub fn set(&mut self, subnet: usize, micro: usize, op: Op) {
+        self.ops[subnet * self.n_micro + micro] = op;
+    }
+
+    /// Count ops of a kind for one subnet row.
+    pub fn count_row(&self, subnet: usize, op: Op) -> usize {
+        (0..self.n_micro).filter(|&i| self.get(subnet, i) == op).count()
+    }
+
+    /// Build the dense `[L, H]` fwd/bwd masks for micro-batch `i`.
+    ///
+    /// p_f -> (1, 1); p_o -> (1, 0); p_s -> (0, 0). Heads covered by a
+    /// multi-head subnet share its op.
+    pub fn masks_for_micro(&self, part: &Partition, micro: usize) -> MaskPair {
+        assert_eq!(part.n_subnets(), self.n_subnets, "partition/table mismatch");
+        let mut fwd = Tensor::zeros(&[part.depth, part.heads]);
+        let mut bwd = Tensor::zeros(&[part.depth, part.heads]);
+        for (k, s) in part.subnets.iter().enumerate() {
+            let (f, b) = match self.get(k, micro) {
+                Op::Full => (1.0, 1.0),
+                Op::ForwardOnly => (1.0, 0.0),
+                Op::Shortcut => (0.0, 0.0),
+            };
+            for h in s.heads() {
+                fwd.set(&[s.block, h], f);
+                bwd.set(&[s.block, h], b);
+            }
+        }
+        MaskPair { fwd, bwd }
+    }
+
+    /// All micro-batch masks at once.
+    pub fn all_masks(&self, part: &Partition) -> Vec<MaskPair> {
+        (0..self.n_micro).map(|i| self.masks_for_micro(part, i)).collect()
+    }
+}
+
+/// Dense `[L, H]` forward/backward masks for one micro-batch — the two
+/// mask inputs of the trainstep artifact.
+#[derive(Clone, Debug)]
+pub struct MaskPair {
+    pub fwd: Tensor,
+    pub bwd: Tensor,
+}
+
+impl MaskPair {
+    pub fn ones(depth: usize, heads: usize) -> MaskPair {
+        MaskPair {
+            fwd: Tensor::full(&[depth, heads], 1.0),
+            bwd: Tensor::full(&[depth, heads], 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            img_size: 32, patch: 4, dim: 64, depth: 2, heads: 2,
+            mlp_ratio: 4, classes: 10, lora_rank: 0, head_dim: 32, tokens: 65,
+        }
+    }
+
+    #[test]
+    fn budget_fractions_match_paper_settings() {
+        // "3 p_f + 2 p_s out of 5" = 60% compute (c_f = 0.4).
+        let b = Budget::uniform(5, 3, 0);
+        assert!((b.compute_fraction(0.4) - 0.6).abs() < 1e-9);
+        // "3 p_f, 1 p_o, 1 p_s" = 75% LoRA compute table.
+        let b = Budget::uniform(5, 3, 1);
+        assert!((b.compute_fraction(0.4) - 0.68).abs() < 1e-9);
+        assert!((b.comm_fraction() - 0.7).abs() < 1e-9);
+        // "2 p_f, 1 p_o, 2 p_s" = 50% comm.
+        let b = Budget::uniform(5, 2, 1);
+        assert!((b.comm_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_overrides() {
+        let b = Budget::uniform(5, 2, 2).with_device_override(3, 3, 1);
+        assert_eq!(b.for_device(0), (2, 2));
+        assert_eq!(b.for_device(3), (3, 1));
+        assert_eq!(b.for_device(99), (2, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn overfull_budget_panics() {
+        Budget::uniform(5, 3, 3);
+    }
+
+    #[test]
+    fn masks_encode_ops() {
+        let part = crate::partition::Partition::per_head(&cfg());
+        let mut t = ScheduleTable::standard(part.n_subnets(), 3);
+        t.set(0, 1, Op::Shortcut); // subnet 0 = (block 0, head 0)
+        t.set(3, 1, Op::ForwardOnly); // subnet 3 = (block 1, head 1)
+        let m = t.masks_for_micro(&part, 1);
+        assert_eq!(m.fwd.at(&[0, 0]), 0.0);
+        assert_eq!(m.bwd.at(&[0, 0]), 0.0);
+        assert_eq!(m.fwd.at(&[1, 1]), 1.0);
+        assert_eq!(m.bwd.at(&[1, 1]), 0.0);
+        assert_eq!(m.fwd.at(&[0, 1]), 1.0);
+        assert_eq!(m.bwd.at(&[0, 1]), 1.0);
+        // micro-batch 0 untouched
+        let m0 = t.masks_for_micro(&part, 0);
+        assert_eq!(m0.fwd.at(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn grouped_subnet_masks_cover_all_heads() {
+        let part = crate::partition::Partition::grouped(&cfg(), 2);
+        let mut t = ScheduleTable::standard(part.n_subnets(), 2);
+        t.set(1, 0, Op::Shortcut); // block 1, heads {0,1}
+        let m = t.masks_for_micro(&part, 0);
+        assert_eq!(m.fwd.at(&[1, 0]), 0.0);
+        assert_eq!(m.fwd.at(&[1, 1]), 0.0);
+        assert_eq!(m.fwd.at(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn op_codes_match_paper() {
+        assert_eq!(Op::Full.code(), 1);
+        assert_eq!(Op::ForwardOnly.code(), 2);
+        assert_eq!(Op::Shortcut.code(), 3);
+    }
+}

@@ -1,0 +1,180 @@
+//! Contribution scores (paper §II-A3, Table III).
+//!
+//! The HLO score probe emits `[L, H, 4]` per micro-batch (fisher,
+//! gradient magnitude, taylor importance, weight magnitude); the
+//! [`ScoreBook`] aggregates those onto a [`Partition`]'s subnets (sum
+//! over the heads a subnet owns) and exposes per-(subnet, micro-batch)
+//! rows to the schedulers.
+//!
+//! Defaults follow the paper's ablation (Table III): **weight magnitude**
+//! as the backward (p_f) score, **Fisher information** as the forward
+//! (p_o) score.
+
+use crate::partition::Partition;
+use crate::tensor::Tensor;
+
+/// The four candidate metrics, in probe channel order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Fisher = 0,
+    GradMag = 1,
+    Taylor = 2,
+    WeightMag = 3,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> anyhow::Result<Metric> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fisher" => Metric::Fisher,
+            "gradmag" | "grad" => Metric::GradMag,
+            "taylor" => Metric::Taylor,
+            "weightmag" | "weight" | "magnitude" => Metric::WeightMag,
+            _ => anyhow::bail!("unknown metric {s:?} (fisher|gradmag|taylor|weightmag)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Fisher => "Fisher Information",
+            Metric::GradMag => "Gradient Magnitude",
+            Metric::Taylor => "Taylor Importance",
+            Metric::WeightMag => "Weight Magnitude",
+        }
+    }
+}
+
+/// Which metric feeds which level of the bi-level optimization.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreConfig {
+    /// Outer level (p_f selection) — paper default: weight magnitude.
+    pub backward: Metric,
+    /// Inner level (p_o selection) — paper default: Fisher information.
+    pub forward: Metric,
+}
+
+impl Default for ScoreConfig {
+    fn default() -> Self {
+        ScoreConfig { backward: Metric::WeightMag, forward: Metric::Fisher }
+    }
+}
+
+/// Per-batch contribution scores: `n_subnets x n_micro` per metric.
+#[derive(Clone, Debug)]
+pub struct ScoreBook {
+    pub n_subnets: usize,
+    pub n_micro: usize,
+    /// `data[metric][subnet * n_micro + micro]`
+    data: [Vec<f64>; 4],
+}
+
+impl ScoreBook {
+    pub fn zeros(n_subnets: usize, n_micro: usize) -> ScoreBook {
+        ScoreBook {
+            n_subnets,
+            n_micro,
+            data: std::array::from_fn(|_| vec![0.0; n_subnets * n_micro]),
+        }
+    }
+
+    /// Aggregate per-head probe outputs (`[L, H, 4]`, one per micro-batch)
+    /// onto the partition's subnets.
+    pub fn from_probes(part: &Partition, probes: &[Tensor]) -> ScoreBook {
+        let n_micro = probes.len();
+        let mut book = ScoreBook::zeros(part.n_subnets(), n_micro);
+        for (i, probe) in probes.iter().enumerate() {
+            assert_eq!(probe.shape(), &[part.depth, part.heads, 4], "probe shape");
+            for (k, s) in part.subnets.iter().enumerate() {
+                for m in 0..4 {
+                    let sum: f64 = s
+                        .heads()
+                        .map(|h| probe.at(&[s.block, h, m]) as f64)
+                        .sum();
+                    book.data[m][k * n_micro + i] += sum;
+                }
+            }
+        }
+        book
+    }
+
+    pub fn get(&self, metric: Metric, subnet: usize, micro: usize) -> f64 {
+        self.data[metric as usize][subnet * self.n_micro + micro]
+    }
+
+    pub fn set(&mut self, metric: Metric, subnet: usize, micro: usize, v: f64) {
+        self.data[metric as usize][subnet * self.n_micro + micro] = v;
+    }
+
+    /// One subnet's row for a metric (length `n_micro`).
+    pub fn row(&self, metric: Metric, subnet: usize) -> &[f64] {
+        &self.data[metric as usize][subnet * self.n_micro..(subnet + 1) * self.n_micro]
+    }
+
+    /// Total score per subnet (used by the dynamic-pruning baselines).
+    pub fn subnet_total(&self, metric: Metric, subnet: usize) -> f64 {
+        self.row(metric, subnet).iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            img_size: 32, patch: 4, dim: 64, depth: 2, heads: 2,
+            mlp_ratio: 4, classes: 10, lora_rank: 0, head_dim: 32, tokens: 65,
+        }
+    }
+
+    fn probe(v: f32) -> Tensor {
+        // [2, 2, 4] filled so channel m of head (l, h) = v + m + 10l + h.
+        let mut t = Tensor::zeros(&[2, 2, 4]);
+        for l in 0..2 {
+            for h in 0..2 {
+                for m in 0..4 {
+                    t.set(&[l, h, m], v + m as f32 + 10.0 * l as f32 + h as f32);
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn aggregates_per_head_partition() {
+        let part = Partition::per_head(&cfg());
+        let book = ScoreBook::from_probes(&part, &[probe(0.0), probe(100.0)]);
+        assert_eq!(book.n_subnets, 4);
+        assert_eq!(book.n_micro, 2);
+        // subnet 3 = (block 1, head 1); fisher channel (m=0) of probe 0:
+        assert_eq!(book.get(Metric::Fisher, 3, 0), 11.0);
+        assert_eq!(book.get(Metric::Fisher, 3, 1), 111.0);
+        // taylor channel (m=2) of subnet 0 = (0, 0):
+        assert_eq!(book.get(Metric::Taylor, 0, 0), 2.0);
+    }
+
+    #[test]
+    fn aggregates_grouped_partition_by_sum() {
+        let part = Partition::grouped(&cfg(), 2);
+        let book = ScoreBook::from_probes(&part, &[probe(0.0)]);
+        assert_eq!(book.n_subnets, 2);
+        // subnet 0 covers heads {0, 1} of block 0: fisher = 0 + 1.
+        assert_eq!(book.get(Metric::Fisher, 0, 0), 1.0);
+        // subnet 1 covers block 1: 10 + 11.
+        assert_eq!(book.get(Metric::Fisher, 1, 0), 21.0);
+    }
+
+    #[test]
+    fn metric_parsing() {
+        assert_eq!(Metric::parse("fisher").unwrap(), Metric::Fisher);
+        assert_eq!(Metric::parse("WeightMag").unwrap(), Metric::WeightMag);
+        assert!(Metric::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn default_config_matches_paper() {
+        let c = ScoreConfig::default();
+        assert_eq!(c.backward, Metric::WeightMag);
+        assert_eq!(c.forward, Metric::Fisher);
+    }
+}

@@ -1,0 +1,120 @@
+//! Elementwise / reduction ops used by metrics and data synthesis.
+
+use super::Tensor;
+
+impl Tensor {
+    pub fn sum(&self) -> f32 {
+        // Pairwise-ish accumulation in f64 for stable metric reductions.
+        self.data().iter().map(|&x| x as f64).sum::<f64>() as f32
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.len() as f32
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data().iter().map(|&x| (x as f64).abs()).sum::<f64>() as f32
+    }
+
+    pub fn sq_sum(&self) -> f32 {
+        self.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() as f32
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data().iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data().iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    /// Population variance (the paper's workload-variance metric).
+    pub fn variance(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let mean = self.mean() as f64;
+        let var = self
+            .data()
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / self.len() as f64;
+        var as f32
+    }
+
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &x) in self.data().iter().enumerate() {
+            if x > self.data()[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn scale(&mut self, a: f32) -> &mut Self {
+        for x in self.data_mut() {
+            *x *= a;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) -> &mut Self {
+        assert_eq!(self.shape(), other.shape());
+        let other_data: &[f32] = other.data();
+        for (x, &y) in self.data_mut().iter_mut().zip(other_data) {
+            *x += y;
+        }
+        self
+    }
+
+    /// Maximum absolute difference (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data()
+            .iter()
+            .zip(other.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[4], vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(t.sum(), -2.0);
+        assert_eq!(t.abs_sum(), 10.0);
+        assert_eq!(t.sq_sum(), 30.0);
+        assert_eq!(t.max(), 3.0);
+        assert_eq!(t.min(), -4.0);
+        assert_eq!(t.argmax(), 2);
+    }
+
+    #[test]
+    fn variance_zero_for_constant() {
+        let t = Tensor::full(&[10], 2.5);
+        assert_eq!(t.variance(), 0.0);
+    }
+
+    #[test]
+    fn variance_known_value() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((t.variance() - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        a.add_assign(&b).scale(2.0);
+        assert_eq!(a.data(), &[8.0, 12.0]);
+    }
+}

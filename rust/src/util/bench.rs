@@ -1,0 +1,143 @@
+//! Timing/statistics harness for `[[bench]] harness = false` targets
+//! (no `criterion` offline).
+//!
+//! Usage in a bench target:
+//! ```ignore
+//! let mut b = Bench::new("knapsack-74x5");
+//! b.run(|| schedule(&scores, &caps));
+//! b.report(); // name, mean, p50, p95, min, iters
+//! ```
+//! Warmup + adaptive iteration count; reports wall-clock statistics in a
+//! stable single-line format so `bench_output.txt` diffs cleanly.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    samples: Vec<Duration>,
+    target_time: Duration,
+    max_iters: usize,
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            samples: Vec::new(),
+            target_time: Duration::from_secs(2),
+            max_iters: 10_000,
+        }
+    }
+
+    /// Cap total measurement time (default 2 s).
+    pub fn target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Measure `f` repeatedly until the time budget or iteration cap.
+    pub fn run<T>(&mut self, mut f: impl FnMut() -> T) -> &mut Self {
+        // Warmup: 3 calls or 10% of budget, whichever first.
+        let warm_start = Instant::now();
+        for _ in 0..3 {
+            black_box(f());
+            if warm_start.elapsed() > self.target_time / 10 {
+                break;
+            }
+        }
+        let start = Instant::now();
+        while start.elapsed() < self.target_time && self.samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            self.samples.push(t0.elapsed());
+        }
+        self
+    }
+
+    pub fn stats(&self) -> Stats {
+        assert!(!self.samples.is_empty(), "no samples for {}", self.name);
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let total: Duration = sorted.iter().sum();
+        Stats {
+            iters: sorted.len(),
+            mean: total / sorted.len() as u32,
+            p50: sorted[sorted.len() / 2],
+            p95: sorted[((sorted.len() as f64 * 0.95) as usize).min(sorted.len() - 1)],
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+        }
+    }
+
+    /// Print a one-line stable report and return the stats.
+    pub fn report(&self) -> Stats {
+        let s = self.stats();
+        println!(
+            "bench {:<40} mean {:>12} p50 {:>12} p95 {:>12} min {:>12} iters {}",
+            self.name,
+            fmt_dur(s.mean),
+            fmt_dur(s.p50),
+            fmt_dur(s.p95),
+            fmt_dur(s.min),
+            s.iters
+        );
+        s
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("noop").target_time(Duration::from_millis(20));
+        b.run(|| 1 + 1);
+        let s = b.stats();
+        assert!(s.iters > 0);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_dur(Duration::from_micros(15)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(15)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,234 @@
+//! Declarative CLI flag parsing (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults,
+//! and generated `--help`. Used by the `repro` binary and examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One declared flag.
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative arg parser: declare flags, then `parse`.
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parse result with typed accessors.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, flags: Vec::new(), positional: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` flag.
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    /// Declare a boolean `--name` switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    /// Declare a positional argument (for `repro experiment <id>`).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [flags]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let head = if f.is_bool {
+                format!("  --{}", f.name)
+            } else if let Some(d) = &f.default {
+                format!("  --{} <v> (default {})", f.name, d)
+            } else {
+                format!("  --{} <v> (required)", f.name)
+            };
+            out.push_str(&format!("{head:<40} {}\n", f.help));
+        }
+        for (p, h) in &self.positional {
+            out.push_str(&format!("  <{p}>{:<34} {h}\n", ""));
+        }
+        out
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        let mut positional = Vec::new();
+        for f in &self.flags {
+            if f.is_bool {
+                bools.insert(f.name.to_string(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    bools.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?,
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        for f in &self.flags {
+            if !f.is_bool && !values.contains_key(f.name) {
+                bail!("missing required flag --{}\n\n{}", f.name, self.usage());
+            }
+        }
+        if positional.len() > self.positional.len() {
+            bail!("unexpected positional args {positional:?}\n\n{}", self.usage());
+        }
+        Ok(Args { values, bools, positional })
+    }
+
+    /// Parse the process args.
+    pub fn parse(&self) -> Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Comma-separated list -> Vec<usize>.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| Ok(s.trim().parse()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("steps", "100", "steps")
+            .flag("lr", "0.01", "learning rate")
+            .required("dataset", "dataset name")
+            .switch("verbose", "verbose")
+            .positional("cmd", "command")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli()
+            .parse_from(argv(&["run", "--dataset", "c10", "--steps=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.01);
+        assert_eq!(a.get("dataset"), "c10");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn missing_required() {
+        assert!(cli().parse_from(argv(&["run"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cli().parse_from(argv(&["--nope", "1", "--dataset", "x"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Cli::new("t", "")
+            .flag("sizes", "4,8,16", "")
+            .parse_from(argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("sizes").unwrap(), vec![4, 8, 16]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline-build substrates: deterministic RNG, JSON, CLI parsing,
+//! logging, property testing, and bench timing.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so everything that would normally come from `rand`, `serde`,
+//! `clap`, `proptest`, or `criterion` is implemented here (see DESIGN.md
+//! "Offline-build substrates").
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,92 @@
+//! End-to-end coordinator tests on the real artifacts: short D2FT runs
+//! must train, balance workloads, and respect budgets.
+//!
+//! All scenarios share ONE #[test] (and one registry) so XLA compilation
+//! happens once per binary. Skips when artifacts are absent.
+
+use d2ft::cluster::HeteroSpec;
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::data::SyntheticKind;
+use d2ft::runtime::ArtifactRegistry;
+use d2ft::schedule::Budget;
+
+fn short_cfg(scheduler: SchedulerKind, budget: Budget) -> TrainerConfig {
+    TrainerConfig {
+        train_size: 160,
+        test_size: 32,
+        batches: 3,
+        pretrain_batches: 1,
+        ..TrainerConfig::quick(SyntheticKind::Cifar10Like, scheduler, budget)
+    }
+}
+
+#[test]
+fn coordinator_suite() {
+    let Ok(reg) = ArtifactRegistry::open_default() else {
+        eprintln!("skipping e2e tests (run `make artifacts`)");
+        return;
+    };
+
+    // --- D2FT short run: trains, balances, budgets exact ----------------
+    let cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1));
+    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    let r = t.run().unwrap();
+    assert_eq!(r.batches, 3);
+    assert_eq!(r.loss_curve.len(), 15, "5 micro-steps per batch");
+    assert!(r.final_train_loss.is_finite() && r.final_train_loss > 0.0);
+    assert_eq!(r.workload_variance, 0.0, "D2FT must balance exactly");
+    assert!((r.compute_fraction - 0.68).abs() < 1e-9);
+    assert!((r.comm_fraction - 0.70).abs() < 1e-9);
+    assert!(r.test_top1 >= 0.0 && r.test_top1 <= 1.0);
+    println!("d2ft short run OK");
+
+    // --- model learns on easy data over a slightly longer run ------------
+    let cfg = TrainerConfig {
+        batches: 10,
+        pretrain_batches: 8,
+        train_size: 240,
+        test_size: 40,
+        lr: 0.03,
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar10Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 3, 1),
+        )
+    };
+    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    let r = t.run().unwrap();
+    // 10-way task on a 196-logit head: chance is far below 12%.
+    assert!(
+        r.test_top1 > 0.12,
+        "D2FT should be well above chance after 8 batches: top-1 {}",
+        r.test_top1
+    );
+    println!("learns OK (top-1 {:.1}%)", r.test_top1 * 100.0);
+
+    // --- Random baseline runs but cannot balance -------------------------
+    let cfg = short_cfg(SchedulerKind::Random, Budget::uniform(5, 3, 0));
+    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.workload_variance > 0.0, "random cannot balance");
+    println!("random baseline OK");
+
+    // --- heterogeneity: merged partition trains --------------------------
+    let cfg = TrainerConfig {
+        hetero: Some(HeteroSpec::memory(5)),
+        ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
+    };
+    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    assert_eq!(t.partition().n_subnets(), reg.full_manifest.config.body_subnets() - 5);
+    let r = t.run().unwrap();
+    assert!(r.final_train_loss.is_finite());
+    println!("hetero OK");
+
+    // --- partition granularity wiring ------------------------------------
+    let cfg = TrainerConfig {
+        partition_group: 2,
+        ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
+    };
+    let t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    assert_eq!(t.partition().n_subnets(), reg.full_manifest.config.body_subnets() / 2);
+    println!("partition-group OK");
+}

@@ -1,0 +1,325 @@
+//! Cross-module property tests (no artifacts needed): invariants that
+//! tie the scheduler, cost model, partition, and workload accounting
+//! together under randomized instances. Failures print a replayable
+//! `D2FT_PROP_SEED`.
+
+use d2ft::cluster::{CostModel, ExecTimeModel, WorkloadTracker};
+use d2ft::partition::Partition;
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::bilevel::{BiLevel, MergeMode};
+use d2ft::schedule::dpruning::DPruning;
+use d2ft::schedule::moe_gshard::MoeGshard;
+use d2ft::schedule::random_sched::RandomSched;
+use d2ft::schedule::scaler::{Lambda, ScalerSched};
+use d2ft::schedule::{Budget, Op, ScheduleTable, Scheduler};
+use d2ft::scores::{Metric, ScoreBook, ScoreConfig};
+use d2ft::util::proptest::{check, Gen};
+
+fn cfg(depth: usize, heads: usize) -> ModelConfig {
+    ModelConfig {
+        img_size: 32, patch: 4, dim: heads * 16, depth, heads,
+        mlp_ratio: 4, classes: 10, lora_rank: 0, head_dim: 16,
+        tokens: 65,
+    }
+}
+
+fn gen_book(g: &mut Gen, n_subnets: usize, n_micro: usize) -> ScoreBook {
+    let mut b = ScoreBook::zeros(n_subnets, n_micro);
+    for k in 0..n_subnets {
+        let wm = g.f64_in(0.0, 5.0);
+        for i in 0..n_micro {
+            b.set(Metric::Fisher, k, i, g.f64_in(0.0, 10.0));
+            b.set(Metric::GradMag, k, i, g.f64_in(0.0, 4.0));
+            b.set(Metric::Taylor, k, i, g.f64_in(0.0, 2.0));
+            b.set(Metric::WeightMag, k, i, wm);
+        }
+    }
+    b
+}
+
+fn gen_budget(g: &mut Gen) -> Budget {
+    let n_micro = g.usize_in(1, 8);
+    let n_full = g.usize_in(0, n_micro);
+    let n_fwd = g.usize_in(0, n_micro - n_full);
+    Budget::uniform(n_micro, n_full, n_fwd)
+}
+
+/// Every scheduler, on every instance: the schedule is well-formed and
+/// within each device's compute envelope.
+#[test]
+fn prop_all_schedulers_respect_budget_envelope() {
+    check("schedulers-budget-envelope", 60, |g| {
+        let depth = g.usize_in(1, 6);
+        let heads = *g.pick(&[2usize, 4, 6]);
+        let part = Partition::per_head(&cfg(depth, heads));
+        let budget = gen_budget(g);
+        let book = gen_book(g, part.n_subnets(), budget.n_micro);
+        let cost = CostModel::paper();
+        let cap = budget.n_full * cost.full_units() + budget.n_fwd * cost.fwd_units();
+        let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(BiLevel::new(ScoreConfig::default(), cost)),
+            Box::new(BiLevel::new(ScoreConfig::default(), cost).with_merge(MergeMode::PaperMerge)),
+            Box::new(ScalerSched::new(Lambda::Max, ScoreConfig::default(), cost)),
+            Box::new(ScalerSched::new(Lambda::Const(0.3), ScoreConfig::default(), cost)),
+            Box::new(DPruning::magnitude()),
+            Box::new(RandomSched::new(g.usize_in(0, 1 << 20) as u64)),
+            Box::new(MoeGshard::new(g.usize_in(0, 1 << 20) as u64, heads)),
+        ];
+        for s in schedulers.iter_mut() {
+            let t = s.schedule(&book, &budget);
+            if t.n_subnets != part.n_subnets() || t.n_micro != budget.n_micro {
+                return Err(format!("{}: wrong table shape", s.name()));
+            }
+            // knapsack-driven schedulers must fit the per-device envelope
+            // (Random is stochastic per cell and exempt by construction;
+            // DPruning is budgeted globally, not per device).
+            let per_device = matches!(
+                s.name(),
+                "D2FT (Ours)" | "Scaler"
+            );
+            if per_device {
+                for k in 0..t.n_subnets {
+                    let used: usize =
+                        (0..t.n_micro).map(|i| cost.compute_units(t.get(k, i))).sum();
+                    if used > cap {
+                        return Err(format!(
+                            "{}: device {k} used {used} > cap {cap}",
+                            s.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exclusive bi-level never assigns both ops to one (subnet, micro).
+#[test]
+fn prop_bilevel_ops_mutually_exclusive_and_exact() {
+    check("bilevel-exclusive", 80, |g| {
+        let part = Partition::per_head(&cfg(g.usize_in(1, 4), 2));
+        let budget = gen_budget(g);
+        let book = gen_book(g, part.n_subnets(), budget.n_micro);
+        let mut s = BiLevel::new(ScoreConfig::default(), CostModel::paper());
+        let t = s.schedule(&book, &budget);
+        for k in 0..t.n_subnets {
+            if t.count_row(k, Op::Full) != budget.n_full {
+                return Err(format!("row {k}: p_f count"));
+            }
+            if t.count_row(k, Op::ForwardOnly) != budget.n_fwd {
+                return Err(format!("row {k}: p_o count"));
+            }
+            let total = t.count_row(k, Op::Full)
+                + t.count_row(k, Op::ForwardOnly)
+                + t.count_row(k, Op::Shortcut);
+            if total != budget.n_micro {
+                return Err("ops don't partition the micro-batches".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The bi-level outer level is optimal: no unselected sample has a
+/// higher backward score than a selected one (equal weights -> greedy
+/// top-k is optimal, and the DP must match it).
+#[test]
+fn prop_bilevel_outer_picks_top_backward_scores() {
+    check("bilevel-topk", 80, |g| {
+        let n_micro = g.usize_in(2, 8);
+        let n_full = g.usize_in(1, n_micro);
+        let scores: Vec<f64> = (0..n_micro).map(|_| g.f64_in(0.0, 100.0)).collect();
+        let s = BiLevel::new(ScoreConfig::default(), CostModel::paper());
+        let ops = s.schedule_device(&scores, &vec![0.0; n_micro], n_full, 0);
+        let mut picked: Vec<f64> = (0..n_micro)
+            .filter(|&i| ops[i] == Op::Full)
+            .map(|i| scores[i])
+            .collect();
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        picked.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let want: f64 = sorted[..n_full].iter().sum();
+        let got: f64 = picked.iter().sum();
+        if (got - want).abs() > 1e-9 {
+            return Err(format!("picked sum {got} != top-k sum {want}"));
+        }
+        Ok(())
+    });
+}
+
+/// Workload accounting is schedule-linear: recording a schedule twice
+/// doubles units but keeps fractions and variance identical.
+#[test]
+fn prop_workload_accounting_linear() {
+    check("workload-linear", 60, |g| {
+        let k = g.usize_in(1, 30);
+        let n = g.usize_in(1, 6);
+        let mut t = ScheduleTable::all(k, n, Op::Shortcut);
+        for dev in 0..k {
+            for i in 0..n {
+                let op = match g.usize_in(0, 2) {
+                    0 => Op::Full,
+                    1 => Op::ForwardOnly,
+                    _ => Op::Shortcut,
+                };
+                t.set(dev, i, op);
+            }
+        }
+        let cost = CostModel::paper();
+        let mut w1 = WorkloadTracker::new(cost, k);
+        w1.record(&t);
+        let mut w2 = WorkloadTracker::new(cost, k);
+        w2.record(&t);
+        w2.record(&t);
+        if (w1.total_compute_fraction() - w2.total_compute_fraction()).abs() > 1e-12 {
+            return Err("compute fraction not scale-invariant".into());
+        }
+        if (w1.workload_variance() - w2.workload_variance()).abs() > 1e-12 {
+            return Err("variance not scale-invariant".into());
+        }
+        if (w1.total_comm_fraction() - w2.total_comm_fraction()).abs() > 1e-12 {
+            return Err("comm fraction not scale-invariant".into());
+        }
+        Ok(())
+    });
+}
+
+/// Compute fraction equals the budget's analytic fraction for any
+/// exact-count schedule (the identity the experiments tables rely on).
+#[test]
+fn prop_exact_schedule_fraction_matches_budget() {
+    check("fraction-identity", 60, |g| {
+        let part = Partition::per_head(&cfg(g.usize_in(1, 4), 2));
+        let budget = gen_budget(g);
+        let book = gen_book(g, part.n_subnets(), budget.n_micro);
+        let cost = CostModel::paper();
+        let mut s = BiLevel::new(ScoreConfig::default(), cost);
+        let t = s.schedule(&book, &budget);
+        let mut w = WorkloadTracker::new(cost, part.n_subnets());
+        w.record(&t);
+        let want = budget.compute_fraction(cost.fwd_frac());
+        if (w.total_compute_fraction() - want).abs() > 1e-9 {
+            return Err(format!(
+                "fraction {} != budget {}",
+                w.total_compute_fraction(),
+                want
+            ));
+        }
+        let want_comm = budget.comm_fraction();
+        if (w.total_comm_fraction() - want_comm).abs() > 1e-9 {
+            return Err("comm fraction mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Makespan dominates mean device time, and both are monotone under
+/// adding work to any device.
+#[test]
+fn prop_exec_time_monotone() {
+    check("exec-time-monotone", 60, |g| {
+        let k = g.usize_in(1, 20);
+        let n = g.usize_in(1, 6);
+        let model = ExecTimeModel::paper();
+        let mut t = ScheduleTable::all(k, n, Op::Shortcut);
+        for dev in 0..k {
+            for i in 0..n {
+                if g.bool() {
+                    t.set(dev, i, if g.bool() { Op::Full } else { Op::ForwardOnly });
+                }
+            }
+        }
+        let mk = model.makespan_ms(&t);
+        let mean = model.mean_device_time_ms(&t);
+        if mk + 1e-12 < mean {
+            return Err(format!("makespan {mk} < mean {mean}"));
+        }
+        // upgrade one idle cell to Full (strictly more work on that
+        // device). Note: upgrading p_o -> p_f can legitimately *reduce*
+        // modelled time — the paper's Table IV shows batched-execution
+        // amortization (t_full(n+1) - t_full(n) can be smaller than
+        // t_fwd(n) - t_fwd(n-1)) — so only Shortcut -> Full is a strict
+        // work addition.
+        let dev = g.usize_in(0, k - 1);
+        if let Some(i) = (0..n).find(|&i| t.get(dev, i) == Op::Shortcut) {
+            let before = model.device_time_ms(&t, dev);
+            t.set(dev, i, Op::Full);
+            let after = model.device_time_ms(&t, dev);
+            if after + 1e-12 < before {
+                return Err("device time decreased after adding work".into());
+            }
+            if model.makespan_ms(&t) + 1e-12 < mk {
+                return Err("makespan decreased after adding work".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Masks are consistent with the table across random partitions: a
+/// head's fwd/bwd bits equal its owning subnet's op encoding.
+#[test]
+fn prop_masks_match_table_ops() {
+    check("masks-match-ops", 60, |g| {
+        let depth = g.usize_in(1, 6);
+        let heads = *g.pick(&[2usize, 4, 6]);
+        let c = cfg(depth, heads);
+        let divisors: Vec<usize> = (1..=heads).filter(|d| heads % d == 0).collect();
+        let part = Partition::grouped(&c, *g.pick(&divisors));
+        let n_micro = g.usize_in(1, 5);
+        let mut t = ScheduleTable::all(part.n_subnets(), n_micro, Op::Shortcut);
+        for k in 0..part.n_subnets() {
+            for i in 0..n_micro {
+                let op = match g.usize_in(0, 2) {
+                    0 => Op::Full,
+                    1 => Op::ForwardOnly,
+                    _ => Op::Shortcut,
+                };
+                t.set(k, i, op);
+            }
+        }
+        for i in 0..n_micro {
+            let m = t.masks_for_micro(&part, i);
+            for (k, s) in part.subnets.iter().enumerate() {
+                let (want_f, want_b) = match t.get(k, i) {
+                    Op::Full => (1.0, 1.0),
+                    Op::ForwardOnly => (1.0, 0.0),
+                    Op::Shortcut => (0.0, 0.0),
+                };
+                for h in s.heads() {
+                    if m.fwd.at(&[s.block, h]) != want_f || m.bwd.at(&[s.block, h]) != want_b {
+                        return Err(format!("mask mismatch at subnet {k} head {h}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// MoE GShard never exceeds expert capacity and never emits p_o.
+#[test]
+fn prop_moe_capacity_and_ops() {
+    check("moe-capacity", 40, |g| {
+        let heads = *g.pick(&[2usize, 4, 6]);
+        let depth = g.usize_in(1, 6);
+        let part = Partition::per_head(&cfg(depth, heads));
+        let budget = gen_budget(g);
+        if budget.n_full == 0 {
+            return Ok(());
+        }
+        let book = gen_book(g, part.n_subnets(), budget.n_micro);
+        let mut m = MoeGshard::new(g.usize_in(0, 1 << 20) as u64, heads);
+        let t = m.schedule(&book, &budget);
+        for k in 0..t.n_subnets {
+            if t.count_row(k, Op::ForwardOnly) != 0 {
+                return Err("gshard emitted p_o".into());
+            }
+            if t.count_row(k, Op::Full) > budget.n_full.max(1) {
+                return Err(format!("expert {k} over capacity"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,210 @@
+//! Runtime integration tests against the real AOT artifacts.
+//!
+//! Requires `make artifacts`; skips cleanly when absent. All checks run
+//! inside ONE #[test] so the expensive XLA compilation happens once per
+//! binary (the registry caches compiled executables per process).
+
+use d2ft::runtime::{ArtifactRegistry, ParamStore, Session, TrainState};
+use d2ft::schedule::MaskPair;
+use d2ft::tensor::Tensor;
+
+fn sample_batch(mc: &d2ft::runtime::ModelConfig, mb: usize, seed: u64) -> (Tensor, Vec<i32>) {
+    let d = d2ft::data::DatasetSpec::preset(
+        d2ft::data::SyntheticKind::Cifar100Like,
+        mc.img_size,
+        mb,
+        seed,
+    )
+    .generate("train");
+    d.gather(&(0..mb).collect::<Vec<_>>())
+}
+
+#[test]
+fn artifact_runtime_suite() {
+    let Ok(reg) = ArtifactRegistry::open_default() else {
+        eprintln!("skipping artifact tests (run `make artifacts`)");
+        return;
+    };
+    check_manifest_and_params(&reg);
+    check_trainstep_loss_and_masks(&reg);
+    check_bwd_mask_freezes_subnet(&reg);
+    check_fwd_mask_changes_eval(&reg);
+    check_score_probe(&reg);
+    check_lora(&reg);
+}
+
+fn check_manifest_and_params(reg: &ArtifactRegistry) {
+    let m = &reg.full_manifest;
+    let store = ParamStore::load(m, reg.dir()).unwrap();
+    assert_eq!(store.n_tensors(), m.n_params());
+    assert_eq!(store.total_elems(), m.total_elems);
+    // norm scales init to 1.0 -> abs sum of a ln_g equals dim
+    let g = store.tensor("b00_ln1_g").unwrap();
+    assert_eq!(g.len(), m.config.dim);
+    assert!((g.sum() - m.config.dim as f32).abs() < 1e-3);
+    // literals round-trip exactly
+    let mut store2 = ParamStore::zeros_like(m);
+    let lits = store.to_literals().unwrap();
+    store2.from_literals(&lits).unwrap();
+    assert_eq!(store.slice("z_head_w"), store2.slice("z_head_w"));
+    println!("manifest/params OK");
+}
+
+fn check_trainstep_loss_and_masks(reg: &ArtifactRegistry) {
+    let m = &reg.full_manifest;
+    let mc = &m.config;
+    let session = Session::new(reg, m).unwrap();
+    let store = ParamStore::load(m, reg.dir()).unwrap();
+    let mut state = TrainState::new(&store).unwrap();
+    let (xt, yt) = sample_batch(mc, m.micro_batch, 3);
+    let x = session.x_literal(&xt).unwrap();
+    let y = session.y_literal(&yt).unwrap();
+
+    // lr = 0: params unchanged, loss ~= ln(classes) at init.
+    let ones = MaskPair::ones(mc.depth, mc.heads);
+    let out = session.step(&mut state, &x, &y, &ones, 0.0).unwrap();
+    assert!(
+        (out.loss - (mc.classes as f32).ln()).abs() < 1.0,
+        "init loss {} vs ln(C) {}",
+        out.loss,
+        (mc.classes as f32).ln()
+    );
+    let mut store_after = ParamStore::zeros_like(m);
+    state.write_back(&mut store_after).unwrap();
+    assert_eq!(
+        store.slice("z_head_w"),
+        store_after.slice("z_head_w"),
+        "lr=0 must not move params"
+    );
+
+    // same micro-batch, full masks, positive lr: loss decreases.
+    let first = session.step(&mut state, &x, &y, &ones, 0.05).unwrap().loss;
+    let mut last = first;
+    for _ in 0..4 {
+        last = session.step(&mut state, &x, &y, &ones, 0.05).unwrap().loss;
+    }
+    assert!(last < first, "loss should fall on repeated batch: {first} -> {last}");
+
+    // eval agrees with trainstep's loss at lr=0 (same forward).
+    let ev = session.eval(&state, &x, &y, None).unwrap();
+    let tr = session.step(&mut state, &x, &y, &ones, 0.0).unwrap();
+    assert!((ev.loss - tr.loss).abs() < 1e-4, "eval {} vs trainstep {}", ev.loss, tr.loss);
+    println!("trainstep/eval OK");
+}
+
+fn check_bwd_mask_freezes_subnet(reg: &ArtifactRegistry) {
+    let m = &reg.full_manifest;
+    let mc = &m.config;
+    let session = Session::new(reg, m).unwrap();
+    let store = ParamStore::load(m, reg.dir()).unwrap();
+    let mut state = TrainState::new(&store).unwrap();
+    let (xt, yt) = sample_batch(mc, m.micro_batch, 4);
+    let x = session.x_literal(&xt).unwrap();
+    let y = session.y_literal(&yt).unwrap();
+
+    // p_o on subnet (block 1, head 2): its qkv slice must stay frozen.
+    let mut masks = MaskPair::ones(mc.depth, mc.heads);
+    masks.bwd.set(&[1, 2], 0.0);
+    session.step(&mut state, &x, &y, &masks, 0.1).unwrap();
+    let mut after = ParamStore::zeros_like(m);
+    state.write_back(&mut after).unwrap();
+
+    let before_q = store.slice("b01_wqkv").unwrap();
+    let after_q = after.slice("b01_wqkv").unwrap();
+    let d = mc.dim;
+    let (heads, dh) = (mc.heads, mc.head_dim);
+    let mut frozen_diff = 0.0f32;
+    let mut other_diff = 0.0f32;
+    // wqkv row-major [D, 3D]; head h's column block within each of the
+    // 3 projections: cols [p*D + h*dh, p*D + (h+1)*dh).
+    for r in 0..d {
+        for p in 0..3 {
+            for h in 0..heads {
+                for c in 0..dh {
+                    let col = p * d + h * dh + c;
+                    let delta = (after_q[r * 3 * d + col] - before_q[r * 3 * d + col]).abs();
+                    if h == 2 {
+                        frozen_diff += delta;
+                    } else {
+                        other_diff += delta;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(frozen_diff, 0.0, "p_o subnet must not update");
+    assert!(other_diff > 0.0, "other subnets must update");
+    println!("bwd-mask freeze OK");
+}
+
+fn check_fwd_mask_changes_eval(reg: &ArtifactRegistry) {
+    let m = &reg.full_manifest;
+    let mc = &m.config;
+    let session = Session::new(reg, m).unwrap();
+    let store = ParamStore::load(m, reg.dir()).unwrap();
+    let state = TrainState::new(&store).unwrap();
+    let (xt, yt) = sample_batch(mc, m.micro_batch, 5);
+    let x = session.x_literal(&xt).unwrap();
+    let y = session.y_literal(&yt).unwrap();
+    let full = session.eval(&state, &x, &y, None).unwrap();
+    let mut partial_mask = Tensor::full(&[mc.depth, mc.heads], 1.0);
+    for h in 0..mc.heads {
+        partial_mask.set(&[0, h], 0.0); // skip entire block 0
+    }
+    let partial = session.eval(&state, &x, &y, Some(&partial_mask)).unwrap();
+    assert!(
+        (full.loss - partial.loss).abs() > 1e-6,
+        "skipping a block must change the forward pass"
+    );
+    println!("fwd-mask eval OK");
+}
+
+fn check_score_probe(reg: &ArtifactRegistry) {
+    let m = &reg.full_manifest;
+    let mc = &m.config;
+    let session = Session::new(reg, m).unwrap();
+    let store = ParamStore::load(m, reg.dir()).unwrap();
+    let state = TrainState::new(&store).unwrap();
+    let (xt, yt) = sample_batch(mc, m.micro_batch, 6);
+    let probe = session
+        .probe_scores(&state, &session.x_literal(&xt).unwrap(), &session.y_literal(&yt).unwrap())
+        .unwrap();
+    assert_eq!(probe.shape(), &[mc.depth, mc.heads, 4]);
+    assert!(probe.data().iter().all(|&v| v >= 0.0), "scores are sums of norms");
+    for l in 0..mc.depth {
+        for h in 0..mc.heads {
+            assert!(probe.at(&[l, h, 3]) > 0.0, "weight magnitude strictly positive");
+        }
+    }
+    println!("score probe OK");
+}
+
+fn check_lora(reg: &ArtifactRegistry) {
+    if reg.lora_ranks.is_empty() {
+        return;
+    }
+    let rank = reg.lora_standard_rank;
+    let m = reg.lora_manifest(rank).unwrap();
+    assert_eq!(m.config.lora_rank, rank);
+    let session = Session::new(reg, m).unwrap();
+    let store = ParamStore::load(m, reg.dir()).unwrap();
+    let mut state = TrainState::new(&store).unwrap();
+    let (xt, yt) = sample_batch(&m.config, m.micro_batch, 7);
+    let x = session.x_literal(&xt).unwrap();
+    let y = session.y_literal(&yt).unwrap();
+    let ones = MaskPair::ones(m.config.depth, m.config.heads);
+    session.step(&mut state, &x, &y, &ones, 0.1).unwrap();
+    let mut after = ParamStore::zeros_like(m);
+    state.write_back(&mut after).unwrap();
+    assert_eq!(
+        store.slice("b00_wqkv"),
+        after.slice("b00_wqkv"),
+        "base weights frozen in LoRA mode"
+    );
+    assert_ne!(
+        store.slice("b00_lora_bq"),
+        after.slice("b00_lora_bq"),
+        "LoRA B must train"
+    );
+    println!("lora OK");
+}
