@@ -8,6 +8,7 @@
 //! Flags: --batches N --dataset c10|c100|cars --budget-full K --budget-fwd K
 //! The recorded run lives in EXPERIMENTS.md §End-to-end.
 
+use d2ft::cluster::ExecMode;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
 use d2ft::metrics::pct;
@@ -42,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         budget: budget.clone(),
         scheduler: SchedulerKind::D2ft,
         scores: Default::default(),
+        exec: ExecMode::Parallel { workers: 0 },
         partition_group: 1,
         hetero: None,
         seed: args.get_u64("seed")?,

@@ -1,0 +1,77 @@
+//! Bench: serial vs parallel engine stepping on the synthetic workload.
+//!
+//! For K ∈ {2, 4, 8} simulated devices, runs the same scheduled workload
+//! (D2FT bi-level over pseudo-scores, full simulation: spinning devices +
+//! comm pipeline) through the serial reference path and the parallel
+//! engine, and writes the comparison to `BENCH_engine_parallel.json`.
+//! No artifacts required.
+//!
+//!     cargo bench --bench engine_parallel
+
+use d2ft::cluster::{run_synthetic, ExecMode, SyntheticRunConfig};
+use d2ft::util::json::{arr, num, obj, s, Json};
+
+const BATCHES: usize = 24;
+const REPS: usize = 5;
+
+/// Best-of-REPS wall time (ms per step) plus the final report's modeled
+/// numbers (identical across reps and modes by construction).
+fn measure(devices: usize, mode: ExecMode) -> (f64, f64, f64) {
+    let mut cfg = SyntheticRunConfig::quick(devices, mode);
+    cfg.batches = BATCHES;
+    let mut best_ms_per_step = f64::INFINITY;
+    let mut makespan = 0.0;
+    let mut saved = 0.0;
+    for _ in 0..REPS {
+        let r = run_synthetic(&cfg);
+        best_ms_per_step = best_ms_per_step.min(r.wall_s * 1e3 / BATCHES as f64);
+        makespan = r.mean_makespan_ms;
+        saved = r.comm_saved_ms;
+    }
+    (best_ms_per_step, makespan, saved)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("engine_parallel: {BATCHES} batches/run, best of {REPS}, {cores} core(s)");
+    let mut entries = Vec::new();
+    let mut speedup_at_8 = 0.0;
+    for &k in &[2usize, 4, 8] {
+        let (serial_ms, makespan_ms, saved_ms) = measure(k, ExecMode::Serial);
+        let (parallel_ms, _, _) = measure(k, ExecMode::Parallel { workers: 0 });
+        let speedup = serial_ms / parallel_ms;
+        if k == 8 {
+            speedup_at_8 = speedup;
+        }
+        println!(
+            "bench engine K={k:<2} serial {serial_ms:>8.3}ms/step  \
+             parallel {parallel_ms:>8.3}ms/step  speedup {speedup:>5.2}x  \
+             (modeled makespan {makespan_ms:.2}ms, comm overlap saves {saved_ms:.2}ms)"
+        );
+        entries.push(obj(vec![
+            ("devices", num(k as f64)),
+            ("serial_ms_per_step", num(serial_ms)),
+            ("parallel_ms_per_step", num(parallel_ms)),
+            ("speedup", num(speedup)),
+            ("modeled_makespan_ms", num(makespan_ms)),
+            ("comm_overlap_saved_ms", num(saved_ms)),
+        ]));
+    }
+    let report = obj(vec![
+        ("bench", s("engine_parallel")),
+        ("batches_per_run", num(BATCHES as f64)),
+        ("reps", num(REPS as f64)),
+        ("host_cores", num(cores as f64)),
+        ("parallel_faster_at_k8", Json::Bool(speedup_at_8 > 1.0)),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_engine_parallel.json";
+    std::fs::write(path, report.to_string_pretty()).expect("writing bench report");
+    println!("wrote {path}");
+    if speedup_at_8 <= 1.0 {
+        eprintln!(
+            "WARNING: parallel not faster than serial at K=8 \
+             (speedup {speedup_at_8:.2}x; single-core host?)"
+        );
+    }
+}

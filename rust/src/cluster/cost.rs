@@ -11,6 +11,7 @@
 
 use crate::schedule::table::Op;
 
+/// Integer-unit operation cost model (compute + communication).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
     /// Integer units of a forward pass (default 2).

@@ -56,6 +56,17 @@ impl ExecTimeModel {
         }
     }
 
+    /// Incremental time of the `k`-th (1-based) micro-batch of `op` in a
+    /// batched device row. Marginals telescope: summing them for
+    /// `k = 1..=n` reproduces `time_ms(op, n)` — the execution engine
+    /// charges tasks individually yet matches the batched row totals.
+    pub fn marginal_ms(&self, op: Op, k: usize) -> f64 {
+        if k == 0 {
+            return 0.0;
+        }
+        self.time_ms(op, k) - self.time_ms(op, k - 1)
+    }
+
     /// Time for a device given its schedule row (p_f count + p_o count;
     /// batched execution, as the paper measures).
     pub fn device_time_ms(&self, table: &ScheduleTable, subnet: usize) -> f64 {
@@ -123,6 +134,23 @@ mod tests {
             let r = m.fwd_ratio(n);
             assert!((0.35..=0.50).contains(&r), "ratio {r} at n={n}");
         }
+    }
+
+    #[test]
+    fn marginals_telescope_to_batched_times() {
+        let m = ExecTimeModel::paper();
+        for n in 1..=8 {
+            for op in [Op::Full, Op::ForwardOnly] {
+                let sum: f64 = (1..=n).map(|k| m.marginal_ms(op, k)).sum();
+                assert!(
+                    (sum - m.time_ms(op, n)).abs() < 1e-9,
+                    "op {op:?} n {n}: {sum} vs {}",
+                    m.time_ms(op, n)
+                );
+            }
+        }
+        assert_eq!(m.marginal_ms(Op::Shortcut, 3), 0.0);
+        assert_eq!(m.marginal_ms(Op::Full, 0), 0.0);
     }
 
     #[test]

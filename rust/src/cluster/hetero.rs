@@ -24,6 +24,7 @@ pub struct HeteroSpec {
 }
 
 impl HeteroSpec {
+    /// No heterogeneity: per-head partition, uniform budgets.
     pub fn homogeneous() -> HeteroSpec {
         HeteroSpec { n_large_memory: 0, n_high_speed: 0, speed_factor: 1.5 }
     }

@@ -6,13 +6,25 @@
 //! device would compute — while this module charges every simulated
 //! device the paper's cost model and execution-time model, tracks
 //! workloads, and implements the heterogeneity configurations of §IV-D.
+//!
+//! Since the parallel-engine refactor, the simulated devices are no
+//! longer iterated serially: [`engine::Engine`] runs one worker thread
+//! per device (or a fixed pool), makes straggler time a *measured*
+//! property, and overlaps simulated communication with compute. The
+//! serial path survives as [`engine::ExecMode::Serial`], the reference
+//! the determinism test compares against.
 
 pub mod cost;
+pub mod engine;
 pub mod exec_time;
 pub mod hetero;
 pub mod workload;
 
 pub use cost::CostModel;
+pub use engine::{
+    run_synthetic, DeviceReport, Engine, EngineConfig, ExecMode, StepReport,
+    SyntheticReport, SyntheticRunConfig,
+};
 pub use exec_time::ExecTimeModel;
 pub use hetero::HeteroSpec;
 pub use workload::WorkloadTracker;

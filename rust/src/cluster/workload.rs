@@ -7,9 +7,13 @@
 //! (micro-batch) counts.
 
 use super::cost::CostModel;
+use crate::metrics::DeviceUsage;
 use crate::schedule::table::{Op, ScheduleTable};
 use crate::tensor::Tensor;
 
+/// Per-device cost accumulator over scheduled batches: modeled compute /
+/// communication units per device, plus *measured* wall-clock busy time
+/// per device when an execution engine feeds it (`record_measured`).
 #[derive(Clone, Debug)]
 pub struct WorkloadTracker {
     cost: CostModel,
@@ -23,9 +27,12 @@ pub struct WorkloadTracker {
     /// Full-fine-tuning compute units that the same batches would cost.
     standard_units: f64,
     batches: usize,
+    /// Measured wall-clock busy times per device (ms), engine-fed.
+    measured: DeviceUsage,
 }
 
 impl WorkloadTracker {
+    /// Fresh tracker for `n_devices` devices under `cost`.
     pub fn new(cost: CostModel, n_devices: usize) -> WorkloadTracker {
         WorkloadTracker {
             cost,
@@ -35,9 +42,11 @@ impl WorkloadTracker {
             processed: vec![0; n_devices],
             standard_units: 0.0,
             batches: 0,
+            measured: DeviceUsage::new(n_devices),
         }
     }
 
+    /// Number of devices tracked.
     pub fn n_devices(&self) -> usize {
         self.n_devices
     }
@@ -45,14 +54,11 @@ impl WorkloadTracker {
     /// Charge one scheduled batch.
     pub fn record(&mut self, table: &ScheduleTable) {
         assert_eq!(table.n_subnets, self.n_devices, "table/device mismatch");
-        for k in 0..table.n_subnets {
-            for i in 0..table.n_micro {
-                let op = table.get(k, i);
-                self.compute_units[k] += self.cost.compute_units(op) as f64;
-                self.comm[k] += self.cost.comm_cost(op);
-                if op != Op::Shortcut {
-                    self.processed[k] += 1;
-                }
+        for t in table.tasks() {
+            self.compute_units[t.subnet] += self.cost.compute_units(t.op) as f64;
+            self.comm[t.subnet] += self.cost.comm_cost(t.op);
+            if t.op != Op::Shortcut {
+                self.processed[t.subnet] += 1;
             }
         }
         self.standard_units += (table.n_micro * self.cost.full_units()) as f64;
@@ -111,10 +117,43 @@ impl WorkloadTracker {
         self.comm.iter().sum::<f64>() / denom
     }
 
+    /// Record one step's *measured* per-device busy times (ms), as
+    /// reported by the execution engine's workers. Delegates to a
+    /// [`DeviceUsage`] accumulator; the straggler — the slowest device,
+    /// which gates the synchronous step — accumulates into
+    /// [`WorkloadTracker::straggler_ms()`].
+    pub fn record_measured(&mut self, busy_ms: &[f64]) {
+        self.measured.record(busy_ms);
+    }
+
+    /// Accumulated measured busy time per device (ms).
+    pub fn measured_busy_ms(&self) -> &[f64] {
+        self.measured.busy_ms()
+    }
+
+    /// Total measured straggler time: the sum over recorded steps of the
+    /// slowest device's wall-clock time (what a synchronous cluster
+    /// actually waits for).
+    pub fn straggler_ms(&self) -> f64 {
+        self.measured.total_makespan_ms()
+    }
+
+    /// Steps recorded through [`WorkloadTracker::record_measured`].
+    pub fn measured_steps(&self) -> usize {
+        self.measured.steps()
+    }
+
+    /// The measured-time accumulator (utilization / imbalance views).
+    pub fn measured(&self) -> &DeviceUsage {
+        &self.measured
+    }
+
+    /// Batches recorded through [`WorkloadTracker::record`].
     pub fn batches(&self) -> usize {
         self.batches
     }
 
+    /// Micro-batches processed (not skipped) per device.
     pub fn processed_counts(&self) -> &[usize] {
         &self.processed
     }
@@ -178,6 +217,17 @@ mod tests {
         w.record(&t);
         assert!(w.workload_variance() > 0.2);
         assert!(w.sample_count_variance() > 0.0);
+    }
+
+    #[test]
+    fn measured_tracking_accumulates_straggler() {
+        let mut w = WorkloadTracker::new(cost(), 3);
+        w.record_measured(&[1.0, 4.0, 2.0]);
+        w.record_measured(&[3.0, 1.0, 1.0]);
+        assert_eq!(w.measured_steps(), 2);
+        assert_eq!(w.measured_busy_ms(), &[4.0, 5.0, 3.0]);
+        // straggler = 4.0 (step 1) + 3.0 (step 2)
+        assert!((w.straggler_ms() - 7.0).abs() < 1e-12);
     }
 
     #[test]

@@ -4,9 +4,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::cluster::{CostModel, ExecTimeModel, HeteroSpec, WorkloadTracker};
+use crate::cluster::{
+    CostModel, Engine, EngineConfig, ExecMode, ExecTimeModel, HeteroSpec, WorkloadTracker,
+};
 use crate::data::{Dataset, DatasetSpec, SyntheticKind};
-use crate::metrics::Meter;
+use crate::metrics::{DeviceUsage, Meter};
 use crate::partition::Partition;
 use crate::runtime::{ArtifactRegistry, Manifest, ParamStore, Session, TrainState};
 use crate::schedule::scaler::{Lambda, ScalerSched};
@@ -29,14 +31,21 @@ pub enum SchedulerKind {
     D2ftPaperMerge,
     /// Standard full fine-tuning (everything p_f; ignores the budget).
     Standard,
+    /// Budget-matched random operation assignment (§III-A).
     Random,
+    /// Dynamic pruning, weight-magnitude score (§III-A).
     DPruningM,
+    /// Dynamic pruning, magnitude x gradient score (§III-A).
     DPruningMG,
+    /// MoE GShard gating baseline (§III-A).
     MoeGshard,
+    /// Single-level "Scaler" knapsack baseline (§IV-F).
     Scaler(Lambda),
 }
 
 impl SchedulerKind {
+    /// Parse a CLI scheduler label (see `repro train --help` for the
+    /// accepted set); round-tripped by `tests/engine.rs`.
     pub fn parse(s: &str) -> Result<SchedulerKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "d2ft" => SchedulerKind::D2ft,
@@ -56,6 +65,7 @@ impl SchedulerKind {
         })
     }
 
+    /// The paper's display label for this policy.
     pub fn label(&self) -> &'static str {
         match self {
             SchedulerKind::D2ft => "D2FT (Ours)",
@@ -73,20 +83,33 @@ impl SchedulerKind {
 /// Full configuration of one fine-tuning run.
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
+    /// Which synthetic dataset preset to fine-tune on.
     pub dataset: SyntheticKind,
+    /// Training examples to generate.
     pub train_size: usize,
+    /// Test examples to generate.
     pub test_size: usize,
     /// Micro-batches per batch (paper: 5).
     pub micros_per_batch: usize,
     /// Number of fine-tuning batches to run.
     pub batches: usize,
+    /// SGD-momentum learning rate.
     pub lr: f32,
+    /// Per-device operation budget.
     pub budget: Budget,
+    /// Scheduling policy (D2FT or a baseline).
     pub scheduler: SchedulerKind,
+    /// Which contribution metrics feed the bi-level knapsack.
     pub scores: ScoreConfig,
+    /// How the simulated cluster executes each scheduled batch:
+    /// parallel workers (the engine) or the serial reference path.
+    /// Deterministic metrics are identical either way.
+    pub exec: ExecMode,
     /// Head-group size for the partition (1 = per-head; Table V).
     pub partition_group: usize,
+    /// Device heterogeneity configuration (None = homogeneous).
     pub hetero: Option<HeteroSpec>,
+    /// Run seed (data order, random baselines, engine payloads).
     pub seed: u64,
     /// Batches of synthetic "pre-training" before fine-tuning
     /// (DESIGN.md Substitution 4; gives non-degenerate scores).
@@ -97,6 +120,7 @@ pub struct TrainerConfig {
 }
 
 impl TrainerConfig {
+    /// Short-run defaults used by the experiments and tests.
     pub fn quick(dataset: SyntheticKind, scheduler: SchedulerKind, budget: Budget) -> Self {
         TrainerConfig {
             dataset,
@@ -108,6 +132,11 @@ impl TrainerConfig {
             budget,
             scheduler,
             scores: ScoreConfig::default(),
+            // A bounded pool: the trainer runs the engine at its
+            // accounting operating point, where per-device threads (the
+            // `--workers 0` paper placement) buy nothing over a small
+            // pool — results are bitwise identical either way.
+            exec: ExecMode::Parallel { workers: 8 },
             partition_group: 1,
             hetero: None,
             seed: 17,
@@ -120,22 +149,46 @@ impl TrainerConfig {
 /// Everything an experiment needs to print a paper row.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// Display label of the scheduling policy.
     pub scheduler: String,
+    /// Mean training loss over the run.
     pub final_train_loss: f64,
+    /// Test top-1 accuracy after the run.
     pub test_top1: f64,
+    /// Test loss after the run.
     pub test_loss: f64,
+    /// Per-micro-batch training losses in execution order.
     pub loss_curve: Vec<f32>,
+    /// `(batch, top-1)` samples when `eval_every > 0`.
     pub eval_curve: Vec<(usize, f64)>,
+    /// Compute cost relative to standard fine-tuning.
     pub compute_fraction: f64,
+    /// Communication cost relative to standard fine-tuning.
     pub comm_fraction: f64,
+    /// Variance of per-device compute fraction (Table I).
     pub workload_variance: f64,
+    /// Variance of per-device processed micro-batch counts.
     pub sample_count_variance: f64,
     /// Modelled mean per-device execution time per batch (ms).
     pub mean_exec_ms: f64,
     /// Modelled batch makespan (slowest device, ms).
     pub makespan_ms: f64,
+    /// Cluster execution mode label (`serial` / `parallel(...)`).
+    pub engine: String,
+    /// Mean per-device utilization across the run (engine-observed).
+    pub utilization: f64,
+    /// Straggler busy time over mean busy time, minus one (0 = balanced).
+    pub imbalance: f64,
+    /// Measured mean straggler (slowest worker) wall time per batch
+    /// (ms). The trainer runs the engine at its *accounting* operating
+    /// point (no simulated spinning), so this measures the real
+    /// dispatch/bookkeeping cost of the slowest worker — the full
+    /// simulation point, where devices spin for their modeled time, is
+    /// exercised by `benches/engine_parallel.rs` and `tests/engine.rs`.
+    pub straggler_ms: f64,
     /// Measured wall-clock of the fine-tuning loop (s).
     pub wall_s: f64,
+    /// Batches actually executed.
     pub batches: usize,
 }
 
@@ -212,6 +265,8 @@ pub struct Trainer<'a> {
 }
 
 impl<'a> Trainer<'a> {
+    /// Build a trainer: partition the model, open the PJRT session, and
+    /// generate the train/test splits.
     pub fn new(
         registry: &'a ArtifactRegistry,
         manifest: &'a Manifest,
@@ -260,6 +315,7 @@ impl<'a> Trainer<'a> {
         TrainState::new(&ParamStore::load(self.session.manifest, self.registry.dir())?)
     }
 
+    /// The model partition this run schedules over.
     pub fn partition(&self) -> &Partition {
         &self.partition
     }
@@ -332,8 +388,18 @@ impl<'a> Trainer<'a> {
             None => self.cfg.budget.clone(),
         };
         let cost = CostModel::paper();
-        let exec_model = ExecTimeModel::paper();
-        let mut workloads = WorkloadTracker::new(cost, self.partition.n_subnets());
+        let n_devices = self.partition.n_subnets();
+        let mut workloads = WorkloadTracker::new(cost, n_devices);
+        // The simulated cluster: parallel worker threads (or the serial
+        // reference path) execute each scheduled batch and report per-
+        // device modeled + measured times through the step barrier.
+        let mut engine = Engine::with_models(
+            EngineConfig::accounting(self.cfg.exec, self.cfg.seed),
+            n_devices,
+            ExecTimeModel::paper(),
+            cost,
+        );
+        let mut usage = DeviceUsage::new(n_devices);
         let mut loss_curve = Vec::with_capacity(self.cfg.batches);
         let mut eval_curve = Vec::new();
         let mut score_cache: Vec<Option<ScoreBook>> = Vec::new();
@@ -388,10 +454,13 @@ impl<'a> Trainer<'a> {
                     meter.push(out.loss, out.n_correct, mb);
                     loss_curve.push(out.loss);
                 }
-                // --- simulated cluster accounting --------------------------
+                // --- simulated cluster execution ---------------------------
+                let cluster = engine.execute(&table);
                 workloads.record(&table);
-                exec_ms_sum += exec_model.mean_device_time_ms(&table);
-                makespan_sum += exec_model.makespan_ms(&table);
+                workloads.record_measured(&cluster.measured_ms());
+                usage.record(&cluster.finish_ms());
+                exec_ms_sum += cluster.mean_device_ms;
+                makespan_sum += cluster.makespan_ms;
                 if self.cfg.eval_every > 0 && (batch_idx + 1) % self.cfg.eval_every == 0 {
                     let (top1, _) = self.evaluate(&state)?;
                     eval_curve.push((batch_idx + 1, top1));
@@ -418,6 +487,10 @@ impl<'a> Trainer<'a> {
             sample_count_variance: workloads.sample_count_variance(),
             mean_exec_ms: exec_ms_sum / b,
             makespan_ms: makespan_sum / b,
+            engine: self.cfg.exec.label(),
+            utilization: usage.mean_utilization(),
+            imbalance: usage.imbalance(),
+            straggler_ms: workloads.straggler_ms() / b,
             wall_s,
             batches: batch_idx,
         })

@@ -5,7 +5,7 @@
 mod cifar_bin;
 mod synthetic;
 
-pub use cifar_bin::load_cifar10_bin;
+pub use cifar_bin::{cifar10_dir_if_present, load_cifar10_bin};
 pub use synthetic::{DatasetSpec, SyntheticKind};
 
 use crate::tensor::Tensor;
@@ -14,8 +14,11 @@ use crate::util::rng::Rng;
 /// An in-memory labelled image dataset.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Display name.
     pub name: String,
+    /// Number of label classes.
     pub classes: usize,
+    /// Image side length (square images).
     pub img: usize,
     /// `[n, img, img, 3]` f32.
     pub images: Tensor,
@@ -24,10 +27,12 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// Whether the dataset has no examples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
@@ -64,6 +69,7 @@ pub struct Batcher<'a> {
 }
 
 impl<'a> Batcher<'a> {
+    /// Batcher with a deterministic shuffle from `seed`.
     pub fn new(
         data: &'a Dataset,
         micro_batch: usize,

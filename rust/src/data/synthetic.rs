@@ -13,16 +13,22 @@ use super::Dataset;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+/// The synthetic dataset presets (class count + difficulty match the
+/// paper's datasets).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SyntheticKind {
+    /// 10 classes, CIFAR-10-like difficulty.
     Cifar10Like,
+    /// 100 classes, CIFAR-100-like difficulty.
     Cifar100Like,
+    /// 196 classes, noisier (Stanford-Cars-like difficulty).
     CarsLike,
     /// Broad distribution used for the synthetic "pre-training" phase.
     Pretrain,
 }
 
 impl SyntheticKind {
+    /// Parse a CLI dataset label.
     pub fn parse(s: &str) -> anyhow::Result<SyntheticKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "cifar10" | "cifar10-like" | "c10" => SyntheticKind::Cifar10Like,
@@ -33,6 +39,7 @@ impl SyntheticKind {
         })
     }
 
+    /// Display label for reports.
     pub fn label(self) -> &'static str {
         match self {
             SyntheticKind::Cifar10Like => "CIFAR-10 (synthetic)",
@@ -75,17 +82,25 @@ impl SyntheticKind {
     }
 }
 
+/// Full description of one synthetic dataset to generate.
 #[derive(Clone, Copy, Debug)]
 pub struct DatasetSpec {
+    /// Which preset distribution to draw from.
     pub kind: SyntheticKind,
+    /// Number of examples to generate.
     pub train_size: usize,
+    /// Image side length.
     pub img: usize,
+    /// Number of label classes.
     pub classes: usize,
+    /// Per-sample Gaussian noise level.
     pub noise: f32,
+    /// Sampling seed (splits derive distinct streams from it).
     pub seed: u64,
 }
 
 impl DatasetSpec {
+    /// Spec with the preset's default class count and noise.
     pub fn preset(kind: SyntheticKind, img: usize, train_size: usize, seed: u64) -> DatasetSpec {
         DatasetSpec {
             kind,

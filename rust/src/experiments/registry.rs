@@ -6,14 +6,17 @@ use crate::runtime::ArtifactRegistry;
 
 /// Shared handles every experiment receives.
 pub struct ExperimentCtx<'a> {
+    /// The opened artifact set.
     pub registry: &'a ArtifactRegistry,
     /// Scale factor for run length (1 = shipped default; raise for
     /// closer-to-paper convergence, lower for smoke tests).
     pub scale: f64,
+    /// Base seed for every run the experiment launches.
     pub seed: u64,
 }
 
 impl<'a> ExperimentCtx<'a> {
+    /// Context with default scale (1.0) and seed (17).
     pub fn new(registry: &'a ArtifactRegistry) -> ExperimentCtx<'a> {
         ExperimentCtx { registry, scale: 1.0, seed: 17 }
     }

@@ -22,9 +22,15 @@
 //! * **L1** — Pallas kernels (per-head masked attention, masked LoRA
 //!   deltas) called from L2 and lowered into the same HLO.
 //!
-//! The [`runtime`] module loads the artifacts via the PJRT C API and the
-//! [`coordinator`] drives training end-to-end. See `DESIGN.md` for the
-//! full system inventory and per-experiment index.
+//! The [`runtime`] module loads the artifacts via the PJRT C API, the
+//! [`coordinator`] drives training end-to-end, and the simulated cluster
+//! executes each scheduled batch on the parallel multi-device engine
+//! ([`cluster::Engine`] — one worker thread per device, step barrier,
+//! comm/compute overlap; `--serial` keeps the bitwise-identical
+//! reference path). See `DESIGN.md` for the full system inventory,
+//! engine dataflow, and per-experiment index.
+
+#![warn(missing_docs)]
 
 pub mod cluster;
 pub mod coordinator;

@@ -8,6 +8,7 @@
 
 use anyhow::Result;
 
+use d2ft::cluster::ExecMode;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
 use d2ft::experiments::{list_experiments, run_experiment, ExperimentCtx};
@@ -39,6 +40,8 @@ fn cli() -> Cli {
         .flag("scale", "1.0", "experiment run-length scale factor")
         .flag("lora-rank", "0", "use the LoRA artifact set at this rank (0 = full FT)")
         .flag("eval-every", "0", "evaluate test top-1 every N batches")
+        .flag("workers", "0", "engine worker threads (0 = one per simulated device)")
+        .switch("serial", "serial cluster execution (reference path; same metrics)")
         .switch("quiet", "suppress info logging")
 }
 
@@ -110,6 +113,11 @@ fn main() -> Result<()> {
                     backward: Metric::parse(args.get("backward-score"))?,
                     forward: Metric::parse(args.get("forward-score"))?,
                 },
+                exec: if args.get_bool("serial") {
+                    ExecMode::Serial
+                } else {
+                    ExecMode::Parallel { workers: args.get_usize("workers")? }
+                },
                 partition_group: args.get_usize("partition-group")?,
                 hetero: None,
                 seed: args.get_u64("seed")?,
@@ -134,6 +142,10 @@ fn main() -> Result<()> {
             println!("workload variance    {:.4}", r.workload_variance);
             println!("mean exec (model)    {:.2}ms", r.mean_exec_ms);
             println!("makespan (model)     {:.2}ms", r.makespan_ms);
+            println!("engine               {}", r.engine);
+            println!("device utilization   {}", pct(r.utilization));
+            println!("imbalance            {:.4}", r.imbalance);
+            println!("straggler (measured) {:.3}ms/batch", r.straggler_ms);
             println!("wall time            {:.1}s", r.wall_s);
             Ok(())
         }

@@ -11,10 +11,12 @@ pub struct Meter {
 }
 
 impl Meter {
+    /// Empty accumulator.
     pub fn new() -> Meter {
         Meter::default()
     }
 
+    /// Record one step's loss and correct count over `batch` examples.
     pub fn push(&mut self, loss: f32, n_correct: f32, batch: usize) {
         self.n += 1;
         self.loss_sum += loss as f64;
@@ -22,6 +24,7 @@ impl Meter {
         self.total += batch as f64;
     }
 
+    /// Mean loss over all pushed steps.
     pub fn mean_loss(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -30,6 +33,7 @@ impl Meter {
         }
     }
 
+    /// Top-1 accuracy over all pushed examples.
     pub fn top1(&self) -> f64 {
         if self.total == 0.0 {
             0.0
@@ -38,12 +42,99 @@ impl Meter {
         }
     }
 
+    /// Number of steps pushed.
     pub fn count(&self) -> usize {
         self.n
     }
 
+    /// Clear all accumulated state.
     pub fn reset(&mut self) {
         *self = Meter::default();
+    }
+}
+
+/// Per-device utilization / imbalance accumulator, fed per step with the
+/// devices' busy times (modeled or measured) by the execution engine.
+///
+/// Utilization of device `k` is its busy time divided by the total
+/// makespan (what fraction of each synchronous step the device actually
+/// worked); imbalance is the straggler's busy time over the mean busy
+/// time, minus one (0 = perfectly balanced — the paper's Table I claim
+/// made observable at runtime).
+#[derive(Clone, Debug)]
+pub struct DeviceUsage {
+    busy_ms: Vec<f64>,
+    makespan_ms: f64,
+    steps: usize,
+}
+
+impl DeviceUsage {
+    /// Tracker for `n_devices` devices.
+    pub fn new(n_devices: usize) -> DeviceUsage {
+        DeviceUsage { busy_ms: vec![0.0; n_devices], makespan_ms: 0.0, steps: 0 }
+    }
+
+    /// Record one step's per-device busy times; the step's makespan is
+    /// the slowest device.
+    pub fn record(&mut self, busy_ms: &[f64]) {
+        assert_eq!(busy_ms.len(), self.busy_ms.len(), "device count mismatch");
+        for (acc, &b) in self.busy_ms.iter_mut().zip(busy_ms) {
+            *acc += b;
+        }
+        self.makespan_ms += busy_ms.iter().copied().fold(0.0, f64::max);
+        self.steps += 1;
+    }
+
+    /// Number of devices tracked.
+    pub fn n_devices(&self) -> usize {
+        self.busy_ms.len()
+    }
+
+    /// Steps recorded so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Accumulated busy time per device (ms).
+    pub fn busy_ms(&self) -> &[f64] {
+        &self.busy_ms
+    }
+
+    /// Accumulated makespan: the sum over steps of the slowest device's
+    /// busy time — what a synchronous cluster actually waits for.
+    pub fn total_makespan_ms(&self) -> f64 {
+        self.makespan_ms
+    }
+
+    /// Per-device utilization: busy time / accumulated makespan.
+    pub fn utilization(&self) -> Vec<f64> {
+        if self.makespan_ms <= 0.0 {
+            return vec![0.0; self.busy_ms.len()];
+        }
+        self.busy_ms.iter().map(|&b| b / self.makespan_ms).collect()
+    }
+
+    /// Mean device utilization (1.0 = every device busy for the whole
+    /// makespan of every step).
+    pub fn mean_utilization(&self) -> f64 {
+        let u = self.utilization();
+        if u.is_empty() {
+            return 0.0;
+        }
+        u.iter().sum::<f64>() / u.len() as f64
+    }
+
+    /// Straggler busy time over mean busy time, minus one (0 = balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.busy_ms.is_empty() {
+            return 0.0;
+        }
+        let mean = self.busy_ms.iter().sum::<f64>() / self.busy_ms.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let max = self.busy_ms.iter().copied().fold(0.0, f64::max);
+        max / mean - 1.0
     }
 }
 
@@ -55,11 +146,13 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// EMA with smoothing factor `alpha` in `[0, 1]`.
     pub fn new(alpha: f64) -> Ema {
         assert!((0.0..=1.0).contains(&alpha));
         Ema { alpha, value: None }
     }
 
+    /// Fold in a sample and return the updated average.
     pub fn push(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -69,6 +162,7 @@ impl Ema {
         v
     }
 
+    /// Current average (None before the first push).
     pub fn get(&self) -> Option<f64> {
         self.value
     }
@@ -81,16 +175,19 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(header: &[&str]) -> Table {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Render as an aligned markdown table.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -137,6 +234,36 @@ mod tests {
         assert_eq!(m.count(), 2);
         m.reset();
         assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn device_usage_balanced_cluster() {
+        let mut u = DeviceUsage::new(3);
+        u.record(&[2.0, 2.0, 2.0]);
+        u.record(&[3.0, 3.0, 3.0]);
+        assert_eq!(u.steps(), 2);
+        assert!((u.mean_utilization() - 1.0).abs() < 1e-12);
+        assert!(u.imbalance().abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_usage_straggler() {
+        let mut u = DeviceUsage::new(2);
+        u.record(&[1.0, 3.0]); // device 1 is the straggler
+        let util = u.utilization();
+        assert!((util[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((util[1] - 1.0).abs() < 1e-12);
+        // mean busy = 2, max = 3 -> imbalance 0.5
+        assert!((u.imbalance() - 0.5).abs() < 1e-12);
+        assert!((u.mean_utilization() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_usage_empty_is_zero() {
+        let u = DeviceUsage::new(4);
+        assert_eq!(u.utilization(), vec![0.0; 4]);
+        assert_eq!(u.mean_utilization(), 0.0);
+        assert_eq!(u.imbalance(), 0.0);
     }
 
     #[test]

@@ -22,10 +22,12 @@ pub struct Subnet {
 }
 
 impl Subnet {
+    /// Number of heads this subnet owns.
     pub fn n_heads(&self) -> usize {
         self.head_hi - self.head_lo
     }
 
+    /// The head indices this subnet owns.
     pub fn heads(&self) -> impl Iterator<Item = usize> {
         self.head_lo..self.head_hi
     }
@@ -37,8 +39,11 @@ impl Subnet {
 /// footnote 1); heterogeneity experiments remap via `cluster::hetero`.
 #[derive(Clone, Debug)]
 pub struct Partition {
+    /// Transformer depth (blocks).
     pub depth: usize,
+    /// Attention heads per block.
     pub heads: usize,
+    /// The schedulable subnets, in (block, head) order.
     pub subnets: Vec<Subnet>,
 }
 

@@ -21,9 +21,13 @@ use crate::util::json::Json;
 /// Top-level view of an `artifacts/` directory (reads `index.json`).
 pub struct ArtifactRegistry {
     dir: PathBuf,
+    /// Preset name the artifacts were lowered for.
     pub preset: String,
+    /// The full fine-tuning artifact set's manifest.
     pub full_manifest: Manifest,
+    /// LoRA ranks with lowered artifact sets.
     pub lora_ranks: Vec<usize>,
+    /// The rank used by default for LoRA experiments.
     pub lora_standard_rank: usize,
     lora_manifests: HashMap<usize, Manifest>,
     client: xla::PjRtClient,
@@ -75,14 +79,17 @@ impl ArtifactRegistry {
         Self::open(Path::new(&dir))
     }
 
+    /// The artifacts directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// The PJRT CPU client all executables compile against.
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
 
+    /// Manifest of the LoRA artifact set at `rank`.
     pub fn lora_manifest(&self, rank: usize) -> Result<&Manifest> {
         self.lora_manifests
             .get(&rank)

@@ -14,15 +14,25 @@ use crate::util::json::Json;
 /// Mirror of `ViTConfig` on the python side.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
+    /// Input image side length.
     pub img_size: usize,
+    /// Patch side length.
     pub patch: usize,
+    /// Embedding dimension.
     pub dim: usize,
+    /// Transformer depth (blocks).
     pub depth: usize,
+    /// Attention heads per block.
     pub heads: usize,
+    /// FFN hidden size as a multiple of `dim`.
     pub mlp_ratio: usize,
+    /// Classifier output classes.
     pub classes: usize,
+    /// LoRA rank (0 = full fine-tuning artifact set).
     pub lora_rank: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Sequence length (patches + CLS).
     pub tokens: usize,
 }
 
@@ -51,27 +61,39 @@ impl ModelConfig {
 /// One tensor in the flat parameter blob.
 #[derive(Clone, Debug)]
 pub struct ParamEntry {
+    /// Flattened parameter name (jax dict-flatten key).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Element count (product of `shape`).
     pub size: usize,
     /// Offset in *elements* (not bytes) into the blob.
     pub offset: usize,
 }
 
+/// One artifact set's manifest (model config + artifact map + params).
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Preset file-name prefix (empty for the full-FT set).
     pub prefix: String,
+    /// The model configuration the artifacts were lowered for.
     pub config: ModelConfig,
+    /// Micro-batch size baked into the trainstep HLO.
     pub micro_batch: usize,
+    /// Alternative micro-batch sizes with lowered variants (Table VI).
     pub mb_variants: Vec<usize>,
     /// artifact kind -> file name (relative to the artifacts dir).
     pub artifacts: Vec<(String, String)>,
+    /// File name of the init-parameter blob.
     pub params_bin: String,
+    /// Total f32 elements in the blob.
     pub total_elems: usize,
+    /// Parameter table in HLO entry-parameter order.
     pub params: Vec<ParamEntry>,
 }
 
 impl Manifest {
+    /// Load and validate a `manifest.json`.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {}", path.display()))?;
@@ -146,6 +168,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// File name of the artifact of `kind` (trainstep, eval, scores, ...).
     pub fn artifact(&self, kind: &str) -> Result<&str> {
         self.artifacts
             .iter()
@@ -154,6 +177,7 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("artifact kind {kind:?} not in manifest"))
     }
 
+    /// Number of parameter tensors.
     pub fn n_params(&self) -> usize {
         self.params.len()
     }

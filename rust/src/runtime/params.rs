@@ -43,18 +43,22 @@ impl ParamStore {
         }
     }
 
+    /// Number of parameter tensors.
     pub fn n_tensors(&self) -> usize {
         self.entries.len()
     }
 
+    /// Total f32 elements across all tensors.
     pub fn total_elems(&self) -> usize {
         self.flat.len()
     }
 
+    /// The parameter table, in manifest order.
     pub fn entries(&self) -> &[ParamEntry] {
         &self.entries
     }
 
+    /// Look up one tensor's entry by name.
     pub fn entry(&self, name: &str) -> Option<&ParamEntry> {
         self.entries.iter().find(|e| e.name == name)
     }

@@ -17,12 +17,15 @@ use crate::tensor::Tensor;
 
 /// Mutable training state: params + momentum in HLO parameter order.
 pub struct TrainState {
+    /// Model parameters as per-tensor literals.
     pub params: Vec<xla::Literal>,
+    /// SGD momentum buffers (same layout as `params`).
     pub momentum: Vec<xla::Literal>,
     n: usize,
 }
 
 impl TrainState {
+    /// Fresh state: the store's parameters + zero momentum.
     pub fn new(store: &ParamStore) -> Result<Self> {
         let params = store.to_literals()?;
         let momentum: Vec<xla::Literal> = store
@@ -37,6 +40,7 @@ impl TrainState {
         Ok(TrainState { params, momentum, n })
     }
 
+    /// Number of parameter tensors.
     pub fn n_tensors(&self) -> usize {
         self.n
     }
@@ -62,14 +66,18 @@ impl TrainState {
 /// Output of one trainstep execute.
 #[derive(Clone, Copy, Debug)]
 pub struct StepOut {
+    /// Mean loss over the micro-batch.
     pub loss: f32,
+    /// Correct predictions in the micro-batch.
     pub n_correct: f32,
 }
 
 /// Output of one eval execute.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalOut {
+    /// Mean loss over the micro-batch.
     pub loss: f32,
+    /// Correct predictions in the micro-batch.
     pub n_correct: f32,
 }
 
@@ -80,6 +88,7 @@ pub struct EvalOut {
 /// contribution scores (Standard, Random) never touch it.
 pub struct Session<'a> {
     registry: &'a ArtifactRegistry,
+    /// The manifest this session's executables were compiled from.
     pub manifest: &'a Manifest,
     trainstep: Rc<xla::PjRtLoadedExecutable>,
     eval: Rc<xla::PjRtLoadedExecutable>,
@@ -87,6 +96,7 @@ pub struct Session<'a> {
 }
 
 impl<'a> Session<'a> {
+    /// Compile (or fetch cached) the trainstep + eval executables.
     pub fn new(registry: &'a ArtifactRegistry, manifest: &'a Manifest) -> Result<Self> {
         Ok(Session {
             registry,

@@ -25,24 +25,33 @@ use super::Scheduler;
 use crate::cluster::cost::CostModel;
 use crate::scores::{ScoreBook, ScoreConfig};
 
+/// How the outer (p_f) and inner (p_o) selections are merged.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MergeMode {
+    /// Inner DP runs over the samples the outer level did not take —
+    /// exact per-device counts (the default; Table I's zero variance).
     Exclusive,
+    /// Algorithm 1 verbatim: both DPs see all samples; conflicts -> p_f.
     PaperMerge,
 }
 
 /// The D2FT scheduler.
 pub struct BiLevel {
+    /// Which contribution metric feeds each level.
     pub scores: ScoreConfig,
+    /// Integer cost units for the knapsack capacities.
     pub cost: CostModel,
+    /// Conflict-resolution mode (see [`MergeMode`]).
     pub merge: MergeMode,
 }
 
 impl BiLevel {
+    /// D2FT with the default exclusive merge.
     pub fn new(scores: ScoreConfig, cost: CostModel) -> Self {
         BiLevel { scores, cost, merge: MergeMode::Exclusive }
     }
 
+    /// Switch the merge mode (builder style).
     pub fn with_merge(mut self, merge: MergeMode) -> Self {
         self.merge = merge;
         self

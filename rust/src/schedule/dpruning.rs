@@ -16,12 +16,16 @@ use super::table::{Budget, Op, ScheduleTable};
 use super::Scheduler;
 use crate::scores::{Metric, ScoreBook};
 
+/// Which importance score ranks subnets for pruning.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PruneScore {
+    /// Weight magnitude ("DPruning M").
     Magnitude,
+    /// Weight magnitude x gradient magnitude ("DPruning M/G").
     MagnitudeGradient,
 }
 
+/// The dynamic-pruning baseline scheduler.
 pub struct DPruning {
     kind: PruneScore,
     /// Re-select every this many batches (paper: 16 iterations).
@@ -31,6 +35,7 @@ pub struct DPruning {
 }
 
 impl DPruning {
+    /// Weight-magnitude variant ("DPruning M").
     pub fn magnitude() -> DPruning {
         DPruning {
             kind: PruneScore::Magnitude,
@@ -40,6 +45,7 @@ impl DPruning {
         }
     }
 
+    /// Magnitude-gradient variant ("DPruning M/G").
     pub fn magnitude_gradient() -> DPruning {
         DPruning {
             kind: PruneScore::MagnitudeGradient,
@@ -49,6 +55,7 @@ impl DPruning {
         }
     }
 
+    /// Override the re-selection interval (builder style).
     pub fn with_refresh(mut self, every: usize) -> DPruning {
         assert!(every >= 1);
         self.refresh_every = every;

@@ -13,7 +13,7 @@ pub mod random_sched;
 pub mod scaler;
 pub mod table;
 
-pub use table::{Budget, MaskPair, Op, ScheduleTable};
+pub use table::{Budget, MaskPair, Op, ScheduleTable, Task};
 
 use crate::scores::ScoreBook;
 

@@ -17,6 +17,7 @@ use super::Scheduler;
 use crate::scores::{Metric, ScoreBook};
 use crate::util::rng::Rng;
 
+/// The MoE GShard gating baseline scheduler.
 pub struct MoeGshard {
     rng: Rng,
     /// Experts activated per micro-batch per block (top-k gate).
@@ -26,6 +27,7 @@ pub struct MoeGshard {
 }
 
 impl MoeGshard {
+    /// GShard gate with top-2 routing over `subnets_per_block` experts.
     pub fn new(seed: u64, subnets_per_block: usize) -> MoeGshard {
         MoeGshard { rng: Rng::new(seed), top_k: 2, subnets_per_block }
     }

@@ -8,11 +8,13 @@ use super::Scheduler;
 use crate::scores::ScoreBook;
 use crate::util::rng::Rng;
 
+/// The budget-matched random scheduling baseline.
 pub struct RandomSched {
     rng: Rng,
 }
 
 impl RandomSched {
+    /// Deterministic random scheduler from a seed.
     pub fn new(seed: u64) -> RandomSched {
         RandomSched { rng: Rng::new(seed) }
     }

@@ -17,6 +17,7 @@ use super::Scheduler;
 use crate::cluster::cost::CostModel;
 use crate::scores::{ScoreBook, ScoreConfig};
 
+/// The λ scaling policy relating forward to backward scores.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Lambda {
     /// Scale forward scores below the smallest backward score.
@@ -27,13 +28,18 @@ pub enum Lambda {
     Const(f64),
 }
 
+/// The single-level "Scaler" baseline scheduler (Table X).
 pub struct ScalerSched {
+    /// Forward-score scaling policy.
     pub lambda: Lambda,
+    /// Which contribution metric feeds each operation's value.
     pub scores: ScoreConfig,
+    /// Integer cost units for the knapsack capacity.
     pub cost: CostModel,
 }
 
 impl ScalerSched {
+    /// Scaler baseline with the given λ policy.
     pub fn new(lambda: Lambda, scores: ScoreConfig, cost: CostModel) -> ScalerSched {
         ScalerSched { lambda, scores, cost }
     }

@@ -16,6 +16,7 @@ pub enum Op {
 }
 
 impl Op {
+    /// The paper's `T_opt` numeric encoding of this operation.
     pub fn code(self) -> u8 {
         match self {
             Op::Full => 1,
@@ -32,8 +33,11 @@ impl Op {
 /// p_f slots and `n_fwd` p_o slots per device, out of `n_micro`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Budget {
+    /// Micro-batches per batch.
     pub n_micro: usize,
+    /// `p_f` (full) slots per device per batch.
     pub n_full: usize,
+    /// `p_o` (forward-only) slots per device per batch.
     pub n_fwd: usize,
     /// Per-device overrides (device heterogeneity, paper §IV-D): device
     /// k uses `per_device[k]` = (n_full, n_fwd) when present.
@@ -41,12 +45,14 @@ pub struct Budget {
 }
 
 impl Budget {
+    /// Same `(n_full, n_fwd)` budget on every device.
     pub fn uniform(n_micro: usize, n_full: usize, n_fwd: usize) -> Budget {
         assert!(n_full + n_fwd <= n_micro,
                 "budget ({n_full} p_f + {n_fwd} p_o) exceeds {n_micro} micro-batches");
         Budget { n_micro, n_full, n_fwd, per_device: Vec::new() }
     }
 
+    /// Override device `device`'s budget (heterogeneity, §IV-D).
     pub fn with_device_override(mut self, device: usize, n_full: usize, n_fwd: usize) -> Budget {
         if self.per_device.len() <= device {
             self.per_device.resize(device + 1, None);
@@ -81,12 +87,28 @@ impl Budget {
 /// on micro-batch `i`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ScheduleTable {
+    /// Number of subnets (= simulated devices) scheduled.
     pub n_subnets: usize,
+    /// Micro-batches per batch.
     pub n_micro: usize,
     ops: Vec<Op>,
 }
 
+/// One scheduled unit of work: subnet `subnet` runs `op` on micro-batch
+/// `micro`. This is the granule the [`crate::cluster::Engine`] worker
+/// queues carry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    /// Subnet (= device) index.
+    pub subnet: usize,
+    /// Micro-batch index within the batch.
+    pub micro: usize,
+    /// The operation scheduled for this cell.
+    pub op: Op,
+}
+
 impl ScheduleTable {
+    /// Table with every cell set to `op`.
     pub fn all(n_subnets: usize, n_micro: usize, op: Op) -> ScheduleTable {
         ScheduleTable { n_subnets, n_micro, ops: vec![op; n_subnets * n_micro] }
     }
@@ -96,12 +118,31 @@ impl ScheduleTable {
         Self::all(n_subnets, n_micro, Op::Full)
     }
 
+    /// Operation of subnet `subnet` on micro-batch `micro`.
     pub fn get(&self, subnet: usize, micro: usize) -> Op {
         self.ops[subnet * self.n_micro + micro]
     }
 
+    /// Assign an operation to one (subnet, micro-batch) cell.
     pub fn set(&mut self, subnet: usize, micro: usize, op: Op) {
         self.ops[subnet * self.n_micro + micro] = op;
+    }
+
+    /// Every cell as a [`Task`], row-major (all of subnet 0's
+    /// micro-batches, then subnet 1's, ...) — the flat iteration the
+    /// workload accounting walks.
+    pub fn tasks(&self) -> impl Iterator<Item = Task> + '_ {
+        (0..self.n_subnets).flat_map(move |k| {
+            (0..self.n_micro).map(move |i| Task { subnet: k, micro: i, op: self.get(k, i) })
+        })
+    }
+
+    /// One device's row as tasks, in micro-batch order — the work queue
+    /// entry the execution engine dispatches per device.
+    pub fn device_tasks(&self, subnet: usize) -> Vec<Task> {
+        (0..self.n_micro)
+            .map(|i| Task { subnet, micro: i, op: self.get(subnet, i) })
+            .collect()
     }
 
     /// Count ops of a kind for one subnet row.
@@ -141,11 +182,14 @@ impl ScheduleTable {
 /// mask inputs of the trainstep artifact.
 #[derive(Clone, Debug)]
 pub struct MaskPair {
+    /// Forward mask (`[L, H]`, 1 = the head participates in the forward).
     pub fwd: Tensor,
+    /// Backward mask (`[L, H]`, 1 = gradients flow for the head).
     pub bwd: Tensor,
 }
 
 impl MaskPair {
+    /// All-ones masks (standard fine-tuning / evaluation).
     pub fn ones(depth: usize, heads: usize) -> MaskPair {
         MaskPair {
             fwd: Tensor::full(&[depth, heads], 1.0),
@@ -221,6 +265,25 @@ mod tests {
         assert_eq!(m.fwd.at(&[1, 0]), 0.0);
         assert_eq!(m.fwd.at(&[1, 1]), 0.0);
         assert_eq!(m.fwd.at(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn task_iteration_covers_every_cell() {
+        let mut t = ScheduleTable::standard(3, 4);
+        t.set(1, 2, Op::Shortcut);
+        let all: Vec<Task> = t.tasks().collect();
+        assert_eq!(all.len(), 12);
+        assert_eq!(all[0], Task { subnet: 0, micro: 0, op: Op::Full });
+        assert_eq!(all[1 * 4 + 2], Task { subnet: 1, micro: 2, op: Op::Shortcut });
+        // device rows agree with the flat iteration
+        for k in 0..3 {
+            let row = t.device_tasks(k);
+            assert_eq!(row.len(), 4);
+            for (i, task) in row.iter().enumerate() {
+                assert_eq!(*task, all[k * 4 + i]);
+                assert_eq!(task.op, t.get(k, i));
+            }
+        }
     }
 
     #[test]

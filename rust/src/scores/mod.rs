@@ -16,13 +16,18 @@ use crate::tensor::Tensor;
 /// The four candidate metrics, in probe channel order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Metric {
+    /// Fisher information (squared gradient of the log-likelihood).
     Fisher = 0,
+    /// Gradient magnitude.
     GradMag = 1,
+    /// First-order Taylor importance.
     Taylor = 2,
+    /// Weight magnitude.
     WeightMag = 3,
 }
 
 impl Metric {
+    /// Parse a CLI metric label.
     pub fn parse(s: &str) -> anyhow::Result<Metric> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "fisher" => Metric::Fisher,
@@ -33,6 +38,7 @@ impl Metric {
         })
     }
 
+    /// The paper's display name for this metric.
     pub fn name(self) -> &'static str {
         match self {
             Metric::Fisher => "Fisher Information",
@@ -61,13 +67,16 @@ impl Default for ScoreConfig {
 /// Per-batch contribution scores: `n_subnets x n_micro` per metric.
 #[derive(Clone, Debug)]
 pub struct ScoreBook {
+    /// Number of subnets scored.
     pub n_subnets: usize,
+    /// Micro-batches per batch.
     pub n_micro: usize,
     /// `data[metric][subnet * n_micro + micro]`
     data: [Vec<f64>; 4],
 }
 
 impl ScoreBook {
+    /// All-zero book (score-free policies and tests).
     pub fn zeros(n_subnets: usize, n_micro: usize) -> ScoreBook {
         ScoreBook {
             n_subnets,
@@ -96,10 +105,12 @@ impl ScoreBook {
         book
     }
 
+    /// Score of `(subnet, micro)` under `metric`.
     pub fn get(&self, metric: Metric, subnet: usize, micro: usize) -> f64 {
         self.data[metric as usize][subnet * self.n_micro + micro]
     }
 
+    /// Set one score cell (tests and synthetic workloads).
     pub fn set(&mut self, metric: Metric, subnet: usize, micro: usize, v: f64) {
         self.data[metric as usize][subnet * self.n_micro + micro] = v;
     }

@@ -13,11 +13,13 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Tensor from a flat row-major buffer (must match the shape).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -28,35 +30,43 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Tensor filled with a constant.
     pub fn full(shape: &[usize], v: f32) -> Self {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![v; n] }
     }
 
+    /// Rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has zero elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Flat row-major view of the elements.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major view of the elements.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the flat element buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -72,10 +82,12 @@ impl Tensor {
         flat
     }
 
+    /// Element at a multi-index.
     pub fn at(&self, idx: &[usize]) -> f32 {
         self.data[self.index_of(idx)]
     }
 
+    /// Set the element at a multi-index.
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let i = self.index_of(idx);
         self.data[i] = v;

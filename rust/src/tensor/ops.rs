@@ -3,11 +3,13 @@
 use super::Tensor;
 
 impl Tensor {
+    /// Sum of all elements (f64 accumulation).
     pub fn sum(&self) -> f32 {
         // Pairwise-ish accumulation in f64 for stable metric reductions.
         self.data().iter().map(|&x| x as f64).sum::<f64>() as f32
     }
 
+    /// Mean of all elements (0 for an empty tensor).
     pub fn mean(&self) -> f32 {
         if self.is_empty() {
             return 0.0;
@@ -15,18 +17,22 @@ impl Tensor {
         self.sum() / self.len() as f32
     }
 
+    /// Sum of absolute values.
     pub fn abs_sum(&self) -> f32 {
         self.data().iter().map(|&x| (x as f64).abs()).sum::<f64>() as f32
     }
 
+    /// Sum of squares.
     pub fn sq_sum(&self) -> f32 {
         self.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() as f32
     }
 
+    /// Maximum element.
     pub fn max(&self) -> f32 {
         self.data().iter().copied().fold(f32::NEG_INFINITY, f32::max)
     }
 
+    /// Minimum element.
     pub fn min(&self) -> f32 {
         self.data().iter().copied().fold(f32::INFINITY, f32::min)
     }
@@ -46,6 +52,7 @@ impl Tensor {
         var as f32
     }
 
+    /// Index of the (first) maximum element.
     pub fn argmax(&self) -> usize {
         let mut best = 0;
         for (i, &x) in self.data().iter().enumerate() {
@@ -56,6 +63,7 @@ impl Tensor {
         best
     }
 
+    /// Multiply every element by `a` in place.
     pub fn scale(&mut self, a: f32) -> &mut Self {
         for x in self.data_mut() {
             *x *= a;
@@ -63,6 +71,7 @@ impl Tensor {
         self
     }
 
+    /// Elementwise add `other` in place (shapes must match).
     pub fn add_assign(&mut self, other: &Tensor) -> &mut Self {
         assert_eq!(self.shape(), other.shape());
         let other_data: &[f32] = other.data();

@@ -12,6 +12,7 @@
 
 use std::time::{Duration, Instant};
 
+/// Adaptive wall-clock timing harness for one benchmark case.
 pub struct Bench {
     name: String,
     samples: Vec<Duration>,
@@ -27,6 +28,7 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 impl Bench {
+    /// Named bench case with default budget (2 s / 10k iters).
     pub fn new(name: &str) -> Self {
         Bench {
             name: name.to_string(),
@@ -42,6 +44,7 @@ impl Bench {
         self
     }
 
+    /// Cap the number of measured iterations.
     pub fn max_iters(mut self, n: usize) -> Self {
         self.max_iters = n;
         self
@@ -66,6 +69,7 @@ impl Bench {
         self
     }
 
+    /// Statistics over the collected samples (panics if none).
     pub fn stats(&self) -> Stats {
         assert!(!self.samples.is_empty(), "no samples for {}", self.name);
         let mut sorted = self.samples.clone();
@@ -97,16 +101,24 @@ impl Bench {
     }
 }
 
+/// Wall-clock statistics of one bench case.
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean duration.
     pub mean: Duration,
+    /// Median duration.
     pub p50: Duration,
+    /// 95th-percentile duration.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
+/// Human-readable duration (ns/us/ms/s auto-scaled).
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {

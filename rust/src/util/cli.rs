@@ -31,6 +31,7 @@ pub struct Args {
 }
 
 impl Cli {
+    /// Parser for `program` with a one-line description.
     pub fn new(program: &'static str, about: &'static str) -> Self {
         Cli { program, about, flags: Vec::new(), positional: Vec::new() }
     }
@@ -64,6 +65,7 @@ impl Cli {
         self
     }
 
+    /// Render the generated `--help` text.
     pub fn usage(&self) -> String {
         let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
         for (p, _) in &self.positional {
@@ -146,30 +148,37 @@ impl Cli {
 }
 
 impl Args {
+    /// Raw string value of a flag ("" if undeclared).
     pub fn get(&self, name: &str) -> &str {
         self.values.get(name).map(|s| s.as_str()).unwrap_or("")
     }
 
+    /// Flag value parsed as `usize`.
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         Ok(self.get(name).parse()?)
     }
 
+    /// Flag value parsed as `u64`.
     pub fn get_u64(&self, name: &str) -> Result<u64> {
         Ok(self.get(name).parse()?)
     }
 
+    /// Flag value parsed as `f64`.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         Ok(self.get(name).parse()?)
     }
 
+    /// Flag value parsed as `f32`.
     pub fn get_f32(&self, name: &str) -> Result<f32> {
         Ok(self.get(name).parse()?)
     }
 
+    /// Boolean switch value (false if absent).
     pub fn get_bool(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
     }
 
+    /// The `i`-th positional argument, if given.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.positional.get(i).map(|s| s.as_str())
     }

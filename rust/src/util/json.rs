@@ -13,15 +13,22 @@ use anyhow::{anyhow, bail, Context, Result};
 /// deterministic (stable experiment reports).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys -> deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -35,6 +42,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Required object member.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Optional object member.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -49,6 +58,7 @@ impl Json {
         }
     }
 
+    /// This value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -56,6 +66,7 @@ impl Json {
         }
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -63,6 +74,7 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative exact integer.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 || n > u64::MAX as f64 {
@@ -71,6 +83,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -78,6 +91,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -85,22 +99,26 @@ impl Json {
         }
     }
 
+    /// String member `key` of this object.
     pub fn str_at(&self, key: &str) -> Result<String> {
         Ok(self.get(key).with_context(|| key.to_string())?.as_str()?.to_string())
     }
 
+    /// Integer member `key` of this object.
     pub fn usize_at(&self, key: &str) -> Result<usize> {
         self.get(key).with_context(|| key.to_string())?.as_usize()
     }
 
     // ---- writer ----------------------------------------------------------
 
+    /// Serialize with indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
         out
     }
 
+    /// Serialize on one line.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);
@@ -187,14 +205,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number literal.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String literal.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Array literal.
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

@@ -7,11 +7,16 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Log severity (ascending).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Verbose diagnostics.
     Debug = 0,
+    /// Normal progress output (default).
     Info = 1,
+    /// Unexpected but non-fatal conditions.
     Warn = 2,
+    /// Failures.
     Error = 3,
 }
 
@@ -30,14 +35,17 @@ pub fn init() {
     set_level(lvl);
 }
 
+/// Set the process-global level.
 pub fn set_level(lvl: Level) {
     LEVEL.store(lvl as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `lvl` are currently emitted.
 pub fn enabled(lvl: Level) -> bool {
     lvl as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one message (used by the `debug!`/`info!`/`warn_!` macros).
 pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(lvl) {
         return;
@@ -52,14 +60,17 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     eprintln!("[{t:9.3}s {tag}] {args}");
 }
 
+/// Log at [`Level::Debug`].
 #[macro_export]
 macro_rules! debug {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
 }
+/// Log at [`Level::Info`].
 #[macro_export]
 macro_rules! info {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
 }
+/// Log at [`Level::Warn`] (named `warn_!` to avoid the built-in lint name).
 #[macro_export]
 macro_rules! warn_ {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };

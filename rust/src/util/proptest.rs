@@ -14,19 +14,23 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Uniform integer in `[lo, hi]` (inclusive).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo <= hi);
         lo + self.rng.next_below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Uniform f32 in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.rng.next_f32() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -36,10 +40,12 @@ impl Gen {
         (0..len).map(|_| f(self)).collect()
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize_in(0, xs.len() - 1)]
     }
 
+    /// The underlying RNG, for custom draws.
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }

@@ -1,0 +1,137 @@
+//! Execution-engine determinism tests + scheduler-label round-trip.
+//!
+//! These run without any AOT artifacts: the synthetic workload drives the
+//! real bi-level scheduler and the real engine, just not the PJRT
+//! numerics. The headline property: at a fixed seed, parallel execution
+//! produces **bitwise-identical** losses and metrics to the serial
+//! reference path (`--serial`), so turning the engine on can never change
+//! an experiment's result.
+
+use d2ft::cluster::{run_synthetic, ExecMode, SyntheticReport, SyntheticRunConfig};
+use d2ft::coordinator::SchedulerKind;
+use d2ft::schedule::scaler::Lambda;
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every deterministic field of the report, bit-exact.
+fn deterministic_fields(r: &SyntheticReport) -> (Vec<u64>, u64, Vec<u64>) {
+    (
+        bits(&r.loss_curve),
+        r.checksum,
+        bits(&[
+            r.compute_fraction,
+            r.workload_variance,
+            r.mean_makespan_ms,
+            r.mean_device_ms,
+            r.mean_utilization,
+            r.imbalance,
+            r.comm_saved_ms,
+        ]),
+    )
+}
+
+#[test]
+fn parallel_matches_serial_bitwise_at_fixed_seed() {
+    for k in [3usize, 8, 13] {
+        let mut serial_cfg = SyntheticRunConfig::quick(k, ExecMode::Serial);
+        serial_cfg.engine.time_scale = 0.0; // accounting only: keep it fast
+        serial_cfg.batches = 12;
+        let mut per_device_cfg = serial_cfg;
+        per_device_cfg.engine.mode = ExecMode::Parallel { workers: 0 };
+        let mut pool_cfg = serial_cfg;
+        pool_cfg.engine.mode = ExecMode::Parallel { workers: 3 };
+
+        let serial = run_synthetic(&serial_cfg);
+        let per_device = run_synthetic(&per_device_cfg);
+        let pool = run_synthetic(&pool_cfg);
+        assert_eq!(
+            deterministic_fields(&serial),
+            deterministic_fields(&per_device),
+            "one worker per device must match serial bitwise (K={k})"
+        );
+        assert_eq!(
+            deterministic_fields(&serial),
+            deterministic_fields(&pool),
+            "fixed worker pool must match serial bitwise (K={k})"
+        );
+    }
+}
+
+#[test]
+fn different_seeds_produce_different_runs() {
+    let mut a_cfg = SyntheticRunConfig::quick(4, ExecMode::Serial);
+    a_cfg.engine.time_scale = 0.0;
+    a_cfg.batches = 6;
+    let mut b_cfg = a_cfg;
+    b_cfg.seed = 18;
+    b_cfg.engine.seed = 18;
+    let a = run_synthetic(&a_cfg);
+    let b = run_synthetic(&b_cfg);
+    assert_ne!(a.checksum, b.checksum);
+    assert_ne!(bits(&a.loss_curve), bits(&b.loss_curve));
+}
+
+#[test]
+fn balanced_budget_reports_balanced_cluster() {
+    // D2FT's exclusive merge emits exact per-device counts, so the
+    // engine must observe a perfectly balanced cluster.
+    let mut cfg = SyntheticRunConfig::quick(8, ExecMode::Parallel { workers: 0 });
+    cfg.engine.time_scale = 0.0;
+    cfg.batches = 8;
+    let r = run_synthetic(&cfg);
+    assert_eq!(r.workload_variance, 0.0);
+    assert!(r.imbalance.abs() < 1e-9, "imbalance {}", r.imbalance);
+    assert!((r.mean_utilization - 1.0).abs() < 1e-9);
+    // Comm overlap hides transfers behind compute.
+    assert!(r.comm_saved_ms > 0.0);
+}
+
+#[test]
+fn parallel_is_faster_than_serial_with_real_work_at_k8() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 4 {
+        eprintln!("skipping speedup assertion: only {cores} core(s)");
+        return;
+    }
+    // Full simulation: every device spins for its modeled time, so the
+    // serial path costs ~K times the parallel makespan.
+    let mut cfg = SyntheticRunConfig::quick(8, ExecMode::Serial);
+    cfg.batches = 8;
+    let serial = run_synthetic(&cfg);
+    cfg.engine.mode = ExecMode::Parallel { workers: 0 };
+    let parallel = run_synthetic(&cfg);
+    assert!(
+        parallel.wall_s < serial.wall_s,
+        "parallel {:.4}s not faster than serial {:.4}s",
+        parallel.wall_s,
+        serial.wall_s
+    );
+}
+
+#[test]
+fn scheduler_kind_parse_round_trips_every_label() {
+    let cases: &[(&str, SchedulerKind)] = &[
+        ("d2ft", SchedulerKind::D2ft),
+        ("D2FT", SchedulerKind::D2ft), // parsing is case-insensitive
+        ("d2ft-paper-merge", SchedulerKind::D2ftPaperMerge),
+        ("standard", SchedulerKind::Standard),
+        ("random", SchedulerKind::Random),
+        ("dpruning-m", SchedulerKind::DPruningM),
+        ("dpruning-mg", SchedulerKind::DPruningMG),
+        ("moe", SchedulerKind::MoeGshard),
+        ("moe-gshard", SchedulerKind::MoeGshard),
+        ("scaler-max", SchedulerKind::Scaler(Lambda::Max)),
+        ("scaler-min", SchedulerKind::Scaler(Lambda::Min)),
+        ("scaler-0.1", SchedulerKind::Scaler(Lambda::Const(0.1))),
+        ("scaler-0.2", SchedulerKind::Scaler(Lambda::Const(0.2))),
+    ];
+    for (label, want) in cases {
+        let got = SchedulerKind::parse(label).unwrap();
+        assert_eq!(got, *want, "label {label:?}");
+    }
+    assert!(SchedulerKind::parse("").is_err());
+    assert!(SchedulerKind::parse("bogus").is_err());
+    assert!(SchedulerKind::parse("scaler-2").is_err());
+}
