@@ -1,26 +1,32 @@
 //! Heterogeneous-cluster scenario (paper §IV-D, Tables VII & VIII):
 //! D2FT on a mix of large/small-memory devices and fast/slow devices.
 //!
-//!     make artifacts && cargo run --release --example heterogeneity
+//!     cargo run --release --example heterogeneity
+//!     cargo run --release --example heterogeneity -- --backend xla  # needs artifacts
 
+use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::cluster::{ExecTimeModel, HeteroSpec};
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
 use d2ft::metrics::pct;
-use d2ft::runtime::ArtifactRegistry;
 use d2ft::schedule::Budget;
 use d2ft::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     d2ft::util::log::init();
     let args = Cli::new("heterogeneity", "D2FT on heterogeneous devices")
+        .flag("backend", "native", "native | xla")
+        .flag("artifacts", "artifacts", "artifacts dir (xla backend only)")
         .flag("batches", "20", "fine-tuning batches")
-        .flag("large-memory", "9", "devices hosting 2 heads + 1/3 FFN")
-        .flag("high-speed", "9", "devices running 3pf+1po instead of 2pf+2po")
+        .flag("large-memory", "5", "devices hosting 2 heads + a merged FFN share")
+        .flag("high-speed", "5", "devices running 3pf+1po instead of 2pf+2po")
         .parse()?;
 
-    let registry = ArtifactRegistry::open_default()?;
-    let manifest = &registry.full_manifest;
+    let provider = provider_for(
+        BackendKind::parse(args.get("backend"))?,
+        std::path::Path::new(args.get("artifacts")),
+    )?;
+    let mc = provider.model_config().clone();
     let batches = args.get_usize("batches")?;
     let base = TrainerConfig {
         batches,
@@ -34,13 +40,13 @@ fn main() -> anyhow::Result<()> {
     // Memory heterogeneity: merged 2-head subnets.
     let n_large = args.get_usize("large-memory")?;
     let mem_spec = HeteroSpec::memory(n_large);
-    let part = mem_spec.partition(&manifest.config);
+    let part = mem_spec.partition(&mc);
     println!(
         "memory heterogeneity: {n_large} large devices -> {} devices total (vs {})",
         part.n_subnets() + 2,
-        manifest.config.body_subnets() + 2
+        mc.body_subnets() + 2
     );
-    let mut trainer = Trainer::new(&registry, manifest, TrainerConfig {
+    let mut trainer = Trainer::new(provider.as_ref(), TrainerConfig {
         hetero: Some(mem_spec),
         ..base.clone()
     })?;
@@ -56,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     let n_fast = args.get_usize("high-speed")?;
     let cpu_spec = HeteroSpec::compute(n_fast);
     println!("compute heterogeneity: {n_fast} high-speed devices (3pf+1po), rest slow (2pf+2po)");
-    let mut trainer = Trainer::new(&registry, manifest, TrainerConfig {
+    let mut trainer = Trainer::new(provider.as_ref(), TrainerConfig {
         hetero: Some(cpu_spec.clone()),
         ..base.clone()
     })?;
@@ -81,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Homogeneous reference.
-    let mut trainer = Trainer::new(&registry, manifest, base)?;
+    let mut trainer = Trainer::new(provider.as_ref(), base)?;
     let r0 = trainer.run()?;
     println!("homogeneous reference: top-1 {}", pct(r0.test_top1));
     println!(

@@ -2,36 +2,44 @@
 //! per-head LoRA adapters on Q/K/V, scheduling the adapter branches with
 //! the same bi-level knapsack.
 //!
-//!     make artifacts && cargo run --release --example lora_finetune
+//!     cargo run --release --example lora_finetune
+//!     cargo run --release --example lora_finetune -- --backend xla  # needs artifacts
+//!
+//! Flags: --backend native|xla --rank N --batches N --budget-full K --budget-fwd K
 
+use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
 use d2ft::metrics::pct;
-use d2ft::runtime::ArtifactRegistry;
 use d2ft::schedule::Budget;
 use d2ft::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     d2ft::util::log::init();
     let args = Cli::new("lora_finetune", "D2FT-LoRA fine-tuning")
+        .flag("backend", "native", "native | xla")
+        .flag("artifacts", "artifacts", "artifacts dir (xla backend only)")
         .flag("batches", "30", "fine-tuning batches")
-        .flag("rank", "0", "LoRA rank (0 = artifact standard rank)")
+        .flag("rank", "0", "LoRA rank (0 = the backend's standard rank)")
         .flag("budget-full", "3", "p_f micro-batches per device")
         .flag("budget-fwd", "0", "p_o micro-batches per device")
         .parse()?;
 
-    let registry = ArtifactRegistry::open_default()?;
-    anyhow::ensure!(!registry.lora_ranks.is_empty(), "artifacts built with --skip-lora");
+    let provider = provider_for(
+        BackendKind::parse(args.get("backend"))?,
+        std::path::Path::new(args.get("artifacts")),
+    )?;
+    anyhow::ensure!(!provider.lora_ranks().is_empty(), "backend advertises no LoRA ranks");
     let rank = match args.get_usize("rank")? {
-        0 => registry.lora_standard_rank,
+        0 => provider.lora_standard_rank(),
         r => r,
     };
-    let manifest = registry.lora_manifest(rank)?;
+    let mc = provider.model_config();
     println!(
-        "LoRA rank {rank}: {} tensors ({} trainable adapters per block: A/B x Q/K/V x {} heads)",
-        manifest.n_params(),
-        6,
-        manifest.config.heads
+        "LoRA rank {rank} on the {} backend: A/B x Q/K/V adapters x {} heads x {} blocks",
+        provider.label(),
+        mc.heads,
+        mc.depth
     );
 
     let budget = Budget::uniform(5, args.get_usize("budget-full")?, args.get_usize("budget-fwd")?);
@@ -39,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         batches: args.get_usize("batches")?,
         lr: 0.05,
         eval_every: 10,
+        lora_rank: rank,
         ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
     };
     println!(
@@ -46,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         pct(budget.compute_fraction(0.4)),
         pct(budget.comm_fraction())
     );
-    let mut trainer = Trainer::new(&registry, manifest, cfg.clone())?;
+    let mut trainer = Trainer::new(provider.as_ref(), cfg.clone())?;
     let r = trainer.run()?;
     println!(
         "D2FT-LoRA:     top-1 {} | train loss {:.4} | workload var {:.3}",
@@ -60,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 0,
         ..cfg
     };
-    let mut trainer = Trainer::new(&registry, manifest, std_cfg)?;
+    let mut trainer = Trainer::new(provider.as_ref(), std_cfg)?;
     let rs = trainer.run()?;
     println!("Standard LoRA: top-1 {} | train loss {:.4}", pct(rs.test_top1), rs.final_train_loss);
     println!(

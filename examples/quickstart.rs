@@ -1,50 +1,51 @@
-//! Quickstart: load the AOT artifacts, schedule one batch with D2FT, and
-//! run it through the fused trainstep — the whole three-layer stack in
-//! ~60 lines.
+//! Quickstart: open a compute backend, schedule one batch with D2FT, and
+//! run it through the fused trainstep — the whole stack in ~60 lines,
+//! with zero setup on the default native backend.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- --backend xla   # needs artifacts
+//!
+//! Flags: --backend native|xla --artifacts <dir>
 
+use d2ft::backend::{provider_for, Backend, BackendKind, BackendProvider, BackendSel};
 use d2ft::cluster::CostModel;
 use d2ft::data::{Batcher, DatasetSpec, SyntheticKind};
 use d2ft::partition::Partition;
-use d2ft::runtime::{ArtifactRegistry, ParamStore, Session, TrainState};
 use d2ft::schedule::bilevel::BiLevel;
 use d2ft::schedule::{Budget, Op, Scheduler};
 use d2ft::scores::{ScoreBook, ScoreConfig};
+use d2ft::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     d2ft::util::log::init();
-    // L2/L1 artifacts: HLO text lowered once by python/compile/aot.py.
-    let registry = ArtifactRegistry::open_default()?;
-    let manifest = &registry.full_manifest;
-    let mc = &manifest.config;
+    let args = Cli::new("quickstart", "D2FT quickstart (one scheduled batch)")
+        .flag("backend", "native", "native | xla")
+        .flag("artifacts", "artifacts", "artifacts dir (xla backend only)")
+        .parse()?;
+    let provider = provider_for(
+        BackendKind::parse(args.get("backend"))?,
+        std::path::Path::new(args.get("artifacts")),
+    )?;
+    let mut backend = provider.open(&BackendSel::full(7))?;
+    let mc = backend.config().clone();
     println!(
-        "model: ViT dim {} / {} blocks / {} heads -> {} schedulable subnets",
-        mc.dim, mc.depth, mc.heads, mc.body_subnets()
+        "backend {}: ViT dim {} / {} blocks / {} heads -> {} schedulable subnets",
+        backend.label(), mc.dim, mc.depth, mc.heads, mc.body_subnets()
     );
 
-    // Runtime state: init params + zero momentum, as PJRT literals.
-    let session = Session::new(&registry, manifest)?;
-    let store = ParamStore::load(manifest, registry.dir())?;
-    let mut state = TrainState::new(&store)?;
-
     // One batch of 5 micro-batches from the CIFAR-100-like dataset.
-    let data = DatasetSpec::preset(
-        SyntheticKind::Cifar100Like,
-        mc.img_size,
-        5 * manifest.micro_batch,
-        7,
-    )
-    .generate("train");
-    let mut batcher = Batcher::new(&data, manifest.micro_batch, 5, 1);
+    let mb = backend.micro_batch();
+    let data = DatasetSpec::preset(SyntheticKind::Cifar100Like, mc.img_size, 5 * mb, 7)
+        .generate("train");
+    let mut batcher = Batcher::new(&data, mb, 5, 1);
     let micros = batcher.next_batch().unwrap();
 
     // Contribution scores for this batch (fisher / gradmag / taylor /
-    // weightmag per subnet), via the score-probe artifact.
-    let part = Partition::per_head(mc);
+    // weightmag per subnet), via the backend's score probe.
+    let part = Partition::per_head(&mc);
     let mut probes = Vec::new();
     for (x, y) in &micros {
-        probes.push(session.probe_scores(&state, &session.x_literal(x)?, &session.y_literal(y)?)?);
+        probes.push(backend.score_probe(x, y)?);
     }
     let book = ScoreBook::from_probes(&part, &probes);
 
@@ -64,13 +65,7 @@ fn main() -> anyhow::Result<()> {
     // the schedule. Python is nowhere in this loop.
     for (i, (x, y)) in micros.iter().enumerate() {
         let masks = table.masks_for_micro(&part, i);
-        let out = session.step(
-            &mut state,
-            &session.x_literal(x)?,
-            &session.y_literal(y)?,
-            &masks,
-            0.03,
-        )?;
+        let out = backend.step(x, y, &masks, 0.03)?;
         println!("micro-batch {i}: loss {:.4}", out.loss);
     }
     println!("quickstart OK");

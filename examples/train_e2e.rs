@@ -3,22 +3,26 @@
 //! compute budget for a few hundred steps, logging the loss curve and
 //! periodic test top-1, then compare against standard fine-tuning.
 //!
-//!     make artifacts && cargo run --release --example train_e2e
+//!     cargo run --release --example train_e2e
+//!     cargo run --release --example train_e2e -- --backend xla  # needs artifacts
 //!
-//! Flags: --batches N --dataset c10|c100|cars --budget-full K --budget-fwd K
+//! Flags: --backend native|xla --batches N --dataset c10|c100|cars
+//!        --budget-full K --budget-fwd K
 //! The recorded run lives in EXPERIMENTS.md §End-to-end.
 
+use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::cluster::ExecMode;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
 use d2ft::metrics::pct;
-use d2ft::runtime::ArtifactRegistry;
 use d2ft::schedule::Budget;
 use d2ft::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     d2ft::util::log::init();
     let args = Cli::new("train_e2e", "D2FT end-to-end training driver")
+        .flag("backend", "native", "native | xla")
+        .flag("artifacts", "artifacts", "artifacts dir (xla backend only)")
         .flag("batches", "60", "fine-tuning batches (x5 micro-steps each)")
         .flag("pretrain-batches", "15", "synthetic pre-training batches")
         .flag("dataset", "c100", "c10 | c100 | cars")
@@ -30,8 +34,10 @@ fn main() -> anyhow::Result<()> {
         .switch("skip-standard", "skip the standard-FT comparison run")
         .parse()?;
 
-    let registry = ArtifactRegistry::open_default()?;
-    let manifest = &registry.full_manifest;
+    let provider = provider_for(
+        BackendKind::parse(args.get("backend"))?,
+        std::path::Path::new(args.get("artifacts")),
+    )?;
     let budget = Budget::uniform(5, args.get_usize("budget-full")?, args.get_usize("budget-fwd")?);
     let base = TrainerConfig {
         dataset: SyntheticKind::parse(args.get("dataset"))?,
@@ -49,11 +55,12 @@ fn main() -> anyhow::Result<()> {
         seed: args.get_u64("seed")?,
         pretrain_batches: args.get_usize("pretrain-batches")?,
         eval_every: 10,
+        lora_rank: 0,
     };
 
-    println!("== D2FT @ compute {} / comm {} ==",
-             pct(budget.compute_fraction(0.4)), pct(budget.comm_fraction()));
-    let mut trainer = Trainer::new(&registry, manifest, base.clone())?;
+    println!("== D2FT ({}) @ compute {} / comm {} ==",
+             provider.label(), pct(budget.compute_fraction(0.4)), pct(budget.comm_fraction()));
+    let mut trainer = Trainer::new(provider.as_ref(), base.clone())?;
     let r = trainer.run()?;
 
     println!("\nloss curve (per micro-step, EMA-smoothed):");
@@ -82,7 +89,7 @@ fn main() -> anyhow::Result<()> {
             eval_every: 0,
             ..base
         };
-        let mut trainer = Trainer::new(&registry, manifest, std_cfg)?;
+        let mut trainer = Trainer::new(provider.as_ref(), std_cfg)?;
         let rs = trainer.run()?;
         println!("Standard final: top-1 {} | train loss {:.4} | {:.0}s",
                  pct(rs.test_top1), rs.final_train_loss, rs.wall_s);

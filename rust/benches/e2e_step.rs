@@ -1,20 +1,27 @@
-//! Bench: the end-to-end hot path — one fused trainstep execute (fwd +
+//! Bench: the XLA-backend hot path — one fused trainstep execute (fwd +
 //! bwd + SGD under masks), the score probe, the eval pass, and the full
 //! coordinator batch (schedule + 5 steps + accounting).
 //!
-//! This is the profile the §Perf pass iterates on; requires artifacts.
+//! Requires the `xla` feature + artifacts; without the feature it
+//! prints a note and exits (the artifact-free analogue is
+//! `benches/native_step.rs`).
 
-use d2ft::cluster::CostModel;
-use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
-use d2ft::data::{Batcher, DatasetSpec, SyntheticKind};
-use d2ft::partition::Partition;
-use d2ft::runtime::{ArtifactRegistry, Session};
-use d2ft::schedule::bilevel::BiLevel;
-use d2ft::schedule::{Budget, MaskPair, Scheduler};
-use d2ft::scores::{ScoreBook, ScoreConfig};
-use d2ft::tensor::Tensor;
-
+#[cfg(not(feature = "xla"))]
 fn main() {
+    eprintln!("e2e_step bench requires --features xla; see benches/native_step.rs for the native path");
+}
+
+#[cfg(feature = "xla")]
+fn main() {
+    use d2ft::cluster::CostModel;
+    use d2ft::data::{Batcher, DatasetSpec, SyntheticKind};
+    use d2ft::partition::Partition;
+    use d2ft::runtime::{ArtifactRegistry, ParamStore, Session, TrainState};
+    use d2ft::schedule::bilevel::BiLevel;
+    use d2ft::schedule::{Budget, MaskPair, Scheduler};
+    use d2ft::scores::{ScoreBook, ScoreConfig};
+    use d2ft::tensor::Tensor;
+
     let registry = match ArtifactRegistry::open_default() {
         Ok(r) => r,
         Err(e) => {
@@ -25,14 +32,9 @@ fn main() {
     let manifest = &registry.full_manifest;
     let mc = manifest.config.clone();
     let mb = manifest.micro_batch;
-    let cfg = TrainerConfig::quick(
-        SyntheticKind::Cifar100Like,
-        SchedulerKind::D2ft,
-        Budget::uniform(5, 3, 1),
-    );
-    let trainer = Trainer::new(&registry, manifest, cfg).unwrap();
-    let mut state = trainer.init_state().unwrap();
     let session = Session::new(&registry, manifest).unwrap();
+    let store = ParamStore::load(manifest, registry.dir()).unwrap();
+    let mut state = TrainState::new(&store).unwrap();
     let part = Partition::per_head(&mc);
 
     let data =

@@ -1,0 +1,117 @@
+//! Bench: the native backend's fused step (fwd + bwd + SGD-momentum)
+//! across micro-batch sizes and LoRA ranks, plus the eval forward and
+//! the score probe. Artifact-free; writes `BENCH_native_step.json`.
+//!
+//!     cargo bench --bench native_step
+
+#[cfg(not(feature = "native"))]
+fn main() {
+    eprintln!("native_step bench requires the default `native` feature");
+}
+
+#[cfg(feature = "native")]
+use d2ft::backend::native::{NativeBackend, NativeSpec};
+#[cfg(feature = "native")]
+use d2ft::backend::Backend;
+#[cfg(feature = "native")]
+use d2ft::data::{DatasetSpec, SyntheticKind};
+#[cfg(feature = "native")]
+use d2ft::schedule::MaskPair;
+#[cfg(feature = "native")]
+use d2ft::util::json::{arr, num, obj, s};
+
+#[cfg(feature = "native")]
+const REPS: usize = 7;
+#[cfg(feature = "native")]
+const STEPS_PER_REP: usize = 5;
+
+/// Best-of-REPS mean ms per call of `f` over STEPS_PER_REP calls.
+#[cfg(feature = "native")]
+fn time_ms(mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = std::time::Instant::now();
+        for _ in 0..STEPS_PER_REP {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3 / STEPS_PER_REP as f64);
+    }
+    best
+}
+
+#[cfg(feature = "native")]
+fn main() {
+    let spec = NativeSpec::tiny();
+    let mc = spec.config.clone();
+    let masks = MaskPair::ones(mc.depth, mc.heads);
+    println!(
+        "native_step: ViT d{} x{}L x{}H, best of {REPS} x {STEPS_PER_REP} steps",
+        mc.dim, mc.depth, mc.heads
+    );
+
+    let mut entries = Vec::new();
+    // Micro-batch sweep at rank 0 (full fine-tuning), then the LoRA
+    // ranks at the default micro-batch.
+    let mut settings: Vec<(usize, usize)> = Vec::new();
+    let mut mbs = spec.mb_variants.clone();
+    mbs.push(spec.micro_batch);
+    mbs.sort_unstable();
+    for &mb in &mbs {
+        settings.push((mb, 0));
+    }
+    for &rank in &spec.lora_ranks {
+        settings.push((spec.micro_batch, rank));
+    }
+
+    for (mb, rank) in settings {
+        let data = DatasetSpec::preset(SyntheticKind::Cifar100Like, mc.img_size, mb, 7)
+            .generate("train");
+        let (x, y) = data.gather(&(0..mb).collect::<Vec<_>>());
+        let mut be = NativeBackend::new(&spec, rank, mb, 11);
+        // warmup
+        be.step(&x, &y, &masks, 0.01).unwrap();
+        let step_ms = time_ms(|| {
+            be.step(&x, &y, &masks, 0.01).unwrap();
+        });
+        let eval_ms = time_ms(|| {
+            be.eval(&x, &y, None).unwrap();
+        });
+        let probe_ms = time_ms(|| {
+            be.score_probe(&x, &y).unwrap();
+        });
+        println!(
+            "bench native mb={mb:<2} rank={rank:<2} step {step_ms:>8.3}ms  \
+             eval {eval_ms:>8.3}ms  probe {probe_ms:>8.3}ms  \
+             (eval/step {:.2})",
+            eval_ms / step_ms
+        );
+        entries.push(obj(vec![
+            ("micro_batch", num(mb as f64)),
+            ("lora_rank", num(rank as f64)),
+            ("step_ms", num(step_ms)),
+            ("eval_ms", num(eval_ms)),
+            ("probe_ms", num(probe_ms)),
+            ("eval_over_step", num(eval_ms / step_ms)),
+        ]));
+    }
+
+    let report = obj(vec![
+        ("bench", s("native_step")),
+        ("reps", num(REPS as f64)),
+        ("steps_per_rep", num(STEPS_PER_REP as f64)),
+        (
+            "model",
+            obj(vec![
+                ("dim", num(mc.dim as f64)),
+                ("depth", num(mc.depth as f64)),
+                ("heads", num(mc.heads as f64)),
+                ("tokens", num(mc.tokens as f64)),
+                ("classes", num(mc.classes as f64)),
+            ]),
+        ),
+        ("results", arr(entries)),
+    ]);
+    let path = "BENCH_native_step.json";
+    std::fs::write(path, report.to_string_pretty()).expect("writing bench report");
+    println!("wrote {path}");
+}

@@ -1,14 +1,20 @@
 //! Bench: paper Table IV — real PJRT execution time of the fused p_f
 //! trainstep vs the p_o forward pass for 1..5 micro-batches on this
-//! host. Requires `make artifacts`.
+//! host. Requires the `xla` feature + `make artifacts`; the
+//! backend-agnostic runner is `repro experiment table4`.
 
-use d2ft::cluster::ExecTimeModel;
-use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
-use d2ft::data::{DatasetSpec, SyntheticKind};
-use d2ft::runtime::{ArtifactRegistry, Session};
-use d2ft::schedule::{Budget, MaskPair, Op};
-
+#[cfg(not(feature = "xla"))]
 fn main() {
+    eprintln!("table4 bench requires --features xla; run `repro experiment table4` for the native path");
+}
+
+#[cfg(feature = "xla")]
+fn main() {
+    use d2ft::cluster::ExecTimeModel;
+    use d2ft::data::{DatasetSpec, SyntheticKind};
+    use d2ft::runtime::{ArtifactRegistry, ParamStore, Session, TrainState};
+    use d2ft::schedule::{MaskPair, Op};
+
     let registry = match ArtifactRegistry::open_default() {
         Ok(r) => r,
         Err(e) => {
@@ -17,14 +23,9 @@ fn main() {
         }
     };
     let manifest = &registry.full_manifest;
-    let cfg = TrainerConfig::quick(
-        SyntheticKind::Cifar100Like,
-        SchedulerKind::Standard,
-        Budget::uniform(5, 5, 0),
-    );
-    let trainer = Trainer::new(&registry, manifest, cfg).unwrap();
-    let mut state = trainer.init_state().unwrap();
     let session = Session::new(&registry, manifest).unwrap();
+    let store = ParamStore::load(manifest, registry.dir()).unwrap();
+    let mut state = TrainState::new(&store).unwrap();
     let mc = &manifest.config;
     let mb = manifest.micro_batch;
     let d = DatasetSpec::preset(SyntheticKind::Cifar100Like, mc.img_size, mb, 5).generate("train");

@@ -1,0 +1,239 @@
+//! Pluggable compute backends: the trait boundary between the training
+//! coordinator and whatever actually executes the masked ViT numerics.
+//!
+//! The coordinator, schedulers, cluster simulation, and experiment
+//! harness only ever talk to [`Backend`] — three hot entry points
+//! ([`Backend::step`], [`Backend::eval`], [`Backend::score_probe`]) plus
+//! a little metadata. Two implementations ship:
+//!
+//! * [`native`] — a pure-Rust masked mini-ViT forward/backward on
+//!   [`crate::tensor::Tensor`] (default feature `native`). Zero native
+//!   dependencies, zero artifacts: every scheduler/engine scenario runs
+//!   anywhere `cargo build` works.
+//! * `xla` — the original PJRT path (AOT-lowered HLO artifacts executed
+//!   through the `xla` crate), behind the optional `xla` cargo feature.
+//!
+//! ## Mask semantics (shared contract)
+//!
+//! Both backends honor [`MaskPair`] identically, per (block, head):
+//!
+//! | fwd | bwd | op  | forward                     | parameters        |
+//! |-----|-----|-----|-----------------------------|-------------------|
+//! | 1   | 1   | p_f | head participates           | updated           |
+//! | 1   | 0   | p_o | head participates           | frozen            |
+//! | 0   | 0   | p_s | identity (residual carries) | frozen (no grads) |
+//!
+//! A skipped (p_s) subnet contributes *exactly* the residual identity:
+//! masking every head of a block makes the block a no-op, bitwise.
+
+#[cfg(feature = "native")]
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+use std::path::Path;
+
+use crate::runtime::ModelConfig;
+use crate::schedule::MaskPair;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Output of one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    /// Mean loss over the micro-batch.
+    pub loss: f32,
+    /// Correct predictions in the micro-batch.
+    pub n_correct: f32,
+}
+
+/// Output of one forward-only evaluation pass.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    /// Mean loss over the micro-batch.
+    pub loss: f32,
+    /// Correct predictions in the micro-batch.
+    pub n_correct: f32,
+}
+
+/// One compute backend instance: owns the model parameters + optimizer
+/// state and executes the three hot entry points the trainer needs.
+pub trait Backend {
+    /// Short display label (`"native"` / `"xla"`).
+    fn label(&self) -> &'static str;
+
+    /// The model configuration this backend trains.
+    fn config(&self) -> &ModelConfig;
+
+    /// Micro-batch size of the training step.
+    fn micro_batch(&self) -> usize;
+
+    /// Micro-batch size of the eval pass (differs from
+    /// [`Backend::micro_batch`] only for XLA trainstep variants, whose
+    /// eval program stays at the base size).
+    fn eval_micro_batch(&self) -> usize {
+        self.micro_batch()
+    }
+
+    /// Whether [`Backend::score_probe`] is available (XLA trainstep
+    /// variants lack a probe artifact at their micro-batch size).
+    fn supports_probe(&self) -> bool {
+        true
+    }
+
+    /// One fused fwd + bwd + SGD-momentum step on a micro-batch under a
+    /// schedule row's masks. Updates parameters in place.
+    fn step(&mut self, x: &Tensor, y: &[i32], masks: &MaskPair, lr: f32) -> Result<StepOut>;
+
+    /// Forward-only pass: loss + correct count (all-subnets mask unless
+    /// a partial fwd mask is given — the timed `p_o` program).
+    fn eval(&self, x: &Tensor, y: &[i32], fwd_mask: Option<&Tensor>) -> Result<EvalOut>;
+
+    /// Contribution-score probe: `[L, H, 4]` (fisher, grad-mag, taylor,
+    /// weight-mag) for one micro-batch, without updating weights.
+    fn score_probe(&self, x: &Tensor, y: &[i32]) -> Result<Tensor>;
+
+    /// Zero the momentum buffers (fresh optimizer state at the
+    /// pretrain -> fine-tune boundary).
+    fn reset_momentum(&mut self) -> Result<()>;
+
+    /// Copy of one named parameter tensor (host inspection; tests).
+    fn param(&self, name: &str) -> Option<Tensor>;
+
+    /// All parameter names, in the backend's canonical order.
+    fn param_names(&self) -> Vec<String>;
+}
+
+/// Selects which model variant a provider should open.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendSel {
+    /// LoRA adapter rank (0 = full fine-tuning).
+    pub lora_rank: usize,
+    /// Trainstep micro-batch override (Table VI variants); `None` uses
+    /// the provider's default.
+    pub micro_batch: Option<usize>,
+    /// Seed for backends that initialize parameters themselves (the
+    /// native backend; the XLA backend loads the shipped init blob).
+    pub seed: u64,
+}
+
+impl BackendSel {
+    /// The full fine-tuning model at the provider's default micro-batch.
+    pub fn full(seed: u64) -> BackendSel {
+        BackendSel { lora_rank: 0, micro_batch: None, seed }
+    }
+}
+
+/// A family of openable backends (full FT + LoRA ranks + micro-batch
+/// variants) sharing one model configuration — the backend-agnostic
+/// replacement for handing an `ArtifactRegistry` around.
+pub trait BackendProvider {
+    /// Short display label (`"native"` / `"xla"`).
+    fn label(&self) -> &'static str;
+
+    /// Model configuration of the full fine-tuning variant.
+    fn model_config(&self) -> &ModelConfig;
+
+    /// Default trainstep micro-batch size.
+    fn micro_batch(&self) -> usize;
+
+    /// Alternative micro-batch sizes this provider can open (Table VI).
+    fn mb_variants(&self) -> Vec<usize>;
+
+    /// LoRA ranks this provider can open (empty = full FT only).
+    fn lora_ranks(&self) -> Vec<usize>;
+
+    /// The rank used by default for LoRA experiments (0 = none).
+    fn lora_standard_rank(&self) -> usize;
+
+    /// Number of parameter tensors in the full variant (for `repro info`).
+    fn n_params(&self) -> usize;
+
+    /// Total f32 elements across the full variant's parameters.
+    fn total_elems(&self) -> usize;
+
+    /// Open a backend instance for the selected variant.
+    fn open(&self, sel: &BackendSel) -> Result<Box<dyn Backend + '_>>;
+}
+
+/// Which backend implementation to use (CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust mini-ViT (no native dependencies, no artifacts).
+    Native,
+    /// PJRT / AOT-artifact path (requires the `xla` feature + artifacts).
+    Xla,
+}
+
+impl BackendKind {
+    /// Parse a CLI backend label.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" => BackendKind::Native,
+            "xla" | "pjrt" => BackendKind::Xla,
+            _ => anyhow::bail!("unknown backend {s:?} (native|xla)"),
+        })
+    }
+
+    /// The CLI label of this backend kind.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Build the provider for `kind`. `artifacts_dir` is only consulted by
+/// the XLA provider; the native provider needs no files at all.
+pub fn provider_for(kind: BackendKind, artifacts_dir: &Path) -> Result<Box<dyn BackendProvider>> {
+    match kind {
+        BackendKind::Native => native_provider(),
+        BackendKind::Xla => xla_provider(artifacts_dir),
+    }
+}
+
+#[cfg(feature = "native")]
+fn native_provider() -> Result<Box<dyn BackendProvider>> {
+    Ok(Box::new(native::NativeProvider::default()))
+}
+
+#[cfg(not(feature = "native"))]
+fn native_provider() -> Result<Box<dyn BackendProvider>> {
+    anyhow::bail!("built without the `native` feature; rebuild with default features")
+}
+
+#[cfg(feature = "xla")]
+fn xla_provider(artifacts_dir: &Path) -> Result<Box<dyn BackendProvider>> {
+    Ok(Box::new(xla::XlaProvider::open(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_provider(_artifacts_dir: &Path) -> Result<Box<dyn BackendProvider>> {
+    anyhow::bail!(
+        "this build has no XLA support; rebuild with `cargo build --features xla` \
+         (needs xla_extension) or use `--backend native`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("XLA").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.label(), "native");
+    }
+
+    #[test]
+    fn backend_sel_full_defaults() {
+        let sel = BackendSel::full(7);
+        assert_eq!(sel.lora_rank, 0);
+        assert_eq!(sel.micro_batch, None);
+        assert_eq!(sel.seed, 7);
+    }
+}

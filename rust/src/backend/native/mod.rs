@@ -1,0 +1,1138 @@
+//! Pure-Rust native backend: a masked mini-ViT forward/backward with a
+//! fused SGD-momentum update, per-head attention skip honoring the
+//! [`MaskPair`] contract, optional per-head LoRA adapters, and the
+//! `[L, H, 4]` contribution-score probe — no PJRT, no artifacts, no
+//! native libraries.
+//!
+//! ## Model
+//!
+//! The standard pre-LN ViT the AOT artifacts lower, scaled to train fast
+//! on the synthetic corpora: patch embedding -> CLS token + learned
+//! position embeddings -> `depth` transformer blocks (multi-head
+//! attention + GELU FFN, both with residual connections) -> final layer
+//! norm over the CLS token -> linear classifier. Parameter names mirror
+//! the artifact manifest convention (`a_*` embeddings, `bXX_*` blocks,
+//! `z_*` head) so host-side inspection code works against either
+//! backend.
+//!
+//! ## Mask semantics
+//!
+//! The forward mask multiplies each head's attention output (before the
+//! output projection) and its 1/H chunk of the FFN hidden layer, so a
+//! fully-masked subnet contributes *exactly zero* to its residual branch
+//! — the shortcut operation is the residual identity, bitwise. The
+//! output projection and second FFN matmul carry no bias for precisely
+//! this reason. The backward mask freezes the per-head parameter slices
+//! (QKV columns, output-projection rows, FFN chunk, LoRA adapters) of
+//! `p_o` heads after autodiff; block-shared layer norms follow the
+//! block's residual stream. `p_s` heads get zero gradients for free:
+//! the forward multiply already zeroed every path through them.
+//!
+//! ## LoRA
+//!
+//! At rank `r > 0` each (block, head, projection in {q, k, v}) gets an
+//! `A [D, r]` / `B [r, dh]` adapter pair (`B` zero-initialized, unit
+//! alpha/r scaling). Base body weights freeze; adapters and the
+//! classifier head train. Per-head adapters — rather than one shared
+//! pair per projection — keep the backward mask exact.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, BackendProvider, BackendSel, EvalOut, StepOut};
+use crate::runtime::ModelConfig;
+use crate::schedule::MaskPair;
+use crate::tensor::linalg::{gelu, gelu_backward, layer_norm_rows_backward, softmax_rows_backward};
+use crate::tensor::Tensor;
+use crate::util::rng::{fnv1a, Rng};
+
+const EPS: f32 = 1e-5;
+const MOMENTUM: f32 = 0.9;
+
+// ---------------------------------------------------------------------------
+// Spec + provider
+// ---------------------------------------------------------------------------
+
+/// The native model family: one [`ModelConfig`] plus the variants
+/// (micro-batch sizes, LoRA ranks) the provider can open — the
+/// dependency-free analogue of an artifact set's `index.json`.
+#[derive(Clone, Debug)]
+pub struct NativeSpec {
+    /// Model configuration (the `lora_rank` field is per-backend).
+    pub config: ModelConfig,
+    /// Default trainstep micro-batch size.
+    pub micro_batch: usize,
+    /// Alternative micro-batch sizes advertised for Table VI (the
+    /// native step accepts any batch size; these mirror the artifact
+    /// set's lowered variants).
+    pub mb_variants: Vec<usize>,
+    /// LoRA ranks the provider advertises.
+    pub lora_ranks: Vec<usize>,
+    /// The rank used by default for LoRA experiments.
+    pub lora_standard_rank: usize,
+    /// Base seed mixed into parameter initialization.
+    pub init_seed: u64,
+}
+
+impl NativeSpec {
+    /// The default scaled-down ViT: 16x16 images, 4x4 patches, dim 48,
+    /// 3 blocks x 4 heads (12 schedulable body subnets), 196-class head
+    /// matching the synthetic datasets.
+    pub fn tiny() -> NativeSpec {
+        NativeSpec {
+            config: ModelConfig {
+                img_size: 16,
+                patch: 4,
+                dim: 48,
+                depth: 3,
+                heads: 4,
+                mlp_ratio: 4,
+                classes: 196,
+                lora_rank: 0,
+                head_dim: 12,
+                tokens: 17,
+            },
+            micro_batch: 4,
+            mb_variants: vec![2, 8],
+            lora_ranks: vec![1, 2, 4, 8],
+            lora_standard_rank: 4,
+            init_seed: 0xD2F7,
+        }
+    }
+}
+
+impl Default for NativeSpec {
+    fn default() -> Self {
+        NativeSpec::tiny()
+    }
+}
+
+/// Provider opening [`NativeBackend`]s for a [`NativeSpec`].
+#[derive(Clone, Debug, Default)]
+pub struct NativeProvider {
+    spec: NativeSpec,
+}
+
+impl NativeProvider {
+    /// Provider over a custom spec.
+    pub fn new(spec: NativeSpec) -> NativeProvider {
+        NativeProvider { spec }
+    }
+
+    /// The spec this provider opens backends for.
+    pub fn spec(&self) -> &NativeSpec {
+        &self.spec
+    }
+}
+
+impl BackendProvider for NativeProvider {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn model_config(&self) -> &ModelConfig {
+        &self.spec.config
+    }
+
+    fn micro_batch(&self) -> usize {
+        self.spec.micro_batch
+    }
+
+    fn mb_variants(&self) -> Vec<usize> {
+        self.spec.mb_variants.clone()
+    }
+
+    fn lora_ranks(&self) -> Vec<usize> {
+        self.spec.lora_ranks.clone()
+    }
+
+    fn lora_standard_rank(&self) -> usize {
+        self.spec.lora_standard_rank
+    }
+
+    fn n_params(&self) -> usize {
+        param_table(&self.spec.config, 0).len()
+    }
+
+    fn total_elems(&self) -> usize {
+        param_table(&self.spec.config, 0)
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    fn open(&self, sel: &BackendSel) -> Result<Box<dyn Backend + '_>> {
+        if sel.lora_rank > 0 {
+            anyhow::ensure!(
+                self.spec.lora_ranks.contains(&sel.lora_rank),
+                "native spec advertises LoRA ranks {:?}, not {}",
+                self.spec.lora_ranks,
+                sel.lora_rank
+            );
+        }
+        let mb = sel.micro_batch.unwrap_or(self.spec.micro_batch);
+        anyhow::ensure!(mb >= 1, "micro-batch must be >= 1");
+        Ok(Box::new(NativeBackend::new(&self.spec, sel.lora_rank, mb, sel.seed)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter table + init
+// ---------------------------------------------------------------------------
+
+/// `(name, shape)` of every parameter for `cfg` at LoRA rank `rank`,
+/// in sorted-name (manifest flatten) order.
+fn param_table(cfg: &ModelConfig, rank: usize) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.dim;
+    let ppc = cfg.patch * cfg.patch * 3;
+    let rd = cfg.mlp_ratio * d;
+    let mut t: Vec<(String, Vec<usize>)> = vec![
+        ("a_cls".into(), vec![1, 1, d]),
+        ("a_patch_b".into(), vec![d]),
+        ("a_patch_w".into(), vec![ppc, d]),
+        ("a_pos".into(), vec![cfg.tokens, d]),
+        ("z_head_b".into(), vec![cfg.classes]),
+        ("z_head_w".into(), vec![d, cfg.classes]),
+        ("z_ln_b".into(), vec![d]),
+        ("z_ln_g".into(), vec![d]),
+    ];
+    for l in 0..cfg.depth {
+        t.push((format!("b{l:02}_b1"), vec![rd]));
+        t.push((format!("b{l:02}_ln1_b"), vec![d]));
+        t.push((format!("b{l:02}_ln1_g"), vec![d]));
+        t.push((format!("b{l:02}_ln2_b"), vec![d]));
+        t.push((format!("b{l:02}_ln2_g"), vec![d]));
+        t.push((format!("b{l:02}_w1"), vec![d, rd]));
+        t.push((format!("b{l:02}_w2"), vec![rd, d]));
+        t.push((format!("b{l:02}_wo"), vec![d, d]));
+        t.push((format!("b{l:02}_wqkv"), vec![d, 3 * d]));
+        if rank > 0 {
+            for p in ["q", "k", "v"] {
+                t.push((format!("b{l:02}_lora_a{p}"), vec![cfg.heads, d, rank]));
+                t.push((format!("b{l:02}_lora_b{p}"), vec![cfg.heads, rank, cfg.head_dim]));
+            }
+        }
+    }
+    t.sort_by(|a, b| a.0.cmp(&b.0));
+    t
+}
+
+/// Initialize one named parameter: layer-norm gains 1, biases and LoRA
+/// `B` matrices 0, embeddings N(0, 0.02), weight matrices
+/// N(0, 1/sqrt(fan_in)). Each tensor draws from its own name-keyed RNG
+/// stream, so parameters shared between model depths (embeddings, head,
+/// shallower blocks) initialize identically — the property the
+/// residual-identity tests lean on.
+fn init_param(name: &str, shape: &[usize], cfg: &ModelConfig, base_seed: u64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(base_seed ^ fnv1a(name));
+    let normal = |rng: &mut Rng, std: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() * std).collect()
+    };
+    let d = cfg.dim as f32;
+    let data = if name.ends_with("ln1_g") || name.ends_with("ln2_g") || name == "z_ln_g" {
+        vec![1.0; n]
+    } else if name.ends_with("_b")
+        || name.ends_with("ln1_b")
+        || name.ends_with("ln2_b")
+        || name.ends_with("b1")
+        || name.contains("_lora_b")
+    {
+        vec![0.0; n]
+    } else if name == "a_cls" || name == "a_pos" {
+        normal(&mut rng, 0.02)
+    } else if name == "a_patch_w" {
+        normal(&mut rng, 1.0 / ((cfg.patch * cfg.patch * 3) as f32).sqrt())
+    } else if name.ends_with("w2") {
+        normal(&mut rng, 1.0 / ((cfg.mlp_ratio as f32) * d).sqrt())
+    } else {
+        // wqkv, wo, w1, z_head_w, lora_a*: fan-in D.
+        normal(&mut rng, 1.0 / d.sqrt())
+    };
+    Tensor::from_vec(shape, data)
+}
+
+// ---------------------------------------------------------------------------
+// Small dense helpers (row-major 2-D blocks)
+// ---------------------------------------------------------------------------
+
+fn add_bias_rows(t: &mut Tensor, bias: &Tensor) {
+    let n = t.shape()[1];
+    assert_eq!(bias.len(), n);
+    let b = bias.data().to_vec();
+    for row in t.data_mut().chunks_exact_mut(n) {
+        for (x, &bv) in row.iter_mut().zip(&b) {
+            *x += bv;
+        }
+    }
+}
+
+fn col_sums(t: &Tensor) -> Tensor {
+    let n = t.shape()[1];
+    let mut out = vec![0.0f32; n];
+    for row in t.data().chunks_exact(n) {
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+    Tensor::from_vec(&[n], out)
+}
+
+fn add_t(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = a.clone();
+    out.add_assign(b);
+    out
+}
+
+/// Copy the `[row_lo..row_hi, col_lo..col_hi]` block of a 2-D tensor.
+fn block_slice(src: &Tensor, row_lo: usize, row_hi: usize, col_lo: usize, col_hi: usize) -> Tensor {
+    let n = src.shape()[1];
+    let (rows, cols) = (row_hi - row_lo, col_hi - col_lo);
+    let mut out = vec![0.0f32; rows * cols];
+    let s = src.data();
+    for r in 0..rows {
+        let srow = (row_lo + r) * n + col_lo;
+        out[r * cols..(r + 1) * cols].copy_from_slice(&s[srow..srow + cols]);
+    }
+    Tensor::from_vec(&[rows, cols], out)
+}
+
+/// `dst[row_lo.., col_lo..] += src` for a 2-D block.
+fn add_block(dst: &mut Tensor, src: &Tensor, row_lo: usize, col_lo: usize) {
+    let n = dst.shape()[1];
+    let (rows, cols) = (src.shape()[0], src.shape()[1]);
+    let s = src.data();
+    let d = dst.data_mut();
+    for r in 0..rows {
+        let drow = (row_lo + r) * n + col_lo;
+        for c in 0..cols {
+            d[drow + c] += s[r * cols + c];
+        }
+    }
+}
+
+/// Multiply columns `[col_lo, col_hi)` of a 2-D tensor by `f`.
+fn scale_cols(t: &mut Tensor, col_lo: usize, col_hi: usize, f: f32) {
+    let n = t.shape()[1];
+    for row in t.data_mut().chunks_exact_mut(n) {
+        for x in &mut row[col_lo..col_hi] {
+            *x *= f;
+        }
+    }
+}
+
+/// View head `h` of a `[H, a, b]` adapter stack as an `[a, b]` tensor.
+fn head_of(stack: &Tensor, h: usize) -> Tensor {
+    let (a, b) = (stack.shape()[1], stack.shape()[2]);
+    let lo = h * a * b;
+    Tensor::from_vec(&[a, b], stack.data()[lo..lo + a * b].to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Per-block parameter indices (resolved once at construction).
+#[derive(Clone, Debug)]
+struct BlockIdx {
+    ln1_g: usize,
+    ln1_b: usize,
+    wqkv: usize,
+    wo: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    /// `[aq, ak, av]` / `[bq, bk, bv]` when LoRA is active.
+    lora_a: Vec<usize>,
+    lora_b: Vec<usize>,
+}
+
+/// Top-level parameter indices.
+#[derive(Clone, Debug)]
+struct TopIdx {
+    cls: usize,
+    patch_w: usize,
+    patch_b: usize,
+    pos: usize,
+    z_ln_g: usize,
+    z_ln_b: usize,
+    head_w: usize,
+    head_b: usize,
+}
+
+/// The pure-Rust compute backend (see the module docs).
+pub struct NativeBackend {
+    cfg: ModelConfig,
+    mb: usize,
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    params: Vec<Tensor>,
+    momentum: Vec<Tensor>,
+    trainable: Vec<bool>,
+    blocks: Vec<BlockIdx>,
+    top: TopIdx,
+    lora_scale: f32,
+}
+
+/// Forward-pass caches for one block.
+struct BlockCache {
+    x_in: Tensor,
+    n1: Tensor,
+    ln1_mean: Tensor,
+    ln1_rstd: Tensor,
+    qkv: Tensor,
+    /// Per (projection, head) LoRA mids `[N, r]` (index `p * H + h`).
+    lora_mid: Vec<Tensor>,
+    /// Per (sample, head) attention weights `[T, T]` (index `b * H + h`).
+    att: Vec<Tensor>,
+    merged: Tensor,
+    x_mid: Tensor,
+    n2: Tensor,
+    ln2_mean: Tensor,
+    ln2_rstd: Tensor,
+    hid_pre: Tensor,
+    hid_act: Tensor,
+}
+
+/// Full forward-pass caches.
+struct Fwd {
+    mb: usize,
+    tok: Tensor,
+    blocks: Vec<BlockCache>,
+    cls_x: Tensor,
+    zn: Tensor,
+    z_mean: Tensor,
+    z_rstd: Tensor,
+    probs: Tensor,
+}
+
+impl NativeBackend {
+    /// Build a backend: deterministic parameter init from
+    /// `(spec.init_seed, seed)`, LoRA adapters at `lora_rank` (0 = full
+    /// fine-tuning), zero momentum.
+    pub fn new(spec: &NativeSpec, lora_rank: usize, micro_batch: usize, seed: u64) -> NativeBackend {
+        let mut cfg = spec.config.clone();
+        cfg.lora_rank = lora_rank;
+        assert_eq!(cfg.dim, cfg.heads * cfg.head_dim, "dim must equal heads * head_dim");
+        assert_eq!(cfg.tokens, (cfg.img_size / cfg.patch).pow(2) + 1, "tokens mismatch");
+        let base_seed = spec.init_seed ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let table = param_table(&cfg, lora_rank);
+        let names: Vec<String> = table.iter().map(|(n, _)| n.clone()).collect();
+        let index: HashMap<String, usize> =
+            names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        let params: Vec<Tensor> = table
+            .iter()
+            .map(|(n, s)| init_param(n, s, &cfg, base_seed))
+            .collect();
+        let momentum: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let trainable: Vec<bool> = names
+            .iter()
+            .map(|n| lora_rank == 0 || n.contains("_lora_") || n.starts_with("z_head"))
+            .collect();
+        let at = |n: &str| -> usize { index[n] };
+        let blocks = (0..cfg.depth)
+            .map(|l| BlockIdx {
+                ln1_g: at(&format!("b{l:02}_ln1_g")),
+                ln1_b: at(&format!("b{l:02}_ln1_b")),
+                wqkv: at(&format!("b{l:02}_wqkv")),
+                wo: at(&format!("b{l:02}_wo")),
+                ln2_g: at(&format!("b{l:02}_ln2_g")),
+                ln2_b: at(&format!("b{l:02}_ln2_b")),
+                w1: at(&format!("b{l:02}_w1")),
+                b1: at(&format!("b{l:02}_b1")),
+                w2: at(&format!("b{l:02}_w2")),
+                lora_a: if lora_rank > 0 {
+                    ["q", "k", "v"]
+                        .iter()
+                        .map(|p| at(&format!("b{l:02}_lora_a{p}")))
+                        .collect()
+                } else {
+                    Vec::new()
+                },
+                lora_b: if lora_rank > 0 {
+                    ["q", "k", "v"]
+                        .iter()
+                        .map(|p| at(&format!("b{l:02}_lora_b{p}")))
+                        .collect()
+                } else {
+                    Vec::new()
+                },
+            })
+            .collect();
+        let top = TopIdx {
+            cls: at("a_cls"),
+            patch_w: at("a_patch_w"),
+            patch_b: at("a_patch_b"),
+            pos: at("a_pos"),
+            z_ln_g: at("z_ln_g"),
+            z_ln_b: at("z_ln_b"),
+            head_w: at("z_head_w"),
+            head_b: at("z_head_b"),
+        };
+        NativeBackend {
+            cfg,
+            mb: micro_batch,
+            names,
+            index,
+            params,
+            momentum,
+            trainable,
+            blocks,
+            top,
+            // alpha = r -> unit scale: rank-independent gradient size.
+            lora_scale: 1.0,
+        }
+    }
+
+    fn p(&self, i: usize) -> &Tensor {
+        &self.params[i]
+    }
+
+    // ---- forward ----------------------------------------------------------
+
+    /// Extract non-overlapping patches: `[mb, img, img, 3]` ->
+    /// `[mb * P2, patch*patch*3]` row-major patch vectors.
+    fn patches(&self, x: &Tensor) -> Tensor {
+        let c = &self.cfg;
+        let np = c.img_size / c.patch;
+        let p2 = np * np;
+        let ppc = c.patch * c.patch * 3;
+        let mb = x.shape()[0];
+        assert_eq!(x.shape(), &[mb, c.img_size, c.img_size, 3], "input shape");
+        let xd = x.data();
+        let mut tok = vec![0.0f32; mb * p2 * ppc];
+        for b in 0..mb {
+            for pi in 0..np {
+                for pj in 0..np {
+                    let mut o = (b * p2 + pi * np + pj) * ppc;
+                    for r in 0..c.patch {
+                        for cc in 0..c.patch {
+                            let src =
+                                ((b * c.img_size + pi * c.patch + r) * c.img_size
+                                    + pj * c.patch
+                                    + cc)
+                                    * 3;
+                            tok[o..o + 3].copy_from_slice(&xd[src..src + 3]);
+                            o += 3;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[mb * p2, ppc], tok)
+    }
+
+    fn forward(&self, x: &Tensor, fwd_mask: &Tensor) -> Fwd {
+        let c = &self.cfg;
+        let (d, hn, dh, t) = (c.dim, c.heads, c.head_dim, c.tokens);
+        let p2 = t - 1;
+        let rd = c.mlp_ratio * d;
+        let chunk = rd / hn;
+        let mb = x.shape()[0];
+        let n = mb * t;
+        assert_eq!(fwd_mask.shape(), &[c.depth, hn], "fwd mask shape");
+
+        // Embeddings: patches -> linear -> CLS prepend -> position add.
+        let tok = self.patches(x);
+        let mut emb = tok.matmul(self.p(self.top.patch_w));
+        add_bias_rows(&mut emb, self.p(self.top.patch_b));
+        let cls = self.p(self.top.cls).data();
+        let pos = self.p(self.top.pos).data();
+        let mut h0 = vec![0.0f32; n * d];
+        for b in 0..mb {
+            let row0 = (b * t) * d;
+            for j in 0..d {
+                h0[row0 + j] = cls[j] + pos[j];
+            }
+            for i in 0..p2 {
+                let src = (b * p2 + i) * d;
+                let dst = (b * t + 1 + i) * d;
+                for j in 0..d {
+                    h0[dst + j] = emb.data()[src + j] + pos[(1 + i) * d + j];
+                }
+            }
+        }
+        let mut hcur = Tensor::from_vec(&[n, d], h0);
+
+        let mut blocks = Vec::with_capacity(c.depth);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (l, bi) in self.blocks.iter().enumerate() {
+            let x_in = hcur;
+            let (n1, ln1_mean, ln1_rstd) =
+                x_in.layer_norm_rows(self.p(bi.ln1_g), self.p(bi.ln1_b), EPS);
+            let mut qkv = n1.matmul(self.p(bi.wqkv));
+            let mut lora_mid = Vec::new();
+            if c.lora_rank > 0 {
+                for p in 0..3 {
+                    for hh in 0..hn {
+                        let a = head_of(self.p(bi.lora_a[p]), hh);
+                        let bm = head_of(self.p(bi.lora_b[p]), hh);
+                        let mid = n1.matmul(&a);
+                        let mut delta = mid.matmul(&bm);
+                        delta.scale(self.lora_scale);
+                        add_block(&mut qkv, &delta, 0, p * d + hh * dh);
+                        lora_mid.push(mid);
+                    }
+                }
+            }
+            // Per-(sample, head) attention; masked head outputs merge
+            // into [N, D] before the (bias-free) output projection.
+            let mut att = Vec::with_capacity(mb * hn);
+            let mut merged = Tensor::zeros(&[n, d]);
+            for b in 0..mb {
+                let r0 = b * t;
+                for hh in 0..hn {
+                    let q = block_slice(&qkv, r0, r0 + t, hh * dh, (hh + 1) * dh);
+                    let k = block_slice(&qkv, r0, r0 + t, d + hh * dh, d + (hh + 1) * dh);
+                    let v =
+                        block_slice(&qkv, r0, r0 + t, 2 * d + hh * dh, 2 * d + (hh + 1) * dh);
+                    let mut sc = q.matmul_nt(&k);
+                    sc.scale(scale);
+                    let a = sc.softmax_rows();
+                    let mut out = a.matmul(&v);
+                    out.scale(fwd_mask.at(&[l, hh]));
+                    add_block(&mut merged, &out, r0, hh * dh);
+                    att.push(a);
+                }
+            }
+            let proj = merged.matmul(self.p(bi.wo));
+            let x_mid = add_t(&x_in, &proj);
+            let (n2, ln2_mean, ln2_rstd) =
+                x_mid.layer_norm_rows(self.p(bi.ln2_g), self.p(bi.ln2_b), EPS);
+            let mut hid_pre = n2.matmul(self.p(bi.w1));
+            add_bias_rows(&mut hid_pre, self.p(bi.b1));
+            let mut hid_act = gelu(&hid_pre);
+            for hh in 0..hn {
+                scale_cols(&mut hid_act, hh * chunk, (hh + 1) * chunk, fwd_mask.at(&[l, hh]));
+            }
+            let ffn = hid_act.matmul(self.p(bi.w2));
+            hcur = add_t(&x_mid, &ffn);
+            blocks.push(BlockCache {
+                x_in,
+                n1,
+                ln1_mean,
+                ln1_rstd,
+                qkv,
+                lora_mid,
+                att,
+                merged,
+                x_mid,
+                n2,
+                ln2_mean,
+                ln2_rstd,
+                hid_pre,
+                hid_act,
+            });
+        }
+
+        // CLS token -> final LN -> classifier -> softmax.
+        let mut cls_x = Tensor::zeros(&[mb, d]);
+        for b in 0..mb {
+            let row = block_slice(&hcur, b * t, b * t + 1, 0, d);
+            add_block(&mut cls_x, &row, b, 0);
+        }
+        let (zn, z_mean, z_rstd) =
+            cls_x.layer_norm_rows(self.p(self.top.z_ln_g), self.p(self.top.z_ln_b), EPS);
+        let mut logits = zn.matmul(self.p(self.top.head_w));
+        add_bias_rows(&mut logits, self.p(self.top.head_b));
+        let probs = logits.softmax_rows();
+        Fwd { mb, tok, blocks, cls_x, zn, z_mean, z_rstd, probs }
+    }
+
+    /// Cross-entropy loss + correct count + `d_logits` from cached probs.
+    fn loss_grad(&self, fwd: &Fwd, y: &[i32]) -> (f32, f32, Tensor) {
+        let c = self.cfg.classes;
+        let mb = fwd.mb;
+        assert_eq!(y.len(), mb, "label count");
+        let probs = fwd.probs.data();
+        let mut loss = 0.0f64;
+        let mut n_correct = 0.0f32;
+        let mut d = fwd.probs.clone();
+        let dd = d.data_mut();
+        for b in 0..mb {
+            let cls = y[b] as usize;
+            assert!(cls < c, "label {cls} out of range for {c} classes");
+            let row = &probs[b * c..(b + 1) * c];
+            loss += -(row[cls].max(1e-12) as f64).ln();
+            let mut best = 0;
+            for (j, &p) in row.iter().enumerate() {
+                if p > row[best] {
+                    best = j;
+                }
+            }
+            if best == cls {
+                n_correct += 1.0;
+            }
+            dd[b * c + cls] -= 1.0;
+        }
+        d.scale(1.0 / mb as f32);
+        ((loss / mb as f64) as f32, n_correct, d)
+    }
+
+    /// Backward pass: gradients for every parameter (aligned with
+    /// `self.params`). `p_s` heads receive zero gradients automatically
+    /// because the forward multiply zeroed every path through them.
+    fn backward(&self, fwd: &Fwd, fwd_mask: &Tensor, d_logits: &Tensor) -> Vec<Tensor> {
+        let c = &self.cfg;
+        let (d, hn, dh, t) = (c.dim, c.heads, c.head_dim, c.tokens);
+        let p2 = t - 1;
+        let rd = c.mlp_ratio * d;
+        let chunk = rd / hn;
+        let mb = fwd.mb;
+        let mut g: Vec<Tensor> = self.params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+
+        // Classifier + final LN.
+        g[self.top.head_w] = fwd.zn.matmul_tn(d_logits);
+        g[self.top.head_b] = col_sums(d_logits);
+        let d_zn = d_logits.matmul_nt(self.p(self.top.head_w));
+        let (d_cls_x, dzg, dzb) = layer_norm_rows_backward(
+            &fwd.cls_x,
+            self.p(self.top.z_ln_g),
+            &fwd.z_mean,
+            &fwd.z_rstd,
+            &d_zn,
+        );
+        g[self.top.z_ln_g] = dzg;
+        g[self.top.z_ln_b] = dzb;
+
+        // Scatter CLS-row gradients into the token stream.
+        let mut d_h = Tensor::zeros(&[mb * t, d]);
+        for b in 0..mb {
+            let row = block_slice(&d_cls_x, b, b + 1, 0, d);
+            add_block(&mut d_h, &row, b * t, 0);
+        }
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (l, (bi, cache)) in self.blocks.iter().zip(&fwd.blocks).enumerate().rev() {
+            let d_x_out = d_h;
+            // FFN branch.
+            g[bi.w2] = cache.hid_act.matmul_tn(&d_x_out);
+            let mut d_hid_act = d_x_out.matmul_nt(self.p(bi.w2));
+            for hh in 0..hn {
+                scale_cols(&mut d_hid_act, hh * chunk, (hh + 1) * chunk, fwd_mask.at(&[l, hh]));
+            }
+            let d_hid_pre = gelu_backward(&cache.hid_pre, &d_hid_act);
+            g[bi.w1] = cache.n2.matmul_tn(&d_hid_pre);
+            g[bi.b1] = col_sums(&d_hid_pre);
+            let d_n2 = d_hid_pre.matmul_nt(self.p(bi.w1));
+            let (d_xmid_ln, dg2, db2) = layer_norm_rows_backward(
+                &cache.x_mid,
+                self.p(bi.ln2_g),
+                &cache.ln2_mean,
+                &cache.ln2_rstd,
+                &d_n2,
+            );
+            g[bi.ln2_g] = dg2;
+            g[bi.ln2_b] = db2;
+            let d_x_mid = add_t(&d_x_out, &d_xmid_ln);
+
+            // Attention branch.
+            g[bi.wo] = cache.merged.matmul_tn(&d_x_mid);
+            let d_merged = d_x_mid.matmul_nt(self.p(bi.wo));
+            let mut d_qkv = Tensor::zeros(&[mb * t, 3 * d]);
+            for b in 0..mb {
+                let r0 = b * t;
+                for hh in 0..hn {
+                    let att = &cache.att[b * hn + hh];
+                    let mut d_out = block_slice(&d_merged, r0, r0 + t, hh * dh, (hh + 1) * dh);
+                    d_out.scale(fwd_mask.at(&[l, hh]));
+                    let q = block_slice(&cache.qkv, r0, r0 + t, hh * dh, (hh + 1) * dh);
+                    let k = block_slice(
+                        &cache.qkv, r0, r0 + t, d + hh * dh, d + (hh + 1) * dh,
+                    );
+                    let v = block_slice(
+                        &cache.qkv, r0, r0 + t, 2 * d + hh * dh, 2 * d + (hh + 1) * dh,
+                    );
+                    let d_att = d_out.matmul_nt(&v);
+                    let d_v = att.matmul_tn(&d_out);
+                    let mut d_sc = softmax_rows_backward(att, &d_att);
+                    d_sc.scale(scale);
+                    let d_q = d_sc.matmul(&k);
+                    let d_k = d_sc.matmul_tn(&q);
+                    add_block(&mut d_qkv, &d_q, r0, hh * dh);
+                    add_block(&mut d_qkv, &d_k, r0, d + hh * dh);
+                    add_block(&mut d_qkv, &d_v, r0, 2 * d + hh * dh);
+                }
+            }
+            // LoRA branch (delta was added into qkv, so d_qkv slices are
+            // exactly the adapter outputs' gradients).
+            let mut d_n1 = d_qkv.matmul_nt(self.p(bi.wqkv));
+            if c.lora_rank > 0 {
+                let r = c.lora_rank;
+                for p in 0..3 {
+                    for hh in 0..hn {
+                        let d_slice = block_slice(
+                            &d_qkv, 0, mb * t, p * d + hh * dh, p * d + (hh + 1) * dh,
+                        );
+                        let mid = &cache.lora_mid[p * hn + hh];
+                        let a = head_of(self.p(bi.lora_a[p]), hh);
+                        let bm = head_of(self.p(bi.lora_b[p]), hh);
+                        let mut d_b = mid.matmul_tn(&d_slice);
+                        d_b.scale(self.lora_scale);
+                        let mut d_mid = d_slice.matmul_nt(&bm);
+                        d_mid.scale(self.lora_scale);
+                        let d_a = cache.n1.matmul_tn(&d_mid);
+                        // Accumulate into the [H, ., .] stacks.
+                        let off_a = hh * d * r;
+                        let ga = g[bi.lora_a[p]].data_mut();
+                        for (i, &x) in d_a.data().iter().enumerate() {
+                            ga[off_a + i] += x;
+                        }
+                        let off_b = hh * r * dh;
+                        let gb = g[bi.lora_b[p]].data_mut();
+                        for (i, &x) in d_b.data().iter().enumerate() {
+                            gb[off_b + i] += x;
+                        }
+                        d_n1.add_assign(&d_mid.matmul_nt(&a));
+                    }
+                }
+            }
+            g[bi.wqkv] = cache.n1.matmul_tn(&d_qkv);
+            let (d_xin_ln, dg1, db1) = layer_norm_rows_backward(
+                &cache.x_in,
+                self.p(bi.ln1_g),
+                &cache.ln1_mean,
+                &cache.ln1_rstd,
+                &d_n1,
+            );
+            g[bi.ln1_g] = dg1;
+            g[bi.ln1_b] = db1;
+            d_h = add_t(&d_x_mid, &d_xin_ln);
+        }
+
+        // Embeddings.
+        let d_h0 = d_h;
+        {
+            let gp = g[self.top.pos].data_mut();
+            let dd = d_h0.data();
+            for b in 0..mb {
+                for tt in 0..t {
+                    let src = (b * t + tt) * d;
+                    for j in 0..d {
+                        gp[tt * d + j] += dd[src + j];
+                    }
+                }
+            }
+        }
+        {
+            let gc = g[self.top.cls].data_mut();
+            let dd = d_h0.data();
+            for b in 0..mb {
+                let src = (b * t) * d;
+                for j in 0..d {
+                    gc[j] += dd[src + j];
+                }
+            }
+        }
+        let mut d_emb = Tensor::zeros(&[mb * p2, d]);
+        for b in 0..mb {
+            let rows = block_slice(&d_h0, b * t + 1, (b + 1) * t, 0, d);
+            add_block(&mut d_emb, &rows, b * p2, 0);
+        }
+        g[self.top.patch_w] = fwd.tok.matmul_tn(&d_emb);
+        g[self.top.patch_b] = col_sums(&d_emb);
+        g
+    }
+
+    /// Visit every parameter element owned by subnet (block `l`, head
+    /// `h`): QKV columns, output-projection rows, the head's FFN chunk,
+    /// and its LoRA adapters. Shared by the backward-mask freeze and the
+    /// score probe.
+    fn for_head_elems(&self, l: usize, h: usize, f: &mut dyn FnMut(usize, usize)) {
+        let c = &self.cfg;
+        let (d, dh) = (c.dim, c.head_dim);
+        let rd = c.mlp_ratio * d;
+        let chunk = rd / c.heads;
+        let bi = &self.blocks[l];
+        for r in 0..d {
+            for p in 0..3 {
+                for cc in h * dh..(h + 1) * dh {
+                    f(bi.wqkv, r * 3 * d + p * d + cc);
+                }
+            }
+        }
+        for r in h * dh..(h + 1) * dh {
+            for cc in 0..d {
+                f(bi.wo, r * d + cc);
+            }
+        }
+        for r in 0..d {
+            for cc in h * chunk..(h + 1) * chunk {
+                f(bi.w1, r * rd + cc);
+            }
+        }
+        for cc in h * chunk..(h + 1) * chunk {
+            f(bi.b1, cc);
+        }
+        for r in h * chunk..(h + 1) * chunk {
+            for cc in 0..d {
+                f(bi.w2, r * d + cc);
+            }
+        }
+        if c.lora_rank > 0 {
+            let r = c.lora_rank;
+            for p in 0..3 {
+                for i in h * d * r..(h + 1) * d * r {
+                    f(bi.lora_a[p], i);
+                }
+                for i in h * r * dh..(h + 1) * r * dh {
+                    f(bi.lora_b[p], i);
+                }
+            }
+        }
+    }
+
+    /// Zero the per-head parameter gradients of every head whose
+    /// backward mask is 0 — the `p_o` freeze. Block-shared layer norms
+    /// are left to the residual stream (matching the artifact path's
+    /// observable contract: only per-head slices are guaranteed frozen).
+    fn freeze(&self, grads: &mut [Tensor], bwd_mask: &Tensor) {
+        for l in 0..self.cfg.depth {
+            for h in 0..self.cfg.heads {
+                if bwd_mask.at(&[l, h]) < 0.5 {
+                    self.for_head_elems(l, h, &mut |pi, ei| {
+                        grads[pi].data_mut()[ei] = 0.0;
+                    });
+                }
+            }
+        }
+    }
+
+    /// SGD-momentum update matching the artifact trainstep's contract:
+    /// `m = mu * m + g; p -= lr * m` on every trainable tensor.
+    fn update(&mut self, grads: &[Tensor], lr: f32) {
+        for i in 0..self.params.len() {
+            if !self.trainable[i] {
+                continue;
+            }
+            let m = self.momentum[i].data_mut();
+            let p = self.params[i].data_mut();
+            for ((mv, pv), &gv) in m.iter_mut().zip(p.iter_mut()).zip(grads[i].data()) {
+                *mv = MOMENTUM * *mv + gv;
+                *pv -= lr * *mv;
+            }
+        }
+    }
+
+    /// Gradients for one micro-batch under `masks` without updating any
+    /// parameter — `(name, grad)` pairs in canonical order. Diagnostic
+    /// API backing the finite-difference tests and the score probe.
+    pub fn param_grads(&self, x: &Tensor, y: &[i32], masks: &MaskPair) -> Vec<(String, Tensor)> {
+        let fwd = self.forward(x, &masks.fwd);
+        let (_, _, d_logits) = self.loss_grad(&fwd, y);
+        let mut grads = self.backward(&fwd, &masks.fwd, &d_logits);
+        self.freeze(&mut grads, &masks.bwd);
+        self.names.iter().cloned().zip(grads).collect()
+    }
+
+    /// Add `delta` to one element of a named parameter (finite-difference
+    /// test hook).
+    pub fn nudge_param(&mut self, name: &str, elem: usize, delta: f32) {
+        let i = self.index[name];
+        self.params[i].data_mut()[elem] += delta;
+    }
+}
+
+impl Backend for NativeBackend {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn micro_batch(&self) -> usize {
+        self.mb
+    }
+
+    fn step(&mut self, x: &Tensor, y: &[i32], masks: &MaskPair, lr: f32) -> Result<StepOut> {
+        let fwd = self.forward(x, &masks.fwd);
+        let (loss, n_correct, d_logits) = self.loss_grad(&fwd, y);
+        let mut grads = self.backward(&fwd, &masks.fwd, &d_logits);
+        self.freeze(&mut grads, &masks.bwd);
+        self.update(&grads, lr);
+        Ok(StepOut { loss, n_correct })
+    }
+
+    fn eval(&self, x: &Tensor, y: &[i32], fwd_mask: Option<&Tensor>) -> Result<EvalOut> {
+        let ones = Tensor::full(&[self.cfg.depth, self.cfg.heads], 1.0);
+        let fwd = self.forward(x, fwd_mask.unwrap_or(&ones));
+        let (loss, n_correct, _) = self.loss_grad(&fwd, y);
+        Ok(EvalOut { loss, n_correct })
+    }
+
+    fn score_probe(&self, x: &Tensor, y: &[i32]) -> Result<Tensor> {
+        let masks = MaskPair::ones(self.cfg.depth, self.cfg.heads);
+        let fwd = self.forward(x, &masks.fwd);
+        let (_, _, d_logits) = self.loss_grad(&fwd, y);
+        let grads = self.backward(&fwd, &masks.fwd, &d_logits);
+        let mut out = Tensor::zeros(&[self.cfg.depth, self.cfg.heads, 4]);
+        for l in 0..self.cfg.depth {
+            for h in 0..self.cfg.heads {
+                let mut acc = [0.0f64; 4];
+                self.for_head_elems(l, h, &mut |pi, ei| {
+                    let w = self.params[pi].data()[ei] as f64;
+                    let g = grads[pi].data()[ei] as f64;
+                    acc[0] += g * g; // fisher
+                    acc[1] += g.abs(); // gradient magnitude
+                    acc[2] += (w * g).abs(); // taylor importance
+                    acc[3] += w.abs(); // weight magnitude
+                });
+                for (m, &v) in acc.iter().enumerate() {
+                    out.set(&[l, h, m], v as f32);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn reset_momentum(&mut self) -> Result<()> {
+        for m in &mut self.momentum {
+            for v in m.data_mut() {
+                *v = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    fn param(&self, name: &str) -> Option<Tensor> {
+        self.index.get(name).map(|&i| self.params[i].clone())
+    }
+
+    fn param_names(&self) -> Vec<String> {
+        self.names.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetSpec, SyntheticKind};
+
+    /// A very small config so unit tests stay fast.
+    pub(crate) fn small_spec() -> NativeSpec {
+        NativeSpec {
+            config: ModelConfig {
+                img_size: 8,
+                patch: 4,
+                dim: 16,
+                depth: 2,
+                heads: 2,
+                mlp_ratio: 2,
+                classes: 10,
+                lora_rank: 0,
+                head_dim: 8,
+                tokens: 5,
+            },
+            micro_batch: 2,
+            mb_variants: vec![4],
+            lora_ranks: vec![2, 4],
+            lora_standard_rank: 2,
+            init_seed: 0xBEEF,
+        }
+    }
+
+    fn sample(spec: &NativeSpec, mb: usize, seed: u64) -> (Tensor, Vec<i32>) {
+        let d = DatasetSpec::preset(SyntheticKind::Cifar10Like, spec.config.img_size, mb, seed)
+            .generate("train");
+        d.gather(&(0..mb).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn provider_metadata_and_shapes() {
+        let p = NativeProvider::new(small_spec());
+        assert_eq!(p.label(), "native");
+        assert_eq!(p.micro_batch(), 2);
+        assert_eq!(p.lora_standard_rank(), 2);
+        assert!(p.n_params() > 0);
+        let be = p.open(&BackendSel::full(1)).unwrap();
+        assert_eq!(be.param("b00_wqkv").unwrap().shape(), &[16, 48]);
+        assert_eq!(be.param("a_pos").unwrap().shape(), &[5, 16]);
+        assert_eq!(be.param("z_head_w").unwrap().shape(), &[16, 10]);
+        assert!(be.param("b00_lora_aq").is_none(), "no adapters at rank 0");
+        assert_eq!(
+            p.total_elems(),
+            be.param_names()
+                .iter()
+                .map(|n| be.param(n).unwrap().len())
+                .sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn lora_backend_advertises_adapters() {
+        let p = NativeProvider::new(small_spec());
+        let be = p
+            .open(&BackendSel { lora_rank: 2, micro_batch: None, seed: 1 })
+            .unwrap();
+        assert_eq!(be.config().lora_rank, 2);
+        assert_eq!(be.param("b01_lora_aq").unwrap().shape(), &[2, 16, 2]);
+        assert_eq!(be.param("b01_lora_bv").unwrap().shape(), &[2, 2, 8]);
+        assert!(p
+            .open(&BackendSel { lora_rank: 3, micro_batch: None, seed: 1 })
+            .is_err());
+    }
+
+    #[test]
+    fn step_trains_and_is_deterministic() {
+        let spec = small_spec();
+        let p = NativeProvider::new(spec.clone());
+        let (x, y) = sample(&spec, 2, 3);
+        let masks = MaskPair::ones(2, 2);
+        let mut a = p.open(&BackendSel::full(7)).unwrap();
+        let mut b = p.open(&BackendSel::full(7)).unwrap();
+        let first = a.step(&x, &y, &masks, 0.1).unwrap();
+        assert!(first.loss.is_finite() && first.loss > 0.0);
+        // Same seed + same data -> bitwise identical trajectory.
+        let fb = b.step(&x, &y, &masks, 0.1).unwrap();
+        assert_eq!(first.loss, fb.loss);
+        // Repeated steps on one micro-batch overfit it.
+        let mut last = first.loss;
+        for _ in 0..30 {
+            last = a.step(&x, &y, &masks, 0.1).unwrap().loss;
+        }
+        assert!(
+            last < first.loss * 0.5,
+            "loss should collapse on a repeated batch: {} -> {last}",
+            first.loss
+        );
+    }
+
+    #[test]
+    fn eval_matches_step_loss_at_lr_zero() {
+        let spec = small_spec();
+        let p = NativeProvider::new(spec.clone());
+        let (x, y) = sample(&spec, 2, 4);
+        let masks = MaskPair::ones(2, 2);
+        let mut be = p.open(&BackendSel::full(9)).unwrap();
+        let ev = be.eval(&x, &y, None).unwrap();
+        let st = be.step(&x, &y, &masks, 0.0).unwrap();
+        assert_eq!(ev.loss, st.loss, "same forward path");
+        assert_eq!(ev.n_correct, st.n_correct);
+        // lr = 0 must not move parameters.
+        let before = be.param("b00_wqkv").unwrap();
+        be.step(&x, &y, &masks, 0.0).unwrap();
+        assert_eq!(before, be.param("b00_wqkv").unwrap());
+    }
+
+    #[test]
+    fn probe_shape_and_positivity() {
+        let spec = small_spec();
+        let p = NativeProvider::new(spec.clone());
+        let (x, y) = sample(&spec, 2, 5);
+        let be = p.open(&BackendSel::full(11)).unwrap();
+        let probe = be.score_probe(&x, &y).unwrap();
+        assert_eq!(probe.shape(), &[2, 2, 4]);
+        assert!(probe.data().iter().all(|&v| v >= 0.0));
+        for l in 0..2 {
+            for h in 0..2 {
+                assert!(probe.at(&[l, h, 3]) > 0.0, "weight magnitude strictly positive");
+            }
+        }
+    }
+}

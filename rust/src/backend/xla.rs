@@ -1,0 +1,153 @@
+//! XLA/PJRT backend: the original AOT-artifact execution path, wrapped
+//! behind the [`Backend`] trait. Compiled only with the optional `xla`
+//! cargo feature (requires the native `xla_extension` library at build
+//! time and `make artifacts` at run time).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, BackendProvider, BackendSel, EvalOut, StepOut};
+use crate::runtime::{ArtifactRegistry, Manifest, ModelConfig, ParamStore, Session, TrainState};
+use crate::schedule::MaskPair;
+use crate::tensor::Tensor;
+
+/// Provider over an opened artifact directory.
+pub struct XlaProvider {
+    registry: ArtifactRegistry,
+}
+
+impl XlaProvider {
+    /// Open an artifacts directory (see [`ArtifactRegistry::open`]).
+    pub fn open(dir: &Path) -> Result<XlaProvider> {
+        Ok(XlaProvider { registry: ArtifactRegistry::open(dir)? })
+    }
+
+    /// Open `$D2FT_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<XlaProvider> {
+        Ok(XlaProvider { registry: ArtifactRegistry::open_default()? })
+    }
+
+    /// The underlying artifact registry.
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+}
+
+impl BackendProvider for XlaProvider {
+    fn label(&self) -> &'static str {
+        "xla"
+    }
+
+    fn model_config(&self) -> &ModelConfig {
+        &self.registry.full_manifest.config
+    }
+
+    fn micro_batch(&self) -> usize {
+        self.registry.full_manifest.micro_batch
+    }
+
+    fn mb_variants(&self) -> Vec<usize> {
+        self.registry.full_manifest.mb_variants.clone()
+    }
+
+    fn lora_ranks(&self) -> Vec<usize> {
+        self.registry.lora_ranks.clone()
+    }
+
+    fn lora_standard_rank(&self) -> usize {
+        self.registry.lora_standard_rank
+    }
+
+    fn n_params(&self) -> usize {
+        self.registry.full_manifest.n_params()
+    }
+
+    fn total_elems(&self) -> usize {
+        self.registry.full_manifest.total_elems
+    }
+
+    fn open(&self, sel: &BackendSel) -> Result<Box<dyn Backend + '_>> {
+        let manifest: &Manifest = if sel.lora_rank > 0 {
+            self.registry.lora_manifest(sel.lora_rank)?
+        } else {
+            &self.registry.full_manifest
+        };
+        let mut session = Session::new(&self.registry, manifest)?;
+        let mut variant_mb = None;
+        if let Some(mb) = sel.micro_batch {
+            if mb != manifest.micro_batch {
+                session = session.with_trainstep_variant(mb)?;
+                variant_mb = Some(mb);
+            }
+        }
+        let state = TrainState::new(&ParamStore::load(manifest, self.registry.dir())?)?;
+        Ok(Box::new(XlaBackend { session, state, manifest, variant_mb }))
+    }
+}
+
+/// One opened PJRT session + its mutable training state.
+pub struct XlaBackend<'a> {
+    session: Session<'a>,
+    state: TrainState,
+    manifest: &'a Manifest,
+    /// Trainstep micro-batch override (Table VI); eval/probe stay at the
+    /// manifest's base size.
+    variant_mb: Option<usize>,
+}
+
+impl<'a> Backend for XlaBackend<'a> {
+    fn label(&self) -> &'static str {
+        "xla"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    fn micro_batch(&self) -> usize {
+        self.variant_mb.unwrap_or(self.manifest.micro_batch)
+    }
+
+    fn eval_micro_batch(&self) -> usize {
+        self.manifest.micro_batch
+    }
+
+    fn supports_probe(&self) -> bool {
+        // The scores artifact is lowered at the manifest's micro-batch;
+        // variant trainsteps have no matching probe.
+        self.variant_mb.is_none()
+    }
+
+    fn step(&mut self, x: &Tensor, y: &[i32], masks: &MaskPair, lr: f32) -> Result<StepOut> {
+        let xl = self.session.x_literal(x)?;
+        let yl = self.session.y_literal(y)?;
+        self.session.step(&mut self.state, &xl, &yl, masks, lr)
+    }
+
+    fn eval(&self, x: &Tensor, y: &[i32], fwd_mask: Option<&Tensor>) -> Result<EvalOut> {
+        let xl = self.session.x_literal(x)?;
+        let yl = self.session.y_literal(y)?;
+        self.session.eval(&self.state, &xl, &yl, fwd_mask)
+    }
+
+    fn score_probe(&self, x: &Tensor, y: &[i32]) -> Result<Tensor> {
+        let xl = self.session.x_literal(x)?;
+        let yl = self.session.y_literal(y)?;
+        self.session.probe_scores(&self.state, &xl, &yl)
+    }
+
+    fn reset_momentum(&mut self) -> Result<()> {
+        self.state.reset_momentum()
+    }
+
+    fn param(&self, name: &str) -> Option<Tensor> {
+        let mut store = ParamStore::zeros_like(self.manifest);
+        self.state.write_back(&mut store).ok()?;
+        store.tensor(name)
+    }
+
+    fn param_names(&self) -> Vec<String> {
+        self.manifest.params.iter().map(|p| p.name.clone()).collect()
+    }
+}

@@ -1,16 +1,16 @@
-//! The end-to-end fine-tuning driver.
+//! The end-to-end fine-tuning driver, generic over the compute backend.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::backend::{Backend, BackendProvider, BackendSel};
 use crate::cluster::{
     CostModel, Engine, EngineConfig, ExecMode, ExecTimeModel, HeteroSpec, WorkloadTracker,
 };
 use crate::data::{Dataset, DatasetSpec, SyntheticKind};
 use crate::metrics::{DeviceUsage, Meter};
 use crate::partition::Partition;
-use crate::runtime::{ArtifactRegistry, Manifest, ParamStore, Session, TrainState};
 use crate::schedule::scaler::{Lambda, ScalerSched};
 use crate::schedule::{
     bilevel::{BiLevel, MergeMode},
@@ -109,7 +109,8 @@ pub struct TrainerConfig {
     pub partition_group: usize,
     /// Device heterogeneity configuration (None = homogeneous).
     pub hetero: Option<HeteroSpec>,
-    /// Run seed (data order, random baselines, engine payloads).
+    /// Run seed (data order, random baselines, engine payloads, native
+    /// parameter init).
     pub seed: u64,
     /// Batches of synthetic "pre-training" before fine-tuning
     /// (DESIGN.md Substitution 4; gives non-degenerate scores).
@@ -117,6 +118,8 @@ pub struct TrainerConfig {
     /// Evaluate on the test split every `eval_every` batches (0 = only
     /// at the end).
     pub eval_every: usize,
+    /// LoRA adapter rank the backend should open (0 = full fine-tuning).
+    pub lora_rank: usize,
 }
 
 impl TrainerConfig {
@@ -142,6 +145,7 @@ impl TrainerConfig {
             seed: 17,
             pretrain_batches: 12,
             eval_every: 0,
+            lora_rank: 0,
         }
     }
 }
@@ -151,6 +155,8 @@ impl TrainerConfig {
 pub struct TrainReport {
     /// Display label of the scheduling policy.
     pub scheduler: String,
+    /// Display label of the compute backend that ran the numerics.
+    pub backend: String,
     /// Mean training loss over the run.
     pub final_train_loss: f64,
     /// Test top-1 accuracy after the run.
@@ -252,34 +258,53 @@ thread_local! {
     pub(crate) static SPB_HINT: std::cell::Cell<usize> = const { std::cell::Cell::new(1) };
 }
 
-/// The coordinator.
+/// The coordinator: drives any [`Backend`] through the full
+/// pretrain -> score -> schedule -> execute loop.
 pub struct Trainer<'a> {
     cfg: TrainerConfig,
-    registry: &'a ArtifactRegistry,
-    session: Session<'a>,
+    backend: Box<dyn Backend + 'a>,
     partition: Partition,
     train: Dataset,
     test: Dataset,
-    /// Micro-batch size when using a trainstep variant (Table VI).
-    variant_mb: Option<usize>,
 }
 
 impl<'a> Trainer<'a> {
-    /// Build a trainer: partition the model, open the PJRT session, and
-    /// generate the train/test splits.
-    pub fn new(
-        registry: &'a ArtifactRegistry,
-        manifest: &'a Manifest,
+    /// Build a trainer over a backend opened from `provider` (LoRA rank
+    /// and seed from the config), partition the model, and generate the
+    /// train/test splits.
+    pub fn new(provider: &'a dyn BackendProvider, cfg: TrainerConfig) -> Result<Trainer<'a>> {
+        let sel = BackendSel {
+            lora_rank: cfg.lora_rank,
+            micro_batch: None,
+            seed: cfg.seed,
+        };
+        Self::with_backend(provider.open(&sel)?, cfg)
+    }
+
+    /// Trainer over a micro-batch-size *variant* trainstep (Table VI):
+    /// same model, different per-step batch size.
+    pub fn new_with_micro_batch(
+        provider: &'a dyn BackendProvider,
         cfg: TrainerConfig,
+        micro_batch: usize,
     ) -> Result<Trainer<'a>> {
-        let mc = &manifest.config;
+        let sel = BackendSel {
+            lora_rank: cfg.lora_rank,
+            micro_batch: Some(micro_batch),
+            seed: cfg.seed,
+        };
+        Self::with_backend(provider.open(&sel)?, cfg)
+    }
+
+    /// Build a trainer around an already-opened backend.
+    pub fn with_backend(backend: Box<dyn Backend + 'a>, cfg: TrainerConfig) -> Result<Trainer<'a>> {
+        let mc = backend.config();
         let partition = match &cfg.hetero {
             Some(h) => h.partition(mc),
             None => Partition::grouped(mc, cfg.partition_group),
         };
         partition.validate()?;
         SPB_HINT.with(|h| h.set(partition.n_subnets() / mc.depth));
-        let session = Session::new(registry, manifest)?;
         let train = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.train_size, cfg.seed)
             .generate("train");
         let test = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.test_size, cfg.seed)
@@ -288,31 +313,17 @@ impl<'a> Trainer<'a> {
             train.classes <= mc.classes,
             "dataset has more classes than the model head"
         );
-        Ok(Trainer { cfg, registry, session, partition, train, test, variant_mb: None })
+        Ok(Trainer { cfg, backend, partition, train, test })
     }
 
     /// Micro-batch size of the *training* step (variant-aware).
     fn mb(&self) -> usize {
-        self.variant_mb.unwrap_or(self.session.manifest.micro_batch)
+        self.backend.micro_batch()
     }
 
-    /// Trainer over a micro-batch-size *variant* trainstep artifact
-    /// (Table VI): same params/eval, different baked micro-batch.
-    pub fn new_with_trainstep_variant(
-        registry: &'a ArtifactRegistry,
-        manifest: &'a Manifest,
-        cfg: TrainerConfig,
-        mbs: usize,
-    ) -> Result<Trainer<'a>> {
-        let mut t = Trainer::new(registry, manifest, cfg)?;
-        t.session = Session::new(registry, manifest)?.with_trainstep_variant(mbs)?;
-        t.variant_mb = Some(mbs);
-        Ok(t)
-    }
-
-    /// Fresh training state from the shipped init parameters.
-    pub fn init_state(&self) -> Result<TrainState> {
-        TrainState::new(&ParamStore::load(self.session.manifest, self.registry.dir())?)
+    /// The backend this trainer drives.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
     /// The model partition this run schedules over.
@@ -320,56 +331,44 @@ impl<'a> Trainer<'a> {
         &self.partition
     }
 
-    fn micro_literals(
-        &self,
-        micros: &[(Tensor, Vec<i32>)],
-    ) -> Result<Vec<(xla::Literal, xla::Literal)>> {
-        micros
-            .iter()
-            .map(|(x, y)| Ok((self.session.x_literal(x)?, self.session.y_literal(y)?)))
-            .collect()
-    }
-
     /// Synthetic pre-training: standard schedule on the broad
     /// distribution so fine-tuning starts from informative weights.
-    fn pretrain(&self, state: &mut TrainState) -> Result<()> {
+    fn pretrain(&mut self) -> Result<()> {
         if self.cfg.pretrain_batches == 0 {
             return Ok(());
         }
-        let mc = &self.session.manifest.config;
+        let (img, depth, heads) = {
+            let mc = self.backend.config();
+            (mc.img_size, mc.depth, mc.heads)
+        };
         let mb = self.mb();
         let n = self.cfg.pretrain_batches * self.cfg.micros_per_batch * mb;
-        let pre = DatasetSpec::preset(SyntheticKind::Pretrain, mc.img_size, n, self.cfg.seed ^ 0x5A)
+        let pre = DatasetSpec::preset(SyntheticKind::Pretrain, img, n, self.cfg.seed ^ 0x5A)
             .generate("train");
         let mut batcher =
             crate::data::Batcher::new(&pre, mb, self.cfg.micros_per_batch, self.cfg.seed);
-        let masks = crate::schedule::MaskPair::ones(mc.depth, mc.heads);
+        let masks = crate::schedule::MaskPair::ones(depth, heads);
         while let Some(micros) = batcher.next_batch() {
-            for (x, y) in self.micro_literals(&micros)? {
-                self.session.step(state, &x, &y, &masks, self.cfg.lr)?;
+            for (x, y) in &micros {
+                self.backend.step(x, y, &masks, self.cfg.lr)?;
             }
         }
         // Fresh optimizer state at the pretrain -> fine-tune boundary
         // (momentum from the broad distribution destabilizes the first
         // fine-tuning steps otherwise).
-        state.reset_momentum()?;
+        self.backend.reset_momentum()?;
         Ok(())
     }
 
     /// Evaluate test top-1 (full forward, all parameters — §III-A).
-    pub fn evaluate(&self, state: &TrainState) -> Result<(f64, f64)> {
-        let mb = self.session.manifest.micro_batch;
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let mb = self.backend.eval_micro_batch();
         let mut meter = Meter::new();
         let mut i = 0;
         while i + mb <= self.test.len() {
             let idxs: Vec<usize> = (i..i + mb).collect();
             let (x, y) = self.test.gather(&idxs);
-            let out = self.session.eval(
-                state,
-                &self.session.x_literal(&x)?,
-                &self.session.y_literal(&y)?,
-                None,
-            )?;
+            let out = self.backend.eval(&x, &y, None)?;
             meter.push(out.loss, out.n_correct, mb);
             i += mb;
         }
@@ -379,8 +378,7 @@ impl<'a> Trainer<'a> {
     /// Run the full fine-tuning loop and report paper metrics.
     pub fn run(&mut self) -> Result<TrainReport> {
         let mb = self.mb();
-        let mut state = self.init_state()?;
-        self.pretrain(&mut state)?;
+        self.pretrain()?;
 
         let mut scheduler = build_scheduler(self.cfg.scheduler, self.cfg.scores, self.cfg.seed);
         let budget = match &self.cfg.hetero {
@@ -409,7 +407,6 @@ impl<'a> Trainer<'a> {
 
         let t0 = Instant::now();
         let mut batch_idx = 0;
-        let mut epoch = 0u64;
         'outer: while batch_idx < self.cfg.batches {
             let mut batcher = crate::data::Batcher::new(
                 &self.train,
@@ -422,35 +419,32 @@ impl<'a> Trainer<'a> {
                 if batch_idx >= self.cfg.batches {
                     break 'outer;
                 }
-                let lits = self.micro_literals(&micros)?;
                 // --- contribution scores (cached; paper computes them
                 // once before fine-tuning) ---------------------------------
                 if score_cache.len() <= epoch_pos {
                     score_cache.resize(epoch_pos + 1, None);
                 }
                 if score_cache[epoch_pos].is_none() {
-                    // The scores artifact is lowered at the manifest's
-                    // micro-batch; variant runs (Table VI) use uniform
-                    // scores — the knapsack still enforces exact counts.
-                    let can_probe = self.variant_mb.is_none();
+                    let can_probe = self.backend.supports_probe();
                     score_cache[epoch_pos] = Some(if scheduler.needs_scores() && can_probe {
-                        let probes: Vec<Tensor> = lits
+                        let probes: Vec<Tensor> = micros
                             .iter()
-                            .map(|(x, y)| self.session.probe_scores(&state, x, y))
+                            .map(|(x, y)| self.backend.score_probe(x, y))
                             .collect::<Result<_>>()?;
                         ScoreBook::from_probes(&self.partition, &probes)
                     } else {
                         // Score-free policies (Standard, Random) skip the
-                        // probe entirely — its artifact never compiles.
-                        ScoreBook::zeros(self.partition.n_subnets(), lits.len())
+                        // probe entirely — it never runs (and on the XLA
+                        // backend its artifact never compiles).
+                        ScoreBook::zeros(self.partition.n_subnets(), micros.len())
                     });
                 }
                 let book = score_cache[epoch_pos].as_ref().unwrap();
                 // --- schedule + execute -----------------------------------
                 let table = scheduler.schedule(book, &budget);
-                for (i, (x, y)) in lits.iter().enumerate() {
+                for (i, (x, y)) in micros.iter().enumerate() {
                     let masks = table.masks_for_micro(&self.partition, i);
-                    let out = self.session.step(&mut state, x, y, &masks, self.cfg.lr)?;
+                    let out = self.backend.step(x, y, &masks, self.cfg.lr)?;
                     meter.push(out.loss, out.n_correct, mb);
                     loss_curve.push(out.loss);
                 }
@@ -462,20 +456,19 @@ impl<'a> Trainer<'a> {
                 exec_ms_sum += cluster.mean_device_ms;
                 makespan_sum += cluster.makespan_ms;
                 if self.cfg.eval_every > 0 && (batch_idx + 1) % self.cfg.eval_every == 0 {
-                    let (top1, _) = self.evaluate(&state)?;
+                    let (top1, _) = self.evaluate()?;
                     eval_curve.push((batch_idx + 1, top1));
                 }
                 batch_idx += 1;
                 epoch_pos += 1;
             }
-            epoch += 1;
-            let _ = epoch;
         }
         let wall_s = t0.elapsed().as_secs_f64();
-        let (test_top1, test_loss) = self.evaluate(&state)?;
+        let (test_top1, test_loss) = self.evaluate()?;
         let b = workloads.batches().max(1) as f64;
         Ok(TrainReport {
             scheduler: self.cfg.scheduler.label().to_string(),
+            backend: self.backend.label().to_string(),
             final_train_loss: meter.mean_loss(),
             test_top1,
             test_loss,

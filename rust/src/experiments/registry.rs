@@ -2,12 +2,12 @@
 
 use anyhow::Result;
 
-use crate::runtime::ArtifactRegistry;
+use crate::backend::BackendProvider;
 
 /// Shared handles every experiment receives.
 pub struct ExperimentCtx<'a> {
-    /// The opened artifact set.
-    pub registry: &'a ArtifactRegistry,
+    /// The compute backend family every run opens its model from.
+    pub provider: &'a dyn BackendProvider,
     /// Scale factor for run length (1 = shipped default; raise for
     /// closer-to-paper convergence, lower for smoke tests).
     pub scale: f64,
@@ -17,8 +17,8 @@ pub struct ExperimentCtx<'a> {
 
 impl<'a> ExperimentCtx<'a> {
     /// Context with default scale (1.0) and seed (17).
-    pub fn new(registry: &'a ArtifactRegistry) -> ExperimentCtx<'a> {
-        ExperimentCtx { registry, scale: 1.0, seed: 17 }
+    pub fn new(provider: &'a dyn BackendProvider) -> ExperimentCtx<'a> {
+        ExperimentCtx { provider, scale: 1.0, seed: 17 }
     }
 
     /// Scaled batch count (min 2).

@@ -3,11 +3,11 @@
 use anyhow::Result;
 
 use super::registry::ExperimentCtx;
+use crate::backend::{Backend, BackendProvider, BackendSel};
 use crate::cluster::{ExecTimeModel, HeteroSpec};
 use crate::coordinator::{SchedulerKind, Trainer, TrainerConfig, TrainReport};
 use crate::data::SyntheticKind;
 use crate::metrics::{pct, Table};
-use crate::runtime::Manifest;
 use crate::schedule::scaler::Lambda;
 use crate::schedule::{Budget, Op};
 use crate::scores::{Metric, ScoreConfig};
@@ -26,12 +26,10 @@ pub(super) fn budget_points() -> Vec<(&'static str, Budget)> {
     ]
 }
 
-/// Run one configured fine-tuning and return the report.
-pub(super) fn run_one(
-    ctx: &ExperimentCtx,
-    manifest: &Manifest,
-    cfg: TrainerConfig,
-) -> Result<TrainReport> {
+/// Run one configured fine-tuning and return the report. The backend
+/// (and, via `cfg.lora_rank`, the model variant) comes from the
+/// context's provider.
+pub(super) fn run_one(ctx: &ExperimentCtx, cfg: TrainerConfig) -> Result<TrainReport> {
     let label = format!(
         "{} on {:?} budget ({},{})",
         cfg.scheduler.label(),
@@ -40,7 +38,7 @@ pub(super) fn run_one(
         cfg.budget.n_fwd
     );
     crate::info!("run_one: {label}");
-    let mut trainer = Trainer::new(ctx.registry, manifest, cfg)?;
+    let mut trainer = Trainer::new(ctx.provider, cfg)?;
     let r = trainer.run()?;
     crate::info!(
         "  -> top-1 {} loss {:.3} compute {} comm {} var {:.3} ({:.1}s)",
@@ -56,7 +54,6 @@ pub(super) fn run_one(
 
 /// Table I: workload variance across devices at a ~60% compute budget.
 pub fn table1(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
     let budget = Budget::uniform(5, 3, 0); // 60% compute, the paper's setting
     let methods = vec![
         SchedulerKind::D2ft,
@@ -75,7 +72,7 @@ pub fn table1(ctx: &ExperimentCtx) -> Result<String> {
             pretrain_batches: 2,
             ..TrainerConfig::quick(SyntheticKind::Cifar100Like, m, budget.clone())
         };
-        let r = run_one(ctx, manifest, cfg)?;
+        let r = run_one(ctx, cfg)?;
         table.row(&[
             r.scheduler.clone(),
             format!("{:.2}", r.workload_variance),
@@ -89,7 +86,6 @@ pub fn table1(ctx: &ExperimentCtx) -> Result<String> {
 
 /// Table II: per-subnet execution time (modelled) + top-1 @60% budget.
 pub fn table2(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
     let budget = Budget::uniform(5, 3, 0);
     let methods = vec![
         SchedulerKind::D2ft,
@@ -105,7 +101,7 @@ pub fn table2(ctx: &ExperimentCtx) -> Result<String> {
             batches: ctx.batches(16),
             ..TrainerConfig::quick(SyntheticKind::Cifar100Like, m, budget.clone())
         };
-        let r = run_one(ctx, manifest, cfg)?;
+        let r = run_one(ctx, cfg)?;
         table.row(&[
             r.scheduler.clone(),
             format!("{:.2}ms", r.makespan_ms),
@@ -120,7 +116,6 @@ pub fn table2(ctx: &ExperimentCtx) -> Result<String> {
 
 /// Table III: backward x forward score-metric combinations.
 pub fn table3(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
     // Paper setting: 2 p_f, 2 p_o, 1 p_s on Cars.
     let budget = Budget::uniform(5, 2, 2);
     let combos: Vec<(Metric, Metric)> = vec![
@@ -141,7 +136,7 @@ pub fn table3(ctx: &ExperimentCtx) -> Result<String> {
             scores: ScoreConfig { backward, forward },
             ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
         };
-        let r = run_one(ctx, manifest, cfg)?;
+        let r = run_one(ctx, cfg)?;
         table.row(&[backward.name().into(), forward.name().into(), pct(r.test_top1)]);
     }
     out.push_str(&table.render());
@@ -150,43 +145,37 @@ pub fn table3(ctx: &ExperimentCtx) -> Result<String> {
 }
 
 /// Table IV: subnet execution time for 1..5 micro-batches (p_f vs p_o) —
-/// both the paper's V100 calibration and this host's measured PJRT times.
+/// both the paper's V100 calibration and this host's measured step/eval
+/// times on the context's backend.
 pub fn table4(ctx: &ExperimentCtx) -> Result<String> {
     use std::time::Instant;
-    let manifest = &ctx.registry.full_manifest;
     let model = ExecTimeModel::paper();
     let mut out = section("Table IV — execution time vs micro-batch count");
     let mut table = Table::new(&[
         "Micro-batches", "p_f (paper model)", "p_o (paper model)",
         "p_f (this host)", "p_o (this host)", "fwd ratio (host)",
     ]);
-    // Measured: run the fused trainstep (p_f) / eval (p_o) artifacts k
-    // times on this host's PJRT CPU client.
-    let cfg = TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::Standard,
-                                   Budget::uniform(5, 5, 0));
-    let trainer = Trainer::new(ctx.registry, manifest, cfg)?;
-    let mut state = trainer.init_state()?;
-    let session = crate::runtime::Session::new(ctx.registry, manifest)?;
-    let mc = &manifest.config;
-    let mb = manifest.micro_batch;
+    // Measured: run the fused step (p_f) / eval (p_o) on this host's
+    // backend.
+    let mut backend = ctx.provider.open(&BackendSel::full(ctx.seed))?;
+    let mc = backend.config().clone();
+    let mb = backend.micro_batch();
     let spec = crate::data::DatasetSpec::preset(SyntheticKind::Cifar100Like, mc.img_size, mb, 3);
     let d = spec.generate("train");
-    let (xt, yt) = d.gather(&(0..mb).collect::<Vec<_>>());
-    let x = session.x_literal(&xt)?;
-    let y = session.y_literal(&yt)?;
+    let (x, y) = d.gather(&(0..mb).collect::<Vec<_>>());
     let masks = crate::schedule::MaskPair::ones(mc.depth, mc.heads);
-    // warmup
-    session.step(&mut state, &x, &y, &masks, 0.0)?;
-    session.eval(&state, &x, &y, None)?;
+    // warmup (and, on the XLA backend, compile)
+    backend.step(&x, &y, &masks, 0.0)?;
+    backend.eval(&x, &y, None)?;
     for k in 1..=5usize {
         let t0 = Instant::now();
         for _ in 0..k {
-            session.step(&mut state, &x, &y, &masks, 0.0)?;
+            backend.step(&x, &y, &masks, 0.0)?;
         }
         let full_ms = t0.elapsed().as_secs_f64() * 1e3;
         let t1 = Instant::now();
         for _ in 0..k {
-            session.eval(&state, &x, &y, None)?;
+            backend.eval(&x, &y, None)?;
         }
         let fwd_ms = t1.elapsed().as_secs_f64() * 1e3;
         table.row(&[
@@ -206,11 +195,11 @@ pub fn table4(ctx: &ExperimentCtx) -> Result<String> {
 
 /// Table V: impact of the number of subnets (partition granularity).
 pub fn table5(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
+    let mc = ctx.provider.model_config().clone();
     let budget = Budget::uniform(5, 2, 2);
     let mut out = section("Table V — impact of the number of subnets (CIFAR-100-like)");
     let mut table = Table::new(&["Number of subnets", "(paper analogue)", "Top-1 accuracy"]);
-    let heads = manifest.config.heads;
+    let heads = mc.heads;
     let groups: Vec<usize> = (1..=3).filter(|g| heads % g == 0).collect();
     let analogues = ["74", "38", "26"];
     for (gi, g) in groups.iter().enumerate() {
@@ -219,8 +208,8 @@ pub fn table5(ctx: &ExperimentCtx) -> Result<String> {
             partition_group: *g,
             ..TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, budget.clone())
         };
-        let n_subnets = manifest.config.depth * heads / g + 2;
-        let r = run_one(ctx, manifest, cfg)?;
+        let n_subnets = mc.depth * heads / g + 2;
+        let r = run_one(ctx, cfg)?;
         table.row(&[
             n_subnets.to_string(),
             analogues.get(gi).unwrap_or(&"-").to_string(),
@@ -232,14 +221,14 @@ pub fn table5(ctx: &ExperimentCtx) -> Result<String> {
     Ok(out)
 }
 
-/// Table VI: impact of micro-batch size (4 / 8 / 16) at fixed compute.
+/// Table VI: impact of micro-batch size at fixed compute.
 pub fn table6(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
+    let base_mb = ctx.provider.micro_batch();
     let mut out = section("Table VI — impact of micro-batch size (CIFAR-100-like)");
     let mut table = Table::new(&["Micro-batch size", "Micro-batches/batch", "Top-1 accuracy"]);
     // paper: batch 80; 40% p_f, 40% p_o, 20% p_s at every granularity.
-    let mut sizes: Vec<usize> = manifest.mb_variants.clone();
-    sizes.push(manifest.micro_batch);
+    let mut sizes: Vec<usize> = ctx.provider.mb_variants();
+    sizes.push(base_mb);
     sizes.sort_unstable();
     for mbs in sizes {
         let micros = 80 / mbs;
@@ -257,7 +246,15 @@ pub fn table6(ctx: &ExperimentCtx) -> Result<String> {
                 Budget::uniform(micros, n_full, n_fwd),
             )
         };
-        let r = run_one_mb_variant(ctx, manifest, cfg, mbs)?;
+        let r = if mbs == base_mb {
+            run_one(ctx, cfg)?
+        } else {
+            // Variant models share parameters; only the per-step batch
+            // size differs (a lowered trainstep variant on XLA, a plain
+            // argument on the native backend).
+            let mut trainer = Trainer::new_with_micro_batch(ctx.provider, cfg, mbs)?;
+            trainer.run()?
+        };
         table.row(&[mbs.to_string(), micros.to_string(), pct(r.test_top1)]);
     }
     out.push_str(&table.render());
@@ -265,23 +262,9 @@ pub fn table6(ctx: &ExperimentCtx) -> Result<String> {
     Ok(out)
 }
 
-fn run_one_mb_variant(
-    ctx: &ExperimentCtx,
-    manifest: &Manifest,
-    cfg: TrainerConfig,
-    mbs: usize,
-) -> Result<TrainReport> {
-    if mbs == manifest.micro_batch {
-        return run_one(ctx, manifest, cfg);
-    }
-    // Variant manifests share params/eval; only the trainstep differs.
-    let mut trainer = Trainer::new_with_trainstep_variant(ctx.registry, manifest, cfg, mbs)?;
-    trainer.run()
-}
-
 /// Table VII: memory heterogeneity ({9, 14, 19} large-memory devices).
 pub fn table7(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
+    let mc = ctx.provider.model_config().clone();
     let mut out = section("Table VII — memory heterogeneity (CIFAR-100-like)");
     let mut table = Table::new(&["Large-memory devices", "Devices total", "Top-1 accuracy"]);
     // homogeneous reference
@@ -289,12 +272,18 @@ pub fn table7(ctx: &ExperimentCtx) -> Result<String> {
         batches: ctx.batches(16),
         ..TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
     };
-    let r0 = run_one(ctx, manifest, base.clone())?;
-    table.row(&["0 (homogeneous)".into(), format!("{}", manifest.config.body_subnets() + 2), pct(r0.test_top1)]);
-    for n_large in [9usize, 14, 19] {
+    let r0 = run_one(ctx, base.clone())?;
+    table.row(&["0 (homogeneous)".into(), format!("{}", mc.body_subnets() + 2), pct(r0.test_top1)]);
+    // Up to half the body subnets merge into 2-head devices; the paper's
+    // {9, 14, 19} settings scale down with the model (deduped after
+    // clamping so small models don't rerun identical settings).
+    let max_large = mc.body_subnets() / 2;
+    let mut settings: Vec<usize> = [9usize, 14, 19].iter().map(|&n| n.min(max_large)).collect();
+    settings.dedup();
+    for n_large in settings {
         let cfg = TrainerConfig { hetero: Some(HeteroSpec::memory(n_large)), ..base.clone() };
-        let r = run_one(ctx, manifest, cfg)?;
-        let devices = manifest.config.body_subnets() - n_large + 2;
+        let r = run_one(ctx, cfg)?;
+        let devices = mc.body_subnets() - n_large + 2;
         table.row(&[n_large.to_string(), devices.to_string(), pct(r.test_top1)]);
     }
     out.push_str(&table.render());
@@ -304,18 +293,21 @@ pub fn table7(ctx: &ExperimentCtx) -> Result<String> {
 
 /// Table VIII: computational heterogeneity ({9, 14, 19} fast devices).
 pub fn table8(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
+    let mc = ctx.provider.model_config().clone();
     let mut out = section("Table VIII — computational heterogeneity (CIFAR-100-like)");
     let mut table = Table::new(&["High-speed devices", "Top-1 accuracy"]);
     let base = TrainerConfig {
         batches: ctx.batches(16),
         ..TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
     };
-    let r0 = run_one(ctx, manifest, base.clone())?;
+    let r0 = run_one(ctx, base.clone())?;
     table.row(&["0 (homogeneous)".into(), pct(r0.test_top1)]);
-    for n_fast in [9usize, 14, 19] {
+    let max_fast = mc.body_subnets();
+    let mut settings: Vec<usize> = [9usize, 14, 19].iter().map(|&n| n.min(max_fast)).collect();
+    settings.dedup();
+    for n_fast in settings {
         let cfg = TrainerConfig { hetero: Some(HeteroSpec::compute(n_fast)), ..base.clone() };
-        let r = run_one(ctx, manifest, cfg)?;
+        let r = run_one(ctx, cfg)?;
         table.row(&[n_fast.to_string(), pct(r.test_top1)]);
     }
     out.push_str(&table.render());
@@ -325,7 +317,6 @@ pub fn table8(ctx: &ExperimentCtx) -> Result<String> {
 
 /// Table IX: Forward-Only effectiveness (1 p_f fixed, 0..4 p_o).
 pub fn table9(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
     let mut out = section("Table IX — Forward-Only (p_o) effectiveness (Cars-like)");
     let mut table = Table::new(&["Forward setting", "Computational cost", "Top-1 accuracy"]);
     for n_po in 0..=4usize {
@@ -334,7 +325,7 @@ pub fn table9(ctx: &ExperimentCtx) -> Result<String> {
             batches: ctx.batches(16),
             ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
         };
-        let r = run_one(ctx, manifest, cfg)?;
+        let r = run_one(ctx, cfg)?;
         table.row(&[
             format!("{n_po}p_o"),
             pct(budget.compute_fraction(0.4)),
@@ -349,7 +340,6 @@ pub fn table9(ctx: &ExperimentCtx) -> Result<String> {
 
 /// Table X: bi-level vs Scaler-lambda scheduling.
 pub fn table10(ctx: &ExperimentCtx) -> Result<String> {
-    let manifest = &ctx.registry.full_manifest;
     let budget = Budget::uniform(5, 2, 2); // paper: 2pf, 2po, 1ps
     let mut out = section("Table X — bi-level scheduling vs Scaler (CIFAR-100-like)");
     let mut table = Table::new(&["Optimization problem", "lambda", "Top-1 accuracy"]);
@@ -365,7 +355,7 @@ pub fn table10(ctx: &ExperimentCtx) -> Result<String> {
             batches: ctx.batches(16),
             ..TrainerConfig::quick(SyntheticKind::Cifar100Like, kind, budget.clone())
         };
-        let r = run_one(ctx, manifest, cfg)?;
+        let r = run_one(ctx, cfg)?;
         let name = if matches!(kind, SchedulerKind::D2ft) { "Bi-level" } else { "Scaler" };
         table.row(&[name.into(), lam.into(), pct(r.test_top1)]);
     }

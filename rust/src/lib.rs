@@ -17,21 +17,26 @@
 //!   simulated K-device cluster with the paper's cost/time model, the
 //!   training coordinator, metrics, and the experiment harness that
 //!   regenerates every table and figure.
-//! * **L2** — the masked ViT fwd/bwd + SGD trainstep, written in JAX and
-//!   AOT-lowered to HLO text (`artifacts/`).
+//! * **L2** — the masked ViT fwd/bwd + SGD trainstep. The default
+//!   [`backend::native`] implementation is pure Rust on
+//!   [`tensor::Tensor`]; the optional `xla` feature swaps in the
+//!   original JAX programs AOT-lowered to HLO text (`artifacts/`).
 //! * **L1** — Pallas kernels (per-head masked attention, masked LoRA
-//!   deltas) called from L2 and lowered into the same HLO.
+//!   deltas) called from the JAX L2 and lowered into the same HLO
+//!   (XLA path only; the native backend fuses the same masking into
+//!   its attention loop).
 //!
-//! The [`runtime`] module loads the artifacts via the PJRT C API, the
-//! [`coordinator`] drives training end-to-end, and the simulated cluster
-//! executes each scheduled batch on the parallel multi-device engine
+//! The [`backend`] module is the seam: the [`coordinator`] drives any
+//! [`backend::Backend`] end-to-end, and the simulated cluster executes
+//! each scheduled batch on the parallel multi-device engine
 //! ([`cluster::Engine`] — one worker thread per device, step barrier,
 //! comm/compute overlap; `--serial` keeps the bitwise-identical
 //! reference path). See `DESIGN.md` for the full system inventory,
-//! engine dataflow, and per-experiment index.
+//! backend contract, engine dataflow, and per-experiment index.
 
 #![warn(missing_docs)]
 
+pub mod backend;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;

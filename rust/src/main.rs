@@ -4,16 +4,19 @@
 //!   repro train       [flags]   one fine-tuning run, any scheduler
 //!   repro experiment  <id>      regenerate a paper table/figure
 //!   repro list                  list experiments
-//!   repro info                  artifact/manifest summary
+//!   repro info                  backend/model summary
+//!
+//! `--backend native` (the default) needs no setup at all; `--backend
+//! xla` needs a build with `--features xla` plus `make artifacts`.
 
 use anyhow::Result;
 
+use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::cluster::ExecMode;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
 use d2ft::experiments::{list_experiments, run_experiment, ExperimentCtx};
 use d2ft::metrics::pct;
-use d2ft::runtime::ArtifactRegistry;
 use d2ft::schedule::Budget;
 use d2ft::scores::{Metric, ScoreConfig};
 use d2ft::util::cli::Cli;
@@ -22,7 +25,8 @@ fn cli() -> Cli {
     Cli::new("repro", "D2FT: Distributed Dynamic Fine-Tuning (paper reproduction)")
         .positional("command", "train | experiment <id> | list | info")
         .positional("experiment-id", "experiment id for `experiment`")
-        .flag("artifacts", "artifacts", "artifacts directory (make artifacts)")
+        .flag("backend", "native", "compute backend: native (pure Rust, zero setup) | xla (PJRT artifacts)")
+        .flag("artifacts", "artifacts", "artifacts directory (xla backend only; make artifacts)")
         .flag("dataset", "c100", "c10 | c100 | cars")
         .flag("scheduler", "d2ft", "d2ft | standard | random | dpruning-m | dpruning-mg | moe | scaler-max|min|0.1|0.2")
         .flag("batches", "30", "fine-tuning batches")
@@ -38,7 +42,7 @@ fn cli() -> Cli {
         .flag("forward-score", "fisher", "fisher|gradmag|taylor|weightmag")
         .flag("partition-group", "1", "heads per subnet (Table V)")
         .flag("scale", "1.0", "experiment run-length scale factor")
-        .flag("lora-rank", "0", "use the LoRA artifact set at this rank (0 = full FT)")
+        .flag("lora-rank", "0", "LoRA adapter rank (0 = full FT)")
         .flag("eval-every", "0", "evaluate test top-1 every N batches")
         .flag("workers", "0", "engine worker threads (0 = one per simulated device)")
         .switch("serial", "serial cluster execution (reference path; same metrics)")
@@ -57,6 +61,12 @@ fn main() -> Result<()> {
     if args.get_bool("quiet") {
         d2ft::util::log::set_level(d2ft::util::log::Level::Warn);
     }
+    let open_provider = || -> Result<Box<dyn BackendProvider>> {
+        provider_for(
+            BackendKind::parse(args.get("backend"))?,
+            std::path::Path::new(args.get("artifacts")),
+        )
+    };
     let command = args.positional(0).unwrap_or("info").to_string();
     match command.as_str() {
         "list" => {
@@ -66,18 +76,33 @@ fn main() -> Result<()> {
             Ok(())
         }
         "info" => {
-            let registry = ArtifactRegistry::open(std::path::Path::new(args.get("artifacts")))?;
-            let m = &registry.full_manifest;
-            println!("preset          {}", registry.preset);
+            let provider = open_provider()?;
+            let m = provider.model_config();
+            println!("backend         {}", provider.label());
             println!(
                 "model           ViT d{} x{}L x{}H, {}x{} px, {} classes",
-                m.config.dim, m.config.depth, m.config.heads,
-                m.config.img_size, m.config.img_size, m.config.classes
+                m.dim, m.depth, m.heads, m.img_size, m.img_size, m.classes
             );
-            println!("micro-batch     {} (variants {:?})", m.micro_batch, m.mb_variants);
-            println!("parameters      {} tensors, {} elems", m.n_params(), m.total_elems);
-            println!("lora ranks      {:?} (standard {})", registry.lora_ranks, registry.lora_standard_rank);
-            println!("body subnets    {} (+2 = {} devices)", m.config.body_subnets(), m.config.body_subnets() + 2);
+            println!(
+                "micro-batch     {} (variants {:?})",
+                provider.micro_batch(),
+                provider.mb_variants()
+            );
+            println!(
+                "parameters      {} tensors, {} elems",
+                provider.n_params(),
+                provider.total_elems()
+            );
+            println!(
+                "lora ranks      {:?} (standard {})",
+                provider.lora_ranks(),
+                provider.lora_standard_rank()
+            );
+            println!(
+                "body subnets    {} (+2 = {} devices)",
+                m.body_subnets(),
+                m.body_subnets() + 2
+            );
             Ok(())
         }
         "experiment" => {
@@ -85,15 +110,15 @@ fn main() -> Result<()> {
                 .positional(1)
                 .ok_or_else(|| anyhow::anyhow!("usage: repro experiment <id> (see `repro list`)"))?
                 .to_string();
-            let registry = ArtifactRegistry::open(std::path::Path::new(args.get("artifacts")))?;
-            let mut ctx = ExperimentCtx::new(&registry);
+            let provider = open_provider()?;
+            let mut ctx = ExperimentCtx::new(provider.as_ref());
             ctx.scale = args.get_f64("scale")?;
             ctx.seed = args.get_u64("seed")?;
             run_experiment(&ctx, &id)?;
             Ok(())
         }
         "train" => {
-            let registry = ArtifactRegistry::open(std::path::Path::new(args.get("artifacts")))?;
+            let provider = open_provider()?;
             let micros = args.get_usize("micros")?;
             let budget = Budget::uniform(
                 micros,
@@ -123,15 +148,11 @@ fn main() -> Result<()> {
                 seed: args.get_u64("seed")?,
                 pretrain_batches: args.get_usize("pretrain-batches")?,
                 eval_every: args.get_usize("eval-every")?,
+                lora_rank: args.get_usize("lora-rank")?,
             };
-            let lora_rank = args.get_usize("lora-rank")?;
-            let manifest = if lora_rank > 0 {
-                registry.lora_manifest(lora_rank)?
-            } else {
-                &registry.full_manifest
-            };
-            let mut trainer = Trainer::new(&registry, manifest, cfg)?;
+            let mut trainer = Trainer::new(provider.as_ref(), cfg)?;
             let r = trainer.run()?;
+            println!("backend              {}", r.backend);
             println!("scheduler            {}", r.scheduler);
             println!("batches              {}", r.batches);
             println!("final train loss     {:.4}", r.final_train_loss);

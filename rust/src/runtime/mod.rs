@@ -1,17 +1,26 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once per process,
-//! execute from the training hot path.
+//! Model/runtime metadata — and, behind the optional `xla` feature, the
+//! PJRT runtime that loads AOT artifacts (HLO text), compiles once per
+//! process, and executes from the training hot path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! The always-available half ([`Manifest`], [`ModelConfig`],
+//! [`ParamStore`]) is pure Rust: the model-configuration and parameter
+//! bookkeeping every backend shares. The XLA half follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id
+//! protos that xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids).
 
+#[cfg(feature = "xla")]
 mod artifacts;
 mod manifest;
 mod params;
+#[cfg(feature = "xla")]
 mod session;
 
+#[cfg(feature = "xla")]
 pub use artifacts::ArtifactRegistry;
 pub use manifest::{Manifest, ModelConfig, ParamEntry};
 pub use params::ParamStore;
-pub use session::{EvalOut, Session, StepOut, TrainState};
+#[cfg(feature = "xla")]
+pub use session::{Session, TrainState};

@@ -1,5 +1,6 @@
-//! ParamStore: the flat f32 parameter blob + per-tensor views and the
-//! XLA `Literal` conversion used to feed the trainstep executable.
+//! ParamStore: the flat f32 parameter blob + per-tensor views. With the
+//! `xla` feature, also the `Literal` conversion used to feed the
+//! trainstep executable.
 
 use std::path::Path;
 
@@ -80,6 +81,7 @@ impl ParamStore {
 
     /// Build the per-tensor `xla::Literal` argument vector, in manifest
     /// (== HLO parameter) order.
+    #[cfg(feature = "xla")]
     pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
         self.entries
             .iter()
@@ -92,6 +94,7 @@ impl ParamStore {
     }
 
     /// Overwrite the blob from per-tensor literals (post-step write-back).
+    #[cfg(feature = "xla")]
     pub fn from_literals(&mut self, literals: &[xla::Literal]) -> Result<()> {
         anyhow::ensure!(literals.len() == self.entries.len(), "literal count mismatch");
         for (e, lit) in self.entries.iter().zip(literals) {

@@ -12,6 +12,7 @@ use anyhow::Result;
 use super::artifacts::ArtifactRegistry;
 use super::manifest::Manifest;
 use super::params::ParamStore;
+use crate::backend::{EvalOut, StepOut};
 use crate::schedule::table::MaskPair;
 use crate::tensor::Tensor;
 
@@ -61,24 +62,6 @@ impl TrainState {
     pub fn write_back(&self, store: &mut ParamStore) -> Result<()> {
         store.from_literals(&self.params)
     }
-}
-
-/// Output of one trainstep execute.
-#[derive(Clone, Copy, Debug)]
-pub struct StepOut {
-    /// Mean loss over the micro-batch.
-    pub loss: f32,
-    /// Correct predictions in the micro-batch.
-    pub n_correct: f32,
-}
-
-/// Output of one eval execute.
-#[derive(Clone, Copy, Debug)]
-pub struct EvalOut {
-    /// Mean loss over the micro-batch.
-    pub loss: f32,
-    /// Correct predictions in the micro-batch.
-    pub n_correct: f32,
 }
 
 /// Compiled executables + model metadata for one manifest.

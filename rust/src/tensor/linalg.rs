@@ -1,0 +1,414 @@
+//! Dense linear-algebra kernels for the native compute backend: matmul
+//! (plus the transposed variants gradients need), 2-D transpose, row-wise
+//! softmax, row-wise layer norm, and GELU — each with its backward pass.
+//!
+//! Everything operates on 2-D row-major [`Tensor`]s; the backend flattens
+//! `[mb, T, D]` activations to `[mb*T, D]` matrices and loops per-sample
+//! only where attention genuinely needs the `[T, T]` structure. All
+//! accumulation is sequential f32, so results are bit-deterministic.
+
+use super::Tensor;
+
+fn dims2(t: &Tensor) -> (usize, usize) {
+    assert_eq!(t.shape().len(), 2, "expected a 2-D tensor, got {:?}", t.shape());
+    (t.shape()[0], t.shape()[1])
+}
+
+impl Tensor {
+    /// Matrix product `self [m,k] x other [k,n] -> [m,n]`.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = dims2(self);
+        let (k2, n) = dims2(other);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let a = self.data();
+        let b = other.data();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Transposed-A product `self^T [k,m]^T x other [k,n] -> [m,n]`
+    /// (the `dW = X^T dY` shape every weight gradient uses).
+    pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        let (k, m) = dims2(self);
+        let (k2, n) = dims2(other);
+        assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
+        let a = self.data();
+        let b = other.data();
+        let mut out = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Transposed-B product `self [m,k] x other^T [n,k]^T -> [m,n]`
+    /// (the `dX = dY W^T` shape every input gradient uses).
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        let (m, k) = dims2(self);
+        let (n, k2) = dims2(other);
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let a = self.data();
+        let b = other.data();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// 2-D transpose `[m,n] -> [n,m]`.
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = dims2(self);
+        let a = self.data();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = a[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    /// Numerically-stable softmax over the last dim of a 2-D tensor.
+    pub fn softmax_rows(&self) -> Tensor {
+        let (m, n) = dims2(self);
+        let a = self.data();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = &a[i * n..(i + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for (o, &x) in orow.iter_mut().zip(row) {
+                let e = (x - mx).exp();
+                *o = e;
+                z += e;
+            }
+            let inv = 1.0 / z;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Row-wise layer norm `y = (x - mean) * rstd * g + b` over the last
+    /// dim. Returns `(y, mean, rstd)`; the stats feed the backward pass.
+    pub fn layer_norm_rows(&self, g: &Tensor, b: &Tensor, eps: f32) -> (Tensor, Tensor, Tensor) {
+        let (m, n) = dims2(self);
+        assert_eq!(g.len(), n, "layer_norm gain length");
+        assert_eq!(b.len(), n, "layer_norm bias length");
+        let a = self.data();
+        let gd = g.data();
+        let bd = b.data();
+        let mut out = vec![0.0f32; m * n];
+        let mut means = vec![0.0f32; m];
+        let mut rstds = vec![0.0f32; m];
+        for i in 0..m {
+            let row = &a[i * n..(i + 1) * n];
+            let mean = row.iter().sum::<f32>() / n as f32;
+            let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+            let rstd = 1.0 / (var + eps).sqrt();
+            means[i] = mean;
+            rstds[i] = rstd;
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] = (row[j] - mean) * rstd * gd[j] + bd[j];
+            }
+        }
+        (
+            Tensor::from_vec(&[m, n], out),
+            Tensor::from_vec(&[m], means),
+            Tensor::from_vec(&[m], rstds),
+        )
+    }
+}
+
+/// Backward of [`Tensor::softmax_rows`]: given the softmax output `y` and
+/// upstream `dy`, returns `dx = y * (dy - sum(dy * y))` per row.
+pub fn softmax_rows_backward(y: &Tensor, dy: &Tensor) -> Tensor {
+    let (m, n) = dims2(y);
+    assert_eq!(y.shape(), dy.shape(), "softmax backward shape");
+    let yd = y.data();
+    let dyd = dy.data();
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let yr = &yd[i * n..(i + 1) * n];
+        let dyr = &dyd[i * n..(i + 1) * n];
+        let dot: f32 = yr.iter().zip(dyr).map(|(&a, &b)| a * b).sum();
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] = yr[j] * (dyr[j] - dot);
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Backward of [`Tensor::layer_norm_rows`]: given the *input* `x`, gain
+/// `g`, the saved `(mean, rstd)` stats, and upstream `d_out`, returns
+/// `(dx, dg, db)`.
+pub fn layer_norm_rows_backward(
+    x: &Tensor,
+    g: &Tensor,
+    mean: &Tensor,
+    rstd: &Tensor,
+    d_out: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (m, n) = dims2(x);
+    assert_eq!(d_out.shape(), x.shape(), "layer_norm backward shape");
+    let xd = x.data();
+    let gd = g.data();
+    let md = mean.data();
+    let rd = rstd.data();
+    let dod = d_out.data();
+    let mut dx = vec![0.0f32; m * n];
+    let mut dg = vec![0.0f32; n];
+    let mut db = vec![0.0f32; n];
+    for i in 0..m {
+        let xr = &xd[i * n..(i + 1) * n];
+        let dor = &dod[i * n..(i + 1) * n];
+        let (mu, rs) = (md[i], rd[i]);
+        // y_hat, dy, and the two row means the dx formula needs.
+        let mut mean_dy = 0.0f32;
+        let mut mean_dy_yhat = 0.0f32;
+        for j in 0..n {
+            let yhat = (xr[j] - mu) * rs;
+            let dy = dor[j] * gd[j];
+            dg[j] += dor[j] * yhat;
+            db[j] += dor[j];
+            mean_dy += dy;
+            mean_dy_yhat += dy * yhat;
+        }
+        mean_dy /= n as f32;
+        mean_dy_yhat /= n as f32;
+        let dxr = &mut dx[i * n..(i + 1) * n];
+        for j in 0..n {
+            let yhat = (xr[j] - mu) * rs;
+            let dy = dor[j] * gd[j];
+            dxr[j] = rs * (dy - mean_dy - yhat * mean_dy_yhat);
+        }
+    }
+    (
+        Tensor::from_vec(&[m, n], dx),
+        Tensor::from_vec(&[n], dg),
+        Tensor::from_vec(&[n], db),
+    )
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044715;
+
+/// GELU activation (tanh approximation), elementwise.
+pub fn gelu(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    for v in out.data_mut() {
+        let x = *v;
+        let u = GELU_C * (x + GELU_A * x * x * x);
+        *v = 0.5 * x * (1.0 + u.tanh());
+    }
+    out
+}
+
+/// Backward of [`gelu`]: given the pre-activation `x` and upstream
+/// `d_out`, returns the gradient w.r.t. `x`.
+pub fn gelu_backward(x: &Tensor, d_out: &Tensor) -> Tensor {
+    assert_eq!(x.shape(), d_out.shape(), "gelu backward shape");
+    let mut out = d_out.clone();
+    for (v, &xv) in out.data_mut().iter_mut().zip(x.data()) {
+        let u = GELU_C * (xv + GELU_A * xv * xv * xv);
+        let t = u.tanh();
+        let du = GELU_C * (1.0 + 3.0 * GELU_A * xv * xv);
+        let d = 0.5 * (1.0 + t) + 0.5 * xv * (1.0 - t * t) * du;
+        *v *= d;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.next_normal() * 0.5).collect())
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::from_vec(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit_transpose() {
+        let a = rand_t(&[4, 3], 1);
+        let b = rand_t(&[4, 5], 2);
+        let c = rand_t(&[5, 3], 3);
+        assert!(a.matmul_tn(&b).max_abs_diff(&a.transpose2().matmul(&b)) < 1e-6);
+        assert!(b.matmul_nt(&c).max_abs_diff(&b.matmul(&c.transpose2())) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = rand_t(&[3, 7], 4);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn softmax_rows_normalized_and_stable() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0]);
+        let s = a.softmax_rows();
+        for i in 0..2 {
+            let row = &s.data()[i * 3..(i + 1) * 3];
+            let z: f32 = row.iter().sum();
+            assert!((z - 1.0).abs() < 1e-6, "row {i} sums to {z}");
+            assert!(row.iter().all(|&p| p.is_finite() && p >= 0.0));
+        }
+        assert!((s.at(&[1, 0]) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layer_norm_rows_zero_mean_unit_var() {
+        let x = rand_t(&[5, 16], 6);
+        let g = Tensor::full(&[16], 1.0);
+        let b = Tensor::zeros(&[16]);
+        let (y, _, _) = x.layer_norm_rows(&g, &b, 1e-5);
+        for i in 0..5 {
+            let row = &y.data()[i * 16..(i + 1) * 16];
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5, "row {i} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {i} var {var}");
+        }
+    }
+
+    /// Central finite difference of a scalar-valued function of one
+    /// tensor element.
+    fn fd<F: FnMut(&Tensor) -> f32>(x: &Tensor, idx: usize, mut f: F) -> f32 {
+        let eps = 1e-2f32;
+        let mut xp = x.clone();
+        xp.data_mut()[idx] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[idx] -= eps;
+        (f(&xp) - f(&xm)) / (2.0 * eps)
+    }
+
+    fn assert_close(analytic: f32, numeric: f32, what: &str) {
+        let tol = 2e-3 + 2e-2 * analytic.abs().max(numeric.abs());
+        assert!(
+            (analytic - numeric).abs() < tol,
+            "{what}: analytic {analytic} vs numeric {numeric}"
+        );
+    }
+
+    #[test]
+    fn softmax_backward_matches_finite_difference() {
+        let x = rand_t(&[3, 5], 7);
+        let w = rand_t(&[3, 5], 8); // random projection -> scalar loss
+        let loss = |x: &Tensor| -> f32 {
+            x.softmax_rows()
+                .data()
+                .iter()
+                .zip(w.data())
+                .map(|(&a, &b)| a * b)
+                .sum()
+        };
+        let y = x.softmax_rows();
+        let dx = softmax_rows_backward(&y, &w);
+        for idx in [0usize, 4, 7, 14] {
+            assert_close(dx.data()[idx], fd(&x, idx, loss), &format!("softmax dx[{idx}]"));
+        }
+    }
+
+    #[test]
+    fn layer_norm_backward_matches_finite_difference() {
+        let x = rand_t(&[3, 8], 9);
+        let g = rand_t(&[8], 10);
+        let b = rand_t(&[8], 11);
+        let w = rand_t(&[3, 8], 12);
+        let loss = |x: &Tensor, g: &Tensor, b: &Tensor| -> f32 {
+            x.layer_norm_rows(g, b, 1e-5)
+                .0
+                .data()
+                .iter()
+                .zip(w.data())
+                .map(|(&a, &b)| a * b)
+                .sum()
+        };
+        let (_, mean, rstd) = x.layer_norm_rows(&g, &b, 1e-5);
+        let (dx, dg, db) = layer_norm_rows_backward(&x, &g, &mean, &rstd, &w);
+        for idx in [0usize, 5, 13, 23] {
+            let n = fd(&x, idx, |xp| loss(xp, &g, &b));
+            assert_close(dx.data()[idx], n, &format!("ln dx[{idx}]"));
+        }
+        for idx in [0usize, 3, 7] {
+            let n = fd(&g, idx, |gp| loss(&x, gp, &b));
+            assert_close(dg.data()[idx], n, &format!("ln dg[{idx}]"));
+            let n = fd(&b, idx, |bp| loss(&x, &g, bp));
+            assert_close(db.data()[idx], n, &format!("ln db[{idx}]"));
+        }
+    }
+
+    #[test]
+    fn gelu_backward_matches_finite_difference() {
+        let x = rand_t(&[2, 6], 13);
+        let w = rand_t(&[2, 6], 14);
+        let loss = |x: &Tensor| -> f32 {
+            gelu(x).data().iter().zip(w.data()).map(|(&a, &b)| a * b).sum()
+        };
+        let dx = gelu_backward(&x, &w);
+        for idx in [0usize, 3, 8, 11] {
+            assert_close(dx.data()[idx], fd(&x, idx, loss), &format!("gelu dx[{idx}]"));
+        }
+    }
+
+    #[test]
+    fn matmul_gradients_match_finite_difference() {
+        let a = rand_t(&[3, 4], 15);
+        let b = rand_t(&[4, 2], 16);
+        let w = rand_t(&[3, 2], 17);
+        let loss = |a: &Tensor, b: &Tensor| -> f32 {
+            a.matmul(b).data().iter().zip(w.data()).map(|(&x, &y)| x * y).sum()
+        };
+        let da = w.matmul_nt(&b); // dL/dA = dY B^T
+        let db = a.matmul_tn(&w); // dL/dB = A^T dY
+        for idx in [0usize, 5, 11] {
+            let n = fd(&a, idx, |ap| loss(ap, &b));
+            assert_close(da.data()[idx], n, &format!("matmul da[{idx}]"));
+        }
+        for idx in [0usize, 4, 7] {
+            let n = fd(&b, idx, |bp| loss(&a, bp));
+            assert_close(db.data()[idx], n, &format!("matmul db[{idx}]"));
+        }
+    }
+}

@@ -1,8 +1,12 @@
 //! Minimal dense f32 tensor for host-side work (data synthesis, metric
-//! reductions, parameter inspection). The training math itself runs
-//! inside the AOT-compiled XLA programs — this type never appears on the
-//! PJRT hot path beyond flat-slice views.
+//! reductions, parameter inspection) — and, since the backend refactor,
+//! the numeric substrate of the pure-Rust [`crate::backend::native`]
+//! training path: [`linalg`] provides matmul/transpose/softmax/
+//! layer-norm/GELU with their backward passes. When the optional `xla`
+//! feature drives training instead, this type never appears on the PJRT
+//! hot path beyond flat-slice views.
 
+pub mod linalg;
 mod ops;
 
 /// Dense row-major f32 tensor.

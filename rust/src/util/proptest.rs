@@ -65,11 +65,7 @@ where
         let seed = base_seed.unwrap_or_else(|| {
             // Stable per (property name, case index): failures reproduce
             // without any env var as long as the property is unchanged.
-            let mut h = 0xcbf29ce484222325u64;
-            for b in name.bytes() {
-                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-            }
-            h ^ case as u64
+            super::rng::fnv1a(name) ^ case as u64
         });
         let mut g = Gen { rng: Rng::new(seed) };
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));

@@ -10,6 +10,16 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// FNV-1a hash of a string — the crate's standard way to derive a
+/// stable seed from a name (parameter init, property-test cases).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;

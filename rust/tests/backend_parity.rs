@@ -1,0 +1,70 @@
+//! Feature-gated parity smoke test: the native and XLA backends must
+//! report identical *scheduler-level* numbers (compute/comm fraction,
+//! workload balance) for the same budget, because those are properties
+//! of the scheduling layer, not of the numerics. Requires the `xla`
+//! feature; skips cleanly when artifacts are absent.
+#![cfg(all(feature = "xla", feature = "native"))]
+
+use d2ft::backend::native::NativeProvider;
+use d2ft::backend::xla::XlaProvider;
+use d2ft::backend::BackendProvider;
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::data::SyntheticKind;
+use d2ft::schedule::Budget;
+
+fn short_cfg() -> TrainerConfig {
+    TrainerConfig {
+        train_size: 160,
+        test_size: 32,
+        batches: 3,
+        pretrain_batches: 1,
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar10Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 3, 1),
+        )
+    }
+}
+
+#[test]
+fn scheduler_level_metrics_agree_across_backends() {
+    let Ok(xla) = XlaProvider::open_default() else {
+        eprintln!("skipping backend parity test (run `make artifacts`)");
+        return;
+    };
+    let native = NativeProvider::default();
+
+    let run = |provider: &dyn BackendProvider| {
+        let mut t = Trainer::new(provider, short_cfg()).unwrap();
+        t.run().unwrap()
+    };
+    let rn = run(&native);
+    let rx = run(&xla);
+
+    // Backend-independent scheduler accounting (the device counts
+    // differ between the two models, so compare the ratios).
+    assert_eq!(rn.batches, rx.batches);
+    assert!(
+        (rn.compute_fraction - rx.compute_fraction).abs() < 1e-9,
+        "budget accounting must agree: {} vs {}",
+        rn.compute_fraction,
+        rx.compute_fraction
+    );
+    assert!((rn.comm_fraction - rx.comm_fraction).abs() < 1e-9);
+    assert_eq!(rn.workload_variance, 0.0, "D2FT balances exactly on native");
+    assert_eq!(rx.workload_variance, 0.0, "D2FT balances exactly on xla");
+    assert!((rn.compute_fraction - 0.68).abs() < 1e-9);
+
+    // Backend-dependent numerics: both must train sanely.
+    for r in [&rn, &rx] {
+        assert!(r.final_train_loss.is_finite() && r.final_train_loss > 0.0);
+        assert!(r.test_top1 >= 0.0 && r.test_top1 <= 1.0);
+        assert_eq!(r.loss_curve.len(), 15);
+    }
+    assert_eq!(rn.backend, "native");
+    assert_eq!(rx.backend, "xla");
+    println!(
+        "parity OK: compute {:.3} / comm {:.3} on both backends",
+        rn.compute_fraction, rn.comm_fraction
+    );
+}

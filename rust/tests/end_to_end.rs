@@ -1,13 +1,16 @@
-//! End-to-end coordinator tests on the real artifacts: short D2FT runs
-//! must train, balance workloads, and respect budgets.
+//! End-to-end coordinator tests on the native backend: short D2FT runs
+//! must train, balance workloads, and respect budgets — hermetically, on
+//! every machine (no artifacts, no native libraries).
 //!
-//! All scenarios share ONE #[test] (and one registry) so XLA compilation
-//! happens once per binary. Skips when artifacts are absent.
+//! The same scenarios run against the XLA backend in CI's `xla` job via
+//! `tests/backend_parity.rs`.
+#![cfg(feature = "native")]
 
+use d2ft::backend::native::NativeProvider;
+use d2ft::backend::Backend;
 use d2ft::cluster::HeteroSpec;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
-use d2ft::runtime::ArtifactRegistry;
 use d2ft::schedule::Budget;
 
 fn short_cfg(scheduler: SchedulerKind, budget: Budget) -> TrainerConfig {
@@ -22,14 +25,11 @@ fn short_cfg(scheduler: SchedulerKind, budget: Budget) -> TrainerConfig {
 
 #[test]
 fn coordinator_suite() {
-    let Ok(reg) = ArtifactRegistry::open_default() else {
-        eprintln!("skipping e2e tests (run `make artifacts`)");
-        return;
-    };
+    let provider = NativeProvider::default();
 
     // --- D2FT short run: trains, balances, budgets exact ----------------
     let cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1));
-    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    let mut t = Trainer::new(&provider, cfg).unwrap();
     let r = t.run().unwrap();
     assert_eq!(r.batches, 3);
     assert_eq!(r.loss_curve.len(), 15, "5 micro-steps per batch");
@@ -38,45 +38,54 @@ fn coordinator_suite() {
     assert!((r.compute_fraction - 0.68).abs() < 1e-9);
     assert!((r.comm_fraction - 0.70).abs() < 1e-9);
     assert!(r.test_top1 >= 0.0 && r.test_top1 <= 1.0);
+    assert_eq!(r.backend, "native");
     println!("d2ft short run OK");
 
     // --- model learns on easy data over a slightly longer run ------------
     let cfg = TrainerConfig {
-        batches: 10,
+        batches: 14,
         pretrain_batches: 8,
         train_size: 240,
         test_size: 40,
-        lr: 0.03,
+        lr: 0.05,
         ..TrainerConfig::quick(
             SyntheticKind::Cifar10Like,
             SchedulerKind::D2ft,
             Budget::uniform(5, 3, 1),
         )
     };
-    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    let mut t = Trainer::new(&provider, cfg).unwrap();
     let r = t.run().unwrap();
     // 10-way task on a 196-logit head: chance is far below 12%.
     assert!(
         r.test_top1 > 0.12,
-        "D2FT should be well above chance after 8 batches: top-1 {}",
+        "D2FT should be well above chance after 14 batches: top-1 {}",
         r.test_top1
+    );
+    // The loss curve itself must trend down over the run.
+    let early: f32 = r.loss_curve[..5].iter().sum::<f32>() / 5.0;
+    let late: f32 = r.loss_curve[r.loss_curve.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        late < early,
+        "training loss should fall: first-5 mean {early} vs last-5 mean {late}"
     );
     println!("learns OK (top-1 {:.1}%)", r.test_top1 * 100.0);
 
     // --- Random baseline runs but cannot balance -------------------------
     let cfg = short_cfg(SchedulerKind::Random, Budget::uniform(5, 3, 0));
-    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
+    let mut t = Trainer::new(&provider, cfg).unwrap();
     let r = t.run().unwrap();
     assert!(r.workload_variance > 0.0, "random cannot balance");
     println!("random baseline OK");
 
     // --- heterogeneity: merged partition trains --------------------------
+    let body = provider.spec().config.body_subnets();
     let cfg = TrainerConfig {
         hetero: Some(HeteroSpec::memory(5)),
         ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
     };
-    let mut t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
-    assert_eq!(t.partition().n_subnets(), reg.full_manifest.config.body_subnets() - 5);
+    let mut t = Trainer::new(&provider, cfg).unwrap();
+    assert_eq!(t.partition().n_subnets(), body - 5);
     let r = t.run().unwrap();
     assert!(r.final_train_loss.is_finite());
     println!("hetero OK");
@@ -86,7 +95,38 @@ fn coordinator_suite() {
         partition_group: 2,
         ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
     };
-    let t = Trainer::new(&reg, &reg.full_manifest, cfg).unwrap();
-    assert_eq!(t.partition().n_subnets(), reg.full_manifest.config.body_subnets() / 2);
+    let t = Trainer::new(&provider, cfg).unwrap();
+    assert_eq!(t.partition().n_subnets(), body / 2);
     println!("partition-group OK");
+
+    // --- micro-batch variant (Table VI wiring) ---------------------------
+    let cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1));
+    let mut t = Trainer::new_with_micro_batch(&provider, cfg, 2).unwrap();
+    assert_eq!(t.backend().micro_batch(), 2);
+    let r = t.run().unwrap();
+    assert!(r.final_train_loss.is_finite());
+    println!("mb-variant OK");
+
+    // --- LoRA run: adapters train, base weights frozen --------------------
+    let rank = provider.spec().lora_standard_rank;
+    let cfg = TrainerConfig {
+        lora_rank: rank,
+        ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1))
+    };
+    let mut t = Trainer::new(&provider, cfg).unwrap();
+    let base_before = t.backend().param("b00_wqkv").unwrap();
+    let adapter_before = t.backend().param("b00_lora_bq").unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_train_loss.is_finite());
+    assert_eq!(
+        base_before,
+        t.backend().param("b00_wqkv").unwrap(),
+        "base weights frozen in LoRA mode"
+    );
+    assert_ne!(
+        adapter_before,
+        t.backend().param("b00_lora_bq").unwrap(),
+        "LoRA B must train"
+    );
+    println!("lora OK");
 }

@@ -1,0 +1,349 @@
+//! Native-backend semantics: finite-difference gradient checks of the
+//! full model, property tests of the MaskPair contract ((a) fully
+//! selected == full fine-tuning, (b) p_s == residual identity, (c) p_o
+//! participates in the forward but never updates its own weights), and
+//! the LoRA rank round-trip. Everything here is hermetic — no artifacts,
+//! no native libraries.
+#![cfg(feature = "native")]
+
+use d2ft::backend::native::{NativeBackend, NativeProvider, NativeSpec};
+use d2ft::backend::{Backend, BackendProvider, BackendSel};
+use d2ft::data::{DatasetSpec, SyntheticKind};
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::{MaskPair, ScheduleTable};
+use d2ft::tensor::Tensor;
+use d2ft::util::proptest::check;
+
+/// Small-but-structured spec: 2 blocks x 2 heads, 5 tokens.
+fn spec() -> NativeSpec {
+    NativeSpec {
+        config: ModelConfig {
+            img_size: 8,
+            patch: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            lora_rank: 0,
+            head_dim: 8,
+            tokens: 5,
+        },
+        micro_batch: 2,
+        mb_variants: vec![4],
+        lora_ranks: vec![1, 2, 4],
+        lora_standard_rank: 2,
+        init_seed: 0xD2F7,
+    }
+}
+
+/// Same family at a different depth: parameters shared with `spec()`
+/// (embeddings, head, block 0) initialize identically by construction.
+fn spec_with_depth(depth: usize) -> NativeSpec {
+    let mut s = spec();
+    s.config.depth = depth;
+    s
+}
+
+fn sample(img: usize, mb: usize, seed: u64) -> (Tensor, Vec<i32>) {
+    let d = DatasetSpec::preset(SyntheticKind::Cifar10Like, img, mb, seed).generate("train");
+    d.gather(&(0..mb).collect::<Vec<_>>())
+}
+
+/// The per-head wqkv column slice `(sum of |delta|)` between two
+/// parameter snapshots, split into the target head vs all other heads.
+fn wqkv_head_delta(
+    before: &Tensor,
+    after: &Tensor,
+    cfg: &ModelConfig,
+    head: usize,
+) -> (f32, f32) {
+    let (d, dh) = (cfg.dim, cfg.head_dim);
+    let (mut target, mut others) = (0.0f32, 0.0f32);
+    for r in 0..d {
+        for p in 0..3 {
+            for h in 0..cfg.heads {
+                for c in 0..dh {
+                    let col = p * d + h * dh + c;
+                    let delta = (after.data()[r * 3 * d + col] - before.data()[r * 3 * d + col]).abs();
+                    if h == head {
+                        target += delta;
+                    } else {
+                        others += delta;
+                    }
+                }
+            }
+        }
+    }
+    (target, others)
+}
+
+// ---------------------------------------------------------------------------
+// Gradient correctness
+// ---------------------------------------------------------------------------
+
+/// Finite-difference check of the analytic gradients through the whole
+/// model: for a handful of parameters, perturb the element with the
+/// largest analytic gradient and compare the loss slope.
+#[test]
+fn native_gradients_match_finite_difference() {
+    let s = spec();
+    let (x, y) = sample(s.config.img_size, 2, 3);
+    let masks = MaskPair::ones(2, 2);
+    let mut be = NativeBackend::new(&s, 0, 2, 5);
+    let grads = be.param_grads(&x, &y, &masks);
+    let eps = 1e-2f32;
+    let mut checked = 0;
+    for name in [
+        "z_head_w", "z_ln_g", "b00_wqkv", "b00_wo", "b00_w1", "b00_b1", "b00_w2",
+        "b00_ln1_g", "b01_wqkv", "a_patch_w", "a_pos", "a_cls",
+    ] {
+        let g = &grads.iter().find(|(n, _)| n == name).unwrap().1;
+        // element with the largest analytic gradient
+        let (idx, &gv) = g
+            .data()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .unwrap();
+        if gv.abs() < 1e-4 {
+            continue; // too flat for a stable f32 finite difference
+        }
+        be.nudge_param(name, idx, eps);
+        let lp = be.eval(&x, &y, None).unwrap().loss;
+        be.nudge_param(name, idx, -2.0 * eps);
+        let lm = be.eval(&x, &y, None).unwrap().loss;
+        be.nudge_param(name, idx, eps); // restore
+        let numeric = (lp - lm) / (2.0 * eps);
+        let tol = 5e-3 + 5e-2 * gv.abs().max(numeric.abs());
+        assert!(
+            (gv - numeric).abs() < tol,
+            "{name}[{idx}]: analytic {gv} vs finite-difference {numeric}"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 8, "only {checked} parameters had usable gradients");
+}
+
+// ---------------------------------------------------------------------------
+// Mask semantics
+// ---------------------------------------------------------------------------
+
+/// (a) A fully-selected MaskPair makes `step` identical to full
+/// fine-tuning: stepping with a Standard schedule's masks equals
+/// stepping with all-ones masks, bitwise, across random seeds and data.
+#[test]
+fn full_masks_equal_full_fine_tuning() {
+    check("native-full-mask", 8, |g| {
+        let s = spec();
+        let seed = g.rng().next_u64();
+        let (x, y) = sample(s.config.img_size, 2, seed);
+        let mut a = NativeBackend::new(&s, 0, 2, seed);
+        let mut b = NativeBackend::new(&s, 0, 2, seed);
+        let table = ScheduleTable::standard(4, 1);
+        let part = d2ft::partition::Partition::per_head(&s.config);
+        let table_masks = table.masks_for_micro(&part, 0);
+        let ones = MaskPair::ones(2, 2);
+        let ra = a.step(&x, &y, &table_masks, 0.05).unwrap();
+        let rb = b.step(&x, &y, &ones, 0.05).unwrap();
+        if ra.loss != rb.loss {
+            return Err(format!("losses diverge: {} vs {}", ra.loss, rb.loss));
+        }
+        for name in a.param_names() {
+            if a.param(&name) != b.param(&name) {
+                return Err(format!("param {name} diverges under equivalent masks"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (b) Skipping every head of the deepest block (p_s) leaves that block
+/// as the residual identity: the loss equals a model built without the
+/// block at all (shared parameters initialize identically by name).
+#[test]
+fn skipped_block_is_residual_identity() {
+    check("native-ps-identity", 6, |g| {
+        let seed = g.rng().next_u64();
+        let deep = NativeBackend::new(&spec_with_depth(2), 0, 2, seed);
+        let shallow = NativeBackend::new(&spec_with_depth(1), 0, 2, seed);
+        let (x, y) = sample(8, 2, seed ^ 1);
+        // Skip block 1 entirely in the 2-block model.
+        let mut mask = Tensor::full(&[2, 2], 1.0);
+        mask.set(&[1, 0], 0.0);
+        mask.set(&[1, 1], 0.0);
+        let masked = deep.eval(&x, &y, Some(&mask)).unwrap();
+        let reference = shallow.eval(&x, &y, None).unwrap();
+        if (masked.loss - reference.loss).abs() > 1e-6 {
+            return Err(format!(
+                "p_s block is not the identity: {} vs depth-1 reference {}",
+                masked.loss, reference.loss
+            ));
+        }
+        if masked.n_correct != reference.n_correct {
+            return Err("prediction sets differ".into());
+        }
+        Ok(())
+    });
+
+    // And the degenerate case: skipping *everything* equals a body-free
+    // model (embeddings -> final LN -> head).
+    let deep = NativeBackend::new(&spec_with_depth(2), 0, 2, 9);
+    let none = NativeBackend::new(&spec_with_depth(0), 0, 2, 9);
+    let (x, y) = sample(8, 2, 42);
+    let zeros = Tensor::zeros(&[2, 2]);
+    let a = deep.eval(&x, &y, Some(&zeros)).unwrap();
+    let b = none.eval(&x, &y, None).unwrap();
+    assert!(
+        (a.loss - b.loss).abs() < 1e-6,
+        "all-p_s model must equal the body-free model: {} vs {}",
+        a.loss,
+        b.loss
+    );
+}
+
+/// (c) A p_o head (fwd 1, bwd 0) participates in the forward pass —
+/// masking it p_s changes the loss — but its own weight slices never
+/// move under training, while every other head's do.
+#[test]
+fn forward_only_head_changes_loss_but_freezes_weights() {
+    check("native-po-freeze", 6, |g| {
+        let s = spec();
+        let seed = g.rng().next_u64();
+        let l = g.usize_in(0, 1);
+        let h = g.usize_in(0, 1);
+        let (x, y) = sample(s.config.img_size, 2, seed ^ 7);
+        let mut be = NativeBackend::new(&s, 0, 2, seed);
+
+        // Participates in the forward: p_o loss differs from p_s loss.
+        let mut po_fwd = Tensor::full(&[2, 2], 1.0);
+        let po = be.eval(&x, &y, None).unwrap();
+        po_fwd.set(&[l, h], 0.0);
+        let ps = be.eval(&x, &y, Some(&po_fwd)).unwrap();
+        if (po.loss - ps.loss).abs() < 1e-7 {
+            return Err(format!(
+                "skipping head ({l},{h}) should change the forward pass: {} vs {}",
+                po.loss, ps.loss
+            ));
+        }
+
+        // Never updates its own weights: freeze head (l, h).
+        let mut masks = MaskPair::ones(2, 2);
+        masks.bwd.set(&[l, h], 0.0);
+        let before = be.param(&format!("b{l:02}_wqkv")).unwrap();
+        be.step(&x, &y, &masks, 0.1).unwrap();
+        let after = be.param(&format!("b{l:02}_wqkv")).unwrap();
+        let (frozen, others) = wqkv_head_delta(&before, &after, &s.config, h);
+        if frozen != 0.0 {
+            return Err(format!("p_o head ({l},{h}) moved by {frozen}"));
+        }
+        if others <= 0.0 {
+            return Err("other heads should update".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// LoRA
+// ---------------------------------------------------------------------------
+
+/// LoRA rank round-trip: every advertised rank opens a backend whose
+/// adapters have the right shapes, train under a step, and leave the
+/// base weights untouched; unadvertised ranks are rejected.
+#[test]
+fn lora_rank_round_trip() {
+    let s = spec();
+    let provider = NativeProvider::new(s.clone());
+    let (x, y) = sample(s.config.img_size, 2, 11);
+    let masks = MaskPair::ones(2, 2);
+    for rank in provider.spec().lora_ranks.clone() {
+        let mut be = provider
+            .open(&BackendSel { lora_rank: rank, micro_batch: None, seed: 13 })
+            .unwrap();
+        assert_eq!(be.config().lora_rank, rank, "rank round-trips through config");
+        let cfg = s.config.clone();
+        assert_eq!(
+            be.param("b00_lora_aq").unwrap().shape(),
+            &[cfg.heads, cfg.dim, rank]
+        );
+        assert_eq!(
+            be.param("b00_lora_bq").unwrap().shape(),
+            &[cfg.heads, rank, cfg.head_dim]
+        );
+        let base_before = be.param("b00_wqkv").unwrap();
+        let b_before = be.param("b00_lora_bq").unwrap();
+        let head_before = be.param("z_head_w").unwrap();
+        be.step(&x, &y, &masks, 0.1).unwrap();
+        assert_eq!(base_before, be.param("b00_wqkv").unwrap(), "base frozen at rank {rank}");
+        assert_ne!(b_before, be.param("b00_lora_bq").unwrap(), "B trains at rank {rank}");
+        assert_ne!(head_before, be.param("z_head_w").unwrap(), "head trains at rank {rank}");
+    }
+    assert!(
+        provider
+            .open(&BackendSel { lora_rank: 999, micro_batch: None, seed: 13 })
+            .is_err(),
+        "unadvertised rank rejected"
+    );
+}
+
+/// The backward mask freezes LoRA adapters per head too.
+#[test]
+fn lora_adapters_respect_backward_mask() {
+    let s = spec();
+    let (x, y) = sample(s.config.img_size, 2, 17);
+    let mut be = NativeBackend::new(&s, 2, 2, 19);
+    let mut masks = MaskPair::ones(2, 2);
+    masks.bwd.set(&[0, 1], 0.0); // freeze head 1 of block 0
+    let before = be.param("b00_lora_bq").unwrap();
+    be.step(&x, &y, &masks, 0.1).unwrap();
+    let after = be.param("b00_lora_bq").unwrap();
+    let (heads, rank, dh) = (s.config.heads, 2usize, s.config.head_dim);
+    assert_eq!(before.shape(), &[heads, rank, dh]);
+    let per_head = rank * dh;
+    let frozen: f32 = (0..per_head)
+        .map(|i| (after.data()[per_head + i] - before.data()[per_head + i]).abs())
+        .sum();
+    let active: f32 = (0..per_head)
+        .map(|i| (after.data()[i] - before.data()[i]).abs())
+        .sum();
+    assert_eq!(frozen, 0.0, "masked head's adapter must not move");
+    assert!(active > 0.0, "unmasked head's adapter must train");
+}
+
+// ---------------------------------------------------------------------------
+// Score probe
+// ---------------------------------------------------------------------------
+
+/// The probe is a pure observation: it matches the gradients the step
+/// would apply and leaves no trace on the model.
+#[test]
+fn score_probe_is_pure_and_grad_consistent() {
+    let s = spec();
+    let (x, y) = sample(s.config.img_size, 2, 23);
+    let be = NativeBackend::new(&s, 0, 2, 29);
+    let snapshot: Vec<Tensor> = be.param_names().iter().map(|n| be.param(n).unwrap()).collect();
+    let probe = be.score_probe(&x, &y).unwrap();
+    assert_eq!(probe.shape(), &[2, 2, 4]);
+    for (name, before) in be.param_names().iter().zip(snapshot) {
+        assert_eq!(before, be.param(name).unwrap(), "probe mutated {name}");
+    }
+    // Fisher channel agrees with the sum of squared per-head gradients.
+    let grads = be.param_grads(&x, &y, &MaskPair::ones(2, 2));
+    let cfg = &s.config;
+    let g_wqkv = &grads.iter().find(|(n, _)| n == "b00_wqkv").unwrap().1;
+    let mut fisher_wqkv = 0.0f64;
+    for r in 0..cfg.dim {
+        for p in 0..3 {
+            for c in 0..cfg.head_dim {
+                let col = p * cfg.dim + c; // head 0 slice
+                let g = g_wqkv.data()[r * 3 * cfg.dim + col] as f64;
+                fisher_wqkv += g * g;
+            }
+        }
+    }
+    // Head (0,0)'s fisher includes wqkv plus wo/FFN slices, so it must
+    // be at least the wqkv share and strictly positive.
+    assert!(probe.at(&[0, 0, 0]) as f64 >= fisher_wqkv * 0.999);
+    assert!(probe.at(&[0, 0, 0]) > 0.0);
+}

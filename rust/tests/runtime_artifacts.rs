@@ -1,8 +1,11 @@
 //! Runtime integration tests against the real AOT artifacts.
 //!
-//! Requires `make artifacts`; skips cleanly when absent. All checks run
-//! inside ONE #[test] so the expensive XLA compilation happens once per
-//! binary (the registry caches compiled executables per process).
+//! Requires the `xla` feature (the whole file compiles away without it)
+//! and `make artifacts`; skips cleanly when artifacts are absent. All
+//! checks run inside ONE #[test] so the expensive XLA compilation
+//! happens once per binary (the registry caches compiled executables
+//! per process).
+#![cfg(feature = "xla")]
 
 use d2ft::runtime::{ArtifactRegistry, ParamStore, Session, TrainState};
 use d2ft::schedule::MaskPair;
