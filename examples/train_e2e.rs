@@ -12,7 +12,7 @@
 
 use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::cluster::ExecMode;
-use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
 use d2ft::data::SyntheticKind;
 use d2ft::metrics::pct;
 use d2ft::schedule::Budget;
@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         pretrain_batches: args.get_usize("pretrain-batches")?,
         eval_every: 10,
         lora_rank: 0,
+        update: UpdateMode::PerMicro,
     };
 
     println!("== D2FT ({}) @ compute {} / comm {} ==",

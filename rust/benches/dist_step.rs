@@ -1,0 +1,140 @@
+//! Bench: the distributed data-parallel trainer — per-step wall time
+//! across worker counts and **measured** gradient bytes on the wire for
+//! the paper's 50%-communication D2FT budget vs the full (unmasked)
+//! schedule. Artifact-free; writes `BENCH_dist_step.json`.
+//!
+//!     cargo bench --bench dist_step
+//!
+//! Asserts the headline claim: the masked wire format ships >= 40%
+//! fewer gradient bytes than full fine-tuning under the 50% budget.
+
+#[cfg(not(feature = "native"))]
+fn main() {
+    eprintln!("dist_step bench requires the default `native` feature");
+}
+
+#[cfg(feature = "native")]
+fn main() {
+    use d2ft::backend::native::NativeProvider;
+    use d2ft::coordinator::{SchedulerKind, TrainerConfig, UpdateMode};
+    use d2ft::data::SyntheticKind;
+    use d2ft::dist::{DistConfig, DistReport, DistTrainer, ExchangeMode};
+    use d2ft::metrics::{fmt_bytes, pct};
+    use d2ft::schedule::Budget;
+    use d2ft::util::json::{arr, num, obj, s};
+
+    const BATCHES: usize = 6;
+
+    let provider = NativeProvider::default();
+    // No pretrain: `DistReport::wire` already excludes pretrain
+    // traffic, so this only keeps the runs short.
+    let base = |scheduler, budget| TrainerConfig {
+        train_size: 240,
+        test_size: 24,
+        batches: BATCHES,
+        pretrain_batches: 0,
+        update: UpdateMode::BatchAccum,
+        ..TrainerConfig::quick(SyntheticKind::Cifar100Like, scheduler, budget)
+    };
+    let run = |scheduler, budget, workers: usize, exchange| -> DistReport {
+        let dcfg = DistConfig { train: base(scheduler, budget), workers, exchange };
+        DistTrainer::new(&provider, dcfg)
+            .expect("building dist trainer")
+            .run()
+            .expect("dist run")
+    };
+
+    // The paper's 50%-communication budget (2 p_f + 1 p_o of 5) vs the
+    // full unmasked schedule, both measured at K=4.
+    let d2ft = run(
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 2, 1),
+        4,
+        ExchangeMode::MaskedAllReduce,
+    );
+    let full = run(
+        SchedulerKind::Standard,
+        Budget::uniform(5, 5, 0),
+        4,
+        ExchangeMode::MaskedAllReduce,
+    );
+    let savings = 1.0 - d2ft.wire.up_bytes as f64 / full.wire.up_bytes as f64;
+    println!(
+        "grad bytes on the wire ({BATCHES} batches): d2ft {} vs full {} -> {} saved",
+        fmt_bytes(d2ft.wire.up_bytes),
+        fmt_bytes(full.wire.up_bytes),
+        pct(savings)
+    );
+    assert!(
+        savings >= 0.40,
+        "50%-budget D2FT must ship >= 40% fewer gradient bytes, got {}",
+        pct(savings)
+    );
+    assert!(
+        (d2ft.grad_savings - savings).abs() < 1e-9,
+        "dense-baseline accounting must agree with the standard-schedule run"
+    );
+
+    // Parameter-server downlink contrast (dense deltas).
+    let ps = run(
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 2, 1),
+        4,
+        ExchangeMode::ParamServer,
+    );
+    println!(
+        "downlink: allreduce {} vs param-server {}",
+        fmt_bytes(d2ft.wire.down_bytes),
+        fmt_bytes(ps.wire.down_bytes)
+    );
+
+    // Wall time per step across worker counts.
+    let mut sweep = Vec::new();
+    for k in [1usize, 2, 4] {
+        let r = run(
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 2, 1),
+            k,
+            ExchangeMode::MaskedAllReduce,
+        );
+        println!(
+            "K={k}: step {:.3}ms, straggler {:.3}ms, worker util {}",
+            r.mean_step_ms,
+            r.train.straggler_ms,
+            pct(r.worker_utilization)
+        );
+        sweep.push(obj(vec![
+            ("workers", num(k as f64)),
+            ("mean_step_ms", num(r.mean_step_ms)),
+            ("straggler_ms", num(r.train.straggler_ms)),
+            ("worker_utilization", num(r.worker_utilization)),
+            ("final_train_loss", num(r.train.final_train_loss)),
+        ]));
+    }
+
+    let wire = |r: &DistReport| {
+        obj(vec![
+            ("up_bytes", num(r.wire.up_bytes as f64)),
+            ("dense_up_bytes", num(r.wire.dense_up_bytes as f64)),
+            ("down_bytes", num(r.wire.down_bytes as f64)),
+            ("modeled_wire_bytes", num(r.modeled_wire_bytes as f64)),
+            ("grad_savings", num(r.grad_savings)),
+            ("mean_step_ms", num(r.mean_step_ms)),
+            ("exchange", s(&r.exchange)),
+        ])
+    };
+    let report = obj(vec![
+        ("bench", s("dist_step")),
+        ("batches", num(BATCHES as f64)),
+        ("micros_per_batch", num(5.0)),
+        ("budget", s("2 p_f + 1 p_o of 5 (50% comm)")),
+        ("d2ft_50pct", wire(&d2ft)),
+        ("full_schedule", wire(&full)),
+        ("param_server", wire(&ps)),
+        ("grad_bytes_saved_vs_full", num(savings)),
+        ("worker_sweep", arr(sweep)),
+    ]);
+    let path = "BENCH_dist_step.json";
+    std::fs::write(path, report.to_string_pretty()).expect("writing bench report");
+    println!("wrote {path}");
+}

@@ -85,6 +85,40 @@ pub trait Backend {
     /// schedule row's masks. Updates parameters in place.
     fn step(&mut self, x: &Tensor, y: &[i32], masks: &MaskPair, lr: f32) -> Result<StepOut>;
 
+    /// Whether this backend can expose raw gradients for exchange
+    /// ([`Backend::grad_step`] / [`Backend::apply_grads`]). The native
+    /// backend can; the XLA path cannot (its fused trainstep artifact
+    /// updates parameters internally and never materializes gradients on
+    /// the host).
+    fn supports_grad_exchange(&self) -> bool {
+        false
+    }
+
+    /// Forward + backward **without** updating parameters: the step
+    /// stats plus the dense masked gradients, one tensor per parameter
+    /// in [`Backend::param_names`] order. `p_o`/`p_s` head slices are
+    /// exactly zero (the [`MaskPair`] freeze contract), which is what
+    /// makes the `dist` masked wire format lossless. A `step()` is
+    /// bitwise `grad_step()` followed by `apply_grads()` of the result.
+    fn grad_step(&self, x: &Tensor, y: &[i32], masks: &MaskPair) -> Result<(StepOut, Vec<Tensor>)> {
+        let _ = (x, y, masks);
+        anyhow::bail!(
+            "backend {:?} does not expose gradients for exchange (native only)",
+            self.label()
+        )
+    }
+
+    /// Apply pre-aggregated gradients with the fused SGD-momentum rule
+    /// (`m = mu*m + g; p -= lr*m` on every trainable tensor) — the
+    /// second half of a [`Backend::step`], fed by a gradient reduction.
+    fn apply_grads(&mut self, grads: &[Tensor], lr: f32) -> Result<()> {
+        let _ = (grads, lr);
+        anyhow::bail!(
+            "backend {:?} does not accept external gradients (native only)",
+            self.label()
+        )
+    }
+
     /// Forward-only pass: loss + correct count (all-subnets mask unless
     /// a partial fwd mask is given — the timed `p_o` program).
     fn eval(&self, x: &Tensor, y: &[i32], fwd_mask: Option<&Tensor>) -> Result<EvalOut>;

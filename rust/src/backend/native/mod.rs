@@ -41,7 +41,7 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::backend::{Backend, BackendProvider, BackendSel, EvalOut, StepOut};
-use crate::runtime::ModelConfig;
+use crate::runtime::{ModelConfig, ParamEntry, ParamStore};
 use crate::schedule::MaskPair;
 use crate::tensor::linalg::{gelu, gelu_backward, layer_norm_rows_backward, softmax_rows_backward};
 use crate::tensor::Tensor;
@@ -99,6 +99,42 @@ impl NativeSpec {
             lora_standard_rank: 4,
             init_seed: 0xD2F7,
         }
+    }
+
+    /// ViT-small-like preset: 12 blocks x 6 heads (the paper's 72 body
+    /// subnets, 74 devices with embedding + classifier), dim 96. Same
+    /// 16x16 synthetic inputs and 196-class head as [`NativeSpec::tiny`]
+    /// so every dataset preset works unchanged; selected with
+    /// `--model small`.
+    pub fn small() -> NativeSpec {
+        NativeSpec {
+            config: ModelConfig {
+                img_size: 16,
+                patch: 4,
+                dim: 96,
+                depth: 12,
+                heads: 6,
+                mlp_ratio: 4,
+                classes: 196,
+                lora_rank: 0,
+                head_dim: 16,
+                tokens: 17,
+            },
+            micro_batch: 4,
+            mb_variants: vec![2, 8],
+            lora_ranks: vec![1, 2, 4, 8],
+            lora_standard_rank: 4,
+            init_seed: 0xD2F7,
+        }
+    }
+
+    /// Parse a `--model` preset label (`mini`/`tiny` or `small`).
+    pub fn preset(name: &str) -> anyhow::Result<NativeSpec> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "mini" | "tiny" => NativeSpec::tiny(),
+            "small" | "vit-small" => NativeSpec::small(),
+            _ => anyhow::bail!("unknown native model preset {name:?} (mini|small)"),
+        })
     }
 }
 
@@ -935,6 +971,140 @@ impl NativeBackend {
         let i = self.index[name];
         self.params[i].data_mut()[elem] += delta;
     }
+
+    // ---- gradient-exchange surface (the `dist` runtime builds on these)
+
+    /// Number of parameter tensors (canonical sorted-name order).
+    pub fn n_param_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Element count of parameter tensor `i` (canonical order).
+    pub fn param_elems(&self, i: usize) -> usize {
+        self.params[i].len()
+    }
+
+    /// Per-tensor trainable flags, aligned with the canonical order
+    /// (false = frozen base weight under LoRA).
+    pub fn trainable_flags(&self) -> &[bool] {
+        &self.trainable
+    }
+
+    /// Zero tensors shaped like the parameter set — gradient
+    /// accumulators for a reduction.
+    pub fn zeros_like_params(&self) -> Vec<Tensor> {
+        self.params.iter().map(|p| Tensor::zeros(p.shape())).collect()
+    }
+
+    /// Visit every `(param index, element index)` owned by subnet
+    /// (block `l`, head `h`) — the public face of the per-head slice map
+    /// the backward-mask freeze uses. The `dist` gradient codec derives
+    /// its wire layout from exactly this visitation, which is what makes
+    /// the masked wire format lossless.
+    pub fn visit_head_elems(&self, l: usize, h: usize, f: &mut dyn FnMut(usize, usize)) {
+        self.for_head_elems(l, h, f);
+    }
+
+    /// SGD-momentum update that also captures the applied per-parameter
+    /// deltas (`lr * m`, dense) — the parameter-server downlink payload.
+    /// Non-trainable entries are empty tensors. Bitwise identical to
+    /// [`Backend::apply_grads`] on the local parameters: the delta is
+    /// the very `lr * m` product the fused update subtracts.
+    pub fn update_capture(&mut self, grads: &[Tensor], lr: f32) -> Vec<Tensor> {
+        assert_eq!(grads.len(), self.params.len(), "grad tensor count");
+        let mut deltas = Vec::with_capacity(self.params.len());
+        for i in 0..self.params.len() {
+            if !self.trainable[i] {
+                deltas.push(Tensor::zeros(&[0]));
+                continue;
+            }
+            let m = self.momentum[i].data_mut();
+            let p = self.params[i].data_mut();
+            assert_eq!(grads[i].len(), p.len(), "grad size for {}", self.names[i]);
+            let mut d = vec![0.0f32; p.len()];
+            for (j, ((mv, pv), &gv)) in
+                m.iter_mut().zip(p.iter_mut()).zip(grads[i].data()).enumerate()
+            {
+                *mv = MOMENTUM * *mv + gv;
+                let dv = lr * *mv;
+                *pv -= dv;
+                d[j] = dv;
+            }
+            let n = d.len();
+            deltas.push(Tensor::from_vec(&[n], d));
+        }
+        deltas
+    }
+
+    /// Install parameter deltas (`p -= delta`) on every trainable tensor
+    /// — the parameter-server worker side of [`NativeBackend::update_capture`].
+    /// The local momentum buffers are untouched (the server owns the
+    /// optimizer state in that topology).
+    pub fn apply_deltas(&mut self, deltas: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            deltas.len() == self.params.len(),
+            "delta count {} != {} parameters",
+            deltas.len(),
+            self.params.len()
+        );
+        for i in 0..self.params.len() {
+            if !self.trainable[i] {
+                continue;
+            }
+            let p = self.params[i].data_mut();
+            let d = deltas[i].data();
+            anyhow::ensure!(
+                d.len() == p.len(),
+                "delta size mismatch for {}",
+                self.names[i]
+            );
+            for (pv, &dv) in p.iter_mut().zip(d) {
+                *pv -= dv;
+            }
+        }
+        Ok(())
+    }
+
+    // ---- ParamStore interchange (numeric parity harness) -------------------
+
+    /// Export the parameters as a [`ParamStore`] in canonical
+    /// (sorted-name, manifest flatten) order — the interchange blob the
+    /// XLA path loads as `params_init.bin`, so both backends can start
+    /// from bitwise-identical initializations.
+    pub fn export_params(&self) -> ParamStore {
+        let mut entries = Vec::with_capacity(self.params.len());
+        let mut flat = Vec::new();
+        let mut offset = 0;
+        for (name, p) in self.names.iter().zip(&self.params) {
+            entries.push(ParamEntry {
+                name: name.clone(),
+                shape: p.shape().to_vec(),
+                size: p.len(),
+                offset,
+            });
+            flat.extend_from_slice(p.data());
+            offset += p.len();
+        }
+        ParamStore::from_parts(entries, flat).expect("canonical export layout")
+    }
+
+    /// Overwrite the parameters from a [`ParamStore`], matched by name
+    /// (every parameter must be present with its exact element count).
+    pub fn import_params(&mut self, store: &ParamStore) -> Result<()> {
+        for (i, name) in self.names.iter().enumerate() {
+            let s = store
+                .slice(name)
+                .ok_or_else(|| anyhow::anyhow!("param store is missing {name:?}"))?;
+            anyhow::ensure!(
+                s.len() == self.params[i].len(),
+                "size mismatch for {name}: store {} vs model {}",
+                s.len(),
+                self.params[i].len()
+            );
+            self.params[i].data_mut().copy_from_slice(s);
+        }
+        Ok(())
+    }
 }
 
 impl Backend for NativeBackend {
@@ -951,12 +1121,45 @@ impl Backend for NativeBackend {
     }
 
     fn step(&mut self, x: &Tensor, y: &[i32], masks: &MaskPair, lr: f32) -> Result<StepOut> {
+        // Exactly grad_step + apply — the decomposition the dist runtime
+        // distributes, so serial and distributed execution share bits.
+        let (out, grads) = Backend::grad_step(self, x, y, masks)?;
+        self.update(&grads, lr);
+        Ok(out)
+    }
+
+    fn supports_grad_exchange(&self) -> bool {
+        true
+    }
+
+    fn grad_step(&self, x: &Tensor, y: &[i32], masks: &MaskPair) -> Result<(StepOut, Vec<Tensor>)> {
         let fwd = self.forward(x, &masks.fwd);
         let (loss, n_correct, d_logits) = self.loss_grad(&fwd, y);
         let mut grads = self.backward(&fwd, &masks.fwd, &d_logits);
         self.freeze(&mut grads, &masks.bwd);
-        self.update(&grads, lr);
-        Ok(StepOut { loss, n_correct })
+        Ok((StepOut { loss, n_correct }, grads))
+    }
+
+    fn apply_grads(&mut self, grads: &[Tensor], lr: f32) -> Result<()> {
+        anyhow::ensure!(
+            grads.len() == self.params.len(),
+            "grad count {} != {} parameters",
+            grads.len(),
+            self.params.len()
+        );
+        // Per-tensor sizes too: update()'s zip would otherwise silently
+        // truncate a mis-sized gradient to a partial parameter update.
+        for (i, g) in grads.iter().enumerate() {
+            anyhow::ensure!(
+                g.len() == self.params[i].len(),
+                "grad size mismatch for {}: {} vs {}",
+                self.names[i],
+                g.len(),
+                self.params[i].len()
+            );
+        }
+        self.update(grads, lr);
+        Ok(())
     }
 
     fn eval(&self, x: &Tensor, y: &[i32], fwd_mask: Option<&Tensor>) -> Result<EvalOut> {

@@ -94,6 +94,12 @@ pub struct EngineConfig {
     /// Real busy-work per modeled millisecond (1.0 = spin for the full
     /// modeled duration; 0 = pure accounting, no spinning).
     pub time_scale: f64,
+    /// Modeled bytes one full-op's traffic puts on the wire (`p_o` ships
+    /// half per [`CostModel::comm_cost`], `p_s` nothing). 0 disables the
+    /// byte accounting. The `dist` runtime sets this to its dense
+    /// gradient-message size so the engine's *modeled* bytes line up
+    /// against the *measured* serialized bytes (DESIGN.md §dist).
+    pub bytes_per_fullop: u64,
     /// Seed for the deterministic per-task payloads.
     pub seed: u64,
 }
@@ -108,6 +114,7 @@ impl EngineConfig {
             comm_ms_per_fullop: 0.0,
             overlap_comm: true,
             time_scale: 0.0,
+            bytes_per_fullop: 0,
             seed,
         }
     }
@@ -121,6 +128,7 @@ impl EngineConfig {
             comm_ms_per_fullop: 1.0,
             overlap_comm: true,
             time_scale: 1.0,
+            bytes_per_fullop: 0,
             seed,
         }
     }
@@ -145,6 +153,9 @@ pub struct DeviceReport {
     pub grad: f64,
     /// Deterministic activation/gradient payload checksum.
     pub checksum: u64,
+    /// Modeled bytes this device put on the wire this step
+    /// (`comm_cost(op) * bytes_per_fullop` per task).
+    pub wire_bytes: u64,
     /// Wall-clock time this device's simulation actually took (ms).
     pub measured_ms: f64,
 }
@@ -164,6 +175,8 @@ pub struct StepReport {
     pub grad: f64,
     /// Payload checksum folded in device order (bit-stable).
     pub checksum: u64,
+    /// Modeled bytes on the wire this step, summed over devices.
+    pub wire_bytes: u64,
     /// Measured straggler: max wall-clock device time (`Instant`).
     pub measured_straggler_ms: f64,
     /// Measured wall-clock of the whole step (dispatch -> barrier).
@@ -181,6 +194,7 @@ impl StepReport {
         for d in &devices {
             checksum = checksum.rotate_left(7) ^ d.checksum;
         }
+        let wire_bytes = devices.iter().map(|d| d.wire_bytes).sum();
         let measured_straggler_ms =
             devices.iter().map(|d| d.measured_ms).fold(0.0, f64::max);
         StepReport {
@@ -190,6 +204,7 @@ impl StepReport {
             comm_saved_ms,
             grad,
             checksum,
+            wire_bytes,
             measured_straggler_ms,
             measured_wall_ms,
         }
@@ -381,6 +396,7 @@ fn run_device(
     let mut grad = 0.0f64;
     let mut checksum = 0u64;
     let mut processed = 0usize;
+    let mut wire_bytes = 0u64;
     for t in tasks {
         let slot = match t.op {
             Op::Full => 0,
@@ -392,6 +408,7 @@ fn run_device(
         let m = cost.comm_cost(t.op) * cfg.comm_ms_per_fullop;
         compute_total += c;
         comm_total += m;
+        wire_bytes += (cost.comm_cost(t.op) * cfg.bytes_per_fullop as f64).round() as u64;
         // Pipeline: this task's transfer starts when its compute is done
         // and the NIC is free; it overlaps the next tasks' compute.
         t_compute += c;
@@ -418,6 +435,7 @@ fn run_device(
         processed,
         grad,
         checksum,
+        wire_bytes,
         measured_ms: t0.elapsed().as_secs_f64() * 1e3,
     }
 }
@@ -679,6 +697,23 @@ mod tests {
             assert_eq!(d.device, k);
             assert_eq!(d.processed, 5);
         }
+    }
+
+    #[test]
+    fn modeled_wire_bytes_follow_cost_model() {
+        let t = table_3x5();
+        let mut cfg = EngineConfig::accounting(ExecMode::Serial, 1);
+        cfg.bytes_per_fullop = 1000;
+        let r = Engine::new(cfg, 3).execute(&t);
+        // device 0: 3 p_f (1.0 each) + 1 p_o (0.5) = 3500 bytes.
+        assert_eq!(r.devices[0].wire_bytes, 3500);
+        // device 1: 5 p_o = 2500; device 2 idle.
+        assert_eq!(r.devices[1].wire_bytes, 2500);
+        assert_eq!(r.devices[2].wire_bytes, 0);
+        assert_eq!(r.wire_bytes, 6000);
+        // Disabled by default.
+        let r0 = Engine::new(EngineConfig::accounting(ExecMode::Serial, 1), 3).execute(&t);
+        assert_eq!(r0.wire_bytes, 0);
     }
 
     #[test]

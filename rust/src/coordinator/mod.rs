@@ -10,4 +10,6 @@
 
 mod trainer;
 
-pub use trainer::{SchedulerKind, Trainer, TrainerConfig, TrainReport};
+pub use trainer::{SchedulerKind, Trainer, TrainerConfig, TrainReport, UpdateMode};
+#[cfg(feature = "native")]
+pub(crate) use trainer::{build_scheduler, prepare_run};

@@ -4,13 +4,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::backend::{Backend, BackendProvider, BackendSel};
+use crate::backend::{Backend, BackendProvider, BackendSel, StepOut};
 use crate::cluster::{
     CostModel, Engine, EngineConfig, ExecMode, ExecTimeModel, HeteroSpec, WorkloadTracker,
 };
 use crate::data::{Dataset, DatasetSpec, SyntheticKind};
 use crate::metrics::{DeviceUsage, Meter};
 use crate::partition::Partition;
+use crate::runtime::ModelConfig;
 use crate::schedule::scaler::{Lambda, ScalerSched};
 use crate::schedule::{
     bilevel::{BiLevel, MergeMode},
@@ -80,6 +81,32 @@ impl SchedulerKind {
     }
 }
 
+/// How parameter updates are applied within one scheduled batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// One fused SGD-momentum update per micro-batch, sequentially —
+    /// the seed trainer's semantics (micro-batch `i+1` sees the weights
+    /// micro-batch `i` produced).
+    PerMicro,
+    /// Accumulate the batch's micro-batch gradients (fixed micro order),
+    /// take the mean, and apply a single fused update — synchronous
+    /// data-parallel semantics. This is the serial reference the
+    /// [`crate::dist`] runtime reproduces bitwise: every micro-batch
+    /// gradient is computed against the same parameter snapshot, so the
+    /// computation can be sharded across workers without changing a bit.
+    BatchAccum,
+}
+
+impl UpdateMode {
+    /// Display label (`per-micro` / `batch-accum`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            UpdateMode::PerMicro => "per-micro",
+            UpdateMode::BatchAccum => "batch-accum",
+        }
+    }
+}
+
 /// Full configuration of one fine-tuning run.
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
@@ -120,6 +147,10 @@ pub struct TrainerConfig {
     pub eval_every: usize,
     /// LoRA adapter rank the backend should open (0 = full fine-tuning).
     pub lora_rank: usize,
+    /// Whether updates apply per micro-batch (sequential, the seed
+    /// semantics) or once per batch from accumulated gradients (the
+    /// data-parallel semantics `dist::DistTrainer` distributes).
+    pub update: UpdateMode,
 }
 
 impl TrainerConfig {
@@ -146,6 +177,7 @@ impl TrainerConfig {
             pretrain_batches: 12,
             eval_every: 0,
             lora_rank: 0,
+            update: UpdateMode::PerMicro,
         }
     }
 }
@@ -198,7 +230,11 @@ pub struct TrainReport {
     pub batches: usize,
 }
 
-fn build_scheduler(kind: SchedulerKind, scores: ScoreConfig, seed: u64) -> Box<dyn Scheduler> {
+pub(crate) fn build_scheduler(
+    kind: SchedulerKind,
+    scores: ScoreConfig,
+    seed: u64,
+) -> Box<dyn Scheduler> {
     let cost = CostModel::paper();
     match kind {
         SchedulerKind::D2ft => Box::new(BiLevel::new(scores, cost)),
@@ -258,6 +294,82 @@ thread_local! {
     pub(crate) static SPB_HINT: std::cell::Cell<usize> = const { std::cell::Cell::new(1) };
 }
 
+/// Partition + datasets for one run configuration.
+pub(crate) struct RunSetup {
+    pub(crate) partition: Partition,
+    pub(crate) train: Dataset,
+    pub(crate) test: Dataset,
+}
+
+/// Resolve the model partition, validate it, publish the
+/// subnets-per-block hint, and generate the train/test splits — shared
+/// by the serial [`Trainer`] and `dist::DistTrainer` so the two drivers
+/// cannot drift (their bitwise-equality contract depends on identical
+/// setup).
+pub(crate) fn prepare_run(mc: &ModelConfig, cfg: &TrainerConfig) -> Result<RunSetup> {
+    let partition = match &cfg.hetero {
+        Some(h) => h.partition(mc),
+        None => Partition::grouped(mc, cfg.partition_group),
+    };
+    partition.validate()?;
+    SPB_HINT.with(|h| h.set(partition.n_subnets() / mc.depth));
+    let train = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.train_size, cfg.seed)
+        .generate("train");
+    let test = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.test_size, cfg.seed)
+        .generate("test");
+    anyhow::ensure!(
+        train.classes <= mc.classes,
+        "dataset has more classes than the model head"
+    );
+    Ok(RunSetup { partition, train, test })
+}
+
+/// Execute one batch of micro-steps under per-micro mask pairs, honoring
+/// the [`UpdateMode`]. Returns the per-micro step stats in micro order.
+///
+/// In [`UpdateMode::BatchAccum`], gradients are summed densely in
+/// ascending micro order (starting from explicit zeros), scaled by
+/// `1/n`, and applied in one fused update — the exact arithmetic
+/// sequence [`crate::dist`]'s `DistTrainer` reproduces from decoded wire
+/// messages, which is what makes serial ≡ distributed a *bitwise*
+/// statement rather than an approximate one.
+fn run_batch<'b>(
+    backend: &mut (dyn Backend + 'b),
+    update: UpdateMode,
+    lr: f32,
+    micros: &[(Tensor, Vec<i32>)],
+    masks: &[crate::schedule::MaskPair],
+) -> Result<Vec<StepOut>> {
+    assert_eq!(micros.len(), masks.len(), "one mask pair per micro-batch");
+    let mut outs = Vec::with_capacity(micros.len());
+    match update {
+        UpdateMode::PerMicro => {
+            for ((x, y), m) in micros.iter().zip(masks) {
+                outs.push(backend.step(x, y, m, lr)?);
+            }
+        }
+        UpdateMode::BatchAccum => {
+            let mut acc: Vec<Tensor> = Vec::new();
+            for ((x, y), m) in micros.iter().zip(masks) {
+                let (out, grads) = backend.grad_step(x, y, m)?;
+                if acc.is_empty() {
+                    acc = grads.iter().map(|g| Tensor::zeros(g.shape())).collect();
+                }
+                for (a, g) in acc.iter_mut().zip(&grads) {
+                    a.add_assign(g);
+                }
+                outs.push(out);
+            }
+            let scale = 1.0 / micros.len() as f32;
+            for a in &mut acc {
+                a.scale(scale);
+            }
+            backend.apply_grads(&acc, lr)?;
+        }
+    }
+    Ok(outs)
+}
+
 /// The coordinator: drives any [`Backend`] through the full
 /// pretrain -> score -> schedule -> execute loop.
 pub struct Trainer<'a> {
@@ -298,22 +410,14 @@ impl<'a> Trainer<'a> {
 
     /// Build a trainer around an already-opened backend.
     pub fn with_backend(backend: Box<dyn Backend + 'a>, cfg: TrainerConfig) -> Result<Trainer<'a>> {
-        let mc = backend.config();
-        let partition = match &cfg.hetero {
-            Some(h) => h.partition(mc),
-            None => Partition::grouped(mc, cfg.partition_group),
-        };
-        partition.validate()?;
-        SPB_HINT.with(|h| h.set(partition.n_subnets() / mc.depth));
-        let train = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.train_size, cfg.seed)
-            .generate("train");
-        let test = DatasetSpec::preset(cfg.dataset, mc.img_size, cfg.test_size, cfg.seed)
-            .generate("test");
-        anyhow::ensure!(
-            train.classes <= mc.classes,
-            "dataset has more classes than the model head"
-        );
-        Ok(Trainer { cfg, backend, partition, train, test })
+        let setup = prepare_run(backend.config(), &cfg)?;
+        Ok(Trainer {
+            cfg,
+            backend,
+            partition: setup.partition,
+            train: setup.train,
+            test: setup.test,
+        })
     }
 
     /// Micro-batch size of the *training* step (variant-aware).
@@ -347,11 +451,17 @@ impl<'a> Trainer<'a> {
             .generate("train");
         let mut batcher =
             crate::data::Batcher::new(&pre, mb, self.cfg.micros_per_batch, self.cfg.seed);
-        let masks = crate::schedule::MaskPair::ones(depth, heads);
         while let Some(micros) = batcher.next_batch() {
-            for (x, y) in &micros {
-                self.backend.step(x, y, &masks, self.cfg.lr)?;
-            }
+            let masks: Vec<crate::schedule::MaskPair> = (0..micros.len())
+                .map(|_| crate::schedule::MaskPair::ones(depth, heads))
+                .collect();
+            run_batch(
+                self.backend.as_mut(),
+                self.cfg.update,
+                self.cfg.lr,
+                &micros,
+                &masks,
+            )?;
         }
         // Fresh optimizer state at the pretrain -> fine-tune boundary
         // (momentum from the broad distribution destabilizes the first
@@ -378,6 +488,14 @@ impl<'a> Trainer<'a> {
     /// Run the full fine-tuning loop and report paper metrics.
     pub fn run(&mut self) -> Result<TrainReport> {
         let mb = self.mb();
+        if self.cfg.update == UpdateMode::BatchAccum {
+            anyhow::ensure!(
+                self.backend.supports_grad_exchange(),
+                "batch-accum updates need a gradient-exchange backend \
+                 ({} cannot export gradients; use the native backend)",
+                self.backend.label()
+            );
+        }
         self.pretrain()?;
 
         let mut scheduler = build_scheduler(self.cfg.scheduler, self.cfg.scores, self.cfg.seed);
@@ -420,7 +538,9 @@ impl<'a> Trainer<'a> {
                     break 'outer;
                 }
                 // --- contribution scores (cached; paper computes them
-                // once before fine-tuning) ---------------------------------
+                // once before fine-tuning). Kept in lockstep with
+                // dist::DistTrainer's score-cache block — the bitwise
+                // serial ≡ dist contract depends on it. -------------------
                 if score_cache.len() <= epoch_pos {
                     score_cache.resize(epoch_pos + 1, None);
                 }
@@ -442,9 +562,17 @@ impl<'a> Trainer<'a> {
                 let book = score_cache[epoch_pos].as_ref().unwrap();
                 // --- schedule + execute -----------------------------------
                 let table = scheduler.schedule(book, &budget);
-                for (i, (x, y)) in micros.iter().enumerate() {
-                    let masks = table.masks_for_micro(&self.partition, i);
-                    let out = self.backend.step(x, y, &masks, self.cfg.lr)?;
+                let masks: Vec<crate::schedule::MaskPair> = (0..micros.len())
+                    .map(|i| table.masks_for_micro(&self.partition, i))
+                    .collect();
+                let outs = run_batch(
+                    self.backend.as_mut(),
+                    self.cfg.update,
+                    self.cfg.lr,
+                    &micros,
+                    &masks,
+                )?;
+                for out in outs {
                     meter.push(out.loss, out.n_correct, mb);
                     loss_curve.push(out.loss);
                 }

@@ -1,0 +1,196 @@
+//! Deterministic gradient aggregation: fixed reduction order ⇒ bitwise
+//! serial ≡ parallel parity.
+//!
+//! Workers finish in host-dependent order, but floating-point addition
+//! is not associative, so a reduction that sums "whatever arrived next"
+//! would make the training trajectory depend on thread timing. The
+//! [`OrderedReducer`] therefore slots messages by micro-batch index and
+//! reduces them in ascending micro order once the barrier is complete —
+//! the same element-wise add sequence the serial
+//! [`crate::coordinator::UpdateMode::BatchAccum`] trainer performs, which
+//! is the whole determinism contract of `tests/dist.rs`.
+
+use anyhow::Result;
+
+use super::grads::GradCodec;
+use crate::schedule::MaskPair;
+use crate::tensor::Tensor;
+
+/// How the aggregated gradient gets back to the workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Broadcast the reduced gradient under the batch's *union* mask;
+    /// every replica applies the identical fused SGD-momentum update
+    /// locally (each holds its own momentum copy — same bits, no
+    /// parameter traffic). The masked-exchange path the paper's
+    /// communication numbers correspond to.
+    MaskedAllReduce,
+    /// Parameter server: the aggregator owns the optimizer state,
+    /// applies the update centrally, and ships **dense** update deltas
+    /// (`lr * m`) for every trainable tensor. Momentum mixes old and new
+    /// gradients, so deltas cannot be masked — the downlink costs full
+    /// bytes. Useful when workers are too small to hold optimizer state
+    /// (heterogeneous clusters); bitwise the same trajectory either way.
+    ParamServer,
+}
+
+impl ExchangeMode {
+    /// Parse a CLI label (`allreduce` | `ps`).
+    pub fn parse(s: &str) -> Result<ExchangeMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "allreduce" | "ring" => ExchangeMode::MaskedAllReduce,
+            "ps" | "param-server" | "paramserver" => ExchangeMode::ParamServer,
+            _ => anyhow::bail!("unknown exchange mode {s:?} (allreduce|ps)"),
+        })
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExchangeMode::MaskedAllReduce => "masked-allreduce",
+            ExchangeMode::ParamServer => "param-server",
+        }
+    }
+}
+
+/// Barrier + fixed-order reduction over one batch's gradient messages.
+pub struct OrderedReducer {
+    slots: Vec<Option<Vec<u8>>>,
+}
+
+impl OrderedReducer {
+    /// Reducer expecting one message per micro-batch.
+    pub fn new(n_micro: usize) -> OrderedReducer {
+        OrderedReducer { slots: vec![None; n_micro] }
+    }
+
+    /// Deposit micro-batch `micro`'s encoded gradient message.
+    pub fn push(&mut self, micro: usize, bytes: Vec<u8>) -> Result<()> {
+        anyhow::ensure!(micro < self.slots.len(), "micro {micro} out of range");
+        anyhow::ensure!(
+            self.slots[micro].is_none(),
+            "duplicate gradient message for micro {micro}"
+        );
+        self.slots[micro] = Some(bytes);
+        Ok(())
+    }
+
+    /// Whether every slot has reported.
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    /// Decode every message into `acc` in ascending micro order and
+    /// scale by `1/n` (the batch-mean gradient). `masks[i]` must be the
+    /// mask pair micro `i` was scheduled (and encoded) under; `acc`
+    /// must start zeroed.
+    pub fn reduce(
+        &self,
+        codec: &GradCodec,
+        masks: &[MaskPair],
+        acc: &mut [Tensor],
+    ) -> Result<()> {
+        anyhow::ensure!(self.is_complete(), "reduce before barrier completion");
+        anyhow::ensure!(masks.len() == self.slots.len(), "one mask pair per micro");
+        for (i, slot) in self.slots.iter().enumerate() {
+            let bytes = slot.as_ref().unwrap();
+            let micro = codec.decode_add(bytes, &masks[i], acc)?;
+            anyhow::ensure!(micro == i, "message for micro {micro} in slot {i}");
+        }
+        let scale = 1.0 / self.slots.len() as f32;
+        for a in acc.iter_mut() {
+            a.scale(scale);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{NativeBackend, NativeSpec};
+    use crate::backend::Backend;
+    use crate::data::{DatasetSpec, SyntheticKind};
+    use crate::runtime::ModelConfig;
+
+    fn backend() -> NativeBackend {
+        let spec = NativeSpec {
+            config: ModelConfig {
+                img_size: 8,
+                patch: 4,
+                dim: 16,
+                depth: 2,
+                heads: 2,
+                mlp_ratio: 2,
+                classes: 10,
+                lora_rank: 0,
+                head_dim: 8,
+                tokens: 5,
+            },
+            micro_batch: 2,
+            mb_variants: vec![],
+            lora_ranks: vec![],
+            lora_standard_rank: 0,
+            init_seed: 0xACE,
+        };
+        NativeBackend::new(&spec, 0, 2, 9)
+    }
+
+    #[test]
+    fn exchange_mode_parses() {
+        assert_eq!(ExchangeMode::parse("allreduce").unwrap(), ExchangeMode::MaskedAllReduce);
+        assert_eq!(ExchangeMode::parse("PS").unwrap(), ExchangeMode::ParamServer);
+        assert!(ExchangeMode::parse("gossip").is_err());
+        assert_eq!(ExchangeMode::ParamServer.label(), "param-server");
+    }
+
+    #[test]
+    fn ordered_reduce_matches_serial_accumulation_bitwise() {
+        let be = backend();
+        let codec = GradCodec::new(&be);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 6, 4).generate("train");
+        let masks: Vec<MaskPair> = (0..3).map(|_| MaskPair::ones(2, 2)).collect();
+        let per_micro: Vec<Vec<crate::tensor::Tensor>> = (0..3)
+            .map(|i| {
+                let (x, y) = data.gather(&[2 * i, 2 * i + 1]);
+                be.grad_step(&x, &y, &masks[i]).unwrap().1
+            })
+            .collect();
+        // Serial reference: dense sum in micro order, then mean.
+        let mut serial = be.zeros_like_params();
+        for grads in &per_micro {
+            for (a, g) in serial.iter_mut().zip(grads) {
+                a.add_assign(g);
+            }
+        }
+        let scale = 1.0 / 3.0f32;
+        for a in &mut serial {
+            a.scale(scale);
+        }
+        // Deposit out of arrival order on purpose: 2, 0, 1.
+        let mut reducer = OrderedReducer::new(3);
+        for &i in &[2usize, 0, 1] {
+            reducer.push(i, codec.encode(i, &masks[i], &per_micro[i])).unwrap();
+        }
+        assert!(reducer.is_complete());
+        let mut reduced = be.zeros_like_params();
+        reducer.reduce(&codec, &masks, &mut reduced).unwrap();
+        for (s, r) in serial.iter().zip(&reduced) {
+            assert_eq!(s.data(), r.data(), "ordered reduce must reproduce serial bits");
+        }
+    }
+
+    #[test]
+    fn reducer_rejects_misuse() {
+        let be = backend();
+        let codec = GradCodec::new(&be);
+        let mut r = OrderedReducer::new(2);
+        assert!(r.push(5, vec![]).is_err(), "out of range");
+        r.push(0, vec![1, 2, 3]).unwrap();
+        assert!(r.push(0, vec![]).is_err(), "duplicate");
+        assert!(!r.is_complete());
+        let masks: Vec<MaskPair> = (0..2).map(|_| MaskPair::ones(2, 2)).collect();
+        let mut acc = be.zeros_like_params();
+        assert!(r.reduce(&codec, &masks, &mut acc).is_err(), "incomplete barrier");
+    }
+}

@@ -1,0 +1,489 @@
+//! Masked-gradient wire format: serialize exactly the parameter slices
+//! a schedule leaves trainable, nothing else.
+//!
+//! ## Why no index structure
+//!
+//! D2FT's schedule is computed centrally and known to every node before
+//! the batch runs, so sender and receiver can both derive the payload
+//! layout from `(model structure, MaskPair)`. A message is therefore a
+//! 24-byte header plus raw little-endian f32s in canonical order — the
+//! densest encoding the mask admits, which makes the byte accounting an
+//! honest measurement of the paper's communication claim rather than a
+//! property of a clever container format. A mask fingerprint in the
+//! header catches sender/receiver schedule divergence.
+//!
+//! ## What ships
+//!
+//! Per parameter tensor (canonical sorted-name order):
+//!
+//! * non-trainable tensors (LoRA-frozen base weights) — never ship;
+//! * *shared* elements (embeddings, layer norms, classifier — owned by
+//!   no head) — always ship;
+//! * elements owned by subnet (block `l`, head `h`) — ship iff the
+//!   backward mask is 1 for that head (`p_f`). `p_o` and `p_s` heads
+//!   ship nothing: the backend's freeze contract guarantees those
+//!   gradient slices are exactly zero, so dropping them is lossless —
+//!   [`GradCodec::decode_add`] of an encoded message reconstructs the
+//!   dense gradient bit-for-bit (`tests/dist.rs` pins this property).
+
+use anyhow::Result;
+
+use crate::backend::native::NativeBackend;
+use crate::backend::Backend;
+use crate::schedule::MaskPair;
+use crate::tensor::Tensor;
+
+/// Message magic: "D2FG" (masked gradient payload).
+const MAGIC_GRAD: u32 = 0x4432_4647;
+/// Message magic: "D2FD" (dense delta payload, parameter-server mode).
+const MAGIC_DELTA: u32 = 0x4432_4644;
+/// Header: magic u32, micro u32, mask fingerprint u64, payload elems u64.
+const HEADER_BYTES: usize = 24;
+
+/// Owner tag for elements belonging to no head.
+const SHARED: u32 = u32::MAX;
+
+/// A contiguous `[lo, hi)` element range within one parameter tensor.
+type Range = (usize, usize);
+
+#[derive(Clone, Debug)]
+struct ParamLayout {
+    /// False for LoRA-frozen base weights — never on the wire.
+    trainable: bool,
+    /// Total element count of the tensor.
+    len: usize,
+    /// Maximal runs owned by no head (ship whenever trainable).
+    shared: Vec<Range>,
+    /// Maximal runs owned by subnet `l * heads + h`.
+    per_head: Vec<Vec<Range>>,
+}
+
+/// Encoder/decoder for masked gradient messages, specialized to one
+/// model instance. Construction walks the backend's per-head parameter
+/// ownership map once; encode/decode are then pure range copies.
+#[derive(Clone, Debug)]
+pub struct GradCodec {
+    depth: usize,
+    heads: usize,
+    params: Vec<ParamLayout>,
+    /// Total trainable elements (the dense message payload).
+    dense_elems: usize,
+}
+
+impl GradCodec {
+    /// Build the codec for `be`'s exact parameter layout (LoRA rank,
+    /// depth, heads). Replicas built from the same spec share a layout,
+    /// so one codec serves a whole cluster.
+    pub fn new(be: &NativeBackend) -> GradCodec {
+        let cfg = be.config();
+        let (depth, heads) = (cfg.depth, cfg.heads);
+        let n = be.n_param_tensors();
+        let mut owner: Vec<Vec<u32>> =
+            (0..n).map(|i| vec![SHARED; be.param_elems(i)]).collect();
+        for l in 0..depth {
+            for h in 0..heads {
+                let tag = (l * heads + h) as u32;
+                be.visit_head_elems(l, h, &mut |pi, ei| {
+                    debug_assert_eq!(owner[pi][ei], SHARED, "element owned twice");
+                    owner[pi][ei] = tag;
+                });
+            }
+        }
+        let trainable = be.trainable_flags();
+        let mut params = Vec::with_capacity(n);
+        let mut dense_elems = 0usize;
+        for (pi, own) in owner.iter().enumerate() {
+            let mut shared = Vec::new();
+            let mut per_head: Vec<Vec<Range>> = vec![Vec::new(); depth * heads];
+            let mut i = 0;
+            while i < own.len() {
+                let tag = own[i];
+                let mut j = i + 1;
+                while j < own.len() && own[j] == tag {
+                    j += 1;
+                }
+                if tag == SHARED {
+                    shared.push((i, j));
+                } else {
+                    per_head[tag as usize].push((i, j));
+                }
+                i = j;
+            }
+            if trainable[pi] {
+                dense_elems += own.len();
+            }
+            params.push(ParamLayout {
+                trainable: trainable[pi],
+                len: own.len(),
+                shared,
+                per_head,
+            });
+        }
+        GradCodec { depth, heads, params, dense_elems }
+    }
+
+    /// Which subnets ship under `masks`: a head's slices travel iff its
+    /// backward mask is 1 (only `p_f` produces nonzero gradients there).
+    fn active(&self, masks: &MaskPair) -> Vec<bool> {
+        assert_eq!(
+            masks.bwd.shape(),
+            &[self.depth, self.heads],
+            "mask shape vs codec model"
+        );
+        let mut v = vec![false; self.depth * self.heads];
+        for l in 0..self.depth {
+            for h in 0..self.heads {
+                v[l * self.heads + h] = masks.bwd.at(&[l, h]) >= 0.5;
+            }
+        }
+        v
+    }
+
+    /// Payload element count for a precomputed activity vector.
+    fn payload_elems_with(&self, act: &[bool]) -> usize {
+        let mut n = 0usize;
+        for p in &self.params {
+            if !p.trainable {
+                continue;
+            }
+            n += p.shared.iter().map(|r| r.1 - r.0).sum::<usize>();
+            for (t, ranges) in p.per_head.iter().enumerate() {
+                if act[t] {
+                    n += ranges.iter().map(|r| r.1 - r.0).sum::<usize>();
+                }
+            }
+        }
+        n
+    }
+
+    /// Payload element count of one message under `masks`.
+    pub fn payload_elems(&self, masks: &MaskPair) -> usize {
+        self.payload_elems_with(&self.active(masks))
+    }
+
+    /// Encoded byte size of one message under `masks`.
+    pub fn encoded_len(&self, masks: &MaskPair) -> usize {
+        HEADER_BYTES + 4 * self.payload_elems(masks)
+    }
+
+    /// Byte size of a dense (every head active) message — what one
+    /// micro-batch of the full, unmasked schedule ships.
+    pub fn dense_len(&self) -> usize {
+        HEADER_BYTES + 4 * self.dense_elems
+    }
+
+    /// Serialize the gradient slices `masks` leaves trainable. `grads`
+    /// must be the backend's dense gradients in canonical order (one
+    /// tensor per parameter).
+    pub fn encode(&self, micro: usize, masks: &MaskPair, grads: &[Tensor]) -> Vec<u8> {
+        assert_eq!(grads.len(), self.params.len(), "grad tensor count");
+        // One layout walk serves capacity, header, and body.
+        let act = self.active(masks);
+        let n_elems = self.payload_elems_with(&act);
+        let mut out = Vec::with_capacity(HEADER_BYTES + 4 * n_elems);
+        out.extend_from_slice(&MAGIC_GRAD.to_le_bytes());
+        out.extend_from_slice(&(micro as u32).to_le_bytes());
+        out.extend_from_slice(&masks.fingerprint().to_le_bytes());
+        out.extend_from_slice(&(n_elems as u64).to_le_bytes());
+        for (p, g) in self.params.iter().zip(grads) {
+            if !p.trainable {
+                continue;
+            }
+            debug_assert_eq!(g.len(), p.len, "grad shape vs layout");
+            let gd = g.data();
+            for &(lo, hi) in &p.shared {
+                for &v in &gd[lo..hi] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            for (t, ranges) in p.per_head.iter().enumerate() {
+                if !act[t] {
+                    continue;
+                }
+                for &(lo, hi) in ranges {
+                    for &v in &gd[lo..hi] {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode a message and **add** its payload into dense accumulators
+    /// (canonical order, e.g. from
+    /// [`NativeBackend::zeros_like_params`]). Elements the mask excluded
+    /// are untouched — with a zeroed accumulator this reconstructs the
+    /// sender's dense gradient exactly, because excluded slices were
+    /// exactly zero. Returns the message's micro-batch index.
+    pub fn decode_add(
+        &self,
+        bytes: &[u8],
+        masks: &MaskPair,
+        acc: &mut [Tensor],
+    ) -> Result<usize> {
+        anyhow::ensure!(acc.len() == self.params.len(), "accumulator count");
+        anyhow::ensure!(bytes.len() >= HEADER_BYTES, "message shorter than header");
+        let word = |lo: usize| -> [u8; 4] { bytes[lo..lo + 4].try_into().unwrap() };
+        let magic = u32::from_le_bytes(word(0));
+        anyhow::ensure!(magic == MAGIC_GRAD, "bad gradient-message magic {magic:#x}");
+        let micro = u32::from_le_bytes(word(4)) as usize;
+        let fp = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        anyhow::ensure!(
+            fp == masks.fingerprint(),
+            "mask fingerprint mismatch: sender and receiver disagree on the schedule"
+        );
+        let act = self.active(masks);
+        let expect = self.payload_elems_with(&act);
+        let n_elems = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            n_elems == expect,
+            "payload {n_elems} elems, layout expects {expect}"
+        );
+        anyhow::ensure!(
+            bytes.len() == HEADER_BYTES + 4 * n_elems,
+            "message length {} vs declared payload {}",
+            bytes.len(),
+            n_elems
+        );
+        let mut off = HEADER_BYTES;
+        for (p, a) in self.params.iter().zip(acc.iter_mut()) {
+            if !p.trainable {
+                continue;
+            }
+            let ad = a.data_mut();
+            for &(lo, hi) in &p.shared {
+                for x in &mut ad[lo..hi] {
+                    *x += f32::from_le_bytes(word(off));
+                    off += 4;
+                }
+            }
+            for (t, ranges) in p.per_head.iter().enumerate() {
+                if !act[t] {
+                    continue;
+                }
+                for &(lo, hi) in ranges {
+                    for x in &mut ad[lo..hi] {
+                        *x += f32::from_le_bytes(word(off));
+                        off += 4;
+                    }
+                }
+            }
+        }
+        Ok(micro)
+    }
+
+    /// Serialize dense per-parameter values for every trainable tensor —
+    /// the parameter-server downlink (update deltas). `vals[i]` must
+    /// have the parameter's full element count for trainable `i`
+    /// (non-trainable entries are ignored).
+    pub fn encode_dense(&self, vals: &[Tensor]) -> Vec<u8> {
+        assert_eq!(vals.len(), self.params.len(), "value tensor count");
+        let mut out = Vec::with_capacity(HEADER_BYTES + 4 * self.dense_elems);
+        out.extend_from_slice(&MAGIC_DELTA.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(&0u64.to_le_bytes());
+        out.extend_from_slice(&(self.dense_elems as u64).to_le_bytes());
+        for (p, v) in self.params.iter().zip(vals) {
+            if !p.trainable {
+                continue;
+            }
+            assert_eq!(v.len(), p.len, "dense payload size");
+            for &x in v.data() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a dense payload into per-parameter tensors (1-D; zero
+    /// length for non-trainable entries, mirroring
+    /// [`NativeBackend::update_capture`]).
+    pub fn decode_dense(&self, bytes: &[u8]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(bytes.len() >= HEADER_BYTES, "message shorter than header");
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        anyhow::ensure!(magic == MAGIC_DELTA, "bad delta-message magic {magic:#x}");
+        let n_elems = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            n_elems == self.dense_elems && bytes.len() == HEADER_BYTES + 4 * n_elems,
+            "dense payload size mismatch"
+        );
+        let mut off = HEADER_BYTES;
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            if !p.trainable {
+                out.push(Tensor::zeros(&[0]));
+                continue;
+            }
+            let mut v = vec![0.0f32; p.len];
+            for x in &mut v {
+                *x = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+            out.push(Tensor::from_vec(&[p.len], v));
+        }
+        Ok(out)
+    }
+}
+
+/// Running bytes-on-the-wire accounting for one distributed run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// Uplink gradient messages (worker -> aggregator).
+    pub up_msgs: u64,
+    /// Uplink bytes actually serialized.
+    pub up_bytes: u64,
+    /// What the same messages would have cost unmasked (dense).
+    pub dense_up_bytes: u64,
+    /// Downlink broadcasts (aggregator -> worker).
+    pub down_msgs: u64,
+    /// Downlink bytes actually serialized.
+    pub down_bytes: u64,
+}
+
+impl WireStats {
+    /// Record one uplink gradient message of `bytes` against a dense
+    /// baseline of `dense` bytes.
+    pub fn record_up(&mut self, bytes: usize, dense: usize) {
+        self.up_msgs += 1;
+        self.up_bytes += bytes as u64;
+        self.dense_up_bytes += dense as u64;
+    }
+
+    /// Record one downlink broadcast message.
+    pub fn record_down(&mut self, bytes: usize) {
+        self.down_msgs += 1;
+        self.down_bytes += bytes as u64;
+    }
+
+    /// Fraction of uplink gradient bytes saved vs the unmasked schedule
+    /// (the paper's communication-reduction claim, measured).
+    pub fn grad_savings(&self) -> f64 {
+        if self.dense_up_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.up_bytes as f64 / self.dense_up_bytes as f64
+    }
+
+    /// Total bytes moved (uplink + downlink).
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{NativeBackend, NativeSpec};
+    use crate::data::{DatasetSpec, SyntheticKind};
+    use crate::runtime::ModelConfig;
+
+    fn spec() -> NativeSpec {
+        NativeSpec {
+            config: ModelConfig {
+                img_size: 8,
+                patch: 4,
+                dim: 16,
+                depth: 2,
+                heads: 2,
+                mlp_ratio: 2,
+                classes: 10,
+                lora_rank: 0,
+                head_dim: 8,
+                tokens: 5,
+            },
+            micro_batch: 2,
+            mb_variants: vec![],
+            lora_ranks: vec![2],
+            lora_standard_rank: 2,
+            init_seed: 0xFEED,
+        }
+    }
+
+    fn masks_with(bwd_off: &[(usize, usize)], fwd_off: &[(usize, usize)]) -> MaskPair {
+        let mut m = MaskPair::ones(2, 2);
+        for &(l, h) in bwd_off {
+            m.bwd.set(&[l, h], 0.0);
+        }
+        for &(l, h) in fwd_off {
+            m.fwd.set(&[l, h], 0.0);
+            m.bwd.set(&[l, h], 0.0);
+        }
+        m
+    }
+
+    #[test]
+    fn masked_message_is_smaller_and_lossless() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let codec = GradCodec::new(&be);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        // One p_o head and one p_s head -> two heads' slices off-wire.
+        let masks = masks_with(&[(0, 1)], &[(1, 0)]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let msg = codec.encode(3, &masks, &grads);
+        assert_eq!(msg.len(), codec.encoded_len(&masks));
+        assert!(codec.encoded_len(&masks) < codec.dense_len(), "mask must shrink the wire");
+        // Decode into zeros reconstructs the dense gradient bit-for-bit.
+        let mut acc = be.zeros_like_params();
+        let micro = codec.decode_add(&msg, &masks, &mut acc).unwrap();
+        assert_eq!(micro, 3);
+        for (i, (a, g)) in acc.iter().zip(&grads).enumerate() {
+            assert_eq!(a.data(), g.data(), "param {i} reconstruction");
+        }
+        // Fingerprint mismatch is rejected.
+        let other = MaskPair::ones(2, 2);
+        assert!(codec.decode_add(&msg, &other, &mut acc).is_err());
+    }
+
+    #[test]
+    fn dense_and_all_ones_agree() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let codec = GradCodec::new(&be);
+        let ones = MaskPair::ones(2, 2);
+        assert_eq!(codec.encoded_len(&ones), codec.dense_len());
+        // Fully-masked batch ships only the shared (non-head) slices.
+        let none = masks_with(&[], &[(0, 0), (0, 1), (1, 0), (1, 1)]);
+        assert!(codec.encoded_len(&none) < codec.dense_len());
+        assert!(codec.payload_elems(&none) > 0, "embeddings/classifier still ship");
+    }
+
+    #[test]
+    fn lora_codec_ships_only_adapters_and_head() {
+        let be = NativeBackend::new(&spec(), 2, 2, 3);
+        let codec = GradCodec::new(&be);
+        let dense = codec.dense_len();
+        let full_ft = GradCodec::new(&NativeBackend::new(&spec(), 0, 2, 3)).dense_len();
+        assert!(
+            dense < full_ft,
+            "LoRA wire ({dense}B) must be far below full fine-tuning ({full_ft}B)"
+        );
+    }
+
+    #[test]
+    fn dense_delta_round_trip() {
+        let mut be = NativeBackend::new(&spec(), 0, 2, 3);
+        let codec = GradCodec::new(&be);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = MaskPair::ones(2, 2);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let deltas = be.update_capture(&grads, 0.05);
+        let blob = codec.encode_dense(&deltas);
+        let back = codec.decode_dense(&blob).unwrap();
+        for (d, b) in deltas.iter().zip(&back) {
+            assert_eq!(d.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn wire_stats_savings() {
+        let mut s = WireStats::default();
+        s.record_up(600, 1000);
+        s.record_up(400, 1000);
+        s.record_down(1000);
+        assert_eq!(s.up_msgs, 2);
+        assert_eq!(s.total_bytes(), 2000);
+        assert!((s.grad_savings() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,654 @@
+//! `DistTrainer`: the live data-parallel fine-tuning driver.
+//!
+//! K worker threads each own a full [`NativeBackend`] replica built from
+//! the same deterministic init. Per scheduled batch the aggregator
+//! assigns every micro-batch to a worker (straggler-aware, see below),
+//! each worker runs the masked forward/backward **for real** against the
+//! shared parameter snapshot, serializes the masked gradient
+//! ([`super::grads`]), and the aggregator reduces the messages in fixed
+//! micro order and applies one fused SGD-momentum update — then either
+//! broadcasts the reduced masked gradient (workers re-apply the same
+//! update locally) or, in parameter-server mode, the dense update
+//! deltas. Channel FIFO ordering doubles as the sync barrier: a worker
+//! always installs the batch-`b` update before it sees a batch-`b+1`
+//! compute job.
+//!
+//! ## Determinism
+//!
+//! Every micro-batch gradient is computed by exactly one worker whose
+//! replica is bitwise identical to the serial trainer's model at the
+//! same point; the wire format is lossless; the reduction order is
+//! fixed. So the whole trajectory — losses, parameters, eval accuracy —
+//! is bitwise identical to the serial [`crate::coordinator::Trainer`]
+//! under [`UpdateMode::BatchAccum`], for *any* worker count and either
+//! exchange mode. Placement (which worker computes which micro-batch)
+//! is measured-time dependent and deliberately free: it can shift work
+//! away from real stragglers without touching a single bit of the math.
+//!
+//! ## Measurement
+//!
+//! Uplink/downlink bytes are counted on the actual serialized messages
+//! ([`WireStats`]); per-worker step times are wall-clock measurements
+//! around the real gradient computation and feed both the assignment
+//! balancer (EMA per worker) and the workload/usage accounting that the
+//! simulated [`crate::cluster::Engine`] previously only modeled.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::allreduce::{ExchangeMode, OrderedReducer};
+use super::grads::{GradCodec, WireStats};
+use crate::backend::native::{NativeBackend, NativeProvider};
+use crate::backend::Backend;
+use crate::cluster::{CostModel, Engine, EngineConfig, ExecTimeModel, WorkloadTracker};
+use crate::coordinator::{build_scheduler, prepare_run, TrainReport, TrainerConfig, UpdateMode};
+use crate::data::{Batcher, Dataset, DatasetSpec, SyntheticKind};
+use crate::metrics::{DeviceUsage, Meter};
+use crate::partition::Partition;
+use crate::schedule::{MaskPair, Scheduler};
+use crate::scores::ScoreBook;
+use crate::tensor::Tensor;
+
+/// Configuration of one distributed run: the full serial trainer config
+/// plus the cluster shape.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// The training run (dataset, schedule, budget, seed, ...). The
+    /// update mode is forced to [`UpdateMode::BatchAccum`] — the only
+    /// semantics a synchronous data-parallel cluster can implement.
+    pub train: TrainerConfig,
+    /// Worker replica count (>= 1).
+    pub workers: usize,
+    /// Gradient exchange topology.
+    pub exchange: ExchangeMode,
+}
+
+impl DistConfig {
+    /// Masked-allreduce cluster of `workers` replicas.
+    pub fn new(train: TrainerConfig, workers: usize) -> DistConfig {
+        DistConfig { train, workers, exchange: ExchangeMode::MaskedAllReduce }
+    }
+}
+
+/// Outcome of a distributed run: the serial-comparable training report
+/// plus the measured wire and straggler data.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    /// The standard training report (losses, accuracy, modeled cluster
+    /// metrics), field-compatible with the serial trainer's. The
+    /// `straggler_ms` field here is the *real* per-batch straggler: the
+    /// slowest worker's measured gradient-computation time.
+    pub train: TrainReport,
+    /// Worker replicas that executed the run.
+    pub n_workers: usize,
+    /// Exchange topology label (`masked-allreduce` / `param-server`).
+    pub exchange: String,
+    /// Measured bytes on the wire for the *scheduled fine-tuning*
+    /// batches (actual serialized messages) — the traffic the paper's
+    /// communication claim is about.
+    pub wire: WireStats,
+    /// Measured bytes for the synthetic pre-training phase (all-ones
+    /// masks, so uplink is always dense). Kept separate so
+    /// [`DistReport::grad_savings`] and the measured-vs-modeled
+    /// comparison are not diluted by unscheduled traffic.
+    pub pretrain_wire: WireStats,
+    /// Uplink gradient bytes saved vs the unmasked schedule (measured).
+    pub grad_savings: f64,
+    /// What the simulated engine *modeled* for the same schedules, for
+    /// the measured-vs-modeled comparison (DESIGN.md §dist).
+    pub modeled_wire_bytes: u64,
+    /// Mean measured wall time per fine-tuning batch (dispatch through
+    /// aggregator update), ms.
+    pub mean_step_ms: f64,
+    /// Accumulated measured busy time per worker (ms).
+    pub worker_busy_ms: Vec<f64>,
+    /// Mean worker utilization (busy / per-batch makespan).
+    pub worker_utilization: f64,
+    /// Worker straggler-over-mean imbalance (0 = perfectly balanced).
+    pub worker_imbalance: f64,
+}
+
+/// One unit of worker compute: run micro `micro` under `masks`.
+struct MicroJob {
+    micro: usize,
+    x: Tensor,
+    y: Vec<i32>,
+    masks: MaskPair,
+}
+
+/// Aggregator -> worker messages. FIFO per worker, so an update always
+/// lands before the next batch's compute.
+enum Job {
+    /// Compute masked gradients for these micro-batches (one snapshot).
+    Compute(Vec<MicroJob>),
+    /// Apply the reduced masked gradient (allreduce mode).
+    Apply { lr: f32, union: MaskPair, blob: Arc<Vec<u8>> },
+    /// Install dense update deltas (parameter-server mode).
+    ApplyDeltas { blob: Arc<Vec<u8>> },
+    /// Zero the momentum buffers (pretrain -> fine-tune boundary).
+    ResetMomentum,
+}
+
+/// Worker -> aggregator: one computed micro-batch gradient message.
+struct Up {
+    worker: usize,
+    micro: usize,
+    loss: f32,
+    n_correct: f32,
+    /// The serialized masked gradient — the bytes that cross the wire.
+    blob: Vec<u8>,
+    /// Measured wall time of grad_step + encode (ms).
+    ms: f64,
+}
+
+fn worker_loop(
+    mut be: NativeBackend,
+    codec: Arc<GradCodec>,
+    worker: usize,
+    rx: mpsc::Receiver<Job>,
+    tx: mpsc::Sender<Up>,
+) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Compute(items) => {
+                for it in items {
+                    let t0 = Instant::now();
+                    let (out, grads) = be
+                        .grad_step(&it.x, &it.y, &it.masks)
+                        .expect("native grad step on worker");
+                    let blob = codec.encode(it.micro, &it.masks, &grads);
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let up = Up {
+                        worker,
+                        micro: it.micro,
+                        loss: out.loss,
+                        n_correct: out.n_correct,
+                        blob,
+                        ms,
+                    };
+                    if tx.send(up).is_err() {
+                        return;
+                    }
+                }
+            }
+            Job::Apply { lr, union, blob } => {
+                let mut acc = be.zeros_like_params();
+                codec
+                    .decode_add(&blob, &union, &mut acc)
+                    .expect("decoding reduced gradient broadcast");
+                be.apply_grads(&acc, lr).expect("applying reduced gradient");
+            }
+            Job::ApplyDeltas { blob } => {
+                let deltas = codec.decode_dense(&blob).expect("decoding delta broadcast");
+                be.apply_deltas(&deltas).expect("installing deltas");
+            }
+            Job::ResetMomentum => {
+                be.reset_momentum().expect("resetting momentum");
+            }
+        }
+    }
+}
+
+/// Per-batch outcome of one distributed execution.
+struct BatchOut {
+    /// `(loss, n_correct)` in micro order.
+    outs: Vec<(f32, f32)>,
+    /// Measured busy ms per worker (0 for idle workers).
+    worker_ms: Vec<f64>,
+}
+
+/// The distributed data-parallel trainer (see the module docs).
+pub struct DistTrainer {
+    cfg: DistConfig,
+    /// The aggregator's authoritative replica (scores, eval, updates).
+    agg: NativeBackend,
+    codec: Arc<GradCodec>,
+    partition: Partition,
+    train: Dataset,
+    test: Dataset,
+    txs: Vec<mpsc::Sender<Job>>,
+    rx: mpsc::Receiver<Up>,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// Per-worker EMA of measured ms per micro-batch task — the
+    /// straggler signal the assignment balancer reacts to.
+    ema_ms: Vec<f64>,
+}
+
+impl DistTrainer {
+    /// Build the cluster: an aggregator replica plus `cfg.workers`
+    /// worker replicas, all deterministically initialized from the same
+    /// `(spec, lora_rank, seed)` so they are bitwise identical.
+    pub fn new(provider: &NativeProvider, cfg: DistConfig) -> Result<DistTrainer> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker replica");
+        let mut cfg = cfg;
+        cfg.train.update = UpdateMode::BatchAccum;
+        let spec = provider.spec();
+        if cfg.train.lora_rank > 0 {
+            anyhow::ensure!(
+                spec.lora_ranks.contains(&cfg.train.lora_rank),
+                "native spec advertises LoRA ranks {:?}, not {}",
+                spec.lora_ranks,
+                cfg.train.lora_rank
+            );
+        }
+        let mb = spec.micro_batch;
+        let agg = NativeBackend::new(spec, cfg.train.lora_rank, mb, cfg.train.seed);
+        // Shared with the serial trainer so the two drivers cannot
+        // drift on partition/dataset setup.
+        let setup = prepare_run(agg.config(), &cfg.train)?;
+        let codec = Arc::new(GradCodec::new(&agg));
+        let (up_tx, up_rx) = mpsc::channel::<Up>();
+        let mut txs = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let (tx, job_rx) = mpsc::channel::<Job>();
+            let replica = NativeBackend::new(spec, cfg.train.lora_rank, mb, cfg.train.seed);
+            let codec = Arc::clone(&codec);
+            let up = up_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("d2ft-dist-{w}"))
+                .spawn(move || worker_loop(replica, codec, w, job_rx, up))
+                .expect("spawning dist worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        let ema_ms = vec![1.0; cfg.workers];
+        Ok(DistTrainer {
+            cfg,
+            agg,
+            codec,
+            partition: setup.partition,
+            train: setup.train,
+            test: setup.test,
+            txs,
+            rx: up_rx,
+            handles,
+            ema_ms,
+        })
+    }
+
+    /// The aggregator's replica (authoritative parameters).
+    pub fn backend(&self) -> &NativeBackend {
+        &self.agg
+    }
+
+    /// The model partition this run schedules over.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// The gradient codec (wire-layout queries, e.g. dense size).
+    pub fn codec(&self) -> &GradCodec {
+        &self.codec
+    }
+
+    /// Assign each of `n_micro` micro-batches to a worker: greedy
+    /// least-finish-time over the measured per-task EMAs, so a slow
+    /// worker (real straggler) receives fewer tasks next batch. Purely
+    /// a placement decision — replicas are bitwise identical, so any
+    /// assignment yields identical numerics.
+    fn assign(&self, n_micro: usize) -> Vec<usize> {
+        let k = self.txs.len();
+        let mut load = vec![0.0f64; k];
+        let mut out = Vec::with_capacity(n_micro);
+        for _ in 0..n_micro {
+            let mut best = 0;
+            for w in 1..k {
+                if load[w] + self.ema_ms[w] < load[best] + self.ema_ms[best] {
+                    best = w;
+                }
+            }
+            load[best] += self.ema_ms[best];
+            out.push(best);
+        }
+        out
+    }
+
+    /// Execute one batch: dispatch compute jobs, run the ordered-reduce
+    /// barrier, apply the update on the aggregator, broadcast it to the
+    /// workers, and account the bytes.
+    fn exec_batch(
+        &mut self,
+        micros: &[(Tensor, Vec<i32>)],
+        masks: &[MaskPair],
+        stats: &mut WireStats,
+    ) -> Result<BatchOut> {
+        let n = micros.len();
+        assert_eq!(masks.len(), n, "one mask pair per micro-batch");
+        let k = self.txs.len();
+        let assignment = self.assign(n);
+        let mut jobs: Vec<Vec<MicroJob>> = (0..k).map(|_| Vec::new()).collect();
+        for (i, (x, y)) in micros.iter().enumerate() {
+            jobs[assignment[i]].push(MicroJob {
+                micro: i,
+                x: x.clone(),
+                y: y.clone(),
+                masks: masks[i].clone(),
+            });
+        }
+        let mut tasks_per_worker = vec![0usize; k];
+        for (w, job) in jobs.into_iter().enumerate() {
+            if job.is_empty() {
+                continue;
+            }
+            tasks_per_worker[w] = job.len();
+            self.txs[w].send(Job::Compute(job)).expect("dist worker queue closed");
+        }
+        // Barrier: one gradient message per micro-batch.
+        let mut reducer = OrderedReducer::new(n);
+        let mut outs = vec![(0.0f32, 0.0f32); n];
+        let mut worker_ms = vec![0.0f64; k];
+        let dense = self.codec.dense_len();
+        for _ in 0..n {
+            let up = self.rx.recv().expect("dist worker died");
+            worker_ms[up.worker] += up.ms;
+            outs[up.micro] = (up.loss, up.n_correct);
+            stats.record_up(up.blob.len(), dense);
+            reducer.push(up.micro, up.blob)?;
+        }
+        // Straggler feedback: EMA of measured ms per task.
+        for w in 0..k {
+            if tasks_per_worker[w] > 0 {
+                let per_task = worker_ms[w] / tasks_per_worker[w] as f64;
+                self.ema_ms[w] = 0.8 * self.ema_ms[w] + 0.2 * per_task;
+            }
+        }
+        // Fixed-order reduction -> batch-mean gradient.
+        let mut acc = self.agg.zeros_like_params();
+        reducer.reduce(&self.codec, masks, &mut acc)?;
+        let lr = self.cfg.train.lr;
+        match self.cfg.exchange {
+            ExchangeMode::MaskedAllReduce => {
+                self.agg.apply_grads(&acc, lr)?;
+                let union = MaskPair::union(masks);
+                let blob = Arc::new(self.codec.encode(0, &union, &acc));
+                for tx in &self.txs {
+                    stats.record_down(blob.len());
+                    tx.send(Job::Apply { lr, union: union.clone(), blob: Arc::clone(&blob) })
+                        .expect("dist worker queue closed");
+                }
+            }
+            ExchangeMode::ParamServer => {
+                let deltas = self.agg.update_capture(&acc, lr);
+                let blob = Arc::new(self.codec.encode_dense(&deltas));
+                for tx in &self.txs {
+                    stats.record_down(blob.len());
+                    tx.send(Job::ApplyDeltas { blob: Arc::clone(&blob) })
+                        .expect("dist worker queue closed");
+                }
+            }
+        }
+        Ok(BatchOut { outs, worker_ms })
+    }
+
+    /// Distributed synthetic pre-training (all-ones masks), mirroring
+    /// the serial trainer's pretrain arithmetic exactly.
+    fn pretrain(&mut self, stats: &mut WireStats) -> Result<()> {
+        let cfg = self.cfg.train.clone();
+        if cfg.pretrain_batches == 0 {
+            return Ok(());
+        }
+        let mc = self.agg.config().clone();
+        let mb = self.agg.micro_batch();
+        let n = cfg.pretrain_batches * cfg.micros_per_batch * mb;
+        let pre = DatasetSpec::preset(SyntheticKind::Pretrain, mc.img_size, n, cfg.seed ^ 0x5A)
+            .generate("train");
+        let mut batcher = Batcher::new(&pre, mb, cfg.micros_per_batch, cfg.seed);
+        while let Some(micros) = batcher.next_batch() {
+            let masks: Vec<MaskPair> =
+                (0..micros.len()).map(|_| MaskPair::ones(mc.depth, mc.heads)).collect();
+            self.exec_batch(&micros, &masks, stats)?;
+        }
+        self.agg.reset_momentum()?;
+        for tx in &self.txs {
+            tx.send(Job::ResetMomentum).expect("dist worker queue closed");
+        }
+        Ok(())
+    }
+
+    /// Evaluate test top-1 on the aggregator replica (full forward).
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let mb = self.agg.eval_micro_batch();
+        let mut meter = Meter::new();
+        let mut i = 0;
+        while i + mb <= self.test.len() {
+            let idxs: Vec<usize> = (i..i + mb).collect();
+            let (x, y) = self.test.gather(&idxs);
+            let out = self.agg.eval(&x, &y, None)?;
+            meter.push(out.loss, out.n_correct, mb);
+            i += mb;
+        }
+        Ok((meter.top1(), meter.mean_loss()))
+    }
+
+    /// Run the full distributed fine-tuning loop.
+    pub fn run(&mut self) -> Result<DistReport> {
+        let cfg = self.cfg.train.clone();
+        let mb = self.agg.micro_batch();
+        let k = self.txs.len();
+        // Pretrain traffic is accounted separately: its all-ones masks
+        // ship dense messages, which would dilute the fine-tuning
+        // savings headline if folded in.
+        let mut pretrain_stats = WireStats::default();
+        self.pretrain(&mut pretrain_stats)?;
+        let mut stats = WireStats::default();
+
+        let mut scheduler = build_scheduler(cfg.scheduler, cfg.scores, cfg.seed);
+        let budget = match &cfg.hetero {
+            Some(h) => h.budget(cfg.budget.clone(), self.partition.n_subnets()),
+            None => cfg.budget.clone(),
+        };
+        let cost = CostModel::paper();
+        let n_devices = self.partition.n_subnets();
+        let mut workloads = WorkloadTracker::new(cost, n_devices);
+        // The simulated engine still runs for the modeled accounting —
+        // that is exactly what the measured numbers are compared against.
+        let mut ecfg = EngineConfig::accounting(cfg.exec, cfg.seed);
+        ecfg.bytes_per_fullop = self.codec.dense_len() as u64;
+        let mut engine =
+            Engine::with_models(ecfg, n_devices, ExecTimeModel::paper(), cost);
+        let mut usage = DeviceUsage::new(n_devices);
+        let mut worker_usage = DeviceUsage::new(k);
+        let mut loss_curve = Vec::with_capacity(cfg.batches);
+        let mut eval_curve = Vec::new();
+        let mut score_cache: Vec<Option<ScoreBook>> = Vec::new();
+        let mut exec_ms_sum = 0.0;
+        let mut makespan_sum = 0.0;
+        let mut modeled_wire_bytes = 0u64;
+        let mut step_ms_sum = 0.0;
+        let mut meter = Meter::new();
+
+        // Cloned so the epoch iterator does not hold a borrow of `self`
+        // across the `exec_batch` calls.
+        let train_data = self.train.clone();
+        let t0 = Instant::now();
+        let mut batch_idx = 0;
+        'outer: while batch_idx < cfg.batches {
+            let mut batcher = Batcher::new(&train_data, mb, cfg.micros_per_batch, cfg.seed);
+            let mut epoch_pos = 0usize;
+            while let Some(micros) = batcher.next_batch() {
+                if batch_idx >= cfg.batches {
+                    break 'outer;
+                }
+                // --- contribution scores (cached, aggregator-side) --------
+                if score_cache.len() <= epoch_pos {
+                    score_cache.resize(epoch_pos + 1, None);
+                }
+                if score_cache[epoch_pos].is_none() {
+                    // Keep this guard in lockstep with the serial
+                    // trainer's score-cache block — the bitwise
+                    // serial ≡ dist contract depends on it.
+                    let can_probe = self.agg.supports_probe();
+                    score_cache[epoch_pos] = Some(if scheduler.needs_scores() && can_probe {
+                        let probes: Vec<Tensor> = micros
+                            .iter()
+                            .map(|(x, y)| self.agg.score_probe(x, y))
+                            .collect::<Result<_>>()?;
+                        ScoreBook::from_probes(&self.partition, &probes)
+                    } else {
+                        ScoreBook::zeros(self.partition.n_subnets(), micros.len())
+                    });
+                }
+                let book = score_cache[epoch_pos].as_ref().unwrap();
+                // --- schedule + distributed execution ---------------------
+                let table = scheduler.schedule(book, &budget);
+                let masks = table.all_masks(&self.partition);
+                let ts = Instant::now();
+                let out = self.exec_batch(&micros, &masks, &mut stats)?;
+                step_ms_sum += ts.elapsed().as_secs_f64() * 1e3;
+                for &(loss, n_correct) in &out.outs {
+                    meter.push(loss, n_correct, mb);
+                    loss_curve.push(loss);
+                }
+                worker_usage.record(&out.worker_ms);
+                // --- modeled accounting (the comparison baseline) ---------
+                let cluster = engine.execute(&table);
+                workloads.record(&table);
+                workloads.record_measured(&cluster.measured_ms());
+                usage.record(&cluster.finish_ms());
+                exec_ms_sum += cluster.mean_device_ms;
+                makespan_sum += cluster.makespan_ms;
+                modeled_wire_bytes += cluster.wire_bytes;
+                if cfg.eval_every > 0 && (batch_idx + 1) % cfg.eval_every == 0 {
+                    let (top1, _) = self.evaluate()?;
+                    eval_curve.push((batch_idx + 1, top1));
+                }
+                batch_idx += 1;
+                epoch_pos += 1;
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let (test_top1, test_loss) = self.evaluate()?;
+        let b = workloads.batches().max(1) as f64;
+        let train = TrainReport {
+            scheduler: cfg.scheduler.label().to_string(),
+            backend: self.agg.label().to_string(),
+            final_train_loss: meter.mean_loss(),
+            test_top1,
+            test_loss,
+            loss_curve,
+            eval_curve,
+            compute_fraction: workloads.total_compute_fraction(),
+            comm_fraction: workloads.total_comm_fraction(),
+            workload_variance: workloads.workload_variance(),
+            sample_count_variance: workloads.sample_count_variance(),
+            mean_exec_ms: exec_ms_sum / b,
+            makespan_ms: makespan_sum / b,
+            engine: format!("dist({k} workers, {})", self.cfg.exchange.label()),
+            utilization: usage.mean_utilization(),
+            imbalance: usage.imbalance(),
+            // Real straggler: slowest worker's measured time per batch.
+            straggler_ms: worker_usage.total_makespan_ms() / worker_usage.steps().max(1) as f64,
+            wall_s,
+            batches: batch_idx,
+        };
+        let n_batches = worker_usage.steps().max(1) as f64;
+        Ok(DistReport {
+            grad_savings: stats.grad_savings(),
+            n_workers: k,
+            exchange: self.cfg.exchange.label().to_string(),
+            wire: stats,
+            pretrain_wire: pretrain_stats,
+            modeled_wire_bytes,
+            mean_step_ms: step_ms_sum / n_batches,
+            worker_busy_ms: worker_usage.busy_ms().to_vec(),
+            worker_utilization: worker_usage.mean_utilization(),
+            worker_imbalance: worker_usage.imbalance(),
+            train,
+        })
+    }
+}
+
+impl Drop for DistTrainer {
+    fn drop(&mut self) {
+        // Closing the job queues ends each worker's recv loop.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeSpec;
+    use crate::coordinator::SchedulerKind;
+    use crate::runtime::ModelConfig;
+    use crate::schedule::Budget;
+
+    fn small_provider() -> NativeProvider {
+        NativeProvider::new(NativeSpec {
+            config: ModelConfig {
+                img_size: 8,
+                patch: 4,
+                dim: 16,
+                depth: 2,
+                heads: 2,
+                mlp_ratio: 2,
+                classes: 10,
+                lora_rank: 0,
+                head_dim: 8,
+                tokens: 5,
+            },
+            micro_batch: 2,
+            mb_variants: vec![],
+            lora_ranks: vec![2],
+            lora_standard_rank: 2,
+            init_seed: 0xBEEF,
+        })
+    }
+
+    fn quick_cfg() -> TrainerConfig {
+        TrainerConfig {
+            train_size: 60,
+            test_size: 12,
+            batches: 2,
+            pretrain_batches: 1,
+            ..TrainerConfig::quick(
+                crate::data::SyntheticKind::Cifar10Like,
+                SchedulerKind::D2ft,
+                Budget::uniform(5, 3, 1),
+            )
+        }
+    }
+
+    #[test]
+    fn dist_trainer_runs_and_counts_bytes() {
+        let provider = small_provider();
+        let mut dt = DistTrainer::new(&provider, DistConfig::new(quick_cfg(), 2)).unwrap();
+        let r = dt.run().unwrap();
+        assert_eq!(r.n_workers, 2);
+        assert_eq!(r.train.batches, 2);
+        assert_eq!(r.train.loss_curve.len(), 10);
+        assert!(r.train.final_train_loss.is_finite());
+        assert!(r.wire.up_bytes > 0 && r.wire.down_bytes > 0);
+        // 3 p_f + 1 p_o of 5 leaves head slices off the wire.
+        assert!(r.grad_savings > 0.0, "masked schedule must save bytes");
+        assert!(r.wire.up_bytes < r.wire.dense_up_bytes);
+        assert_eq!(r.worker_busy_ms.len(), 2);
+    }
+
+    #[test]
+    fn worker_count_must_be_positive() {
+        let provider = small_provider();
+        assert!(DistTrainer::new(&provider, DistConfig::new(quick_cfg(), 0)).is_err());
+    }
+
+    #[test]
+    fn assignment_balances_by_measured_ema() {
+        let provider = small_provider();
+        let mut dt = DistTrainer::new(&provider, DistConfig::new(quick_cfg(), 2)).unwrap();
+        // Pretend worker 1 is 3x slower than worker 0.
+        dt.ema_ms = vec![1.0, 3.0];
+        let a = dt.assign(4);
+        let w0 = a.iter().filter(|&&w| w == 0).count();
+        let w1 = a.iter().filter(|&&w| w == 1).count();
+        assert!(w0 > w1, "fast worker takes more micro-batches: {a:?}");
+        assert_eq!(w0 + w1, 4);
+    }
+}

@@ -31,8 +31,13 @@
 //! each scheduled batch on the parallel multi-device engine
 //! ([`cluster::Engine`] — one worker thread per device, step barrier,
 //! comm/compute overlap; `--serial` keeps the bitwise-identical
-//! reference path). See `DESIGN.md` for the full system inventory,
-//! backend contract, engine dataflow, and per-experiment index.
+//! reference path). The `dist` module (feature `native`) goes one step
+//! further: live worker replicas execute the scheduled gradient
+//! computations for real and exchange *masked* serialized gradients, so
+//! the paper's communication savings are measured in bytes rather than
+//! modeled — while staying bitwise identical to the serial trainer.
+//! See `DESIGN.md` for the full system inventory, backend contract,
+//! engine and dist dataflows, and per-experiment index.
 
 #![warn(missing_docs)]
 
@@ -40,6 +45,8 @@ pub mod backend;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+#[cfg(feature = "native")]
+pub mod dist;
 pub mod experiments;
 pub mod metrics;
 pub mod partition;

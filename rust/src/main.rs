@@ -8,15 +8,17 @@
 //!
 //! `--backend native` (the default) needs no setup at all; `--backend
 //! xla` needs a build with `--features xla` plus `make artifacts`.
+//! `repro train --dist --workers K` runs the real data-parallel trainer
+//! (K worker threads, masked-gradient exchange, measured bytes).
 
 use anyhow::Result;
 
 use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::cluster::ExecMode;
-use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
 use d2ft::data::SyntheticKind;
 use d2ft::experiments::{list_experiments, run_experiment, ExperimentCtx};
-use d2ft::metrics::pct;
+use d2ft::metrics::{fmt_bytes, pct};
 use d2ft::schedule::Budget;
 use d2ft::scores::{Metric, ScoreConfig};
 use d2ft::util::cli::Cli;
@@ -26,6 +28,7 @@ fn cli() -> Cli {
         .positional("command", "train | experiment <id> | list | info")
         .positional("experiment-id", "experiment id for `experiment`")
         .flag("backend", "native", "compute backend: native (pure Rust, zero setup) | xla (PJRT artifacts)")
+        .flag("model", "mini", "native model preset: mini | small (ViT-small-like, 74 subnets)")
         .flag("artifacts", "artifacts", "artifacts directory (xla backend only; make artifacts)")
         .flag("dataset", "c100", "c10 | c100 | cars")
         .flag("scheduler", "d2ft", "d2ft | standard | random | dpruning-m | dpruning-mg | moe | scaler-max|min|0.1|0.2")
@@ -44,8 +47,11 @@ fn cli() -> Cli {
         .flag("scale", "1.0", "experiment run-length scale factor")
         .flag("lora-rank", "0", "LoRA adapter rank (0 = full FT)")
         .flag("eval-every", "0", "evaluate test top-1 every N batches")
-        .flag("workers", "0", "engine worker threads (0 = one per simulated device)")
+        .flag("workers", "0", "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas)")
+        .flag("exchange", "allreduce", "dist gradient exchange: allreduce | ps (parameter server)")
         .switch("serial", "serial cluster execution (reference path; same metrics)")
+        .switch("dist", "real data-parallel training: worker replicas + masked-gradient exchange (native)")
+        .switch("batch-accum", "one aggregated update per batch (the dist semantics) instead of per-micro")
         .switch("quiet", "suppress info logging")
 }
 
@@ -62,10 +68,21 @@ fn main() -> Result<()> {
         d2ft::util::log::set_level(d2ft::util::log::Level::Warn);
     }
     let open_provider = || -> Result<Box<dyn BackendProvider>> {
-        provider_for(
-            BackendKind::parse(args.get("backend"))?,
-            std::path::Path::new(args.get("artifacts")),
-        )
+        let kind = BackendKind::parse(args.get("backend"))?;
+        let model = args.get("model");
+        match kind {
+            #[cfg(feature = "native")]
+            BackendKind::Native => Ok(Box::new(d2ft::backend::native::NativeProvider::new(
+                d2ft::backend::native::NativeSpec::preset(model)?,
+            ))),
+            _ => {
+                anyhow::ensure!(
+                    matches!(model.to_ascii_lowercase().as_str(), "mini" | "tiny"),
+                    "--model presets apply to the native backend only"
+                );
+                provider_for(kind, std::path::Path::new(args.get("artifacts")))
+            }
+        }
     };
     let command = args.positional(0).unwrap_or("info").to_string();
     match command.as_str() {
@@ -118,7 +135,6 @@ fn main() -> Result<()> {
             Ok(())
         }
         "train" => {
-            let provider = open_provider()?;
             let micros = args.get_usize("micros")?;
             let budget = Budget::uniform(
                 micros,
@@ -149,7 +165,16 @@ fn main() -> Result<()> {
                 pretrain_batches: args.get_usize("pretrain-batches")?,
                 eval_every: args.get_usize("eval-every")?,
                 lora_rank: args.get_usize("lora-rank")?,
+                update: if args.get_bool("batch-accum") || args.get_bool("dist") {
+                    UpdateMode::BatchAccum
+                } else {
+                    UpdateMode::PerMicro
+                },
             };
+            if args.get_bool("dist") {
+                return run_dist(&args, cfg);
+            }
+            let provider = open_provider()?;
             let mut trainer = Trainer::new(provider.as_ref(), cfg)?;
             let r = trainer.run()?;
             println!("backend              {}", r.backend);
@@ -175,4 +200,58 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// `repro train --dist`: the real data-parallel runtime (native only).
+#[cfg(feature = "native")]
+fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
+    use d2ft::backend::native::{NativeProvider, NativeSpec};
+    use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode};
+
+    anyhow::ensure!(
+        d2ft::backend::BackendKind::parse(args.get("backend"))? == d2ft::backend::BackendKind::Native,
+        "--dist runs on the native backend (worker replicas need Send numerics)"
+    );
+    let provider = NativeProvider::new(NativeSpec::preset(args.get("model"))?);
+    let workers = match args.get_usize("workers")? {
+        0 => 4,
+        w => w,
+    };
+    let dcfg = DistConfig {
+        train: cfg,
+        workers,
+        exchange: ExchangeMode::parse(args.get("exchange"))?,
+    };
+    let mut trainer = DistTrainer::new(&provider, dcfg)?;
+    let r = trainer.run()?;
+    let t = &r.train;
+    println!("backend              {} (dist)", t.backend);
+    println!("scheduler            {}", t.scheduler);
+    println!("workers              {} ({})", r.n_workers, r.exchange);
+    println!("batches              {}", t.batches);
+    println!("final train loss     {:.4}", t.final_train_loss);
+    println!("test top-1           {}", pct(t.test_top1));
+    println!("test loss            {:.4}", t.test_loss);
+    println!("compute fraction     {}", pct(t.compute_fraction));
+    println!("comm fraction(model) {}", pct(t.comm_fraction));
+    println!(
+        "grad bytes uplink    {} measured ({} unmasked) -> {} saved",
+        fmt_bytes(r.wire.up_bytes),
+        fmt_bytes(r.wire.dense_up_bytes),
+        pct(r.grad_savings)
+    );
+    println!("bytes downlink       {}", fmt_bytes(r.wire.down_bytes));
+    println!("bytes modeled        {}", fmt_bytes(r.modeled_wire_bytes));
+    println!("bytes pretrain       {} (dense; excluded above)", fmt_bytes(r.pretrain_wire.total_bytes()));
+    println!("mean step (measured) {:.3}ms", r.mean_step_ms);
+    println!("straggler (measured) {:.3}ms/batch", t.straggler_ms);
+    println!("worker utilization   {}", pct(r.worker_utilization));
+    println!("worker imbalance     {:.4}", r.worker_imbalance);
+    println!("wall time            {:.1}s", t.wall_s);
+    Ok(())
+}
+
+#[cfg(not(feature = "native"))]
+fn run_dist(_args: &d2ft::util::cli::Args, _cfg: TrainerConfig) -> Result<()> {
+    anyhow::bail!("--dist needs the `native` feature (rebuild with default features)")
 }

@@ -220,6 +220,22 @@ pub fn pct(x: f64) -> String {
     format!("{:.1}%", x * 100.0)
 }
 
+/// Human-readable byte count (B/KiB/MiB/GiB auto-scaled) — used by the
+/// `dist` runtime's bytes-on-the-wire reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let bf = b as f64;
+    if bf < KIB {
+        format!("{b}B")
+    } else if bf < KIB * KIB {
+        format!("{:.1}KiB", bf / KIB)
+    } else if bf < KIB * KIB * KIB {
+        format!("{:.2}MiB", bf / (KIB * KIB))
+    } else {
+        format!("{:.2}GiB", bf / (KIB * KIB * KIB))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,5 +309,13 @@ mod tests {
     fn pct_format() {
         assert_eq!(pct(0.894), "89.4%");
         assert_eq!(pct(1.0), "100.0%");
+    }
+
+    #[test]
+    fn bytes_format_scales() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(1536), "1.5KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
+        assert!(fmt_bytes(5 * 1024 * 1024 * 1024).ends_with("GiB"));
     }
 }

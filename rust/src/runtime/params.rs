@@ -44,6 +44,48 @@ impl ParamStore {
         }
     }
 
+    /// Build a store from an explicit entry table + flat buffer (the
+    /// native backend's export path). Validates the same structural
+    /// invariants a manifest does: contiguous ascending offsets,
+    /// shape/size agreement, and a buffer of exactly the summed size.
+    pub fn from_parts(entries: Vec<ParamEntry>, flat: Vec<f32>) -> Result<Self> {
+        let mut off = 0;
+        for e in &entries {
+            anyhow::ensure!(
+                e.offset == off,
+                "param {} offset {} != expected {off}",
+                e.name,
+                e.offset
+            );
+            anyhow::ensure!(
+                e.shape.iter().product::<usize>() == e.size,
+                "param {} shape/size mismatch",
+                e.name
+            );
+            off += e.size;
+        }
+        anyhow::ensure!(
+            off == flat.len(),
+            "flat buffer has {} elements, entries expect {off}",
+            flat.len()
+        );
+        Ok(ParamStore { entries, flat })
+    }
+
+    /// The whole flat element buffer (manifest order).
+    pub fn flat(&self) -> &[f32] {
+        &self.flat
+    }
+
+    /// Write the blob in `params_init.bin` format (little-endian f32) —
+    /// the file an artifact set ships, so a native export can seed the
+    /// XLA path with identical bits.
+    pub fn write_blob(&self, path: &Path) -> Result<()> {
+        let bytes: Vec<u8> = self.flat.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing params blob {}", path.display()))
+    }
+
     /// Number of parameter tensors.
     pub fn n_tensors(&self) -> usize {
         self.entries.len()
@@ -176,6 +218,43 @@ mod tests {
         let z = ParamStore::zeros_like(&m);
         assert_eq!(z.total_elems(), 10);
         assert!(z.slice("a").unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_parts_validates_and_round_trips_blob() {
+        let entries = vec![
+            ParamEntry { name: "a".into(), shape: vec![2, 2], size: 4, offset: 0 },
+            ParamEntry { name: "b".into(), shape: vec![3], size: 3, offset: 4 },
+        ];
+        let flat: Vec<f32> = vec![1.0, -2.5, 3.0, 0.25, -0.0, 7.0, 1e-9];
+        let store = ParamStore::from_parts(entries.clone(), flat.clone()).unwrap();
+        assert_eq!(store.flat(), &flat[..]);
+        assert_eq!(store.slice("b").unwrap(), &flat[4..]);
+        // Bad offset rejected.
+        let mut bad = entries.clone();
+        bad[1].offset = 5;
+        assert!(ParamStore::from_parts(bad, flat.clone()).is_err());
+        // Short buffer rejected.
+        assert!(ParamStore::from_parts(entries.clone(), flat[..6].to_vec()).is_err());
+        // write_blob -> load round trip is bitwise.
+        let dir = std::env::temp_dir().join("d2ft_params_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        store.write_blob(&dir.join("p.bin")).unwrap();
+        let m = Manifest {
+            prefix: String::new(),
+            config: tiny_manifest().config,
+            micro_batch: 2,
+            mb_variants: vec![],
+            artifacts: vec![],
+            params_bin: "p.bin".into(),
+            total_elems: 7,
+            params: entries,
+        };
+        let loaded = ParamStore::load(&m, &dir).unwrap();
+        assert_eq!(
+            loaded.flat().iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            flat.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

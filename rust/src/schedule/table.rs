@@ -196,6 +196,50 @@ impl MaskPair {
             bwd: Tensor::full(&[depth, heads], 1.0),
         }
     }
+
+    /// Element-wise union (max) of a batch's mask pairs: a head is active
+    /// in the union iff it is active in *any* micro-batch. This is the
+    /// sparsity pattern of the batch's aggregated gradient, which the
+    /// `dist` runtime's reduced-gradient broadcast is encoded under.
+    pub fn union(masks: &[MaskPair]) -> MaskPair {
+        assert!(!masks.is_empty(), "union of zero mask pairs");
+        let mut out = masks[0].clone();
+        for m in &masks[1..] {
+            assert_eq!(m.fwd.shape(), out.fwd.shape(), "mask shape mismatch");
+            for (o, &v) in out.fwd.data_mut().iter_mut().zip(m.fwd.data()) {
+                if v > *o {
+                    *o = v;
+                }
+            }
+            for (o, &v) in out.bwd.data_mut().iter_mut().zip(m.bwd.data()) {
+                if v > *o {
+                    *o = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// FNV-1a digest of the mask *bits* (shape + thresholded 0/1 cells).
+    /// Both ends of the `dist` gradient wire format derive the payload
+    /// layout from the schedule, so messages carry this fingerprint to
+    /// detect a sender/receiver schedule mismatch.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for t in [&self.fwd, &self.bwd] {
+            for &d in t.shape() {
+                mix(d as u64 ^ 0xD1);
+            }
+            for &v in t.data() {
+                mix(if v >= 0.5 { 0x9F } else { 0x9E });
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -284,6 +328,33 @@ mod tests {
                 assert_eq!(task.op, t.get(k, i));
             }
         }
+    }
+
+    #[test]
+    fn mask_union_and_fingerprint() {
+        let part = crate::partition::Partition::per_head(&cfg());
+        let mut t = ScheduleTable::all(part.n_subnets(), 2, Op::Shortcut);
+        t.set(0, 0, Op::Full); // (block 0, head 0) full on micro 0 only
+        t.set(3, 1, Op::ForwardOnly); // (block 1, head 1) fwd-only on micro 1
+        let masks = t.all_masks(&part);
+        let u = MaskPair::union(&masks);
+        assert_eq!(u.fwd.at(&[0, 0]), 1.0);
+        assert_eq!(u.bwd.at(&[0, 0]), 1.0);
+        assert_eq!(u.fwd.at(&[1, 1]), 1.0, "p_o participates forward");
+        assert_eq!(u.bwd.at(&[1, 1]), 0.0, "p_o never unfreezes");
+        assert_eq!(u.fwd.at(&[0, 1]), 0.0, "never-scheduled head stays off");
+        // Union of one mask is that mask.
+        let one = MaskPair::union(&masks[..1]);
+        assert_eq!(one.fwd, masks[0].fwd);
+        assert_eq!(one.bwd, masks[0].bwd);
+        // Fingerprints: stable for equal masks, different for different.
+        assert_eq!(masks[0].fingerprint(), masks[0].clone().fingerprint());
+        assert_ne!(masks[0].fingerprint(), masks[1].fingerprint());
+        assert_ne!(
+            MaskPair::ones(2, 2).fingerprint(),
+            MaskPair::ones(4, 1).fingerprint(),
+            "shape feeds the digest"
+        );
     }
 
     #[test]

@@ -6,8 +6,25 @@
 //! `[mb, T, D]` activations to `[mb*T, D]` matrices and loops per-sample
 //! only where attention genuinely needs the `[T, T]` structure. All
 //! accumulation is sequential f32, so results are bit-deterministic.
+//!
+//! The three matmul variants are **blocked/tiled**: `matmul` and
+//! `matmul_tn` tile the `k`/`n` loops so a `KC x JC` panel of the
+//! right-hand operand stays cache-resident while every output row
+//! consumes it, and `matmul_nt` computes four output columns per pass so
+//! the dot-product reductions (which the compiler cannot vectorize
+//! without reassociating floats) overlap in independent accumulators.
+//! Tiling never reorders the per-element accumulation: each output
+//! element still sums its `k` terms in ascending order, so every kernel
+//! is **bitwise identical** to the order-defining naive loops kept in
+//! [`reference`] — the property `reference::*` unit tests pin and the
+//! serial ≡ distributed determinism contract builds on.
 
 use super::Tensor;
+
+/// k-dimension tile: a `KC x JC` f32 panel is 32 KiB — L1-resident.
+const KC: usize = 64;
+/// n-dimension (output column) tile.
+const JC: usize = 128;
 
 fn dims2(t: &Tensor) -> (usize, usize) {
     assert_eq!(t.shape().len(), 2, "expected a 2-D tensor, got {:?}", t.shape());
@@ -16,6 +33,8 @@ fn dims2(t: &Tensor) -> (usize, usize) {
 
 impl Tensor {
     /// Matrix product `self [m,k] x other [k,n] -> [m,n]`.
+    ///
+    /// Blocked over `(k, n)`; bitwise identical to [`reference::matmul`].
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         let (m, k) = dims2(self);
         let (k2, n) = dims2(other);
@@ -23,13 +42,24 @@ impl Tensor {
         let a = self.data();
         let b = other.data();
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
+        // j-tiles outermost: each output element receives all of its k
+        // terms within one (j0, i) visit, in ascending-k order (k0 then
+        // kk both ascend) — the same per-element order as the naive
+        // i,k,j loops, so tiling cannot change a single bit.
+        for j0 in (0..n).step_by(JC) {
+            let j1 = (j0 + JC).min(n);
+            for k0 in (0..k).step_by(KC) {
+                let k1 = (k0 + KC).min(k);
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
                 }
             }
         }
@@ -38,6 +68,9 @@ impl Tensor {
 
     /// Transposed-A product `self^T [k,m]^T x other [k,n] -> [m,n]`
     /// (the `dW = X^T dY` shape every weight gradient uses).
+    ///
+    /// Blocked over `(k, n)`; bitwise identical to
+    /// [`reference::matmul_tn`].
     pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
         let (k, m) = dims2(self);
         let (k2, n) = dims2(other);
@@ -45,13 +78,21 @@ impl Tensor {
         let a = self.data();
         let b = other.data();
         let mut out = vec![0.0f32; m * n];
-        for kk in 0..k {
-            let arow = &a[kk * m..(kk + 1) * m];
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (i, &av) in arow.iter().enumerate() {
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
+        // Per element (i, j): k0 tiles ascend, kk ascends within each —
+        // identical accumulation order to the naive k-outer loops.
+        for j0 in (0..n).step_by(JC) {
+            let j1 = (j0 + JC).min(n);
+            for k0 in (0..k).step_by(KC) {
+                let k1 = (k0 + KC).min(k);
+                for kk in k0..k1 {
+                    let arow = &a[kk * m..(kk + 1) * m];
+                    let brow = &b[kk * n + j0..kk * n + j1];
+                    for (i, &av) in arow.iter().enumerate() {
+                        let orow = &mut out[i * n + j0..i * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
                 }
             }
         }
@@ -60,6 +101,12 @@ impl Tensor {
 
     /// Transposed-B product `self [m,k] x other^T [n,k]^T -> [m,n]`
     /// (the `dX = dY W^T` shape every input gradient uses).
+    ///
+    /// Four output columns per pass: each dot product keeps its own
+    /// accumulator in ascending-k order (bitwise identical to
+    /// [`reference::matmul_nt`]), but the four reductions overlap —
+    /// the ILP the naive one-dot-at-a-time loop cannot expose, since
+    /// float reductions are not compiler-vectorizable.
     pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
         let (m, k) = dims2(self);
         let (n, k2) = dims2(other);
@@ -67,15 +114,39 @@ impl Tensor {
         let a = self.data();
         let b = other.data();
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &b[j * k..(j + 1) * k];
+        let mut j = 0;
+        // Column-quad outer loop: the four B rows (4k floats) stay hot
+        // across every output row.
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for (kk, &av) in arow.iter().enumerate() {
+                    s0 += av * b0[kk];
+                    s1 += av * b1[kk];
+                    s2 += av * b2[kk];
+                    s3 += av * b3[kk];
+                }
+                out[i * n + j] = s0;
+                out[i * n + j + 1] = s1;
+                out[i * n + j + 2] = s2;
+                out[i * n + j + 3] = s3;
+            }
+            j += 4;
+        }
+        for jj in j..n {
+            let brow = &b[jj * k..(jj + 1) * k];
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
                 let mut acc = 0.0f32;
                 for (&av, &bv) in arow.iter().zip(brow) {
                     acc += av * bv;
                 }
-                out[i * n + j] = acc;
+                out[i * n + jj] = acc;
             }
         }
         Tensor::from_vec(&[m, n], out)
@@ -146,6 +217,87 @@ impl Tensor {
             Tensor::from_vec(&[m], means),
             Tensor::from_vec(&[m], rstds),
         )
+    }
+}
+
+/// Order-defining naive matmul kernels.
+///
+/// These are the seed's original triple loops, kept as the bitwise
+/// reference the tiled hot-path kernels are pinned against: unit tests
+/// assert `Tensor::matmul* == reference::matmul*` to the last bit on
+/// shapes that exercise every tile-remainder path, and
+/// `benches/native_step.rs` asserts the tiled kernels are measurably
+/// faster. Not for production use.
+pub mod reference {
+    use crate::tensor::Tensor;
+
+    fn dims2(t: &Tensor) -> (usize, usize) {
+        assert_eq!(t.shape().len(), 2, "expected a 2-D tensor, got {:?}", t.shape());
+        (t.shape()[0], t.shape()[1])
+    }
+
+    /// Naive `a [m,k] x b [k,n] -> [m,n]` (i, k, j loops).
+    pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = dims2(a);
+        let (k2, n) = dims2(b);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let ad = a.data();
+        let bd = b.data();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Naive `a^T [k,m]^T x b [k,n] -> [m,n]` (k outer).
+    pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+        let (k, m) = dims2(a);
+        let (k2, n) = dims2(b);
+        assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
+        let ad = a.data();
+        let bd = b.data();
+        let mut out = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &ad[kk * m..(kk + 1) * m];
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Naive `a [m,k] x b^T [n,k]^T -> [m,n]` (one dot per element).
+    pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = dims2(a);
+        let (n, k2) = dims2(b);
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let ad = a.data();
+        let bd = b.data();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &bd[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
     }
 }
 
@@ -276,6 +428,36 @@ mod tests {
         let c = rand_t(&[5, 3], 3);
         assert!(a.matmul_tn(&b).max_abs_diff(&a.transpose2().matmul(&b)) < 1e-6);
         assert!(b.matmul_nt(&c).max_abs_diff(&b.matmul(&c.transpose2())) < 1e-6);
+    }
+
+    #[test]
+    fn tiled_kernels_match_reference_bitwise() {
+        // Shapes straddling the KC=64 / JC=128 tile edges plus the
+        // matmul_nt 4-column remainder, so every tail path runs.
+        for (m, k, n, seed) in [
+            (3, 5, 7, 20),
+            (4, 64, 128, 21),
+            (5, 65, 129, 22),
+            (70, 130, 258, 23),
+            (2, 200, 3, 24),
+            (1, 1, 1, 25),
+        ] {
+            let a = rand_t(&[m, k], seed);
+            let b = rand_t(&[k, n], seed + 100);
+            let at = rand_t(&[k, m], seed + 200);
+            let bt = rand_t(&[n, k], seed + 300);
+            assert_eq!(a.matmul(&b), reference::matmul(&a, &b), "matmul {m}x{k}x{n}");
+            assert_eq!(
+                at.matmul_tn(&b),
+                reference::matmul_tn(&at, &b),
+                "matmul_tn {m}x{k}x{n}"
+            );
+            assert_eq!(
+                a.matmul_nt(&bt),
+                reference::matmul_nt(&a, &bt),
+                "matmul_nt {m}x{k}x{n}"
+            );
+        }
     }
 
     #[test]

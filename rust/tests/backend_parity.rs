@@ -1,15 +1,17 @@
-//! Feature-gated parity smoke test: the native and XLA backends must
-//! report identical *scheduler-level* numbers (compute/comm fraction,
-//! workload balance) for the same budget, because those are properties
-//! of the scheduling layer, not of the numerics. Requires the `xla`
+//! Feature-gated parity tests: the native and XLA backends must report
+//! identical *scheduler-level* numbers (compute/comm fraction, workload
+//! balance) for the same budget — and, started from a shared init blob
+//! through `ParamStore`, must produce *comparable loss trajectories*
+//! (same optimization, different FP association). Requires the `xla`
 //! feature; skips cleanly when artifacts are absent.
 #![cfg(all(feature = "xla", feature = "native"))]
 
-use d2ft::backend::native::NativeProvider;
+use d2ft::backend::native::{NativeBackend, NativeProvider, NativeSpec};
 use d2ft::backend::xla::XlaProvider;
 use d2ft::backend::BackendProvider;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig};
 use d2ft::data::SyntheticKind;
+use d2ft::runtime::ParamStore;
 use d2ft::schedule::Budget;
 
 fn short_cfg() -> TrainerConfig {
@@ -66,5 +68,67 @@ fn scheduler_level_metrics_agree_across_backends() {
     println!(
         "parity OK: compute {:.3} / comm {:.3} on both backends",
         rn.compute_fraction, rn.comm_fraction
+    );
+}
+
+/// Numeric parity harness: import the XLA artifact set's init blob into
+/// a native backend of the *same* model configuration, fine-tune both
+/// from that shared initialization, and compare the loss trajectories —
+/// not just scheduler metrics. The backends differ only in FP
+/// association (fusion order), so the first loss must agree tightly and
+/// the curves must track each other.
+#[test]
+fn loss_trajectories_track_from_shared_init() {
+    let Ok(xla) = XlaProvider::open_default() else {
+        eprintln!("skipping shared-init parity test (run `make artifacts`)");
+        return;
+    };
+    let manifest = &xla.registry().full_manifest;
+    let store = ParamStore::load(manifest, xla.registry().dir()).unwrap();
+
+    // A native spec over the artifact set's exact model configuration;
+    // parameter names/shapes mirror the manifest convention, so the
+    // blob imports directly.
+    let spec = NativeSpec {
+        config: manifest.config.clone(),
+        micro_batch: manifest.micro_batch,
+        mb_variants: manifest.mb_variants.clone(),
+        lora_ranks: vec![],
+        lora_standard_rank: 0,
+        init_seed: 0,
+    };
+    let mut native_be = NativeBackend::new(&spec, 0, manifest.micro_batch, 17);
+    native_be
+        .import_params(&store)
+        .expect("native layout must accept the artifact init blob");
+
+    let cfg = short_cfg();
+    let mut tn = Trainer::with_backend(Box::new(native_be), cfg.clone()).unwrap();
+    let rn = tn.run().unwrap();
+    let mut tx = Trainer::new(&xla, cfg).unwrap();
+    let rx = tx.run().unwrap();
+
+    assert_eq!(rn.loss_curve.len(), rx.loss_curve.len());
+    // Same parameters, same first micro-batch: only FP association
+    // differs between the two compute paths.
+    let (a0, b0) = (rn.loss_curve[0] as f64, rx.loss_curve[0] as f64);
+    assert!(
+        (a0 - b0).abs() / b0.abs().max(1e-6) < 0.02,
+        "first losses should nearly coincide from shared init: {a0} vs {b0}"
+    );
+    // Trajectories track: mean relative gap stays small over the run.
+    let mean_gap: f64 = rn
+        .loss_curve
+        .iter()
+        .zip(&rx.loss_curve)
+        .map(|(&a, &b)| ((a - b) as f64).abs() / (b as f64).abs().max(1e-6))
+        .sum::<f64>()
+        / rn.loss_curve.len() as f64;
+    assert!(
+        mean_gap < 0.35,
+        "trajectories diverged from shared init: mean relative gap {mean_gap:.3}"
+    );
+    println!(
+        "shared-init parity OK: first {a0:.4} vs {b0:.4}, mean relative gap {mean_gap:.3}"
     );
 }

@@ -1,0 +1,217 @@
+//! The `dist` runtime's two contracts, end to end:
+//!
+//! 1. **Determinism** — `DistTrainer` with K ∈ {1, 2, 4} live worker
+//!    replicas produces *bitwise* the same loss trajectory, eval
+//!    accuracy, and final parameters as the serial
+//!    `coordinator::Trainer` under `UpdateMode::BatchAccum`, in both
+//!    exchange topologies. Real threads, real gradient bytes, zero
+//!    numeric divergence.
+//! 2. **Masked wire format** — encode/decode round-trips the dense
+//!    gradient bit-for-bit under random schedules (the freeze contract
+//!    makes dropping masked slices lossless), and byte counts shrink
+//!    monotonically as heads leave the backward mask.
+//!
+//! Hermetic: native backend only, no artifacts.
+#![cfg(feature = "native")]
+
+use d2ft::backend::native::{NativeBackend, NativeProvider, NativeSpec};
+use d2ft::backend::Backend;
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
+use d2ft::data::{DatasetSpec, SyntheticKind};
+use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode, GradCodec};
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::{Budget, MaskPair};
+use d2ft::util::proptest::check;
+
+fn small_spec() -> NativeSpec {
+    NativeSpec {
+        config: ModelConfig {
+            img_size: 8,
+            patch: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            lora_rank: 0,
+            head_dim: 8,
+            tokens: 5,
+        },
+        micro_batch: 2,
+        mb_variants: vec![],
+        lora_ranks: vec![2],
+        lora_standard_rank: 2,
+        init_seed: 0xD157,
+    }
+}
+
+fn cfg(scheduler: SchedulerKind) -> TrainerConfig {
+    TrainerConfig {
+        train_size: 120,
+        test_size: 24,
+        batches: 3,
+        pretrain_batches: 1,
+        update: UpdateMode::BatchAccum,
+        ..TrainerConfig::quick(SyntheticKind::Cifar10Like, scheduler, Budget::uniform(5, 3, 1))
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn dist_trainer_matches_serial_trainer_bitwise() {
+    let provider = NativeProvider::new(small_spec());
+    let mut serial = Trainer::new(&provider, cfg(SchedulerKind::D2ft)).unwrap();
+    let rs = serial.run().unwrap();
+    assert_eq!(rs.loss_curve.len(), 15, "3 batches x 5 micros");
+    let serial_w = serial.backend().param("b00_wqkv").unwrap();
+    let serial_head = serial.backend().param("z_head_w").unwrap();
+
+    for k in [1usize, 2, 4] {
+        let mut dt =
+            DistTrainer::new(&provider, DistConfig::new(cfg(SchedulerKind::D2ft), k)).unwrap();
+        let rd = dt.run().unwrap();
+        assert_eq!(
+            bits(&rs.loss_curve),
+            bits(&rd.train.loss_curve),
+            "K={k}: loss trajectory must be bitwise serial"
+        );
+        assert_eq!(
+            rs.test_top1.to_bits(),
+            rd.train.test_top1.to_bits(),
+            "K={k}: eval accuracy"
+        );
+        assert_eq!(
+            rs.test_loss.to_bits(),
+            rd.train.test_loss.to_bits(),
+            "K={k}: eval loss"
+        );
+        assert_eq!(serial_w, dt.backend().param("b00_wqkv").unwrap(), "K={k}: body weights");
+        assert_eq!(serial_head, dt.backend().param("z_head_w").unwrap(), "K={k}: classifier");
+        // The exchange is real: bytes moved, and the mask saved some.
+        assert!(rd.wire.up_bytes > 0);
+        assert!(
+            rd.wire.up_bytes < rd.wire.dense_up_bytes,
+            "K={k}: masked uplink must be below dense"
+        );
+        // Scheduler-level accounting matches the serial run exactly.
+        assert_eq!(rd.train.compute_fraction.to_bits(), rs.compute_fraction.to_bits());
+        assert_eq!(rd.train.workload_variance, 0.0, "D2FT balances exactly");
+    }
+}
+
+#[test]
+fn param_server_matches_allreduce_bitwise() {
+    let provider = NativeProvider::new(small_spec());
+    let run = |exchange| {
+        let dcfg = DistConfig { train: cfg(SchedulerKind::D2ft), workers: 2, exchange };
+        let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
+        let r = dt.run().unwrap();
+        (r, dt.backend().param("b01_wo").unwrap())
+    };
+    let (ra, wa) = run(ExchangeMode::MaskedAllReduce);
+    let (rp, wp) = run(ExchangeMode::ParamServer);
+    assert_eq!(
+        bits(&ra.train.loss_curve),
+        bits(&rp.train.loss_curve),
+        "exchange topology must not change the numerics"
+    );
+    assert_eq!(wa, wp, "final params agree across topologies");
+    // PS ships dense deltas downlink; masked allreduce ships the union
+    // mask, which can never be larger.
+    assert!(ra.wire.down_bytes <= rp.wire.down_bytes);
+}
+
+#[test]
+fn dist_works_with_lora_and_random_scheduler() {
+    // LoRA: only adapters + classifier travel; Random scheduler: no
+    // score probes, imbalanced schedules — both must stay serial-exact.
+    let provider = NativeProvider::new(small_spec());
+    let mut lcfg = cfg(SchedulerKind::Random);
+    lcfg.lora_rank = 2;
+    let mut serial = Trainer::new(&provider, lcfg.clone()).unwrap();
+    let rs = serial.run().unwrap();
+    let mut dt = DistTrainer::new(&provider, DistConfig::new(lcfg, 3)).unwrap();
+    let rd = dt.run().unwrap();
+    assert_eq!(bits(&rs.loss_curve), bits(&rd.train.loss_curve));
+    // Frozen base weights never move and never ship.
+    assert_eq!(
+        serial.backend().param("b00_wqkv").unwrap(),
+        dt.backend().param("b00_wqkv").unwrap()
+    );
+}
+
+#[test]
+fn wire_format_round_trip_and_byte_count_property() {
+    let spec = small_spec();
+    let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 4, 77).generate("train");
+    check("masked-grad-wire", 12, |g| {
+        let rank = *g.pick(&[0usize, 2]);
+        let be = NativeBackend::new(&spec, rank, 2, g.usize_in(0, 1000) as u64);
+        let codec = GradCodec::new(&be);
+        // Random per-head op assignment: p_f / p_o / p_s.
+        let mut masks = MaskPair::ones(2, 2);
+        let mut n_pf = 0;
+        for l in 0..2 {
+            for h in 0..2 {
+                match g.usize_in(0, 2) {
+                    0 => n_pf += 1, // p_f: fwd 1, bwd 1
+                    1 => masks.bwd.set(&[l, h], 0.0), // p_o
+                    _ => {
+                        masks.fwd.set(&[l, h], 0.0); // p_s
+                        masks.bwd.set(&[l, h], 0.0);
+                    }
+                }
+            }
+        }
+        let (x, y) = data.gather(&[0, 1]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).map_err(|e| e.to_string())?;
+        let msg = codec.encode(1, &masks, &grads);
+        if msg.len() != codec.encoded_len(&masks) {
+            return Err("encoded length disagrees with the layout".into());
+        }
+        // Lossless: decode into zeros reconstructs the dense gradient.
+        let mut acc = be.zeros_like_params();
+        let micro = codec.decode_add(&msg, &masks, &mut acc).map_err(|e| e.to_string())?;
+        if micro != 1 {
+            return Err("micro index corrupted".into());
+        }
+        for (a, grad) in acc.iter().zip(&grads) {
+            let (ad, gd) = (a.data(), grad.data());
+            if ad.len() != gd.len() {
+                return Err("shape mismatch after decode".into());
+            }
+            for (va, vg) in ad.iter().zip(gd) {
+                if va.to_bits() != vg.to_bits() {
+                    return Err("decoded gradient is not bitwise equal".into());
+                }
+            }
+        }
+        // Byte-count properties: masked <= dense, equality iff all p_f;
+        // masking one more head strictly shrinks the message.
+        if codec.encoded_len(&masks) > codec.dense_len() {
+            return Err("masked message larger than dense".into());
+        }
+        if n_pf == 4 && codec.encoded_len(&masks) != codec.dense_len() {
+            return Err("all-p_f message must be dense".into());
+        }
+        if n_pf > 0 && rank == 0 {
+            // Find an active head and freeze it: bytes must drop.
+            let before = codec.encoded_len(&masks);
+            'outer: for l in 0..2 {
+                for h in 0..2 {
+                    if masks.bwd.at(&[l, h]) >= 0.5 {
+                        masks.bwd.set(&[l, h], 0.0);
+                        break 'outer;
+                    }
+                }
+            }
+            if codec.encoded_len(&masks) >= before {
+                return Err("freezing a head must shrink the wire".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -347,3 +347,85 @@ fn score_probe_is_pure_and_grad_consistent() {
     assert!(probe.at(&[0, 0, 0]) as f64 >= fisher_wqkv * 0.999);
     assert!(probe.at(&[0, 0, 0]) > 0.0);
 }
+
+// ---------------------------------------------------------------------------
+// ParamStore interchange (numeric parity harness)
+// ---------------------------------------------------------------------------
+
+/// Export -> import round-trips the parameters bitwise, and a backend
+/// seeded differently converges to the exporter's exact state after an
+/// import — the mechanism that lets both compute backends start from an
+/// identical initialization blob.
+#[test]
+fn param_store_export_import_round_trip() {
+    let s = spec();
+    let a = NativeBackend::new(&s, 0, 2, 7);
+    let mut b = NativeBackend::new(&s, 0, 2, 999);
+    assert_ne!(
+        a.param("b00_wqkv").unwrap(),
+        b.param("b00_wqkv").unwrap(),
+        "different seeds must differ before the import"
+    );
+    let store = a.export_params();
+    assert_eq!(store.n_tensors(), a.param_names().len());
+    b.import_params(&store).unwrap();
+    for name in a.param_names() {
+        assert_eq!(a.param(&name).unwrap(), b.param(&name).unwrap(), "param {name}");
+    }
+    // Identical parameters -> bitwise identical step outcomes.
+    let (x, y) = sample(s.config.img_size, 2, 31);
+    let masks = MaskPair::ones(2, 2);
+    let mut a = a;
+    let ra = a.step(&x, &y, &masks, 0.05).unwrap();
+    let rb = b.step(&x, &y, &masks, 0.05).unwrap();
+    assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+
+    // Blob file round trip (the params_init.bin interchange format).
+    let dir = std::env::temp_dir().join("d2ft_native_export_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("params_init.bin");
+    store.write_blob(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(bytes.len(), store.total_elems() * 4);
+}
+
+/// Importing a store with a missing or wrongly-shaped tensor fails
+/// loudly instead of silently training from garbage.
+#[test]
+fn param_store_import_rejects_mismatched_layout() {
+    let s = spec();
+    let lora = NativeBackend::new(&s, 2, 2, 7);
+    let mut full = NativeBackend::new(&s, 0, 2, 7);
+    // The rank-0 model has no adapters, but the LoRA export is a
+    // superset, so importing it into the full model succeeds...
+    full.import_params(&lora.export_params()).unwrap();
+    // ...while the reverse is missing the adapter tensors.
+    let mut lora = lora;
+    assert!(lora.import_params(&full.export_params()).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Model presets
+// ---------------------------------------------------------------------------
+
+/// The `--model small` preset matches the paper's subnet accounting:
+/// 12 blocks x 6 heads = 72 body subnets, 74 devices in total.
+#[test]
+fn small_preset_matches_paper_subnet_count() {
+    let small = NativeSpec::preset("small").unwrap();
+    assert_eq!(small.config.depth, 12);
+    assert_eq!(small.config.heads, 6);
+    assert_eq!(small.config.body_subnets(), 72);
+    assert_eq!(small.config.dim, small.config.heads * small.config.head_dim);
+    let part = d2ft::partition::Partition::per_head(&small.config);
+    assert_eq!(part.n_devices_total(), 74, "the paper's 74-device setting");
+    // Parse aliases + rejection.
+    assert_eq!(NativeSpec::preset("mini").unwrap().config.depth, 3);
+    assert_eq!(NativeSpec::preset("MINI").unwrap().config.depth, 3);
+    assert!(NativeSpec::preset("huge").is_err());
+    // The preset actually opens (full init) with the advertised shapes.
+    let p = NativeProvider::new(small);
+    let be = p.open(&BackendSel::full(3)).unwrap();
+    assert_eq!(be.config().body_subnets(), 72);
+    assert_eq!(be.param("b11_wqkv").unwrap().shape(), &[96, 288]);
+}
