@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh BENCH_dist_step.json against the
+committed baseline and fail on a >tolerance regression.
+
+Absolute milliseconds are meaningless across heterogeneous CI hosts, so the
+gate compares host-normalized and scale-free metrics:
+
+* ``overlap.pipelined_step_per_task`` — the pipelined K=4 batch makespan in
+  units of one measured task's compute (the primary "makespan" metric;
+  dividing by the same run's calibrated task time cancels host speed);
+* ``overlap.speedup`` — serialized / pipelined makespan ratio;
+* ``grad_bytes_saved_vs_full`` — measured wire savings (deterministic given
+  the seeds, so compared with a tiny absolute slack);
+* ``calibration.makespan_drift`` — modeled-vs-measured drift after one
+  calibration epoch (absolute slack; the bench itself hard-asserts <= 0.20).
+
+A baseline carrying ``"provisional": true`` (committed before any trusted CI
+run existed) reports violations as warnings and exits 0; replace it with a
+real CI artifact to arm the gate. Usage:
+
+    python3 ci/bench_regression.py FRESH BASELINE [--tolerance 0.15]
+"""
+
+import argparse
+import json
+import sys
+
+# (dotted JSON path, better-direction, comparison kind)
+# kind "relative" uses --tolerance; "absolute:X" uses slack X.
+CHECKS = [
+    ("overlap.pipelined_step_per_task", "lower", "relative"),
+    ("overlap.speedup", "higher", "relative"),
+    ("grad_bytes_saved_vs_full", "higher", "absolute:0.01"),
+    ("calibration.makespan_drift", "lower", "absolute:0.05"),
+]
+
+
+def lookup(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="freshly generated BENCH_dist_step.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative regression tolerance (default 0.15)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    provisional = bool(base.get("provisional", False))
+    tol = args.tolerance
+    failures = []
+
+    for path, direction, kind in CHECKS:
+        fv = lookup(fresh, path)
+        bv = lookup(base, path)
+        if fv is None or bv is None:
+            print(f"SKIP       {path}: missing "
+                  f"({'fresh' if fv is None else 'baseline'})")
+            continue
+        if kind == "relative":
+            slack = abs(bv) * tol
+        else:
+            slack = float(kind.split(":", 1)[1])
+        if direction == "lower":
+            ok = fv <= bv + slack
+            verdict = f"fresh {fv:.4f} <= baseline {bv:.4f} + {slack:.4f}"
+        else:
+            ok = fv >= bv - slack
+            verdict = f"fresh {fv:.4f} >= baseline {bv:.4f} - {slack:.4f}"
+        status = "OK" if ok else ("WARN" if provisional else "REGRESSION")
+        print(f"{status:10} {path}: {verdict}")
+        if not ok and not provisional:
+            failures.append(path)
+
+    if provisional:
+        print("baseline is provisional: violations reported as warnings only; "
+              "commit a CI-produced BENCH_dist_step.json over the baseline to "
+              "arm the gate")
+        return 0
+    if failures:
+        print(f"bench regression in: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

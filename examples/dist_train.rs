@@ -6,7 +6,8 @@
 //!     cargo run --release --example dist_train
 //!     cargo run --release --example dist_train -- --workers 8 --exchange ps
 //!
-//! Flags: --workers K --exchange allreduce|ps --batches N --model mini|small
+//! Flags: --workers K --exchange allreduce|ps --batches N
+//!        --model mini|small --threads T --no-overlap
 
 #[cfg(not(feature = "native"))]
 fn main() {
@@ -29,8 +30,12 @@ fn main() -> anyhow::Result<()> {
         .flag("exchange", "allreduce", "allreduce | ps")
         .flag("batches", "6", "fine-tuning batches")
         .flag("model", "mini", "native model preset: mini | small")
+        .flag("threads", "1", "matmul kernel threads (0 = auto)")
+        .switch("no-overlap", "serialize encode+upload after compute (default pipelines)")
         .parse()?;
-    let provider = NativeProvider::new(NativeSpec::preset(args.get("model"))?);
+    let mut spec = NativeSpec::preset(args.get("model"))?;
+    spec.threads = args.get_usize("threads")?;
+    let provider = NativeProvider::new(spec);
     let workers = args.get_usize("workers")?.max(1);
     let cfg = TrainerConfig {
         train_size: 240,
@@ -50,11 +55,12 @@ fn main() -> anyhow::Result<()> {
     let mut serial = Trainer::new(&provider, cfg.clone())?;
     let rs = serial.run()?;
 
-    // Distributed run: K live replicas, masked-gradient exchange.
+    // Distributed run: K live replicas, masked-gradient exchange,
+    // pipelined encode+upload unless --no-overlap.
     let dcfg = DistConfig {
-        train: cfg,
-        workers,
         exchange: ExchangeMode::parse(args.get("exchange"))?,
+        overlap: !args.get_bool("no-overlap"),
+        ..DistConfig::new(cfg, workers)
     };
     let mut dist = DistTrainer::new(&provider, dcfg)?;
     let rd = dist.run()?;

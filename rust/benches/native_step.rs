@@ -143,6 +143,46 @@ fn main() {
         eprintln!("WARNING: tiled speedup {speedup:.2}x below the 1.1x expectation");
     }
 
+    // --- threaded vs single-thread matmul at the small-model shape ---
+    // The ViT-small FFN up-projection over a mb=8 token stream:
+    // [mb*T, D] x [D, 4D] = [136, 96] x [96, 384]. Writer-owned row
+    // blocks keep the threaded result bitwise identical (unit-tested);
+    // here we assert the parallelism is also a *measured* win.
+    use d2ft::tensor::pool;
+    let sm = NativeSpec::small().config;
+    let ta = rand_t(&[8 * sm.tokens, sm.dim], 61);
+    let tb = rand_t(&[sm.dim, sm.mlp_ratio * sm.dim], 62);
+    pool::configure(1);
+    let single_ms = time_ms(|| {
+        black_box(ta.matmul(&tb));
+    });
+    pool::configure(0); // auto: one thread per core, capped at 8
+    let kernel_threads = pool::threads();
+    let multi_ms = time_ms(|| {
+        black_box(ta.matmul(&tb));
+    });
+    pool::configure(1);
+    let thread_speedup = single_ms / multi_ms;
+    println!(
+        "bench matmul 136x96x384 (small-model FFN): 1 thread {single_ms:.3}ms vs \
+         {kernel_threads} threads {multi_ms:.3}ms (speedup {thread_speedup:.2}x)"
+    );
+    if kernel_threads >= 2 {
+        assert!(
+            thread_speedup > 1.05,
+            "threaded matmul must beat single-thread at the small-model shape, \
+             got {thread_speedup:.2}x on {kernel_threads} threads"
+        );
+        if std::env::var_os("D2FT_STRICT_BENCH").is_some() {
+            assert!(
+                thread_speedup > 1.3,
+                "threaded matmul should beat single-thread by >30%, got {thread_speedup:.2}x"
+            );
+        }
+    } else {
+        eprintln!("WARNING: single-core host; skipping the threaded-matmul assertion");
+    }
+
     let report = obj(vec![
         ("bench", s("native_step")),
         (
@@ -151,6 +191,15 @@ fn main() {
                 ("tiled_ms", num(tiled_ms)),
                 ("naive_ms", num(naive_ms)),
                 ("speedup", num(speedup)),
+            ]),
+        ),
+        (
+            "threaded_matmul_136x96x384",
+            obj(vec![
+                ("single_ms", num(single_ms)),
+                ("multi_ms", num(multi_ms)),
+                ("threads", num(kernel_threads as f64)),
+                ("speedup", num(thread_speedup)),
             ]),
         ),
         ("reps", num(REPS as f64)),

@@ -73,6 +73,13 @@ pub struct NativeSpec {
     pub lora_standard_rank: usize,
     /// Base seed mixed into parameter initialization.
     pub init_seed: u64,
+    /// Kernel threads for the matmul row-parallel path (0 = auto, one
+    /// per core capped at 8; 1 = serial). Applied to the process-global
+    /// [`crate::tensor::pool`] when a backend is opened — thread count
+    /// never changes numerics (writer-owned output tiles keep every
+    /// accumulation order serial-identical), so this is purely a
+    /// performance knob; `repro --threads N` sets it from the CLI.
+    pub threads: usize,
 }
 
 impl NativeSpec {
@@ -98,6 +105,7 @@ impl NativeSpec {
             lora_ranks: vec![1, 2, 4, 8],
             lora_standard_rank: 4,
             init_seed: 0xD2F7,
+            threads: 1,
         }
     }
 
@@ -125,6 +133,7 @@ impl NativeSpec {
             lora_ranks: vec![1, 2, 4, 8],
             lora_standard_rank: 4,
             init_seed: 0xD2F7,
+            threads: 1,
         }
     }
 
@@ -450,6 +459,10 @@ impl NativeBackend {
     /// `(spec.init_seed, seed)`, LoRA adapters at `lora_rank` (0 = full
     /// fine-tuning), zero momentum.
     pub fn new(spec: &NativeSpec, lora_rank: usize, micro_batch: usize, seed: u64) -> NativeBackend {
+        // The kernel pool is process-global (tensor ops carry no backend
+        // handle); the knob is numerics-neutral, so "last opened backend
+        // wins" is safe. See `tensor::pool`.
+        crate::tensor::pool::configure(spec.threads);
         let mut cfg = spec.config.clone();
         cfg.lora_rank = lora_rank;
         assert_eq!(cfg.dim, cfg.heads * cfg.head_dim, "dim must equal heads * head_dim");
@@ -1237,6 +1250,7 @@ mod tests {
             lora_ranks: vec![2, 4],
             lora_standard_rank: 2,
             init_seed: 0xBEEF,
+            threads: 1,
         }
     }
 

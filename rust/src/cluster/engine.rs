@@ -31,7 +31,7 @@
 
 use std::sync::mpsc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use super::cost::CostModel;
 use super::exec_time::ExecTimeModel;
@@ -41,6 +41,7 @@ use crate::schedule::bilevel::BiLevel;
 use crate::schedule::table::{Budget, Op, ScheduleTable, Task};
 use crate::schedule::Scheduler;
 use crate::scores::{Metric, ScoreBook, ScoreConfig};
+use crate::util::bench::spin_for_ms;
 use crate::util::rng::Rng;
 
 /// How the simulated cluster executes one scheduled batch.
@@ -461,18 +462,6 @@ fn task_payload(seed: u64, device: usize, micro: usize, op: Op) -> (f64, u64) {
     }
 }
 
-/// Busy-wait for `ms` milliseconds (simulated device compute).
-fn spin_for_ms(ms: f64) {
-    if ms <= 0.0 {
-        return;
-    }
-    let target = Duration::from_secs_f64(ms / 1e3);
-    let t0 = Instant::now();
-    while t0.elapsed() < target {
-        std::hint::spin_loop();
-    }
-}
-
 // ---------------------------------------------------------------------------
 // Synthetic workload: schedule + engine with no PJRT artifacts. Shared by
 // the determinism test and the `engine_parallel` bench.
@@ -755,10 +744,4 @@ mod tests {
         assert!(a.loss_curve.windows(2).all(|w| w[1] < w[0]), "loss must decrease");
     }
 
-    #[test]
-    fn spin_respects_lower_bound() {
-        let t0 = Instant::now();
-        spin_for_ms(2.0);
-        assert!(t0.elapsed() >= Duration::from_millis(2));
-    }
 }

@@ -34,6 +34,23 @@ impl ExecTimeModel {
         ExecTimeModel { full_ms, fwd_ms }
     }
 
+    /// Rescale both tables by a measured/modeled time ratio — the live
+    /// calibration feedback: `dist::DistTrainer` measures real per-task
+    /// times, derives `factor = measured / modeled` at each epoch
+    /// boundary, and feeds the scaled tables back through
+    /// [`ExecTimeModel::calibrated`] so the modeled makespan tracks
+    /// *this host's* hardware instead of the paper's V100.
+    pub fn scaled(&self, factor: f64) -> ExecTimeModel {
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "calibration factor must be positive and finite, got {factor}"
+        );
+        ExecTimeModel::calibrated(
+            self.full_ms.iter().map(|&t| t * factor).collect(),
+            self.fwd_ms.iter().map(|&t| t * factor).collect(),
+        )
+    }
+
     fn lookup(table: &[f64], n: usize) -> f64 {
         if n == 0 {
             return 0.0;
@@ -151,6 +168,30 @@ mod tests {
         }
         assert_eq!(m.marginal_ms(Op::Shortcut, 3), 0.0);
         assert_eq!(m.marginal_ms(Op::Full, 0), 0.0);
+    }
+
+    #[test]
+    fn scaled_tables_scale_every_lookup() {
+        let m = ExecTimeModel::paper();
+        let s = m.scaled(2.5);
+        for n in 0..=8 {
+            for op in [Op::Full, Op::ForwardOnly] {
+                assert!(
+                    (s.time_ms(op, n) - 2.5 * m.time_ms(op, n)).abs() < 1e-9,
+                    "op {op:?} n {n}"
+                );
+            }
+            assert_eq!(s.time_ms(Op::Shortcut, n), 0.0);
+        }
+        // Makespans scale with the tables.
+        let t = ScheduleTable::standard(3, 5);
+        assert!((s.makespan_ms(&t) - 2.5 * m.makespan_ms(&t)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "calibration factor")]
+    fn scaled_rejects_nonpositive_factor() {
+        ExecTimeModel::paper().scaled(0.0);
     }
 
     #[test]

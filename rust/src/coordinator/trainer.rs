@@ -228,6 +228,17 @@ pub struct TrainReport {
     pub wall_s: f64,
     /// Batches actually executed.
     pub batches: usize,
+    /// Cumulative factor the modeled exec-time tables were rescaled by
+    /// from measured times (`dist` calibration loop; 1.0 = the paper's
+    /// uncalibrated V100 table, which the serial trainer always uses).
+    pub calib_scale: f64,
+    /// Epoch-boundary calibrations performed (0 = never calibrated).
+    pub calib_epochs: usize,
+    /// Mean modeled-vs-measured makespan drift
+    /// (`|modeled - measured| / measured`, per-epoch means) over the
+    /// epochs *after* the first calibration; 0.0 when no calibrated
+    /// epoch completed. The dist bench asserts this stays <= 20%.
+    pub makespan_drift: f64,
 }
 
 pub(crate) fn build_scheduler(
@@ -614,6 +625,12 @@ impl<'a> Trainer<'a> {
             straggler_ms: workloads.straggler_ms() / b,
             wall_s,
             batches: batch_idx,
+            // The serial reference never recalibrates: it is the
+            // uncalibrated baseline the dist runtime's measured loop is
+            // compared against.
+            calib_scale: 1.0,
+            calib_epochs: 0,
+            makespan_drift: 0.0,
         })
     }
 }

@@ -103,6 +103,14 @@ impl OrderedReducer {
         }
         Ok(())
     }
+
+    /// Consume the reducer and hand back every deposited message buffer
+    /// (ascending micro order) so the aggregator can recycle them into
+    /// the encode-buffer pool ([`super::grads::BufPool`]) — the second
+    /// half of the zero-allocation steady state.
+    pub fn into_blobs(self) -> Vec<Vec<u8>> {
+        self.slots.into_iter().flatten().collect()
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +140,7 @@ mod tests {
             lora_ranks: vec![],
             lora_standard_rank: 0,
             init_seed: 0xACE,
+            threads: 1,
         };
         NativeBackend::new(&spec, 0, 2, 9)
     }
@@ -178,6 +187,85 @@ mod tests {
         for (s, r) in serial.iter().zip(&reduced) {
             assert_eq!(s.data(), r.data(), "ordered reduce must reproduce serial bits");
         }
+    }
+
+    #[test]
+    fn adversarial_arrival_orders_reduce_bitwise_serial() {
+        // K ∈ {2, 4} workers delivering 8 micro-batch messages in
+        // reverse and in K-way interleaved order (worker w owns micros
+        // w, w+K, w+2K, ... and its deliveries interleave round-robin
+        // backwards) — every order must reduce to the serial bits.
+        let be = backend();
+        let codec = GradCodec::new(&be);
+        let n = 8usize;
+        let data =
+            DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2 * n, 21).generate("train");
+        let masks: Vec<MaskPair> = (0..n).map(|_| MaskPair::ones(2, 2)).collect();
+        let per_micro: Vec<Vec<crate::tensor::Tensor>> = (0..n)
+            .map(|i| {
+                let (x, y) = data.gather(&[2 * i, 2 * i + 1]);
+                be.grad_step(&x, &y, &masks[i]).unwrap().1
+            })
+            .collect();
+        // Serial reference: dense sum in ascending micro order, mean.
+        let mut serial = be.zeros_like_params();
+        for grads in &per_micro {
+            for (a, g) in serial.iter_mut().zip(grads) {
+                a.add_assign(g);
+            }
+        }
+        let scale = 1.0 / n as f32;
+        for a in &mut serial {
+            a.scale(scale);
+        }
+        let mut orders: Vec<(String, Vec<usize>)> =
+            vec![("reverse".into(), (0..n).rev().collect())];
+        for k in [2usize, 4] {
+            // Worker w's stream is its micros in reverse; streams drain
+            // round-robin: the worst-case interleaving a real cluster
+            // of K stragglers could produce.
+            // (`pop` drains each Vec from the back, so collecting
+            // ascending yields descending delivery per worker.)
+            let mut streams: Vec<Vec<usize>> =
+                (0..k).map(|w| (0..n).filter(|i| i % k == w).collect()).collect();
+            let mut order = Vec::with_capacity(n);
+            while order.len() < n {
+                for s in streams.iter_mut() {
+                    if let Some(i) = s.pop() {
+                        order.push(i);
+                    }
+                }
+            }
+            // Rotate so the first delivery is from the *last* worker.
+            order.rotate_right(1);
+            orders.push((format!("interleaved-K{k}"), order));
+        }
+        for (name, order) in orders {
+            let mut reducer = OrderedReducer::new(n);
+            for &i in &order {
+                reducer.push(i, codec.encode(i, &masks[i], &per_micro[i])).unwrap();
+            }
+            assert!(reducer.is_complete(), "{name}");
+            let mut reduced = be.zeros_like_params();
+            reducer.reduce(&codec, &masks, &mut reduced).unwrap();
+            for (s, r) in serial.iter().zip(&reduced) {
+                assert_eq!(
+                    s.data(),
+                    r.data(),
+                    "{name}: arrival order must not change a single bit"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_blobs_returns_every_message_in_micro_order() {
+        let mut r = OrderedReducer::new(3);
+        r.push(2, vec![2, 2]).unwrap();
+        r.push(0, vec![0]).unwrap();
+        r.push(1, vec![1; 3]).unwrap();
+        let blobs = r.into_blobs();
+        assert_eq!(blobs, vec![vec![0], vec![1; 3], vec![2, 2]]);
     }
 
     #[test]

@@ -6,11 +6,14 @@
 //! D2FT's schedule is computed centrally and known to every node before
 //! the batch runs, so sender and receiver can both derive the payload
 //! layout from `(model structure, MaskPair)`. A message is therefore a
-//! 24-byte header plus raw little-endian f32s in canonical order — the
-//! densest encoding the mask admits, which makes the byte accounting an
-//! honest measurement of the paper's communication claim rather than a
-//! property of a clever container format. A mask fingerprint in the
-//! header catches sender/receiver schedule divergence.
+//! 28-byte header (magic, precision flags, micro, mask fingerprint,
+//! element count) plus raw little-endian payload elements in canonical
+//! order — f32 by default, IEEE binary16 under [`WirePrecision::F16`]
+//! — the densest encoding the mask admits, which makes the byte
+//! accounting an honest measurement of the paper's communication claim
+//! rather than a property of a clever container format. The mask
+//! fingerprint catches sender/receiver schedule divergence; the flags
+//! catch a precision mismatch.
 //!
 //! ## What ships
 //!
@@ -26,6 +29,9 @@
 //!   [`GradCodec::decode_add`] of an encoded message reconstructs the
 //!   dense gradient bit-for-bit (`tests/dist.rs` pins this property).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 use anyhow::Result;
 
 use crate::backend::native::NativeBackend;
@@ -37,8 +43,168 @@ use crate::tensor::Tensor;
 const MAGIC_GRAD: u32 = 0x4432_4647;
 /// Message magic: "D2FD" (dense delta payload, parameter-server mode).
 const MAGIC_DELTA: u32 = 0x4432_4644;
-/// Header: magic u32, micro u32, mask fingerprint u64, payload elems u64.
-const HEADER_BYTES: usize = 24;
+/// Header: magic u32, flags u32 (wire precision), micro u32, mask
+/// fingerprint u64, payload elems u64.
+const HEADER_BYTES: usize = 28;
+/// Header flags bit 0: payload elements are IEEE binary16 (2 bytes)
+/// instead of the default f32.
+const FLAG_F16: u32 = 1;
+
+/// Element precision of gradient payloads on the wire.
+///
+/// `F32` (the default) is lossless by the freeze contract — the bitwise
+/// serial ≡ distributed guarantee holds. `F16` halves every payload
+/// byte ([`WireStats`] measures it on the actual messages) at binary16
+/// precision (~3 decimal digits); the aggregator then applies the
+/// *requantized* reduced gradient so every replica — aggregator
+/// included — still sees identical bits, but the trajectory is no
+/// longer bit-equal to the serial trainer's.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WirePrecision {
+    /// 4-byte little-endian f32 payload elements (lossless; default).
+    #[default]
+    F32,
+    /// 2-byte IEEE binary16 payload elements (half the bytes, lossy).
+    F16,
+}
+
+impl WirePrecision {
+    /// Parse a CLI label (`f32` | `f16`).
+    pub fn parse(s: &str) -> Result<WirePrecision> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => WirePrecision::F32,
+            "f16" | "fp16" | "half" => WirePrecision::F16,
+            _ => anyhow::bail!("unknown wire precision {s:?} (f32|f16)"),
+        })
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WirePrecision::F32 => "f32",
+            WirePrecision::F16 => "f16",
+        }
+    }
+
+    /// Bytes per payload element.
+    fn elem_bytes(self) -> usize {
+        match self {
+            WirePrecision::F32 => 4,
+            WirePrecision::F16 => 2,
+        }
+    }
+
+    /// Header flag bits for this precision.
+    fn flags(self) -> u32 {
+        match self {
+            WirePrecision::F32 => 0,
+            WirePrecision::F16 => FLAG_F16,
+        }
+    }
+}
+
+/// f32 -> IEEE binary16 bits with round-to-nearest-even (overflow to
+/// ±inf, underflow through subnormals to ±0; NaN payload preserved as a
+/// quiet NaN).
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let absx = b & 0x7FFF_FFFF;
+    if absx >= 0x7F80_0000 {
+        // Inf / NaN.
+        return sign | 0x7C00 | if absx > 0x7F80_0000 { 0x0200 } else { 0 };
+    }
+    let exp = (absx >> 23) as i32 - 127;
+    if exp > 15 {
+        return sign | 0x7C00; // overflow -> ±inf
+    }
+    if exp < -25 {
+        return sign; // below half the smallest subnormal -> ±0
+    }
+    let mant = (absx & 0x007F_FFFF) | 0x0080_0000; // 24-bit significand
+    // Normals drop 13 mantissa bits; subnormals drop more as the
+    // exponent sinks below -14.
+    let shift: u32 = if exp >= -14 { 13 } else { (13 - 14 - exp) as u32 };
+    let base = mant >> shift;
+    let rem = mant & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let rounded = if rem > half || (rem == half && base & 1 == 1) { base + 1 } else { base };
+    let h = if exp >= -14 {
+        // `rounded` carries the implicit bit at 1 << 10; a round-up to
+        // 1 << 11 correctly bumps the exponent (and 30 -> 31 is inf).
+        ((((exp + 15) as u32) << 10) + (rounded - (1 << 10))) as u16
+    } else {
+        // Subnormal: no implicit bit; a carry to 1 << 10 lands exactly
+        // on the smallest normal.
+        rounded as u16
+    };
+    sign | h
+}
+
+/// IEEE binary16 bits -> f32 (exact; every f16 value is representable).
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize into an f32 exponent.
+            let mut e = 113u32; // biased exponent of 2^-14
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3FF) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Append one payload value at the codec's wire precision.
+#[inline]
+fn write_vals(out: &mut Vec<u8>, vals: &[f32], prec: WirePrecision) {
+    match prec {
+        WirePrecision::F32 => {
+            for &v in vals {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WirePrecision::F16 => {
+            for &v in vals {
+                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Decode payload values starting at `off`, adding into `dst`; returns
+/// the advanced offset.
+#[inline]
+fn add_vals(dst: &mut [f32], bytes: &[u8], mut off: usize, prec: WirePrecision) -> usize {
+    match prec {
+        WirePrecision::F32 => {
+            for x in dst {
+                *x += f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+        }
+        WirePrecision::F16 => {
+            for x in dst {
+                let h = u16::from_le_bytes(bytes[off..off + 2].try_into().unwrap());
+                *x += f16_bits_to_f32(h);
+                off += 2;
+            }
+        }
+    }
+    off
+}
 
 /// Owner tag for elements belonging to no head.
 const SHARED: u32 = u32::MAX;
@@ -68,6 +234,8 @@ pub struct GradCodec {
     params: Vec<ParamLayout>,
     /// Total trainable elements (the dense message payload).
     dense_elems: usize,
+    /// Payload element precision on the wire (f32 default).
+    precision: WirePrecision,
 }
 
 impl GradCodec {
@@ -119,7 +287,20 @@ impl GradCodec {
                 per_head,
             });
         }
-        GradCodec { depth, heads, params, dense_elems }
+        GradCodec { depth, heads, params, dense_elems, precision: WirePrecision::F32 }
+    }
+
+    /// Same layout, different wire precision (builder style). All
+    /// cluster nodes must agree — the header flags catch a mismatch at
+    /// decode time.
+    pub fn with_precision(mut self, precision: WirePrecision) -> GradCodec {
+        self.precision = precision;
+        self
+    }
+
+    /// The payload element precision this codec reads and writes.
+    pub fn precision(&self) -> WirePrecision {
+        self.precision
     }
 
     /// Which subnets ship under `masks`: a head's slices travel iff its
@@ -163,25 +344,44 @@ impl GradCodec {
 
     /// Encoded byte size of one message under `masks`.
     pub fn encoded_len(&self, masks: &MaskPair) -> usize {
-        HEADER_BYTES + 4 * self.payload_elems(masks)
+        HEADER_BYTES + self.precision.elem_bytes() * self.payload_elems(masks)
     }
 
     /// Byte size of a dense (every head active) message — what one
     /// micro-batch of the full, unmasked schedule ships.
     pub fn dense_len(&self) -> usize {
-        HEADER_BYTES + 4 * self.dense_elems
+        HEADER_BYTES + self.precision.elem_bytes() * self.dense_elems
     }
 
     /// Serialize the gradient slices `masks` leaves trainable. `grads`
     /// must be the backend's dense gradients in canonical order (one
-    /// tensor per parameter).
+    /// tensor per parameter). Allocates a fresh buffer; the hot loop
+    /// uses [`GradCodec::encode_into`] with a recycled one.
     pub fn encode(&self, micro: usize, masks: &MaskPair, grads: &[Tensor]) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(micro, masks, grads, &mut out);
+        out
+    }
+
+    /// [`GradCodec::encode`] into a caller-provided scratch buffer: the
+    /// buffer is cleared and refilled, so a recycled buffer (see
+    /// [`BufPool`]) makes the steady-state encode path allocation-free
+    /// once its capacity has grown to the largest message.
+    pub fn encode_into(
+        &self,
+        micro: usize,
+        masks: &MaskPair,
+        grads: &[Tensor],
+        out: &mut Vec<u8>,
+    ) {
         assert_eq!(grads.len(), self.params.len(), "grad tensor count");
         // One layout walk serves capacity, header, and body.
         let act = self.active(masks);
         let n_elems = self.payload_elems_with(&act);
-        let mut out = Vec::with_capacity(HEADER_BYTES + 4 * n_elems);
+        out.clear();
+        out.reserve(HEADER_BYTES + self.precision.elem_bytes() * n_elems);
         out.extend_from_slice(&MAGIC_GRAD.to_le_bytes());
+        out.extend_from_slice(&self.precision.flags().to_le_bytes());
         out.extend_from_slice(&(micro as u32).to_le_bytes());
         out.extend_from_slice(&masks.fingerprint().to_le_bytes());
         out.extend_from_slice(&(n_elems as u64).to_le_bytes());
@@ -192,22 +392,22 @@ impl GradCodec {
             debug_assert_eq!(g.len(), p.len, "grad shape vs layout");
             let gd = g.data();
             for &(lo, hi) in &p.shared {
-                for &v in &gd[lo..hi] {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
+                write_vals(out, &gd[lo..hi], self.precision);
             }
             for (t, ranges) in p.per_head.iter().enumerate() {
                 if !act[t] {
                     continue;
                 }
                 for &(lo, hi) in ranges {
-                    for &v in &gd[lo..hi] {
-                        out.extend_from_slice(&v.to_le_bytes());
-                    }
+                    write_vals(out, &gd[lo..hi], self.precision);
                 }
             }
         }
-        out
+        debug_assert_eq!(
+            out.len(),
+            HEADER_BYTES + self.precision.elem_bytes() * n_elems,
+            "encoded length disagrees with the layout walk"
+        );
     }
 
     /// Decode a message and **add** its payload into dense accumulators
@@ -227,21 +427,27 @@ impl GradCodec {
         let word = |lo: usize| -> [u8; 4] { bytes[lo..lo + 4].try_into().unwrap() };
         let magic = u32::from_le_bytes(word(0));
         anyhow::ensure!(magic == MAGIC_GRAD, "bad gradient-message magic {magic:#x}");
-        let micro = u32::from_le_bytes(word(4)) as usize;
-        let fp = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let flags = u32::from_le_bytes(word(4));
+        anyhow::ensure!(
+            flags == self.precision.flags(),
+            "wire precision mismatch: message flags {flags:#x}, codec is {}",
+            self.precision.label()
+        );
+        let micro = u32::from_le_bytes(word(8)) as usize;
+        let fp = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
         anyhow::ensure!(
             fp == masks.fingerprint(),
             "mask fingerprint mismatch: sender and receiver disagree on the schedule"
         );
         let act = self.active(masks);
         let expect = self.payload_elems_with(&act);
-        let n_elems = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let n_elems = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
         anyhow::ensure!(
             n_elems == expect,
             "payload {n_elems} elems, layout expects {expect}"
         );
         anyhow::ensure!(
-            bytes.len() == HEADER_BYTES + 4 * n_elems,
+            bytes.len() == HEADER_BYTES + self.precision.elem_bytes() * n_elems,
             "message length {} vs declared payload {}",
             bytes.len(),
             n_elems
@@ -253,20 +459,14 @@ impl GradCodec {
             }
             let ad = a.data_mut();
             for &(lo, hi) in &p.shared {
-                for x in &mut ad[lo..hi] {
-                    *x += f32::from_le_bytes(word(off));
-                    off += 4;
-                }
+                off = add_vals(&mut ad[lo..hi], bytes, off, self.precision);
             }
             for (t, ranges) in p.per_head.iter().enumerate() {
                 if !act[t] {
                     continue;
                 }
                 for &(lo, hi) in ranges {
-                    for x in &mut ad[lo..hi] {
-                        *x += f32::from_le_bytes(word(off));
-                        off += 4;
-                    }
+                    off = add_vals(&mut ad[lo..hi], bytes, off, self.precision);
                 }
             }
         }
@@ -278,9 +478,20 @@ impl GradCodec {
     /// have the parameter's full element count for trainable `i`
     /// (non-trainable entries are ignored).
     pub fn encode_dense(&self, vals: &[Tensor]) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_dense_into(vals, &mut out);
+        out
+    }
+
+    /// [`GradCodec::encode_dense`] into a caller-provided scratch buffer
+    /// (cleared and refilled; reuse makes the steady state
+    /// allocation-free).
+    pub fn encode_dense_into(&self, vals: &[Tensor], out: &mut Vec<u8>) {
         assert_eq!(vals.len(), self.params.len(), "value tensor count");
-        let mut out = Vec::with_capacity(HEADER_BYTES + 4 * self.dense_elems);
+        out.clear();
+        out.reserve(HEADER_BYTES + self.precision.elem_bytes() * self.dense_elems);
         out.extend_from_slice(&MAGIC_DELTA.to_le_bytes());
+        out.extend_from_slice(&self.precision.flags().to_le_bytes());
         out.extend_from_slice(&0u32.to_le_bytes());
         out.extend_from_slice(&0u64.to_le_bytes());
         out.extend_from_slice(&(self.dense_elems as u64).to_le_bytes());
@@ -289,11 +500,8 @@ impl GradCodec {
                 continue;
             }
             assert_eq!(v.len(), p.len, "dense payload size");
-            for &x in v.data() {
-                out.extend_from_slice(&x.to_le_bytes());
-            }
+            write_vals(out, v.data(), self.precision);
         }
-        out
     }
 
     /// Decode a dense payload into per-parameter tensors (1-D; zero
@@ -303,9 +511,16 @@ impl GradCodec {
         anyhow::ensure!(bytes.len() >= HEADER_BYTES, "message shorter than header");
         let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
         anyhow::ensure!(magic == MAGIC_DELTA, "bad delta-message magic {magic:#x}");
-        let n_elems = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let flags = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
         anyhow::ensure!(
-            n_elems == self.dense_elems && bytes.len() == HEADER_BYTES + 4 * n_elems,
+            flags == self.precision.flags(),
+            "wire precision mismatch: message flags {flags:#x}, codec is {}",
+            self.precision.label()
+        );
+        let n_elems = u64::from_le_bytes(bytes[20..28].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            n_elems == self.dense_elems
+                && bytes.len() == HEADER_BYTES + self.precision.elem_bytes() * n_elems,
             "dense payload size mismatch"
         );
         let mut off = HEADER_BYTES;
@@ -316,13 +531,69 @@ impl GradCodec {
                 continue;
             }
             let mut v = vec![0.0f32; p.len];
-            for x in &mut v {
-                *x = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
-                off += 4;
-            }
+            off = add_vals(&mut v, bytes, off, self.precision);
             out.push(Tensor::from_vec(&[p.len], v));
         }
         Ok(out)
+    }
+}
+
+/// A recycling pool of encode buffers: the dist hot loop checks a
+/// buffer out, [`GradCodec::encode_into`] refills it in place, the
+/// aggregator gives it back after the reduction consumed the bytes. In
+/// steady state (after the first batch grew each buffer's capacity to
+/// the largest message) the per-task encode path performs **zero heap
+/// allocations** — [`BufPool::fresh_allocs`] stops moving, which
+/// `dist::trainer` tests pin.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    fresh: AtomicU64,
+    reused: AtomicU64,
+}
+
+/// Cap on parked buffers: enough for every micro-batch of a batch to be
+/// in flight at once plus slack; beyond this, returned buffers are
+/// dropped rather than hoarded.
+const BUF_POOL_CAP: usize = 64;
+
+impl BufPool {
+    /// Fresh, empty pool.
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// Take a cleared buffer — recycled when one is parked, freshly
+    /// allocated otherwise.
+    pub fn checkout(&self) -> Vec<u8> {
+        if let Some(b) = self.free.lock().expect("buf pool lock").pop() {
+            debug_assert!(b.is_empty(), "recycled buffer must come back cleared");
+            debug_assert!(b.capacity() > 0, "recycled buffer lost its capacity");
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            b
+        } else {
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+            Vec::new()
+        }
+    }
+
+    /// Return a buffer for reuse (cleared here; capacity kept).
+    pub fn give_back(&self, mut b: Vec<u8>) {
+        b.clear();
+        let mut free = self.free.lock().expect("buf pool lock");
+        if free.len() < BUF_POOL_CAP {
+            free.push(b);
+        }
+    }
+
+    /// Buffers allocated fresh (steady state: stops growing).
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts served by recycling.
+    pub fn reuses(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
     }
 }
 
@@ -397,6 +668,7 @@ mod tests {
             lora_ranks: vec![2],
             lora_standard_rank: 2,
             init_seed: 0xFEED,
+            threads: 1,
         }
     }
 
@@ -474,6 +746,136 @@ mod tests {
         for (d, b) in deltas.iter().zip(&back) {
             assert_eq!(d.data(), b.data());
         }
+    }
+
+    #[test]
+    fn f16_conversion_round_trips_and_rounds_to_nearest() {
+        // Exactly-representable values survive bit-perfect.
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.5, 1024.0, 65504.0, -65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "exact {v}");
+        }
+        // General values: relative error bounded by half an ulp (2^-11).
+        for v in [0.333f32, -7.123, 1e-3, 123.456, -0.9999, 3.14159] {
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!(
+                (r - v).abs() <= v.abs() * 4.9e-4 + 1e-7,
+                "f16 round trip of {v} gave {r}"
+            );
+        }
+        // Overflow saturates to inf; tiny values flush through
+        // subnormals to zero; NaN stays NaN; signs survive.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-12)), 0.0);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        let sub = f16_bits_to_f32(f32_to_f16_bits(3e-6));
+        assert!(sub > 0.0 && (sub - 3e-6).abs() < 6e-8, "subnormal {sub}");
+        // Round-to-nearest-even at the half-ulp boundary: 1 + 2^-11 is
+        // exactly between 1.0 and the next f16 (1 + 2^-10) — ties to
+        // the even mantissa, i.e. 1.0.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 4.8828125e-4)), 1.0);
+        // 1 + 3 * 2^-11 ties upward (odd neighbor below, even above).
+        assert_eq!(
+            f16_bits_to_f32(f32_to_f16_bits(1.0 + 3.0 * 4.8828125e-4)),
+            1.0 + 2.0 * 9.765625e-4
+        );
+    }
+
+    #[test]
+    fn f16_wire_halves_bytes_and_decodes_within_tolerance() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let f32c = GradCodec::new(&be);
+        let f16c = GradCodec::new(&be).with_precision(WirePrecision::F16);
+        assert_eq!(f16c.precision(), WirePrecision::F16);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = masks_with(&[(0, 1)], &[(1, 0)]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let m32 = f32c.encode(2, &masks, &grads);
+        let m16 = f16c.encode(2, &masks, &grads);
+        // Byte halving, measured on the real messages via WireStats.
+        let elems = f32c.payload_elems(&masks);
+        assert_eq!(m32.len(), HEADER_BYTES + 4 * elems);
+        assert_eq!(m16.len(), HEADER_BYTES + 2 * elems);
+        let mut s32 = WireStats::default();
+        let mut s16 = WireStats::default();
+        s32.record_up(m32.len(), f32c.dense_len());
+        s16.record_up(m16.len(), f16c.dense_len());
+        assert!(
+            s16.up_bytes < s32.up_bytes && (s16.up_bytes as f64) < 0.51 * s32.up_bytes as f64,
+            "f16 must roughly halve the uplink: {} vs {}",
+            s16.up_bytes,
+            s32.up_bytes
+        );
+        // Round trip within binary16 tolerance.
+        let mut acc = be.zeros_like_params();
+        let micro = f16c.decode_add(&m16, &masks, &mut acc).unwrap();
+        assert_eq!(micro, 2);
+        for (a, g) in acc.iter().zip(&grads) {
+            for (&va, &vg) in a.data().iter().zip(g.data()) {
+                assert!(
+                    (va - vg).abs() <= vg.abs() * 1e-3 + 1e-6,
+                    "f16 decode {va} vs {vg}"
+                );
+            }
+        }
+        // Precision mismatch is caught by the header flags, both ways.
+        assert!(f32c.decode_add(&m16, &masks, &mut acc).is_err());
+        assert!(f16c.decode_add(&m32, &masks, &mut acc).is_err());
+        // Dense delta path honors precision too.
+        let deltas = f16c.decode_dense(&f16c.encode_dense(&be.zeros_like_params())).unwrap();
+        assert_eq!(deltas.len(), be.n_param_tensors());
+        assert!(f32c.decode_dense(&f16c.encode_dense(&be.zeros_like_params())).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_capacity() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let codec = GradCodec::new(&be);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = MaskPair::ones(2, 2);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let mut buf = Vec::new();
+        codec.encode_into(0, &masks, &grads, &mut buf);
+        let first = buf.clone();
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        // Re-encoding into the same buffer must not reallocate (same
+        // capacity, same backing pointer) and must produce the bytes
+        // `encode` would.
+        codec.encode_into(0, &masks, &grads, &mut buf);
+        assert_eq!(buf, first);
+        assert_eq!(buf.capacity(), cap, "steady-state encode must not grow");
+        assert_eq!(buf.as_ptr(), ptr, "steady-state encode must not reallocate");
+        assert_eq!(buf, codec.encode(0, &masks, &grads));
+    }
+
+    #[test]
+    fn buf_pool_recycles_after_warmup() {
+        let pool = BufPool::new();
+        let a = pool.checkout();
+        let b = pool.checkout();
+        assert_eq!(pool.fresh_allocs(), 2);
+        assert_eq!(pool.reuses(), 0);
+        let mut a = a;
+        a.extend_from_slice(&[1, 2, 3]);
+        pool.give_back(a);
+        pool.give_back(b);
+        let c = pool.checkout();
+        assert!(c.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(pool.fresh_allocs(), 2, "steady state: no new allocations");
+        assert_eq!(pool.reuses(), 1);
+    }
+
+    #[test]
+    fn wire_precision_parses() {
+        assert_eq!(WirePrecision::parse("f32").unwrap(), WirePrecision::F32);
+        assert_eq!(WirePrecision::parse("FP16").unwrap(), WirePrecision::F16);
+        assert_eq!(WirePrecision::parse("half").unwrap(), WirePrecision::F16);
+        assert!(WirePrecision::parse("bf16").is_err());
+        assert_eq!(WirePrecision::F16.label(), "f16");
+        assert_eq!(WirePrecision::default(), WirePrecision::F32);
     }
 
     #[test]

@@ -28,20 +28,29 @@
 //!   bytes, which is exactly the contrast that motivates the masked
 //!   all-reduce.
 //! * [`trainer`] — [`trainer::DistTrainer`]: schedule → worker execution
-//!   → ordered reduce → one fused SGD-momentum update per batch. Its
+//!   → ordered reduce → one fused SGD-momentum update per batch. Each
+//!   worker is a **pipeline**: a dedicated sender thread encodes and
+//!   uploads task *i* (recycled buffers, zero steady-state allocations)
+//!   while the compute thread already runs task *i+1* — the
+//!   comm/compute overlap the engine models, live and measured. Its
 //!   loss trajectory is bitwise identical to the serial
 //!   [`crate::coordinator::Trainer`] run under
 //!   [`crate::coordinator::UpdateMode::BatchAccum`] for any worker count
-//!   (`tests/dist.rs` pins K ∈ {1, 2, 4}). Measured per-worker step
-//!   times feed a straggler-aware micro-batch balancer and the
-//!   [`crate::cluster::WorkloadTracker`] — placement reacts to real
-//!   stragglers, and (because replicas are bitwise identical) placement
-//!   can never change the numerics.
+//!   (`tests/dist.rs` pins K ∈ {1, 2, 4}, overlap on and off, kernel
+//!   threads > 1). Measured per-worker task times feed a
+//!   straggler-aware micro-batch balancer, the
+//!   [`crate::cluster::WorkloadTracker`], and an epoch-boundary
+//!   calibration of the modeled `ExecTimeModel` — placement and
+//!   modeling react to real stragglers, and (because replicas are
+//!   bitwise identical) neither can change the numerics. An optional
+//!   [`grads::WirePrecision::F16`] wire halves the measured bytes
+//!   (lossy; replicas stay mutually bit-identical via requantized
+//!   broadcast).
 
 pub mod allreduce;
 pub mod grads;
 pub mod trainer;
 
 pub use allreduce::{ExchangeMode, OrderedReducer};
-pub use grads::{GradCodec, WireStats};
+pub use grads::{BufPool, GradCodec, WirePrecision, WireStats};
 pub use trainer::{DistConfig, DistReport, DistTrainer};

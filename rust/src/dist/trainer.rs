@@ -25,13 +25,32 @@
 //! is measured-time dependent and deliberately free: it can shift work
 //! away from real stragglers without touching a single bit of the math.
 //!
-//! ## Measurement
+//! ## Pipeline (comm/compute overlap)
+//!
+//! Each worker splits into a compute thread and a dedicated sender
+//! thread joined by a bounded one-slot channel: while task *i*'s
+//! gradient is being encoded and uploaded, task *i+1*'s `grad_step`
+//! already runs — the double-buffered overlap the simulated
+//! [`crate::cluster::Engine`] models, now live. The handoff carries
+//! owned gradients (never a view of the replica), the aggregator only
+//! broadcasts a batch's update after every uplink of that batch
+//! arrived, and the [`OrderedReducer`] fixes the reduction order — so
+//! pipelining is bitwise invisible. `DistConfig::overlap = false` keeps
+//! the serialized reference path; `benches/dist_step.rs` measures the
+//! makespan gap between the two.
+//!
+//! ## Measurement and calibration
 //!
 //! Uplink/downlink bytes are counted on the actual serialized messages
-//! ([`WireStats`]); per-worker step times are wall-clock measurements
-//! around the real gradient computation and feed both the assignment
-//! balancer (EMA per worker) and the workload/usage accounting that the
-//! simulated [`crate::cluster::Engine`] previously only modeled.
+//! ([`WireStats`]); per-worker task times are wall-clock measurements
+//! around the real gradient computation and feed (a) the assignment
+//! balancer (EMA per worker), (b) the workload/usage accounting that
+//! the simulated [`crate::cluster::Engine`] previously only modeled,
+//! and (c) a per-epoch calibration loop: the measured/modeled makespan
+//! ratio rescales the engine's [`ExecTimeModel`] (via
+//! `ExecTimeModel::calibrated`) so the modeled accounting tracks this
+//! host instead of the paper's V100. The residual modeled-vs-measured
+//! drift is reported in `TrainReport::makespan_drift`.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -41,13 +60,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::allreduce::{ExchangeMode, OrderedReducer};
-use super::grads::{GradCodec, WireStats};
+use super::grads::{BufPool, GradCodec, WirePrecision, WireStats};
 use crate::backend::native::{NativeBackend, NativeProvider};
 use crate::backend::Backend;
 use crate::cluster::{CostModel, Engine, EngineConfig, ExecTimeModel, WorkloadTracker};
 use crate::coordinator::{build_scheduler, prepare_run, TrainReport, TrainerConfig, UpdateMode};
 use crate::data::{Batcher, Dataset, DatasetSpec, SyntheticKind};
-use crate::metrics::{DeviceUsage, Meter};
+use crate::metrics::{rel_drift, DeviceUsage, Meter};
 use crate::partition::Partition;
 use crate::schedule::{MaskPair, Scheduler};
 use crate::scores::ScoreBook;
@@ -65,12 +84,48 @@ pub struct DistConfig {
     pub workers: usize,
     /// Gradient exchange topology.
     pub exchange: ExchangeMode,
+    /// Pipeline each worker's encode + upload of task *i* behind task
+    /// *i+1*'s gradient computation (a dedicated sender thread per
+    /// worker, double-buffered handoff). Default `true`; `false` is the
+    /// serialized reference path — `benches/dist_step.rs` measures the
+    /// gap. Bitwise-neutral either way (the bytes are identical and the
+    /// reduction order is fixed).
+    pub overlap: bool,
+    /// Gradient payload precision on the wire. The `F32` default is
+    /// lossless (bitwise serial ≡ dist). `F16` halves the measured
+    /// bytes; the aggregate gradient is then requantized before
+    /// *anyone* (aggregator included) applies it, so all replicas still
+    /// agree bitwise with each other — only with the serial trainer do
+    /// they diverge. Masked-allreduce only.
+    pub wire_precision: WirePrecision,
+    /// Simulated NIC cost in milliseconds per MiB of *actual encoded
+    /// message*, slept on the uplink path (sender thread when
+    /// overlapping, compute thread when serialized). 0 disables it.
+    /// This is a bench/experiment knob: in-process channels are
+    /// effectively free, so hiding a modeled wire behind compute is how
+    /// the comm/compute-overlap claim becomes measurable on one host.
+    pub sim_wire_ms_per_mib: f64,
+    /// Recalibrate the modeled [`ExecTimeModel`] from measured per-task
+    /// times at every epoch boundary (see `DistReport::train`'s
+    /// `calib_*` fields). Default `true`; scheduling decisions are
+    /// placement-only, so calibration never touches the numerics.
+    pub calibrate: bool,
 }
 
 impl DistConfig {
-    /// Masked-allreduce cluster of `workers` replicas.
+    /// Masked-allreduce cluster of `workers` replicas with the default
+    /// performance knobs: overlap on, lossless f32 wire, no simulated
+    /// NIC, calibration on.
     pub fn new(train: TrainerConfig, workers: usize) -> DistConfig {
-        DistConfig { train, workers, exchange: ExchangeMode::MaskedAllReduce }
+        DistConfig {
+            train,
+            workers,
+            exchange: ExchangeMode::MaskedAllReduce,
+            overlap: true,
+            wire_precision: WirePrecision::F32,
+            sim_wire_ms_per_mib: 0.0,
+            calibrate: true,
+        }
     }
 }
 
@@ -110,6 +165,12 @@ pub struct DistReport {
     pub worker_utilization: f64,
     /// Worker straggler-over-mean imbalance (0 = perfectly balanced).
     pub worker_imbalance: f64,
+    /// Encode buffers allocated fresh over the whole run (steady state:
+    /// bounded by in-flight messages, not by batch count — the
+    /// zero-allocation hot-loop property, pinned by tests).
+    pub encode_buf_fresh: u64,
+    /// Encode-buffer checkouts served by recycling.
+    pub encode_buf_reused: u64,
 }
 
 /// One unit of worker compute: run micro `micro` under `masks`.
@@ -141,17 +202,114 @@ struct Up {
     n_correct: f32,
     /// The serialized masked gradient — the bytes that cross the wire.
     blob: Vec<u8>,
-    /// Measured wall time of grad_step + encode (ms).
+    /// Measured wall time of the gradient computation alone (ms) — the
+    /// signal the assignment balancer and the exec-time calibration
+    /// consume. Encode/upload time is excluded: when overlapping it
+    /// runs on the sender thread, hidden behind the next task.
     ms: f64,
 }
 
+/// Compute-thread -> sender-thread handoff (overlap mode): one computed
+/// gradient awaiting encode + upload.
+struct Computed {
+    micro: usize,
+    loss: f32,
+    n_correct: f32,
+    masks: MaskPair,
+    grads: Vec<Tensor>,
+    ms: f64,
+}
+
+/// Per-worker knobs threaded into [`worker_loop`].
+#[derive(Clone)]
+struct WorkerOpts {
+    /// Encode + upload on a dedicated sender thread, double-buffered.
+    overlap: bool,
+    /// Simulated NIC ms per MiB of encoded message (0 = off).
+    wire_ms_per_mib: f64,
+    /// Recycled encode buffers (shared with the aggregator).
+    pool: Arc<BufPool>,
+}
+
+/// Sleep out the simulated NIC time for one `bytes`-sized message. A
+/// sleep — not a spin — because a real NIC moves bytes by DMA without
+/// burning a core: the sender thread must *wait* without stealing CPU
+/// from the compute threads, or the measured overlap win would vanish
+/// on core-saturated hosts for the wrong reason.
+fn sim_wire_delay(bytes: usize, ms_per_mib: f64) {
+    if ms_per_mib > 0.0 {
+        let ms = bytes as f64 / (1024.0 * 1024.0) * ms_per_mib;
+        thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+    }
+}
+
+/// Encode one computed gradient into a recycled buffer, pay the
+/// (optional) simulated NIC, and upload it to the aggregator.
+fn encode_and_send(
+    codec: &GradCodec,
+    opts: &WorkerOpts,
+    worker: usize,
+    c: Computed,
+    tx: &mpsc::Sender<Up>,
+) -> bool {
+    let mut blob = opts.pool.checkout();
+    codec.encode_into(c.micro, &c.masks, &c.grads, &mut blob);
+    sim_wire_delay(blob.len(), opts.wire_ms_per_mib);
+    tx.send(Up {
+        worker,
+        micro: c.micro,
+        loss: c.loss,
+        n_correct: c.n_correct,
+        blob,
+        ms: c.ms,
+    })
+    .is_ok()
+}
+
+/// One worker's main loop. With `opts.overlap` the loop splits in two:
+/// this (compute) thread runs `grad_step` back to back and hands each
+/// finished gradient to a dedicated sender thread over a **bounded**
+/// one-slot channel — so the encode + upload of task *i* overlaps task
+/// *i+1*'s computation, with classic double buffering (one gradient in
+/// the channel, one being encoded) as backpressure: compute can never
+/// run more than two tasks ahead of the wire. Serialized mode
+/// (`overlap == false`) encodes and sends inline, the PR 3 behaviour.
+///
+/// Ordering safety: the aggregator broadcasts a batch's update only
+/// after it has received *every* uplink message of that batch, so by
+/// the time an `Apply` job reaches this thread the sender queue is
+/// already drained — the replica can never apply an update while its
+/// own gradients for that batch are still in flight. (The handed-off
+/// gradients are owned tensors, so the sender never reads the replica.)
 fn worker_loop(
     mut be: NativeBackend,
     codec: Arc<GradCodec>,
     worker: usize,
     rx: mpsc::Receiver<Job>,
     tx: mpsc::Sender<Up>,
+    opts: WorkerOpts,
 ) {
+    let (sender_tx, sender_handle) = if opts.overlap {
+        // Double buffering: one slot in the channel + one in the
+        // sender's hands.
+        let (stx, srx) = mpsc::sync_channel::<Computed>(1);
+        let codec = Arc::clone(&codec);
+        let up = tx.clone();
+        let sopts = opts.clone();
+        let handle = thread::Builder::new()
+            .name(format!("d2ft-dist-{worker}-tx"))
+            .spawn(move || {
+                while let Ok(c) = srx.recv() {
+                    if !encode_and_send(&codec, &sopts, worker, c, &up) {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning dist sender");
+        (Some(stx), Some(handle))
+    } else {
+        (None, None)
+    };
     while let Ok(job) = rx.recv() {
         match job {
             Job::Compute(items) => {
@@ -160,17 +318,20 @@ fn worker_loop(
                     let (out, grads) = be
                         .grad_step(&it.x, &it.y, &it.masks)
                         .expect("native grad step on worker");
-                    let blob = codec.encode(it.micro, &it.masks, &grads);
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let up = Up {
-                        worker,
+                    let c = Computed {
                         micro: it.micro,
                         loss: out.loss,
                         n_correct: out.n_correct,
-                        blob,
+                        masks: it.masks,
+                        grads,
                         ms,
                     };
-                    if tx.send(up).is_err() {
+                    let alive = match &sender_tx {
+                        Some(stx) => stx.send(c).is_ok(),
+                        None => encode_and_send(&codec, &opts, worker, c, &tx),
+                    };
+                    if !alive {
                         return;
                     }
                 }
@@ -190,6 +351,11 @@ fn worker_loop(
                 be.reset_momentum().expect("resetting momentum");
             }
         }
+    }
+    // Shut the sender down cleanly before the compute thread exits.
+    drop(sender_tx);
+    if let Some(h) = sender_handle {
+        let _ = h.join();
     }
 }
 
@@ -216,6 +382,9 @@ pub struct DistTrainer {
     /// Per-worker EMA of measured ms per micro-batch task — the
     /// straggler signal the assignment balancer reacts to.
     ema_ms: Vec<f64>,
+    /// Recycled encode buffers: workers check out, the aggregator gives
+    /// back after every reduction.
+    buf_pool: Arc<BufPool>,
 }
 
 impl DistTrainer {
@@ -224,6 +393,13 @@ impl DistTrainer {
     /// `(spec, lora_rank, seed)` so they are bitwise identical.
     pub fn new(provider: &NativeProvider, cfg: DistConfig) -> Result<DistTrainer> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker replica");
+        anyhow::ensure!(
+            cfg.wire_precision == WirePrecision::F32
+                || cfg.exchange == ExchangeMode::MaskedAllReduce,
+            "f16 wire precision supports masked-allreduce only (the \
+             parameter-server update is applied server-side before \
+             encoding, so its deltas cannot be requantized consistently)"
+        );
         let mut cfg = cfg;
         cfg.train.update = UpdateMode::BatchAccum;
         let spec = provider.spec();
@@ -240,7 +416,13 @@ impl DistTrainer {
         // Shared with the serial trainer so the two drivers cannot
         // drift on partition/dataset setup.
         let setup = prepare_run(agg.config(), &cfg.train)?;
-        let codec = Arc::new(GradCodec::new(&agg));
+        let codec = Arc::new(GradCodec::new(&agg).with_precision(cfg.wire_precision));
+        let buf_pool = Arc::new(BufPool::new());
+        let opts = WorkerOpts {
+            overlap: cfg.overlap,
+            wire_ms_per_mib: cfg.sim_wire_ms_per_mib,
+            pool: Arc::clone(&buf_pool),
+        };
         let (up_tx, up_rx) = mpsc::channel::<Up>();
         let mut txs = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -249,9 +431,10 @@ impl DistTrainer {
             let replica = NativeBackend::new(spec, cfg.train.lora_rank, mb, cfg.train.seed);
             let codec = Arc::clone(&codec);
             let up = up_tx.clone();
+            let wopts = opts.clone();
             let handle = thread::Builder::new()
                 .name(format!("d2ft-dist-{w}"))
-                .spawn(move || worker_loop(replica, codec, w, job_rx, up))
+                .spawn(move || worker_loop(replica, codec, w, job_rx, up, wopts))
                 .expect("spawning dist worker");
             txs.push(tx);
             handles.push(handle);
@@ -268,6 +451,7 @@ impl DistTrainer {
             rx: up_rx,
             handles,
             ema_ms,
+            buf_pool,
         })
     }
 
@@ -360,12 +544,28 @@ impl DistTrainer {
         // Fixed-order reduction -> batch-mean gradient.
         let mut acc = self.agg.zeros_like_params();
         reducer.reduce(&self.codec, masks, &mut acc)?;
+        // Recycle the message buffers: with the workers' checkout this
+        // closes the loop that makes the steady-state encode path
+        // allocation-free.
+        for blob in reducer.into_blobs() {
+            self.buf_pool.give_back(blob);
+        }
         let lr = self.cfg.train.lr;
         match self.cfg.exchange {
             ExchangeMode::MaskedAllReduce => {
-                self.agg.apply_grads(&acc, lr)?;
                 let union = MaskPair::union(masks);
                 let blob = Arc::new(self.codec.encode(0, &union, &acc));
+                if self.codec.precision() == WirePrecision::F32 {
+                    self.agg.apply_grads(&acc, lr)?;
+                } else {
+                    // Lossy wire: every replica must apply the exact
+                    // bits that crossed it, the aggregator included —
+                    // decode our own broadcast so all K+1 replicas stay
+                    // mutually bitwise identical.
+                    let mut quantized = self.agg.zeros_like_params();
+                    self.codec.decode_add(&blob, &union, &mut quantized)?;
+                    self.agg.apply_grads(&quantized, lr)?;
+                }
                 for tx in &self.txs {
                     stats.record_down(blob.len());
                     tx.send(Job::Apply { lr, union: union.clone(), blob: Arc::clone(&blob) })
@@ -446,11 +646,25 @@ impl DistTrainer {
         let n_devices = self.partition.n_subnets();
         let mut workloads = WorkloadTracker::new(cost, n_devices);
         // The simulated engine still runs for the modeled accounting —
-        // that is exactly what the measured numbers are compared against.
+        // that is exactly what the measured numbers are compared
+        // against. Its exec-time model starts at the paper's V100 table
+        // and, when calibration is on, is rescaled at every epoch
+        // boundary from *this* run's measured per-task times.
         let mut ecfg = EngineConfig::accounting(cfg.exec, cfg.seed);
         ecfg.bytes_per_fullop = self.codec.dense_len() as u64;
-        let mut engine =
-            Engine::with_models(ecfg, n_devices, ExecTimeModel::paper(), cost);
+        let mut exec_model = ExecTimeModel::paper();
+        let mut engine = Engine::with_models(ecfg, n_devices, exec_model.clone(), cost);
+        // Calibration state: per-epoch means of measured batch straggler
+        // (slowest worker's summed task compute) vs modeled makespan;
+        // after the first calibration, each further epoch contributes a
+        // modeled-vs-measured drift sample.
+        let mut calib_scale = 1.0f64;
+        let mut calib_epochs = 0usize;
+        let mut drift_sum = 0.0f64;
+        let mut drift_n = 0usize;
+        let mut ep_meas = 0.0f64;
+        let mut ep_model = 0.0f64;
+        let mut ep_batches = 0usize;
         let mut usage = DeviceUsage::new(n_devices);
         let mut worker_usage = DeviceUsage::new(k);
         let mut loss_curve = Vec::with_capacity(cfg.batches);
@@ -513,6 +727,13 @@ impl DistTrainer {
                 exec_ms_sum += cluster.mean_device_ms;
                 makespan_sum += cluster.makespan_ms;
                 modeled_wire_bytes += cluster.wire_bytes;
+                // Calibration sample: this batch's measured straggler
+                // (the slowest worker's summed task compute — exactly
+                // what gates the synchronous step) against the modeled
+                // makespan for the same schedule.
+                ep_meas += out.worker_ms.iter().copied().fold(0.0, f64::max);
+                ep_model += cluster.makespan_ms;
+                ep_batches += 1;
                 if cfg.eval_every > 0 && (batch_idx + 1) % cfg.eval_every == 0 {
                     let (top1, _) = self.evaluate()?;
                     eval_curve.push((batch_idx + 1, top1));
@@ -520,6 +741,38 @@ impl DistTrainer {
                 batch_idx += 1;
                 epoch_pos += 1;
             }
+            // ---- epoch boundary: drift report + recalibration --------
+            // Means over the epoch (not single batches) so host noise
+            // averages out of both the drift metric and the scale.
+            if ep_batches > 0 {
+                let meas = ep_meas / ep_batches as f64;
+                let model = ep_model / ep_batches as f64;
+                if calib_epochs > 0 {
+                    drift_sum += rel_drift(model, meas);
+                    drift_n += 1;
+                }
+                if self.cfg.calibrate && meas > 0.0 && model > 0.0 {
+                    // Feed the measured/modeled ratio back through
+                    // ExecTimeModel::calibrated (via `scaled`): the
+                    // knapsack accounting for the *next* epoch runs on
+                    // this host's real timings. Placement-only — the
+                    // numerics cannot move.
+                    let scale = meas / model;
+                    exec_model = exec_model.scaled(scale);
+                    calib_scale *= scale;
+                    engine = Engine::with_models(ecfg, n_devices, exec_model.clone(), cost);
+                    calib_epochs += 1;
+                }
+                ep_meas = 0.0;
+                ep_model = 0.0;
+                ep_batches = 0;
+            }
+        }
+        // A run that ends mid-epoch still reports the partial epoch's
+        // drift (it just never feeds another calibration).
+        if ep_batches > 0 && calib_epochs > 0 {
+            drift_sum += rel_drift(ep_model / ep_batches as f64, ep_meas / ep_batches as f64);
+            drift_n += 1;
         }
         let wall_s = t0.elapsed().as_secs_f64();
         let (test_top1, test_loss) = self.evaluate()?;
@@ -545,6 +798,9 @@ impl DistTrainer {
             straggler_ms: worker_usage.total_makespan_ms() / worker_usage.steps().max(1) as f64,
             wall_s,
             batches: batch_idx,
+            calib_scale,
+            calib_epochs,
+            makespan_drift: if drift_n > 0 { drift_sum / drift_n as f64 } else { 0.0 },
         };
         let n_batches = worker_usage.steps().max(1) as f64;
         Ok(DistReport {
@@ -558,6 +814,8 @@ impl DistTrainer {
             worker_busy_ms: worker_usage.busy_ms().to_vec(),
             worker_utilization: worker_usage.mean_utilization(),
             worker_imbalance: worker_usage.imbalance(),
+            encode_buf_fresh: self.buf_pool.fresh_allocs(),
+            encode_buf_reused: self.buf_pool.reuses(),
             train,
         })
     }
@@ -600,6 +858,7 @@ mod tests {
             lora_ranks: vec![2],
             lora_standard_rank: 2,
             init_seed: 0xBEEF,
+            threads: 1,
         })
     }
 
@@ -631,6 +890,80 @@ mod tests {
         assert!(r.grad_savings > 0.0, "masked schedule must save bytes");
         assert!(r.wire.up_bytes < r.wire.dense_up_bytes);
         assert_eq!(r.worker_busy_ms.len(), 2);
+    }
+
+    #[test]
+    fn overlap_off_matches_overlap_on_bitwise() {
+        // The pipelined sender changes *when* bytes move, never which
+        // bytes or how they reduce: trajectories and parameters must be
+        // bit-equal with the pipeline on and off.
+        let provider = small_provider();
+        let run = |overlap: bool| {
+            let dcfg = DistConfig { overlap, ..DistConfig::new(quick_cfg(), 3) };
+            let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
+            let r = dt.run().unwrap();
+            let w = dt.backend().param("b00_wqkv").unwrap();
+            (r, w)
+        };
+        let (on, w_on) = run(true);
+        let (off, w_off) = run(false);
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&on.train.loss_curve), bits(&off.train.loss_curve));
+        assert_eq!(w_on, w_off, "overlap must not move a single parameter bit");
+        assert_eq!(on.wire.up_bytes, off.wire.up_bytes, "same bytes either way");
+    }
+
+    #[test]
+    fn encode_buffers_recycle_in_steady_state() {
+        // Zero per-task allocations after warmup: fresh buffer count is
+        // bounded by what can be in flight at once (workers x 2 slots +
+        // one batch's messages), not by how many batches ran.
+        let provider = small_provider();
+        let mut cfg = quick_cfg();
+        cfg.batches = 4;
+        let workers = 2;
+        let mut dt = DistTrainer::new(&provider, DistConfig::new(cfg, workers)).unwrap();
+        let r = dt.run().unwrap();
+        let in_flight_bound = 5 + 2 * workers as u64; // micros + double buffers
+        assert!(
+            r.encode_buf_fresh <= in_flight_bound,
+            "fresh allocations ({}) exceed the in-flight bound ({in_flight_bound}) — \
+             the recycle loop is broken",
+            r.encode_buf_fresh
+        );
+        assert!(
+            r.encode_buf_reused > r.encode_buf_fresh,
+            "most checkouts must be recycled: fresh {} vs reused {}",
+            r.encode_buf_fresh,
+            r.encode_buf_reused
+        );
+        assert_eq!(r.encode_buf_fresh + r.encode_buf_reused, r.wire.up_msgs + r.pretrain_wire.up_msgs);
+    }
+
+    #[test]
+    fn f16_wire_halves_measured_bytes_and_trains() {
+        let provider = small_provider();
+        let run = |prec| {
+            let dcfg =
+                DistConfig { wire_precision: prec, ..DistConfig::new(quick_cfg(), 2) };
+            DistTrainer::new(&provider, dcfg).unwrap().run().unwrap()
+        };
+        let r32 = run(WirePrecision::F32);
+        let r16 = run(WirePrecision::F16);
+        assert!(r16.train.final_train_loss.is_finite());
+        assert_eq!(r32.wire.up_msgs, r16.wire.up_msgs);
+        let ratio = r16.wire.up_bytes as f64 / r32.wire.up_bytes as f64;
+        assert!(
+            ratio < 0.52,
+            "f16 must roughly halve the measured uplink, got {ratio:.3}"
+        );
+        // f16 + parameter server is rejected up front.
+        let bad = DistConfig {
+            wire_precision: WirePrecision::F16,
+            exchange: ExchangeMode::ParamServer,
+            ..DistConfig::new(quick_cfg(), 2)
+        };
+        assert!(DistTrainer::new(&provider, bad).is_err());
     }
 
     #[test]

@@ -49,8 +49,12 @@ fn cli() -> Cli {
         .flag("eval-every", "0", "evaluate test top-1 every N batches")
         .flag("workers", "0", "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas)")
         .flag("exchange", "allreduce", "dist gradient exchange: allreduce | ps (parameter server)")
+        .flag("threads", "1", "matmul kernel threads (native backend; 1 = serial default, 0 = auto/per-core; numerics-neutral)")
+        .flag("wire", "f32", "dist gradient wire precision: f32 (lossless) | f16 (half the bytes, lossy)")
         .switch("serial", "serial cluster execution (reference path; same metrics)")
         .switch("dist", "real data-parallel training: worker replicas + masked-gradient exchange (native)")
+        .switch("no-overlap", "serialize each dist worker's encode+upload after its compute (reference path; default overlaps)")
+        .switch("no-calibrate", "keep the paper's V100 exec-time model instead of recalibrating from measured times")
         .switch("batch-accum", "one aggregated update per batch (the dist semantics) instead of per-micro")
         .switch("quiet", "suppress info logging")
 }
@@ -72,9 +76,11 @@ fn main() -> Result<()> {
         let model = args.get("model");
         match kind {
             #[cfg(feature = "native")]
-            BackendKind::Native => Ok(Box::new(d2ft::backend::native::NativeProvider::new(
-                d2ft::backend::native::NativeSpec::preset(model)?,
-            ))),
+            BackendKind::Native => {
+                let mut spec = d2ft::backend::native::NativeSpec::preset(model)?;
+                spec.threads = args.get_usize("threads")?;
+                Ok(Box::new(d2ft::backend::native::NativeProvider::new(spec)))
+            }
             _ => {
                 anyhow::ensure!(
                     matches!(model.to_ascii_lowercase().as_str(), "mini" | "tiny"),
@@ -212,15 +218,19 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         d2ft::backend::BackendKind::parse(args.get("backend"))? == d2ft::backend::BackendKind::Native,
         "--dist runs on the native backend (worker replicas need Send numerics)"
     );
-    let provider = NativeProvider::new(NativeSpec::preset(args.get("model"))?);
+    let mut spec = NativeSpec::preset(args.get("model"))?;
+    spec.threads = args.get_usize("threads")?;
+    let provider = NativeProvider::new(spec);
     let workers = match args.get_usize("workers")? {
         0 => 4,
         w => w,
     };
     let dcfg = DistConfig {
-        train: cfg,
-        workers,
         exchange: ExchangeMode::parse(args.get("exchange"))?,
+        overlap: !args.get_bool("no-overlap"),
+        wire_precision: d2ft::dist::WirePrecision::parse(args.get("wire"))?,
+        calibrate: !args.get_bool("no-calibrate"),
+        ..DistConfig::new(cfg, workers)
     };
     let mut trainer = DistTrainer::new(&provider, dcfg)?;
     let r = trainer.run()?;
@@ -247,6 +257,20 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     println!("straggler (measured) {:.3}ms/batch", t.straggler_ms);
     println!("worker utilization   {}", pct(r.worker_utilization));
     println!("worker imbalance     {:.4}", r.worker_imbalance);
+    if t.calib_epochs > 0 {
+        println!(
+            "exec-time calib      x{:.3} over {} epochs; model-vs-measured drift {}",
+            t.calib_scale,
+            t.calib_epochs,
+            pct(t.makespan_drift)
+        );
+    } else {
+        println!("exec-time calib      off (paper V100 table; no completed epoch)");
+    }
+    println!(
+        "encode buffers       {} fresh / {} recycled",
+        r.encode_buf_fresh, r.encode_buf_reused
+    );
     println!("wall time            {:.1}s", t.wall_s);
     Ok(())
 }

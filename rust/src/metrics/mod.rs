@@ -222,18 +222,37 @@ pub fn pct(x: f64) -> String {
 
 /// Human-readable byte count (B/KiB/MiB/GiB auto-scaled) — used by the
 /// `dist` runtime's bytes-on-the-wire reports.
+///
+/// Unit selection accounts for display rounding: a value whose *rounded*
+/// rendering would reach 1024 of its unit (e.g. 1023.96 KiB at one
+/// decimal) is promoted to the next unit instead of printing the
+/// nonsensical "1024.0KiB".
 pub fn fmt_bytes(b: u64) -> String {
     const KIB: f64 = 1024.0;
     let bf = b as f64;
+    // Promotion thresholds are rounding-aware: KiB prints one decimal
+    // (rounds up to 1024.0 from 1023.95), MiB prints two (from
+    // 1023.995); bytes are exact integers.
     if bf < KIB {
         format!("{b}B")
-    } else if bf < KIB * KIB {
+    } else if bf / KIB < 1023.95 {
         format!("{:.1}KiB", bf / KIB)
-    } else if bf < KIB * KIB * KIB {
+    } else if bf / (KIB * KIB) < 1023.995 {
         format!("{:.2}MiB", bf / (KIB * KIB))
     } else {
         format!("{:.2}GiB", bf / (KIB * KIB * KIB))
     }
+}
+
+/// Relative drift of a modeled quantity against its measurement:
+/// `|modeled - measured| / measured` (0 when the measurement is empty).
+/// The dist runtime reports this for modeled-vs-measured batch makespan
+/// after feeding measured times into `ExecTimeModel::calibrated`.
+pub fn rel_drift(modeled: f64, measured: f64) -> f64 {
+    if measured <= 0.0 {
+        return 0.0;
+    }
+    (modeled - measured).abs() / measured
 }
 
 #[cfg(test)]
@@ -317,5 +336,31 @@ mod tests {
         assert_eq!(fmt_bytes(1536), "1.5KiB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
         assert!(fmt_bytes(5 * 1024 * 1024 * 1024).ends_with("GiB"));
+    }
+
+    #[test]
+    fn bytes_format_unit_boundaries() {
+        // 1023B is the last exact-byte rendering; 1024B flips to KiB.
+        assert_eq!(fmt_bytes(1023), "1023B");
+        assert_eq!(fmt_bytes(1024), "1.0KiB");
+        // 1048535B = 1023.96KiB: one-decimal rounding would print the
+        // nonsensical "1024.0KiB" — must promote to MiB instead.
+        assert_eq!(fmt_bytes(1_048_535), "1.00MiB");
+        // Just below the rounding threshold stays in KiB.
+        assert_eq!(fmt_bytes(1_048_471), "1023.9KiB");
+        assert_eq!(fmt_bytes(1024 * 1024), "1.00MiB");
+        // Same at the MiB -> GiB boundary (two decimals round from
+        // 1023.995): 1073736377B = 1023.99561MiB.
+        assert_eq!(fmt_bytes(1_073_736_377), "1.00GiB");
+        assert_eq!(fmt_bytes(1_073_731_338), "1023.99MiB");
+        assert_eq!(fmt_bytes(1024 * 1024 * 1024), "1.00GiB");
+    }
+
+    #[test]
+    fn rel_drift_basics() {
+        assert!((rel_drift(12.0, 10.0) - 0.2).abs() < 1e-12);
+        assert!((rel_drift(8.0, 10.0) - 0.2).abs() < 1e-12);
+        assert_eq!(rel_drift(1.0, 0.0), 0.0, "empty measurement");
+        assert_eq!(rel_drift(10.0, 10.0), 0.0);
     }
 }

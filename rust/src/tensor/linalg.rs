@@ -19,12 +19,65 @@
 //! [`reference`] — the property `reference::*` unit tests pin and the
 //! serial ≡ distributed determinism contract builds on.
 
-use super::Tensor;
+//!
+//! On top of the tiling, each matmul variant parallelizes its *output
+//! row* loop over the internal [`pool`] when the kernel is large enough
+//! to amortize dispatch: output rows split into contiguous writer-owned
+//! blocks (each thread writes a disjoint row range and nothing else),
+//! and every element keeps the serial kernel's exact accumulation
+//! order — so results stay bitwise identical to [`reference`] for
+//! **any** thread count. Thread count is a pure performance knob:
+//! [`pool::configure`] / `NativeSpec::threads` / `repro --threads`.
+
+use super::{pool, Tensor};
 
 /// k-dimension tile: a `KC x JC` f32 panel is 32 KiB — L1-resident.
 const KC: usize = 64;
 /// n-dimension (output column) tile.
 const JC: usize = 128;
+/// Minimum `m * k * n` before the row-parallel path engages — below
+/// this, pool dispatch overhead beats the win.
+const PAR_MIN_FLOPS: usize = 96 * 1024;
+/// Minimum output rows per parallel chunk (writer-owned block).
+const PAR_MIN_ROWS: usize = 8;
+
+/// Effective thread count for an `[m, k] x [k, n]`-shaped kernel:
+/// requested `t`, gated on the kernel being worth splitting at all.
+fn gate_threads(t: usize, m: usize, k: usize, n: usize) -> usize {
+    if t <= 1 || m.saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
+        1
+    } else {
+        t
+    }
+}
+
+/// Split `out` (an `[m, row_w]` row-major buffer) into contiguous
+/// writer-owned row blocks and run `body(lo, hi, block)` on each, in
+/// parallel over at most `t` threads. `body` must write rows `lo..hi`
+/// of the logical output into `block` (re-based at row `lo`); blocks
+/// are disjoint, so parallel execution is race-free by construction and
+/// bitwise identical to `body(0, m, out)`.
+fn run_row_blocks(
+    t: usize,
+    m: usize,
+    row_w: usize,
+    out: &mut [f32],
+    body: &(dyn Fn(usize, usize, &mut [f32]) + Sync),
+) {
+    let chunks = pool::ranges(m, PAR_MIN_ROWS, t);
+    if chunks.len() <= 1 {
+        body(0, m, out);
+        return;
+    }
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(chunks.len());
+    let mut rest = out;
+    for &(lo, hi) in &chunks {
+        let (block, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_w);
+        rest = tail;
+        jobs.push(Box::new(move || body(lo, hi, block)));
+    }
+    pool::run(jobs);
+}
 
 fn dims2(t: &Tensor) -> (usize, usize) {
     assert_eq!(t.shape().len(), 2, "expected a 2-D tensor, got {:?}", t.shape());
@@ -34,8 +87,16 @@ fn dims2(t: &Tensor) -> (usize, usize) {
 impl Tensor {
     /// Matrix product `self [m,k] x other [k,n] -> [m,n]`.
     ///
-    /// Blocked over `(k, n)`; bitwise identical to [`reference::matmul`].
+    /// Blocked over `(k, n)`, output rows parallelized over the kernel
+    /// pool; bitwise identical to [`reference::matmul`] at any thread
+    /// count.
     pub fn matmul(&self, other: &Tensor) -> Tensor {
+        self.matmul_threads(other, pool::threads())
+    }
+
+    /// [`Tensor::matmul`] with an explicit thread count (testing/bench
+    /// hook; the public entry point snapshots the pool configuration).
+    pub(crate) fn matmul_threads(&self, other: &Tensor, t: usize) -> Tensor {
         let (m, k) = dims2(self);
         let (k2, n) = dims2(other);
         assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
@@ -45,33 +106,44 @@ impl Tensor {
         // j-tiles outermost: each output element receives all of its k
         // terms within one (j0, i) visit, in ascending-k order (k0 then
         // kk both ascend) — the same per-element order as the naive
-        // i,k,j loops, so tiling cannot change a single bit.
-        for j0 in (0..n).step_by(JC) {
-            let j1 = (j0 + JC).min(n);
-            for k0 in (0..k).step_by(KC) {
-                let k1 = (k0 + KC).min(k);
-                for i in 0..m {
-                    let arow = &a[i * k..(i + 1) * k];
-                    let orow = &mut out[i * n + j0..i * n + j1];
-                    for kk in k0..k1 {
-                        let av = arow[kk];
-                        let brow = &b[kk * n + j0..kk * n + j1];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
+        // i,k,j loops, so tiling cannot change a single bit. The row
+        // loop runs per writer-owned block (`lo..hi`), which permutes
+        // only the order *across* rows — never within one element.
+        let body = |lo: usize, hi: usize, o: &mut [f32]| {
+            for j0 in (0..n).step_by(JC) {
+                let j1 = (j0 + JC).min(n);
+                for k0 in (0..k).step_by(KC) {
+                    let k1 = (k0 + KC).min(k);
+                    for i in lo..hi {
+                        let arow = &a[i * k..(i + 1) * k];
+                        let orow = &mut o[(i - lo) * n + j0..(i - lo) * n + j1];
+                        for kk in k0..k1 {
+                            let av = arow[kk];
+                            let brow = &b[kk * n + j0..kk * n + j1];
+                            for (ov, &bv) in orow.iter_mut().zip(brow) {
+                                *ov += av * bv;
+                            }
                         }
                     }
                 }
             }
-        }
+        };
+        run_row_blocks(gate_threads(t, m, k, n), m, n, &mut out, &body);
         Tensor::from_vec(&[m, n], out)
     }
 
     /// Transposed-A product `self^T [k,m]^T x other [k,n] -> [m,n]`
     /// (the `dW = X^T dY` shape every weight gradient uses).
     ///
-    /// Blocked over `(k, n)`; bitwise identical to
-    /// [`reference::matmul_tn`].
+    /// Blocked over `(k, n)`, output rows parallelized over the kernel
+    /// pool; bitwise identical to [`reference::matmul_tn`] at any
+    /// thread count.
     pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        self.matmul_tn_threads(other, pool::threads())
+    }
+
+    /// [`Tensor::matmul_tn`] with an explicit thread count.
+    pub(crate) fn matmul_tn_threads(&self, other: &Tensor, t: usize) -> Tensor {
         let (k, m) = dims2(self);
         let (k2, n) = dims2(other);
         assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
@@ -79,23 +151,29 @@ impl Tensor {
         let b = other.data();
         let mut out = vec![0.0f32; m * n];
         // Per element (i, j): k0 tiles ascend, kk ascends within each —
-        // identical accumulation order to the naive k-outer loops.
-        for j0 in (0..n).step_by(JC) {
-            let j1 = (j0 + JC).min(n);
-            for k0 in (0..k).step_by(KC) {
-                let k1 = (k0 + KC).min(k);
-                for kk in k0..k1 {
-                    let arow = &a[kk * m..(kk + 1) * m];
-                    let brow = &b[kk * n + j0..kk * n + j1];
-                    for (i, &av) in arow.iter().enumerate() {
-                        let orow = &mut out[i * n + j0..i * n + j1];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
+        // identical accumulation order to the naive k-outer loops. Out
+        // rows (= columns of `a`) split into writer-owned blocks; the
+        // `i` loop order across rows never touches per-element order.
+        let body = |lo: usize, hi: usize, o: &mut [f32]| {
+            for j0 in (0..n).step_by(JC) {
+                let j1 = (j0 + JC).min(n);
+                for k0 in (0..k).step_by(KC) {
+                    let k1 = (k0 + KC).min(k);
+                    for kk in k0..k1 {
+                        let arow = &a[kk * m..(kk + 1) * m];
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for i in lo..hi {
+                            let av = arow[i];
+                            let orow = &mut o[(i - lo) * n + j0..(i - lo) * n + j1];
+                            for (ov, &bv) in orow.iter_mut().zip(brow) {
+                                *ov += av * bv;
+                            }
                         }
                     }
                 }
             }
-        }
+        };
+        run_row_blocks(gate_threads(t, m, k, n), m, n, &mut out, &body);
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -108,47 +186,58 @@ impl Tensor {
     /// the ILP the naive one-dot-at-a-time loop cannot expose, since
     /// float reductions are not compiler-vectorizable.
     pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        self.matmul_nt_threads(other, pool::threads())
+    }
+
+    /// [`Tensor::matmul_nt`] with an explicit thread count.
+    pub(crate) fn matmul_nt_threads(&self, other: &Tensor, t: usize) -> Tensor {
         let (m, k) = dims2(self);
         let (n, k2) = dims2(other);
         assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
         let a = self.data();
         let b = other.data();
         let mut out = vec![0.0f32; m * n];
-        let mut j = 0;
-        // Column-quad outer loop: the four B rows (4k floats) stay hot
-        // across every output row.
-        while j + 4 <= n {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                for (kk, &av) in arow.iter().enumerate() {
-                    s0 += av * b0[kk];
-                    s1 += av * b1[kk];
-                    s2 += av * b2[kk];
-                    s3 += av * b3[kk];
+        // Each output row is an independent set of dot products, so the
+        // writer-owned row blocks change nothing about any reduction.
+        let body = |lo: usize, hi: usize, o: &mut [f32]| {
+            let mut j = 0;
+            // Column-quad outer loop: the four B rows (4k floats) stay
+            // hot across every output row of the block.
+            while j + 4 <= n {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let b2 = &b[(j + 2) * k..(j + 3) * k];
+                let b3 = &b[(j + 3) * k..(j + 4) * k];
+                for i in lo..hi {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                    for (kk, &av) in arow.iter().enumerate() {
+                        s0 += av * b0[kk];
+                        s1 += av * b1[kk];
+                        s2 += av * b2[kk];
+                        s3 += av * b3[kk];
+                    }
+                    let orow = (i - lo) * n;
+                    o[orow + j] = s0;
+                    o[orow + j + 1] = s1;
+                    o[orow + j + 2] = s2;
+                    o[orow + j + 3] = s3;
                 }
-                out[i * n + j] = s0;
-                out[i * n + j + 1] = s1;
-                out[i * n + j + 2] = s2;
-                out[i * n + j + 3] = s3;
+                j += 4;
             }
-            j += 4;
-        }
-        for jj in j..n {
-            let brow = &b[jj * k..(jj + 1) * k];
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let mut acc = 0.0f32;
-                for (&av, &bv) in arow.iter().zip(brow) {
-                    acc += av * bv;
+            for jj in j..n {
+                let brow = &b[jj * k..(jj + 1) * k];
+                for i in lo..hi {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    o[(i - lo) * n + jj] = acc;
                 }
-                out[i * n + jj] = acc;
             }
-        }
+        };
+        run_row_blocks(gate_threads(t, m, k, n), m, n, &mut out, &body);
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -458,6 +547,49 @@ mod tests {
                 "matmul_nt {m}x{k}x{n}"
             );
         }
+    }
+
+    #[test]
+    fn threaded_kernels_match_reference_bitwise() {
+        // Force the parallel path with explicit thread counts (no
+        // dependence on the global pool knob, which other tests may
+        // flip concurrently): shapes above the flop gate with row
+        // counts that exercise uneven chunking, for t in {2, 3, 5}.
+        for (m, k, n, seed) in [(70, 130, 258, 40), (67, 64, 129, 41), (128, 48, 100, 42)] {
+            let a = rand_t(&[m, k], seed);
+            let b = rand_t(&[k, n], seed + 100);
+            let at = rand_t(&[k, m], seed + 200);
+            let bt = rand_t(&[n, k], seed + 300);
+            for t in [2usize, 3, 5] {
+                assert_eq!(
+                    a.matmul_threads(&b, t),
+                    reference::matmul(&a, &b),
+                    "matmul {m}x{k}x{n} t={t}"
+                );
+                assert_eq!(
+                    at.matmul_tn_threads(&b, t),
+                    reference::matmul_tn(&at, &b),
+                    "matmul_tn {m}x{k}x{n} t={t}"
+                );
+                assert_eq!(
+                    a.matmul_nt_threads(&bt, t),
+                    reference::matmul_nt(&a, &bt),
+                    "matmul_nt {m}x{k}x{n} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_kernels_stay_serial_under_gate() {
+        // Below the flop gate the requested thread count is ignored —
+        // same bits either way (this pins the gate itself works).
+        let a = rand_t(&[3, 5], 50);
+        let b = rand_t(&[5, 7], 51);
+        assert_eq!(a.matmul_threads(&b, 8), reference::matmul(&a, &b));
+        assert_eq!(super::gate_threads(8, 3, 5, 7), 1);
+        assert_eq!(super::gate_threads(8, 128, 64, 128), 8);
+        assert_eq!(super::gate_threads(1, 128, 64, 128), 1);
     }
 
     #[test]

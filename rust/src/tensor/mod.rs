@@ -8,6 +8,7 @@
 
 pub mod linalg;
 mod ops;
+pub mod pool;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,231 @@
+//! Tiny internal thread pool for the native linear-algebra kernels — no
+//! external dependencies, deterministic numerics by construction.
+//!
+//! The blocked matmul kernels in [`super::linalg`] parallelize their
+//! *output-row* loops: each job owns a disjoint, contiguous block of
+//! output rows (writer-owned tiles), so no two threads ever touch the
+//! same element and the per-element accumulation order is exactly the
+//! serial kernel's. Parallel results are therefore **bitwise identical**
+//! to single-threaded execution for any thread count — the property the
+//! serial ≡ distributed determinism contract of `tests/dist.rs` builds
+//! on, re-pinned for the threaded kernels by `tensor::linalg` unit
+//! tests.
+//!
+//! The pool is process-global (the [`crate::tensor::Tensor`] kernel
+//! entry points have no backend handle to hang per-instance state on):
+//! [`configure`] sets the target thread count (0 = auto), worker threads
+//! are spawned lazily on first parallel dispatch and then reused for the
+//! life of the process. Because thread count can never change numerics,
+//! the global knob is a pure performance setting — safe to flip between
+//! (or even during) runs.
+//!
+//! Dispatch is a scoped fork/join: [`run`] ships all but the first job
+//! to the workers, executes the first job on the calling thread, and
+//! blocks until every job has signalled completion — which is what makes
+//! it sound to smuggle non-`'static` borrows across the channel (the
+//! borrows cannot outlive the call). Worker panics are caught and
+//! re-raised on the caller after the join, so a failed job can never
+//! leave a half-written tile unobserved.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread;
+
+/// A type-erased unit of work shipped to a pool worker.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Desired kernel thread count (resolved; >= 1). Default 1 = serial.
+static CONFIGURED: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the kernel thread count: `0` = auto (one per available core,
+/// capped at 8), `1` = serial (the default), `n` = exactly `n` threads.
+/// Process-global; thread count never changes numerics (see the module
+/// docs), so this is purely a performance knob.
+pub fn configure(threads: usize) {
+    let t = if threads == 0 { auto_threads() } else { threads };
+    CONFIGURED.store(t.max(1), Ordering::Relaxed);
+}
+
+/// The currently configured kernel thread count (>= 1).
+pub fn threads() -> usize {
+    CONFIGURED.load(Ordering::Relaxed).max(1)
+}
+
+/// Auto thread count: available parallelism, capped at 8 (the kernels
+/// here are cache-bound; more threads than memory channels buy little).
+fn auto_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// The lazily-created global pool: one injector queue, workers share the
+/// receiver behind a mutex (job granularity dwarfs the lock).
+struct Pool {
+    tx: mpsc::Sender<Job>,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    spawned: Mutex<usize>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::channel::<Job>();
+        Pool { tx, rx: Arc::new(Mutex::new(rx)), spawned: Mutex::new(0) }
+    })
+}
+
+/// Grow the worker set to at least `n` threads (never shrinks; idle
+/// workers block on the shared queue and cost nothing but memory).
+fn ensure_workers(p: &'static Pool, n: usize) {
+    let mut spawned = p.spawned.lock().expect("pool spawn lock");
+    while *spawned < n {
+        let rx = Arc::clone(&p.rx);
+        thread::Builder::new()
+            .name(format!("d2ft-pool-{spawned}"))
+            .spawn(move || loop {
+                // Hold the lock only for the blocking recv; the job runs
+                // unlocked so other workers can pick up the next one.
+                let job = { rx.lock().expect("pool recv lock").recv() };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break, // channel closed: process exit
+                }
+            })
+            .expect("spawning kernel pool worker");
+        *spawned += 1;
+    }
+}
+
+/// Execute `jobs` concurrently and block until all of them finish: jobs
+/// `1..` go to the pool workers, job `0` runs on the calling thread.
+/// Jobs may borrow the caller's stack (they cannot outlive this call).
+/// If any job panics, the panic is re-raised here after the join.
+pub fn run(jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    let mut iter = jobs.into_iter();
+    let first = iter.next().expect("n >= 1");
+    if n == 1 {
+        first();
+        return;
+    }
+    let p = pool();
+    ensure_workers(p, (n - 1).min(threads().saturating_sub(1)).max(1));
+    // Completion barrier: every dispatched job reports (panicked?) here.
+    let (done_tx, done_rx) = mpsc::channel::<bool>();
+    let mut dispatched = 0usize;
+    for job in iter {
+        // SAFETY: the job may borrow data from the caller's stack (its
+        // real lifetime is the duration of this call). We block on the
+        // completion barrier below before returning — and before
+        // propagating any caller-side panic — so the borrow can never
+        // outlive its referent. The transmute only erases the lifetime;
+        // the layout of `Box<dyn FnOnce() + Send>` does not depend on it.
+        let job: Job = unsafe { std::mem::transmute(job) };
+        let done = done_tx.clone();
+        p.tx.send(Box::new(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            let _ = done.send(r.is_err());
+        }))
+        .expect("kernel pool queue closed");
+        dispatched += 1;
+    }
+    // Run the first job here — the caller is a perfectly good worker.
+    let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(first));
+    let mut worker_panicked = false;
+    for _ in 0..dispatched {
+        worker_panicked |= done_rx.recv().expect("kernel pool worker lost");
+    }
+    if let Err(payload) = caller {
+        std::panic::resume_unwind(payload);
+    }
+    assert!(!worker_panicked, "parallel kernel job panicked");
+}
+
+/// Split `0..n` into at most `t` contiguous ranges of at least
+/// `min_chunk` items each (a single range when chunking isn't worth it).
+/// Pure function of its arguments — callers snapshot [`threads`] once so
+/// a concurrent [`configure`] cannot tear one dispatch.
+pub fn ranges(n: usize, min_chunk: usize, t: usize) -> Vec<(usize, usize)> {
+    let t = t.min(n / min_chunk.max(1)).max(1);
+    if t <= 1 || n == 0 {
+        return vec![(0, n)];
+    }
+    let base = n / t;
+    let rem = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut lo = 0;
+    for i in 0..t {
+        let hi = lo + base + usize::from(i < rem);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_and_respect_min_chunk() {
+        let r = ranges(100, 8, 4);
+        assert!(!r.is_empty() && r.len() <= 4);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r.last().unwrap().1, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "contiguous");
+        }
+        for &(lo, hi) in &r {
+            assert!(hi - lo >= 8, "chunk below min: {lo}..{hi}");
+        }
+        // Tiny inputs and t = 1 collapse to one range.
+        assert_eq!(ranges(5, 8, 4), vec![(0, 5)]);
+        assert_eq!(ranges(100, 8, 1), vec![(0, 100)]);
+        // 13 items over 4 chunks: remainders spread over the first ones.
+        let r = ranges(13, 1, 4);
+        assert_eq!(r, vec![(0, 4), (4, 7), (7, 10), (10, 13)]);
+    }
+
+    #[test]
+    fn run_executes_every_job_with_borrows() {
+        let mut outs = vec![0u64; 6];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = outs
+                .chunks_mut(2)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    Box::new(move || {
+                        for (j, c) in chunk.iter_mut().enumerate() {
+                            *c = (i * 2 + j) as u64 + 1;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run(jobs);
+        }
+        assert_eq!(outs, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn configure_always_resolves_to_at_least_one() {
+        // `0` means auto; whatever races with this test, the resolved
+        // value is never below 1. (Thread count cannot change numerics,
+        // so no test asserts an exact global value.)
+        configure(0);
+        assert!(threads() >= 1);
+        configure(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel kernel job panicked")]
+    fn worker_panic_propagates() {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+        ];
+        run(jobs);
+    }
+}

@@ -27,6 +27,24 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Busy-wait for `ms` milliseconds — simulated *compute*: the cluster
+/// engine spins each modeled device for its modeled duration, because
+/// compute genuinely occupies a core. Deliberately NOT used by the dist
+/// runtime's simulated NIC (`dist::trainer::sim_wire_delay`), which
+/// sleeps instead: a DMA transfer does not burn CPU, and spinning there
+/// would steal cores from the compute threads and fake the
+/// comm/compute-overlap measurement.
+pub fn spin_for_ms(ms: f64) {
+    if ms <= 0.0 {
+        return;
+    }
+    let target = Duration::from_secs_f64(ms / 1e3);
+    let t0 = Instant::now();
+    while t0.elapsed() < target {
+        std::hint::spin_loop();
+    }
+}
+
 impl Bench {
     /// Named bench case with default budget (2 s / 10k iters).
     pub fn new(name: &str) -> Self {
@@ -143,6 +161,16 @@ mod tests {
         let s = b.stats();
         assert!(s.iters > 0);
         assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn spin_respects_lower_bound() {
+        let t0 = Instant::now();
+        spin_for_ms(2.0);
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+        // Non-positive durations return immediately.
+        spin_for_ms(0.0);
+        spin_for_ms(-1.0);
     }
 
     #[test]

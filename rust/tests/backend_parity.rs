@@ -96,6 +96,7 @@ fn loss_trajectories_track_from_shared_init() {
         lora_ranks: vec![],
         lora_standard_rank: 0,
         init_seed: 0,
+        threads: 1,
     };
     let mut native_be = NativeBackend::new(&spec, 0, manifest.micro_batch, 17);
     native_be

@@ -5,7 +5,10 @@
 //!    accuracy, and final parameters as the serial
 //!    `coordinator::Trainer` under `UpdateMode::BatchAccum`, in both
 //!    exchange topologies. Real threads, real gradient bytes, zero
-//!    numeric divergence.
+//!    numeric divergence — with the comm/compute pipeline **on** (the
+//!    default) and the parallel matmul kernels engaged (the spec below
+//!    sets `threads: 2`), as well as on the serialized `--no-overlap`
+//!    path and with workers that receive no tasks at all.
 //! 2. **Masked wire format** — encode/decode round-trips the dense
 //!    gradient bit-for-bit under random schedules (the freeze contract
 //!    makes dropping masked slices lossless), and byte counts shrink
@@ -42,6 +45,9 @@ fn small_spec() -> NativeSpec {
         lora_ranks: vec![2],
         lora_standard_rank: 2,
         init_seed: 0xD157,
+        // Acceptance: the bitwise serial ≡ dist contract must hold with
+        // the parallel kernels engaged (threads > 1) and overlap on.
+        threads: 2,
     }
 }
 
@@ -106,7 +112,7 @@ fn dist_trainer_matches_serial_trainer_bitwise() {
 fn param_server_matches_allreduce_bitwise() {
     let provider = NativeProvider::new(small_spec());
     let run = |exchange| {
-        let dcfg = DistConfig { train: cfg(SchedulerKind::D2ft), workers: 2, exchange };
+        let dcfg = DistConfig { exchange, ..DistConfig::new(cfg(SchedulerKind::D2ft), 2) };
         let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
         let r = dt.run().unwrap();
         (r, dt.backend().param("b01_wo").unwrap())
@@ -122,6 +128,58 @@ fn param_server_matches_allreduce_bitwise() {
     // PS ships dense deltas downlink; masked allreduce ships the union
     // mask, which can never be larger.
     assert!(ra.wire.down_bytes <= rp.wire.down_bytes);
+}
+
+#[test]
+fn serialized_uplink_matches_pipelined_bitwise() {
+    // `--no-overlap` (the serialized reference path) and the default
+    // pipelined path must produce identical trajectories — overlap only
+    // moves *when* bytes travel, never which bytes or their reduction
+    // order. Both must equal the serial trainer.
+    let provider = NativeProvider::new(small_spec());
+    let mut serial = Trainer::new(&provider, cfg(SchedulerKind::D2ft)).unwrap();
+    let rs = serial.run().unwrap();
+    for overlap in [true, false] {
+        let dcfg = DistConfig { overlap, ..DistConfig::new(cfg(SchedulerKind::D2ft), 4) };
+        let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
+        let rd = dt.run().unwrap();
+        assert_eq!(
+            bits(&rs.loss_curve),
+            bits(&rd.train.loss_curve),
+            "overlap={overlap}: loss trajectory must stay bitwise serial"
+        );
+        assert_eq!(
+            serial.backend().param("z_head_w").unwrap(),
+            dt.backend().param("z_head_w").unwrap(),
+            "overlap={overlap}: classifier bits"
+        );
+    }
+}
+
+#[test]
+fn param_server_with_idle_worker_stays_bitwise_serial() {
+    // 7 workers, 5 micro-batches per batch: at least two workers get no
+    // task — a worker that contributes zero trainable slices to every
+    // exchange. The barrier must not wait on it, the parameter-server
+    // downlink must still reach it, and the trajectory must stay
+    // bitwise identical to the serial trainer.
+    let provider = NativeProvider::new(small_spec());
+    let mut serial = Trainer::new(&provider, cfg(SchedulerKind::D2ft)).unwrap();
+    let rs = serial.run().unwrap();
+    let dcfg = DistConfig {
+        exchange: ExchangeMode::ParamServer,
+        ..DistConfig::new(cfg(SchedulerKind::D2ft), 7)
+    };
+    let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
+    let rd = dt.run().unwrap();
+    assert_eq!(rd.n_workers, 7);
+    assert_eq!(bits(&rs.loss_curve), bits(&rd.train.loss_curve));
+    assert_eq!(
+        serial.backend().param("b00_wqkv").unwrap(),
+        dt.backend().param("b00_wqkv").unwrap()
+    );
+    // The downlink broadcast reaches every worker, busy or idle.
+    assert_eq!(rd.wire.down_msgs % 7, 0, "one broadcast per worker per batch");
 }
 
 #[test]

@@ -34,6 +34,7 @@ fn spec() -> NativeSpec {
         lora_ranks: vec![1, 2, 4],
         lora_standard_rank: 2,
         init_seed: 0xD2F7,
+        threads: 1,
     }
 }
 
