@@ -5,9 +5,12 @@
 //!
 //!     cargo run --release --example dist_train
 //!     cargo run --release --example dist_train -- --workers 8 --exchange ps
+//!     cargo run --release --example dist_train -- --transport tcp
 //!
 //! Flags: --workers K --exchange allreduce|ps --batches N
 //!        --model mini|small --threads T --no-overlap
+//!        --transport channel|tcp (tcp = real loopback sockets;
+//!        bitwise identical to the in-process channel path)
 
 #[cfg(not(feature = "native"))]
 fn main() {
@@ -19,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     use d2ft::backend::native::{NativeProvider, NativeSpec};
     use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
     use d2ft::data::SyntheticKind;
-    use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode};
+    use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode, SpawnMode, TransportKind};
     use d2ft::metrics::{fmt_bytes, pct};
     use d2ft::schedule::Budget;
     use d2ft::util::cli::Cli;
@@ -28,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let args = Cli::new("dist_train", "D2FT distributed trainer demo")
         .flag("workers", "4", "worker replica threads")
         .flag("exchange", "allreduce", "allreduce | ps")
+        .flag("transport", "channel", "channel (in-process) | tcp (loopback sockets)")
         .flag("batches", "6", "fine-tuning batches")
         .flag("model", "mini", "native model preset: mini | small")
         .flag("threads", "1", "matmul kernel threads (0 = auto)")
@@ -56,9 +60,19 @@ fn main() -> anyhow::Result<()> {
     let rs = serial.run()?;
 
     // Distributed run: K live replicas, masked-gradient exchange,
-    // pipelined encode+upload unless --no-overlap.
+    // pipelined encode+upload unless --no-overlap. With --transport
+    // tcp the workers connect over real loopback sockets (as threads —
+    // this example binary has no worker subcommand to fork; `repro
+    // train --dist --transport tcp` demonstrates the subprocess path).
+    let transport = match TransportKind::parse(args.get("transport"))? {
+        TransportKind::Tcp { listen, .. } => {
+            TransportKind::Tcp { listen, spawn: SpawnMode::Threads }
+        }
+        kind => kind,
+    };
     let dcfg = DistConfig {
         exchange: ExchangeMode::parse(args.get("exchange"))?,
+        transport,
         overlap: !args.get_bool("no-overlap"),
         ..DistConfig::new(cfg, workers)
     };
@@ -98,6 +112,13 @@ fn main() -> anyhow::Result<()> {
         rd.wire.down_msgs,
         rd.train.straggler_ms,
         rd.mean_step_ms
+    );
+    println!(
+        "transport {}: {} out / {} in across {} frames",
+        rd.transport,
+        fmt_bytes(rd.socket.bytes_sent),
+        fmt_bytes(rd.socket.bytes_recv),
+        rd.socket.frames_sent + rd.socket.frames_recv
     );
     println!("dist_train OK");
     Ok(())

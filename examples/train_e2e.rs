@@ -59,8 +59,12 @@ fn main() -> anyhow::Result<()> {
         update: UpdateMode::PerMicro,
     };
 
-    println!("== D2FT ({}) @ compute {} / comm {} ==",
-             provider.label(), pct(budget.compute_fraction(0.4)), pct(budget.comm_fraction()));
+    println!(
+        "== D2FT ({}) @ compute {} / comm {} ==",
+        provider.label(),
+        pct(budget.compute_fraction(0.4)),
+        pct(budget.comm_fraction())
+    );
     let mut trainer = Trainer::new(provider.as_ref(), base.clone())?;
     let r = trainer.run()?;
 
@@ -79,9 +83,16 @@ fn main() -> anyhow::Result<()> {
             println!("  batch {b:>4}  top-1 {}", pct(*top1));
         }
     }
-    println!("\nD2FT final: top-1 {} | train loss {:.4} | compute {} | comm {} | workload var {:.3} | {:.0}s",
-             pct(r.test_top1), r.final_train_loss, pct(r.compute_fraction),
-             pct(r.comm_fraction), r.workload_variance, r.wall_s);
+    println!(
+        "\nD2FT final: top-1 {} | train loss {:.4} | compute {} | comm {} | workload var \
+         {:.3} | {:.0}s",
+        pct(r.test_top1),
+        r.final_train_loss,
+        pct(r.compute_fraction),
+        pct(r.comm_fraction),
+        r.workload_variance,
+        r.wall_s
+    );
 
     if !args.get_bool("skip-standard") {
         println!("\n== Standard fine-tuning (100% budget) ==");
@@ -92,10 +103,17 @@ fn main() -> anyhow::Result<()> {
         };
         let mut trainer = Trainer::new(provider.as_ref(), std_cfg)?;
         let rs = trainer.run()?;
-        println!("Standard final: top-1 {} | train loss {:.4} | {:.0}s",
-                 pct(rs.test_top1), rs.final_train_loss, rs.wall_s);
-        println!("\npaper shape check: D2FT within a few points of Standard at ~2/3 cost ({} vs {})",
-                 pct(r.test_top1), pct(rs.test_top1));
+        println!(
+            "Standard final: top-1 {} | train loss {:.4} | {:.0}s",
+            pct(rs.test_top1),
+            rs.final_train_loss,
+            rs.wall_s
+        );
+        println!(
+            "\npaper shape check: D2FT within a few points of Standard at ~2/3 cost ({} vs {})",
+            pct(r.test_top1),
+            pct(rs.test_top1)
+        );
     }
     Ok(())
 }

@@ -1,9 +1,11 @@
 //! Bench: the distributed data-parallel trainer — **measured** gradient
 //! bytes on the wire for the paper's 50%-communication budget,
 //! pipelined-vs-serialized makespan (comm/compute overlap), the kernel
-//! thread sweep, and the measured-time calibration loop. Artifact-free;
-//! writes `BENCH_dist_step.json` (compared against the committed
-//! baseline `benches/BENCH_dist_step.baseline.json` by CI's
+//! thread sweep, the measured-time calibration loop, and the real
+//! socket bytes of the same run over the TCP transport (reported next
+//! to the modeled bytes, with a bitwise cross-transport check).
+//! Artifact-free; writes `BENCH_dist_step.json` (compared against the
+//! committed baseline `benches/BENCH_dist_step.baseline.json` by CI's
 //! bench-regression gate).
 //!
 //!     cargo bench --bench dist_step
@@ -29,7 +31,9 @@ fn main() {
     use d2ft::backend::Backend;
     use d2ft::coordinator::{SchedulerKind, TrainerConfig, UpdateMode};
     use d2ft::data::{DatasetSpec, SyntheticKind};
-    use d2ft::dist::{DistConfig, DistReport, DistTrainer, ExchangeMode, GradCodec};
+    use d2ft::dist::{
+        DistConfig, DistReport, DistTrainer, ExchangeMode, GradCodec, SpawnMode, TransportKind,
+    };
     use d2ft::metrics::{fmt_bytes, pct};
     use d2ft::schedule::{Budget, MaskPair};
     use d2ft::util::json::{arr, num, obj, s};
@@ -97,6 +101,48 @@ fn main() {
         "downlink: allreduce {} vs param-server {}",
         fmt_bytes(d2ft.wire.down_bytes),
         fmt_bytes(ps.wire.down_bytes)
+    );
+
+    // --- tcp transport: real socket bytes next to modeled bytes ------------
+    // The same 50%-budget run over loopback TCP (worker threads, real
+    // sockets): bitwise identical numerics, and the transport counters
+    // report the bytes that actually crossed the socket — gradient
+    // payloads plus framing, job dispatch, and broadcasts — next to the
+    // engine's modeled figure.
+    let tcp = {
+        let dcfg = DistConfig {
+            transport: TransportKind::Tcp {
+                listen: "127.0.0.1:0".to_string(),
+                spawn: SpawnMode::Threads,
+            },
+            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+        };
+        DistTrainer::new(&provider, dcfg)
+            .expect("building tcp trainer")
+            .run()
+            .expect("tcp run")
+    };
+    let curve_bits = |r: &DistReport| -> Vec<u32> {
+        r.train.loss_curve.iter().map(|x| x.to_bits()).collect()
+    };
+    assert_eq!(
+        curve_bits(&d2ft),
+        curve_bits(&tcp),
+        "tcp transport must be bitwise identical to the channel transport"
+    );
+    assert_eq!(tcp.wire.up_bytes, d2ft.wire.up_bytes, "same gradient bytes on either pipe");
+    assert!(
+        tcp.socket.bytes_recv >= tcp.wire.up_bytes,
+        "socket traffic must cover every gradient byte"
+    );
+    println!(
+        "tcp socket bytes: {} in / {} out ({} frames) vs {} gradient uplink, \
+         {} modeled",
+        fmt_bytes(tcp.socket.bytes_recv),
+        fmt_bytes(tcp.socket.bytes_sent),
+        tcp.socket.frames_sent + tcp.socket.frames_recv,
+        fmt_bytes(tcp.wire.up_bytes),
+        fmt_bytes(tcp.modeled_wire_bytes)
     );
 
     // --- comm/compute overlap: pipelined vs serialized ---------------------
@@ -281,6 +327,19 @@ fn main() {
         ("d2ft_50pct", wire(&d2ft)),
         ("full_schedule", wire(&full)),
         ("param_server", wire(&ps)),
+        (
+            // Real socket traffic of the 50%-budget run over TCP,
+            // reported next to the modeled figure (deterministic given
+            // the seeds, unlike the timing metrics).
+            "tcp_socket",
+            obj(vec![
+                ("bytes_recv", num(tcp.socket.bytes_recv as f64)),
+                ("bytes_sent", num(tcp.socket.bytes_sent as f64)),
+                ("frames", num((tcp.socket.frames_sent + tcp.socket.frames_recv) as f64)),
+                ("grad_up_bytes", num(tcp.wire.up_bytes as f64)),
+                ("modeled_wire_bytes", num(tcp.modeled_wire_bytes as f64)),
+            ]),
+        ),
         ("grad_bytes_saved_vs_full", num(savings)),
         // Host normalization anchor for the CI regression gate:
         // per-task times divide out absolute host speed.

@@ -8,7 +8,9 @@
 
 #[cfg(not(feature = "xla"))]
 fn main() {
-    eprintln!("e2e_step bench requires --features xla; see benches/native_step.rs for the native path");
+    eprintln!(
+        "e2e_step bench requires --features xla; see benches/native_step.rs for the native path"
+    );
 }
 
 #[cfg(feature = "xla")]

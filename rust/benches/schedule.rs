@@ -47,19 +47,37 @@ fn main() {
     let t = Duration::from_millis(800);
 
     let mut d2ft = BiLevel::new(ScoreConfig::default(), CostModel::paper());
-    Bench::new("d2ft-bilevel-72x5").target_time(t).run(|| black_box(d2ft.schedule(&b5, &budget5))).report();
-    Bench::new("d2ft-bilevel-72x20").target_time(t).run(|| black_box(d2ft.schedule(&b20, &budget20))).report();
+    Bench::new("d2ft-bilevel-72x5")
+        .target_time(t)
+        .run(|| black_box(d2ft.schedule(&b5, &budget5)))
+        .report();
+    Bench::new("d2ft-bilevel-72x20")
+        .target_time(t)
+        .run(|| black_box(d2ft.schedule(&b20, &budget20)))
+        .report();
 
     let mut scaler = ScalerSched::new(Lambda::Max, ScoreConfig::default(), CostModel::paper());
-    Bench::new("scaler-max-72x5").target_time(t).run(|| black_box(scaler.schedule(&b5, &budget5))).report();
+    Bench::new("scaler-max-72x5")
+        .target_time(t)
+        .run(|| black_box(scaler.schedule(&b5, &budget5)))
+        .report();
 
     let mut random = RandomSched::new(3);
-    Bench::new("random-72x5").target_time(t).run(|| black_box(random.schedule(&b5, &budget5))).report();
+    Bench::new("random-72x5")
+        .target_time(t)
+        .run(|| black_box(random.schedule(&b5, &budget5)))
+        .report();
 
     let mut dp = DPruning::magnitude();
-    Bench::new("dpruning-m-72x5").target_time(t).run(|| black_box(dp.schedule(&b5, &budget5))).report();
+    Bench::new("dpruning-m-72x5")
+        .target_time(t)
+        .run(|| black_box(dp.schedule(&b5, &budget5)))
+        .report();
 
     // Schedule-to-mask lowering (runs per micro-batch in the hot loop).
     let table = d2ft.schedule(&b5, &budget5);
-    Bench::new("masks-for-micro-72").target_time(t).run(|| black_box(table.masks_for_micro(&part, 2))).report();
+    Bench::new("masks-for-micro-72")
+        .target_time(t)
+        .run(|| black_box(table.masks_for_micro(&part, 2)))
+        .report();
 }

@@ -5,7 +5,9 @@
 
 #[cfg(not(feature = "xla"))]
 fn main() {
-    eprintln!("table4 bench requires --features xla; run `repro experiment table4` for the native path");
+    eprintln!(
+        "table4 bench requires --features xla; run `repro experiment table4` for the native path"
+    );
 }
 
 #[cfg(feature = "xla")]

@@ -458,7 +458,12 @@ impl NativeBackend {
     /// Build a backend: deterministic parameter init from
     /// `(spec.init_seed, seed)`, LoRA adapters at `lora_rank` (0 = full
     /// fine-tuning), zero momentum.
-    pub fn new(spec: &NativeSpec, lora_rank: usize, micro_batch: usize, seed: u64) -> NativeBackend {
+    pub fn new(
+        spec: &NativeSpec,
+        lora_rank: usize,
+        micro_batch: usize,
+        seed: u64,
+    ) -> NativeBackend {
         // The kernel pool is process-global (tensor ops carry no backend
         // handle); the knob is numerics-neutral, so "last opened backend
         // wins" is safe. See `tensor::pool`.

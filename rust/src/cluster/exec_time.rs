@@ -41,13 +41,24 @@ impl ExecTimeModel {
     /// [`ExecTimeModel::calibrated`] so the modeled makespan tracks
     /// *this host's* hardware instead of the paper's V100.
     pub fn scaled(&self, factor: f64) -> ExecTimeModel {
-        assert!(
-            factor.is_finite() && factor > 0.0,
-            "calibration factor must be positive and finite, got {factor}"
-        );
+        self.scaled_per_op(factor, factor)
+    }
+
+    /// Rescale the `p_f` and `p_o` tables by *separate* factors — the
+    /// op-split calibration: one host (or batch shape) can be slower on
+    /// full fwd+bwd passes than the paper's fwd/full ratio predicts,
+    /// and a uniform factor cannot express that. [`OpCalibrator`]
+    /// derives both factors from measured per-task times.
+    pub fn scaled_per_op(&self, full_factor: f64, fwd_factor: f64) -> ExecTimeModel {
+        for (name, f) in [("p_f", full_factor), ("p_o", fwd_factor)] {
+            assert!(
+                f.is_finite() && f > 0.0,
+                "calibration factor must be positive and finite, got {f} for {name}"
+            );
+        }
         ExecTimeModel::calibrated(
-            self.full_ms.iter().map(|&t| t * factor).collect(),
-            self.fwd_ms.iter().map(|&t| t * factor).collect(),
+            self.full_ms.iter().map(|&t| t * full_factor).collect(),
+            self.fwd_ms.iter().map(|&t| t * fwd_factor).collect(),
         )
     }
 
@@ -126,6 +137,127 @@ impl ExecTimeModel {
     /// The paper's observed forward/full ratio (≈ 0.4 across counts).
     pub fn fwd_ratio(&self, n: usize) -> f64 {
         self.time_ms(Op::ForwardOnly, n) / self.time_ms(Op::Full, n)
+    }
+
+    /// Modeled `(p_f, p_o)` time components of micro-batch `micro`
+    /// summed over every device: for each device, the marginal cost of
+    /// this micro within the device's batched row (marginals telescope,
+    /// so summing a device's micros reproduces its row total). This is
+    /// the regressor pair the op-split calibration fits measured
+    /// per-task times against.
+    pub fn micro_components(&self, table: &ScheduleTable, micro: usize) -> (f64, f64) {
+        let mut full = 0.0;
+        let mut fwd = 0.0;
+        for subnet in 0..table.n_subnets {
+            let op = table.get(subnet, micro);
+            if op == Op::Shortcut {
+                continue;
+            }
+            // This micro's 1-based rank among the device's same-op
+            // micros up to and including it.
+            let rank = (0..=micro).filter(|&j| table.get(subnet, j) == op).count();
+            match op {
+                Op::Full => full += self.marginal_ms(op, rank),
+                Op::ForwardOnly => fwd += self.marginal_ms(op, rank),
+                Op::Shortcut => {}
+            }
+        }
+        (full, fwd)
+    }
+
+    /// Modeled `(p_f total, p_o total)` of one device's schedule row —
+    /// the pieces [`ExecTimeModel::device_time_ms`] sums. Exposed so a
+    /// calibrator can re-evaluate the row (and hence the makespan)
+    /// under candidate per-op factors without rebuilding tables.
+    pub fn device_row_components(&self, table: &ScheduleTable, subnet: usize) -> (f64, f64) {
+        let nf = table.count_row(subnet, Op::Full);
+        let no = table.count_row(subnet, Op::ForwardOnly);
+        (self.time_ms(Op::Full, nf), self.time_ms(Op::ForwardOnly, no))
+    }
+}
+
+/// Least-squares fit of measured per-task times to the model's `p_f`
+/// and `p_o` components: accumulate one observation per executed task
+/// (`measured ≈ pf · full_component + po · fwd_component`), then
+/// [`OpCalibrator::solve`] the 2×2 normal equations for the two
+/// multiplicative factors. `dist::DistTrainer` feeds the result through
+/// [`ExecTimeModel::scaled_per_op`] at every epoch boundary — the
+/// per-(op) refinement of the PR 4 uniform rescale (ROADMAP follow-on).
+///
+/// Degenerate workloads — no `p_o` tasks at all, or every task carrying
+/// the same `p_f : p_o` mix (collinear regressors) — make the split
+/// unidentifiable; `solve` then returns `None` and the caller falls
+/// back to the uniform ratio.
+#[derive(Clone, Debug, Default)]
+pub struct OpCalibrator {
+    /// Normal-equation accumulators: Σff, Σfo, Σoo, Σfy, Σoy.
+    sff: f64,
+    sfo: f64,
+    soo: f64,
+    sfy: f64,
+    soy: f64,
+    n: usize,
+}
+
+impl OpCalibrator {
+    /// Fresh accumulator.
+    pub fn new() -> OpCalibrator {
+        OpCalibrator::default()
+    }
+
+    /// Record one task: modeled components `(full_ms, fwd_ms)` (from
+    /// [`ExecTimeModel::micro_components`] under the *current* tables)
+    /// against the measured wall time. Non-finite samples (a paused
+    /// host, a zero-work task) are ignored.
+    pub fn observe(&mut self, full_ms: f64, fwd_ms: f64, measured_ms: f64) {
+        if !(full_ms.is_finite() && fwd_ms.is_finite() && measured_ms.is_finite()) {
+            return;
+        }
+        self.sff += full_ms * full_ms;
+        self.sfo += full_ms * fwd_ms;
+        self.soo += fwd_ms * fwd_ms;
+        self.sfy += full_ms * measured_ms;
+        self.soy += fwd_ms * measured_ms;
+        self.n += 1;
+    }
+
+    /// Observations accumulated since the last reset.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Whether no observation has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Solve for `(pf, po)`. `None` when the system is degenerate
+    /// (fewer than 2 samples, an op with no mass, collinear mixes) or
+    /// the solution is not a pair of positive finite factors — callers
+    /// fall back to a uniform scale.
+    pub fn solve(&self) -> Option<(f64, f64)> {
+        if self.n < 2 {
+            return None;
+        }
+        let det = self.sff * self.soo - self.sfo * self.sfo;
+        // Relative conditioning guard: collinear regressors give a
+        // determinant that vanishes against the product of the
+        // diagonal terms.
+        if det <= 1e-9 * self.sff * self.soo || det <= 0.0 {
+            return None;
+        }
+        let pf = (self.soo * self.sfy - self.sfo * self.soy) / det;
+        let po = (self.sff * self.soy - self.sfo * self.sfy) / det;
+        if pf.is_finite() && po.is_finite() && pf > 0.0 && po > 0.0 {
+            Some((pf, po))
+        } else {
+            None
+        }
+    }
+
+    /// Clear the accumulators (epoch boundary).
+    pub fn reset(&mut self) {
+        *self = OpCalibrator::default();
     }
 }
 
@@ -225,6 +357,110 @@ mod tests {
     fn speed_scaling() {
         let m = ExecTimeModel::paper();
         let t = ScheduleTable::all(1, 2, Op::Full);
-        assert!((m.device_time_scaled_ms(&t, 0, 2.0) - m.device_time_ms(&t, 0) / 2.0).abs() < 1e-12);
+        let scaled = m.device_time_scaled_ms(&t, 0, 2.0);
+        assert!((scaled - m.device_time_ms(&t, 0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_per_op_scales_each_table_independently() {
+        let m = ExecTimeModel::paper();
+        let s = m.scaled_per_op(2.0, 0.5);
+        for n in 1..=6 {
+            assert!((s.time_ms(Op::Full, n) - 2.0 * m.time_ms(Op::Full, n)).abs() < 1e-9);
+            assert!(
+                (s.time_ms(Op::ForwardOnly, n) - 0.5 * m.time_ms(Op::ForwardOnly, n)).abs()
+                    < 1e-9
+            );
+        }
+        // The uniform path is the diagonal of the per-op one.
+        let u = m.scaled(1.7);
+        let d = m.scaled_per_op(1.7, 1.7);
+        assert_eq!(u.time_ms(Op::Full, 3), d.time_ms(Op::Full, 3));
+    }
+
+    /// A mixed schedule for the component helpers: device 0 runs 2 p_f
+    /// + 1 p_o, device 1 runs 3 p_o, device 2 idles.
+    fn mixed_table() -> ScheduleTable {
+        let mut t = ScheduleTable::all(3, 3, Op::Shortcut);
+        t.set(0, 0, Op::Full);
+        t.set(0, 1, Op::Full);
+        t.set(0, 2, Op::ForwardOnly);
+        for i in 0..3 {
+            t.set(1, i, Op::ForwardOnly);
+        }
+        t
+    }
+
+    #[test]
+    fn micro_components_telescope_to_device_rows() {
+        let m = ExecTimeModel::paper();
+        let t = mixed_table();
+        let mut full = 0.0;
+        let mut fwd = 0.0;
+        for i in 0..3 {
+            let (f, o) = m.micro_components(&t, i);
+            full += f;
+            fwd += o;
+        }
+        let rows: Vec<(f64, f64)> =
+            (0..3).map(|d| m.device_row_components(&t, d)).collect();
+        let row_full: f64 = rows.iter().map(|r| r.0).sum();
+        let row_fwd: f64 = rows.iter().map(|r| r.1).sum();
+        assert!((full - row_full).abs() < 1e-9, "p_f marginals must telescope");
+        assert!((fwd - row_fwd).abs() < 1e-9, "p_o marginals must telescope");
+        assert_eq!(rows[2], (0.0, 0.0), "idle device contributes nothing");
+        // Micro 0 carries device 0's first p_f and device 1's first p_o.
+        let (f0, o0) = m.micro_components(&t, 0);
+        assert_eq!(f0, m.time_ms(Op::Full, 1));
+        assert_eq!(o0, m.time_ms(Op::ForwardOnly, 1));
+    }
+
+    #[test]
+    fn op_calibrator_converges_on_a_heterogeneous_workload() {
+        // Ground truth: this "host" is 2.5x slower than the tables on
+        // p_f and 0.6x on p_o. Tasks with different p_f : p_o mixes
+        // (the heterogeneous workload) make both factors identifiable.
+        let m = ExecTimeModel::paper();
+        let t = mixed_table();
+        let (true_pf, true_po) = (2.5, 0.6);
+        let mut cal = OpCalibrator::new();
+        assert!(cal.is_empty());
+        for _ in 0..4 {
+            for i in 0..3 {
+                let (f, o) = m.micro_components(&t, i);
+                cal.observe(f, o, true_pf * f + true_po * o);
+            }
+        }
+        assert_eq!(cal.len(), 12);
+        let (pf, po) = cal.solve().expect("well-conditioned system must solve");
+        assert!((pf - true_pf).abs() < 1e-6, "p_f factor: got {pf}");
+        assert!((po - true_po).abs() < 1e-6, "p_o factor: got {po}");
+        cal.reset();
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn op_calibrator_rejects_degenerate_systems() {
+        // All-p_f workload: the p_o column is empty — unidentifiable.
+        let mut cal = OpCalibrator::new();
+        for i in 1..6 {
+            cal.observe(i as f64, 0.0, 2.0 * i as f64);
+        }
+        assert!(cal.solve().is_none(), "no p_o mass must fall back to uniform");
+        // Collinear mixes: every task has the same p_f : p_o ratio.
+        let mut cal = OpCalibrator::new();
+        for i in 1..6 {
+            let s = i as f64;
+            cal.observe(2.0 * s, 1.0 * s, 5.0 * s);
+        }
+        assert!(cal.solve().is_none(), "collinear mixes must fall back to uniform");
+        // Too few samples.
+        let mut cal = OpCalibrator::new();
+        cal.observe(1.0, 2.0, 3.0);
+        assert!(cal.solve().is_none());
+        // Non-finite observations are ignored outright.
+        let mut cal = OpCalibrator::new();
+        cal.observe(f64::NAN, 1.0, 1.0);
+        assert!(cal.is_empty());
     }
 }

@@ -25,6 +25,6 @@ pub use engine::{
     run_synthetic, DeviceReport, Engine, EngineConfig, ExecMode, StepReport,
     SyntheticReport, SyntheticRunConfig,
 };
-pub use exec_time::ExecTimeModel;
+pub use exec_time::{ExecTimeModel, OpCalibrator};
 pub use hetero::HeteroSpec;
 pub use workload::WorkloadTracker;

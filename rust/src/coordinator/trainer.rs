@@ -228,10 +228,19 @@ pub struct TrainReport {
     pub wall_s: f64,
     /// Batches actually executed.
     pub batches: usize,
-    /// Cumulative factor the modeled exec-time tables were rescaled by
-    /// from measured times (`dist` calibration loop; 1.0 = the paper's
-    /// uncalibrated V100 table, which the serial trainer always uses).
+    /// Overall cumulative rescale of the modeled exec-time tables from
+    /// measured times — the geometric mean of the per-op factors below
+    /// (`dist` calibration loop; 1.0 = the paper's uncalibrated V100
+    /// table, which the serial trainer always uses).
     pub calib_scale: f64,
+    /// Cumulative rescale of the `p_f` (full fwd+bwd) time table. The
+    /// dist calibration solves `p_f` and `p_o` factors separately from
+    /// measured per-task times ([`crate::cluster::OpCalibrator`]), so a
+    /// host whose fwd/full cost ratio differs from the paper's V100 is
+    /// tracked per op instead of averaged away.
+    pub calib_scale_full: f64,
+    /// Cumulative rescale of the `p_o` (forward-only) time table.
+    pub calib_scale_fwd: f64,
     /// Epoch-boundary calibrations performed (0 = never calibrated).
     pub calib_epochs: usize,
     /// Mean modeled-vs-measured makespan drift
@@ -629,6 +638,8 @@ impl<'a> Trainer<'a> {
             // uncalibrated baseline the dist runtime's measured loop is
             // compared against.
             calib_scale: 1.0,
+            calib_scale_full: 1.0,
+            calib_scale_fwd: 1.0,
             calib_epochs: 0,
             makespan_drift: 0.0,
         })

@@ -55,7 +55,11 @@ pub fn load_cifar10_bin(dir: &Path, files: &[&str], out_img: usize) -> Result<Da
 /// Probe for the conventional directory layout.
 pub fn cifar10_dir_if_present() -> Option<std::path::PathBuf> {
     let candidates = ["data/cifar-10-batches-bin", "cifar-10-batches-bin"];
-    candidates.iter().map(Path::new).find(|p| p.join("data_batch_1.bin").exists()).map(|p| p.to_path_buf())
+    candidates
+        .iter()
+        .map(Path::new)
+        .find(|p| p.join("data_batch_1.bin").exists())
+        .map(|p| p.to_path_buf())
 }
 
 #[cfg(test)]

@@ -191,7 +191,14 @@ mod tests {
     use super::*;
 
     fn spec() -> DatasetSpec {
-        DatasetSpec { kind: SyntheticKind::Cifar10Like, train_size: 40, img: 16, classes: 4, noise: 0.3, seed: 9 }
+        DatasetSpec {
+            kind: SyntheticKind::Cifar10Like,
+            train_size: 40,
+            img: 16,
+            classes: 4,
+            noise: 0.3,
+            seed: 9,
+        }
     }
 
     #[test]
@@ -253,7 +260,8 @@ mod tests {
     #[test]
     fn pretrain_universe_differs() {
         let ft = DatasetSpec { kind: SyntheticKind::Cifar10Like, ..spec() }.generate("train");
-        let pt = DatasetSpec { kind: SyntheticKind::Pretrain, classes: 4, ..spec() }.generate("train");
+        let pt = DatasetSpec { kind: SyntheticKind::Pretrain, classes: 4, ..spec() }
+            .generate("train");
         assert_ne!(ft.images, pt.images);
     }
 }

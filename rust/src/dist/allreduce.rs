@@ -54,8 +54,12 @@ impl ExchangeMode {
 }
 
 /// Barrier + fixed-order reduction over one batch's gradient messages.
+///
+/// Slots hold whole transport frames plus the offset where the codec
+/// message starts, so the aggregator reduces straight out of the
+/// received frame — no copy between the socket and the reduction.
 pub struct OrderedReducer {
-    slots: Vec<Option<Vec<u8>>>,
+    slots: Vec<Option<(Vec<u8>, usize)>>,
 }
 
 impl OrderedReducer {
@@ -64,14 +68,20 @@ impl OrderedReducer {
         OrderedReducer { slots: vec![None; n_micro] }
     }
 
-    /// Deposit micro-batch `micro`'s encoded gradient message.
-    pub fn push(&mut self, micro: usize, bytes: Vec<u8>) -> Result<()> {
+    /// Deposit micro-batch `micro`'s gradient message: the codec bytes
+    /// start at `grad_off` within `frame` (0 for a bare message).
+    pub fn push(&mut self, micro: usize, frame: Vec<u8>, grad_off: usize) -> Result<()> {
         anyhow::ensure!(micro < self.slots.len(), "micro {micro} out of range");
         anyhow::ensure!(
             self.slots[micro].is_none(),
             "duplicate gradient message for micro {micro}"
         );
-        self.slots[micro] = Some(bytes);
+        anyhow::ensure!(
+            grad_off <= frame.len(),
+            "gradient offset {grad_off} beyond the {}-byte frame",
+            frame.len()
+        );
+        self.slots[micro] = Some((frame, grad_off));
         Ok(())
     }
 
@@ -93,8 +103,8 @@ impl OrderedReducer {
         anyhow::ensure!(self.is_complete(), "reduce before barrier completion");
         anyhow::ensure!(masks.len() == self.slots.len(), "one mask pair per micro");
         for (i, slot) in self.slots.iter().enumerate() {
-            let bytes = slot.as_ref().unwrap();
-            let micro = codec.decode_add(bytes, &masks[i], acc)?;
+            let (frame, off) = slot.as_ref().unwrap();
+            let micro = codec.decode_add(&frame[*off..], &masks[i], acc)?;
             anyhow::ensure!(micro == i, "message for micro {micro} in slot {i}");
         }
         let scale = 1.0 / self.slots.len() as f32;
@@ -104,12 +114,12 @@ impl OrderedReducer {
         Ok(())
     }
 
-    /// Consume the reducer and hand back every deposited message buffer
+    /// Consume the reducer and hand back every deposited frame buffer
     /// (ascending micro order) so the aggregator can recycle them into
     /// the encode-buffer pool ([`super::grads::BufPool`]) — the second
     /// half of the zero-allocation steady state.
     pub fn into_blobs(self) -> Vec<Vec<u8>> {
-        self.slots.into_iter().flatten().collect()
+        self.slots.into_iter().flatten().map(|(frame, _)| frame).collect()
     }
 }
 
@@ -179,7 +189,7 @@ mod tests {
         // Deposit out of arrival order on purpose: 2, 0, 1.
         let mut reducer = OrderedReducer::new(3);
         for &i in &[2usize, 0, 1] {
-            reducer.push(i, codec.encode(i, &masks[i], &per_micro[i])).unwrap();
+            reducer.push(i, codec.encode(i, &masks[i], &per_micro[i]), 0).unwrap();
         }
         assert!(reducer.is_complete());
         let mut reduced = be.zeros_like_params();
@@ -243,7 +253,7 @@ mod tests {
         for (name, order) in orders {
             let mut reducer = OrderedReducer::new(n);
             for &i in &order {
-                reducer.push(i, codec.encode(i, &masks[i], &per_micro[i])).unwrap();
+                reducer.push(i, codec.encode(i, &masks[i], &per_micro[i]), 0).unwrap();
             }
             assert!(reducer.is_complete(), "{name}");
             let mut reduced = be.zeros_like_params();
@@ -261,11 +271,11 @@ mod tests {
     #[test]
     fn into_blobs_returns_every_message_in_micro_order() {
         let mut r = OrderedReducer::new(3);
-        r.push(2, vec![2, 2]).unwrap();
-        r.push(0, vec![0]).unwrap();
-        r.push(1, vec![1; 3]).unwrap();
+        r.push(2, vec![2, 2], 0).unwrap();
+        r.push(0, vec![0], 0).unwrap();
+        r.push(1, vec![9, 1, 1, 1], 1).unwrap();
         let blobs = r.into_blobs();
-        assert_eq!(blobs, vec![vec![0], vec![1; 3], vec![2, 2]]);
+        assert_eq!(blobs, vec![vec![0], vec![9, 1, 1, 1], vec![2, 2]]);
     }
 
     #[test]
@@ -273,9 +283,10 @@ mod tests {
         let be = backend();
         let codec = GradCodec::new(&be);
         let mut r = OrderedReducer::new(2);
-        assert!(r.push(5, vec![]).is_err(), "out of range");
-        r.push(0, vec![1, 2, 3]).unwrap();
-        assert!(r.push(0, vec![]).is_err(), "duplicate");
+        assert!(r.push(5, vec![], 0).is_err(), "out of range");
+        assert!(r.push(1, vec![1, 2], 9).is_err(), "offset beyond frame");
+        r.push(0, vec![1, 2, 3], 0).unwrap();
+        assert!(r.push(0, vec![], 0).is_err(), "duplicate");
         assert!(!r.is_complete());
         let masks: Vec<MaskPair> = (0..2).map(|_| MaskPair::ones(2, 2)).collect();
         let mut acc = be.zeros_like_params();

@@ -374,11 +374,27 @@ impl GradCodec {
         grads: &[Tensor],
         out: &mut Vec<u8>,
     ) {
+        out.clear();
+        self.encode_append(micro, masks, grads, out);
+    }
+
+    /// [`GradCodec::encode_into`] without the clear: the message is
+    /// appended after whatever `out` already holds. This is how a
+    /// transport frame embeds a gradient message as its tail
+    /// (`dist::proto`) with zero copies — the codec writes straight
+    /// into the frame buffer after the frame's own header.
+    pub fn encode_append(
+        &self,
+        micro: usize,
+        masks: &MaskPair,
+        grads: &[Tensor],
+        out: &mut Vec<u8>,
+    ) {
         assert_eq!(grads.len(), self.params.len(), "grad tensor count");
+        let base = out.len();
         // One layout walk serves capacity, header, and body.
         let act = self.active(masks);
         let n_elems = self.payload_elems_with(&act);
-        out.clear();
         out.reserve(HEADER_BYTES + self.precision.elem_bytes() * n_elems);
         out.extend_from_slice(&MAGIC_GRAD.to_le_bytes());
         out.extend_from_slice(&self.precision.flags().to_le_bytes());
@@ -404,7 +420,7 @@ impl GradCodec {
             }
         }
         debug_assert_eq!(
-            out.len(),
+            out.len() - base,
             HEADER_BYTES + self.precision.elem_bytes() * n_elems,
             "encoded length disagrees with the layout walk"
         );
@@ -487,8 +503,14 @@ impl GradCodec {
     /// (cleared and refilled; reuse makes the steady state
     /// allocation-free).
     pub fn encode_dense_into(&self, vals: &[Tensor], out: &mut Vec<u8>) {
-        assert_eq!(vals.len(), self.params.len(), "value tensor count");
         out.clear();
+        self.encode_dense_append(vals, out);
+    }
+
+    /// [`GradCodec::encode_dense_into`] without the clear (appended as
+    /// a transport frame's tail, like [`GradCodec::encode_append`]).
+    pub fn encode_dense_append(&self, vals: &[Tensor], out: &mut Vec<u8>) {
+        assert_eq!(vals.len(), self.params.len(), "value tensor count");
         out.reserve(HEADER_BYTES + self.precision.elem_bytes() * self.dense_elems);
         out.extend_from_slice(&MAGIC_DELTA.to_le_bytes());
         out.extend_from_slice(&self.precision.flags().to_le_bytes());
@@ -577,8 +599,13 @@ impl BufPool {
         }
     }
 
-    /// Return a buffer for reuse (cleared here; capacity kept).
+    /// Return a buffer for reuse (cleared here; capacity kept). A
+    /// buffer that never grew (e.g. a transport barrier token) is
+    /// dropped instead of parked — recycling it buys nothing.
     pub fn give_back(&self, mut b: Vec<u8>) {
+        if b.capacity() == 0 {
+            return;
+        }
         b.clear();
         let mut free = self.free.lock().expect("buf pool lock");
         if free.len() < BUF_POOL_CAP {
@@ -755,7 +782,7 @@ mod tests {
             assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "exact {v}");
         }
         // General values: relative error bounded by half an ulp (2^-11).
-        for v in [0.333f32, -7.123, 1e-3, 123.456, -0.9999, 3.14159] {
+        for v in [0.333f32, -7.123, 1e-3, 123.456, -0.9999, 3.146] {
             let r = f16_bits_to_f32(f32_to_f16_bits(v));
             assert!(
                 (r - v).abs() <= v.abs() * 4.9e-4 + 1e-7,
@@ -849,6 +876,30 @@ mod tests {
         assert_eq!(buf.capacity(), cap, "steady-state encode must not grow");
         assert_eq!(buf.as_ptr(), ptr, "steady-state encode must not reallocate");
         assert_eq!(buf, codec.encode(0, &masks, &grads));
+    }
+
+    #[test]
+    fn encode_append_embeds_a_verbatim_message_after_a_prefix() {
+        // The transport frames embed gradient messages as tails: the
+        // appended bytes must equal a standalone encode, decodable in
+        // place from the offset.
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let codec = GradCodec::new(&be);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = masks_with(&[(0, 1)], &[]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let mut frame = vec![9, 9, 9];
+        codec.encode_append(1, &masks, &grads, &mut frame);
+        assert_eq!(&frame[..3], &[9, 9, 9]);
+        assert_eq!(&frame[3..], &codec.encode(1, &masks, &grads)[..]);
+        let mut acc = be.zeros_like_params();
+        assert_eq!(codec.decode_add(&frame[3..], &masks, &mut acc).unwrap(), 1);
+        // Dense variant behaves the same way.
+        let deltas = be.zeros_like_params();
+        let mut dframe = vec![7];
+        codec.encode_dense_append(&deltas, &mut dframe);
+        assert_eq!(&dframe[1..], &codec.encode_dense(&deltas)[..]);
     }
 
     #[test]

@@ -46,11 +46,28 @@
 //!   [`grads::WirePrecision::F16`] wire halves the measured bytes
 //!   (lossy; replicas stay mutually bit-identical via requantized
 //!   broadcast).
+//! * [`transport`] / [`proto`] / [`worker`] — the multi-process seam.
+//!   Every aggregator ↔ worker exchange is a framed message over a
+//!   [`transport::Transport`] link: [`transport::ChannelTransport`]
+//!   keeps workers as threads (in-process mpsc), and
+//!   [`transport::TcpTransport`] runs the *same* [`worker::run_worker`]
+//!   loop in separate threads, forked `repro dist-worker` subprocesses,
+//!   or processes on other hosts — length-prefixed frames over
+//!   `std::net`, gradient payloads in the unchanged [`grads::GradCodec`]
+//!   format. Identical bytes + the fixed reduction order make training
+//!   **bitwise identical across transports** (`tests/dist_tcp.rs`).
 
 pub mod allreduce;
 pub mod grads;
+pub mod proto;
 pub mod trainer;
+pub mod transport;
+pub mod worker;
 
 pub use allreduce::{ExchangeMode, OrderedReducer};
 pub use grads::{BufPool, GradCodec, WirePrecision, WireStats};
 pub use trainer::{DistConfig, DistReport, DistTrainer};
+pub use transport::{
+    BlobRx, BlobTx, SpawnMode, TcpTransport, Transport, TransportKind, TransportStats,
+};
+pub use worker::run_worker;

@@ -1,0 +1,626 @@
+//! The aggregator ↔ worker control protocol: every message that used
+//! to be an in-process `enum` moved over an mpsc channel, now defined
+//! as explicit little-endian frames so the same bytes drive a thread
+//! over a channel, a forked subprocess over loopback TCP, or a worker
+//! on another host.
+//!
+//! One frame (see [`super::transport`]) carries one message: a `u32`
+//! tag followed by tag-specific fields. Gradient payloads embedded in
+//! [`TAG_UP`] / [`TAG_APPLY`] / [`TAG_DELTAS`] frames are the
+//! **unchanged** [`super::grads::GradCodec`] wire format (28-byte
+//! header + packed slices), appended as the frame's tail so the
+//! receiver can decode them in place — the codec's own magic, mask
+//! fingerprint, and length checks still guard every gradient byte.
+//!
+//! Decoding is defensive end to end: a truncated or malformed frame
+//! (from a corrupt link or a confused peer) produces a descriptive
+//! error, never a panic or an out-of-bounds read — `tests/dist_tcp.rs`
+//! pins this for frames mangled at the socket level.
+
+use anyhow::Result;
+
+use crate::backend::native::NativeSpec;
+use crate::runtime::ModelConfig;
+use crate::schedule::MaskPair;
+use crate::tensor::Tensor;
+
+use super::grads::WirePrecision;
+
+/// Aggregator → worker: build your replica (sent once, first).
+pub const TAG_INIT: u32 = 0x4401;
+/// Aggregator → worker: compute masked gradients for these micros.
+pub const TAG_COMPUTE: u32 = 0x4402;
+/// Aggregator → worker: apply the reduced masked gradient (allreduce).
+pub const TAG_APPLY: u32 = 0x4403;
+/// Aggregator → worker: install dense update deltas (param-server).
+pub const TAG_DELTAS: u32 = 0x4404;
+/// Aggregator → worker: zero the momentum buffers.
+pub const TAG_RESET: u32 = 0x4405;
+/// Aggregator → worker: clean shutdown; reply with [`TAG_BYE`].
+pub const TAG_SHUTDOWN: u32 = 0x4406;
+/// Worker → aggregator: one computed micro-batch gradient.
+pub const TAG_UP: u32 = 0x4411;
+/// Worker → aggregator: shutdown acknowledgment + local pool stats.
+pub const TAG_BYE: u32 = 0x4412;
+
+/// Byte offset of the embedded gradient blob in a [`TAG_UP`] frame:
+/// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8).
+pub const UP_GRAD_OFF: usize = 24;
+
+// ---------------------------------------------------------------------------
+// Cursor: bounds-checked little-endian reads
+// ---------------------------------------------------------------------------
+
+/// A bounds-checked reader over one frame's bytes. Every accessor
+/// fails with a "truncated" error instead of panicking when the frame
+/// is shorter than its tag promises.
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Start reading `bytes` from offset 0.
+    pub fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, off: 0 }
+    }
+
+    /// Current read offset.
+    pub fn offset(&self) -> usize {
+        self.off
+    }
+
+    /// Bytes left unread in the frame.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.off
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.off + n <= self.bytes.len(),
+            "truncated message: {what} needs {n} bytes at offset {}, frame has {}",
+            self.off,
+            self.bytes.len()
+        );
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    /// Read one `u8`.
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// Read one little-endian `u32`.
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    /// Read one little-endian `u64`.
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Read one little-endian `f32` (bit-exact).
+    pub fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    /// Read one little-endian `f64` (bit-exact).
+    pub fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Read a `u32` element count, guarded so a corrupt count cannot
+    /// request a huge allocation: the count must fit in the bytes that
+    /// actually remain (`elem_bytes` per element).
+    pub fn count(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32(what)? as usize;
+        let remaining = self.bytes.len() - self.off;
+        anyhow::ensure!(
+            n.saturating_mul(elem_bytes) <= remaining,
+            "corrupt count: {what} claims {n} elements ({elem_bytes} bytes each) \
+             but only {remaining} bytes remain"
+        );
+        Ok(n)
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    put_u32(out, v.to_bits());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_usize_list(out: &mut Vec<u8>, vs: &[usize]) {
+    put_u32(out, vs.len() as u32);
+    for &v in vs {
+        put_u32(out, v as u32);
+    }
+}
+
+fn get_usize_list(c: &mut Cursor<'_>, what: &str) -> Result<Vec<usize>> {
+    let n = c.count(4, what)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(c.u32(what)? as usize);
+    }
+    Ok(out)
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    put_usize_list(out, t.shape());
+    for &v in t.data() {
+        put_f32(out, v);
+    }
+}
+
+fn get_tensor(c: &mut Cursor<'_>, what: &str) -> Result<Tensor> {
+    let shape = get_usize_list(c, what)?;
+    // The shape came off the wire: fold its product with overflow
+    // checks (a crafted dimension list must not wrap into a small
+    // value) and cap the allocation by the bytes that actually remain.
+    let len = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("corrupt count: {what} tensor shape overflows"))?;
+    anyhow::ensure!(
+        len.saturating_mul(4) <= c.remaining(),
+        "corrupt count: {what} tensor claims {len} elements but only {} bytes remain",
+        c.remaining()
+    );
+    let mut data = Vec::with_capacity(len);
+    for _ in 0..len {
+        data.push(c.f32(what)?);
+    }
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+fn put_masks(out: &mut Vec<u8>, m: &MaskPair) {
+    put_tensor(out, &m.fwd);
+    put_tensor(out, &m.bwd);
+}
+
+fn get_masks(c: &mut Cursor<'_>, what: &str) -> Result<MaskPair> {
+    let fwd = get_tensor(c, what)?;
+    let bwd = get_tensor(c, what)?;
+    anyhow::ensure!(
+        fwd.shape() == bwd.shape() && fwd.shape().len() == 2,
+        "{what}: mask pair must be two [depth, heads] tensors"
+    );
+    Ok(MaskPair { fwd, bwd })
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// Everything a worker needs to become a bitwise-identical replica:
+/// the full model spec, the run's LoRA rank and seed, the wire
+/// precision, and the pipeline knobs. Sent once, immediately after the
+/// connection is established — a `repro dist-worker` process is
+/// model-agnostic until this arrives, which is what lets one worker
+/// binary serve any aggregator (including one on another host).
+#[derive(Clone, Debug)]
+pub struct InitMsg {
+    /// This worker's id (its accept/connect order at the aggregator).
+    pub worker: usize,
+    /// The native model family to instantiate.
+    pub spec: NativeSpec,
+    /// LoRA adapter rank of the run (0 = full fine-tuning).
+    pub lora_rank: usize,
+    /// Run seed — replicas initialized from `(spec, lora_rank, seed)`
+    /// are bitwise identical, the root of the determinism contract.
+    pub seed: u64,
+    /// Gradient payload precision on the wire.
+    pub precision: WirePrecision,
+    /// Pipeline encode+upload behind the next task's compute.
+    pub overlap: bool,
+    /// Simulated NIC ms per MiB of encoded gradient (0 = off).
+    pub sim_wire_ms_per_mib: f64,
+}
+
+/// One unit of worker compute: run micro-batch `micro` under `masks`.
+pub struct MicroJob {
+    /// Micro-batch index within the batch (the reduction slot).
+    pub micro: usize,
+    /// Input tensor `[mb, ...]`.
+    pub x: Tensor,
+    /// Labels.
+    pub y: Vec<i32>,
+    /// The schedule's mask pair for this micro-batch.
+    pub masks: MaskPair,
+}
+
+/// Parsed header of a [`TAG_UP`] frame; the gradient blob is the
+/// frame's tail starting at [`UP_GRAD_OFF`] (decoded in place by the
+/// codec, no copy).
+#[derive(Clone, Copy, Debug)]
+pub struct UpHdr {
+    /// Micro-batch index the gradient belongs to.
+    pub micro: usize,
+    /// Micro-batch training loss.
+    pub loss: f32,
+    /// Correct predictions in the micro-batch.
+    pub n_correct: f32,
+    /// Measured wall time of the gradient computation (ms).
+    pub ms: f64,
+}
+
+/// Read a frame's message tag without consuming it.
+pub fn peek_tag(frame: &[u8]) -> Result<u32> {
+    Cursor::new(frame).u32("message tag")
+}
+
+/// Encode an [`InitMsg`] (appends to `out`; caller clears).
+pub fn encode_init(msg: &InitMsg, out: &mut Vec<u8>) {
+    put_u32(out, TAG_INIT);
+    put_u32(out, msg.worker as u32);
+    let mc = &msg.spec.config;
+    for v in [
+        mc.img_size, mc.patch, mc.dim, mc.depth, mc.heads, mc.mlp_ratio, mc.classes,
+        mc.lora_rank, mc.head_dim, mc.tokens,
+    ] {
+        put_u32(out, v as u32);
+    }
+    put_u32(out, msg.spec.micro_batch as u32);
+    put_usize_list(out, &msg.spec.mb_variants);
+    put_usize_list(out, &msg.spec.lora_ranks);
+    put_u32(out, msg.spec.lora_standard_rank as u32);
+    put_u64(out, msg.spec.init_seed);
+    put_u32(out, msg.spec.threads as u32);
+    put_u32(out, msg.lora_rank as u32);
+    put_u64(out, msg.seed);
+    out.push(match msg.precision {
+        WirePrecision::F32 => 0,
+        WirePrecision::F16 => 1,
+    });
+    out.push(msg.overlap as u8);
+    put_f64(out, msg.sim_wire_ms_per_mib);
+}
+
+/// Decode an [`InitMsg`] frame.
+pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("init tag")?;
+    anyhow::ensure!(tag == TAG_INIT, "expected Init frame, got tag {tag:#x}");
+    let worker = c.u32("worker id")? as usize;
+    let mut mc = [0usize; 10];
+    for slot in mc.iter_mut() {
+        *slot = c.u32("model config")? as usize;
+    }
+    let config = ModelConfig {
+        img_size: mc[0],
+        patch: mc[1],
+        dim: mc[2],
+        depth: mc[3],
+        heads: mc[4],
+        mlp_ratio: mc[5],
+        classes: mc[6],
+        lora_rank: mc[7],
+        head_dim: mc[8],
+        tokens: mc[9],
+    };
+    let micro_batch = c.u32("micro batch")? as usize;
+    let mb_variants = get_usize_list(&mut c, "mb variants")?;
+    let lora_ranks = get_usize_list(&mut c, "lora ranks")?;
+    let lora_standard_rank = c.u32("lora standard rank")? as usize;
+    let init_seed = c.u64("init seed")?;
+    let threads = c.u32("threads")? as usize;
+    let spec = NativeSpec {
+        config,
+        micro_batch,
+        mb_variants,
+        lora_ranks,
+        lora_standard_rank,
+        init_seed,
+        threads,
+    };
+    let lora_rank = c.u32("lora rank")? as usize;
+    let seed = c.u64("run seed")?;
+    let precision = match c.u8("wire precision")? {
+        0 => WirePrecision::F32,
+        1 => WirePrecision::F16,
+        p => anyhow::bail!("unknown wire precision code {p} in Init frame"),
+    };
+    let overlap = c.u8("overlap flag")? != 0;
+    let sim_wire_ms_per_mib = c.f64("sim wire ms")?;
+    Ok(InitMsg {
+        worker,
+        spec,
+        lora_rank,
+        seed,
+        precision,
+        overlap,
+        sim_wire_ms_per_mib,
+    })
+}
+
+/// Encode a [`TAG_COMPUTE`] frame (appends to `out`).
+pub fn encode_compute(jobs: &[MicroJob], out: &mut Vec<u8>) {
+    put_u32(out, TAG_COMPUTE);
+    put_u32(out, jobs.len() as u32);
+    for job in jobs {
+        put_u32(out, job.micro as u32);
+        put_u32(out, job.y.len() as u32);
+        for &v in &job.y {
+            put_u32(out, v as u32);
+        }
+        put_tensor(out, &job.x);
+        put_masks(out, &job.masks);
+    }
+}
+
+/// Decode a [`TAG_COMPUTE`] frame into owned jobs.
+pub fn decode_compute(frame: &[u8]) -> Result<Vec<MicroJob>> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("compute tag")?;
+    anyhow::ensure!(tag == TAG_COMPUTE, "expected Compute frame, got tag {tag:#x}");
+    let n = c.count(4, "compute job count")?;
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let micro = c.u32("micro index")? as usize;
+        let ny = c.count(4, "label count")?;
+        let mut y = Vec::with_capacity(ny);
+        for _ in 0..ny {
+            y.push(c.u32("label")? as i32);
+        }
+        let x = get_tensor(&mut c, "input tensor")?;
+        let masks = get_masks(&mut c, "micro masks")?;
+        jobs.push(MicroJob { micro, x, y, masks });
+    }
+    Ok(jobs)
+}
+
+/// Encode a [`TAG_APPLY`] frame: the learning rate, the batch's union
+/// mask, and the reduced-gradient blob (codec wire format, verbatim) as
+/// the tail. Returns the blob's offset within the frame.
+pub fn encode_apply(lr: f32, union: &MaskPair, grad: &[u8], out: &mut Vec<u8>) -> usize {
+    put_u32(out, TAG_APPLY);
+    put_f32(out, lr);
+    put_masks(out, union);
+    let off = out.len();
+    out.extend_from_slice(grad);
+    off
+}
+
+/// Decode a [`TAG_APPLY`] frame: `(lr, union mask, grad blob offset)`.
+/// The gradient tail at the returned offset is codec wire format.
+pub fn decode_apply(frame: &[u8]) -> Result<(f32, MaskPair, usize)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("apply tag")?;
+    anyhow::ensure!(tag == TAG_APPLY, "expected Apply frame, got tag {tag:#x}");
+    let lr = c.f32("learning rate")?;
+    let union = get_masks(&mut c, "union masks")?;
+    Ok((lr, union, c.offset()))
+}
+
+/// Encode a [`TAG_DELTAS`] frame header; the caller appends the dense
+/// delta payload (codec wire format). Returns the payload offset (4).
+pub fn encode_deltas_header(out: &mut Vec<u8>) -> usize {
+    put_u32(out, TAG_DELTAS);
+    out.len()
+}
+
+/// Payload offset of a [`TAG_DELTAS`] frame after tag validation.
+pub fn decode_deltas(frame: &[u8]) -> Result<usize> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("deltas tag")?;
+    anyhow::ensure!(tag == TAG_DELTAS, "expected Deltas frame, got tag {tag:#x}");
+    Ok(c.offset())
+}
+
+/// Encode a bare control frame ([`TAG_RESET`] / [`TAG_SHUTDOWN`]).
+pub fn encode_ctrl(tag: u32, out: &mut Vec<u8>) {
+    put_u32(out, tag);
+}
+
+/// Encode a [`TAG_UP`] frame header; the caller appends the gradient
+/// blob at [`UP_GRAD_OFF`] via `GradCodec::encode_append`.
+pub fn encode_up_header(hdr: &UpHdr, out: &mut Vec<u8>) {
+    put_u32(out, TAG_UP);
+    put_u32(out, hdr.micro as u32);
+    put_f32(out, hdr.loss);
+    put_f32(out, hdr.n_correct);
+    put_f64(out, hdr.ms);
+    debug_assert_eq!(out.len(), UP_GRAD_OFF, "Up header layout drifted");
+}
+
+/// Decode a [`TAG_UP`] frame header (the gradient tail starts at
+/// [`UP_GRAD_OFF`]).
+pub fn decode_up(frame: &[u8]) -> Result<UpHdr> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("up tag")?;
+    anyhow::ensure!(tag == TAG_UP, "expected Up frame, got tag {tag:#x}");
+    let micro = c.u32("up micro")? as usize;
+    let loss = c.f32("up loss")?;
+    let n_correct = c.f32("up n_correct")?;
+    let ms = c.f64("up ms")?;
+    anyhow::ensure!(
+        frame.len() > UP_GRAD_OFF,
+        "Up frame carries no gradient payload ({} bytes)",
+        frame.len()
+    );
+    Ok(UpHdr { micro, loss, n_correct, ms })
+}
+
+/// Encode a [`TAG_BYE`] frame with the worker's local encode-buffer
+/// pool counters.
+pub fn encode_bye(fresh: u64, reused: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_BYE);
+    put_u64(out, fresh);
+    put_u64(out, reused);
+}
+
+/// Decode a [`TAG_BYE`] frame: `(fresh allocs, reuses)`.
+pub fn decode_bye(frame: &[u8]) -> Result<(u64, u64)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("bye tag")?;
+    anyhow::ensure!(tag == TAG_BYE, "expected Bye frame, got tag {tag:#x}");
+    Ok((c.u64("bye fresh")?, c.u64("bye reused")?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn masks(depth: usize, heads: usize) -> MaskPair {
+        let mut m = MaskPair::ones(depth, heads);
+        m.bwd.set(&[0, 1], 0.0);
+        m
+    }
+
+    #[test]
+    fn init_round_trips_exactly() {
+        let mut spec = NativeSpec::tiny();
+        spec.threads = 3;
+        let msg = InitMsg {
+            worker: 2,
+            spec,
+            lora_rank: 4,
+            seed: 0xDEAD_BEEF_u64,
+            precision: WirePrecision::F16,
+            overlap: false,
+            sim_wire_ms_per_mib: 2.25,
+        };
+        let mut frame = Vec::new();
+        encode_init(&msg, &mut frame);
+        assert_eq!(peek_tag(&frame).unwrap(), TAG_INIT);
+        let back = decode_init(&frame).unwrap();
+        assert_eq!(back.worker, 2);
+        assert_eq!(back.spec.config.dim, msg.spec.config.dim);
+        assert_eq!(back.spec.config.tokens, msg.spec.config.tokens);
+        assert_eq!(back.spec.mb_variants, msg.spec.mb_variants);
+        assert_eq!(back.spec.lora_ranks, msg.spec.lora_ranks);
+        assert_eq!(back.spec.init_seed, msg.spec.init_seed);
+        assert_eq!(back.spec.threads, 3);
+        assert_eq!(back.lora_rank, 4);
+        assert_eq!(back.seed, 0xDEAD_BEEF_u64);
+        assert_eq!(back.precision, WirePrecision::F16);
+        assert!(!back.overlap);
+        assert_eq!(back.sim_wire_ms_per_mib, 2.25);
+    }
+
+    #[test]
+    fn compute_round_trips_tensors_and_masks_bitwise() {
+        let x = Tensor::from_vec(&[2, 3], vec![0.5, -1.25, 3.0e-8, f32::MIN_POSITIVE, 7.0, -0.0]);
+        let jobs = vec![
+            MicroJob { micro: 0, x: x.clone(), y: vec![3, 9], masks: masks(2, 2) },
+            MicroJob { micro: 4, x, y: vec![1, 2], masks: MaskPair::ones(2, 2) },
+        ];
+        let mut frame = Vec::new();
+        encode_compute(&jobs, &mut frame);
+        let back = decode_compute(&frame).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].micro, 4);
+        assert_eq!(back[0].y, vec![3, 9]);
+        assert_eq!(back[0].x.shape(), &[2, 3]);
+        for (a, b) in back[0].x.data().iter().zip(jobs_x_data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "tensor bytes must round-trip bit-exactly");
+        }
+        assert_eq!(back[0].masks.fingerprint(), masks(2, 2).fingerprint());
+    }
+
+    fn jobs_x_data() -> Vec<f32> {
+        vec![0.5, -1.25, 3.0e-8, f32::MIN_POSITIVE, 7.0, -0.0]
+    }
+
+    #[test]
+    fn apply_and_up_carry_grad_tails() {
+        let union = masks(2, 2);
+        let grad = vec![0xAA; 40];
+        let mut frame = Vec::new();
+        let off = encode_apply(0.05, &union, &grad, &mut frame);
+        let (lr, u, doff) = decode_apply(&frame).unwrap();
+        assert_eq!(lr, 0.05);
+        assert_eq!(off, doff);
+        assert_eq!(&frame[doff..], &grad[..]);
+        assert_eq!(u.fingerprint(), union.fingerprint());
+
+        let hdr = UpHdr { micro: 3, loss: 1.5, n_correct: 2.0, ms: 0.75 };
+        let mut up = Vec::new();
+        encode_up_header(&hdr, &mut up);
+        assert_eq!(up.len(), UP_GRAD_OFF);
+        up.extend_from_slice(&grad);
+        let back = decode_up(&up).unwrap();
+        assert_eq!(back.micro, 3);
+        assert_eq!(back.loss, 1.5);
+        assert_eq!(back.ms, 0.75);
+        assert_eq!(&up[UP_GRAD_OFF..], &grad[..]);
+    }
+
+    #[test]
+    fn ctrl_and_bye_frames() {
+        let mut f = Vec::new();
+        encode_ctrl(TAG_RESET, &mut f);
+        assert_eq!(peek_tag(&f).unwrap(), TAG_RESET);
+        f.clear();
+        encode_bye(7, 123, &mut f);
+        assert_eq!(decode_bye(&f).unwrap(), (7, 123));
+        f.clear();
+        let poff = encode_deltas_header(&mut f);
+        f.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(decode_deltas(&f).unwrap(), poff);
+    }
+
+    #[test]
+    fn malformed_frames_error_descriptively() {
+        // Empty and tiny frames.
+        assert!(peek_tag(&[]).unwrap_err().to_string().contains("truncated"));
+        assert!(decode_init(&[1, 2]).is_err());
+        // Wrong tag for the decoder.
+        let mut f = Vec::new();
+        encode_ctrl(TAG_RESET, &mut f);
+        let err = decode_up(&f).unwrap_err().to_string();
+        assert!(err.contains("expected Up"), "got: {err}");
+        // Truncated mid-field: a valid Init prefix cut short.
+        let spec = NativeSpec::tiny();
+        let msg = InitMsg {
+            worker: 0,
+            spec,
+            lora_rank: 0,
+            seed: 1,
+            precision: WirePrecision::F32,
+            overlap: true,
+            sim_wire_ms_per_mib: 0.0,
+        };
+        let mut full = Vec::new();
+        encode_init(&msg, &mut full);
+        let err = decode_init(&full[..full.len() / 2]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "got: {err}");
+        // Corrupt element count cannot demand a huge allocation.
+        let mut f = Vec::new();
+        put_u32(&mut f, TAG_COMPUTE);
+        put_u32(&mut f, u32::MAX); // job count far beyond the frame
+        let err = decode_compute(&f).unwrap_err().to_string();
+        assert!(err.contains("corrupt count"), "got: {err}");
+        // An Up frame with no gradient tail is rejected.
+        let mut f = Vec::new();
+        encode_up_header(&UpHdr { micro: 0, loss: 0.0, n_correct: 0.0, ms: 0.0 }, &mut f);
+        assert!(decode_up(&f).is_err());
+        // A tensor shape whose element product wraps usize must be
+        // rejected, not wrapped into a small bogus length.
+        let mut f = Vec::new();
+        put_u32(&mut f, TAG_COMPUTE);
+        put_u32(&mut f, 1); // one job
+        put_u32(&mut f, 0); // micro
+        put_u32(&mut f, 0); // no labels
+        put_u32(&mut f, 3); // 3-dim shape...
+        for _ in 0..3 {
+            put_u32(&mut f, u32::MAX); // ...whose product overflows
+        }
+        let err = decode_compute(&f).unwrap_err().to_string();
+        assert!(err.contains("overflow") || err.contains("corrupt count"), "got: {err}");
+    }
+}

@@ -1,17 +1,29 @@
 //! `DistTrainer`: the live data-parallel fine-tuning driver.
 //!
-//! K worker threads each own a full [`NativeBackend`] replica built from
-//! the same deterministic init. Per scheduled batch the aggregator
-//! assigns every micro-batch to a worker (straggler-aware, see below),
-//! each worker runs the masked forward/backward **for real** against the
+//! K workers each own a full [`NativeBackend`] replica built from the
+//! same deterministic init. Per scheduled batch the aggregator assigns
+//! every micro-batch to a worker (straggler-aware, see below), each
+//! worker runs the masked forward/backward **for real** against the
 //! shared parameter snapshot, serializes the masked gradient
 //! ([`super::grads`]), and the aggregator reduces the messages in fixed
 //! micro order and applies one fused SGD-momentum update — then either
 //! broadcasts the reduced masked gradient (workers re-apply the same
 //! update locally) or, in parameter-server mode, the dense update
-//! deltas. Channel FIFO ordering doubles as the sync barrier: a worker
+//! deltas. Per-link FIFO ordering doubles as the sync barrier: a worker
 //! always installs the batch-`b` update before it sees a batch-`b+1`
 //! compute job.
+//!
+//! ## The transport seam
+//!
+//! Every aggregator ↔ worker exchange travels as a [`super::proto`]
+//! frame over a [`Transport`] link ([`super::transport`]):
+//! [`TransportKind::Channel`] keeps the workers as threads of this
+//! process (the PR 3/4 shape), [`TransportKind::Tcp`] runs the *same*
+//! [`super::worker::run_worker`] loop in separate threads, forked
+//! `repro dist-worker` subprocesses, or externally launched processes
+//! on other hosts. Both transports deliver identical bytes in identical
+//! per-link order, so the trainer is **bitwise identical across
+//! transports** — `tests/dist_tcp.rs` pins serial ≡ channel ≡ tcp.
 //!
 //! ## Determinism
 //!
@@ -20,50 +32,59 @@
 //! same point; the wire format is lossless; the reduction order is
 //! fixed. So the whole trajectory — losses, parameters, eval accuracy —
 //! is bitwise identical to the serial [`crate::coordinator::Trainer`]
-//! under [`UpdateMode::BatchAccum`], for *any* worker count and either
-//! exchange mode. Placement (which worker computes which micro-batch)
-//! is measured-time dependent and deliberately free: it can shift work
-//! away from real stragglers without touching a single bit of the math.
+//! under [`UpdateMode::BatchAccum`], for *any* worker count, either
+//! exchange mode, and either transport. Placement (which worker
+//! computes which micro-batch) is measured-time dependent and
+//! deliberately free: it can shift work away from real stragglers
+//! without touching a single bit of the math.
 //!
 //! ## Pipeline (comm/compute overlap)
 //!
 //! Each worker splits into a compute thread and a dedicated sender
 //! thread joined by a bounded one-slot channel: while task *i*'s
 //! gradient is being encoded and uploaded, task *i+1*'s `grad_step`
-//! already runs — the double-buffered overlap the simulated
-//! [`crate::cluster::Engine`] models, now live. The handoff carries
-//! owned gradients (never a view of the replica), the aggregator only
-//! broadcasts a batch's update after every uplink of that batch
-//! arrived, and the [`OrderedReducer`] fixes the reduction order — so
-//! pipelining is bitwise invisible. `DistConfig::overlap = false` keeps
-//! the serialized reference path; `benches/dist_step.rs` measures the
-//! makespan gap between the two.
+//! already runs (see [`super::worker`]). The handoff carries owned
+//! gradients, the aggregator only broadcasts a batch's update after
+//! every uplink of that batch arrived, and the [`OrderedReducer`] fixes
+//! the reduction order — so pipelining is bitwise invisible.
 //!
 //! ## Measurement and calibration
 //!
-//! Uplink/downlink bytes are counted on the actual serialized messages
-//! ([`WireStats`]); per-worker task times are wall-clock measurements
-//! around the real gradient computation and feed (a) the assignment
-//! balancer (EMA per worker), (b) the workload/usage accounting that
-//! the simulated [`crate::cluster::Engine`] previously only modeled,
-//! and (c) a per-epoch calibration loop: the measured/modeled makespan
-//! ratio rescales the engine's [`ExecTimeModel`] (via
-//! `ExecTimeModel::calibrated`) so the modeled accounting tracks this
-//! host instead of the paper's V100. The residual modeled-vs-measured
-//! drift is reported in `TrainReport::makespan_drift`.
+//! Uplink/downlink gradient bytes are counted on the actual serialized
+//! messages ([`WireStats`]); the transport layer separately counts the
+//! raw frame bytes that crossed each link ([`TransportStats`] — for
+//! TCP, real socket traffic). Per-worker task times are wall-clock
+//! measurements around the real gradient computation and feed (a) the
+//! assignment balancer (EMA per worker), (b) the workload/usage
+//! accounting, and (c) a per-epoch calibration of the modeled
+//! [`ExecTimeModel`]: a per-task least-squares split of the measured
+//! times into separate `p_f` and `p_o` factors
+//! ([`crate::cluster::OpCalibrator`]), renormalized so the modeled
+//! makespan matches the measured straggler — heterogeneous op costs
+//! are tracked per op, and the modeled-vs-measured drift
+//! (`TrainReport::makespan_drift`) stays anchored.
 
+use std::process::{Child, Command};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::allreduce::{ExchangeMode, OrderedReducer};
 use super::grads::{BufPool, GradCodec, WirePrecision, WireStats};
+use super::proto::{self, InitMsg, MicroJob, UpHdr};
+use super::transport::{
+    accept_workers, channel_pair, listen, BlobRx, BlobTx, SpawnMode, StatsCell, TcpTransport,
+    Transport, TransportKind, TransportStats,
+};
+use super::worker::run_worker;
 use crate::backend::native::{NativeBackend, NativeProvider};
 use crate::backend::Backend;
-use crate::cluster::{CostModel, Engine, EngineConfig, ExecTimeModel, WorkloadTracker};
+use crate::cluster::{
+    CostModel, Engine, EngineConfig, ExecTimeModel, OpCalibrator, WorkloadTracker,
+};
 use crate::coordinator::{build_scheduler, prepare_run, TrainReport, TrainerConfig, UpdateMode};
 use crate::data::{Batcher, Dataset, DatasetSpec, SyntheticKind};
 use crate::metrics::{rel_drift, DeviceUsage, Meter};
@@ -84,6 +105,11 @@ pub struct DistConfig {
     pub workers: usize,
     /// Gradient exchange topology.
     pub exchange: ExchangeMode,
+    /// How frames move between the aggregator and its workers:
+    /// in-process channels (threads) or TCP (threads, forked `repro
+    /// dist-worker` subprocesses, or external/multi-host workers).
+    /// Numerics are bitwise identical either way.
+    pub transport: TransportKind,
     /// Pipeline each worker's encode + upload of task *i* behind task
     /// *i+1*'s gradient computation (a dedicated sender thread per
     /// worker, double-buffered handoff). Default `true`; `false` is the
@@ -114,13 +140,14 @@ pub struct DistConfig {
 
 impl DistConfig {
     /// Masked-allreduce cluster of `workers` replicas with the default
-    /// performance knobs: overlap on, lossless f32 wire, no simulated
-    /// NIC, calibration on.
+    /// performance knobs: in-process channel transport, overlap on,
+    /// lossless f32 wire, no simulated NIC, calibration on.
     pub fn new(train: TrainerConfig, workers: usize) -> DistConfig {
         DistConfig {
             train,
             workers,
             exchange: ExchangeMode::MaskedAllReduce,
+            transport: TransportKind::Channel,
             overlap: true,
             wire_precision: WirePrecision::F32,
             sim_wire_ms_per_mib: 0.0,
@@ -142,6 +169,8 @@ pub struct DistReport {
     pub n_workers: usize,
     /// Exchange topology label (`masked-allreduce` / `param-server`).
     pub exchange: String,
+    /// Transport label (`channel` / `tcp`).
+    pub transport: String,
     /// Measured bytes on the wire for the *scheduled fine-tuning*
     /// batches (actual serialized messages) — the traffic the paper's
     /// communication claim is about.
@@ -151,6 +180,11 @@ pub struct DistReport {
     /// [`DistReport::grad_savings`] and the measured-vs-modeled
     /// comparison are not diluted by unscheduled traffic.
     pub pretrain_wire: WireStats,
+    /// Transport-layer totals over all aggregator-side links — whole
+    /// frames including control messages, handshakes, and (for TCP)
+    /// length prefixes: the bytes that actually crossed the socket,
+    /// reported next to the modeled bytes by `benches/dist_step.rs`.
+    pub socket: TransportStats,
     /// Uplink gradient bytes saved vs the unmasked schedule (measured).
     pub grad_savings: f64,
     /// What the simulated engine *modeled* for the same schedules, for
@@ -165,197 +199,76 @@ pub struct DistReport {
     pub worker_utilization: f64,
     /// Worker straggler-over-mean imbalance (0 = perfectly balanced).
     pub worker_imbalance: f64,
-    /// Encode buffers allocated fresh over the whole run (steady state:
-    /// bounded by in-flight messages, not by batch count — the
-    /// zero-allocation hot-loop property, pinned by tests).
+    /// Encode/frame buffers allocated fresh over the whole run, summed
+    /// across every pool in the cluster (the aggregator's, plus — in
+    /// TCP mode, where each process recycles locally — the per-worker
+    /// pools reported in their Bye frames). Steady state: bounded by
+    /// in-flight messages, not by batch count — the zero-allocation
+    /// hot-loop property, pinned by tests.
     pub encode_buf_fresh: u64,
-    /// Encode-buffer checkouts served by recycling.
+    /// Buffer checkouts served by recycling (same pools).
     pub encode_buf_reused: u64,
 }
 
-/// One unit of worker compute: run micro `micro` under `masks`.
-struct MicroJob {
-    micro: usize,
-    x: Tensor,
-    y: Vec<i32>,
-    masks: MaskPair,
+/// What a reader thread forwards from one worker's link into the
+/// aggregator's single arrival queue.
+enum Arrival {
+    /// One computed micro-batch gradient (frame tail holds the blob).
+    Up { worker: usize, hdr: UpHdr, frame: Vec<u8> },
+    /// Shutdown acknowledgment with the worker's local pool counters.
+    Bye { worker: usize, fresh: u64, reused: u64 },
+    /// The link died or produced an undecodable frame. Surfaced as an
+    /// error by whoever is waiting — a lost worker can never hang the
+    /// barrier.
+    Lost { worker: usize, error: String },
 }
 
-/// Aggregator -> worker messages. FIFO per worker, so an update always
-/// lands before the next batch's compute.
-enum Job {
-    /// Compute masked gradients for these micro-batches (one snapshot).
-    Compute(Vec<MicroJob>),
-    /// Apply the reduced masked gradient (allreduce mode).
-    Apply { lr: f32, union: MaskPair, blob: Arc<Vec<u8>> },
-    /// Install dense update deltas (parameter-server mode).
-    ApplyDeltas { blob: Arc<Vec<u8>> },
-    /// Zero the momentum buffers (pretrain -> fine-tune boundary).
-    ResetMomentum,
-}
-
-/// Worker -> aggregator: one computed micro-batch gradient message.
-struct Up {
-    worker: usize,
-    micro: usize,
-    loss: f32,
-    n_correct: f32,
-    /// The serialized masked gradient — the bytes that cross the wire.
-    blob: Vec<u8>,
-    /// Measured wall time of the gradient computation alone (ms) — the
-    /// signal the assignment balancer and the exec-time calibration
-    /// consume. Encode/upload time is excluded: when overlapping it
-    /// runs on the sender thread, hidden behind the next task.
-    ms: f64,
-}
-
-/// Compute-thread -> sender-thread handoff (overlap mode): one computed
-/// gradient awaiting encode + upload.
-struct Computed {
-    micro: usize,
-    loss: f32,
-    n_correct: f32,
-    masks: MaskPair,
-    grads: Vec<Tensor>,
-    ms: f64,
-}
-
-/// Per-worker knobs threaded into [`worker_loop`].
-#[derive(Clone)]
-struct WorkerOpts {
-    /// Encode + upload on a dedicated sender thread, double-buffered.
-    overlap: bool,
-    /// Simulated NIC ms per MiB of encoded message (0 = off).
-    wire_ms_per_mib: f64,
-    /// Recycled encode buffers (shared with the aggregator).
-    pool: Arc<BufPool>,
-}
-
-/// Sleep out the simulated NIC time for one `bytes`-sized message. A
-/// sleep — not a spin — because a real NIC moves bytes by DMA without
-/// burning a core: the sender thread must *wait* without stealing CPU
-/// from the compute threads, or the measured overlap win would vanish
-/// on core-saturated hosts for the wrong reason.
-fn sim_wire_delay(bytes: usize, ms_per_mib: f64) {
-    if ms_per_mib > 0.0 {
-        let ms = bytes as f64 / (1024.0 * 1024.0) * ms_per_mib;
-        thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
-    }
-}
-
-/// Encode one computed gradient into a recycled buffer, pay the
-/// (optional) simulated NIC, and upload it to the aggregator.
-fn encode_and_send(
-    codec: &GradCodec,
-    opts: &WorkerOpts,
-    worker: usize,
-    c: Computed,
-    tx: &mpsc::Sender<Up>,
-) -> bool {
-    let mut blob = opts.pool.checkout();
-    codec.encode_into(c.micro, &c.masks, &c.grads, &mut blob);
-    sim_wire_delay(blob.len(), opts.wire_ms_per_mib);
-    tx.send(Up {
-        worker,
-        micro: c.micro,
-        loss: c.loss,
-        n_correct: c.n_correct,
-        blob,
-        ms: c.ms,
-    })
-    .is_ok()
-}
-
-/// One worker's main loop. With `opts.overlap` the loop splits in two:
-/// this (compute) thread runs `grad_step` back to back and hands each
-/// finished gradient to a dedicated sender thread over a **bounded**
-/// one-slot channel — so the encode + upload of task *i* overlaps task
-/// *i+1*'s computation, with classic double buffering (one gradient in
-/// the channel, one being encoded) as backpressure: compute can never
-/// run more than two tasks ahead of the wire. Serialized mode
-/// (`overlap == false`) encodes and sends inline, the PR 3 behaviour.
-///
-/// Ordering safety: the aggregator broadcasts a batch's update only
-/// after it has received *every* uplink message of that batch, so by
-/// the time an `Apply` job reaches this thread the sender queue is
-/// already drained — the replica can never apply an update while its
-/// own gradients for that batch are still in flight. (The handed-off
-/// gradients are owned tensors, so the sender never reads the replica.)
-fn worker_loop(
-    mut be: NativeBackend,
-    codec: Arc<GradCodec>,
-    worker: usize,
-    rx: mpsc::Receiver<Job>,
-    tx: mpsc::Sender<Up>,
-    opts: WorkerOpts,
-) {
-    let (sender_tx, sender_handle) = if opts.overlap {
-        // Double buffering: one slot in the channel + one in the
-        // sender's hands.
-        let (stx, srx) = mpsc::sync_channel::<Computed>(1);
-        let codec = Arc::clone(&codec);
-        let up = tx.clone();
-        let sopts = opts.clone();
-        let handle = thread::Builder::new()
-            .name(format!("d2ft-dist-{worker}-tx"))
-            .spawn(move || {
-                while let Ok(c) = srx.recv() {
-                    if !encode_and_send(&codec, &sopts, worker, c, &up) {
-                        return;
+/// Drain one worker's uplink into the shared arrival queue. Exits on
+/// Bye (clean shutdown), on link/decode failure (after forwarding a
+/// [`Arrival::Lost`]), or when the aggregator is gone.
+fn reader_loop(worker: usize, mut rx: Box<dyn BlobRx>, tx: mpsc::Sender<Arrival>) {
+    loop {
+        let frame = match rx.recv_blob() {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                return;
+            }
+        };
+        let forwarded = match proto::peek_tag(&frame) {
+            Ok(proto::TAG_UP) => match proto::decode_up(&frame) {
+                Ok(hdr) => tx.send(Arrival::Up { worker, hdr, frame }).is_ok(),
+                Err(e) => {
+                    let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                    return;
+                }
+            },
+            Ok(proto::TAG_BYE) => {
+                match proto::decode_bye(&frame) {
+                    Ok((fresh, reused)) => {
+                        let _ = tx.send(Arrival::Bye { worker, fresh, reused });
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
                     }
                 }
-            })
-            .expect("spawning dist sender");
-        (Some(stx), Some(handle))
-    } else {
-        (None, None)
-    };
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Compute(items) => {
-                for it in items {
-                    let t0 = Instant::now();
-                    let (out, grads) = be
-                        .grad_step(&it.x, &it.y, &it.masks)
-                        .expect("native grad step on worker");
-                    let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let c = Computed {
-                        micro: it.micro,
-                        loss: out.loss,
-                        n_correct: out.n_correct,
-                        masks: it.masks,
-                        grads,
-                        ms,
-                    };
-                    let alive = match &sender_tx {
-                        Some(stx) => stx.send(c).is_ok(),
-                        None => encode_and_send(&codec, &opts, worker, c, &tx),
-                    };
-                    if !alive {
-                        return;
-                    }
-                }
+                return;
             }
-            Job::Apply { lr, union, blob } => {
-                let mut acc = be.zeros_like_params();
-                codec
-                    .decode_add(&blob, &union, &mut acc)
-                    .expect("decoding reduced gradient broadcast");
-                be.apply_grads(&acc, lr).expect("applying reduced gradient");
+            Ok(tag) => {
+                let _ = tx.send(Arrival::Lost {
+                    worker,
+                    error: format!("unexpected frame tag {tag:#x} on the uplink"),
+                });
+                return;
             }
-            Job::ApplyDeltas { blob } => {
-                let deltas = codec.decode_dense(&blob).expect("decoding delta broadcast");
-                be.apply_deltas(&deltas).expect("installing deltas");
+            Err(e) => {
+                let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                return;
             }
-            Job::ResetMomentum => {
-                be.reset_momentum().expect("resetting momentum");
-            }
+        };
+        if !forwarded {
+            return;
         }
-    }
-    // Shut the sender down cleanly before the compute thread exits.
-    drop(sender_tx);
-    if let Some(h) = sender_handle {
-        let _ = h.join();
     }
 }
 
@@ -365,6 +278,9 @@ struct BatchOut {
     outs: Vec<(f32, f32)>,
     /// Measured busy ms per worker (0 for idle workers).
     worker_ms: Vec<f64>,
+    /// Measured gradient-computation ms per micro-batch (micro order) —
+    /// the per-task signal the op-split calibration consumes.
+    micro_ms: Vec<f64>,
 }
 
 /// The distributed data-parallel trainer (see the module docs).
@@ -372,25 +288,42 @@ pub struct DistTrainer {
     cfg: DistConfig,
     /// The aggregator's authoritative replica (scores, eval, updates).
     agg: NativeBackend,
-    codec: Arc<GradCodec>,
+    codec: GradCodec,
     partition: Partition,
     train: Dataset,
     test: Dataset,
-    txs: Vec<mpsc::Sender<Job>>,
-    rx: mpsc::Receiver<Up>,
-    handles: Vec<thread::JoinHandle<()>>,
+    /// Downlink halves, one per worker (worker id = index).
+    links: Vec<Box<dyn BlobTx>>,
+    /// Fan-in of every worker's uplink (reader threads feed it).
+    arrivals: mpsc::Receiver<Arrival>,
+    readers: Vec<thread::JoinHandle<()>>,
+    /// In-process workers (channel / tcp-threads modes).
+    worker_threads: Vec<thread::JoinHandle<()>>,
+    /// Forked `repro dist-worker` subprocesses (tcp processes mode).
+    worker_procs: Vec<Child>,
+    /// Live per-link transport counters (aggregator side).
+    link_stats: Vec<Arc<StatsCell>>,
     /// Per-worker EMA of measured ms per micro-batch task — the
     /// straggler signal the assignment balancer reacts to.
     ema_ms: Vec<f64>,
-    /// Recycled encode buffers: workers check out, the aggregator gives
-    /// back after every reduction.
+    /// Recycled frame/encode buffers (aggregator side; in channel mode
+    /// shared with the worker threads, closing the recycle loop
+    /// in-process).
     buf_pool: Arc<BufPool>,
+    /// Whether the shutdown handshake already ran.
+    shut_down: bool,
+    /// Summed worker-side pool counters from Bye frames.
+    bye_fresh: u64,
+    bye_reused: u64,
 }
 
 impl DistTrainer {
     /// Build the cluster: an aggregator replica plus `cfg.workers`
-    /// worker replicas, all deterministically initialized from the same
-    /// `(spec, lora_rank, seed)` so they are bitwise identical.
+    /// worker replicas — threads over channels, threads over loopback
+    /// TCP, forked subprocesses, or externally launched processes,
+    /// per `cfg.transport` — all deterministically initialized from
+    /// the same `(spec, lora_rank, seed)` so they are bitwise
+    /// identical.
     pub fn new(provider: &NativeProvider, cfg: DistConfig) -> Result<DistTrainer> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker replica");
         anyhow::ensure!(
@@ -416,30 +349,127 @@ impl DistTrainer {
         // Shared with the serial trainer so the two drivers cannot
         // drift on partition/dataset setup.
         let setup = prepare_run(agg.config(), &cfg.train)?;
-        let codec = Arc::new(GradCodec::new(&agg).with_precision(cfg.wire_precision));
+        let codec = GradCodec::new(&agg).with_precision(cfg.wire_precision);
         let buf_pool = Arc::new(BufPool::new());
-        let opts = WorkerOpts {
-            overlap: cfg.overlap,
-            wire_ms_per_mib: cfg.sim_wire_ms_per_mib,
-            pool: Arc::clone(&buf_pool),
-        };
-        let (up_tx, up_rx) = mpsc::channel::<Up>();
-        let mut txs = Vec::with_capacity(cfg.workers);
-        let mut handles = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
-            let (tx, job_rx) = mpsc::channel::<Job>();
-            let replica = NativeBackend::new(spec, cfg.train.lora_rank, mb, cfg.train.seed);
-            let codec = Arc::clone(&codec);
-            let up = up_tx.clone();
-            let wopts = opts.clone();
-            let handle = thread::Builder::new()
-                .name(format!("d2ft-dist-{w}"))
-                .spawn(move || worker_loop(replica, codec, w, job_rx, up, wopts))
-                .expect("spawning dist worker");
-            txs.push(tx);
-            handles.push(handle);
+        let k = cfg.workers;
+
+        // --- launch the workers and connect one link per worker -------
+        let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(k);
+        let mut link_stats = Vec::with_capacity(k);
+        let mut worker_threads = Vec::new();
+        let mut worker_procs = Vec::new();
+        match cfg.transport.clone() {
+            TransportKind::Channel => {
+                for w in 0..k {
+                    let (agg_end, worker_end) = channel_pair();
+                    // One process-wide pool: worker encode buffers come
+                    // back via the aggregator's give-backs and vice
+                    // versa, so the recycle loop closes in-process.
+                    let pool = Arc::clone(&buf_pool);
+                    let handle = thread::Builder::new()
+                        .name(format!("d2ft-dist-{w}"))
+                        .spawn(move || {
+                            if let Err(e) = run_worker(Box::new(worker_end), pool) {
+                                crate::warn_!("dist worker {w} exited with error: {e:#}");
+                            }
+                        })
+                        .context("spawning dist worker thread")?;
+                    worker_threads.push(handle);
+                    link_stats.push(agg_end.stats_cell());
+                    transports.push(Box::new(agg_end));
+                }
+            }
+            TransportKind::Tcp { listen: addr, spawn } => {
+                let (listener, local) = listen(&addr)?;
+                match spawn {
+                    SpawnMode::Threads => {
+                        for w in 0..k {
+                            let dial = local.to_string();
+                            let handle = thread::Builder::new()
+                                .name(format!("d2ft-dist-{w}"))
+                                .spawn(move || {
+                                    // Worker-local pool, exactly like a
+                                    // separate process would have.
+                                    let pool = Arc::new(BufPool::new());
+                                    let res = TcpTransport::connect(
+                                        &dial,
+                                        Duration::from_secs(30),
+                                        Arc::clone(&pool),
+                                    )
+                                    .and_then(|t| run_worker(Box::new(t), pool));
+                                    if let Err(e) = res {
+                                        crate::warn_!("dist worker {w} exited with error: {e:#}");
+                                    }
+                                })
+                                .context("spawning tcp dist worker thread")?;
+                            worker_threads.push(handle);
+                        }
+                    }
+                    SpawnMode::Processes => {
+                        let exe = std::env::current_exe()
+                            .context("resolving current executable for dist-worker spawn")?;
+                        for _ in 0..k {
+                            let child = Command::new(&exe)
+                                .arg("dist-worker")
+                                .arg("--connect")
+                                .arg(local.to_string())
+                                .arg("--quiet")
+                                .spawn()
+                                .context("forking `repro dist-worker` subprocess")?;
+                            worker_procs.push(child);
+                        }
+                    }
+                    SpawnMode::External => {
+                        crate::info!(
+                            "waiting for {k} external workers: repro dist-worker --connect {local}"
+                        );
+                    }
+                }
+                for stream in accept_workers(&listener, k, Duration::from_secs(120))? {
+                    let t = TcpTransport::from_stream(stream, Arc::clone(&buf_pool))?;
+                    link_stats.push(t.stats_cell());
+                    transports.push(Box::new(t));
+                }
+            }
         }
-        let ema_ms = vec![1.0; cfg.workers];
+
+        // --- handshake: Init every worker, then barrier every link ----
+        // (Inits first so the K replica builds run concurrently.)
+        for (w, link) in transports.iter_mut().enumerate() {
+            let msg = InitMsg {
+                worker: w,
+                spec: spec.clone(),
+                lora_rank: cfg.train.lora_rank,
+                seed: cfg.train.seed,
+                precision: cfg.wire_precision,
+                overlap: cfg.overlap,
+                sim_wire_ms_per_mib: cfg.sim_wire_ms_per_mib,
+            };
+            let mut frame = buf_pool.checkout();
+            proto::encode_init(&msg, &mut frame);
+            link.send_blob(frame).with_context(|| format!("sending Init to worker {w}"))?;
+        }
+        for (w, link) in transports.iter_mut().enumerate() {
+            link.barrier().with_context(|| format!("handshake barrier with worker {w}"))?;
+        }
+
+        // --- split the links; reader threads fan uplinks in -----------
+        let (arr_tx, arrivals) = mpsc::channel::<Arrival>();
+        let mut links = Vec::with_capacity(k);
+        let mut readers = Vec::with_capacity(k);
+        for (w, link) in transports.into_iter().enumerate() {
+            let (tx, rx) = link.split();
+            links.push(tx);
+            let fan_in = arr_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("d2ft-dist-{w}-rx"))
+                .spawn(move || reader_loop(w, rx, fan_in))
+                .context("spawning dist reader thread")?;
+            readers.push(handle);
+        }
+        drop(arr_tx);
+
+        let ema_ms = vec![1.0; k];
         Ok(DistTrainer {
             cfg,
             agg,
@@ -447,11 +477,17 @@ impl DistTrainer {
             partition: setup.partition,
             train: setup.train,
             test: setup.test,
-            txs,
-            rx: up_rx,
-            handles,
+            links,
+            arrivals,
+            readers,
+            worker_threads,
+            worker_procs,
+            link_stats,
             ema_ms,
             buf_pool,
+            shut_down: false,
+            bye_fresh: 0,
+            bye_reused: 0,
         })
     }
 
@@ -476,7 +512,7 @@ impl DistTrainer {
     /// a placement decision — replicas are bitwise identical, so any
     /// assignment yields identical numerics.
     fn assign(&self, n_micro: usize) -> Vec<usize> {
-        let k = self.txs.len();
+        let k = self.ema_ms.len();
         let mut load = vec![0.0f64; k];
         let mut out = Vec::with_capacity(n_micro);
         for _ in 0..n_micro {
@@ -492,6 +528,27 @@ impl DistTrainer {
         out
     }
 
+    /// Broadcast one frame to every worker, checking a pooled copy out
+    /// per link (the transport consumes its buffer). Records `payload`
+    /// bytes per link into `stats` as downlink traffic.
+    ///
+    /// The K copies are a deliberate trade for the uniform seam: the
+    /// pre-transport code shared one `Arc<Vec<u8>>` across in-process
+    /// workers, but any real multi-process transport must materialize
+    /// per-link bytes anyway, and one memcpy per worker per batch is
+    /// noise next to a batch's gradient compute. Buffers come from the
+    /// pool, so the copies add no steady-state allocations.
+    fn broadcast(&mut self, master: &[u8], payload: usize, stats: &mut WireStats) -> Result<()> {
+        for (w, link) in self.links.iter_mut().enumerate() {
+            stats.record_down(payload);
+            let mut frame = self.buf_pool.checkout();
+            frame.extend_from_slice(master);
+            link.send_blob(frame)
+                .with_context(|| format!("broadcasting to dist worker {w}"))?;
+        }
+        Ok(())
+    }
+
     /// Execute one batch: dispatch compute jobs, run the ordered-reduce
     /// barrier, apply the update on the aggregator, broadcast it to the
     /// workers, and account the bytes.
@@ -503,7 +560,7 @@ impl DistTrainer {
     ) -> Result<BatchOut> {
         let n = micros.len();
         assert_eq!(masks.len(), n, "one mask pair per micro-batch");
-        let k = self.txs.len();
+        let k = self.links.len();
         let assignment = self.assign(n);
         let mut jobs: Vec<Vec<MicroJob>> = (0..k).map(|_| Vec::new()).collect();
         for (i, (x, y)) in micros.iter().enumerate() {
@@ -520,19 +577,36 @@ impl DistTrainer {
                 continue;
             }
             tasks_per_worker[w] = job.len();
-            self.txs[w].send(Job::Compute(job)).expect("dist worker queue closed");
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_compute(&job, &mut frame);
+            self.links[w]
+                .send_blob(frame)
+                .with_context(|| format!("dispatching compute jobs to worker {w}"))?;
         }
-        // Barrier: one gradient message per micro-batch.
+        // Barrier: one gradient message per micro-batch. A lost worker
+        // surfaces as an error here — never a hang.
         let mut reducer = OrderedReducer::new(n);
         let mut outs = vec![(0.0f32, 0.0f32); n];
         let mut worker_ms = vec![0.0f64; k];
+        let mut micro_ms = vec![0.0f64; n];
         let dense = self.codec.dense_len();
         for _ in 0..n {
-            let up = self.rx.recv().expect("dist worker died");
-            worker_ms[up.worker] += up.ms;
-            outs[up.micro] = (up.loss, up.n_correct);
-            stats.record_up(up.blob.len(), dense);
-            reducer.push(up.micro, up.blob)?;
+            match self.arrivals.recv() {
+                Ok(Arrival::Up { worker, hdr, frame }) => {
+                    worker_ms[worker] += hdr.ms;
+                    stats.record_up(frame.len() - proto::UP_GRAD_OFF, dense);
+                    reducer.push(hdr.micro, frame, proto::UP_GRAD_OFF)?;
+                    outs[hdr.micro] = (hdr.loss, hdr.n_correct);
+                    micro_ms[hdr.micro] = hdr.ms;
+                }
+                Ok(Arrival::Lost { worker, error }) => {
+                    anyhow::bail!("dist worker {worker} lost mid-batch: {error}")
+                }
+                Ok(Arrival::Bye { worker, .. }) => {
+                    anyhow::bail!("dist worker {worker} sent an unexpected Bye mid-batch")
+                }
+                Err(_) => anyhow::bail!("every dist worker link closed mid-batch"),
+            }
         }
         // Straggler feedback: EMA of measured ms per task.
         for w in 0..k {
@@ -554,7 +628,8 @@ impl DistTrainer {
         match self.cfg.exchange {
             ExchangeMode::MaskedAllReduce => {
                 let union = MaskPair::union(masks);
-                let blob = Arc::new(self.codec.encode(0, &union, &acc));
+                let mut gbuf = self.buf_pool.checkout();
+                self.codec.encode_into(0, &union, &acc, &mut gbuf);
                 if self.codec.precision() == WirePrecision::F32 {
                     self.agg.apply_grads(&acc, lr)?;
                 } else {
@@ -563,26 +638,27 @@ impl DistTrainer {
                     // decode our own broadcast so all K+1 replicas stay
                     // mutually bitwise identical.
                     let mut quantized = self.agg.zeros_like_params();
-                    self.codec.decode_add(&blob, &union, &mut quantized)?;
+                    self.codec.decode_add(&gbuf, &union, &mut quantized)?;
                     self.agg.apply_grads(&quantized, lr)?;
                 }
-                for tx in &self.txs {
-                    stats.record_down(blob.len());
-                    tx.send(Job::Apply { lr, union: union.clone(), blob: Arc::clone(&blob) })
-                        .expect("dist worker queue closed");
-                }
+                let mut master = self.buf_pool.checkout();
+                let grad_off = proto::encode_apply(lr, &union, &gbuf, &mut master);
+                let payload = master.len() - grad_off;
+                self.buf_pool.give_back(gbuf);
+                self.broadcast(&master, payload, stats)?;
+                self.buf_pool.give_back(master);
             }
             ExchangeMode::ParamServer => {
                 let deltas = self.agg.update_capture(&acc, lr);
-                let blob = Arc::new(self.codec.encode_dense(&deltas));
-                for tx in &self.txs {
-                    stats.record_down(blob.len());
-                    tx.send(Job::ApplyDeltas { blob: Arc::clone(&blob) })
-                        .expect("dist worker queue closed");
-                }
+                let mut master = self.buf_pool.checkout();
+                let off = proto::encode_deltas_header(&mut master);
+                self.codec.encode_dense_append(&deltas, &mut master);
+                let payload = master.len() - off;
+                self.broadcast(&master, payload, stats)?;
+                self.buf_pool.give_back(master);
             }
         }
-        Ok(BatchOut { outs, worker_ms })
+        Ok(BatchOut { outs, worker_ms, micro_ms })
     }
 
     /// Distributed synthetic pre-training (all-ones masks), mirroring
@@ -604,8 +680,11 @@ impl DistTrainer {
             self.exec_batch(&micros, &masks, stats)?;
         }
         self.agg.reset_momentum()?;
-        for tx in &self.txs {
-            tx.send(Job::ResetMomentum).expect("dist worker queue closed");
+        for (w, link) in self.links.iter_mut().enumerate() {
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_ctrl(proto::TAG_RESET, &mut frame);
+            link.send_blob(frame)
+                .with_context(|| format!("sending momentum reset to worker {w}"))?;
         }
         Ok(())
     }
@@ -625,11 +704,60 @@ impl DistTrainer {
         Ok((meter.top1(), meter.mean_loss()))
     }
 
+    /// Graceful cluster teardown: send every worker a shutdown frame,
+    /// collect their Bye acknowledgments (local pool counters), and
+    /// join reader threads, worker threads, and worker subprocesses.
+    /// Idempotent; run at the end of [`DistTrainer::run`] so the report
+    /// can include worker-side counters, and again (as a no-op) on
+    /// drop.
+    fn shutdown_workers(&mut self) -> Result<()> {
+        if self.shut_down {
+            return Ok(());
+        }
+        self.shut_down = true;
+        for (w, link) in self.links.iter_mut().enumerate() {
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_ctrl(proto::TAG_SHUTDOWN, &mut frame);
+            link.send_blob(frame)
+                .with_context(|| format!("sending shutdown to worker {w}"))?;
+        }
+        let mut byes = 0;
+        while byes < self.links.len() {
+            match self.arrivals.recv_timeout(Duration::from_secs(60)) {
+                Ok(Arrival::Bye { fresh, reused, .. }) => {
+                    byes += 1;
+                    self.bye_fresh += fresh;
+                    self.bye_reused += reused;
+                }
+                Ok(Arrival::Up { worker, .. }) => {
+                    anyhow::bail!("worker {worker} sent a gradient during shutdown")
+                }
+                Ok(Arrival::Lost { worker, error }) => {
+                    anyhow::bail!("dist worker {worker} died during shutdown: {error}")
+                }
+                Err(_) => anyhow::bail!(
+                    "timed out waiting for worker Bye frames ({byes} of {} received)",
+                    self.links.len()
+                ),
+            }
+        }
+        for handle in self.readers.drain(..) {
+            let _ = handle.join();
+        }
+        for handle in self.worker_threads.drain(..) {
+            let _ = handle.join();
+        }
+        for mut child in self.worker_procs.drain(..) {
+            let _ = child.wait();
+        }
+        Ok(())
+    }
+
     /// Run the full distributed fine-tuning loop.
     pub fn run(&mut self) -> Result<DistReport> {
         let cfg = self.cfg.train.clone();
         let mb = self.agg.micro_batch();
-        let k = self.txs.len();
+        let k = self.links.len();
         // Pretrain traffic is accounted separately: its all-ones masks
         // ship dense messages, which would dilute the fine-tuning
         // savings headline if folded in.
@@ -654,11 +782,17 @@ impl DistTrainer {
         ecfg.bytes_per_fullop = self.codec.dense_len() as u64;
         let mut exec_model = ExecTimeModel::paper();
         let mut engine = Engine::with_models(ecfg, n_devices, exec_model.clone(), cost);
-        // Calibration state: per-epoch means of measured batch straggler
-        // (slowest worker's summed task compute) vs modeled makespan;
-        // after the first calibration, each further epoch contributes a
-        // modeled-vs-measured drift sample.
-        let mut calib_scale = 1.0f64;
+        // Calibration state. Two signals per epoch: (a) the per-task
+        // least-squares system that splits the measured times into p_f
+        // vs p_o factors, and (b) per-batch modeled device rows, so the
+        // split factors can be renormalized to keep the modeled
+        // makespan matched to the measured straggler (the drift
+        // anchor). After the first calibration, each further epoch
+        // contributes a modeled-vs-measured drift sample.
+        let mut op_cal = OpCalibrator::new();
+        let mut ep_rows: Vec<Vec<(f64, f64)>> = Vec::new();
+        let mut calib_scale_full = 1.0f64;
+        let mut calib_scale_fwd = 1.0f64;
         let mut calib_epochs = 0usize;
         let mut drift_sum = 0.0f64;
         let mut drift_n = 0usize;
@@ -727,10 +861,18 @@ impl DistTrainer {
                 exec_ms_sum += cluster.mean_device_ms;
                 makespan_sum += cluster.makespan_ms;
                 modeled_wire_bytes += cluster.wire_bytes;
-                // Calibration sample: this batch's measured straggler
-                // (the slowest worker's summed task compute — exactly
-                // what gates the synchronous step) against the modeled
-                // makespan for the same schedule.
+                // Calibration samples: each task's measured compute
+                // against its modeled p_f/p_o components (for the op
+                // split), the batch's measured straggler against the
+                // modeled makespan (for the drift anchor), and the
+                // modeled device rows (for the renormalization).
+                for (i, &ms) in out.micro_ms.iter().enumerate() {
+                    let (mf, mo) = exec_model.micro_components(&table, i);
+                    op_cal.observe(mf, mo, ms);
+                }
+                ep_rows.push(
+                    (0..n_devices).map(|d| exec_model.device_row_components(&table, d)).collect(),
+                );
                 ep_meas += out.worker_ms.iter().copied().fold(0.0, f64::max);
                 ep_model += cluster.makespan_ms;
                 ep_batches += 1;
@@ -752,17 +894,44 @@ impl DistTrainer {
                     drift_n += 1;
                 }
                 if self.cfg.calibrate && meas > 0.0 && model > 0.0 {
-                    // Feed the measured/modeled ratio back through
-                    // ExecTimeModel::calibrated (via `scaled`): the
-                    // knapsack accounting for the *next* epoch runs on
-                    // this host's real timings. Placement-only — the
-                    // numerics cannot move.
-                    let scale = meas / model;
-                    exec_model = exec_model.scaled(scale);
-                    calib_scale *= scale;
+                    // Two-stage feedback: the least-squares solve gives
+                    // the p_f : p_o *shape* from per-task measurements;
+                    // the factors are then renormalized so the epoch's
+                    // mean modeled makespan under the new tables equals
+                    // the measured straggler mean — the same fixed
+                    // point the uniform calibration converged to, now
+                    // with per-op structure. A degenerate system (e.g.
+                    // a schedule with no p_o tasks) falls back to the
+                    // uniform measured/modeled ratio.
+                    let uniform = meas / model;
+                    let (pf, po) = match op_cal.solve() {
+                        Some((pf_raw, po_raw)) => {
+                            let renorm: f64 = ep_rows
+                                .iter()
+                                .map(|rows| {
+                                    rows.iter()
+                                        .map(|&(f, o)| pf_raw * f + po_raw * o)
+                                        .fold(0.0, f64::max)
+                                })
+                                .sum::<f64>()
+                                / ep_rows.len() as f64;
+                            if renorm > 0.0 {
+                                let u = meas / renorm;
+                                (pf_raw * u, po_raw * u)
+                            } else {
+                                (uniform, uniform)
+                            }
+                        }
+                        None => (uniform, uniform),
+                    };
+                    exec_model = exec_model.scaled_per_op(pf, po);
+                    calib_scale_full *= pf;
+                    calib_scale_fwd *= po;
                     engine = Engine::with_models(ecfg, n_devices, exec_model.clone(), cost);
                     calib_epochs += 1;
                 }
+                op_cal.reset();
+                ep_rows.clear();
                 ep_meas = 0.0;
                 ep_model = 0.0;
                 ep_batches = 0;
@@ -776,6 +945,23 @@ impl DistTrainer {
         }
         let wall_s = t0.elapsed().as_secs_f64();
         let (test_top1, test_loss) = self.evaluate()?;
+        // Tear the cluster down *inside* run so the report can fold in
+        // the worker-side pool counters and the final socket totals.
+        self.shutdown_workers()?;
+        let mut socket = TransportStats::default();
+        for cell in &self.link_stats {
+            socket.merge(&cell.snapshot());
+        }
+        // In channel mode every party shares the aggregator's pool (one
+        // set of counters); in TCP mode each process pools locally and
+        // reports its counters in its Bye frame.
+        let (buf_fresh, buf_reused) = match self.cfg.transport {
+            TransportKind::Channel => (self.buf_pool.fresh_allocs(), self.buf_pool.reuses()),
+            TransportKind::Tcp { .. } => (
+                self.buf_pool.fresh_allocs() + self.bye_fresh,
+                self.buf_pool.reuses() + self.bye_reused,
+            ),
+        };
         let b = workloads.batches().max(1) as f64;
         let train = TrainReport {
             scheduler: cfg.scheduler.label().to_string(),
@@ -791,14 +977,20 @@ impl DistTrainer {
             sample_count_variance: workloads.sample_count_variance(),
             mean_exec_ms: exec_ms_sum / b,
             makespan_ms: makespan_sum / b,
-            engine: format!("dist({k} workers, {})", self.cfg.exchange.label()),
+            engine: format!(
+                "dist({k} workers, {}, {})",
+                self.cfg.exchange.label(),
+                self.cfg.transport.label()
+            ),
             utilization: usage.mean_utilization(),
             imbalance: usage.imbalance(),
             // Real straggler: slowest worker's measured time per batch.
             straggler_ms: worker_usage.total_makespan_ms() / worker_usage.steps().max(1) as f64,
             wall_s,
             batches: batch_idx,
-            calib_scale,
+            calib_scale: (calib_scale_full * calib_scale_fwd).sqrt(),
+            calib_scale_full,
+            calib_scale_fwd,
             calib_epochs,
             makespan_drift: if drift_n > 0 { drift_sum / drift_n as f64 } else { 0.0 },
         };
@@ -807,15 +999,17 @@ impl DistTrainer {
             grad_savings: stats.grad_savings(),
             n_workers: k,
             exchange: self.cfg.exchange.label().to_string(),
+            transport: self.cfg.transport.label().to_string(),
             wire: stats,
             pretrain_wire: pretrain_stats,
+            socket,
             modeled_wire_bytes,
             mean_step_ms: step_ms_sum / n_batches,
             worker_busy_ms: worker_usage.busy_ms().to_vec(),
             worker_utilization: worker_usage.mean_utilization(),
             worker_imbalance: worker_usage.imbalance(),
-            encode_buf_fresh: self.buf_pool.fresh_allocs(),
-            encode_buf_reused: self.buf_pool.reuses(),
+            encode_buf_fresh: buf_fresh,
+            encode_buf_reused: buf_reused,
             train,
         })
     }
@@ -823,10 +1017,25 @@ impl DistTrainer {
 
 impl Drop for DistTrainer {
     fn drop(&mut self) {
-        // Closing the job queues ends each worker's recv loop.
-        self.txs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        if !self.shut_down {
+            // Best effort: a shutdown frame lets live workers exit
+            // cleanly; closing the links afterwards unblocks any that
+            // missed it.
+            for link in &mut self.links {
+                let mut frame = Vec::new();
+                proto::encode_ctrl(proto::TAG_SHUTDOWN, &mut frame);
+                let _ = link.send_blob(frame);
+            }
+        }
+        self.links.clear();
+        for handle in self.readers.drain(..) {
+            let _ = handle.join();
+        }
+        for handle in self.worker_threads.drain(..) {
+            let _ = handle.join();
+        }
+        for mut child in self.worker_procs.drain(..) {
+            let _ = child.wait();
         }
     }
 }
@@ -882,6 +1091,7 @@ mod tests {
         let mut dt = DistTrainer::new(&provider, DistConfig::new(quick_cfg(), 2)).unwrap();
         let r = dt.run().unwrap();
         assert_eq!(r.n_workers, 2);
+        assert_eq!(r.transport, "channel");
         assert_eq!(r.train.batches, 2);
         assert_eq!(r.train.loss_curve.len(), 10);
         assert!(r.train.final_train_loss.is_finite());
@@ -890,6 +1100,11 @@ mod tests {
         assert!(r.grad_savings > 0.0, "masked schedule must save bytes");
         assert!(r.wire.up_bytes < r.wire.dense_up_bytes);
         assert_eq!(r.worker_busy_ms.len(), 2);
+        // The transport layer saw every gradient frame plus the control
+        // traffic (init/jobs/broadcasts), in both directions.
+        assert!(r.socket.bytes_sent > 0 && r.socket.bytes_recv > 0);
+        assert!(r.socket.bytes_recv >= r.wire.up_bytes + r.pretrain_wire.up_bytes);
+        assert!(r.socket.frames_recv >= r.wire.up_msgs + r.pretrain_wire.up_msgs);
     }
 
     #[test]
@@ -916,15 +1131,17 @@ mod tests {
     #[test]
     fn encode_buffers_recycle_in_steady_state() {
         // Zero per-task allocations after warmup: fresh buffer count is
-        // bounded by what can be in flight at once (workers x 2 slots +
-        // one batch's messages), not by how many batches ran.
+        // bounded by what can be in flight at once (job frames, double
+        // buffers, one batch's gradient messages, broadcast copies),
+        // never by how many batches ran.
         let provider = small_provider();
         let mut cfg = quick_cfg();
-        cfg.batches = 4;
-        let workers = 2;
-        let mut dt = DistTrainer::new(&provider, DistConfig::new(cfg, workers)).unwrap();
+        cfg.batches = 8;
+        let workers = 2u64;
+        let micros = 5u64;
+        let mut dt = DistTrainer::new(&provider, DistConfig::new(cfg, workers as usize)).unwrap();
         let r = dt.run().unwrap();
-        let in_flight_bound = 5 + 2 * workers as u64; // micros + double buffers
+        let in_flight_bound = 2 * micros + 6 * workers + 8;
         assert!(
             r.encode_buf_fresh <= in_flight_bound,
             "fresh allocations ({}) exceed the in-flight bound ({in_flight_bound}) — \
@@ -937,7 +1154,13 @@ mod tests {
             r.encode_buf_fresh,
             r.encode_buf_reused
         );
-        assert_eq!(r.encode_buf_fresh + r.encode_buf_reused, r.wire.up_msgs + r.pretrain_wire.up_msgs);
+        // Every gradient message took exactly one checkout on its way
+        // out of a worker (plus control traffic on top).
+        assert!(
+            r.encode_buf_fresh + r.encode_buf_reused
+                >= r.wire.up_msgs + r.pretrain_wire.up_msgs,
+            "pool counters must cover every uplink message"
+        );
     }
 
     #[test]
@@ -983,5 +1206,24 @@ mod tests {
         let w1 = a.iter().filter(|&&w| w == 1).count();
         assert!(w0 > w1, "fast worker takes more micro-batches: {a:?}");
         assert_eq!(w0 + w1, 4);
+    }
+
+    #[test]
+    fn per_op_calibration_converges_and_reports_split_factors() {
+        // Two epochs over a mixed p_f/p_o schedule: the epoch boundary
+        // must produce at least one calibration with finite positive
+        // split factors, and the geometric-mean scale must agree with
+        // the reported per-op factors.
+        let provider = small_provider();
+        let mut cfg = quick_cfg();
+        cfg.train_size = 40; // 4 batches/epoch at mb 2 x 5 micros
+        cfg.batches = 8;
+        let mut dt = DistTrainer::new(&provider, DistConfig::new(cfg, 2)).unwrap();
+        let r = dt.run().unwrap();
+        assert!(r.train.calib_epochs >= 1, "two epochs must calibrate at least once");
+        assert!(r.train.calib_scale_full.is_finite() && r.train.calib_scale_full > 0.0);
+        assert!(r.train.calib_scale_fwd.is_finite() && r.train.calib_scale_fwd > 0.0);
+        let geo = (r.train.calib_scale_full * r.train.calib_scale_fwd).sqrt();
+        assert!((r.train.calib_scale - geo).abs() < 1e-12);
     }
 }

@@ -1,0 +1,690 @@
+//! The transport seam: how gradient and control frames move between the
+//! aggregator and its workers.
+//!
+//! The dist runtime's wire *format* ([`super::grads::GradCodec`], the
+//! 28-byte-header masked-gradient messages) has been transport-agnostic
+//! since PR 3 — but until this layer existed, the only way bytes moved
+//! was an in-process mpsc channel hardcoded into the trainer. The
+//! [`Transport`] trait makes the seam explicit: an opaque, ordered,
+//! reliable duplex stream of *blobs* (byte frames). Two implementations:
+//!
+//! * [`ChannelTransport`] — the in-process path, one `mpsc` pair per
+//!   direction. Zero-copy: `send_blob` moves the `Vec` straight to the
+//!   peer.
+//! * [`TcpTransport`] — length-prefixed frames over `std::net`
+//!   loopback or a real network. The aggregator listens; K worker
+//!   *processes* (or threads, or machines) connect.
+//!
+//! Because every implementation delivers the same blobs in the same
+//! per-link order, and the [`super::allreduce::OrderedReducer`] fixes
+//! the reduction order independently of arrival order, the training
+//! numerics are **bitwise identical across transports** — pinned by
+//! `tests/dist_tcp.rs` against the serial trainer for K ∈ {2, 4},
+//! overlap on/off, f32/f16 wires.
+//!
+//! ## Buffer ownership
+//!
+//! `send_blob` consumes its buffer: the channel path delivers the `Vec`
+//! itself to the peer, the TCP path writes the frame and returns the
+//! buffer to the transport's [`BufPool`]. Either way the caller checks
+//! out a fresh pooled buffer per message and the steady state allocates
+//! nothing — the PR 4 zero-allocation encode property, now preserved
+//! across a real socket.
+//!
+//! ## Framing (TCP)
+//!
+//! `[len: u32 LE][payload: len bytes]`. A zero-length frame is the
+//! barrier token (see [`Transport::barrier`]); the control protocol
+//! ([`super::proto`]) never produces one. A length prefix above
+//! [`MAX_FRAME`] is rejected before any allocation, so a corrupt or
+//! malicious prefix surfaces as a descriptive error instead of an OOM,
+//! and a peer that closes mid-frame surfaces as a truncation error
+//! instead of a hang.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::grads::BufPool;
+
+/// Hard cap on one frame's payload size (256 MiB). Far above any real
+/// message (a dense small-model gradient is a few MiB); its only job is
+/// turning a corrupt length prefix into an error instead of a giant
+/// allocation.
+pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+/// The send half of a transport link.
+pub trait BlobTx: Send {
+    /// Send one blob to the peer. Consumes the buffer: delivered as-is
+    /// (channel) or written to the socket and recycled into the
+    /// transport's pool (TCP). Fails when the peer is gone.
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()>;
+}
+
+/// The receive half of a transport link.
+pub trait BlobRx: Send {
+    /// Block until the peer's next blob arrives and return it. Fails —
+    /// never hangs forever on a closed link — when the peer
+    /// disconnects, with a description of what broke.
+    fn recv_blob(&mut self) -> Result<Vec<u8>>;
+}
+
+/// One reliable, ordered, duplex blob link between two cluster nodes.
+///
+/// The contract the dist runtime builds on: blobs arrive exactly once,
+/// uncorrupted, in send order (per link — nothing is implied across
+/// links), and a dead peer turns into an error on both halves. That is
+/// all the determinism argument needs: *which* bytes flow and how they
+/// reduce is fixed above this seam.
+pub trait Transport: BlobTx + BlobRx {
+    /// Synchronization point: both endpoints must call `barrier` at the
+    /// same protocol position; each sends an empty frame and waits for
+    /// the peer's. Used at handshake time (replica built, ready for
+    /// jobs) where the link is quiescent.
+    fn barrier(&mut self) -> Result<()> {
+        self.send_blob(Vec::new())?;
+        let token = self.recv_blob()?;
+        anyhow::ensure!(
+            token.is_empty(),
+            "barrier crossed a {}-byte data frame (protocol desync)",
+            token.len()
+        );
+        Ok(())
+    }
+
+    /// Split into independently-owned halves so uplink and downlink can
+    /// live on different threads (the aggregator's reader thread, the
+    /// worker's pipelined sender thread).
+    fn split(self: Box<Self>) -> (Box<dyn BlobTx>, Box<dyn BlobRx>);
+
+    /// Display label (`channel` / `tcp`).
+    fn label(&self) -> &'static str;
+
+    /// Snapshot of the bytes this link actually moved.
+    fn stats(&self) -> TransportStats;
+}
+
+/// Shared live counters of one link's traffic (both halves increment
+/// the same cell after a split).
+#[derive(Debug, Default)]
+pub struct StatsCell {
+    frames_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+}
+
+impl StatsCell {
+    fn record_sent(&self, bytes: usize) {
+        self.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn record_recv(&self, bytes: usize) {
+        self.frames_recv.fetch_add(1, Ordering::Relaxed);
+        self.bytes_recv.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Current totals.
+    pub fn snapshot(&self) -> TransportStats {
+        TransportStats {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_recv: self.frames_recv.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Measured transport-layer traffic: whole frames including the TCP
+/// length prefixes — the bytes that actually cross the socket, reported
+/// next to the modeled bytes in `benches/dist_step.rs`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    /// Frames sent.
+    pub frames_sent: u64,
+    /// Frames received.
+    pub frames_recv: u64,
+    /// Bytes sent (payload + framing overhead).
+    pub bytes_sent: u64,
+    /// Bytes received (payload + framing overhead).
+    pub bytes_recv: u64,
+}
+
+impl TransportStats {
+    /// Fold another link's totals into this one.
+    pub fn merge(&mut self, other: &TransportStats) {
+        self.frames_sent += other.frames_sent;
+        self.frames_recv += other.frames_recv;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_recv += other.bytes_recv;
+    }
+
+    /// Total bytes moved in both directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent + self.bytes_recv
+    }
+}
+
+/// Which transport a distributed run exchanges its frames over.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels; workers are threads of this process
+    /// (the PR 3/4 path, refactored behind the seam).
+    Channel,
+    /// Length-prefixed frames over TCP: the aggregator listens on
+    /// `listen`, workers connect per `spawn`.
+    Tcp {
+        /// Address the aggregator binds (`host:port`; port 0 picks an
+        /// ephemeral one).
+        listen: String,
+        /// How the K workers come to exist.
+        spawn: SpawnMode,
+    },
+}
+
+/// How TCP workers are launched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpawnMode {
+    /// In-process threads that connect over real loopback sockets —
+    /// every socket path exercised, no subprocess needed (tests,
+    /// benches, examples).
+    Threads,
+    /// Fork `repro dist-worker --connect <addr>` subprocesses from the
+    /// current executable — genuinely separate address spaces.
+    Processes,
+    /// Wait for externally launched workers (`repro dist-worker
+    /// --connect host:port`, possibly from other machines).
+    External,
+}
+
+impl TransportKind {
+    /// Parse a CLI label (`channel` | `tcp`) with the default TCP
+    /// launch shape (loopback ephemeral port, forked subprocesses).
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "channel" | "mpsc" => TransportKind::Channel,
+            "tcp" => TransportKind::Tcp {
+                listen: "127.0.0.1:0".to_string(),
+                spawn: SpawnMode::Processes,
+            },
+            _ => anyhow::bail!("unknown transport {s:?} (channel|tcp)"),
+        })
+    }
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp { .. } => "tcp",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel transport (in-process)
+// ---------------------------------------------------------------------------
+
+/// In-process transport: one mpsc channel per direction. `send_blob`
+/// moves the buffer to the peer without copying; recycling happens at
+/// the consumer's pool (shared process-wide in channel mode, so the
+/// loop still closes).
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    stats: Arc<StatsCell>,
+}
+
+/// Build a connected pair of in-process endpoints.
+pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
+    let (atx, brx) = mpsc::channel();
+    let (btx, arx) = mpsc::channel();
+    let a = ChannelTransport { tx: atx, rx: arx, stats: Arc::default() };
+    let b = ChannelTransport { tx: btx, rx: brx, stats: Arc::default() };
+    (a, b)
+}
+
+impl ChannelTransport {
+    /// The live traffic counters of this endpoint (clone before
+    /// splitting or boxing — both halves keep incrementing it).
+    pub fn stats_cell(&self) -> Arc<StatsCell> {
+        Arc::clone(&self.stats)
+    }
+}
+
+struct ChannelTx {
+    tx: mpsc::Sender<Vec<u8>>,
+    stats: Arc<StatsCell>,
+}
+
+struct ChannelRx {
+    rx: mpsc::Receiver<Vec<u8>>,
+    stats: Arc<StatsCell>,
+}
+
+fn channel_send(tx: &mpsc::Sender<Vec<u8>>, stats: &StatsCell, blob: Vec<u8>) -> Result<()> {
+    stats.record_sent(blob.len());
+    tx.send(blob)
+        .map_err(|_| anyhow::anyhow!("channel transport: peer receiver hung up"))
+}
+
+fn channel_recv(rx: &mpsc::Receiver<Vec<u8>>, stats: &StatsCell) -> Result<Vec<u8>> {
+    let blob = rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("channel transport: peer sender hung up"))?;
+    stats.record_recv(blob.len());
+    Ok(blob)
+}
+
+impl BlobTx for ChannelTransport {
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
+        channel_send(&self.tx, &self.stats, blob)
+    }
+}
+
+impl BlobRx for ChannelTransport {
+    fn recv_blob(&mut self) -> Result<Vec<u8>> {
+        channel_recv(&self.rx, &self.stats)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn split(self: Box<Self>) -> (Box<dyn BlobTx>, Box<dyn BlobRx>) {
+        let ChannelTransport { tx, rx, stats } = *self;
+        (
+            Box::new(ChannelTx { tx, stats: Arc::clone(&stats) }),
+            Box::new(ChannelRx { rx, stats }),
+        )
+    }
+
+    fn label(&self) -> &'static str {
+        "channel"
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats.snapshot()
+    }
+}
+
+impl BlobTx for ChannelTx {
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
+        channel_send(&self.tx, &self.stats, blob)
+    }
+}
+
+impl BlobRx for ChannelRx {
+    fn recv_blob(&mut self) -> Result<Vec<u8>> {
+        channel_recv(&self.rx, &self.stats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------------
+
+/// Length-prefixed frames over one `TcpStream`. Frame buffers come
+/// from / return to the endpoint's [`BufPool`], so the steady-state
+/// send *and* receive paths are allocation-free.
+pub struct TcpTransport {
+    reader: TcpStream,
+    writer: TcpStream,
+    pool: Arc<BufPool>,
+    stats: Arc<StatsCell>,
+}
+
+impl TcpTransport {
+    /// Wrap an accepted/connected stream. Disables Nagle (the step
+    /// loop is latency-sensitive and every frame is a complete
+    /// message).
+    pub fn from_stream(stream: TcpStream, pool: Arc<BufPool>) -> Result<TcpTransport> {
+        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        let reader = stream.try_clone().context("cloning TCP stream")?;
+        Ok(TcpTransport { reader, writer: stream, pool, stats: Arc::default() })
+    }
+
+    /// Connect to an aggregator, retrying until `timeout` — workers are
+    /// routinely launched before the aggregator's listener is up
+    /// (the two-terminal flow), and a retry loop beats asking every
+    /// operator to sequence their shells.
+    pub fn connect(addr: &str, timeout: Duration, pool: Arc<BufPool>) -> Result<TcpTransport> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return TcpTransport::from_stream(stream, pool),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e)
+                            .with_context(|| format!("connecting to aggregator at {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+
+    /// The live traffic counters of this endpoint (clone before
+    /// splitting or boxing).
+    pub fn stats_cell(&self) -> Arc<StatsCell> {
+        Arc::clone(&self.stats)
+    }
+}
+
+fn tcp_send(
+    writer: &mut TcpStream,
+    pool: &BufPool,
+    stats: &StatsCell,
+    blob: Vec<u8>,
+) -> Result<()> {
+    anyhow::ensure!(
+        blob.len() <= MAX_FRAME,
+        "refusing to send a {}-byte frame (cap {MAX_FRAME})",
+        blob.len()
+    );
+    let len = (blob.len() as u32).to_le_bytes();
+    writer.write_all(&len).context("writing frame length prefix")?;
+    writer.write_all(&blob).context("writing frame body")?;
+    stats.record_sent(4 + blob.len());
+    pool.give_back(blob);
+    Ok(())
+}
+
+fn tcp_recv(reader: &mut TcpStream, pool: &BufPool, stats: &StatsCell) -> Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    reader
+        .read_exact(&mut hdr)
+        .context("reading frame length prefix (peer disconnected?)")?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "frame length prefix {len} exceeds the {MAX_FRAME}-byte cap \
+         (corrupt prefix or protocol desync)"
+    );
+    let mut buf = pool.checkout();
+    buf.resize(len, 0);
+    reader
+        .read_exact(&mut buf)
+        .with_context(|| format!("reading {len}-byte frame body (peer closed mid-frame?)"))?;
+    stats.record_recv(4 + len);
+    Ok(buf)
+}
+
+struct TcpTx {
+    writer: TcpStream,
+    pool: Arc<BufPool>,
+    stats: Arc<StatsCell>,
+}
+
+struct TcpRx {
+    reader: TcpStream,
+    pool: Arc<BufPool>,
+    stats: Arc<StatsCell>,
+}
+
+impl BlobTx for TcpTransport {
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
+        tcp_send(&mut self.writer, &self.pool, &self.stats, blob)
+    }
+}
+
+impl BlobRx for TcpTransport {
+    fn recv_blob(&mut self) -> Result<Vec<u8>> {
+        tcp_recv(&mut self.reader, &self.pool, &self.stats)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn split(self: Box<Self>) -> (Box<dyn BlobTx>, Box<dyn BlobRx>) {
+        let TcpTransport { reader, writer, pool, stats } = *self;
+        (
+            Box::new(TcpTx { writer, pool: Arc::clone(&pool), stats: Arc::clone(&stats) }),
+            Box::new(TcpRx { reader, pool, stats }),
+        )
+    }
+
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats.snapshot()
+    }
+}
+
+impl BlobTx for TcpTx {
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
+        tcp_send(&mut self.writer, &self.pool, &self.stats, blob)
+    }
+}
+
+impl BlobRx for TcpRx {
+    fn recv_blob(&mut self) -> Result<Vec<u8>> {
+        tcp_recv(&mut self.reader, &self.pool, &self.stats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listener helpers (aggregator side)
+// ---------------------------------------------------------------------------
+
+/// Bind the aggregator's listener and report the resolved address
+/// (resolves port 0 to the ephemeral port workers must dial).
+pub fn listen(addr: &str) -> Result<(TcpListener, SocketAddr)> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding dist listener on {addr}"))?;
+    let local = listener.local_addr().context("resolving listener address")?;
+    Ok((listener, local))
+}
+
+/// Accept exactly `n` worker connections, failing (instead of hanging
+/// CI or a terminal forever) if they have not all arrived by
+/// `timeout`. Accepted streams are returned in connection order, which
+/// becomes the worker-id order.
+pub fn accept_workers(
+    listener: &TcpListener,
+    n: usize,
+    timeout: Duration,
+) -> Result<Vec<TcpStream>> {
+    listener.set_nonblocking(true).context("making listener non-blocking")?;
+    let deadline = Instant::now() + timeout;
+    let mut streams = Vec::with_capacity(n);
+    while streams.len() < n {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The stream inherits non-blocking from the listener on
+                // some platforms; frame IO requires blocking reads.
+                stream.set_nonblocking(false).context("making worker stream blocking")?;
+                streams.push(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "timed out waiting for dist workers: {} of {n} connected \
+                     within {timeout:?} (launch the rest with `repro dist-worker \
+                     --connect <addr>`)",
+                    streams.len()
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+    }
+    Ok(streams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Arc<BufPool> {
+        Arc::new(BufPool::new())
+    }
+
+    #[test]
+    fn channel_round_trip_and_stats() {
+        let (mut a, mut b) = channel_pair();
+        a.send_blob(vec![1, 2, 3]).unwrap();
+        a.send_blob(vec![4]).unwrap();
+        assert_eq!(b.recv_blob().unwrap(), vec![1, 2, 3]);
+        assert_eq!(b.recv_blob().unwrap(), vec![4]);
+        b.send_blob(vec![9; 10]).unwrap();
+        assert_eq!(a.recv_blob().unwrap(), vec![9; 10]);
+        let sa = a.stats();
+        let sb = b.stats();
+        assert_eq!(sa.frames_sent, 2);
+        assert_eq!(sa.bytes_sent, 4);
+        assert_eq!(sa.frames_recv, 1);
+        assert_eq!(sa.bytes_recv, 10);
+        assert_eq!(sb.bytes_recv, 4);
+        // Dead peer surfaces as an error, not a hang.
+        drop(b);
+        assert!(a.send_blob(vec![0]).is_err());
+        assert!(a.recv_blob().is_err());
+    }
+
+    #[test]
+    fn channel_barrier_and_split() {
+        let (a, b) = channel_pair();
+        let (mut a, mut b) = (Box::new(a) as Box<dyn Transport>, Box::new(b));
+        let h = std::thread::spawn(move || {
+            b.barrier().unwrap();
+            b.send_blob(vec![7]).unwrap();
+            b
+        });
+        a.barrier().unwrap();
+        let b = h.join().unwrap();
+        let (_btx, _brx) = (b as Box<dyn Transport>).split();
+        let (_atx, mut arx) = a.split();
+        assert_eq!(arx.recv_blob().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tcp_round_trip_recycles_buffers() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let pa = pool();
+        let pb = pool();
+        let pb2 = Arc::clone(&pb);
+        let h = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut t = TcpTransport::from_stream(stream, pb2).unwrap();
+            for i in 0..4u8 {
+                let mut buf = t.recv_blob().unwrap();
+                assert_eq!(buf, vec![i; 3 + i as usize]);
+                // Echo back through the pool.
+                buf.push(0xEE);
+                t.send_blob(buf).unwrap();
+            }
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, Arc::clone(&pa)).unwrap();
+        for i in 0..4u8 {
+            let mut buf = pa.checkout();
+            buf.resize(3 + i as usize, i);
+            t.send_blob(buf).unwrap();
+            let echoed = t.recv_blob().unwrap();
+            assert_eq!(*echoed.last().unwrap(), 0xEE);
+            pa.give_back(echoed);
+        }
+        h.join().unwrap();
+        // Steady state: buffers recycled after warmup on both paths
+        // (sent buffers return on send, received ones on give_back).
+        assert!(pa.reuses() > 0, "sender-side pool must recycle");
+        let s = t.stats();
+        assert_eq!(s.frames_sent, 4);
+        assert_eq!(s.frames_recv, 4);
+        // Framing overhead is counted: 4-byte prefix per frame.
+        assert_eq!(s.bytes_sent, 4 * 4 + (3 + 4 + 5 + 6));
+    }
+
+    #[test]
+    fn tcp_barrier_round_trip() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(
+                &addr.to_string(),
+                Duration::from_secs(10),
+                pool(),
+            )
+            .unwrap();
+            t.barrier().unwrap();
+            t.send_blob(b"after".to_vec()).unwrap();
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        t.barrier().unwrap();
+        assert_eq!(t.recv_blob().unwrap(), b"after".to_vec());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_rejects_oversized_length_prefix() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut raw = TcpStream::connect(addr).unwrap();
+            // A malicious/corrupt prefix claiming ~4 GiB.
+            raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            raw
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        let err = t.recv_blob().unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "descriptive cap error, got: {err}");
+        drop(h.join().unwrap());
+    }
+
+    #[test]
+    fn tcp_truncated_frame_is_an_error_not_a_hang() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut raw = TcpStream::connect(addr).unwrap();
+            // Claim 100 bytes, deliver 10, vanish.
+            raw.write_all(&100u32.to_le_bytes()).unwrap();
+            raw.write_all(&[0xAB; 10]).unwrap();
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        let err = format!("{:#}", t.recv_blob().unwrap_err());
+        assert!(
+            err.contains("frame body"),
+            "truncation must name the frame body read, got: {err}"
+        );
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn accept_workers_times_out_cleanly() {
+        let (listener, _addr) = listen("127.0.0.1:0").unwrap();
+        let err = accept_workers(&listener, 2, Duration::from_millis(80)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "got: {err}");
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("channel").unwrap(), TransportKind::Channel);
+        match TransportKind::parse("TCP").unwrap() {
+            TransportKind::Tcp { listen, spawn } => {
+                assert_eq!(listen, "127.0.0.1:0");
+                assert_eq!(spawn, SpawnMode::Processes);
+            }
+            other => panic!("expected tcp, got {other:?}"),
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::Channel.label(), "channel");
+    }
+}

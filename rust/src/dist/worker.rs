@@ -1,0 +1,235 @@
+//! The dist worker: one replica's side of the protocol, generic over
+//! the [`Transport`] it speaks.
+//!
+//! [`run_worker`] is the **only** worker implementation in the runtime
+//! — an in-process thread over a [`super::transport::ChannelTransport`],
+//! a thread over a loopback socket, a `repro dist-worker` subprocess,
+//! and a worker on another machine all execute this exact function.
+//! That is the heart of the cross-transport bitwise guarantee: there is
+//! no second code path whose numerics could drift.
+//!
+//! A worker is model-agnostic until its [`InitMsg`] arrives: it builds
+//! a [`NativeBackend`] replica from the message's `(spec, lora_rank,
+//! seed)` (bitwise identical to the aggregator's and to every sibling),
+//! confirms readiness through the transport barrier, then serves jobs
+//! until a shutdown frame. With `overlap` the loop splits into a
+//! compute thread and a dedicated sender thread over a bounded one-slot
+//! channel — the PR 4 double-buffered pipeline, unchanged, just ending
+//! in `send_blob` instead of a hardcoded mpsc.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::backend::native::NativeBackend;
+use crate::backend::Backend;
+use crate::schedule::MaskPair;
+use crate::tensor::Tensor;
+
+use super::grads::{BufPool, GradCodec};
+use super::proto::{
+    decode_apply, decode_compute, decode_deltas, decode_init, encode_bye, encode_up_header,
+    peek_tag, InitMsg, UpHdr, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_RESET, TAG_SHUTDOWN,
+    UP_GRAD_OFF,
+};
+use super::transport::{BlobRx, BlobTx, Transport};
+
+/// Compute-thread → sender-thread handoff (overlap mode): one computed
+/// gradient awaiting encode + upload. The tensors are owned — the
+/// sender never reads the replica.
+struct Computed {
+    micro: usize,
+    loss: f32,
+    n_correct: f32,
+    masks: MaskPair,
+    grads: Vec<Tensor>,
+    ms: f64,
+}
+
+/// Sleep out the simulated NIC time for one `bytes`-sized message. A
+/// sleep — not a spin — because a real NIC moves bytes by DMA without
+/// burning a core: the sender thread must *wait* without stealing CPU
+/// from the compute threads, or the measured overlap win would vanish
+/// on core-saturated hosts for the wrong reason.
+fn sim_wire_delay(bytes: usize, ms_per_mib: f64) {
+    if ms_per_mib > 0.0 {
+        let ms = bytes as f64 / (1024.0 * 1024.0) * ms_per_mib;
+        thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+    }
+}
+
+/// Encode one computed gradient into a recycled buffer (Up header +
+/// codec payload as the frame tail), pay the optional simulated NIC,
+/// and upload it.
+fn encode_and_send(
+    codec: &GradCodec,
+    pool: &BufPool,
+    wire_ms_per_mib: f64,
+    tx: &mut dyn BlobTx,
+    c: Computed,
+) -> Result<()> {
+    let mut frame = pool.checkout();
+    encode_up_header(
+        &UpHdr { micro: c.micro, loss: c.loss, n_correct: c.n_correct, ms: c.ms },
+        &mut frame,
+    );
+    codec.encode_append(c.micro, &c.masks, &c.grads, &mut frame);
+    sim_wire_delay(frame.len() - UP_GRAD_OFF, wire_ms_per_mib);
+    tx.send_blob(frame)
+}
+
+/// Dispatch one decoded frame. Returns `Ok(false)` on a shutdown
+/// frame, `Ok(true)` otherwise.
+fn handle_frame(
+    frame: &[u8],
+    be: &mut NativeBackend,
+    codec: &GradCodec,
+    init: &InitMsg,
+    pool: &BufPool,
+    sender_tx: &Option<mpsc::SyncSender<Computed>>,
+    inline_tx: &mut Option<Box<dyn BlobTx>>,
+) -> Result<bool> {
+    match peek_tag(frame)? {
+        TAG_COMPUTE => {
+            for job in decode_compute(frame)? {
+                let t0 = Instant::now();
+                let (out, grads) = be
+                    .grad_step(&job.x, &job.y, &job.masks)
+                    .context("native grad step on worker")?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let c = Computed {
+                    micro: job.micro,
+                    loss: out.loss,
+                    n_correct: out.n_correct,
+                    masks: job.masks,
+                    grads,
+                    ms,
+                };
+                match (sender_tx, &mut *inline_tx) {
+                    (Some(stx), _) => stx
+                        .send(c)
+                        .map_err(|_| anyhow::anyhow!("sender thread exited early"))?,
+                    (None, Some(tx)) => {
+                        encode_and_send(codec, pool, init.sim_wire_ms_per_mib, tx.as_mut(), c)?
+                    }
+                    (None, None) => unreachable!("no uplink half"),
+                }
+            }
+            Ok(true)
+        }
+        TAG_APPLY => {
+            let (lr, union, off) = decode_apply(frame)?;
+            let mut acc = be.zeros_like_params();
+            codec
+                .decode_add(&frame[off..], &union, &mut acc)
+                .context("decoding reduced gradient broadcast")?;
+            be.apply_grads(&acc, lr).context("applying reduced gradient")?;
+            Ok(true)
+        }
+        TAG_DELTAS => {
+            let off = decode_deltas(frame)?;
+            let deltas =
+                codec.decode_dense(&frame[off..]).context("decoding delta broadcast")?;
+            be.apply_deltas(&deltas).context("installing deltas")?;
+            Ok(true)
+        }
+        TAG_RESET => {
+            be.reset_momentum().context("resetting momentum")?;
+            Ok(true)
+        }
+        TAG_SHUTDOWN => Ok(false),
+        tag => anyhow::bail!("worker received unexpected frame tag {tag:#x}"),
+    }
+}
+
+/// Serve one aggregator over `link` until it sends a shutdown frame.
+/// See the module docs; returns an error (never hangs) when the link
+/// dies or a frame is malformed.
+pub fn run_worker(mut link: Box<dyn Transport>, pool: Arc<BufPool>) -> Result<()> {
+    let frame = link.recv_blob().context("waiting for Init")?;
+    let init = decode_init(&frame)?;
+    pool.give_back(frame);
+    let be = NativeBackend::new(&init.spec, init.lora_rank, init.spec.micro_batch, init.seed);
+    let codec = Arc::new(GradCodec::new(&be).with_precision(init.precision));
+    // Replica built: release the aggregator's handshake.
+    link.barrier().context("worker handshake barrier")?;
+    let (tx, rx) = link.split();
+    serve(be, codec, &init, rx, tx, pool)
+}
+
+/// The post-handshake serve loop (compute thread).
+fn serve(
+    mut be: NativeBackend,
+    codec: Arc<GradCodec>,
+    init: &InitMsg,
+    mut rx: Box<dyn BlobRx>,
+    tx: Box<dyn BlobTx>,
+    pool: Arc<BufPool>,
+) -> Result<()> {
+    // With overlap the sender thread owns the uplink; it hands the tx
+    // half back through its join handle so the compute thread can send
+    // the final Bye. Without overlap the compute thread keeps it.
+    let (sender_tx, sender_handle, mut inline_tx) = if init.overlap {
+        let (stx, srx) = mpsc::sync_channel::<Computed>(1);
+        let codec = Arc::clone(&codec);
+        let pool = Arc::clone(&pool);
+        let wire_ms = init.sim_wire_ms_per_mib;
+        let mut tx = tx;
+        let handle = thread::Builder::new()
+            .name(format!("d2ft-dist-{}-tx", init.worker))
+            .spawn(move || {
+                while let Ok(c) = srx.recv() {
+                    if encode_and_send(&codec, &pool, wire_ms, tx.as_mut(), c).is_err() {
+                        // Aggregator gone: stop draining; the compute
+                        // thread will notice on its own half.
+                        break;
+                    }
+                }
+                tx
+            })
+            .expect("spawning dist sender thread");
+        (Some(stx), Some(handle), None)
+    } else {
+        (None, None, Some(tx))
+    };
+
+    let mut result = Ok(());
+    loop {
+        let frame = match rx.recv_blob() {
+            Ok(f) => f,
+            Err(e) => {
+                result = Err(e.context("receiving job frame"));
+                break;
+            }
+        };
+        let step = handle_frame(&frame, &mut be, &codec, init, &pool, &sender_tx, &mut inline_tx);
+        pool.give_back(frame);
+        match step {
+            Ok(true) => continue,
+            Ok(false) => break,
+            Err(e) => {
+                result = Err(e);
+                break;
+            }
+        }
+    }
+
+    // Rejoin the uplink half. By the time a Shutdown frame arrives the
+    // aggregator has received every gradient of every batch, so the
+    // sender queue is already drained.
+    drop(sender_tx);
+    let mut tx = match (inline_tx, sender_handle) {
+        (Some(tx), None) => tx,
+        (None, Some(h)) => h.join().expect("joining dist sender thread"),
+        _ => unreachable!("exactly one uplink owner"),
+    };
+    if result.is_ok() {
+        let mut bye = pool.checkout();
+        encode_bye(pool.fresh_allocs(), pool.reuses(), &mut bye);
+        result = tx.send_blob(bye).context("sending Bye");
+    }
+    result
+}

@@ -270,7 +270,11 @@ pub fn table7(ctx: &ExperimentCtx) -> Result<String> {
     // homogeneous reference
     let base = TrainerConfig {
         batches: ctx.batches(16),
-        ..TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar100Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 2, 2),
+        )
     };
     let r0 = run_one(ctx, base.clone())?;
     table.row(&["0 (homogeneous)".into(), format!("{}", mc.body_subnets() + 2), pct(r0.test_top1)]);
@@ -298,7 +302,11 @@ pub fn table8(ctx: &ExperimentCtx) -> Result<String> {
     let mut table = Table::new(&["High-speed devices", "Top-1 accuracy"]);
     let base = TrainerConfig {
         batches: ctx.batches(16),
-        ..TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar100Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 2, 2),
+        )
     };
     let r0 = run_one(ctx, base.clone())?;
     table.row(&["0 (homogeneous)".into(), pct(r0.test_top1)]);

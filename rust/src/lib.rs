@@ -40,6 +40,17 @@
 //! engine and dist dataflows, and per-experiment index.
 
 #![warn(missing_docs)]
+// CI gates on `clippy -- -D warnings`. These three style lints are
+// allowed crate-wide: the hand-rolled tensor/linalg kernels and the
+// schedule DP index several parallel arrays in lockstep, where
+// index-based loops are the clearest (and sometimes the only bitwise-
+// order-preserving) formulation, and the dist worker plumbing threads
+// its full context explicitly rather than bundling ad-hoc structs.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments
+)]
 
 pub mod backend;
 pub mod cluster;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   repro train       [flags]   one fine-tuning run, any scheduler
+//!   repro dist-worker --connect host:port   join a TCP dist cluster
 //!   repro experiment  <id>      regenerate a paper table/figure
 //!   repro list                  list experiments
 //!   repro info                  backend/model summary
@@ -9,7 +10,12 @@
 //! `--backend native` (the default) needs no setup at all; `--backend
 //! xla` needs a build with `--features xla` plus `make artifacts`.
 //! `repro train --dist --workers K` runs the real data-parallel trainer
-//! (K worker threads, masked-gradient exchange, measured bytes).
+//! (K worker replicas, masked-gradient exchange, measured bytes).
+//! `--transport tcp` moves the exchange onto real sockets: the
+//! aggregator listens and forks K `repro dist-worker` subprocesses, or
+//! — with `--no-spawn` — waits for workers launched by hand (on this
+//! machine or any other) via `repro dist-worker --connect host:port`.
+//! Numerics are bitwise identical across transports.
 
 use anyhow::Result;
 
@@ -25,13 +31,21 @@ use d2ft::util::cli::Cli;
 
 fn cli() -> Cli {
     Cli::new("repro", "D2FT: Distributed Dynamic Fine-Tuning (paper reproduction)")
-        .positional("command", "train | experiment <id> | list | info")
+        .positional("command", "train | dist-worker | experiment <id> | list | info")
         .positional("experiment-id", "experiment id for `experiment`")
-        .flag("backend", "native", "compute backend: native (pure Rust, zero setup) | xla (PJRT artifacts)")
+        .flag(
+            "backend",
+            "native",
+            "compute backend: native (pure Rust, zero setup) | xla (PJRT artifacts)",
+        )
         .flag("model", "mini", "native model preset: mini | small (ViT-small-like, 74 subnets)")
         .flag("artifacts", "artifacts", "artifacts directory (xla backend only; make artifacts)")
         .flag("dataset", "c100", "c10 | c100 | cars")
-        .flag("scheduler", "d2ft", "d2ft | standard | random | dpruning-m | dpruning-mg | moe | scaler-max|min|0.1|0.2")
+        .flag(
+            "scheduler",
+            "d2ft",
+            "d2ft | standard | random | dpruning-m | dpruning-mg | moe | scaler-max|min|0.1|0.2",
+        )
         .flag("batches", "30", "fine-tuning batches")
         .flag("pretrain-batches", "10", "synthetic pre-training batches")
         .flag("train-size", "480", "training examples")
@@ -47,15 +61,54 @@ fn cli() -> Cli {
         .flag("scale", "1.0", "experiment run-length scale factor")
         .flag("lora-rank", "0", "LoRA adapter rank (0 = full FT)")
         .flag("eval-every", "0", "evaluate test top-1 every N batches")
-        .flag("workers", "0", "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas)")
+        .flag(
+            "workers",
+            "0",
+            "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas)",
+        )
         .flag("exchange", "allreduce", "dist gradient exchange: allreduce | ps (parameter server)")
-        .flag("threads", "1", "matmul kernel threads (native backend; 1 = serial default, 0 = auto/per-core; numerics-neutral)")
-        .flag("wire", "f32", "dist gradient wire precision: f32 (lossless) | f16 (half the bytes, lossy)")
+        .flag(
+            "threads",
+            "1",
+            "matmul kernel threads (native backend; 1 = serial default, 0 = auto/per-core)",
+        )
+        .flag(
+            "wire",
+            "f32",
+            "dist gradient wire precision: f32 (lossless) | f16 (half the bytes, lossy)",
+        )
+        .flag(
+            "transport",
+            "channel",
+            "dist frame transport: channel (in-process) | tcp (worker processes over sockets)",
+        )
+        .flag(
+            "listen",
+            "127.0.0.1:0",
+            "tcp transport: aggregator bind address (port 0 = ephemeral)",
+        )
+        .flag("connect", "", "dist-worker: aggregator address to join (host:port)")
+        .switch(
+            "no-spawn",
+            "tcp transport: do not fork dist-worker subprocesses; wait for external workers",
+        )
         .switch("serial", "serial cluster execution (reference path; same metrics)")
-        .switch("dist", "real data-parallel training: worker replicas + masked-gradient exchange (native)")
-        .switch("no-overlap", "serialize each dist worker's encode+upload after its compute (reference path; default overlaps)")
-        .switch("no-calibrate", "keep the paper's V100 exec-time model instead of recalibrating from measured times")
-        .switch("batch-accum", "one aggregated update per batch (the dist semantics) instead of per-micro")
+        .switch(
+            "dist",
+            "real data-parallel training: worker replicas + masked-gradient exchange (native)",
+        )
+        .switch(
+            "no-overlap",
+            "serialize each dist worker's encode+upload after its compute (default overlaps)",
+        )
+        .switch(
+            "no-calibrate",
+            "keep the paper's V100 exec-time model instead of recalibrating from measured times",
+        )
+        .switch(
+            "batch-accum",
+            "one aggregated update per batch (the dist semantics) instead of per-micro",
+        )
         .switch("quiet", "suppress info logging")
 }
 
@@ -128,6 +181,7 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
+        "dist-worker" => run_dist_worker(&args),
         "experiment" => {
             let id = args
                 .positional(1)
@@ -208,14 +262,43 @@ fn main() -> Result<()> {
     }
 }
 
+/// `repro dist-worker --connect host:port`: join a TCP dist cluster as
+/// one worker replica. Model-agnostic: everything (spec, seed, LoRA
+/// rank, wire precision) arrives in the aggregator's Init frame, so
+/// the same invocation serves any run — including one on another host.
+#[cfg(feature = "native")]
+fn run_dist_worker(args: &d2ft::util::cli::Args) -> Result<()> {
+    use d2ft::dist::{run_worker, BufPool, TcpTransport};
+    use std::sync::Arc;
+
+    let addr = args.get("connect");
+    anyhow::ensure!(
+        !addr.is_empty(),
+        "usage: repro dist-worker --connect <host:port> (the aggregator's --listen address)"
+    );
+    let pool = Arc::new(BufPool::new());
+    let transport =
+        TcpTransport::connect(addr, std::time::Duration::from_secs(60), Arc::clone(&pool))?;
+    d2ft::info!("dist-worker connected to {addr}");
+    run_worker(Box::new(transport), pool)?;
+    d2ft::info!("dist-worker shut down cleanly");
+    Ok(())
+}
+
+#[cfg(not(feature = "native"))]
+fn run_dist_worker(_args: &d2ft::util::cli::Args) -> Result<()> {
+    anyhow::bail!("dist-worker needs the `native` feature (rebuild with default features)")
+}
+
 /// `repro train --dist`: the real data-parallel runtime (native only).
 #[cfg(feature = "native")]
 fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     use d2ft::backend::native::{NativeProvider, NativeSpec};
-    use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode};
+    use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode, SpawnMode, TransportKind};
 
     anyhow::ensure!(
-        d2ft::backend::BackendKind::parse(args.get("backend"))? == d2ft::backend::BackendKind::Native,
+        d2ft::backend::BackendKind::parse(args.get("backend"))?
+            == d2ft::backend::BackendKind::Native,
         "--dist runs on the native backend (worker replicas need Send numerics)"
     );
     let mut spec = NativeSpec::preset(args.get("model"))?;
@@ -225,8 +308,20 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         0 => 4,
         w => w,
     };
+    let transport = match TransportKind::parse(args.get("transport"))? {
+        TransportKind::Tcp { .. } => TransportKind::Tcp {
+            listen: args.get("listen").to_string(),
+            spawn: if args.get_bool("no-spawn") {
+                SpawnMode::External
+            } else {
+                SpawnMode::Processes
+            },
+        },
+        kind => kind,
+    };
     let dcfg = DistConfig {
         exchange: ExchangeMode::parse(args.get("exchange"))?,
+        transport,
         overlap: !args.get_bool("no-overlap"),
         wire_precision: d2ft::dist::WirePrecision::parse(args.get("wire"))?,
         calibrate: !args.get_bool("no-calibrate"),
@@ -237,7 +332,7 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     let t = &r.train;
     println!("backend              {} (dist)", t.backend);
     println!("scheduler            {}", t.scheduler);
-    println!("workers              {} ({})", r.n_workers, r.exchange);
+    println!("workers              {} ({}, {} transport)", r.n_workers, r.exchange, r.transport);
     println!("batches              {}", t.batches);
     println!("final train loss     {:.4}", t.final_train_loss);
     println!("test top-1           {}", pct(t.test_top1));
@@ -252,15 +347,27 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     );
     println!("bytes downlink       {}", fmt_bytes(r.wire.down_bytes));
     println!("bytes modeled        {}", fmt_bytes(r.modeled_wire_bytes));
-    println!("bytes pretrain       {} (dense; excluded above)", fmt_bytes(r.pretrain_wire.total_bytes()));
+    println!(
+        "bytes transport      {} out / {} in over {} frames (whole frames incl. control)",
+        fmt_bytes(r.socket.bytes_sent),
+        fmt_bytes(r.socket.bytes_recv),
+        r.socket.frames_sent + r.socket.frames_recv
+    );
+    println!(
+        "bytes pretrain       {} (dense; excluded above)",
+        fmt_bytes(r.pretrain_wire.total_bytes())
+    );
     println!("mean step (measured) {:.3}ms", r.mean_step_ms);
     println!("straggler (measured) {:.3}ms/batch", t.straggler_ms);
     println!("worker utilization   {}", pct(r.worker_utilization));
     println!("worker imbalance     {:.4}", r.worker_imbalance);
     if t.calib_epochs > 0 {
         println!(
-            "exec-time calib      x{:.3} over {} epochs; model-vs-measured drift {}",
+            "exec-time calib      x{:.3} (p_f x{:.3}, p_o x{:.3}) over {} epochs; \
+             model-vs-measured drift {}",
             t.calib_scale,
+            t.calib_scale_full,
+            t.calib_scale_fwd,
             t.calib_epochs,
             pct(t.makespan_drift)
         );

@@ -57,8 +57,12 @@ impl Partition {
     /// Group `group` consecutive heads per subnet (paper's 38-subnet
     /// config is group=2 on ViT-small, 26-subnet is group=3).
     pub fn grouped(cfg: &ModelConfig, group: usize) -> Partition {
-        assert!(group >= 1 && cfg.heads % group == 0,
-                "head count {} not divisible by group {}", cfg.heads, group);
+        assert!(
+            group >= 1 && cfg.heads % group == 0,
+            "head count {} not divisible by group {}",
+            cfg.heads,
+            group
+        );
         let mut subnets = Vec::new();
         for block in 0..cfg.depth {
             for g in 0..(cfg.heads / group) {

@@ -155,7 +155,11 @@ mod tests {
         // With forward scores scaled below backward ones, p_f wins the
         // capacity — matching the paper's claim that Max ≈ bi-level.
         let s = sched(Lambda::Max);
-        let ops = s.schedule_device(&[5.0, 4.0, 3.0, 2.0, 1.0], &[9.0, 9.0, 9.0, 9.0, 9.0], 2 * 5 + 2 * 2);
+        let ops = s.schedule_device(
+            &[5.0, 4.0, 3.0, 2.0, 1.0],
+            &[9.0, 9.0, 9.0, 9.0, 9.0],
+            2 * 5 + 2 * 2,
+        );
         let n_full = ops.iter().filter(|&&o| o == Op::Full).count();
         assert_eq!(n_full, 2);
         assert!(ops.iter().filter(|&&o| o == Op::ForwardOnly).count() >= 2);

@@ -47,8 +47,10 @@ pub struct Budget {
 impl Budget {
     /// Same `(n_full, n_fwd)` budget on every device.
     pub fn uniform(n_micro: usize, n_full: usize, n_fwd: usize) -> Budget {
-        assert!(n_full + n_fwd <= n_micro,
-                "budget ({n_full} p_f + {n_fwd} p_o) exceeds {n_micro} micro-batches");
+        assert!(
+            n_full + n_fwd <= n_micro,
+            "budget ({n_full} p_f + {n_fwd} p_o) exceeds {n_micro} micro-batches"
+        );
         Budget { n_micro, n_full, n_fwd, per_device: Vec::new() }
     }
 

@@ -1,0 +1,282 @@
+//! The transport seam's contract, end to end:
+//!
+//! 1. **Cross-transport determinism** — the same distributed run over
+//!    in-process channels and over real TCP loopback sockets produces
+//!    *bitwise* identical trajectories, eval metrics, and parameters,
+//!    and (on the lossless f32 wire) both equal the serial
+//!    `coordinator::Trainer` under `UpdateMode::BatchAccum` — for
+//!    K ∈ {2, 4}, comm/compute overlap on and off, and both wire
+//!    precisions. The TCP workers run the *same* `run_worker` loop a
+//!    `repro dist-worker` subprocess runs; only the socket is local.
+//! 2. **Failure modes** — a worker that drops its connection mid-epoch
+//!    surfaces as a descriptive error at the aggregator (never a hung
+//!    barrier), and a malformed frame on the uplink is rejected with a
+//!    descriptive error rather than a panic or a misparse.
+//!
+//! Hermetic: native backend only, loopback sockets only.
+#![cfg(feature = "native")]
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use d2ft::backend::native::{NativeProvider, NativeSpec};
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
+use d2ft::data::SyntheticKind;
+use d2ft::dist::{
+    run_worker, BlobRx, BlobTx, BufPool, DistConfig, DistReport, DistTrainer, SpawnMode,
+    TcpTransport, Transport, TransportKind, WirePrecision,
+};
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::Budget;
+use d2ft::tensor::Tensor;
+
+fn small_spec() -> NativeSpec {
+    NativeSpec {
+        config: ModelConfig {
+            img_size: 8,
+            patch: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            lora_rank: 0,
+            head_dim: 8,
+            tokens: 5,
+        },
+        micro_batch: 2,
+        mb_variants: vec![],
+        lora_ranks: vec![2],
+        lora_standard_rank: 2,
+        init_seed: 0x7C9,
+        threads: 1,
+    }
+}
+
+fn cfg() -> TrainerConfig {
+    TrainerConfig {
+        train_size: 80,
+        test_size: 16,
+        batches: 2,
+        pretrain_batches: 1,
+        update: UpdateMode::BatchAccum,
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar10Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 3, 1),
+        )
+    }
+}
+
+/// Loopback TCP with in-process worker threads: every socket byte is
+/// real, no subprocess needed.
+fn tcp_threads() -> TransportKind {
+    TransportKind::Tcp { listen: "127.0.0.1:0".to_string(), spawn: SpawnMode::Threads }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run one distributed configuration and return the report plus two
+/// parameter tensors (body weights + classifier) for bitwise checks.
+fn run_dist(
+    provider: &NativeProvider,
+    transport: TransportKind,
+    workers: usize,
+    overlap: bool,
+    wire: WirePrecision,
+) -> (DistReport, Tensor, Tensor) {
+    let dcfg = DistConfig {
+        transport,
+        overlap,
+        wire_precision: wire,
+        ..DistConfig::new(cfg(), workers)
+    };
+    let mut dt = DistTrainer::new(provider, dcfg).expect("building dist trainer");
+    let r = dt.run().expect("dist run");
+    let w = dt.backend().param("b00_wqkv").unwrap();
+    let head = dt.backend().param("z_head_w").unwrap();
+    (r, w, head)
+}
+
+#[test]
+fn tcp_matches_channel_and_serial_bitwise_f32() {
+    let provider = NativeProvider::new(small_spec());
+    let mut serial = Trainer::new(&provider, cfg()).unwrap();
+    let rs = serial.run().unwrap();
+    let serial_w = serial.backend().param("b00_wqkv").unwrap();
+    let serial_head = serial.backend().param("z_head_w").unwrap();
+    for k in [2usize, 4] {
+        for overlap in [true, false] {
+            let (rc, wc, hc) = run_dist(
+                &provider,
+                TransportKind::Channel,
+                k,
+                overlap,
+                WirePrecision::F32,
+            );
+            let (rt, wt, ht) =
+                run_dist(&provider, tcp_threads(), k, overlap, WirePrecision::F32);
+            let tag = format!("K={k} overlap={overlap}");
+            assert_eq!(rt.transport, "tcp", "{tag}");
+            assert_eq!(rc.transport, "channel", "{tag}");
+            assert_eq!(
+                bits(&rs.loss_curve),
+                bits(&rc.train.loss_curve),
+                "{tag}: channel loss trajectory must be bitwise serial"
+            );
+            assert_eq!(
+                bits(&rs.loss_curve),
+                bits(&rt.train.loss_curve),
+                "{tag}: tcp loss trajectory must be bitwise serial"
+            );
+            assert_eq!(
+                rs.test_top1.to_bits(),
+                rt.train.test_top1.to_bits(),
+                "{tag}: tcp eval accuracy"
+            );
+            assert_eq!(serial_w, wc, "{tag}: channel body weights");
+            assert_eq!(serial_w, wt, "{tag}: tcp body weights");
+            assert_eq!(serial_head, hc, "{tag}: channel classifier");
+            assert_eq!(serial_head, ht, "{tag}: tcp classifier");
+            // The gradient byte accounting is transport-independent...
+            assert_eq!(rc.wire.up_bytes, rt.wire.up_bytes, "{tag}: same wire bytes");
+            assert_eq!(rc.grad_savings, rt.grad_savings, "{tag}: same savings");
+            // ...while the socket totals cover it plus framing/control.
+            assert!(
+                rt.socket.bytes_recv >= rt.wire.up_bytes + rt.pretrain_wire.up_bytes,
+                "{tag}: socket recv must cover every gradient byte"
+            );
+            assert!(rt.socket.bytes_sent > 0, "{tag}: init/jobs/broadcasts crossed the socket");
+        }
+    }
+}
+
+#[test]
+fn tcp_matches_channel_bitwise_f16() {
+    // The f16 wire is lossy vs the serial trainer by design, but the
+    // requantized trajectory must still be bitwise identical across
+    // transports — same bytes, same reduction, different pipes.
+    let provider = NativeProvider::new(small_spec());
+    for k in [2usize, 4] {
+        for overlap in [true, false] {
+            let (rc, wc, hc) = run_dist(
+                &provider,
+                TransportKind::Channel,
+                k,
+                overlap,
+                WirePrecision::F16,
+            );
+            let (rt, wt, ht) =
+                run_dist(&provider, tcp_threads(), k, overlap, WirePrecision::F16);
+            let tag = format!("K={k} overlap={overlap}");
+            assert_eq!(
+                bits(&rc.train.loss_curve),
+                bits(&rt.train.loss_curve),
+                "{tag}: f16 trajectories must agree across transports"
+            );
+            assert_eq!(wc, wt, "{tag}: f16 body weights");
+            assert_eq!(hc, ht, "{tag}: f16 classifier");
+            assert_eq!(rc.wire.up_bytes, rt.wire.up_bytes, "{tag}: same f16 bytes");
+        }
+    }
+}
+
+/// Reserve a loopback address that is almost certainly free: bind an
+/// ephemeral port, note it, release it.
+fn free_addr() -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+/// Launch a trainer over external-worker TCP in a thread, reporting
+/// its run() result through a channel (so a hang fails the test by
+/// timeout instead of blocking forever).
+fn spawn_trainer(addr: String, workers: usize) -> mpsc::Receiver<anyhow::Result<DistReport>> {
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let provider = NativeProvider::new(small_spec());
+        let dcfg = DistConfig {
+            transport: TransportKind::Tcp { listen: addr, spawn: SpawnMode::External },
+            ..DistConfig::new(cfg(), workers)
+        };
+        let result = DistTrainer::new(&provider, dcfg).and_then(|mut dt| dt.run());
+        let _ = tx.send(result);
+    });
+    rx
+}
+
+#[test]
+fn worker_disconnect_mid_epoch_surfaces_a_clean_error() {
+    let addr = free_addr();
+    let result_rx = spawn_trainer(addr.clone(), 2);
+    // Worker 1: honest — the real run_worker loop over a real socket.
+    let honest_addr = addr.clone();
+    let honest = thread::spawn(move || {
+        let pool = Arc::new(BufPool::new());
+        let t = TcpTransport::connect(&honest_addr, Duration::from_secs(10), Arc::clone(&pool))
+            .expect("honest worker connect");
+        // Errors are expected here: the aggregator aborts the run when
+        // its sibling vanishes, taking this link down too.
+        let _ = run_worker(Box::new(t), pool);
+    });
+    // Worker 0 (connected first => first in accept order): completes
+    // the handshake, then drops the connection on its first compute
+    // job — mid-epoch, with gradients outstanding.
+    {
+        let pool = Arc::new(BufPool::new());
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
+            .expect("dropping worker connect");
+        let init = t.recv_blob().expect("init frame");
+        assert_eq!(
+            d2ft::dist::proto::peek_tag(&init).unwrap(),
+            d2ft::dist::proto::TAG_INIT
+        );
+        t.barrier().expect("handshake barrier");
+        let _job = t.recv_blob().expect("first compute job");
+        // Vanish without a word.
+        drop(t);
+    }
+    let result = result_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("trainer must fail fast, not hang on the dead worker");
+    let err = format!("{:#}", result.expect_err("run must fail"));
+    assert!(
+        err.contains("lost mid-batch"),
+        "error must name the lost worker and phase, got: {err}"
+    );
+    honest.join().unwrap();
+}
+
+#[test]
+fn malformed_uplink_frame_is_rejected_descriptively() {
+    let addr = free_addr();
+    let result_rx = spawn_trainer(addr.clone(), 1);
+    // The lone worker completes the handshake, then answers its first
+    // compute job with garbage instead of a gradient frame.
+    {
+        let pool = Arc::new(BufPool::new());
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
+            .expect("worker connect");
+        let _init = t.recv_blob().expect("init frame");
+        t.barrier().expect("handshake barrier");
+        let _job = t.recv_blob().expect("first compute job");
+        t.send_blob(vec![0xFF; 12]).expect("sending garbage");
+        // Keep the socket open long enough for the frame to land; the
+        // aggregator must reject the *content*, not rely on a close.
+        thread::sleep(Duration::from_millis(200));
+    }
+    let result = result_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("trainer must reject the frame, not hang");
+    let err = format!("{:#}", result.expect_err("run must fail"));
+    assert!(
+        err.contains("unexpected frame tag"),
+        "error must identify the malformed frame, got: {err}"
+    );
+}

@@ -66,7 +66,8 @@ fn wqkv_head_delta(
             for h in 0..cfg.heads {
                 for c in 0..dh {
                     let col = p * d + h * dh + c;
-                    let delta = (after.data()[r * 3 * d + col] - before.data()[r * 3 * d + col]).abs();
+                    let delta =
+                        (after.data()[r * 3 * d + col] - before.data()[r * 3 * d + col]).abs();
                     if h == head {
                         target += delta;
                     } else {
