@@ -1123,6 +1123,55 @@ impl NativeBackend {
         }
         Ok(())
     }
+
+    /// Export the full optimizer state as two flat vectors — parameters
+    /// and momentum, concatenated in canonical (names-vector) order.
+    /// This is the payload of the dist control plane's `State` frame: a
+    /// rejoining or resuming worker installs it to become a bitwise
+    /// replica of the aggregator mid-run.
+    pub fn export_state_flat(&self) -> (Vec<f32>, Vec<f32>) {
+        let total: usize = self.params.iter().map(|p| p.len()).sum();
+        let mut params = Vec::with_capacity(total);
+        let mut momentum = Vec::with_capacity(total);
+        for p in &self.params {
+            params.extend_from_slice(p.data());
+        }
+        for m in &self.momentum {
+            momentum.extend_from_slice(m.data());
+        }
+        (params, momentum)
+    }
+
+    /// Install optimizer state exported by [`Self::export_state_flat`]
+    /// on a replica built from the same spec (positional copy; the
+    /// canonical tensor order is identical by construction).
+    pub fn import_state_flat(&mut self, params: &[f32], momentum: &[f32]) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.len()).sum();
+        anyhow::ensure!(
+            params.len() == total,
+            "state params have {} elements, model needs {total}",
+            params.len()
+        );
+        let mtotal: usize = self.momentum.iter().map(|m| m.len()).sum();
+        anyhow::ensure!(
+            momentum.len() == mtotal,
+            "state momentum has {} elements, model needs {mtotal}",
+            momentum.len()
+        );
+        let mut off = 0;
+        for p in &mut self.params {
+            let n = p.len();
+            p.data_mut().copy_from_slice(&params[off..off + n]);
+            off += n;
+        }
+        let mut off = 0;
+        for m in &mut self.momentum {
+            let n = m.len();
+            m.data_mut().copy_from_slice(&momentum[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
 }
 
 impl Backend for NativeBackend {

@@ -90,6 +90,12 @@ impl OrderedReducer {
         self.slots.iter().all(|s| s.is_some())
     }
 
+    /// Whether `micro`'s slot has reported (out-of-range counts as
+    /// filled so the control plane never reassigns a bogus index).
+    pub fn filled(&self, micro: usize) -> bool {
+        self.slots.get(micro).map(|s| s.is_some()).unwrap_or(true)
+    }
+
     /// Decode every message into `acc` in ascending micro order and
     /// scale by `1/n` (the batch-mean gradient). `masks[i]` must be the
     /// mask pair micro `i` was scheduled (and encoded) under; `acc`
@@ -130,6 +136,17 @@ mod tests {
     use crate::backend::Backend;
     use crate::data::{DatasetSpec, SyntheticKind};
     use crate::runtime::ModelConfig;
+
+    #[test]
+    fn filled_tracks_slots_and_tolerates_bad_indices() {
+        let mut r = OrderedReducer::new(3);
+        assert!(!r.filled(0));
+        r.push(1, vec![0u8; 4], 0).unwrap();
+        assert!(r.filled(1));
+        assert!(!r.filled(2));
+        // Out of range reads as filled: nothing to reassign there.
+        assert!(r.filled(99));
+    }
 
     fn backend() -> NativeBackend {
         let spec = NativeSpec {

@@ -1,0 +1,274 @@
+//! Epoch-boundary training checkpoints for the distributed control
+//! plane.
+//!
+//! A [`Checkpoint`] freezes everything the aggregator needs to resume a
+//! run bitwise: the flattened parameter and momentum vectors (exported
+//! via `NativeBackend::export_state_flat`, the same payload the `State`
+//! frame ships to a rejoining worker) plus the per-position score-book
+//! cache. The score books matter: D2FT computes contribution scores
+//! during epoch 0 and *reuses* them in later epochs, so recomputing
+//! them from resumed parameters would change the masks and break the
+//! bitwise-resume guarantee `tests/dist_fault.rs` pins.
+//!
+//! The on-disk format is deliberately dependency-free: little-endian
+//! fields behind a magic/version header, with a trailing FNV-1a
+//! checksum over everything before it. Loading is defensive end to
+//! end — a truncated, corrupt, or foreign file produces a descriptive
+//! error, never a panic or a garbage resume.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::scores::{Metric, ScoreBook};
+
+use super::proto::Cursor;
+
+/// File magic: `D2CK` little-endian.
+const MAGIC: u32 = u32::from_le_bytes(*b"D2CK");
+/// Format version (bump on any layout change).
+const VERSION: u32 = 1;
+/// Metric serialization order (fixed: the enum's probe channel order).
+const METRICS: [Metric; 4] = [Metric::Fisher, Metric::GradMag, Metric::Taylor, Metric::WeightMag];
+
+/// One resumable snapshot of a distributed run at an epoch boundary.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Epochs fully completed when the snapshot was taken.
+    pub epoch: usize,
+    /// Global batch counter at the snapshot (start of `epoch`'s next).
+    pub batch: usize,
+    /// Flattened parameters in canonical order, bit-exact.
+    pub params: Vec<f32>,
+    /// Flattened momentum in canonical order, bit-exact.
+    pub momentum: Vec<f32>,
+    /// The per-epoch-position score cache (`None` = not yet probed).
+    pub score_books: Vec<Option<ScoreBook>>,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    /// Serialize to the `D2CK` byte format (header + state + checksum).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + 4 * (self.params.len() + self.momentum.len()));
+        put_u32(&mut out, MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.epoch as u32);
+        put_u32(&mut out, self.batch as u32);
+        put_u64(&mut out, self.params.len() as u64);
+        for &v in &self.params {
+            put_u32(&mut out, v.to_bits());
+        }
+        put_u64(&mut out, self.momentum.len() as u64);
+        for &v in &self.momentum {
+            put_u32(&mut out, v.to_bits());
+        }
+        put_u32(&mut out, self.score_books.len() as u32);
+        for slot in &self.score_books {
+            match slot {
+                None => out.push(0),
+                Some(book) => {
+                    out.push(1);
+                    put_u32(&mut out, book.n_subnets as u32);
+                    put_u32(&mut out, book.n_micro as u32);
+                    for metric in METRICS {
+                        for s in 0..book.n_subnets {
+                            for m in 0..book.n_micro {
+                                put_u64(&mut out, book.get(metric, s, m).to_bits());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let sum = fnv64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse a `D2CK` byte blob (see [`Self::encode`]).
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        anyhow::ensure!(
+            bytes.len() >= 8,
+            "checkpoint is {} bytes — too short to even hold its checksum",
+            bytes.len()
+        );
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv64(body);
+        anyhow::ensure!(
+            stored == actual,
+            "checkpoint checksum mismatch (stored {stored:#018x}, computed {actual:#018x}) \
+             — the file is corrupt or truncated"
+        );
+        let mut c = Cursor::new(body);
+        let magic = c.u32("checkpoint magic")?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "not a d2ft checkpoint: bad magic {magic:#010x} (expected {MAGIC:#010x})"
+        );
+        let version = c.u32("checkpoint version")?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads {VERSION})"
+        );
+        let epoch = c.u32("checkpoint epoch")? as usize;
+        let batch = c.u32("checkpoint batch")? as usize;
+        let read_f32s = |c: &mut Cursor<'_>, what: &str| -> Result<Vec<f32>> {
+            let n = c.u64(what)? as usize;
+            anyhow::ensure!(
+                n.saturating_mul(4) <= c.remaining(),
+                "corrupt count: {what} claims {n} f32s but only {} bytes remain",
+                c.remaining()
+            );
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(c.f32(what)?);
+            }
+            Ok(v)
+        };
+        let params = read_f32s(&mut c, "checkpoint params")?;
+        let momentum = read_f32s(&mut c, "checkpoint momentum")?;
+        let n_slots = c.count(1, "score slot count")?;
+        let mut score_books = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            let present = c.u8("score slot presence")?;
+            match present {
+                0 => score_books.push(None),
+                1 => {
+                    let n_subnets = c.u32("score book subnets")? as usize;
+                    let n_micro = c.u32("score book micros")? as usize;
+                    let cells = n_subnets.checked_mul(n_micro).ok_or_else(|| {
+                        anyhow::anyhow!("corrupt count: score book dimensions overflow")
+                    })?;
+                    anyhow::ensure!(
+                        cells.saturating_mul(4 * 8) <= c.remaining(),
+                        "corrupt count: score book claims {cells} cells but only {} bytes remain",
+                        c.remaining()
+                    );
+                    let mut book = ScoreBook::zeros(n_subnets, n_micro);
+                    for metric in METRICS {
+                        for s in 0..n_subnets {
+                            for m in 0..n_micro {
+                                book.set(metric, s, m, c.f64("score cell")?);
+                            }
+                        }
+                    }
+                    score_books.push(Some(book));
+                }
+                p => anyhow::bail!("corrupt score slot presence byte {p} (expected 0 or 1)"),
+            }
+        }
+        Ok(Checkpoint { epoch, batch, params, momentum, score_books })
+    }
+
+    /// Write the checkpoint to `path` atomically enough for a crash
+    /// between epochs: encode fully in memory, then one `write`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read and validate a checkpoint from `path`.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::decode(&bytes)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut book = ScoreBook::zeros(2, 3);
+        for s in 0..2 {
+            for m in 0..3 {
+                book.set(Metric::Fisher, s, m, 1.5 * (s * 3 + m) as f64);
+                book.set(Metric::WeightMag, s, m, -0.25 + m as f64);
+            }
+        }
+        Checkpoint {
+            epoch: 2,
+            batch: 9,
+            params: vec![0.5, -0.0, f32::MIN_POSITIVE, 3.25],
+            momentum: vec![-1.5, 2.0e-8, 0.0, 7.0],
+            score_books: vec![Some(book), None],
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let ck = sample();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.epoch, 2);
+        assert_eq!(back.batch, 9);
+        assert_eq!(bits(&back.params), bits(&ck.params));
+        assert_eq!(bits(&back.momentum), bits(&ck.momentum));
+        assert_eq!(back.score_books.len(), 2);
+        assert!(back.score_books[1].is_none());
+        let book = back.score_books[0].as_ref().unwrap();
+        assert_eq!(book.n_subnets, 2);
+        assert_eq!(book.n_micro, 3);
+        assert_eq!(book.get(Metric::Fisher, 1, 2).to_bits(), (1.5f64 * 5.0).to_bits());
+        assert_eq!(book.get(Metric::WeightMag, 0, 1).to_bits(), 0.75f64.to_bits());
+        assert_eq!(book.get(Metric::Taylor, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn save_and_load_through_a_file() {
+        let dir = std::env::temp_dir().join(format!("d2ft-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt_e1.d2ck");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(bits(&back.params), bits(&ck.params));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_a_descriptive_error_not_a_panic() {
+        let good = sample().encode();
+        // A flipped byte in the middle trips the checksum.
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        let err = Checkpoint::decode(&flipped).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        // Truncation trips it too (the checksum tail is gone).
+        let err = Checkpoint::decode(&good[..good.len() - 13]).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        // Nearly-empty files are called out by size.
+        let err = Checkpoint::decode(&good[..5]).unwrap_err().to_string();
+        assert!(err.contains("too short"), "got: {err}");
+        // A foreign file with a valid checksum is rejected by magic.
+        let mut foreign = b"definitely not a checkpoint".to_vec();
+        let sum = super::fnv64(&foreign);
+        foreign.extend_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::decode(&foreign).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "got: {err}");
+    }
+}

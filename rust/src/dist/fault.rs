@@ -1,0 +1,190 @@
+//! Deterministic fault injection for the distributed runtime.
+//!
+//! A [`FaultPlan`] is a scripted sequence of failure behaviors a worker
+//! acts out while otherwise running the normal `run_worker` loop — the
+//! seam that makes every chaos scenario in `tests/dist_fault.rs`
+//! reproducible in-process, over loopback TCP, and in a forked
+//! subprocess, without real machine failures. Plans have a compact
+//! string grammar for the CLI (`repro dist-worker --fault ...` and
+//! `repro train --dist --fault 0:kill-after-micro=2`):
+//!
+//! ```text
+//! plan    := action (';' action)*
+//! action  := 'kill-after-micro=' N     # exit abruptly after N gradient sends
+//!          | 'stall-ms=' MS '@' N      # sleep MS ms once, before send N
+//!          | 'drop-uplink=' N          # compute but drop gradient send N
+//!          | 'rejoin-at-epoch=' E      # (trainer-side) respawn at epoch E
+//! ```
+//!
+//! Counting is in *gradient sends*: deterministic under the overlap
+//! pipeline because actions trigger at queueing time, before any
+//! timing-dependent interleaving.
+
+use anyhow::Result;
+
+/// One scripted failure behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Exit abruptly (no Bye, link dropped) after `n` gradient sends.
+    KillAfterMicro(usize),
+    /// Sleep `ms` milliseconds once, just before gradient send
+    /// `after_micro` — a slow-but-alive straggler.
+    StallMs {
+        /// Gradient-send index the stall precedes.
+        after_micro: usize,
+        /// Stall duration in milliseconds.
+        ms: u64,
+    },
+    /// Compute gradient send `n` normally but never send it.
+    DropUplinkFrame(usize),
+    /// Trainer-side: respawn this worker at the start of epoch `e`.
+    RejoinAtEpoch(usize),
+}
+
+impl std::fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultAction::KillAfterMicro(n) => write!(f, "kill-after-micro={n}"),
+            FaultAction::StallMs { after_micro, ms } => write!(f, "stall-ms={ms}@{after_micro}"),
+            FaultAction::DropUplinkFrame(n) => write!(f, "drop-uplink={n}"),
+            FaultAction::RejoinAtEpoch(e) => write!(f, "rejoin-at-epoch={e}"),
+        }
+    }
+}
+
+/// A worker's scripted fault schedule (empty = fault-free).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The scripted actions, matched against the worker's gradient-send
+    /// counter (order in the vector is irrelevant; triggers are by index).
+    pub actions: Vec<FaultAction>,
+}
+
+impl FaultPlan {
+    /// Parse the `;`-joined action grammar (see module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut actions = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault action {part:?} is missing '='"))?;
+            let action = match key {
+                "kill-after-micro" => FaultAction::KillAfterMicro(parse_num(val, part)?),
+                "drop-uplink" => FaultAction::DropUplinkFrame(parse_num(val, part)?),
+                "rejoin-at-epoch" => FaultAction::RejoinAtEpoch(parse_num(val, part)?),
+                "stall-ms" => {
+                    let (ms, at) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("stall action {part:?} needs 'stall-ms=MS@N'")
+                    })?;
+                    FaultAction::StallMs {
+                        after_micro: parse_num(at, part)?,
+                        ms: parse_num::<u64>(ms, part)?,
+                    }
+                }
+                _ => anyhow::bail!(
+                    "unknown fault action {key:?} \
+                     (kill-after-micro|stall-ms|drop-uplink|rejoin-at-epoch)"
+                ),
+            };
+            actions.push(action);
+        }
+        Ok(FaultPlan { actions })
+    }
+
+    /// True when no actions are scripted.
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, a) in self.actions.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{a}")?;
+        }
+        Ok(())
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, ctx: &str) -> Result<T> {
+    s.trim()
+        .parse::<T>()
+        .map_err(|_| anyhow::anyhow!("fault action {ctx:?}: {s:?} is not a valid number"))
+}
+
+/// Parse a per-worker fault spec: `WORKER:PLAN` entries joined by `,`,
+/// e.g. `0:kill-after-micro=2,1:stall-ms=100@0`.
+pub fn parse_worker_plans(s: &str) -> Result<Vec<(usize, FaultPlan)>> {
+    let mut out = Vec::new();
+    for entry in s.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (w, plan) = entry
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault spec {entry:?} needs 'WORKER:PLAN'"))?;
+        out.push((parse_num(w, entry)?, FaultPlan::parse(plan)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips_through_display() {
+        let plan = FaultPlan {
+            actions: vec![
+                FaultAction::KillAfterMicro(2),
+                FaultAction::StallMs { after_micro: 1, ms: 200 },
+                FaultAction::DropUplinkFrame(4),
+                FaultAction::RejoinAtEpoch(1),
+            ],
+        };
+        let s = plan.to_string();
+        assert_eq!(s, "kill-after-micro=2;stall-ms=200@1;drop-uplink=4;rejoin-at-epoch=1");
+        assert_eq!(FaultPlan::parse(&s).unwrap(), plan);
+    }
+
+    #[test]
+    fn empty_and_whitespace_plans_parse_as_fault_free() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+        assert_eq!(FaultPlan::default().to_string(), "");
+    }
+
+    #[test]
+    fn malformed_plans_error_descriptively() {
+        let err = FaultPlan::parse("explode=1").unwrap_err().to_string();
+        assert!(err.contains("unknown fault action"), "got: {err}");
+        let err = FaultPlan::parse("kill-after-micro").unwrap_err().to_string();
+        assert!(err.contains("missing '='"), "got: {err}");
+        let err = FaultPlan::parse("stall-ms=100").unwrap_err().to_string();
+        assert!(err.contains("stall-ms=MS@N"), "got: {err}");
+        let err = FaultPlan::parse("drop-uplink=banana").unwrap_err().to_string();
+        assert!(err.contains("not a valid number"), "got: {err}");
+    }
+
+    #[test]
+    fn worker_plans_parse_per_worker() {
+        let plans = parse_worker_plans("0:kill-after-micro=2,3:stall-ms=100@0").unwrap();
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].0, 0);
+        assert_eq!(plans[0].1.actions, vec![FaultAction::KillAfterMicro(2)]);
+        assert_eq!(plans[1].0, 3);
+        assert_eq!(
+            plans[1].1.actions,
+            vec![FaultAction::StallMs { after_micro: 0, ms: 100 }]
+        );
+        assert!(parse_worker_plans("nope").is_err());
+    }
+}

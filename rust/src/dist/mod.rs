@@ -56,8 +56,22 @@
 //!   `std::net`, gradient payloads in the unchanged [`grads::GradCodec`]
 //!   format. Identical bytes + the fixed reduction order make training
 //!   **bitwise identical across transports** (`tests/dist_tcp.rs`).
+//! * [`fault`] / [`checkpoint`] — the elastic control plane. Workers
+//!   `Join` with a protocol version, heartbeat `Ping`s between jobs,
+//!   and are evicted when a liveness window (derived from the
+//!   heartbeat interval, not a fixed receive timeout) lapses; a lost
+//!   worker's unfinished micro-batches are re-executed on survivors in
+//!   the same fixed reduction order, so recovery — like everything
+//!   else here — cannot change the numerics. Scripted
+//!   [`fault::FaultPlan`]s (`kill-after-micro=N`, `stall-ms=M@N`,
+//!   `drop-uplink=N`, `rejoin-at-epoch=E`) inject failures
+//!   deterministically in-process or over TCP; epoch-boundary
+//!   [`checkpoint::Checkpoint`]s make a killed run resumable bitwise
+//!   (`tests/dist_fault.rs`).
 
 pub mod allreduce;
+pub mod checkpoint;
+pub mod fault;
 pub mod grads;
 pub mod proto;
 pub mod trainer;
@@ -65,9 +79,12 @@ pub mod transport;
 pub mod worker;
 
 pub use allreduce::{ExchangeMode, OrderedReducer};
+pub use checkpoint::Checkpoint;
+pub use fault::{parse_worker_plans, FaultAction, FaultPlan};
 pub use grads::{BufPool, GradCodec, WirePrecision, WireStats};
-pub use trainer::{DistConfig, DistReport, DistTrainer};
+pub use trainer::{DistConfig, DistReport, DistTrainer, MembershipEvent};
 pub use transport::{
-    BlobRx, BlobTx, SpawnMode, TcpTransport, Transport, TransportKind, TransportStats,
+    liveness_window, BlobRx, BlobTx, SpawnMode, TcpTransport, Transport, TransportKind,
+    TransportStats,
 };
-pub use worker::run_worker;
+pub use worker::{run_worker, run_worker_with_faults};

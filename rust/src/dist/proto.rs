@@ -42,10 +42,30 @@ pub const TAG_SHUTDOWN: u32 = 0x4406;
 pub const TAG_UP: u32 = 0x4411;
 /// Worker → aggregator: shutdown acknowledgment + local pool stats.
 pub const TAG_BYE: u32 = 0x4412;
+/// Worker → aggregator: heartbeat — "I am alive" (carries a sequence
+/// number; arrival resets the aggregator's liveness timer).
+pub const TAG_PING: u32 = 0x4421;
+/// Aggregator → worker: heartbeat acknowledgment / epoch beacon.
+pub const TAG_PONG: u32 = 0x4422;
+/// Worker → aggregator: membership request, sent first on connect
+/// (carries the worker's protocol version for handshake validation).
+pub const TAG_JOIN: u32 = 0x4423;
+/// Aggregator → worker: you have been evicted from the membership
+/// (missed liveness deadline or broken link); exit without a Bye.
+pub const TAG_EVICT: u32 = 0x4424;
+/// Aggregator → worker: install this optimizer state (flattened
+/// params + momentum) — sent on rejoin and on checkpoint resume so a
+/// late worker becomes a bitwise replica of the aggregator.
+pub const TAG_STATE: u32 = 0x4425;
+
+/// Control-protocol version carried in [`TAG_JOIN`]; the aggregator
+/// rejects a mismatched worker descriptively instead of misparsing
+/// its frames.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Byte offset of the embedded gradient blob in a [`TAG_UP`] frame:
-/// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8).
-pub const UP_GRAD_OFF: usize = 24;
+/// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8) + step (8).
+pub const UP_GRAD_OFF: usize = 32;
 
 // ---------------------------------------------------------------------------
 // Cursor: bounds-checked little-endian reads
@@ -229,6 +249,9 @@ pub struct InitMsg {
     pub overlap: bool,
     /// Simulated NIC ms per MiB of encoded gradient (0 = off).
     pub sim_wire_ms_per_mib: f64,
+    /// Heartbeat interval the worker must ping at (milliseconds);
+    /// 0 disables the heartbeat thread entirely.
+    pub heartbeat_ms: u64,
 }
 
 /// One unit of worker compute: run micro-batch `micro` under `masks`.
@@ -256,6 +279,10 @@ pub struct UpHdr {
     pub n_correct: f32,
     /// Measured wall time of the gradient computation (ms).
     pub ms: f64,
+    /// The aggregator step the gradient answers (echoed from the
+    /// Compute frame) — lets the control plane drop stale gradients
+    /// from reassigned or stalled workers.
+    pub step: u64,
 }
 
 /// Read a frame's message tag without consuming it.
@@ -288,6 +315,7 @@ pub fn encode_init(msg: &InitMsg, out: &mut Vec<u8>) {
     });
     out.push(msg.overlap as u8);
     put_f64(out, msg.sim_wire_ms_per_mib);
+    put_u64(out, msg.heartbeat_ms);
 }
 
 /// Decode an [`InitMsg`] frame.
@@ -336,6 +364,7 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
     };
     let overlap = c.u8("overlap flag")? != 0;
     let sim_wire_ms_per_mib = c.f64("sim wire ms")?;
+    let heartbeat_ms = c.u64("heartbeat interval")?;
     Ok(InitMsg {
         worker,
         spec,
@@ -344,12 +373,16 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
         precision,
         overlap,
         sim_wire_ms_per_mib,
+        heartbeat_ms,
     })
 }
 
-/// Encode a [`TAG_COMPUTE`] frame (appends to `out`).
-pub fn encode_compute(jobs: &[MicroJob], out: &mut Vec<u8>) {
+/// Encode a [`TAG_COMPUTE`] frame (appends to `out`). `step` is the
+/// aggregator's batch step, echoed back in every [`TAG_UP`] answer so
+/// stale gradients are identifiable after a reassignment.
+pub fn encode_compute(step: u64, jobs: &[MicroJob], out: &mut Vec<u8>) {
     put_u32(out, TAG_COMPUTE);
+    put_u64(out, step);
     put_u32(out, jobs.len() as u32);
     for job in jobs {
         put_u32(out, job.micro as u32);
@@ -362,11 +395,12 @@ pub fn encode_compute(jobs: &[MicroJob], out: &mut Vec<u8>) {
     }
 }
 
-/// Decode a [`TAG_COMPUTE`] frame into owned jobs.
-pub fn decode_compute(frame: &[u8]) -> Result<Vec<MicroJob>> {
+/// Decode a [`TAG_COMPUTE`] frame into `(step, owned jobs)`.
+pub fn decode_compute(frame: &[u8]) -> Result<(u64, Vec<MicroJob>)> {
     let mut c = Cursor::new(frame);
     let tag = c.u32("compute tag")?;
     anyhow::ensure!(tag == TAG_COMPUTE, "expected Compute frame, got tag {tag:#x}");
+    let step = c.u64("compute step")?;
     let n = c.count(4, "compute job count")?;
     let mut jobs = Vec::with_capacity(n);
     for _ in 0..n {
@@ -380,7 +414,7 @@ pub fn decode_compute(frame: &[u8]) -> Result<Vec<MicroJob>> {
         let masks = get_masks(&mut c, "micro masks")?;
         jobs.push(MicroJob { micro, x, y, masks });
     }
-    Ok(jobs)
+    Ok((step, jobs))
 }
 
 /// Encode a [`TAG_APPLY`] frame: the learning rate, the batch's union
@@ -434,6 +468,7 @@ pub fn encode_up_header(hdr: &UpHdr, out: &mut Vec<u8>) {
     put_f32(out, hdr.loss);
     put_f32(out, hdr.n_correct);
     put_f64(out, hdr.ms);
+    put_u64(out, hdr.step);
     debug_assert_eq!(out.len(), UP_GRAD_OFF, "Up header layout drifted");
 }
 
@@ -447,12 +482,13 @@ pub fn decode_up(frame: &[u8]) -> Result<UpHdr> {
     let loss = c.f32("up loss")?;
     let n_correct = c.f32("up n_correct")?;
     let ms = c.f64("up ms")?;
+    let step = c.u64("up step")?;
     anyhow::ensure!(
         frame.len() > UP_GRAD_OFF,
         "Up frame carries no gradient payload ({} bytes)",
         frame.len()
     );
-    Ok(UpHdr { micro, loss, n_correct, ms })
+    Ok(UpHdr { micro, loss, n_correct, ms, step })
 }
 
 /// Encode a [`TAG_BYE`] frame with the worker's local encode-buffer
@@ -469,6 +505,123 @@ pub fn decode_bye(frame: &[u8]) -> Result<(u64, u64)> {
     let tag = c.u32("bye tag")?;
     anyhow::ensure!(tag == TAG_BYE, "expected Bye frame, got tag {tag:#x}");
     Ok((c.u64("bye fresh")?, c.u64("bye reused")?))
+}
+
+// ---------------------------------------------------------------------------
+// Control-plane frames: heartbeat + membership + state transfer
+// ---------------------------------------------------------------------------
+
+/// Encode a [`TAG_PING`] heartbeat with a monotonic sequence number.
+pub fn encode_ping(seq: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_PING);
+    put_u64(out, seq);
+}
+
+/// Decode a [`TAG_PING`] frame: the sequence number. Trailing bytes
+/// are rejected — a heartbeat is exactly 12 bytes.
+pub fn decode_ping(frame: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ping tag")?;
+    anyhow::ensure!(tag == TAG_PING, "expected Ping frame, got tag {tag:#x}");
+    let seq = c.u64("ping seq")?;
+    anyhow::ensure!(
+        c.remaining() == 0,
+        "oversized Ping frame: {} trailing bytes after the sequence number",
+        c.remaining()
+    );
+    Ok(seq)
+}
+
+/// Encode a [`TAG_PONG`] heartbeat acknowledgment.
+pub fn encode_pong(seq: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_PONG);
+    put_u64(out, seq);
+}
+
+/// Decode a [`TAG_PONG`] frame: the echoed sequence number.
+pub fn decode_pong(frame: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("pong tag")?;
+    anyhow::ensure!(tag == TAG_PONG, "expected Pong frame, got tag {tag:#x}");
+    let seq = c.u64("pong seq")?;
+    anyhow::ensure!(
+        c.remaining() == 0,
+        "oversized Pong frame: {} trailing bytes after the sequence number",
+        c.remaining()
+    );
+    Ok(seq)
+}
+
+/// Encode a [`TAG_JOIN`] membership request carrying the worker's
+/// protocol version.
+pub fn encode_join(version: u32, out: &mut Vec<u8>) {
+    put_u32(out, TAG_JOIN);
+    put_u32(out, version);
+}
+
+/// Decode a [`TAG_JOIN`] frame: the worker's protocol version.
+pub fn decode_join(frame: &[u8]) -> Result<u32> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("join tag")?;
+    anyhow::ensure!(tag == TAG_JOIN, "expected Join frame, got tag {tag:#x}");
+    let version = c.u32("join protocol version")?;
+    anyhow::ensure!(
+        c.remaining() == 0,
+        "oversized Join frame: {} trailing bytes after the version",
+        c.remaining()
+    );
+    Ok(version)
+}
+
+/// Encode a [`TAG_EVICT`] notice naming the evicted worker.
+pub fn encode_evict(worker: usize, out: &mut Vec<u8>) {
+    put_u32(out, TAG_EVICT);
+    put_u32(out, worker as u32);
+}
+
+/// Decode a [`TAG_EVICT`] frame: the evicted worker's id.
+pub fn decode_evict(frame: &[u8]) -> Result<usize> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("evict tag")?;
+    anyhow::ensure!(tag == TAG_EVICT, "expected Evict frame, got tag {tag:#x}");
+    Ok(c.u32("evict worker id")? as usize)
+}
+
+/// Encode a [`TAG_STATE`] frame: the aggregator's flattened parameter
+/// and momentum vectors, bit-exact.
+pub fn encode_state(params: &[f32], momentum: &[f32], out: &mut Vec<u8>) {
+    put_u32(out, TAG_STATE);
+    put_u64(out, params.len() as u64);
+    for &v in params {
+        put_f32(out, v);
+    }
+    put_u64(out, momentum.len() as u64);
+    for &v in momentum {
+        put_f32(out, v);
+    }
+}
+
+/// Decode a [`TAG_STATE`] frame: `(params, momentum)`, bit-exact.
+pub fn decode_state(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("state tag")?;
+    anyhow::ensure!(tag == TAG_STATE, "expected State frame, got tag {tag:#x}");
+    let read_vec = |c: &mut Cursor<'_>, what: &str| -> Result<Vec<f32>> {
+        let n = c.u64(what)? as usize;
+        anyhow::ensure!(
+            n.saturating_mul(4) <= c.remaining(),
+            "corrupt count: {what} claims {n} f32s but only {} bytes remain",
+            c.remaining()
+        );
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(c.f32(what)?);
+        }
+        Ok(v)
+    };
+    let params = read_vec(&mut c, "state params")?;
+    let momentum = read_vec(&mut c, "state momentum")?;
+    Ok((params, momentum))
 }
 
 #[cfg(test)]
@@ -493,6 +646,7 @@ mod tests {
             precision: WirePrecision::F16,
             overlap: false,
             sim_wire_ms_per_mib: 2.25,
+            heartbeat_ms: 750,
         };
         let mut frame = Vec::new();
         encode_init(&msg, &mut frame);
@@ -510,6 +664,7 @@ mod tests {
         assert_eq!(back.precision, WirePrecision::F16);
         assert!(!back.overlap);
         assert_eq!(back.sim_wire_ms_per_mib, 2.25);
+        assert_eq!(back.heartbeat_ms, 750);
     }
 
     #[test]
@@ -520,8 +675,9 @@ mod tests {
             MicroJob { micro: 4, x, y: vec![1, 2], masks: MaskPair::ones(2, 2) },
         ];
         let mut frame = Vec::new();
-        encode_compute(&jobs, &mut frame);
-        let back = decode_compute(&frame).unwrap();
+        encode_compute(41, &jobs, &mut frame);
+        let (step, back) = decode_compute(&frame).unwrap();
+        assert_eq!(step, 41);
         assert_eq!(back.len(), 2);
         assert_eq!(back[1].micro, 4);
         assert_eq!(back[0].y, vec![3, 9]);
@@ -548,7 +704,7 @@ mod tests {
         assert_eq!(&frame[doff..], &grad[..]);
         assert_eq!(u.fingerprint(), union.fingerprint());
 
-        let hdr = UpHdr { micro: 3, loss: 1.5, n_correct: 2.0, ms: 0.75 };
+        let hdr = UpHdr { micro: 3, loss: 1.5, n_correct: 2.0, ms: 0.75, step: 9 };
         let mut up = Vec::new();
         encode_up_header(&hdr, &mut up);
         assert_eq!(up.len(), UP_GRAD_OFF);
@@ -557,6 +713,7 @@ mod tests {
         assert_eq!(back.micro, 3);
         assert_eq!(back.loss, 1.5);
         assert_eq!(back.ms, 0.75);
+        assert_eq!(back.step, 9);
         assert_eq!(&up[UP_GRAD_OFF..], &grad[..]);
     }
 
@@ -594,6 +751,7 @@ mod tests {
             precision: WirePrecision::F32,
             overlap: true,
             sim_wire_ms_per_mib: 0.0,
+            heartbeat_ms: 0,
         };
         let mut full = Vec::new();
         encode_init(&msg, &mut full);
@@ -607,7 +765,10 @@ mod tests {
         assert!(err.contains("corrupt count"), "got: {err}");
         // An Up frame with no gradient tail is rejected.
         let mut f = Vec::new();
-        encode_up_header(&UpHdr { micro: 0, loss: 0.0, n_correct: 0.0, ms: 0.0 }, &mut f);
+        encode_up_header(
+            &UpHdr { micro: 0, loss: 0.0, n_correct: 0.0, ms: 0.0, step: 0 },
+            &mut f,
+        );
         assert!(decode_up(&f).is_err());
         // A tensor shape whose element product wraps usize must be
         // rejected, not wrapped into a small bogus length.
@@ -622,5 +783,130 @@ mod tests {
         }
         let err = decode_compute(&f).unwrap_err().to_string();
         assert!(err.contains("overflow") || err.contains("corrupt count"), "got: {err}");
+    }
+
+    #[test]
+    fn control_plane_frames_round_trip() {
+        let mut f = Vec::new();
+        encode_ping(7, &mut f);
+        assert_eq!(peek_tag(&f).unwrap(), TAG_PING);
+        assert_eq!(decode_ping(&f).unwrap(), 7);
+        f.clear();
+        encode_pong(u64::MAX, &mut f);
+        assert_eq!(decode_pong(&f).unwrap(), u64::MAX);
+        f.clear();
+        encode_join(PROTO_VERSION, &mut f);
+        assert_eq!(decode_join(&f).unwrap(), PROTO_VERSION);
+        f.clear();
+        encode_evict(3, &mut f);
+        assert_eq!(decode_evict(&f).unwrap(), 3);
+        f.clear();
+        let params = vec![1.5f32, -0.0, f32::MIN_POSITIVE];
+        let momentum = vec![0.25f32, 3.0e-8];
+        encode_state(&params, &momentum, &mut f);
+        let (p, m) = decode_state(&f).unwrap();
+        assert_eq!(bits32(&p), bits32(&params));
+        assert_eq!(bits32(&m), bits32(&momentum));
+    }
+
+    fn bits32(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn heartbeat_frames_reject_bad_sizes_descriptively() {
+        // Truncated: a Ping cut before its sequence number.
+        let mut f = Vec::new();
+        encode_ping(9, &mut f);
+        let err = decode_ping(&f[..6]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "got: {err}");
+        // Oversized: trailing bytes after a complete heartbeat.
+        f.extend_from_slice(&[0xAB; 3]);
+        let err = decode_ping(&f).unwrap_err().to_string();
+        assert!(err.contains("oversized"), "got: {err}");
+        // Wrong tag for the decoder.
+        let mut g = Vec::new();
+        encode_pong(1, &mut g);
+        let err = decode_ping(&g).unwrap_err().to_string();
+        assert!(err.contains("expected Ping"), "got: {err}");
+        // A State frame whose count outruns its payload is rejected
+        // without attempting the allocation.
+        let mut s = Vec::new();
+        put_u32(&mut s, TAG_STATE);
+        put_u64(&mut s, u64::MAX);
+        let err = decode_state(&s).unwrap_err().to_string();
+        assert!(err.contains("corrupt count"), "got: {err}");
+    }
+
+    #[test]
+    fn property_control_frames_round_trip() {
+        crate::util::proptest::check("proto-ctrl-roundtrip", 60, |g| {
+            let mut f = Vec::new();
+            let seq = g.rng().next_u64();
+            encode_ping(seq, &mut f);
+            if decode_ping(&f).map_err(|e| e.to_string())? != seq {
+                return Err("ping seq mismatch".into());
+            }
+            f.clear();
+            encode_pong(seq, &mut f);
+            if decode_pong(&f).map_err(|e| e.to_string())? != seq {
+                return Err("pong seq mismatch".into());
+            }
+            f.clear();
+            let v = g.rng().next_u64() as u32;
+            encode_join(v, &mut f);
+            if decode_join(&f).map_err(|e| e.to_string())? != v {
+                return Err("join version mismatch".into());
+            }
+            f.clear();
+            let w = g.usize_in(0, 1 << 16);
+            encode_evict(w, &mut f);
+            if decode_evict(&f).map_err(|e| e.to_string())? != w {
+                return Err("evict worker mismatch".into());
+            }
+            f.clear();
+            let np = g.usize_in(0, 32);
+            let nm = g.usize_in(0, 32);
+            let params = g.vec(np, |g| g.f32_in(-1.0e6, 1.0e6));
+            let momentum = g.vec(nm, |g| g.f32_in(-1.0, 1.0));
+            encode_state(&params, &momentum, &mut f);
+            let (p, m) = decode_state(&f).map_err(|e| e.to_string())?;
+            if bits32(&p) != bits32(&params) || bits32(&m) != bits32(&momentum) {
+                return Err("state vectors must round-trip bitwise".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_truncated_control_frames_never_panic() {
+        crate::util::proptest::check("proto-ctrl-truncation", 80, |g| {
+            let mut f = Vec::new();
+            match g.usize_in(0, 4) {
+                0 => encode_ping(g.rng().next_u64(), &mut f),
+                1 => encode_pong(g.rng().next_u64(), &mut f),
+                2 => encode_join(g.rng().next_u64() as u32, &mut f),
+                3 => encode_evict(g.usize_in(0, 64), &mut f),
+                _ => {
+                    let params = g.vec(g.usize_in(0, 8), |g| g.f32_in(-1.0, 1.0));
+                    let momentum = g.vec(g.usize_in(0, 8), |g| g.f32_in(-1.0, 1.0));
+                    encode_state(&params, &momentum, &mut f)
+                }
+            }
+            let cut = g.usize_in(0, f.len().saturating_sub(1));
+            // Decoding any strict prefix must error (decoders are total:
+            // no panic, no misparse of a short frame as a success).
+            let slice = &f[..cut];
+            let all_err = decode_ping(slice).is_err()
+                && decode_pong(slice).is_err()
+                && decode_join(slice).is_err()
+                && decode_evict(slice).is_err()
+                && decode_state(slice).is_err();
+            if all_err {
+                Ok(())
+            } else {
+                Err(format!("a {cut}-byte prefix of a control frame decoded successfully"))
+            }
+        });
     }
 }

@@ -64,6 +64,8 @@
 //! are tracked per op, and the modeled-vs-measured drift
 //! (`TrainReport::makespan_drift`) stays anchored.
 
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
 use std::process::{Child, Command};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -73,13 +75,16 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::allreduce::{ExchangeMode, OrderedReducer};
+use super::checkpoint::Checkpoint;
+use super::fault::{FaultAction, FaultPlan};
 use super::grads::{BufPool, GradCodec, WirePrecision, WireStats};
 use super::proto::{self, InitMsg, MicroJob, UpHdr};
 use super::transport::{
-    accept_workers, channel_pair, listen, BlobRx, BlobTx, SpawnMode, StatsCell, TcpTransport,
-    Transport, TransportKind, TransportStats,
+    accept_workers, channel_pair, listen, liveness_window, BlobRx, BlobTx, SpawnMode, StatsCell,
+    TcpTransport, Transport, TransportKind, TransportStats,
 };
-use super::worker::run_worker;
+use super::worker::{run_worker, run_worker_with_faults};
+use crate::backend::native::NativeSpec;
 use crate::backend::native::{NativeBackend, NativeProvider};
 use crate::backend::Backend;
 use crate::cluster::{
@@ -136,6 +141,37 @@ pub struct DistConfig {
     /// `calib_*` fields). Default `true`; scheduling decisions are
     /// placement-only, so calibration never touches the numerics.
     pub calibrate: bool,
+    /// Worker heartbeat interval in milliseconds. Workers ping on a
+    /// dedicated thread at this cadence, so a slow-but-alive worker
+    /// (long compute, scripted stall) keeps its link warm. 0 disables
+    /// heartbeats *and* liveness eviction.
+    pub heartbeat_ms: u64,
+    /// Consecutive missed heartbeat intervals before a silent link is
+    /// declared dead (see [`liveness_window`]). The deadline scales
+    /// with `heartbeat_ms`, never with compute load.
+    pub liveness_misses: u32,
+    /// How long the aggregator waits on an incomplete batch barrier
+    /// before duplicating the unfilled micro-batches onto other live
+    /// workers (straggler reassignment — bitwise harmless, replicas
+    /// compute identical gradients).
+    pub stall_reassign_ms: u64,
+    /// Hard per-batch deadline: a batch that cannot complete within
+    /// this bound fails descriptively instead of hanging forever.
+    pub batch_timeout_ms: u64,
+    /// Scripted fault plans per worker slot (`(worker, plan)`), acted
+    /// out by the worker against its gradient-send counter and by the
+    /// aggregator for [`FaultAction::RejoinAtEpoch`]. Tests/chaos only;
+    /// empty in production runs.
+    pub faults: Vec<(usize, FaultPlan)>,
+    /// Directory for epoch-boundary checkpoints (`ckpt_e{N}.d2ck`);
+    /// `None` disables checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Write a checkpoint every N completed epochs (min 1).
+    pub checkpoint_every: usize,
+    /// Resume from this checkpoint file: install its parameters,
+    /// momentum, and score cache, skip pretraining, and continue at
+    /// the recorded batch — bitwise identical to the uninterrupted run.
+    pub resume_from: Option<PathBuf>,
 }
 
 impl DistConfig {
@@ -152,8 +188,27 @@ impl DistConfig {
             wire_precision: WirePrecision::F32,
             sim_wire_ms_per_mib: 0.0,
             calibrate: true,
+            heartbeat_ms: 500,
+            liveness_misses: 4,
+            stall_reassign_ms: 5000,
+            batch_timeout_ms: 120_000,
+            faults: Vec::new(),
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume_from: None,
         }
     }
+}
+
+/// One membership change in the worker set (for [`DistReport`]).
+#[derive(Clone, Debug)]
+pub struct MembershipEvent {
+    /// Global batch index when the change took effect.
+    pub batch: usize,
+    /// Worker slot affected.
+    pub worker: usize,
+    /// `"evict"` or `"join"`.
+    pub kind: String,
 }
 
 /// Outcome of a distributed run: the serial-comparable training report
@@ -208,6 +263,26 @@ pub struct DistReport {
     pub encode_buf_fresh: u64,
     /// Buffer checkouts served by recycling (same pools).
     pub encode_buf_reused: u64,
+    /// Worker slots still live when the run finished.
+    pub live_workers: usize,
+    /// Workers evicted by the control plane (lost links, liveness
+    /// deadline misses, undecodable frames, failed sends).
+    pub evictions: usize,
+    /// Workers that (re)joined mid-run via the elastic handshake.
+    pub joins: usize,
+    /// Micro-batches re-dispatched to a survivor after a loss or stall
+    /// (duplicates are bitwise harmless; see the module docs).
+    pub reassigned_micros: usize,
+    /// Membership-triggered knapsack re-solves: batches whose schedule
+    /// was solved right after an evict/join with freshly reset
+    /// straggler EMAs.
+    pub knapsack_resolves: usize,
+    /// Epochs fully completed (boundary count).
+    pub epochs: usize,
+    /// Epoch-boundary checkpoints written to `checkpoint_dir`.
+    pub checkpoints_written: usize,
+    /// Every membership change, in order.
+    pub membership: Vec<MembershipEvent>,
 }
 
 /// What a reader thread forwards from one worker's link into the
@@ -225,17 +300,47 @@ enum Arrival {
 
 /// Drain one worker's uplink into the shared arrival queue. Exits on
 /// Bye (clean shutdown), on link/decode failure (after forwarding a
-/// [`Arrival::Lost`]), or when the aggregator is gone.
-fn reader_loop(worker: usize, mut rx: Box<dyn BlobRx>, tx: mpsc::Sender<Arrival>) {
+/// [`Arrival::Lost`]), when the link stays silent past the liveness
+/// deadline (also [`Arrival::Lost`] — the failure detector), or when
+/// the aggregator is gone. Heartbeat Pings are swallowed here: their
+/// arrival resets the liveness timer, nothing downstream needs them.
+fn reader_loop(
+    worker: usize,
+    mut rx: Box<dyn BlobRx>,
+    tx: mpsc::Sender<Arrival>,
+    liveness: Duration,
+    pool: Arc<BufPool>,
+) {
     loop {
-        let frame = match rx.recv_blob() {
-            Ok(f) => f,
+        let frame = match rx.recv_blob_timeout(liveness) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                let _ = tx.send(Arrival::Lost {
+                    worker,
+                    error: format!(
+                        "no frame or heartbeat for {liveness:?} — missed liveness deadline"
+                    ),
+                });
+                return;
+            }
             Err(e) => {
                 let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
                 return;
             }
         };
         let forwarded = match proto::peek_tag(&frame) {
+            Ok(proto::TAG_PING) => {
+                let ok = proto::decode_ping(&frame).is_ok();
+                pool.give_back(frame);
+                if !ok {
+                    let _ = tx.send(Arrival::Lost {
+                        worker,
+                        error: "malformed Ping frame on the uplink".to_string(),
+                    });
+                    return;
+                }
+                continue;
+            }
             Ok(proto::TAG_UP) => match proto::decode_up(&frame) {
                 Ok(hdr) => tx.send(Arrival::Up { worker, hdr, frame }).is_ok(),
                 Err(e) => {
@@ -292,10 +397,16 @@ pub struct DistTrainer {
     partition: Partition,
     train: Dataset,
     test: Dataset,
-    /// Downlink halves, one per worker (worker id = index).
-    links: Vec<Box<dyn BlobTx>>,
+    /// The spec every replica is built from (kept for rejoin Inits).
+    spec: NativeSpec,
+    /// Downlink halves, one per worker slot; `None` = evicted/dead.
+    links: Vec<Option<Box<dyn BlobTx>>>,
     /// Fan-in of every worker's uplink (reader threads feed it).
     arrivals: mpsc::Receiver<Arrival>,
+    /// Kept open so rejoin can attach new reader threads to the fan-in.
+    arr_tx: mpsc::Sender<Arrival>,
+    /// The TCP listener (rejoins accept through it; `None` on channel).
+    listener: Option<(TcpListener, SocketAddr)>,
     readers: Vec<thread::JoinHandle<()>>,
     /// In-process workers (channel / tcp-threads modes).
     worker_threads: Vec<thread::JoinHandle<()>>,
@@ -315,6 +426,37 @@ pub struct DistTrainer {
     /// Summed worker-side pool counters from Bye frames.
     bye_fresh: u64,
     bye_reused: u64,
+    /// Monotone batch step stamped into Compute frames; stale or
+    /// duplicate gradient uplinks are dropped by comparing against it.
+    step: u64,
+    /// Global batch index (stamps membership events).
+    cur_batch: usize,
+    /// Control-plane counters for the report.
+    evictions: usize,
+    joins: usize,
+    reassigned_micros: usize,
+    knapsack_resolves: usize,
+    checkpoints_written: usize,
+    membership: Vec<MembershipEvent>,
+    /// Set on evict/join; the next scheduled batch counts a
+    /// membership-triggered knapsack re-solve and resets the EMAs.
+    membership_dirty: bool,
+}
+
+/// The scripted fault plan for worker `w` (empty when none).
+fn plan_for(faults: &[(usize, FaultPlan)], w: usize) -> FaultPlan {
+    faults.iter().find(|(i, _)| *i == w).map(|(_, p)| p.clone()).unwrap_or_default()
+}
+
+/// The reader's silent-link deadline. With heartbeats disabled there
+/// is no liveness signal to miss, so the deadline is effectively off
+/// (a day) and only real link errors surface losses.
+fn reader_liveness(heartbeat_ms: u64, misses: u32) -> Duration {
+    if heartbeat_ms == 0 {
+        Duration::from_secs(24 * 3600)
+    } else {
+        liveness_window(heartbeat_ms, misses)
+    }
 }
 
 impl DistTrainer {
@@ -358,6 +500,7 @@ impl DistTrainer {
         let mut link_stats = Vec::with_capacity(k);
         let mut worker_threads = Vec::new();
         let mut worker_procs = Vec::new();
+        let mut held_listener = None;
         match cfg.transport.clone() {
             TransportKind::Channel => {
                 for w in 0..k {
@@ -366,10 +509,12 @@ impl DistTrainer {
                     // back via the aggregator's give-backs and vice
                     // versa, so the recycle loop closes in-process.
                     let pool = Arc::clone(&buf_pool);
+                    let plan = plan_for(&cfg.faults, w);
                     let handle = thread::Builder::new()
                         .name(format!("d2ft-dist-{w}"))
                         .spawn(move || {
-                            if let Err(e) = run_worker(Box::new(worker_end), pool) {
+                            if let Err(e) = run_worker_with_faults(Box::new(worker_end), pool, plan)
+                            {
                                 crate::warn_!("dist worker {w} exited with error: {e:#}");
                             }
                         })
@@ -385,6 +530,7 @@ impl DistTrainer {
                     SpawnMode::Threads => {
                         for w in 0..k {
                             let dial = local.to_string();
+                            let plan = plan_for(&cfg.faults, w);
                             let handle = thread::Builder::new()
                                 .name(format!("d2ft-dist-{w}"))
                                 .spawn(move || {
@@ -396,7 +542,7 @@ impl DistTrainer {
                                         Duration::from_secs(30),
                                         Arc::clone(&pool),
                                     )
-                                    .and_then(|t| run_worker(Box::new(t), pool));
+                                    .and_then(|t| run_worker_with_faults(Box::new(t), pool, plan));
                                     if let Err(e) = res {
                                         crate::warn_!("dist worker {w} exited with error: {e:#}");
                                     }
@@ -408,12 +554,20 @@ impl DistTrainer {
                     SpawnMode::Processes => {
                         let exe = std::env::current_exe()
                             .context("resolving current executable for dist-worker spawn")?;
-                        for _ in 0..k {
-                            let child = Command::new(&exe)
-                                .arg("dist-worker")
+                        for w in 0..k {
+                            // Note: with subprocess spawn, link slots are
+                            // assigned in *accept* order, so a scripted
+                            // plan travels with the process, not the slot.
+                            let plan = plan_for(&cfg.faults, w);
+                            let mut cmd = Command::new(&exe);
+                            cmd.arg("dist-worker")
                                 .arg("--connect")
                                 .arg(local.to_string())
-                                .arg("--quiet")
+                                .arg("--quiet");
+                            if !plan.is_empty() {
+                                cmd.arg("--fault").arg(plan.to_string());
+                            }
+                            let child = cmd
                                 .spawn()
                                 .context("forking `repro dist-worker` subprocess")?;
                             worker_procs.push(child);
@@ -430,12 +584,28 @@ impl DistTrainer {
                     link_stats.push(t.stats_cell());
                     transports.push(Box::new(t));
                 }
+                held_listener = Some((listener, local));
             }
         }
 
-        // --- handshake: Init every worker, then barrier every link ----
-        // (Inits first so the K replica builds run concurrently.)
+        // --- handshake: Join in, version-check, Init out, barrier -----
+        // (Per-link Join→Init first, barriers after, so the K replica
+        // builds still run concurrently.)
         for (w, link) in transports.iter_mut().enumerate() {
+            let join = link
+                .recv_blob_timeout(Duration::from_secs(60))
+                .with_context(|| format!("waiting for Join from worker {w}"))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!("worker {w} sent no Join within the 60s handshake deadline")
+                })?;
+            let version =
+                proto::decode_join(&join).with_context(|| format!("handshaking worker {w}"))?;
+            buf_pool.give_back(join);
+            anyhow::ensure!(
+                version == proto::PROTO_VERSION,
+                "worker {w} speaks dist protocol version {version}, this aggregator speaks {}",
+                proto::PROTO_VERSION
+            );
             let msg = InitMsg {
                 worker: w,
                 spec: spec.clone(),
@@ -444,6 +614,7 @@ impl DistTrainer {
                 precision: cfg.wire_precision,
                 overlap: cfg.overlap,
                 sim_wire_ms_per_mib: cfg.sim_wire_ms_per_mib,
+                heartbeat_ms: cfg.heartbeat_ms,
             };
             let mut frame = buf_pool.checkout();
             proto::encode_init(&msg, &mut frame);
@@ -454,20 +625,21 @@ impl DistTrainer {
         }
 
         // --- split the links; reader threads fan uplinks in -----------
+        let liveness = reader_liveness(cfg.heartbeat_ms, cfg.liveness_misses);
         let (arr_tx, arrivals) = mpsc::channel::<Arrival>();
         let mut links = Vec::with_capacity(k);
         let mut readers = Vec::with_capacity(k);
         for (w, link) in transports.into_iter().enumerate() {
             let (tx, rx) = link.split();
-            links.push(tx);
+            links.push(Some(tx));
             let fan_in = arr_tx.clone();
+            let pool = Arc::clone(&buf_pool);
             let handle = thread::Builder::new()
                 .name(format!("d2ft-dist-{w}-rx"))
-                .spawn(move || reader_loop(w, rx, fan_in))
+                .spawn(move || reader_loop(w, rx, fan_in, liveness, pool))
                 .context("spawning dist reader thread")?;
             readers.push(handle);
         }
-        drop(arr_tx);
 
         let ema_ms = vec![1.0; k];
         Ok(DistTrainer {
@@ -477,8 +649,11 @@ impl DistTrainer {
             partition: setup.partition,
             train: setup.train,
             test: setup.test,
+            spec: spec.clone(),
             links,
             arrivals,
+            arr_tx,
+            listener: held_listener,
             readers,
             worker_threads,
             worker_procs,
@@ -488,6 +663,15 @@ impl DistTrainer {
             shut_down: false,
             bye_fresh: 0,
             bye_reused: 0,
+            step: 0,
+            cur_batch: 0,
+            evictions: 0,
+            joins: 0,
+            reassigned_micros: 0,
+            knapsack_resolves: 0,
+            checkpoints_written: 0,
+            membership: Vec::new(),
+            membership_dirty: false,
         })
     }
 
@@ -506,26 +690,85 @@ impl DistTrainer {
         &self.codec
     }
 
-    /// Assign each of `n_micro` micro-batches to a worker: greedy
-    /// least-finish-time over the measured per-task EMAs, so a slow
-    /// worker (real straggler) receives fewer tasks next batch. Purely
-    /// a placement decision — replicas are bitwise identical, so any
-    /// assignment yields identical numerics.
+    /// Assign each of `n_micro` micro-batches to a *live* worker:
+    /// greedy least-finish-time over the measured per-task EMAs, so a
+    /// slow worker (real straggler) receives fewer tasks next batch.
+    /// Purely a placement decision — replicas are bitwise identical, so
+    /// any assignment yields identical numerics.
     fn assign(&self, n_micro: usize) -> Vec<usize> {
-        let k = self.ema_ms.len();
-        let mut load = vec![0.0f64; k];
+        let live: Vec<usize> =
+            (0..self.links.len()).filter(|&w| self.links[w].is_some()).collect();
+        debug_assert!(!live.is_empty(), "assign() requires at least one live worker");
+        let mut load = vec![0.0f64; live.len()];
         let mut out = Vec::with_capacity(n_micro);
         for _ in 0..n_micro {
             let mut best = 0;
-            for w in 1..k {
-                if load[w] + self.ema_ms[w] < load[best] + self.ema_ms[best] {
-                    best = w;
+            for (i, &w) in live.iter().enumerate().skip(1) {
+                if load[i] + self.ema_ms[w] < load[best] + self.ema_ms[live[best]] {
+                    best = i;
                 }
             }
-            load[best] += self.ema_ms[best];
-            out.push(best);
+            load[best] += self.ema_ms[live[best]];
+            out.push(live[best]);
         }
         out
+    }
+
+    /// Live (non-evicted) worker count.
+    fn live_workers(&self) -> usize {
+        self.links.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// A live worker to (re)run a micro-batch, preferring anyone other
+    /// than `not` (the suspect owner) and, among candidates, the one
+    /// with the fastest measured EMA.
+    fn pick_live(&self, not: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for w in 0..self.links.len() {
+            if self.links[w].is_none() {
+                continue;
+            }
+            best = Some(match best {
+                None => w,
+                Some(b) => {
+                    let b_suspect = b == not;
+                    let w_suspect = w == not;
+                    if (b_suspect && !w_suspect)
+                        || (b_suspect == w_suspect && self.ema_ms[w] < self.ema_ms[b])
+                    {
+                        w
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best
+    }
+
+    /// Remove `worker` from the live set: best-effort Evict notice,
+    /// drop the downlink, record the membership event, and mark the
+    /// schedule dirty so the next batch re-solves with fresh EMAs.
+    /// Idempotent — a late `Lost` for an already-evicted worker is a
+    /// no-op.
+    fn evict(&mut self, worker: usize, why: &str) {
+        if self.links[worker].is_none() {
+            return;
+        }
+        if let Some(link) = self.links[worker].as_mut() {
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_evict(worker, &mut frame);
+            let _ = link.send_blob(frame);
+        }
+        self.links[worker] = None;
+        self.evictions += 1;
+        self.membership.push(MembershipEvent {
+            batch: self.cur_batch,
+            worker,
+            kind: "evict".to_string(),
+        });
+        self.membership_dirty = true;
+        crate::warn_!("dist worker {worker} evicted: {why}");
     }
 
     /// Broadcast one frame to every worker, checking a pooled copy out
@@ -538,13 +781,69 @@ impl DistTrainer {
     /// per-link bytes anyway, and one memcpy per worker per batch is
     /// noise next to a batch's gradient compute. Buffers come from the
     /// pool, so the copies add no steady-state allocations.
+    /// A failed send evicts that worker instead of failing the batch —
+    /// the survivors already have everything they need.
     fn broadcast(&mut self, master: &[u8], payload: usize, stats: &mut WireStats) -> Result<()> {
-        for (w, link) in self.links.iter_mut().enumerate() {
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        for (w, slot) in self.links.iter_mut().enumerate() {
+            let Some(link) = slot else { continue };
             stats.record_down(payload);
             let mut frame = self.buf_pool.checkout();
             frame.extend_from_slice(master);
-            link.send_blob(frame)
-                .with_context(|| format!("broadcasting to dist worker {w}"))?;
+            if let Err(e) = link.send_blob(frame) {
+                dead.push((w, format!("broadcast send failed: {e:#}")));
+            }
+        }
+        for (w, why) in dead {
+            self.evict(w, &why);
+        }
+        anyhow::ensure!(
+            self.live_workers() > 0,
+            "every dist worker link is gone (all broadcasts failed)"
+        );
+        Ok(())
+    }
+
+    /// Re-encode every unfilled micro-batch of `step` to a live worker.
+    /// With `lost = Some(w)` only `w`'s micros move (its link just
+    /// died); with `None` (a stall) every unfilled micro is duplicated
+    /// onto a preferably-different worker. Recomputed gradients are
+    /// bitwise identical on any replica, so duplication cannot change
+    /// the numerics — the reducer keeps whichever copy lands first.
+    fn redispatch_unfilled(
+        &mut self,
+        reducer: &OrderedReducer,
+        all_jobs: &[MicroJob],
+        step: u64,
+        owner: &mut [usize],
+        lost: Option<usize>,
+    ) -> Result<()> {
+        for (i, job) in all_jobs.iter().enumerate() {
+            if reducer.filled(i) {
+                continue;
+            }
+            if let Some(w) = lost {
+                if owner[i] != w {
+                    continue;
+                }
+            }
+            let prev = owner[i];
+            loop {
+                let w = self.pick_live(prev).ok_or_else(|| {
+                    anyhow::anyhow!("no live dist workers left to reassign micro-batch {i}")
+                })?;
+                let mut frame = self.buf_pool.checkout();
+                proto::encode_compute(step, std::slice::from_ref(job), &mut frame);
+                let sent = self.links[w].as_mut().unwrap().send_blob(frame);
+                match sent {
+                    Ok(()) => {
+                        owner[i] = w;
+                        self.reassigned_micros += 1;
+                        break;
+                    }
+                    Err(e) => self.evict(w, &format!("reassignment dispatch failed: {e:#}")),
+                }
+            }
         }
         Ok(())
     }
@@ -561,38 +860,73 @@ impl DistTrainer {
         let n = micros.len();
         assert_eq!(masks.len(), n, "one mask pair per micro-batch");
         let k = self.links.len();
-        let assignment = self.assign(n);
-        let mut jobs: Vec<Vec<MicroJob>> = (0..k).map(|_| Vec::new()).collect();
-        for (i, (x, y)) in micros.iter().enumerate() {
-            jobs[assignment[i]].push(MicroJob {
+        anyhow::ensure!(self.live_workers() > 0, "no live dist workers left to run a batch");
+        self.step += 1;
+        let step = self.step;
+        // Every job is retained (and shipped one per frame) so a lost
+        // worker's share can be re-encoded for a survivor mid-barrier.
+        let all_jobs: Vec<MicroJob> = micros
+            .iter()
+            .enumerate()
+            .map(|(i, (x, y))| MicroJob {
                 micro: i,
                 x: x.clone(),
                 y: y.clone(),
                 masks: masks[i].clone(),
-            });
-        }
+            })
+            .collect();
+        let mut owner = self.assign(n);
         let mut tasks_per_worker = vec![0usize; k];
-        for (w, job) in jobs.into_iter().enumerate() {
-            if job.is_empty() {
-                continue;
+        for i in 0..n {
+            loop {
+                let w = owner[i];
+                if self.links[w].is_none() {
+                    owner[i] = self.pick_live(w).ok_or_else(|| {
+                        anyhow::anyhow!("no live dist workers left to dispatch micro-batch {i}")
+                    })?;
+                    continue;
+                }
+                let mut frame = self.buf_pool.checkout();
+                proto::encode_compute(step, std::slice::from_ref(&all_jobs[i]), &mut frame);
+                let sent = self.links[w].as_mut().unwrap().send_blob(frame);
+                match sent {
+                    Ok(()) => {
+                        tasks_per_worker[w] += 1;
+                        break;
+                    }
+                    Err(e) => self.evict(w, &format!("compute dispatch failed: {e:#}")),
+                }
             }
-            tasks_per_worker[w] = job.len();
-            let mut frame = self.buf_pool.checkout();
-            proto::encode_compute(&job, &mut frame);
-            self.links[w]
-                .send_blob(frame)
-                .with_context(|| format!("dispatching compute jobs to worker {w}"))?;
         }
         // Barrier: one gradient message per micro-batch. A lost worker
-        // surfaces as an error here — never a hang.
+        // is evicted and its unfilled micros re-run on survivors; a
+        // stalled link gets its micros duplicated after
+        // `stall_reassign_ms`; the batch deadline turns any leftover
+        // silence into a descriptive error — never a hang.
         let mut reducer = OrderedReducer::new(n);
         let mut outs = vec![(0.0f32, 0.0f32); n];
         let mut worker_ms = vec![0.0f64; k];
         let mut micro_ms = vec![0.0f64; n];
         let dense = self.codec.dense_len();
-        for _ in 0..n {
-            match self.arrivals.recv() {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.batch_timeout_ms.max(1));
+        let stall = Duration::from_millis(self.cfg.stall_reassign_ms.max(1));
+        while !reducer.is_complete() {
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "batch deadline ({} ms) passed with incomplete gradients — aborting",
+                self.cfg.batch_timeout_ms
+            );
+            match self.arrivals.recv_timeout(stall.min(deadline - now)) {
                 Ok(Arrival::Up { worker, hdr, frame }) => {
+                    if hdr.step != step || reducer.filled(hdr.micro) {
+                        // Stale (previous batch) or duplicate (a
+                        // reassigned micro finishing twice). Duplicates
+                        // carry bitwise identical payloads, so dropping
+                        // either copy is sound.
+                        self.buf_pool.give_back(frame);
+                        continue;
+                    }
                     worker_ms[worker] += hdr.ms;
                     stats.record_up(frame.len() - proto::UP_GRAD_OFF, dense);
                     reducer.push(hdr.micro, frame, proto::UP_GRAD_OFF)?;
@@ -600,17 +934,43 @@ impl DistTrainer {
                     micro_ms[hdr.micro] = hdr.ms;
                 }
                 Ok(Arrival::Lost { worker, error }) => {
-                    anyhow::bail!("dist worker {worker} lost mid-batch: {error}")
+                    let was_live = self.links[worker].is_some();
+                    self.evict(worker, &error);
+                    if self.live_workers() == 0 {
+                        anyhow::bail!(
+                            "dist worker {worker} lost mid-batch with no survivors: {error}"
+                        );
+                    }
+                    if was_live {
+                        self.redispatch_unfilled(
+                            &reducer,
+                            &all_jobs,
+                            step,
+                            &mut owner,
+                            Some(worker),
+                        )?;
+                    }
                 }
                 Ok(Arrival::Bye { worker, .. }) => {
                     anyhow::bail!("dist worker {worker} sent an unexpected Bye mid-batch")
                 }
-                Err(_) => anyhow::bail!("every dist worker link closed mid-batch"),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Quiet past the stall window: duplicate every
+                    // unfilled micro onto (preferably) another live
+                    // worker. The slow copy, if it ever lands, is
+                    // dropped above.
+                    self.redispatch_unfilled(&reducer, &all_jobs, step, &mut owner, None)?;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("every dist worker link closed mid-batch")
+                }
             }
         }
-        // Straggler feedback: EMA of measured ms per task.
+        // Straggler feedback: EMA of measured ms per task. Only workers
+        // that actually delivered gradients update — a silent worker
+        // (stalled, dying) measured 0 ms, which would read as *fast*.
         for w in 0..k {
-            if tasks_per_worker[w] > 0 {
+            if tasks_per_worker[w] > 0 && worker_ms[w] > 0.0 {
                 let per_task = worker_ms[w] / tasks_per_worker[w] as f64;
                 self.ema_ms[w] = 0.8 * self.ema_ms[w] + 0.2 * per_task;
             }
@@ -680,7 +1040,8 @@ impl DistTrainer {
             self.exec_batch(&micros, &masks, stats)?;
         }
         self.agg.reset_momentum()?;
-        for (w, link) in self.links.iter_mut().enumerate() {
+        for (w, slot) in self.links.iter_mut().enumerate() {
+            let Some(link) = slot else { continue };
             let mut frame = self.buf_pool.checkout();
             proto::encode_ctrl(proto::TAG_RESET, &mut frame);
             link.send_blob(frame)
@@ -715,29 +1076,43 @@ impl DistTrainer {
             return Ok(());
         }
         self.shut_down = true;
-        for (w, link) in self.links.iter_mut().enumerate() {
+        let mut awaiting: Vec<usize> = Vec::new();
+        for (w, slot) in self.links.iter_mut().enumerate() {
+            let Some(link) = slot else { continue };
             let mut frame = self.buf_pool.checkout();
             proto::encode_ctrl(proto::TAG_SHUTDOWN, &mut frame);
-            link.send_blob(frame)
-                .with_context(|| format!("sending shutdown to worker {w}"))?;
+            if link.send_blob(frame).is_ok() {
+                awaiting.push(w);
+            } else {
+                // The link died between the last batch and now; drop it
+                // rather than waiting for a Bye that cannot come.
+                *slot = None;
+            }
         }
-        let mut byes = 0;
-        while byes < self.links.len() {
+        while !awaiting.is_empty() {
             match self.arrivals.recv_timeout(Duration::from_secs(60)) {
-                Ok(Arrival::Bye { fresh, reused, .. }) => {
-                    byes += 1;
+                Ok(Arrival::Bye { worker, fresh, reused }) => {
+                    awaiting.retain(|&w| w != worker);
                     self.bye_fresh += fresh;
                     self.bye_reused += reused;
                 }
-                Ok(Arrival::Up { worker, .. }) => {
-                    anyhow::bail!("worker {worker} sent a gradient during shutdown")
+                Ok(Arrival::Up { frame, .. }) => {
+                    // A straggling duplicate from a reassignment racing
+                    // the shutdown: stale by construction, recycle it.
+                    self.buf_pool.give_back(frame);
                 }
                 Ok(Arrival::Lost { worker, error }) => {
-                    anyhow::bail!("dist worker {worker} died during shutdown: {error}")
+                    if awaiting.contains(&worker) {
+                        crate::warn_!("dist worker {worker} died during shutdown: {error}");
+                        awaiting.retain(|&w| w != worker);
+                        self.links[worker] = None;
+                    }
+                    // Lost from an already-evicted worker's reader
+                    // winding down is expected noise.
                 }
                 Err(_) => anyhow::bail!(
-                    "timed out waiting for worker Bye frames ({byes} of {} received)",
-                    self.links.len()
+                    "timed out waiting for worker Bye frames ({} still pending)",
+                    awaiting.len()
                 ),
             }
         }
@@ -753,16 +1128,232 @@ impl DistTrainer {
         Ok(())
     }
 
+    /// Epoch-boundary liveness echo: a Pong (seq = completed epochs) to
+    /// every live worker. Cheap downlink canary — a dead link surfaces
+    /// here as an eviction instead of during the next batch.
+    fn broadcast_pong(&mut self, seq: u64) {
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        for (w, slot) in self.links.iter_mut().enumerate() {
+            let Some(link) = slot else { continue };
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_pong(seq, &mut frame);
+            if let Err(e) = link.send_blob(frame) {
+                dead.push((w, format!("epoch pong send failed: {e:#}")));
+            }
+        }
+        for (w, why) in dead {
+            self.evict(w, &why);
+        }
+    }
+
+    /// Act on any [`FaultAction::RejoinAtEpoch`] plans scheduled for
+    /// the epoch that just started (`epoch` = completed-epoch count).
+    fn maybe_rejoin(&mut self, epoch: usize) -> Result<()> {
+        let plans = self.cfg.faults.clone();
+        for (w, plan) in plans {
+            if w >= self.links.len() || self.links[w].is_some() {
+                continue;
+            }
+            let due = plan
+                .actions
+                .iter()
+                .any(|a| matches!(*a, FaultAction::RejoinAtEpoch(e) if e == epoch));
+            if due {
+                self.rejoin(w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Elastic rejoin: bring a fresh worker up on slot `w`, run the
+    /// Join→Init→barrier handshake, ship the aggregator's current
+    /// parameter + momentum state (the rejoiner's deterministic init is
+    /// epochs behind), and attach a reader thread. The next batch's
+    /// schedule re-solves with the restored worker in the live set.
+    fn rejoin(&mut self, w: usize) -> Result<()> {
+        let mut transport: Box<dyn Transport> = match self.cfg.transport.clone() {
+            TransportKind::Channel => {
+                let (agg_end, worker_end) = channel_pair();
+                let pool = Arc::clone(&self.buf_pool);
+                let handle = thread::Builder::new()
+                    .name(format!("d2ft-dist-{w}"))
+                    .spawn(move || {
+                        if let Err(e) = run_worker(Box::new(worker_end), pool) {
+                            crate::warn_!("rejoined dist worker {w} exited with error: {e:#}");
+                        }
+                    })
+                    .context("spawning rejoined dist worker thread")?;
+                self.worker_threads.push(handle);
+                self.link_stats.push(agg_end.stats_cell());
+                Box::new(agg_end)
+            }
+            TransportKind::Tcp { spawn, .. } => {
+                anyhow::ensure!(
+                    matches!(spawn, SpawnMode::Threads),
+                    "scripted worker rejoin over TCP is supported for thread-spawned \
+                     workers only (subprocess/external workers rejoin by relaunching \
+                     `repro dist-worker` against a fresh run)"
+                );
+                let local = self
+                    .listener
+                    .as_ref()
+                    .map(|(_, a)| *a)
+                    .ok_or_else(|| anyhow::anyhow!("worker rejoin needs the TCP listener"))?;
+                let dial = local.to_string();
+                let handle = thread::Builder::new()
+                    .name(format!("d2ft-dist-{w}"))
+                    .spawn(move || {
+                        let pool = Arc::new(BufPool::new());
+                        let res = TcpTransport::connect(
+                            &dial,
+                            Duration::from_secs(30),
+                            Arc::clone(&pool),
+                        )
+                        .and_then(|t| run_worker(Box::new(t), pool));
+                        if let Err(e) = res {
+                            crate::warn_!("rejoined dist worker {w} exited with error: {e:#}");
+                        }
+                    })
+                    .context("spawning rejoined tcp dist worker thread")?;
+                self.worker_threads.push(handle);
+                let (listener, _) = self.listener.as_ref().unwrap();
+                let stream = accept_workers(listener, 1, Duration::from_secs(60))?
+                    .pop()
+                    .expect("accept_workers(1) returns one stream");
+                let t = TcpTransport::from_stream(stream, Arc::clone(&self.buf_pool))?;
+                self.link_stats.push(t.stats_cell());
+                Box::new(t)
+            }
+        };
+        // Handshake, synchronously on the new link: Join in, Init out,
+        // barrier, then the authoritative State.
+        let join = transport
+            .recv_blob_timeout(Duration::from_secs(60))
+            .with_context(|| format!("waiting for Join from rejoining worker {w}"))?
+            .ok_or_else(|| {
+                anyhow::anyhow!("rejoining worker {w} sent no Join within the 60s deadline")
+            })?;
+        let version = proto::decode_join(&join)
+            .with_context(|| format!("handshaking rejoining worker {w}"))?;
+        self.buf_pool.give_back(join);
+        anyhow::ensure!(
+            version == proto::PROTO_VERSION,
+            "rejoining worker {w} speaks dist protocol version {version}, \
+             this aggregator speaks {}",
+            proto::PROTO_VERSION
+        );
+        let msg = InitMsg {
+            worker: w,
+            spec: self.spec.clone(),
+            lora_rank: self.cfg.train.lora_rank,
+            seed: self.cfg.train.seed,
+            precision: self.cfg.wire_precision,
+            overlap: self.cfg.overlap,
+            sim_wire_ms_per_mib: self.cfg.sim_wire_ms_per_mib,
+            heartbeat_ms: self.cfg.heartbeat_ms,
+        };
+        let mut frame = self.buf_pool.checkout();
+        proto::encode_init(&msg, &mut frame);
+        transport
+            .send_blob(frame)
+            .with_context(|| format!("sending Init to rejoining worker {w}"))?;
+        transport
+            .barrier()
+            .with_context(|| format!("handshake barrier with rejoining worker {w}"))?;
+        let (params, momentum) = self.agg.export_state_flat();
+        let mut frame = self.buf_pool.checkout();
+        proto::encode_state(&params, &momentum, &mut frame);
+        transport
+            .send_blob(frame)
+            .with_context(|| format!("sending State to rejoining worker {w}"))?;
+        let (tx, rx) = transport.split();
+        let fan_in = self.arr_tx.clone();
+        let liveness = reader_liveness(self.cfg.heartbeat_ms, self.cfg.liveness_misses);
+        let pool = Arc::clone(&self.buf_pool);
+        let handle = thread::Builder::new()
+            .name(format!("d2ft-dist-{w}-rx"))
+            .spawn(move || reader_loop(w, rx, fan_in, liveness, pool))
+            .context("spawning rejoined dist reader thread")?;
+        self.readers.push(handle);
+        self.links[w] = Some(tx);
+        self.ema_ms[w] = 1.0;
+        self.joins += 1;
+        self.membership.push(MembershipEvent {
+            batch: self.cur_batch,
+            worker: w,
+            kind: "join".to_string(),
+        });
+        self.membership_dirty = true;
+        crate::info!("dist worker {w} rejoined at batch {}", self.cur_batch);
+        Ok(())
+    }
+
+    /// Write the epoch-boundary checkpoint when configured.
+    fn write_checkpoint(
+        &mut self,
+        epoch: usize,
+        batch: usize,
+        score_cache: &[Option<ScoreBook>],
+    ) -> Result<()> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(());
+        };
+        if epoch % self.cfg.checkpoint_every.max(1) != 0 {
+            return Ok(());
+        }
+        let (params, momentum) = self.agg.export_state_flat();
+        let ck = Checkpoint { epoch, batch, params, momentum, score_books: score_cache.to_vec() };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        ck.save(&dir.join(format!("ckpt_e{epoch}.d2ck")))?;
+        self.checkpoints_written += 1;
+        Ok(())
+    }
+
     /// Run the full distributed fine-tuning loop.
     pub fn run(&mut self) -> Result<DistReport> {
         let cfg = self.cfg.train.clone();
         let mb = self.agg.micro_batch();
         let k = self.links.len();
+        // Resume, if configured: install the checkpoint's parameters,
+        // momentum, and score cache on the aggregator, ship the same
+        // bits to every worker as a State frame, and skip pretraining
+        // (checkpoints are taken after it). Checkpoints land only at
+        // epoch boundaries, so restarting the batcher at the recorded
+        // batch index reproduces the uninterrupted run bitwise.
+        let mut start_batch = 0usize;
+        let mut epochs_done = 0usize;
+        let mut resumed_scores: Vec<Option<ScoreBook>> = Vec::new();
+        let resuming = self.cfg.resume_from.is_some();
+        if let Some(path) = self.cfg.resume_from.clone() {
+            let ck = Checkpoint::load(&path)?;
+            self.agg
+                .import_state_flat(&ck.params, &ck.momentum)
+                .context("installing checkpoint state on the aggregator")?;
+            for (w, slot) in self.links.iter_mut().enumerate() {
+                let Some(link) = slot else { continue };
+                let mut frame = self.buf_pool.checkout();
+                proto::encode_state(&ck.params, &ck.momentum, &mut frame);
+                link.send_blob(frame)
+                    .with_context(|| format!("sending resume state to worker {w}"))?;
+            }
+            start_batch = ck.batch;
+            epochs_done = ck.epoch;
+            resumed_scores = ck.score_books;
+            crate::info!(
+                "resumed from {} (epoch {}, batch {})",
+                path.display(),
+                epochs_done,
+                start_batch
+            );
+        }
         // Pretrain traffic is accounted separately: its all-ones masks
         // ship dense messages, which would dilute the fine-tuning
         // savings headline if folded in.
         let mut pretrain_stats = WireStats::default();
-        self.pretrain(&mut pretrain_stats)?;
+        if !resuming {
+            self.pretrain(&mut pretrain_stats)?;
+        }
         let mut stats = WireStats::default();
 
         let mut scheduler = build_scheduler(cfg.scheduler, cfg.scores, cfg.seed);
@@ -803,7 +1394,7 @@ impl DistTrainer {
         let mut worker_usage = DeviceUsage::new(k);
         let mut loss_curve = Vec::with_capacity(cfg.batches);
         let mut eval_curve = Vec::new();
-        let mut score_cache: Vec<Option<ScoreBook>> = Vec::new();
+        let mut score_cache: Vec<Option<ScoreBook>> = resumed_scores;
         let mut exec_ms_sum = 0.0;
         let mut makespan_sum = 0.0;
         let mut modeled_wire_bytes = 0u64;
@@ -814,13 +1405,28 @@ impl DistTrainer {
         // across the `exec_batch` calls.
         let train_data = self.train.clone();
         let t0 = Instant::now();
-        let mut batch_idx = 0;
+        let mut batch_idx = start_batch;
         'outer: while batch_idx < cfg.batches {
             let mut batcher = Batcher::new(&train_data, mb, cfg.micros_per_batch, cfg.seed);
             let mut epoch_pos = 0usize;
             while let Some(micros) = batcher.next_batch() {
                 if batch_idx >= cfg.batches {
                     break 'outer;
+                }
+                self.cur_batch = batch_idx;
+                // Membership changed since the last schedule: this
+                // batch's knapsack solve is the membership re-solve,
+                // with the straggler EMAs restarted for the new live
+                // set. The budget is unchanged, so the masks — and the
+                // numerics — are too.
+                if self.membership_dirty {
+                    self.membership_dirty = false;
+                    self.knapsack_resolves += 1;
+                    for w in 0..k {
+                        if self.links[w].is_some() {
+                            self.ema_ms[w] = 1.0;
+                        }
+                    }
                 }
                 // --- contribution scores (cached, aggregator-side) --------
                 if score_cache.len() <= epoch_pos {
@@ -936,6 +1542,13 @@ impl DistTrainer {
                 ep_model = 0.0;
                 ep_batches = 0;
             }
+            // ---- epoch boundary: control-plane actions ----------------
+            // Pong echo to live workers, checkpoint, and any scripted
+            // rejoins due at the start of the next epoch.
+            epochs_done += 1;
+            self.broadcast_pong(epochs_done as u64);
+            self.write_checkpoint(epochs_done, batch_idx, &score_cache)?;
+            self.maybe_rejoin(epochs_done)?;
         }
         // A run that ends mid-epoch still reports the partial epoch's
         // drift (it just never feeds another calibration).
@@ -1010,6 +1623,14 @@ impl DistTrainer {
             worker_imbalance: worker_usage.imbalance(),
             encode_buf_fresh: buf_fresh,
             encode_buf_reused: buf_reused,
+            live_workers: self.live_workers(),
+            evictions: self.evictions,
+            joins: self.joins,
+            reassigned_micros: self.reassigned_micros,
+            knapsack_resolves: self.knapsack_resolves,
+            epochs: epochs_done,
+            checkpoints_written: self.checkpoints_written,
+            membership: self.membership.clone(),
             train,
         })
     }
@@ -1021,7 +1642,8 @@ impl Drop for DistTrainer {
             // Best effort: a shutdown frame lets live workers exit
             // cleanly; closing the links afterwards unblocks any that
             // missed it.
-            for link in &mut self.links {
+            for slot in &mut self.links {
+                let Some(link) = slot else { continue };
                 let mut frame = Vec::new();
                 proto::encode_ctrl(proto::TAG_SHUTDOWN, &mut frame);
                 let _ = link.send_blob(frame);

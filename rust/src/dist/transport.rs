@@ -41,7 +41,7 @@
 //! and a peer that closes mid-frame surfaces as a truncation error
 //! instead of a hang.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -72,6 +72,27 @@ pub trait BlobRx: Send {
     /// never hangs forever on a closed link — when the peer
     /// disconnects, with a description of what broke.
     fn recv_blob(&mut self) -> Result<Vec<u8>>;
+
+    /// Wait up to `timeout` for the next blob. `Ok(None)` means the
+    /// link stayed completely quiet — the liveness signal the control
+    /// plane's failure detector is built on. A peer that *starts* a
+    /// frame and then goes silent for a full window is an error (it is
+    /// holding the link mid-message, not merely idle), as is a
+    /// disconnect. The default implementation ignores the timeout and
+    /// blocks; real transports override it.
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        let _ = timeout;
+        self.recv_blob().map(Some)
+    }
+}
+
+/// The liveness deadline for a worker link, derived from the heartbeat
+/// interval instead of a fixed load-independent constant: a link is
+/// declared dead only after `misses` full heartbeat intervals pass with
+/// no traffic at all. A slow-but-alive worker keeps pinging while it
+/// computes (or stalls), so it is *reassigned*, never evicted.
+pub fn liveness_window(heartbeat_ms: u64, misses: u32) -> Duration {
+    Duration::from_millis(heartbeat_ms.max(1).saturating_mul(misses.max(1) as u64))
 }
 
 /// One reliable, ordered, duplex blob link between two cluster nodes.
@@ -281,6 +302,23 @@ fn channel_recv(rx: &mpsc::Receiver<Vec<u8>>, stats: &StatsCell) -> Result<Vec<u
     Ok(blob)
 }
 
+fn channel_recv_timeout(
+    rx: &mpsc::Receiver<Vec<u8>>,
+    stats: &StatsCell,
+    timeout: Duration,
+) -> Result<Option<Vec<u8>>> {
+    match rx.recv_timeout(timeout) {
+        Ok(blob) => {
+            stats.record_recv(blob.len());
+            Ok(Some(blob))
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err(anyhow::anyhow!("channel transport: peer sender hung up"))
+        }
+    }
+}
+
 impl BlobTx for ChannelTransport {
     fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
         channel_send(&self.tx, &self.stats, blob)
@@ -290,6 +328,10 @@ impl BlobTx for ChannelTransport {
 impl BlobRx for ChannelTransport {
     fn recv_blob(&mut self) -> Result<Vec<u8>> {
         channel_recv(&self.rx, &self.stats)
+    }
+
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        channel_recv_timeout(&self.rx, &self.stats, timeout)
     }
 }
 
@@ -320,6 +362,10 @@ impl BlobTx for ChannelTx {
 impl BlobRx for ChannelRx {
     fn recv_blob(&mut self) -> Result<Vec<u8>> {
         channel_recv(&self.rx, &self.stats)
+    }
+
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        channel_recv_timeout(&self.rx, &self.stats, timeout)
     }
 }
 
@@ -413,6 +459,79 @@ fn tcp_recv(reader: &mut TcpStream, pool: &BufPool, stats: &StatsCell) -> Result
     Ok(buf)
 }
 
+fn io_timed_out(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Timed receive over a TCP stream. Arms `SO_RCVTIMEO` for the read,
+/// restores fully blocking mode on every return path, and tracks
+/// *progress*: a window that passes with zero new bytes is a quiet
+/// timeout (`Ok(None)`) only if no frame was started; once the peer has
+/// sent a partial frame, the same silence is a "stalled mid-frame"
+/// error, because the link is wedged, not idle.
+fn tcp_recv_timeout(
+    reader: &mut TcpStream,
+    pool: &BufPool,
+    stats: &StatsCell,
+    timeout: Duration,
+) -> Result<Option<Vec<u8>>> {
+    reader
+        .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+        .context("arming read timeout")?;
+    let result = tcp_recv_timeout_inner(reader, pool, stats);
+    let restore = reader.set_read_timeout(None);
+    let out = result?;
+    restore.context("restoring blocking reads after a timed receive")?;
+    Ok(out)
+}
+
+fn tcp_recv_timeout_inner(
+    reader: &mut TcpStream,
+    pool: &BufPool,
+    stats: &StatsCell,
+) -> Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match reader.read(&mut hdr[got..]) {
+            Ok(0) => anyhow::bail!("reading frame length prefix (peer disconnected?)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if io_timed_out(&e) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                anyhow::bail!(
+                    "peer stalled mid-frame: {got} of 4 length-prefix bytes, then silence"
+                );
+            }
+            Err(e) => return Err(e).context("reading frame length prefix"),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME,
+        "frame length prefix {len} exceeds the {MAX_FRAME}-byte cap \
+         (corrupt prefix or protocol desync)"
+    );
+    let mut buf = pool.checkout();
+    buf.resize(len, 0);
+    let mut got = 0usize;
+    while got < len {
+        match reader.read(&mut buf[got..]) {
+            Ok(0) => anyhow::bail!("reading {len}-byte frame body (peer closed mid-frame?)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if io_timed_out(&e) => {
+                anyhow::bail!("peer stalled mid-frame: {got} of {len} body bytes, then silence")
+            }
+            Err(e) => return Err(e).context("reading frame body"),
+        }
+    }
+    stats.record_recv(4 + len);
+    Ok(Some(buf))
+}
+
 struct TcpTx {
     writer: TcpStream,
     pool: Arc<BufPool>,
@@ -434,6 +553,10 @@ impl BlobTx for TcpTransport {
 impl BlobRx for TcpTransport {
     fn recv_blob(&mut self) -> Result<Vec<u8>> {
         tcp_recv(&mut self.reader, &self.pool, &self.stats)
+    }
+
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        tcp_recv_timeout(&mut self.reader, &self.pool, &self.stats, timeout)
     }
 }
 
@@ -464,6 +587,10 @@ impl BlobTx for TcpTx {
 impl BlobRx for TcpRx {
     fn recv_blob(&mut self) -> Result<Vec<u8>> {
         tcp_recv(&mut self.reader, &self.pool, &self.stats)
+    }
+
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        tcp_recv_timeout(&mut self.reader, &self.pool, &self.stats, timeout)
     }
 }
 
@@ -672,6 +799,102 @@ mod tests {
         let (listener, _addr) = listen("127.0.0.1:0").unwrap();
         let err = accept_workers(&listener, 2, Duration::from_millis(80)).unwrap_err();
         assert!(err.to_string().contains("timed out"), "got: {err}");
+    }
+
+    #[test]
+    fn liveness_window_tracks_heartbeat_interval() {
+        // The deadline scales with the configured heartbeat, not a
+        // fixed constant: 4 missed 100ms beats = 400ms.
+        assert_eq!(liveness_window(100, 4), Duration::from_millis(400));
+        assert_eq!(liveness_window(250, 2), Duration::from_millis(500));
+        // Boundary: zero heartbeat / zero misses degrade to a minimal
+        // but non-zero window instead of an instant eviction.
+        assert_eq!(liveness_window(0, 0), Duration::from_millis(1));
+        // Monotone in both knobs.
+        assert!(liveness_window(200, 4) > liveness_window(100, 4));
+        assert!(liveness_window(100, 8) > liveness_window(100, 4));
+    }
+
+    #[test]
+    fn channel_timed_recv_distinguishes_quiet_from_dead() {
+        let (mut a, mut b) = channel_pair();
+        // Quiet peer: timeout, not an error.
+        assert!(a.recv_blob_timeout(Duration::from_millis(30)).unwrap().is_none());
+        // Delivery within the window.
+        b.send_blob(vec![5, 6]).unwrap();
+        assert_eq!(
+            a.recv_blob_timeout(Duration::from_secs(5)).unwrap().unwrap(),
+            vec![5, 6]
+        );
+        // Dead peer: an error, not a quiet timeout.
+        drop(b);
+        assert!(a.recv_blob_timeout(Duration::from_millis(30)).is_err());
+    }
+
+    #[test]
+    fn tcp_timed_recv_quiet_then_delivers_then_blocks_again() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(
+                &addr.to_string(),
+                Duration::from_secs(10),
+                pool(),
+            )
+            .unwrap();
+            // Stay quiet long enough for one timed window to expire.
+            std::thread::sleep(Duration::from_millis(150));
+            t.send_blob(b"late".to_vec()).unwrap();
+            t.send_blob(b"after".to_vec()).unwrap();
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        // Window 1: nothing on the wire yet.
+        assert!(t.recv_blob_timeout(Duration::from_millis(40)).unwrap().is_none());
+        // Patience: the frame eventually lands inside a window.
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(b) = t.recv_blob_timeout(Duration::from_millis(50)).unwrap() {
+                got = Some(b);
+                break;
+            }
+        }
+        assert_eq!(got.unwrap(), b"late".to_vec());
+        // Blocking mode was restored: a plain recv still works.
+        assert_eq!(t.recv_blob().unwrap(), b"after".to_vec());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_partial_frame_then_silence_is_a_stall_error() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut raw = TcpStream::connect(addr).unwrap();
+            // Start a frame (2 of 4 prefix bytes), then go silent —
+            // the link is wedged mid-message, not idle.
+            raw.write_all(&[9, 0]).unwrap();
+            std::thread::sleep(Duration::from_millis(400));
+            raw
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        let err = loop {
+            // The first windows may be fully quiet depending on thread
+            // scheduling; once the partial prefix lands, silence inside
+            // a window must surface as a stall.
+            match t.recv_blob_timeout(Duration::from_millis(60)) {
+                Ok(Some(b)) => panic!("no full frame was ever sent, got {b:?}"),
+                Ok(None) => continue,
+                Err(e) => break format!("{e:#}"),
+            }
+        };
+        assert!(err.contains("stalled mid-frame"), "got: {err}");
+        drop(h.join().unwrap());
     }
 
     #[test]

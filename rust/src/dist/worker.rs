@@ -8,19 +8,29 @@
 //! That is the heart of the cross-transport bitwise guarantee: there is
 //! no second code path whose numerics could drift.
 //!
-//! A worker is model-agnostic until its [`InitMsg`] arrives: it builds
-//! a [`NativeBackend`] replica from the message's `(spec, lora_rank,
-//! seed)` (bitwise identical to the aggregator's and to every sibling),
-//! confirms readiness through the transport barrier, then serves jobs
-//! until a shutdown frame. With `overlap` the loop splits into a
-//! compute thread and a dedicated sender thread over a bounded one-slot
-//! channel — the PR 4 double-buffered pipeline, unchanged, just ending
-//! in `send_blob` instead of a hardcoded mpsc.
+//! A worker announces itself with a `Join` frame (protocol version
+//! check), becomes a replica when its [`InitMsg`] arrives — built from
+//! the message's `(spec, lora_rank, seed)`, bitwise identical to the
+//! aggregator's and to every sibling — confirms readiness through the
+//! transport barrier, then serves jobs until a shutdown or eviction
+//! frame. A background heartbeat thread pings the aggregator every
+//! `heartbeat_ms` so a busy (or deliberately stalled) worker reads as
+//! *alive*, merely slow. With `overlap` the loop splits into a compute
+//! thread and a dedicated sender thread over a bounded one-slot channel
+//! — the PR 4 double-buffered pipeline, unchanged, just ending in
+//! `send_blob` instead of a hardcoded mpsc.
+//!
+//! [`run_worker_with_faults`] threads a scripted
+//! [`FaultPlan`](super::fault::FaultPlan) through the same loop: fault
+//! actions trigger on the worker's gradient-send counter at *queueing*
+//! time, which keeps every chaos scenario deterministic even under the
+//! overlap pipeline.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -29,13 +39,28 @@ use crate::backend::Backend;
 use crate::schedule::MaskPair;
 use crate::tensor::Tensor;
 
+use super::fault::{FaultAction, FaultPlan};
 use super::grads::{BufPool, GradCodec};
 use super::proto::{
-    decode_apply, decode_compute, decode_deltas, decode_init, encode_bye, encode_up_header,
-    peek_tag, InitMsg, UpHdr, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_RESET, TAG_SHUTDOWN,
-    UP_GRAD_OFF,
+    decode_apply, decode_compute, decode_deltas, decode_init, decode_pong, decode_state,
+    encode_bye, encode_join, encode_ping, encode_up_header, peek_tag, InitMsg, UpHdr,
+    PROTO_VERSION, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT, TAG_PONG, TAG_RESET,
+    TAG_SHUTDOWN, TAG_STATE, UP_GRAD_OFF,
 };
 use super::transport::{BlobRx, BlobTx, Transport};
+
+/// The uplink half, shared between the compute/sender path and the
+/// heartbeat thread. Every send takes the lock only for the actual
+/// `send_blob` — simulated NIC delays sleep *outside* it, so a slow
+/// wire never starves the heartbeat.
+type SharedTx = Arc<Mutex<Box<dyn BlobTx>>>;
+
+fn send_shared(tx: &SharedTx, frame: Vec<u8>) -> Result<()> {
+    match tx.lock() {
+        Ok(mut guard) => guard.send_blob(frame),
+        Err(poisoned) => poisoned.into_inner().send_blob(frame),
+    }
+}
 
 /// Compute-thread → sender-thread handoff (overlap mode): one computed
 /// gradient awaiting encode + upload. The tensors are owned — the
@@ -47,6 +72,72 @@ struct Computed {
     masks: MaskPair,
     grads: Vec<Tensor>,
     ms: f64,
+    step: u64,
+}
+
+/// What the serve loop should do after a frame (or fault action).
+enum Flow {
+    /// Keep serving.
+    Continue,
+    /// Clean shutdown: drain, send Bye, exit Ok.
+    Shutdown,
+    /// Abrupt exit: no Bye, just drop the link (scripted kill or an
+    /// eviction notice) — the aggregator sees the peer vanish.
+    Die,
+}
+
+/// Scripted-fault progress: actions trigger on the gradient-send
+/// counter, decided at queueing time (deterministic under overlap).
+struct FaultState {
+    plan: FaultPlan,
+    sends: usize,
+}
+
+enum SendVerdict {
+    /// Compute and deliver normally.
+    Send,
+    /// Compute, but silently drop the gradient frame.
+    Drop,
+    /// Exit abruptly before computing (kill point reached).
+    Die,
+}
+
+impl FaultState {
+    fn new(plan: FaultPlan) -> FaultState {
+        FaultState { plan, sends: 0 }
+    }
+
+    /// Consult the plan for gradient send number `self.sends`. Sleeps
+    /// out any scheduled stall here, on the compute thread — the
+    /// heartbeat thread keeps pinging, so a stalled worker reads as
+    /// slow-but-alive, exactly the scenario the liveness window must
+    /// not confuse with death.
+    fn on_grad_send(&mut self) -> SendVerdict {
+        let idx = self.sends;
+        for a in &self.plan.actions {
+            if let FaultAction::StallMs { after_micro, ms } = a {
+                if *after_micro == idx {
+                    thread::sleep(Duration::from_millis(*ms));
+                }
+            }
+        }
+        for a in &self.plan.actions {
+            if let FaultAction::KillAfterMicro(n) = a {
+                if idx >= *n {
+                    return SendVerdict::Die;
+                }
+            }
+        }
+        self.sends += 1;
+        for a in &self.plan.actions {
+            if let FaultAction::DropUplinkFrame(n) = a {
+                if *n == idx {
+                    return SendVerdict::Drop;
+                }
+            }
+        }
+        SendVerdict::Send
+    }
 }
 
 /// Sleep out the simulated NIC time for one `bytes`-sized message. A
@@ -57,32 +148,38 @@ struct Computed {
 fn sim_wire_delay(bytes: usize, ms_per_mib: f64) {
     if ms_per_mib > 0.0 {
         let ms = bytes as f64 / (1024.0 * 1024.0) * ms_per_mib;
-        thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+        thread::sleep(Duration::from_secs_f64(ms / 1e3));
     }
 }
 
 /// Encode one computed gradient into a recycled buffer (Up header +
-/// codec payload as the frame tail), pay the optional simulated NIC,
-/// and upload it.
+/// codec payload as the frame tail), pay the optional simulated NIC
+/// outside the uplink lock, and upload it.
 fn encode_and_send(
     codec: &GradCodec,
     pool: &BufPool,
     wire_ms_per_mib: f64,
-    tx: &mut dyn BlobTx,
+    tx: &SharedTx,
     c: Computed,
 ) -> Result<()> {
     let mut frame = pool.checkout();
     encode_up_header(
-        &UpHdr { micro: c.micro, loss: c.loss, n_correct: c.n_correct, ms: c.ms },
+        &UpHdr {
+            micro: c.micro,
+            loss: c.loss,
+            n_correct: c.n_correct,
+            ms: c.ms,
+            step: c.step,
+        },
         &mut frame,
     );
     codec.encode_append(c.micro, &c.masks, &c.grads, &mut frame);
     sim_wire_delay(frame.len() - UP_GRAD_OFF, wire_ms_per_mib);
-    tx.send_blob(frame)
+    send_shared(tx, frame)
 }
 
-/// Dispatch one decoded frame. Returns `Ok(false)` on a shutdown
-/// frame, `Ok(true)` otherwise.
+/// Dispatch one decoded frame.
+#[allow(clippy::too_many_arguments)]
 fn handle_frame(
     frame: &[u8],
     be: &mut NativeBackend,
@@ -90,16 +187,25 @@ fn handle_frame(
     init: &InitMsg,
     pool: &BufPool,
     sender_tx: &Option<mpsc::SyncSender<Computed>>,
-    inline_tx: &mut Option<Box<dyn BlobTx>>,
-) -> Result<bool> {
+    tx: &SharedTx,
+    faults: &mut FaultState,
+) -> Result<Flow> {
     match peek_tag(frame)? {
         TAG_COMPUTE => {
-            for job in decode_compute(frame)? {
+            let (step, jobs) = decode_compute(frame)?;
+            for job in jobs {
+                let verdict = faults.on_grad_send();
+                if let SendVerdict::Die = verdict {
+                    return Ok(Flow::Die);
+                }
                 let t0 = Instant::now();
                 let (out, grads) = be
                     .grad_step(&job.x, &job.y, &job.masks)
                     .context("native grad step on worker")?;
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
+                if let SendVerdict::Drop = verdict {
+                    continue;
+                }
                 let c = Computed {
                     micro: job.micro,
                     loss: out.loss,
@@ -107,18 +213,18 @@ fn handle_frame(
                     masks: job.masks,
                     grads,
                     ms,
+                    step,
                 };
-                match (sender_tx, &mut *inline_tx) {
-                    (Some(stx), _) => stx
+                match sender_tx {
+                    Some(stx) => stx
                         .send(c)
                         .map_err(|_| anyhow::anyhow!("sender thread exited early"))?,
-                    (None, Some(tx)) => {
-                        encode_and_send(codec, pool, init.sim_wire_ms_per_mib, tx.as_mut(), c)?
+                    None => {
+                        encode_and_send(codec, pool, init.sim_wire_ms_per_mib, tx, c)?
                     }
-                    (None, None) => unreachable!("no uplink half"),
                 }
             }
-            Ok(true)
+            Ok(Flow::Continue)
         }
         TAG_APPLY => {
             let (lr, union, off) = decode_apply(frame)?;
@@ -127,28 +233,55 @@ fn handle_frame(
                 .decode_add(&frame[off..], &union, &mut acc)
                 .context("decoding reduced gradient broadcast")?;
             be.apply_grads(&acc, lr).context("applying reduced gradient")?;
-            Ok(true)
+            Ok(Flow::Continue)
         }
         TAG_DELTAS => {
             let off = decode_deltas(frame)?;
             let deltas =
                 codec.decode_dense(&frame[off..]).context("decoding delta broadcast")?;
             be.apply_deltas(&deltas).context("installing deltas")?;
-            Ok(true)
+            Ok(Flow::Continue)
+        }
+        TAG_STATE => {
+            let (params, momentum) = decode_state(frame)?;
+            be.import_state_flat(&params, &momentum)
+                .context("installing aggregator state")?;
+            Ok(Flow::Continue)
+        }
+        TAG_PONG => {
+            decode_pong(frame)?;
+            Ok(Flow::Continue)
         }
         TAG_RESET => {
             be.reset_momentum().context("resetting momentum")?;
-            Ok(true)
+            Ok(Flow::Continue)
         }
-        TAG_SHUTDOWN => Ok(false),
+        TAG_EVICT => Ok(Flow::Die),
+        TAG_SHUTDOWN => Ok(Flow::Shutdown),
         tag => anyhow::bail!("worker received unexpected frame tag {tag:#x}"),
     }
 }
 
-/// Serve one aggregator over `link` until it sends a shutdown frame.
-/// See the module docs; returns an error (never hangs) when the link
-/// dies or a frame is malformed.
-pub fn run_worker(mut link: Box<dyn Transport>, pool: Arc<BufPool>) -> Result<()> {
+/// Serve one aggregator over `link` until it sends a shutdown frame,
+/// with no scripted faults. See the module docs; returns an error
+/// (never hangs) when the link dies or a frame is malformed.
+pub fn run_worker(link: Box<dyn Transport>, pool: Arc<BufPool>) -> Result<()> {
+    run_worker_with_faults(link, pool, FaultPlan::default())
+}
+
+/// [`run_worker`] with a scripted [`FaultPlan`] acted out against the
+/// gradient-send counter (see [`super::fault`] for the grammar).
+pub fn run_worker_with_faults(
+    mut link: Box<dyn Transport>,
+    pool: Arc<BufPool>,
+    plan: FaultPlan,
+) -> Result<()> {
+    // Announce ourselves first: the Join frame carries the protocol
+    // version so a mismatched worker is rejected descriptively at the
+    // aggregator instead of misparsing frames mid-run.
+    let mut join = pool.checkout();
+    encode_join(PROTO_VERSION, &mut join);
+    link.send_blob(join).context("sending Join")?;
     let frame = link.recv_blob().context("waiting for Init")?;
     let init = decode_init(&frame)?;
     pool.give_back(frame);
@@ -157,7 +290,7 @@ pub fn run_worker(mut link: Box<dyn Transport>, pool: Arc<BufPool>) -> Result<()
     // Replica built: release the aggregator's handshake.
     link.barrier().context("worker handshake barrier")?;
     let (tx, rx) = link.split();
-    serve(be, codec, &init, rx, tx, pool)
+    serve(be, codec, &init, rx, tx, pool, plan)
 }
 
 /// The post-handshake serve loop (compute thread).
@@ -168,35 +301,77 @@ fn serve(
     mut rx: Box<dyn BlobRx>,
     tx: Box<dyn BlobTx>,
     pool: Arc<BufPool>,
+    plan: FaultPlan,
 ) -> Result<()> {
-    // With overlap the sender thread owns the uplink; it hands the tx
-    // half back through its join handle so the compute thread can send
-    // the final Bye. Without overlap the compute thread keeps it.
-    let (sender_tx, sender_handle, mut inline_tx) = if init.overlap {
+    let tx: SharedTx = Arc::new(Mutex::new(tx));
+    let mut faults = FaultState::new(plan);
+
+    // Heartbeat thread: pings every `heartbeat_ms` until stopped (or
+    // the uplink dies — then the aggregator already knows more than a
+    // missing ping could tell it).
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb_handle = if init.heartbeat_ms > 0 {
+        let tx = Arc::clone(&tx);
+        let pool = Arc::clone(&pool);
+        let stop = Arc::clone(&hb_stop);
+        let interval = Duration::from_millis(init.heartbeat_ms);
+        Some(
+            thread::Builder::new()
+                .name(format!("d2ft-dist-{}-hb", init.worker))
+                .spawn(move || {
+                    let mut seq = 0u64;
+                    'beat: loop {
+                        // Sleep in slices so shutdown joins promptly.
+                        let mut slept = Duration::ZERO;
+                        while slept < interval {
+                            let slice = (interval - slept).min(Duration::from_millis(50));
+                            thread::sleep(slice);
+                            slept += slice;
+                            if stop.load(Ordering::Relaxed) {
+                                break 'beat;
+                            }
+                        }
+                        let mut ping = pool.checkout();
+                        encode_ping(seq, &mut ping);
+                        seq += 1;
+                        if send_shared(&tx, ping).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawning dist heartbeat thread"),
+        )
+    } else {
+        None
+    };
+
+    // With overlap a dedicated sender thread drains the one-slot queue;
+    // it shares the uplink with the heartbeat via the mutex.
+    let (sender_tx, sender_handle) = if init.overlap {
         let (stx, srx) = mpsc::sync_channel::<Computed>(1);
         let codec = Arc::clone(&codec);
         let pool = Arc::clone(&pool);
+        let tx = Arc::clone(&tx);
         let wire_ms = init.sim_wire_ms_per_mib;
-        let mut tx = tx;
         let handle = thread::Builder::new()
             .name(format!("d2ft-dist-{}-tx", init.worker))
             .spawn(move || {
                 while let Ok(c) = srx.recv() {
-                    if encode_and_send(&codec, &pool, wire_ms, tx.as_mut(), c).is_err() {
+                    if encode_and_send(&codec, &pool, wire_ms, &tx, c).is_err() {
                         // Aggregator gone: stop draining; the compute
                         // thread will notice on its own half.
                         break;
                     }
                 }
-                tx
             })
             .expect("spawning dist sender thread");
-        (Some(stx), Some(handle), None)
+        (Some(stx), Some(handle))
     } else {
-        (None, None, Some(tx))
+        (None, None)
     };
 
     let mut result = Ok(());
+    let mut dying = false;
     loop {
         let frame = match rx.recv_blob() {
             Ok(f) => f,
@@ -205,11 +380,15 @@ fn serve(
                 break;
             }
         };
-        let step = handle_frame(&frame, &mut be, &codec, init, &pool, &sender_tx, &mut inline_tx);
+        let flow = handle_frame(&frame, &mut be, &codec, init, &pool, &sender_tx, &tx, &mut faults);
         pool.give_back(frame);
-        match step {
-            Ok(true) => continue,
-            Ok(false) => break,
+        match flow {
+            Ok(Flow::Continue) => continue,
+            Ok(Flow::Shutdown) => break,
+            Ok(Flow::Die) => {
+                dying = true;
+                break;
+            }
             Err(e) => {
                 result = Err(e);
                 break;
@@ -217,19 +396,26 @@ fn serve(
         }
     }
 
-    // Rejoin the uplink half. By the time a Shutdown frame arrives the
-    // aggregator has received every gradient of every batch, so the
-    // sender queue is already drained.
+    // Drain the pipeline: by the time a Shutdown frame arrives the
+    // aggregator has received every gradient of every batch; on a
+    // scripted kill the queued (pre-kill) sends still flush, keeping
+    // the delivered-gradient count exact.
     drop(sender_tx);
-    let mut tx = match (inline_tx, sender_handle) {
-        (Some(tx), None) => tx,
-        (None, Some(h)) => h.join().expect("joining dist sender thread"),
-        _ => unreachable!("exactly one uplink owner"),
-    };
+    if let Some(h) = sender_handle {
+        h.join().expect("joining dist sender thread");
+    }
+    hb_stop.store(true, Ordering::Relaxed);
+    if let Some(h) = hb_handle {
+        h.join().expect("joining dist heartbeat thread");
+    }
+    if dying {
+        // Abrupt exit: no Bye — dropping the uplink is the message.
+        return Ok(());
+    }
     if result.is_ok() {
         let mut bye = pool.checkout();
         encode_bye(pool.fresh_allocs(), pool.reuses(), &mut bye);
-        result = tx.send_blob(bye).context("sending Bye");
+        result = send_shared(&tx, bye).context("sending Bye");
     }
     result
 }

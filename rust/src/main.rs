@@ -88,6 +88,18 @@ fn cli() -> Cli {
             "tcp transport: aggregator bind address (port 0 = ephemeral)",
         )
         .flag("connect", "", "dist-worker: aggregator address to join (host:port)")
+        .flag(
+            "fault",
+            "",
+            "scripted faults: train --dist takes `W:PLAN,...`, dist-worker takes `PLAN` \
+             (PLAN = kill-after-micro=N | stall-ms=M@N | drop-uplink=N | rejoin-at-epoch=E, \
+             ';'-joined)",
+        )
+        .flag("heartbeat-ms", "500", "dist worker heartbeat interval in ms (0 = disabled)")
+        .flag("liveness-misses", "4", "missed heartbeats before a dist worker is declared lost")
+        .flag("report-json", "", "train --dist: write the DistReport as JSON to this path")
+        .flag("checkpoint-dir", "", "train --dist: write epoch-boundary checkpoints here")
+        .flag("resume", "", "train --dist: resume from a checkpoint file (skips pre-training)")
         .switch(
             "no-spawn",
             "tcp transport: do not fork dist-worker subprocesses; wait for external workers",
@@ -268,7 +280,7 @@ fn main() -> Result<()> {
 /// the same invocation serves any run — including one on another host.
 #[cfg(feature = "native")]
 fn run_dist_worker(args: &d2ft::util::cli::Args) -> Result<()> {
-    use d2ft::dist::{run_worker, BufPool, TcpTransport};
+    use d2ft::dist::{run_worker_with_faults, BufPool, FaultPlan, TcpTransport};
     use std::sync::Arc;
 
     let addr = args.get("connect");
@@ -276,11 +288,12 @@ fn run_dist_worker(args: &d2ft::util::cli::Args) -> Result<()> {
         !addr.is_empty(),
         "usage: repro dist-worker --connect <host:port> (the aggregator's --listen address)"
     );
+    let plan = FaultPlan::parse(args.get("fault"))?;
     let pool = Arc::new(BufPool::new());
     let transport =
         TcpTransport::connect(addr, std::time::Duration::from_secs(60), Arc::clone(&pool))?;
     d2ft::info!("dist-worker connected to {addr}");
-    run_worker(Box::new(transport), pool)?;
+    run_worker_with_faults(Box::new(transport), pool, plan)?;
     d2ft::info!("dist-worker shut down cleanly");
     Ok(())
 }
@@ -294,7 +307,9 @@ fn run_dist_worker(_args: &d2ft::util::cli::Args) -> Result<()> {
 #[cfg(feature = "native")]
 fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     use d2ft::backend::native::{NativeProvider, NativeSpec};
-    use d2ft::dist::{DistConfig, DistTrainer, ExchangeMode, SpawnMode, TransportKind};
+    use d2ft::dist::{
+        parse_worker_plans, DistConfig, DistTrainer, ExchangeMode, SpawnMode, TransportKind,
+    };
 
     anyhow::ensure!(
         d2ft::backend::BackendKind::parse(args.get("backend"))?
@@ -319,16 +334,31 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         },
         kind => kind,
     };
+    let to_path = |flag: &str| -> Option<std::path::PathBuf> {
+        let v = args.get(flag);
+        (!v.is_empty()).then(|| std::path::PathBuf::from(v))
+    };
     let dcfg = DistConfig {
         exchange: ExchangeMode::parse(args.get("exchange"))?,
         transport,
         overlap: !args.get_bool("no-overlap"),
         wire_precision: d2ft::dist::WirePrecision::parse(args.get("wire"))?,
         calibrate: !args.get_bool("no-calibrate"),
+        heartbeat_ms: args.get_u64("heartbeat-ms")?,
+        liveness_misses: args.get_usize("liveness-misses")? as u32,
+        faults: parse_worker_plans(args.get("fault"))?,
+        checkpoint_dir: to_path("checkpoint-dir"),
+        resume_from: to_path("resume"),
         ..DistConfig::new(cfg, workers)
     };
     let mut trainer = DistTrainer::new(&provider, dcfg)?;
     let r = trainer.run()?;
+    let report_path = args.get("report-json");
+    if !report_path.is_empty() {
+        std::fs::write(report_path, dist_report_json(&r))
+            .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;
+        d2ft::info!("wrote dist report to {report_path}");
+    }
     let t = &r.train;
     println!("backend              {} (dist)", t.backend);
     println!("scheduler            {}", t.scheduler);
@@ -385,4 +415,44 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
 #[cfg(not(feature = "native"))]
 fn run_dist(_args: &d2ft::util::cli::Args, _cfg: TrainerConfig) -> Result<()> {
     anyhow::bail!("--dist needs the `native` feature (rebuild with default features)")
+}
+
+/// Serialize the parts of a [`d2ft::dist::DistReport`] the chaos CI
+/// step inspects — loss/accuracy, membership churn, and the recovery
+/// counters — as pretty-printed JSON for `--report-json`.
+#[cfg(feature = "native")]
+fn dist_report_json(r: &d2ft::dist::DistReport) -> String {
+    use d2ft::util::json::{arr, num, obj, s};
+
+    let membership = r
+        .membership
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("batch", num(e.batch as f64)),
+                ("worker", num(e.worker as f64)),
+                ("kind", s(&e.kind)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", s("d2ft-dist-report-v1")),
+        ("workers", num(r.n_workers as f64)),
+        ("live_workers", num(r.live_workers as f64)),
+        ("transport", s(&r.transport)),
+        ("exchange", s(&r.exchange)),
+        ("batches", num(r.train.batches as f64)),
+        ("epochs", num(r.epochs as f64)),
+        ("final_train_loss", num(r.train.final_train_loss)),
+        ("test_top1", num(r.train.test_top1)),
+        ("evictions", num(r.evictions as f64)),
+        ("joins", num(r.joins as f64)),
+        ("reassigned_micros", num(r.reassigned_micros as f64)),
+        ("knapsack_resolves", num(r.knapsack_resolves as f64)),
+        ("checkpoints_written", num(r.checkpoints_written as f64)),
+        ("grad_bytes_up", num(r.wire.up_bytes as f64)),
+        ("grad_bytes_down", num(r.wire.down_bytes as f64)),
+        ("membership", arr(membership)),
+    ])
+    .to_string_pretty()
 }

@@ -1,0 +1,348 @@
+//! The elastic control plane's chaos matrix, pinned deterministically.
+//!
+//! Every scenario scripts its failure through a [`FaultPlan`] (no real
+//! machine crashes, no sleeps-as-synchronization in the assertions) and
+//! checks the same two things from two angles:
+//!
+//! 1. **Recovery is invisible to the numerics.** A killed worker's
+//!    unfinished micro-batches re-run on survivors, a stalled worker's
+//!    are duplicated, a dropped uplink frame is re-requested — and in
+//!    every case the loss trajectory and the final parameters are
+//!    *bitwise* identical to the fault-free serial reference, because
+//!    replicas are bitwise identical and the reduction order is fixed.
+//! 2. **The control plane converges.** Evictions, rejoins, membership
+//!    events, knapsack re-solves, and checkpoints land exactly where
+//!    the scripted plan says they must.
+//!
+//! Scenarios run over in-process channels and real loopback TCP (the
+//! K ∈ {2, 4} × {channel, tcp} matrix), plus one genuine SIGKILL of a
+//! forked `repro dist-worker` subprocess. Every run is guarded by an
+//! outer timeout — no fault may hang the aggregator.
+#![cfg(feature = "native")]
+
+use std::process::Command;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use d2ft::backend::native::{NativeProvider, NativeSpec};
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
+use d2ft::data::SyntheticKind;
+use d2ft::dist::{
+    Checkpoint, DistConfig, DistReport, DistTrainer, FaultPlan, SpawnMode, TransportKind,
+};
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::Budget;
+use d2ft::tensor::Tensor;
+
+fn small_spec() -> NativeSpec {
+    NativeSpec {
+        config: ModelConfig {
+            img_size: 8,
+            patch: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            lora_rank: 0,
+            head_dim: 8,
+            tokens: 5,
+        },
+        micro_batch: 2,
+        mb_variants: vec![],
+        lora_ranks: vec![2],
+        lora_standard_rank: 2,
+        init_seed: 0xFA17,
+        threads: 1,
+    }
+}
+
+/// `train_size` 40 with micro-batch 2 × 5 micros = exactly 4 batches
+/// per epoch, so `batches` 4 is one full epoch and 8 is two — the
+/// alignment the checkpoint and rejoin scenarios rely on. No synthetic
+/// pretraining: fault plans count gradient sends, and a kill scheduled
+/// "after micro 2" should mean fine-tuning micro 2, predictably.
+fn fault_cfg(batches: usize) -> TrainerConfig {
+    TrainerConfig {
+        train_size: 40,
+        test_size: 12,
+        batches,
+        pretrain_batches: 0,
+        update: UpdateMode::BatchAccum,
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar10Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 3, 1),
+        )
+    }
+}
+
+/// Chaos-tuned control-plane knobs: fast heartbeats, a liveness window
+/// generous enough for loaded CI hosts (1 s = 10 missed beats), a short
+/// stall window so straggler duplication actually triggers, and a hard
+/// batch deadline far above anything a healthy run needs.
+fn chaos(train: TrainerConfig, workers: usize) -> DistConfig {
+    let mut dcfg = DistConfig::new(train, workers);
+    dcfg.heartbeat_ms = 100;
+    dcfg.liveness_misses = 10;
+    dcfg.stall_reassign_ms = 300;
+    dcfg.batch_timeout_ms = 60_000;
+    dcfg
+}
+
+fn tcp_threads() -> TransportKind {
+    TransportKind::Tcp { listen: "127.0.0.1:0".to_string(), spawn: SpawnMode::Threads }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The fault-free serial reference every recovery run must match
+/// bitwise: loss curve plus two parameter tensors.
+fn serial_reference(cfg: TrainerConfig) -> (Vec<f32>, Tensor, Tensor) {
+    let provider = NativeProvider::new(small_spec());
+    let mut t = Trainer::new(&provider, cfg).expect("serial trainer");
+    let r = t.run().expect("serial run");
+    let w = t.backend().param("b00_wqkv").unwrap();
+    let h = t.backend().param("z_head_w").unwrap();
+    (r.loss_curve, w, h)
+}
+
+type RunOut = anyhow::Result<(DistReport, Tensor, Tensor)>;
+
+/// Run a distributed configuration on its own thread, reporting through
+/// a channel — the outer `recv_timeout` is the no-hang guarantee every
+/// chaos scenario is required to carry.
+fn spawn_run(dcfg: DistConfig) -> mpsc::Receiver<RunOut> {
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let provider = NativeProvider::new(small_spec());
+        let out = DistTrainer::new(&provider, dcfg).and_then(|mut dt| {
+            let r = dt.run()?;
+            let w = dt.backend().param("b00_wqkv").unwrap();
+            let h = dt.backend().param("z_head_w").unwrap();
+            Ok((r, w, h))
+        });
+        let _ = tx.send(out);
+    });
+    rx
+}
+
+fn wait_run(rx: &mpsc::Receiver<RunOut>, secs: u64) -> (DistReport, Tensor, Tensor) {
+    rx.recv_timeout(Duration::from_secs(secs))
+        .expect("dist fault run must finish, not hang")
+        .expect("dist fault run must succeed")
+}
+
+/// Reserve a loopback address that is almost certainly free.
+fn free_addr() -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+#[test]
+fn kill_mid_epoch_completes_bitwise_on_survivors() {
+    let (curve, sw, sh) = serial_reference(fault_cfg(4));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        for k in [2usize, 4] {
+            let dcfg = DistConfig {
+                transport: transport.clone(),
+                faults: vec![(0, FaultPlan::parse("kill-after-micro=2").unwrap())],
+                ..chaos(fault_cfg(4), k)
+            };
+            let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+            let tag = format!("{} K={k}", r.transport);
+            assert_eq!(r.evictions, 1, "{tag}: the killed worker must be evicted");
+            assert_eq!(r.joins, 0, "{tag}");
+            assert_eq!(r.live_workers, k - 1, "{tag}: survivors finish the run");
+            assert!(
+                r.reassigned_micros > 0,
+                "{tag}: the lost worker's micro-batches must re-run on survivors"
+            );
+            assert!(r.knapsack_resolves >= 1, "{tag}: eviction must trigger a re-solve");
+            assert_eq!(r.membership.len(), 1, "{tag}");
+            assert_eq!(r.membership[0].kind, "evict", "{tag}");
+            assert_eq!(
+                bits(&curve),
+                bits(&r.train.loss_curve),
+                "{tag}: recovery must not change a single bit of the trajectory"
+            );
+            assert_eq!(sw, w, "{tag}: body weights bitwise vs serial");
+            assert_eq!(sh, h, "{tag}: classifier bitwise vs serial");
+        }
+    }
+}
+
+#[test]
+fn stall_is_reassigned_not_evicted() {
+    let (curve, sw, sh) = serial_reference(fault_cfg(2));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        // 1.5 s stall vs a 300 ms stall window: the barrier must
+        // duplicate the stalled micro long before the slow copy lands,
+        // while the heartbeat thread keeps the liveness detector quiet.
+        let dcfg = DistConfig {
+            transport,
+            faults: vec![(1, FaultPlan::parse("stall-ms=1500@1").unwrap())],
+            ..chaos(fault_cfg(2), 2)
+        };
+        let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+        let tag = &r.transport;
+        assert_eq!(r.evictions, 0, "{tag}: slow-but-alive must not be evicted");
+        assert_eq!(r.live_workers, 2, "{tag}");
+        assert!(r.reassigned_micros > 0, "{tag}: stalled micros must be duplicated");
+        assert!(r.membership.is_empty(), "{tag}: no membership churn on a stall");
+        assert_eq!(bits(&curve), bits(&r.train.loss_curve), "{tag}: bitwise vs serial");
+        assert_eq!(sw, w, "{tag}: body weights");
+        assert_eq!(sh, h, "{tag}: classifier");
+    }
+}
+
+#[test]
+fn dropped_uplink_frame_is_recovered_without_eviction() {
+    let (curve, sw, sh) = serial_reference(fault_cfg(2));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        let dcfg = DistConfig {
+            transport,
+            faults: vec![(0, FaultPlan::parse("drop-uplink=1").unwrap())],
+            ..chaos(fault_cfg(2), 2)
+        };
+        let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+        let tag = &r.transport;
+        assert_eq!(r.evictions, 0, "{tag}: a lost frame is not a lost worker");
+        assert!(r.reassigned_micros > 0, "{tag}: the dropped micro must be re-run");
+        assert_eq!(bits(&curve), bits(&r.train.loss_curve), "{tag}: bitwise vs serial");
+        assert_eq!(sw, w, "{tag}: body weights");
+        assert_eq!(sh, h, "{tag}: classifier");
+    }
+}
+
+#[test]
+fn kill_then_rejoin_converges_with_fresh_state() {
+    let (curve, sw, sh) = serial_reference(fault_cfg(8));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        // Worker 0 dies during epoch 1 and is respawned at the epoch
+        // boundary. The rejoiner's deterministic init is epochs stale,
+        // so the bitwise assertion below doubles as proof that the
+        // State transfer (params + momentum) actually installed.
+        let plan = FaultPlan::parse("kill-after-micro=2;rejoin-at-epoch=1").unwrap();
+        let dcfg = DistConfig {
+            transport: transport.clone(),
+            faults: vec![(0, plan)],
+            ..chaos(fault_cfg(8), 2)
+        };
+        let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+        let tag = format!("{}", r.transport);
+        assert_eq!(r.evictions, 1, "{tag}");
+        assert_eq!(r.joins, 1, "{tag}: the scripted rejoin must happen");
+        assert_eq!(r.live_workers, 2, "{tag}: membership must converge back to full");
+        assert!(
+            r.knapsack_resolves >= 2,
+            "{tag}: evict and rejoin must each trigger a re-solve, got {}",
+            r.knapsack_resolves
+        );
+        assert_eq!(r.membership.len(), 2, "{tag}");
+        assert_eq!(r.membership[0].kind, "evict", "{tag}");
+        assert_eq!(r.membership[1].kind, "join", "{tag}");
+        assert_eq!(bits(&curve), bits(&r.train.loss_curve), "{tag}: bitwise vs serial");
+        assert_eq!(sw, w, "{tag}: body weights");
+        assert_eq!(sh, h, "{tag}: classifier");
+    }
+}
+
+#[test]
+fn checkpoint_resume_matches_the_uninterrupted_run_bitwise() {
+    let dir = std::env::temp_dir().join(format!("d2ft-fault-ckpt-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Run A: 8 batches (two epochs) straight through.
+    let (ra, wa, ha) = wait_run(&spawn_run(chaos(fault_cfg(8), 2)), 180);
+    assert_eq!(ra.epochs, 2);
+
+    // Run B1: the same run stopped after epoch 1, checkpointing.
+    let mut dcfg = chaos(fault_cfg(4), 2);
+    dcfg.checkpoint_dir = Some(dir.clone());
+    let (rb1, _, _) = wait_run(&spawn_run(dcfg), 180);
+    assert_eq!(rb1.checkpoints_written, 1, "one epoch boundary, one checkpoint");
+    let ckpt = dir.join("ckpt_e1.d2ck");
+    assert!(ckpt.exists(), "checkpoint file must land at {}", ckpt.display());
+
+    // Run B2: resume from the checkpoint and finish epoch 2. The
+    // resumed tail must equal run A's tail bitwise — losses and params.
+    let mut dcfg = chaos(fault_cfg(8), 2);
+    dcfg.resume_from = Some(ckpt.clone());
+    let (rb2, wb, hb) = wait_run(&spawn_run(dcfg), 180);
+    assert_eq!(rb2.train.batches, 8, "resume must continue to the configured end");
+    let half = ra.train.loss_curve.len() / 2;
+    assert_eq!(
+        bits(&ra.train.loss_curve[half..]),
+        bits(&rb2.train.loss_curve),
+        "the resumed epoch must replay the uninterrupted run bitwise"
+    );
+    assert_eq!(wa, wb, "resumed body weights");
+    assert_eq!(ha, hb, "resumed classifier");
+
+    // A corrupt checkpoint must be rejected descriptively, not loaded.
+    let mut bytes = std::fs::read(&ckpt).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&ckpt, &bytes).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&ckpt).unwrap_err());
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+    // ...and a truncated one too.
+    let good_len = bytes.len();
+    std::fs::write(&ckpt, &bytes[..good_len - 9]).unwrap();
+    let err = format!("{:#}", Checkpoint::load(&ckpt).unwrap_err());
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sigkill_subprocess_worker_is_evicted_and_the_run_completes() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let (curve, sw, sh) = serial_reference(fault_cfg(8));
+    let addr = free_addr();
+    let dcfg = DistConfig {
+        transport: TransportKind::Tcp { listen: addr.clone(), spawn: SpawnMode::External },
+        ..chaos(fault_cfg(8), 4)
+    };
+    let rx = spawn_run(dcfg);
+    // Three honest workers plus one victim, all real `repro
+    // dist-worker` subprocesses over real sockets. The victim's
+    // scripted 20 s stall guarantees the run is still in flight when
+    // the SIGKILL lands (each stalled batch waits out the 300 ms
+    // duplication window, so 8 batches cannot finish in 1.5 s).
+    let mut honest = Vec::new();
+    for _ in 0..3 {
+        let child = Command::new(exe)
+            .args(["dist-worker", "--connect", addr.as_str(), "--quiet"])
+            .spawn()
+            .expect("spawning honest dist-worker");
+        honest.push(child);
+    }
+    let mut victim = Command::new(exe)
+        .args(["dist-worker", "--connect", addr.as_str(), "--quiet", "--fault", "stall-ms=20000@2"])
+        .spawn()
+        .expect("spawning victim dist-worker");
+    thread::sleep(Duration::from_millis(1500));
+    victim.kill().expect("SIGKILLing the victim");
+    victim.wait().expect("reaping the victim");
+
+    let (r, w, h) = wait_run(&rx, 180);
+    assert_eq!(r.evictions, 1, "the SIGKILLed subprocess must be evicted");
+    assert_eq!(r.live_workers, 3, "the three honest subprocesses survive");
+    assert!(r.reassigned_micros > 0, "its work must move to survivors");
+    assert_eq!(
+        bits(&curve),
+        bits(&r.train.loss_curve),
+        "a SIGKILL mid-run must not change a single bit of the trajectory"
+    );
+    assert_eq!(sw, w, "body weights bitwise vs serial");
+    assert_eq!(sh, h, "classifier bitwise vs serial");
+    for mut child in honest {
+        child.wait().expect("reaping honest dist-worker");
+    }
+}

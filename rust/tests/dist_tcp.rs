@@ -9,9 +9,10 @@
 //!    precisions. The TCP workers run the *same* `run_worker` loop a
 //!    `repro dist-worker` subprocess runs; only the socket is local.
 //! 2. **Failure modes** — a worker that drops its connection mid-epoch
-//!    surfaces as a descriptive error at the aggregator (never a hung
-//!    barrier), and a malformed frame on the uplink is rejected with a
-//!    descriptive error rather than a panic or a misparse.
+//!    is evicted and its work re-runs on the survivor (bitwise equal to
+//!    the serial reference, never a hung barrier); a malformed uplink
+//!    frame, a garbled Join, or a protocol-version mismatch is rejected
+//!    with a descriptive error rather than a panic or a misparse.
 //!
 //! Hermetic: native backend only, loopback sockets only.
 #![cfg(feature = "native")]
@@ -211,44 +212,58 @@ fn spawn_trainer(addr: String, workers: usize) -> mpsc::Receiver<anyhow::Result<
     rx
 }
 
+/// Connect a mock worker and send the `Join` half of the handshake —
+/// the control plane refuses links that never identify themselves.
+fn connect_and_join(addr: &str) -> TcpTransport {
+    let pool = Arc::new(BufPool::new());
+    let mut t =
+        TcpTransport::connect(addr, Duration::from_secs(10), pool).expect("mock worker connect");
+    let mut join = Vec::new();
+    d2ft::dist::proto::encode_join(d2ft::dist::proto::PROTO_VERSION, &mut join);
+    t.send_blob(join).expect("sending Join");
+    t
+}
+
 #[test]
-fn worker_disconnect_mid_epoch_surfaces_a_clean_error() {
+fn worker_disconnect_mid_epoch_recovers_on_the_survivor() {
+    // Serial reference first: recovery must be numerically invisible.
+    let provider = NativeProvider::new(small_spec());
+    let mut serial = Trainer::new(&provider, cfg()).unwrap();
+    let rs = serial.run().unwrap();
     let addr = free_addr();
     let result_rx = spawn_trainer(addr.clone(), 2);
-    // Worker 1: honest — the real run_worker loop over a real socket.
+    // One honest worker: the real run_worker loop over a real socket.
+    // It must finish cleanly — its sibling's death is not its problem.
     let honest_addr = addr.clone();
     let honest = thread::spawn(move || {
         let pool = Arc::new(BufPool::new());
         let t = TcpTransport::connect(&honest_addr, Duration::from_secs(10), Arc::clone(&pool))
             .expect("honest worker connect");
-        // Errors are expected here: the aggregator aborts the run when
-        // its sibling vanishes, taking this link down too.
-        let _ = run_worker(Box::new(t), pool);
+        run_worker(Box::new(t), pool).expect("honest worker must finish cleanly");
     });
-    // Worker 0 (connected first => first in accept order): completes
-    // the handshake, then drops the connection on its first compute
-    // job — mid-epoch, with gradients outstanding.
+    // The other worker completes the handshake, then drops the
+    // connection on its first compute job — mid-epoch, with gradients
+    // outstanding.
     {
-        let pool = Arc::new(BufPool::new());
-        let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
-            .expect("dropping worker connect");
+        let mut t = connect_and_join(&addr);
         let init = t.recv_blob().expect("init frame");
-        assert_eq!(
-            d2ft::dist::proto::peek_tag(&init).unwrap(),
-            d2ft::dist::proto::TAG_INIT
-        );
+        assert_eq!(d2ft::dist::proto::peek_tag(&init).unwrap(), d2ft::dist::proto::TAG_INIT);
         t.barrier().expect("handshake barrier");
         let _job = t.recv_blob().expect("first compute job");
         // Vanish without a word.
         drop(t);
     }
-    let result = result_rx
-        .recv_timeout(Duration::from_secs(60))
-        .expect("trainer must fail fast, not hang on the dead worker");
-    let err = format!("{:#}", result.expect_err("run must fail"));
-    assert!(
-        err.contains("lost mid-batch"),
-        "error must name the lost worker and phase, got: {err}"
+    let r = result_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("trainer must recover, not hang on the dead worker")
+        .expect("the run must complete on the survivor");
+    assert_eq!(r.evictions, 1, "the vanished worker must be evicted");
+    assert_eq!(r.live_workers, 1, "only the honest worker remains");
+    assert!(r.knapsack_resolves >= 1, "eviction must trigger a knapsack re-solve");
+    assert_eq!(
+        bits(&rs.loss_curve),
+        bits(&r.train.loss_curve),
+        "recovery must be bitwise invisible in the loss trajectory"
     );
     honest.join().unwrap();
 }
@@ -260,9 +275,7 @@ fn malformed_uplink_frame_is_rejected_descriptively() {
     // The lone worker completes the handshake, then answers its first
     // compute job with garbage instead of a gradient frame.
     {
-        let pool = Arc::new(BufPool::new());
-        let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
-            .expect("worker connect");
+        let mut t = connect_and_join(&addr);
         let _init = t.recv_blob().expect("init frame");
         t.barrier().expect("handshake barrier");
         let _job = t.recv_blob().expect("first compute job");
@@ -278,5 +291,51 @@ fn malformed_uplink_frame_is_rejected_descriptively() {
     assert!(
         err.contains("unexpected frame tag"),
         "error must identify the malformed frame, got: {err}"
+    );
+}
+
+#[test]
+fn malformed_join_is_rejected_at_the_handshake() {
+    let addr = free_addr();
+    let result_rx = spawn_trainer(addr.clone(), 1);
+    // The connecting link opens with garbage instead of a Join frame.
+    {
+        let pool = Arc::new(BufPool::new());
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
+            .expect("worker connect");
+        t.send_blob(vec![0xAB; 8]).expect("sending garbage instead of Join");
+        thread::sleep(Duration::from_millis(200));
+    }
+    let result = result_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("trainer must reject the handshake, not hang");
+    let err = format!("{:#}", result.expect_err("run must fail"));
+    assert!(
+        err.contains("expected Join frame"),
+        "error must name the handshake failure, got: {err}"
+    );
+}
+
+#[test]
+fn protocol_version_mismatch_is_rejected_descriptively() {
+    let addr = free_addr();
+    let result_rx = spawn_trainer(addr.clone(), 1);
+    // A well-formed Join from the future: right frame, wrong version.
+    {
+        let pool = Arc::new(BufPool::new());
+        let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
+            .expect("worker connect");
+        let mut join = Vec::new();
+        d2ft::dist::proto::encode_join(d2ft::dist::proto::PROTO_VERSION + 7, &mut join);
+        t.send_blob(join).expect("sending wrong-version Join");
+        thread::sleep(Duration::from_millis(200));
+    }
+    let result = result_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("trainer must reject the version, not hang");
+    let err = format!("{:#}", result.expect_err("run must fail"));
+    assert!(
+        err.contains("protocol version"),
+        "error must name the version mismatch, got: {err}"
     );
 }
