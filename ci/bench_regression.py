@@ -12,13 +12,21 @@ gate compares host-normalized and scale-free metrics:
 * ``grad_bytes_saved_vs_full`` — measured wire savings (deterministic given
   the seeds, so compared with a tiny absolute slack);
 * ``calibration.makespan_drift`` — modeled-vs-measured drift after one
-  calibration epoch (absolute slack; the bench itself hard-asserts <= 0.20).
+  calibration epoch (absolute slack; the bench itself hard-asserts <= 0.20);
+* ``ring.flatness_k2_to_k8`` / ``ring.star_growth_k2_to_k8`` — aggregator
+  gradient-socket scaling of the ring vs star exchange (byte counts are
+  deterministic given the seeds, so absolute slack);
+* ``compression.int8_ratio`` / ``compression.topk10_ratio`` /
+  ``compression.ring_int8_chain_ratio`` — measured byte reduction of the
+  compressed wire modes vs f32 (deterministic, absolute slack).
 
 A baseline carrying ``"provisional": true`` (committed before any trusted CI
-run existed) reports violations as warnings and exits 0; replace it with a
-real CI artifact to arm the gate. Usage:
+run existed) reports violations as warnings and exits 0. The committed
+baseline mirrors the BENCH_dist_step.json schema; ``--refresh`` overwrites it
+with a fresh artifact (run it on a green CI run's artifact to tighten the
+gate from the bench's hard-assert floors to measured values). Usage:
 
-    python3 ci/bench_regression.py FRESH BASELINE [--tolerance 0.15]
+    python3 ci/bench_regression.py FRESH BASELINE [--tolerance 0.15] [--refresh]
 """
 
 import argparse
@@ -32,6 +40,11 @@ CHECKS = [
     ("overlap.speedup", "higher", "relative"),
     ("grad_bytes_saved_vs_full", "higher", "absolute:0.01"),
     ("calibration.makespan_drift", "lower", "absolute:0.05"),
+    ("ring.flatness_k2_to_k8", "lower", "absolute:0.10"),
+    ("ring.star_growth_k2_to_k8", "higher", "absolute:0.10"),
+    ("compression.int8_ratio", "higher", "absolute:0.10"),
+    ("compression.topk10_ratio", "higher", "absolute:0.25"),
+    ("compression.ring_int8_chain_ratio", "higher", "absolute:0.25"),
 ]
 
 
@@ -50,10 +63,25 @@ def main():
     ap.add_argument("baseline", help="committed baseline json")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="relative regression tolerance (default 0.15)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="overwrite BASELINE with FRESH instead of comparing "
+                         "(tightens the gate to this run's measured values)")
     args = ap.parse_args()
 
     with open(args.fresh) as f:
         fresh = json.load(f)
+
+    if args.refresh:
+        fresh["note"] = ("Measured baseline refreshed by ci/bench_regression.py "
+                         "--refresh from a green run's BENCH_dist_step.json. "
+                         "Gate compares only the CHECKS paths; timing-free "
+                         "metrics are deterministic given the seeds.")
+        with open(args.baseline, "w") as f:
+            json.dump(fresh, f, indent=2)
+            f.write("\n")
+        print(f"refreshed {args.baseline} from {args.fresh}")
+        return 0
+
     with open(args.baseline) as f:
         base = json.load(f)
 

@@ -10,9 +10,16 @@
 //!
 //!     cargo bench --bench dist_step
 //!
-//! Asserts three headline claims:
+//! Asserts the headline claims:
 //! * the masked wire format ships >= 40% fewer gradient bytes than full
 //!   fine-tuning under the 50% budget;
+//! * the ring exchange keeps the aggregator's gradient-exchange socket
+//!   bytes flat (within 25%) from K=2 to K=8 while the star's grow
+//!   >= 2x, and its uncompressed trajectory is bitwise equal to the
+//!   star (hence serial) one for K in {2, 4} on channel and TCP;
+//! * int8 quantization shrinks the measured gradient uplink >= 3.5x
+//!   and top-k (10%) >= 5x vs the f32 wire, with error feedback
+//!   keeping the loss trajectory close;
 //! * with a simulated NIC calibrated to ~1.5x one task's compute, the
 //!   pipelined step (encode+upload overlapping the next task's
 //!   `grad_step`) finishes the K=4 batch >= 1.2x faster than the
@@ -33,6 +40,7 @@ fn main() {
     use d2ft::data::{DatasetSpec, SyntheticKind};
     use d2ft::dist::{
         DistConfig, DistReport, DistTrainer, ExchangeMode, GradCodec, SpawnMode, TransportKind,
+        WireCompression,
     };
     use d2ft::metrics::{fmt_bytes, pct};
     use d2ft::schedule::{Budget, MaskPair};
@@ -144,6 +152,176 @@ fn main() {
         fmt_bytes(tcp.wire.up_bytes),
         fmt_bytes(tcp.modeled_wire_bytes)
     );
+
+    // --- ring / hierarchical collectives -----------------------------------
+    // The star aggregator's gradient-exchange traffic scales with K:
+    // its downlink rebroadcasts one union blob per worker. The ring
+    // aggregator's stays flat — one chain Final uplink per batch
+    // regardless of K, with the partials riding worker<->worker links
+    // the aggregator never sees. `grad_socket` sums the frame classes
+    // that carry gradient payload on the aggregator's own links; job
+    // dispatch is K-independent on both topologies and excluded, so
+    // the contrast is purely the exchange.
+    let run_ring = |exchange, workers: usize, tcp: bool| -> DistReport {
+        let transport = if tcp {
+            TransportKind::Tcp { listen: "127.0.0.1:0".to_string(), spawn: SpawnMode::Threads }
+        } else {
+            TransportKind::Channel
+        };
+        let dcfg = DistConfig {
+            exchange,
+            transport,
+            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), workers)
+        };
+        DistTrainer::new(&provider, dcfg)
+            .expect("building ring trainer")
+            .run()
+            .expect("ring run")
+    };
+    let grad_socket = |r: &DistReport| -> u64 {
+        ["up", "apply", "deltas", "ring"]
+            .into_iter()
+            .map(|c| {
+                let (tx, rx) = r.socket.class_bytes(c);
+                tx + rx
+            })
+            .sum()
+    };
+    let ring2 = run_ring(ExchangeMode::Ring, 2, false);
+    let ring4 = run_ring(ExchangeMode::Ring, 4, false);
+    let ring8 = run_ring(ExchangeMode::Ring, 8, false);
+    let star2 = run(
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 2, 1),
+        2,
+        ExchangeMode::MaskedAllReduce,
+    );
+    let star8 = run(
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 2, 1),
+        8,
+        ExchangeMode::MaskedAllReduce,
+    );
+    let ring_flat = grad_socket(&ring8) as f64 / grad_socket(&ring2) as f64;
+    let star_growth = grad_socket(&star8) as f64 / grad_socket(&star2) as f64;
+    println!(
+        "exchange scaling K=2 -> K=8: ring {} -> {} ({ring_flat:.2}x), star {} -> {} \
+         ({star_growth:.2}x)",
+        fmt_bytes(grad_socket(&ring2)),
+        fmt_bytes(grad_socket(&ring8)),
+        fmt_bytes(grad_socket(&star2)),
+        fmt_bytes(grad_socket(&star8))
+    );
+    assert!(
+        (0.75..=1.25).contains(&ring_flat),
+        "ring aggregator gradient traffic must stay within 25% from K=2 to K=8, \
+         got {ring_flat:.2}x"
+    );
+    assert!(
+        star_growth >= 2.0,
+        "star aggregator gradient traffic must grow >= 2x from K=2 to K=8, \
+         got {star_growth:.2}x"
+    );
+    assert!(
+        ring8.ring_bytes.iter().map(|&(tx, rx)| tx + rx).sum::<u64>() > 0,
+        "ring partials must ride worker<->worker links"
+    );
+
+    // Bitwise: the uncompressed chain fold adds the same values in the
+    // same ascending micro-batch order as the ordered star reduce
+    // (itself pinned bitwise-equal to the serial trainer in
+    // tests/dist.rs), on either transport and through group leaders.
+    let ring2t = run_ring(ExchangeMode::Ring, 2, true);
+    let ring4t = run_ring(ExchangeMode::Ring, 4, true);
+    let hier4 = run_ring(ExchangeMode::Hierarchical, 4, false);
+    let star_bits = curve_bits(&d2ft);
+    for (name, r) in [
+        ("ring K=2 channel", &ring2),
+        ("ring K=4 channel", &ring4),
+        ("ring K=8 channel", &ring8),
+        ("ring K=2 tcp", &ring2t),
+        ("ring K=4 tcp", &ring4t),
+        ("hierarchical K=4 channel", &hier4),
+    ] {
+        assert_eq!(
+            star_bits,
+            curve_bits(r),
+            "{name} must keep the star (hence serial) loss trajectory bitwise"
+        );
+    }
+
+    // --- compressed gradient wire -------------------------------------------
+    // The same 50%-budget star run with the uplink quantized (int8:
+    // per-slice scales, error-feedback residuals) or sparsified
+    // (top-10% by magnitude, delta-coded indices). Masks, schedule, and
+    // reduction order are unchanged, so `up_bytes` is directly
+    // comparable against the f32 run above.
+    let run_compress = |compress| -> DistReport {
+        let dcfg = DistConfig {
+            compress,
+            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+        };
+        DistTrainer::new(&provider, dcfg)
+            .expect("building compressed trainer")
+            .run()
+            .expect("compressed run")
+    };
+    let q8 = run_compress(WireCompression::Int8);
+    let topk = run_compress(WireCompression::TopK { pct: 10 });
+    let int8_ratio = d2ft.wire.up_bytes as f64 / q8.wire.up_bytes as f64;
+    let topk_ratio = d2ft.wire.up_bytes as f64 / topk.wire.up_bytes as f64;
+    println!(
+        "compressed uplink ({BATCHES} batches): f32 {} vs int8 {} ({int8_ratio:.2}x) vs \
+         top-10% {} ({topk_ratio:.2}x)",
+        fmt_bytes(d2ft.wire.up_bytes),
+        fmt_bytes(q8.wire.up_bytes),
+        fmt_bytes(topk.wire.up_bytes)
+    );
+    assert!(
+        int8_ratio >= 3.5,
+        "int8 must shrink the gradient uplink >= 3.5x vs f32, got {int8_ratio:.2}x"
+    );
+    assert!(
+        topk_ratio >= 5.0,
+        "top-10% must shrink the gradient uplink >= 5x vs f32, got {topk_ratio:.2}x"
+    );
+
+    // The wire layers compose: ring exchange with int8 partials (the
+    // README quickstart / CI configuration) shrinks the chain traffic
+    // too, and error feedback keeps every lossy trajectory training.
+    let ring_q8 = {
+        let dcfg = DistConfig {
+            exchange: ExchangeMode::Ring,
+            compress: WireCompression::Int8,
+            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+        };
+        DistTrainer::new(&provider, dcfg)
+            .expect("building ring+int8 trainer")
+            .run()
+            .expect("ring+int8 run")
+    };
+    let ring_chain = |r: &DistReport| -> u64 {
+        let (tx, rx) = r.socket.class_bytes("ring");
+        tx + rx + r.ring_bytes.iter().map(|&(s, v)| s + v).sum::<u64>()
+    };
+    let ring_q8_ratio = ring_chain(&ring4) as f64 / ring_chain(&ring_q8) as f64;
+    println!(
+        "ring chain traffic: f32 {} vs int8 {} ({ring_q8_ratio:.2}x)",
+        fmt_bytes(ring_chain(&ring4)),
+        fmt_bytes(ring_chain(&ring_q8))
+    );
+    assert!(
+        ring_q8_ratio >= 3.0,
+        "int8 must also shrink the ring chain traffic, got {ring_q8_ratio:.2}x"
+    );
+    for (name, r) in [("int8", &q8), ("top-10%", &topk), ("ring+int8", &ring_q8)] {
+        let first = f64::from(*r.train.loss_curve.first().expect("loss curve"));
+        let mean = r.train.final_train_loss;
+        assert!(
+            mean.is_finite() && mean < first,
+            "{name} must still train under error feedback: first {first} mean {mean}"
+        );
+    }
 
     // --- comm/compute overlap: pipelined vs serialized ---------------------
     // In-process channels are effectively free, so the NIC is simulated
@@ -338,6 +516,32 @@ fn main() {
                 ("frames", num((tcp.socket.frames_sent + tcp.socket.frames_recv) as f64)),
                 ("grad_up_bytes", num(tcp.wire.up_bytes as f64)),
                 ("modeled_wire_bytes", num(tcp.modeled_wire_bytes as f64)),
+            ]),
+        ),
+        (
+            // Criterion (a): flat ring vs K-scaling star, aggregator
+            // gradient-exchange socket bytes (deterministic).
+            "ring",
+            obj(vec![
+                ("grad_socket_k2", num(grad_socket(&ring2) as f64)),
+                ("grad_socket_k8", num(grad_socket(&ring8) as f64)),
+                ("flatness_k2_to_k8", num(ring_flat)),
+                ("star_grad_socket_k2", num(grad_socket(&star2) as f64)),
+                ("star_grad_socket_k8", num(grad_socket(&star8) as f64)),
+                ("star_growth_k2_to_k8", num(star_growth)),
+            ]),
+        ),
+        (
+            // Criterion (b): measured byte reduction of the lossy wire
+            // modes vs the f32 run, same masks and schedule.
+            "compression",
+            obj(vec![
+                ("f32_up_bytes", num(d2ft.wire.up_bytes as f64)),
+                ("int8_up_bytes", num(q8.wire.up_bytes as f64)),
+                ("int8_ratio", num(int8_ratio)),
+                ("topk10_up_bytes", num(topk.wire.up_bytes as f64)),
+                ("topk10_ratio", num(topk_ratio)),
+                ("ring_int8_chain_ratio", num(ring_q8_ratio)),
             ]),
         ),
         ("grad_bytes_saved_vs_full", num(savings)),

@@ -32,15 +32,31 @@ pub enum ExchangeMode {
     /// bytes. Useful when workers are too small to hold optimizer state
     /// (heterogeneous clusters); bitwise the same trajectory either way.
     ParamServer,
+    /// Ring exchange over direct worker↔worker links (negotiated by the
+    /// aggregator): the partial gradient sum travels the chain
+    /// `0 → 1 → … → K-1`, each worker adding its own micro-batches in
+    /// ascending order, so the reduction bracketing is exactly the
+    /// serial trainer's and per-node traffic is O(1) in K instead of
+    /// the star's O(K) at the aggregator. The finished sum is forwarded
+    /// verbatim around the wrap link so every replica decodes identical
+    /// bytes.
+    Ring,
+    /// Two-level ring: the same chain reduce (bitwise-identical
+    /// bracketing), but the distribute leg fans out through one leader
+    /// per group (`DistConfig::ring_group` members each) — the
+    /// aggregator's downlink scales with the number of groups, not K.
+    Hierarchical,
 }
 
 impl ExchangeMode {
-    /// Parse a CLI label (`allreduce` | `ps`).
+    /// Parse a CLI label (`allreduce` | `ps` | `ring` | `hier`).
     pub fn parse(s: &str) -> Result<ExchangeMode> {
         Ok(match s.to_ascii_lowercase().as_str() {
-            "allreduce" | "ring" => ExchangeMode::MaskedAllReduce,
+            "allreduce" | "star" => ExchangeMode::MaskedAllReduce,
             "ps" | "param-server" | "paramserver" => ExchangeMode::ParamServer,
-            _ => anyhow::bail!("unknown exchange mode {s:?} (allreduce|ps)"),
+            "ring" => ExchangeMode::Ring,
+            "hier" | "hierarchical" => ExchangeMode::Hierarchical,
+            _ => anyhow::bail!("unknown exchange mode {s:?} (allreduce|ps|ring|hier)"),
         })
     }
 
@@ -49,7 +65,15 @@ impl ExchangeMode {
         match self {
             ExchangeMode::MaskedAllReduce => "masked-allreduce",
             ExchangeMode::ParamServer => "param-server",
+            ExchangeMode::Ring => "ring",
+            ExchangeMode::Hierarchical => "hierarchical",
         }
+    }
+
+    /// True for the direct worker↔worker topologies (both need
+    /// negotiated ring links and the hold-gradients worker mode).
+    pub fn is_ring(&self) -> bool {
+        matches!(self, ExchangeMode::Ring | ExchangeMode::Hierarchical)
     }
 }
 
@@ -176,8 +200,12 @@ mod tests {
     fn exchange_mode_parses() {
         assert_eq!(ExchangeMode::parse("allreduce").unwrap(), ExchangeMode::MaskedAllReduce);
         assert_eq!(ExchangeMode::parse("PS").unwrap(), ExchangeMode::ParamServer);
+        assert_eq!(ExchangeMode::parse("ring").unwrap(), ExchangeMode::Ring);
+        assert_eq!(ExchangeMode::parse("hier").unwrap(), ExchangeMode::Hierarchical);
         assert!(ExchangeMode::parse("gossip").is_err());
         assert_eq!(ExchangeMode::ParamServer.label(), "param-server");
+        assert_eq!(ExchangeMode::Ring.label(), "ring");
+        assert!(ExchangeMode::Hierarchical.is_ring() && !ExchangeMode::ParamServer.is_ring());
     }
 
     #[test]

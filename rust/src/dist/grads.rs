@@ -43,12 +43,20 @@ use crate::tensor::Tensor;
 const MAGIC_GRAD: u32 = 0x4432_4647;
 /// Message magic: "D2FD" (dense delta payload, parameter-server mode).
 const MAGIC_DELTA: u32 = 0x4432_4644;
-/// Header: magic u32, flags u32 (wire precision), micro u32, mask
-/// fingerprint u64, payload elems u64.
+/// Header: magic u32, flags u32 (wire precision + compression), micro
+/// u32, mask fingerprint u64, payload elems u64.
 const HEADER_BYTES: usize = 28;
 /// Header flags bit 0: payload elements are IEEE binary16 (2 bytes)
 /// instead of the default f32.
 const FLAG_F16: u32 = 1;
+/// Header flags bit 1: payload is int8-quantized per slice.
+const FLAG_INT8: u32 = 2;
+/// Header flags bit 2: payload is int4-quantized per slice (packed
+/// nibbles).
+const FLAG_INT4: u32 = 4;
+/// Header flags bit 3: payload is top-k sparsified (delta-encoded
+/// indices + values); bits 8..16 carry the kept percentage.
+const FLAG_TOPK: u32 = 8;
 
 /// Element precision of gradient payloads on the wire.
 ///
@@ -206,6 +214,152 @@ fn add_vals(dst: &mut [f32], bytes: &[u8], mut off: usize, prec: WirePrecision) 
     off
 }
 
+/// Lossy payload compression stacked under the wire precision.
+///
+/// `None` is the bitwise-reference mode: the payload is exactly the
+/// [`WirePrecision`] elements, and the serial ≡ distributed contract
+/// holds on the f32 wire. The lossy modes trade bits for bytes and are
+/// pinned by loss-trajectory delta instead:
+///
+/// * `Int8` / `Int4` — per-slice symmetric quantization, where a
+///   *slice* is one parameter tensor's shipped elements in a message:
+///   each ships a 4-byte f32 scale (`max|v| / 127` resp. `/ 7`)
+///   followed by 1-byte (resp. packed 4-bit) signed codes, so the
+///   overhead is bytes-per-parameter, not bytes-per-run.
+/// * `TopK { pct }` — only the `pct`% largest-magnitude payload
+///   elements ship, as delta-encoded varint indices plus values at the
+///   wire precision (the one mode that composes with
+///   [`WirePrecision::F16`]).
+///
+/// Both lossy families support **error feedback**: the encoder adds the
+/// residual left over from the previous message before quantizing or
+/// selecting, and stores the new quantization/sparsification error back
+/// ([`GradCodec::encode_append_ef`]) — across steps the accumulated
+/// error stays bounded instead of compounding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireCompression {
+    /// Verbatim payload at the wire precision (lossless; default).
+    #[default]
+    None,
+    /// Per-slice-scaled 8-bit quantization (~4x vs f32).
+    Int8,
+    /// Per-slice-scaled packed 4-bit quantization (~8x vs f32).
+    Int4,
+    /// Keep only the `pct`% largest-magnitude elements (1..=100).
+    TopK {
+        /// Percentage of payload elements kept (by magnitude).
+        pct: u8,
+    },
+}
+
+impl WireCompression {
+    /// Parse a CLI label: `none` | `int8` | `int4` | `topk` |
+    /// `topk:PCT` (default 10%).
+    pub fn parse(s: &str) -> Result<WireCompression> {
+        let lower = s.to_ascii_lowercase();
+        Ok(match lower.as_str() {
+            "none" | "off" => WireCompression::None,
+            "int8" | "q8" => WireCompression::Int8,
+            "int4" | "q4" => WireCompression::Int4,
+            "topk" => WireCompression::TopK { pct: 10 },
+            _ => {
+                if let Some(p) = lower.strip_prefix("topk:") {
+                    let pct: u8 = p
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad top-k percentage {p:?}"))?;
+                    anyhow::ensure!(
+                        (1..=100).contains(&pct),
+                        "top-k percentage must be in 1..=100, got {pct}"
+                    );
+                    WireCompression::TopK { pct }
+                } else {
+                    anyhow::bail!(
+                        "unknown wire compression {s:?} (none|int8|int4|topk[:PCT])"
+                    )
+                }
+            }
+        })
+    }
+
+    /// Display label (`topk:PCT` carries its percentage).
+    pub fn label(&self) -> String {
+        match self {
+            WireCompression::None => "none".to_string(),
+            WireCompression::Int8 => "int8".to_string(),
+            WireCompression::Int4 => "int4".to_string(),
+            WireCompression::TopK { pct } => format!("topk:{pct}"),
+        }
+    }
+
+    /// True for the lossy modes (everything but `None`).
+    pub fn is_lossy(&self) -> bool {
+        !matches!(self, WireCompression::None)
+    }
+
+    /// Header flag bits (the top-k percentage rides in bits 8..16 so a
+    /// sender/receiver disagreement on `pct` is caught like any other
+    /// flag mismatch).
+    fn flags(self) -> u32 {
+        match self {
+            WireCompression::None => 0,
+            WireCompression::Int8 => FLAG_INT8,
+            WireCompression::Int4 => FLAG_INT4,
+            WireCompression::TopK { pct } => FLAG_TOPK | ((pct as u32) << 8),
+        }
+    }
+}
+
+/// Append `v` as an LEB128 varint.
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read an LEB128 varint at `*off`, advancing it. Truncation and
+/// overlong encodings error instead of panicking.
+fn get_varint(bytes: &[u8], off: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        anyhow::ensure!(*off < bytes.len(), "truncated varint");
+        anyhow::ensure!(shift < 64, "varint overflow");
+        let b = bytes[*off];
+        *off += 1;
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Symmetric per-slice quantization scale for `levels` signed steps.
+fn quant_scale(vals: &[f32], levels: f32) -> f32 {
+    let max = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max > 0.0 {
+        max / levels
+    } else {
+        0.0
+    }
+}
+
+/// Quantize `v` to a signed integer code in `[-levels, levels]`.
+#[inline]
+fn quant_code(v: f32, scale: f32, levels: f32) -> i32 {
+    if scale == 0.0 {
+        0
+    } else {
+        (v / scale).round().clamp(-levels, levels) as i32
+    }
+}
+
 /// Owner tag for elements belonging to no head.
 const SHARED: u32 = u32::MAX;
 
@@ -236,6 +390,8 @@ pub struct GradCodec {
     dense_elems: usize,
     /// Payload element precision on the wire (f32 default).
     precision: WirePrecision,
+    /// Payload compression stacked under the precision (none default).
+    compress: WireCompression,
 }
 
 impl GradCodec {
@@ -287,7 +443,14 @@ impl GradCodec {
                 per_head,
             });
         }
-        GradCodec { depth, heads, params, dense_elems, precision: WirePrecision::F32 }
+        GradCodec {
+            depth,
+            heads,
+            params,
+            dense_elems,
+            precision: WirePrecision::F32,
+            compress: WireCompression::None,
+        }
     }
 
     /// Same layout, different wire precision (builder style). All
@@ -301,6 +464,76 @@ impl GradCodec {
     /// The payload element precision this codec reads and writes.
     pub fn precision(&self) -> WirePrecision {
         self.precision
+    }
+
+    /// Same layout, different payload compression (builder style). Like
+    /// the precision, all cluster nodes must agree — the header flags
+    /// catch a mismatch (including a top-k percentage disagreement) at
+    /// decode time. Compression applies to masked gradient messages
+    /// only; the dense parameter-server delta path stays verbatim.
+    pub fn with_compression(mut self, compress: WireCompression) -> GradCodec {
+        self.compress = compress;
+        self
+    }
+
+    /// The payload compression this codec reads and writes.
+    pub fn compression(&self) -> WireCompression {
+        self.compress
+    }
+
+    /// Combined header flag word (precision + compression).
+    fn flags(&self) -> u32 {
+        self.precision.flags() | self.compress.flags()
+    }
+
+    /// Visit every shipped `(param index, lo, hi)` range under the
+    /// activity vector, in canonical wire order.
+    fn for_each_range(&self, act: &[bool], f: &mut impl FnMut(usize, usize, usize)) {
+        for (pi, p) in self.params.iter().enumerate() {
+            if !p.trainable {
+                continue;
+            }
+            for &(lo, hi) in &p.shared {
+                f(pi, lo, hi);
+            }
+            for (t, ranges) in p.per_head.iter().enumerate() {
+                if !act[t] {
+                    continue;
+                }
+                for &(lo, hi) in ranges {
+                    f(pi, lo, hi);
+                }
+            }
+        }
+    }
+
+    /// Shipped `[lo, hi)` ranges of one parameter under the activity
+    /// vector, in wire order (shared runs, then active heads).
+    fn shipped_ranges(p: &ParamLayout, act: &[bool]) -> Vec<Range> {
+        if !p.trainable {
+            return Vec::new();
+        }
+        let mut v = p.shared.clone();
+        for (t, ranges) in p.per_head.iter().enumerate() {
+            if act[t] {
+                v.extend_from_slice(ranges);
+            }
+        }
+        v
+    }
+
+    /// Shipped element count of one parameter under the activity vector.
+    fn param_payload_elems(p: &ParamLayout, act: &[bool]) -> usize {
+        if !p.trainable {
+            return 0;
+        }
+        let mut n: usize = p.shared.iter().map(|r| r.1 - r.0).sum();
+        for (t, ranges) in p.per_head.iter().enumerate() {
+            if act[t] {
+                n += ranges.iter().map(|r| r.1 - r.0).sum::<usize>();
+            }
+        }
+        n
     }
 
     /// Which subnets ship under `masks`: a head's slices travel iff its
@@ -342,9 +575,60 @@ impl GradCodec {
         self.payload_elems_with(&self.active(masks))
     }
 
-    /// Encoded byte size of one message under `masks`.
+    /// Exact payload byte count under the activity vector for the
+    /// deterministic-size modes. `TopK` messages are data-dependent
+    /// (varint index deltas), so their size is validated while parsing
+    /// instead; this returns `None` for them.
+    fn payload_bytes_with(&self, act: &[bool]) -> Option<usize> {
+        match self.compress {
+            WireCompression::None => {
+                Some(self.precision.elem_bytes() * self.payload_elems_with(act))
+            }
+            WireCompression::Int8 | WireCompression::Int4 => {
+                let int8 = self.compress == WireCompression::Int8;
+                let mut total = 0usize;
+                for p in &self.params {
+                    let n = Self::param_payload_elems(p, act);
+                    if n == 0 {
+                        continue;
+                    }
+                    total += 4 + if int8 { n } else { n.div_ceil(2) };
+                }
+                Some(total)
+            }
+            WireCompression::TopK { .. } => None,
+        }
+    }
+
+    /// Encoded byte size of one message under `masks`. Exact for every
+    /// mode but `TopK`, whose varint index stream is data-dependent —
+    /// there this returns the (never exceeded) bound of a dense index
+    /// stream.
     pub fn encoded_len(&self, masks: &MaskPair) -> usize {
-        HEADER_BYTES + self.precision.elem_bytes() * self.payload_elems(masks)
+        let act = self.active(masks);
+        match self.payload_bytes_with(&act) {
+            Some(n) => HEADER_BYTES + n,
+            None => {
+                let n = self.payload_elems_with(&act);
+                let k = self.topk_count(n);
+                // Bound: 8-byte count, <= 10-byte varints, full values.
+                HEADER_BYTES + 8 + 10 * k + self.precision.elem_bytes() * k
+            }
+        }
+    }
+
+    /// Number of elements a top-k message keeps out of `n`.
+    fn topk_count(&self, n: usize) -> usize {
+        match self.compress {
+            WireCompression::TopK { pct } => {
+                if n == 0 {
+                    0
+                } else {
+                    ((n * pct as usize).div_ceil(100)).max(1)
+                }
+            }
+            _ => n,
+        }
     }
 
     /// Byte size of a dense (every head active) message — what one
@@ -390,40 +674,176 @@ impl GradCodec {
         grads: &[Tensor],
         out: &mut Vec<u8>,
     ) {
+        self.encode_append_ef(micro, masks, grads, None, out);
+    }
+
+    /// [`GradCodec::encode_into`] with an error-feedback residual (see
+    /// [`GradCodec::encode_append_ef`]).
+    pub fn encode_into_ef(
+        &self,
+        micro: usize,
+        masks: &MaskPair,
+        grads: &[Tensor],
+        ef: Option<&mut [Tensor]>,
+        out: &mut Vec<u8>,
+    ) {
+        out.clear();
+        self.encode_append_ef(micro, masks, grads, ef, out);
+    }
+
+    /// [`GradCodec::encode_append`] with **error feedback** for the
+    /// lossy compression modes: `ef` (dense residual tensors, e.g. from
+    /// [`NativeBackend::zeros_like_params`], owned by the sender and
+    /// carried across messages) is added to each shipped value before
+    /// quantization/selection, and the part that did not make it onto
+    /// the wire is stored back. Under `WireCompression::None` the
+    /// residual is ignored — the payload is exact.
+    pub fn encode_append_ef(
+        &self,
+        micro: usize,
+        masks: &MaskPair,
+        grads: &[Tensor],
+        mut ef: Option<&mut [Tensor]>,
+        out: &mut Vec<u8>,
+    ) {
         assert_eq!(grads.len(), self.params.len(), "grad tensor count");
-        let base = out.len();
-        // One layout walk serves capacity, header, and body.
+        if let Some(r) = ef.as_deref() {
+            assert_eq!(r.len(), self.params.len(), "residual tensor count");
+        }
         let act = self.active(masks);
         let n_elems = self.payload_elems_with(&act);
-        out.reserve(HEADER_BYTES + self.precision.elem_bytes() * n_elems);
+        out.reserve(HEADER_BYTES + self.payload_bytes_with(&act).unwrap_or(0));
         out.extend_from_slice(&MAGIC_GRAD.to_le_bytes());
-        out.extend_from_slice(&self.precision.flags().to_le_bytes());
+        out.extend_from_slice(&self.flags().to_le_bytes());
         out.extend_from_slice(&(micro as u32).to_le_bytes());
         out.extend_from_slice(&masks.fingerprint().to_le_bytes());
         out.extend_from_slice(&(n_elems as u64).to_le_bytes());
-        for (p, g) in self.params.iter().zip(grads) {
-            if !p.trainable {
-                continue;
+        match self.compress {
+            WireCompression::None => {
+                self.for_each_range(&act, &mut |pi, lo, hi| {
+                    write_vals(out, &grads[pi].data()[lo..hi], self.precision);
+                });
             }
-            debug_assert_eq!(g.len(), p.len, "grad shape vs layout");
-            let gd = g.data();
-            for &(lo, hi) in &p.shared {
-                write_vals(out, &gd[lo..hi], self.precision);
-            }
-            for (t, ranges) in p.per_head.iter().enumerate() {
-                if !act[t] {
-                    continue;
+            WireCompression::Int8 | WireCompression::Int4 => {
+                let int8 = self.compress == WireCompression::Int8;
+                let levels: f32 = if int8 { 127.0 } else { 7.0 };
+                let mut slice = Vec::new();
+                for (pi, p) in self.params.iter().enumerate() {
+                    let ranges = Self::shipped_ranges(p, &act);
+                    // Gather this parameter's shipped elements (plus
+                    // carried residual) into one contiguous slice and
+                    // quantize them under a single scale.
+                    slice.clear();
+                    let gd = grads[pi].data();
+                    for &(lo, hi) in &ranges {
+                        slice.extend_from_slice(&gd[lo..hi]);
+                    }
+                    if slice.is_empty() {
+                        continue;
+                    }
+                    if let Some(r) = ef.as_deref() {
+                        let rd = r[pi].data();
+                        let mut j = 0usize;
+                        for &(lo, hi) in &ranges {
+                            for i in lo..hi {
+                                slice[j] += rd[i];
+                                j += 1;
+                            }
+                        }
+                    }
+                    let scale = quant_scale(&slice, levels);
+                    out.extend_from_slice(&scale.to_le_bytes());
+                    if int8 {
+                        for &v in slice.iter() {
+                            out.push(quant_code(v, scale, levels) as i8 as u8);
+                        }
+                    } else {
+                        for pair in slice.chunks(2) {
+                            let lo4 = (quant_code(pair[0], scale, levels) + 8) as u8;
+                            let hi4 = if pair.len() == 2 {
+                                (quant_code(pair[1], scale, levels) + 8) as u8
+                            } else {
+                                8 // padding nibble encodes zero
+                            };
+                            out.push((lo4 & 0x0F) | (hi4 << 4));
+                        }
+                    }
+                    if let Some(r) = ef.as_deref_mut() {
+                        let rd = r[pi].data_mut();
+                        let mut j = 0usize;
+                        for &(lo, hi) in &ranges {
+                            for i in lo..hi {
+                                let v = slice[j];
+                                let sent = quant_code(v, scale, levels) as f32 * scale;
+                                rd[i] = v - sent;
+                                j += 1;
+                            }
+                        }
+                    }
                 }
-                for &(lo, hi) in ranges {
-                    write_vals(out, &gd[lo..hi], self.precision);
+            }
+            WireCompression::TopK { .. } => {
+                // Gather the (residual-corrected) payload stream, pick
+                // the k largest magnitudes (ties broken by position so
+                // the selection is deterministic), ship sorted indices
+                // as varint deltas plus values at the wire precision.
+                let mut vals = Vec::with_capacity(n_elems);
+                self.for_each_range(&act, &mut |pi, lo, hi| {
+                    let gd = grads[pi].data();
+                    if let Some(r) = ef.as_deref() {
+                        let rd = r[pi].data();
+                        for i in lo..hi {
+                            vals.push(gd[i] + rd[i]);
+                        }
+                    } else {
+                        vals.extend_from_slice(&gd[lo..hi]);
+                    }
+                });
+                let k = self.topk_count(vals.len());
+                let mut order: Vec<u32> = (0..vals.len() as u32).collect();
+                order.sort_by(|&a, &b| {
+                    let (ma, mb) = (vals[a as usize].abs(), vals[b as usize].abs());
+                    mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+                });
+                let mut keep: Vec<u32> = order[..k].to_vec();
+                keep.sort_unstable();
+                out.extend_from_slice(&(k as u64).to_le_bytes());
+                let mut prev = 0u64;
+                for (j, &idx) in keep.iter().enumerate() {
+                    let idx = idx as u64;
+                    put_varint(out, if j == 0 { idx } else { idx - prev });
+                    prev = idx;
+                }
+                let mut selected = vec![false; vals.len()];
+                for &idx in &keep {
+                    selected[idx as usize] = true;
+                    write_vals(out, &vals[idx as usize..idx as usize + 1], self.precision);
+                }
+                if let Some(r) = ef.as_deref_mut() {
+                    let mut pos = 0usize;
+                    self.for_each_range(&act, &mut |pi, lo, hi| {
+                        let rd = r[pi].data_mut();
+                        for i in lo..hi {
+                            rd[i] = if selected[pos] {
+                                // The value survives at the wire
+                                // precision: only its rounding error
+                                // (zero on f32) feeds back.
+                                match self.precision {
+                                    WirePrecision::F32 => 0.0,
+                                    WirePrecision::F16 => {
+                                        vals[pos]
+                                            - f16_bits_to_f32(f32_to_f16_bits(vals[pos]))
+                                    }
+                                }
+                            } else {
+                                vals[pos]
+                            };
+                            pos += 1;
+                        }
+                    });
                 }
             }
         }
-        debug_assert_eq!(
-            out.len() - base,
-            HEADER_BYTES + self.precision.elem_bytes() * n_elems,
-            "encoded length disagrees with the layout walk"
-        );
     }
 
     /// Decode a message and **add** its payload into dense accumulators
@@ -445,9 +865,10 @@ impl GradCodec {
         anyhow::ensure!(magic == MAGIC_GRAD, "bad gradient-message magic {magic:#x}");
         let flags = u32::from_le_bytes(word(4));
         anyhow::ensure!(
-            flags == self.precision.flags(),
-            "wire precision mismatch: message flags {flags:#x}, codec is {}",
-            self.precision.label()
+            flags == self.flags(),
+            "wire format mismatch: message flags {flags:#x}, codec is {}/{}",
+            self.precision.label(),
+            self.compress.label()
         );
         let micro = u32::from_le_bytes(word(8)) as usize;
         let fp = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
@@ -462,31 +883,142 @@ impl GradCodec {
             n_elems == expect,
             "payload {n_elems} elems, layout expects {expect}"
         );
-        anyhow::ensure!(
-            bytes.len() == HEADER_BYTES + self.precision.elem_bytes() * n_elems,
-            "message length {} vs declared payload {}",
-            bytes.len(),
-            n_elems
-        );
-        let mut off = HEADER_BYTES;
+        if let Some(pb) = self.payload_bytes_with(&act) {
+            anyhow::ensure!(
+                bytes.len() == HEADER_BYTES + pb,
+                "message length {} vs expected {}",
+                bytes.len(),
+                HEADER_BYTES + pb
+            );
+        }
+        match self.compress {
+            WireCompression::None => {
+                let mut off = HEADER_BYTES;
+                self.for_each_range_acc(&act, acc, &mut |ad, lo, hi| {
+                    off = add_vals(&mut ad[lo..hi], bytes, off, self.precision);
+                    Ok(())
+                })?;
+            }
+            WireCompression::Int8 | WireCompression::Int4 => {
+                // The exact-length check above makes this walk's
+                // indexing safe: it consumes precisely
+                // `payload_bytes_with` bytes.
+                let mut off = HEADER_BYTES;
+                let int8 = self.compress == WireCompression::Int8;
+                for (p, a) in self.params.iter().zip(acc.iter_mut()) {
+                    let ranges = Self::shipped_ranges(p, &act);
+                    let n = Self::param_payload_elems(p, &act);
+                    if n == 0 {
+                        continue;
+                    }
+                    let scale =
+                        f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                    anyhow::ensure!(scale.is_finite(), "non-finite quantization scale");
+                    off += 4;
+                    let ad = a.data_mut();
+                    let mut j = 0usize;
+                    for &(lo, hi) in &ranges {
+                        for i in lo..hi {
+                            let code = if int8 {
+                                bytes[off + j] as i8 as i32
+                            } else {
+                                let byte = bytes[off + j / 2];
+                                let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                                nib as i32 - 8
+                            };
+                            ad[i] += code as f32 * scale;
+                            j += 1;
+                        }
+                    }
+                    off += if int8 { n } else { n.div_ceil(2) };
+                }
+            }
+            WireCompression::TopK { .. } => {
+                // Header declares the *stream* length (n_elems); the
+                // payload carries k entries. Everything is
+                // cursor-parsed with bounds checks so a malformed
+                // frame rejects instead of panicking.
+                let mut off = HEADER_BYTES;
+                anyhow::ensure!(bytes.len() >= off + 8, "truncated top-k count");
+                let k = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+                off += 8;
+                anyhow::ensure!(
+                    k == self.topk_count(n_elems),
+                    "top-k count {k} disagrees with codec selection"
+                );
+                let mut indices = Vec::with_capacity(k);
+                let mut prev = 0u64;
+                for j in 0..k {
+                    let delta = get_varint(bytes, &mut off)?;
+                    let idx = if j == 0 {
+                        delta
+                    } else {
+                        anyhow::ensure!(delta > 0, "non-increasing top-k index");
+                        match prev.checked_add(delta) {
+                            Some(v) => v,
+                            None => anyhow::bail!("top-k index overflow"),
+                        }
+                    };
+                    anyhow::ensure!(
+                        (idx as usize) < n_elems,
+                        "top-k index {idx} out of range {n_elems}"
+                    );
+                    prev = idx;
+                    indices.push(idx as usize);
+                }
+                let vb = self.precision.elem_bytes();
+                anyhow::ensure!(
+                    bytes.len() == off + vb * k,
+                    "top-k payload length mismatch"
+                );
+                let mut vals = vec![0.0f32; k];
+                for v in vals.iter_mut() {
+                    off = add_vals(std::slice::from_mut(v), bytes, off, self.precision);
+                }
+                let mut cursor = 0usize; // next selected entry to place
+                let mut pos = 0usize; // position in the payload stream
+                self.for_each_range_acc(&act, acc, &mut |ad, lo, hi| {
+                    while cursor < indices.len()
+                        && indices[cursor] < pos + (hi - lo)
+                    {
+                        ad[lo + (indices[cursor] - pos)] += vals[cursor];
+                        cursor += 1;
+                    }
+                    pos += hi - lo;
+                    Ok(())
+                })?;
+            }
+        }
+        Ok(micro)
+    }
+
+    /// Fallible mutable-accumulator companion to
+    /// [`GradCodec::for_each_range`]: walks the same wire order handing
+    /// each callback the owning tensor's dense data.
+    fn for_each_range_acc(
+        &self,
+        act: &[bool],
+        acc: &mut [Tensor],
+        f: &mut impl FnMut(&mut [f32], usize, usize) -> Result<()>,
+    ) -> Result<()> {
         for (p, a) in self.params.iter().zip(acc.iter_mut()) {
             if !p.trainable {
                 continue;
             }
             let ad = a.data_mut();
             for &(lo, hi) in &p.shared {
-                off = add_vals(&mut ad[lo..hi], bytes, off, self.precision);
+                f(ad, lo, hi)?;
             }
             for (t, ranges) in p.per_head.iter().enumerate() {
                 if !act[t] {
                     continue;
                 }
                 for &(lo, hi) in ranges {
-                    off = add_vals(&mut ad[lo..hi], bytes, off, self.precision);
+                    f(ad, lo, hi)?;
                 }
             }
         }
-        Ok(micro)
+        Ok(())
     }
 
     /// Serialize dense per-parameter values for every trainable tensor —
@@ -666,6 +1198,22 @@ impl WireStats {
     /// Total bytes moved (uplink + downlink).
     pub fn total_bytes(&self) -> u64 {
         self.up_bytes + self.down_bytes
+    }
+}
+
+/// Elementwise-add `grads` into dense accumulators `acc` (canonical
+/// tensor order). The ring reduce leg uses this for a worker's own
+/// contribution so every summation on the exchange path shares one
+/// implementation — and one floating-point evaluation order.
+pub fn accumulate(acc: &mut [Tensor], grads: &[Tensor]) {
+    assert_eq!(acc.len(), grads.len(), "tensor count");
+    for (a, g) in acc.iter_mut().zip(grads) {
+        let ad = a.data_mut();
+        let gd = g.data();
+        debug_assert_eq!(ad.len(), gd.len(), "tensor shape");
+        for (x, &v) in ad.iter_mut().zip(gd.iter()) {
+            *x += v;
+        }
     }
 }
 
@@ -938,5 +1486,255 @@ mod tests {
         assert_eq!(s.up_msgs, 2);
         assert_eq!(s.total_bytes(), 2000);
         assert!((s.grad_savings() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_compression_parses_and_flags() {
+        use WireCompression as WC;
+        assert_eq!(WC::parse("none").unwrap(), WC::None);
+        assert_eq!(WC::parse("OFF").unwrap(), WC::None);
+        assert_eq!(WC::parse("int8").unwrap(), WC::Int8);
+        assert_eq!(WC::parse("q4").unwrap(), WC::Int4);
+        assert_eq!(WC::parse("topk").unwrap(), WC::TopK { pct: 10 });
+        assert_eq!(WC::parse("TopK:25").unwrap(), WC::TopK { pct: 25 });
+        assert!(WC::parse("topk:0").is_err());
+        assert!(WC::parse("topk:101").is_err());
+        assert!(WC::parse("gzip").is_err());
+        assert_eq!(WC::TopK { pct: 25 }.label(), "topk:25");
+        assert!(!WC::None.is_lossy() && WC::Int4.is_lossy());
+        assert_eq!(WC::default(), WC::None);
+        // The kept percentage rides in the flag word, so a pct
+        // disagreement rejects like any other format mismatch.
+        assert_ne!(WC::TopK { pct: 10 }.flags(), WC::TopK { pct: 25 }.flags());
+    }
+
+    #[test]
+    fn varint_round_trips_and_rejects_malformed() {
+        crate::util::proptest::check("varint-round-trip", 200, |g| {
+            let v = g.rng().next_u64() >> g.usize_in(0, 63);
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut off = 0usize;
+            let back = get_varint(&buf, &mut off).map_err(|e| e.to_string())?;
+            if back != v || off != buf.len() {
+                return Err(format!("{v} -> {back} (consumed {off}/{})", buf.len()));
+            }
+            Ok(())
+        });
+        // Truncated and overlong streams reject instead of panicking.
+        assert!(get_varint(&[0x80], &mut 0).is_err());
+        assert!(get_varint(&[0x80u8; 12], &mut 0).is_err());
+    }
+
+    #[test]
+    fn quantization_error_is_bounded_by_half_a_step() {
+        crate::util::proptest::check("quant-error-bound", 100, |g| {
+            let n = g.usize_in(1, 64);
+            let amp = g.f32_in(1e-6, 10.0);
+            let vals = g.vec(n, |g| g.f32_in(-1.0, 1.0) * amp);
+            for &levels in &[127.0f32, 7.0] {
+                let scale = quant_scale(&vals, levels);
+                for &v in &vals {
+                    let deq = quant_code(v, scale, levels) as f32 * scale;
+                    let bound = 0.5 * scale * (1.0 + 1e-5) + 1e-12;
+                    if (deq - v).abs() > bound {
+                        return Err(format!(
+                            "levels {levels}: {v} -> {deq} (scale {scale})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+        // All-zero slices quantize to code 0 under a zero scale.
+        assert_eq!(quant_scale(&[0.0, -0.0], 127.0), 0.0);
+        assert_eq!(quant_code(0.3, 0.0, 127.0), 0);
+    }
+
+    #[test]
+    fn int8_and_int4_round_trip_within_quantization_error() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = masks_with(&[(0, 1)], &[(1, 0)]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let f32c = GradCodec::new(&be);
+        let base = f32c.encode(0, &masks, &grads).len();
+        for (mode, levels, floor) in [
+            (WireCompression::Int8, 127.0f32, 3.5),
+            (WireCompression::Int4, 7.0, 6.0),
+        ] {
+            let codec = GradCodec::new(&be).with_compression(mode);
+            assert_eq!(codec.compression(), mode);
+            let msg = codec.encode(0, &masks, &grads);
+            assert_eq!(msg.len(), codec.encoded_len(&masks), "{mode:?} declared size");
+            let ratio = base as f64 / msg.len() as f64;
+            assert!(ratio >= floor, "{mode:?} ratio {ratio:.2} below {floor}");
+            let mut acc = be.zeros_like_params();
+            assert_eq!(codec.decode_add(&msg, &masks, &mut acc).unwrap(), 0);
+            // Per-element error bounded by half a quantization step of
+            // the owning tensor's scale (range max <= tensor max).
+            for (i, (a, g)) in acc.iter().zip(&grads).enumerate() {
+                let max = g.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let bound = max / levels * 0.5001 + 1e-9;
+                for (&va, &vg) in a.data().iter().zip(g.data()) {
+                    assert!(
+                        (va - vg).abs() <= bound,
+                        "{mode:?} param {i}: {va} vs {vg} (bound {bound})"
+                    );
+                }
+            }
+            // Compression mismatch rejects in both directions.
+            assert!(f32c.decode_add(&msg, &masks, &mut acc).is_err());
+            let plain = f32c.encode(0, &masks, &grads);
+            assert!(codec.decode_add(&plain, &masks, &mut acc).is_err());
+        }
+    }
+
+    #[test]
+    fn topk_round_trips_and_keeps_the_largest() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = masks_with(&[(0, 1)], &[]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        // pct=100 keeps everything: decode reconstructs bit-for-bit.
+        let full = GradCodec::new(&be).with_compression(WireCompression::TopK { pct: 100 });
+        let msg = full.encode(5, &masks, &grads);
+        assert!(msg.len() <= full.encoded_len(&masks), "bound must hold");
+        let mut acc = be.zeros_like_params();
+        assert_eq!(full.decode_add(&msg, &masks, &mut acc).unwrap(), 5);
+        for (a, g) in acc.iter().zip(&grads) {
+            assert_eq!(a.data(), g.data(), "pct=100 is lossless");
+        }
+        // pct=10 ships ~10% of the elements and every decoded value
+        // matches its original exactly (f32 wire); dropped ones are 0.
+        let sparse = GradCodec::new(&be).with_compression(WireCompression::TopK { pct: 10 });
+        let msg = sparse.encode(0, &masks, &grads);
+        let plain = GradCodec::new(&be).encode(0, &masks, &grads);
+        let ratio = plain.len() as f64 / msg.len() as f64;
+        assert!(ratio >= 5.0, "topk:10 ratio {ratio:.2} below 5x");
+        let mut acc = be.zeros_like_params();
+        sparse.decode_add(&msg, &masks, &mut acc).unwrap();
+        let (mut kept, mut dropped, mut mismatched) = (0u64, 0u64, 0u64);
+        let mut min_kept = f32::INFINITY;
+        let mut max_dropped = 0.0f32;
+        for (a, g) in acc.iter().zip(&grads) {
+            for (&va, &vg) in a.data().iter().zip(g.data()) {
+                if va != 0.0 {
+                    kept += 1;
+                    min_kept = min_kept.min(va.abs());
+                    if va != vg {
+                        mismatched += 1;
+                    }
+                } else if vg != 0.0 {
+                    dropped += 1;
+                    max_dropped = max_dropped.max(vg.abs());
+                }
+            }
+        }
+        assert_eq!(mismatched, 0, "kept values must be verbatim");
+        assert!(kept > 0 && dropped > 0, "10% must keep some, drop some");
+        assert!(
+            min_kept >= max_dropped,
+            "selection must be by magnitude: kept {min_kept} < dropped {max_dropped}"
+        );
+    }
+
+    #[test]
+    fn error_feedback_residual_preserves_the_gradient_sum() {
+        // EF identity: sent_t = Q(g + r_(t-1)), r_t = (g + r_(t-1)) -
+        // sent_t, so sum(sent) + r_T telescopes to T*g. Decoding every
+        // message and adding the final residual must reproduce the
+        // accumulated true gradient to float tolerance — the bounded-
+        // staleness property that keeps lossy modes trainable.
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = masks_with(&[(0, 1)], &[(1, 0)]);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        for mode in [
+            WireCompression::Int8,
+            WireCompression::Int4,
+            WireCompression::TopK { pct: 10 },
+        ] {
+            let codec = GradCodec::new(&be).with_compression(mode);
+            let mut ef = be.zeros_like_params();
+            let mut acc = be.zeros_like_params();
+            let steps = 5usize;
+            for s in 0..steps {
+                let mut msg = Vec::new();
+                codec.encode_append_ef(s, &masks, &grads, Some(&mut ef), &mut msg);
+                codec.decode_add(&msg, &masks, &mut acc).unwrap();
+            }
+            accumulate(&mut acc, &ef);
+            for (pi, (a, g)) in acc.iter().zip(&grads).enumerate() {
+                let max = g.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let tol = max * 1e-4 + 1e-6;
+                for (&va, &vg) in a.data().iter().zip(g.data()) {
+                    let want = vg * steps as f32;
+                    assert!(
+                        (va - want).abs() <= tol * steps as f32,
+                        "{mode:?} param {pi}: {va} vs {want}"
+                    );
+                }
+            }
+            // And the residual actually engages: for the lossy modes a
+            // single EF-encoded message differs from a plain one once a
+            // residual is pending.
+            let plain = codec.encode(0, &masks, &grads);
+            let mut withef = Vec::new();
+            codec.encode_append_ef(0, &masks, &grads, Some(&mut ef), &mut withef);
+            assert_ne!(plain, withef, "{mode:?}: pending residual must alter the wire");
+        }
+    }
+
+    #[test]
+    fn malformed_compressed_messages_reject_without_panicking() {
+        let be = NativeBackend::new(&spec(), 0, 2, 3);
+        let data = DatasetSpec::preset(SyntheticKind::Cifar10Like, 8, 2, 5).generate("train");
+        let (x, y) = data.gather(&[0, 1]);
+        let masks = MaskPair::ones(2, 2);
+        let (_, grads) = be.grad_step(&x, &y, &masks).unwrap();
+        let codec = GradCodec::new(&be).with_compression(WireCompression::TopK { pct: 10 });
+        let good = codec.encode(0, &masks, &grads);
+        let mut acc = be.zeros_like_params();
+        // Every truncation of the valid message must error cleanly.
+        for cut in [0, 4, HEADER_BYTES, HEADER_BYTES + 3, good.len() - 1] {
+            assert!(
+                codec.decode_add(&good[..cut], &masks, &mut acc).is_err(),
+                "truncated at {cut}"
+            );
+        }
+        // Corrupt the top-k count and the index stream.
+        let mut bad = good.clone();
+        bad[HEADER_BYTES] ^= 0xFF;
+        assert!(codec.decode_add(&bad, &masks, &mut acc).is_err(), "bad k");
+        // Synthetic message with a repeated index (delta 0): the
+        // strictly-increasing check must reject before any apply.
+        let k = u64::from_le_bytes(good[HEADER_BYTES..HEADER_BYTES + 8].try_into().unwrap());
+        assert!(k >= 2, "model too small for a meaningful top-k test");
+        let mut bad = good[..HEADER_BYTES + 8].to_vec();
+        bad.resize(bad.len() + k as usize, 0u8);
+        assert!(codec.decode_add(&bad, &masks, &mut acc).is_err(), "repeated index");
+        // Int8: every wrong-length variant of a valid message rejects.
+        let codec8 = GradCodec::new(&be).with_compression(WireCompression::Int8);
+        let good8 = codec8.encode(0, &masks, &grads);
+        let mut acc8 = be.zeros_like_params();
+        assert!(codec8.decode_add(&good8[..good8.len() - 1], &masks, &mut acc8).is_err());
+        let mut long = good8.clone();
+        long.push(0);
+        assert!(codec8.decode_add(&long, &masks, &mut acc8).is_err());
+        // Sanity: the untouched messages still decode after all that.
+        assert_eq!(codec.decode_add(&good, &masks, &mut acc).unwrap(), 0);
+        assert_eq!(codec8.decode_add(&good8, &masks, &mut acc8).unwrap(), 0);
+    }
+
+    #[test]
+    fn accumulate_adds_elementwise() {
+        let mut acc = vec![Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0])];
+        let g = vec![Tensor::from_vec(&[3], vec![0.5, -2.0, 1.0])];
+        accumulate(&mut acc, &g);
+        assert_eq!(acc[0].data(), &[1.5, 0.0, 4.0]);
     }
 }

@@ -45,7 +45,18 @@
 //!   bitwise identical) neither can change the numerics. An optional
 //!   [`grads::WirePrecision::F16`] wire halves the measured bytes
 //!   (lossy; replicas stay mutually bit-identical via requantized
-//!   broadcast).
+//!   broadcast). Beyond the star topologies, the trainer speaks two
+//!   collective exchanges ([`allreduce::ExchangeMode::Ring`] and
+//!   [`allreduce::ExchangeMode::Hierarchical`]): workers chain-reduce
+//!   their gradient blocks over negotiated worker↔worker links, so
+//!   per-node traffic stops scaling with K — and the uncompressed
+//!   chain fold adds the same values in the same ascending order as
+//!   the star reduce, keeping it bitwise equal to serial. A
+//!   [`grads::WireCompression`] layer (int8/int4 quantization with
+//!   error feedback, top-k sparsification) shrinks every gradient
+//!   payload further; lossy modes keep all replicas mutually
+//!   bit-identical because everyone (aggregator included) applies the
+//!   exact bytes that crossed the wire.
 //! * [`transport`] / [`proto`] / [`worker`] — the multi-process seam.
 //!   Every aggregator ↔ worker exchange is a framed message over a
 //!   [`transport::Transport`] link: [`transport::ChannelTransport`]
@@ -81,7 +92,7 @@ pub mod worker;
 pub use allreduce::{ExchangeMode, OrderedReducer};
 pub use checkpoint::Checkpoint;
 pub use fault::{parse_worker_plans, FaultAction, FaultPlan};
-pub use grads::{BufPool, GradCodec, WirePrecision, WireStats};
+pub use grads::{BufPool, GradCodec, WireCompression, WirePrecision, WireStats};
 pub use trainer::{DistConfig, DistReport, DistTrainer, MembershipEvent};
 pub use transport::{
     liveness_window, BlobRx, BlobTx, SpawnMode, TcpTransport, Transport, TransportKind,

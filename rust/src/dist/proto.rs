@@ -24,7 +24,7 @@ use crate::runtime::ModelConfig;
 use crate::schedule::MaskPair;
 use crate::tensor::Tensor;
 
-use super::grads::WirePrecision;
+use super::grads::{WireCompression, WirePrecision};
 
 /// Aggregator → worker: build your replica (sent once, first).
 pub const TAG_INIT: u32 = 0x4401;
@@ -57,11 +57,42 @@ pub const TAG_EVICT: u32 = 0x4424;
 /// params + momentum) — sent on rejoin and on checkpoint resume so a
 /// late worker becomes a bitwise replica of the aggregator.
 pub const TAG_STATE: u32 = 0x4425;
+/// Aggregator → worker: open a ring listener (ring-link negotiation,
+/// step 1); reply with [`TAG_RING_ADDR`].
+pub const TAG_RING_LISTEN: u32 = 0x4431;
+/// Aggregator → worker: your ring successor's address (negotiation,
+/// step 2) — connect to it, accept your predecessor, reply with
+/// [`TAG_RING_READY`].
+pub const TAG_RING_PEERS: u32 = 0x4432;
+/// Aggregator → worker: run one ring exchange for this step (roles,
+/// scale, union mask).
+pub const TAG_RING_EXEC: u32 = 0x4433;
+/// Aggregator → worker: abandon the in-flight ring exchange (a member
+/// died or stalled); drop partials and await re-dispatch.
+pub const TAG_RING_RESET: u32 = 0x4434;
+/// Aggregator → group leader: the final reduced gradient to apply and
+/// cast intra-group (hierarchical distribute leg).
+pub const TAG_RING_CASTD: u32 = 0x4435;
+/// Worker → aggregator: my ring listener address (negotiation reply).
+pub const TAG_RING_ADDR: u32 = 0x4441;
+/// Worker → aggregator: the chain-final reduced gradient (sent by the
+/// last worker of the reduce chain).
+pub const TAG_RING_FINAL: u32 = 0x4442;
+/// Worker → aggregator: ring links are up (negotiation complete).
+pub const TAG_RING_READY: u32 = 0x4443;
+
+/// Worker ↔ worker, first field of a ring-link blob: a partial chain
+/// sum in flight toward the chain's tail.
+pub const TAG_RING_PART: u32 = 0x4451;
+/// Worker ↔ worker: the final reduced gradient being distributed
+/// (apply locally, forward while `hops > 0`).
+pub const TAG_RING_CAST: u32 = 0x4452;
 
 /// Control-protocol version carried in [`TAG_JOIN`]; the aggregator
 /// rejects a mismatched worker descriptively instead of misparsing
-/// its frames.
-pub const PROTO_VERSION: u32 = 2;
+/// its frames. v3 added the ring-collective frames, the compressed
+/// wire, and the ring/compress fields of [`InitMsg`].
+pub const PROTO_VERSION: u32 = 3;
 
 /// Byte offset of the embedded gradient blob in a [`TAG_UP`] frame:
 /// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8) + step (8).
@@ -163,6 +194,17 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     put_u64(out, v.to_bits());
 }
 
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(c: &mut Cursor<'_>, what: &str) -> Result<String> {
+    let n = c.count(1, what)?;
+    let bytes = c.take(n, what)?.to_vec();
+    String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("{what}: invalid UTF-8"))
+}
+
 fn put_usize_list(out: &mut Vec<u8>, vs: &[usize]) {
     put_u32(out, vs.len() as u32);
     for &v in vs {
@@ -245,6 +287,12 @@ pub struct InitMsg {
     pub seed: u64,
     /// Gradient payload precision on the wire.
     pub precision: WirePrecision,
+    /// Gradient payload compression under the precision.
+    pub compress: WireCompression,
+    /// Ring-collective mode: hold per-micro gradients locally (metric-
+    /// only Up frames) and exchange them over negotiated worker↔worker
+    /// links instead of uploading them to the aggregator.
+    pub ring: bool,
     /// Pipeline encode+upload behind the next task's compute.
     pub overlap: bool,
     /// Simulated NIC ms per MiB of encoded gradient (0 = off).
@@ -313,6 +361,8 @@ pub fn encode_init(msg: &InitMsg, out: &mut Vec<u8>) {
         WirePrecision::F32 => 0,
         WirePrecision::F16 => 1,
     });
+    put_str(out, &msg.compress.label());
+    out.push(msg.ring as u8);
     out.push(msg.overlap as u8);
     put_f64(out, msg.sim_wire_ms_per_mib);
     put_u64(out, msg.heartbeat_ms);
@@ -362,6 +412,8 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
         1 => WirePrecision::F16,
         p => anyhow::bail!("unknown wire precision code {p} in Init frame"),
     };
+    let compress = WireCompression::parse(&get_str(&mut c, "wire compression")?)?;
+    let ring = c.u8("ring flag")? != 0;
     let overlap = c.u8("overlap flag")? != 0;
     let sim_wire_ms_per_mib = c.f64("sim wire ms")?;
     let heartbeat_ms = c.u64("heartbeat interval")?;
@@ -371,6 +423,8 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
         lora_rank,
         seed,
         precision,
+        compress,
+        ring,
         overlap,
         sim_wire_ms_per_mib,
         heartbeat_ms,
@@ -483,28 +537,54 @@ pub fn decode_up(frame: &[u8]) -> Result<UpHdr> {
     let n_correct = c.f32("up n_correct")?;
     let ms = c.f64("up ms")?;
     let step = c.u64("up step")?;
+    // Ring mode holds gradients locally and sends metric-only Up
+    // frames (exactly the header); star mode requires the tail, which
+    // the aggregator enforces when it reduces.
     anyhow::ensure!(
-        frame.len() > UP_GRAD_OFF,
-        "Up frame carries no gradient payload ({} bytes)",
+        frame.len() >= UP_GRAD_OFF,
+        "Up frame shorter than its header ({} bytes)",
         frame.len()
     );
     Ok(UpHdr { micro, loss, n_correct, ms, step })
 }
 
-/// Encode a [`TAG_BYE`] frame with the worker's local encode-buffer
-/// pool counters.
-pub fn encode_bye(fresh: u64, reused: u64, out: &mut Vec<u8>) {
-    put_u32(out, TAG_BYE);
-    put_u64(out, fresh);
-    put_u64(out, reused);
+/// A worker's exit report, carried in its [`TAG_BYE`] frame: local
+/// encode-buffer pool counters plus the bytes its ring links moved
+/// (zero outside ring mode) — the aggregator folds these into
+/// [`super::trainer::DistReport`] so per-node traffic stays measurable
+/// when gradients no longer pass through the star.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ByeMsg {
+    /// Encode buffers the worker allocated fresh.
+    pub fresh: u64,
+    /// Checkouts served by recycling.
+    pub reused: u64,
+    /// Bytes sent over this worker's ring links.
+    pub ring_sent: u64,
+    /// Bytes received over this worker's ring links.
+    pub ring_recv: u64,
 }
 
-/// Decode a [`TAG_BYE`] frame: `(fresh allocs, reuses)`.
-pub fn decode_bye(frame: &[u8]) -> Result<(u64, u64)> {
+/// Encode a [`TAG_BYE`] frame with the worker's exit report.
+pub fn encode_bye(msg: &ByeMsg, out: &mut Vec<u8>) {
+    put_u32(out, TAG_BYE);
+    put_u64(out, msg.fresh);
+    put_u64(out, msg.reused);
+    put_u64(out, msg.ring_sent);
+    put_u64(out, msg.ring_recv);
+}
+
+/// Decode a [`TAG_BYE`] frame.
+pub fn decode_bye(frame: &[u8]) -> Result<ByeMsg> {
     let mut c = Cursor::new(frame);
     let tag = c.u32("bye tag")?;
     anyhow::ensure!(tag == TAG_BYE, "expected Bye frame, got tag {tag:#x}");
-    Ok((c.u64("bye fresh")?, c.u64("bye reused")?))
+    Ok(ByeMsg {
+        fresh: c.u64("bye fresh")?,
+        reused: c.u64("bye reused")?,
+        ring_sent: c.u64("bye ring sent")?,
+        ring_recv: c.u64("bye ring recv")?,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -624,6 +704,257 @@ pub fn decode_state(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
     Ok((params, momentum))
 }
 
+// ---------------------------------------------------------------------------
+// Ring-collective frames: link negotiation + exchange
+// ---------------------------------------------------------------------------
+
+/// A worker's part in the distribute leg of one ring exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CastRole {
+    /// Wait for a [`TAG_RING_CAST`] on the predecessor link; apply and
+    /// forward while its hop count is positive.
+    Member,
+    /// Wait for a [`TAG_RING_CASTD`] from the aggregator (hierarchical
+    /// group leader); apply and originate an intra-group cast.
+    Leader {
+        /// Forward hops the leader's cast starts with (group size - 1).
+        hops: u32,
+    },
+    /// Already holds the final bytes (the plain ring's chain tail):
+    /// apply locally and originate the cast around the wrap link.
+    Origin {
+        /// Forward hops the cast starts with (K - 1; 0 when K = 1).
+        hops: u32,
+    },
+}
+
+/// One worker's marching orders for a ring exchange, carried in
+/// [`TAG_RING_EXEC`]. The aggregator derives every role centrally so a
+/// worker never needs to know the topology — only what *it* must do.
+#[derive(Clone, Debug)]
+pub struct RingExec {
+    /// Aggregator batch step (stale-exchange guard, echoed in every
+    /// ring-link blob).
+    pub step: u64,
+    /// Learning rate of the update every replica applies.
+    pub lr: f32,
+    /// Total micro-batches in the batch (the `1/n` gradient scale).
+    pub n_micros: u32,
+    /// Receive a [`TAG_RING_PART`] from the predecessor before adding
+    /// own micros (false for the chain head, which starts from zeros).
+    pub has_in: bool,
+    /// Send the finished chain sum to the aggregator as
+    /// [`TAG_RING_FINAL`] (true for the chain tail).
+    pub is_last: bool,
+    /// Distribute-leg role.
+    pub cast: CastRole,
+    /// The batch's union mask — every ring-link payload is encoded
+    /// under it.
+    pub union: MaskPair,
+}
+
+/// Encode a [`TAG_RING_LISTEN`] frame (`tcp`: open a TCP listener,
+/// else an in-process channel rendezvous). `nonce` identifies this
+/// negotiation round; the worker echoes it in its [`TAG_RING_ADDR`]
+/// reply so the aggregator can discard addresses from an aborted
+/// round (whose listeners are already closed).
+pub fn encode_ring_listen(tcp: bool, nonce: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_RING_LISTEN);
+    put_u64(out, nonce);
+    out.push(tcp as u8);
+}
+
+/// Decode a [`TAG_RING_LISTEN`] frame: `(tcp, nonce)`.
+pub fn decode_ring_listen(frame: &[u8]) -> Result<(bool, u64)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-listen tag")?;
+    anyhow::ensure!(tag == TAG_RING_LISTEN, "expected RingListen frame, got tag {tag:#x}");
+    let nonce = c.u64("ring-listen nonce")?;
+    Ok((c.u8("ring-listen mode")? != 0, nonce))
+}
+
+/// Encode a [`TAG_RING_ADDR`] frame carrying the worker's listener
+/// address, stamped with the negotiation nonce it answers.
+pub fn encode_ring_addr(nonce: u64, addr: &str, out: &mut Vec<u8>) {
+    put_u32(out, TAG_RING_ADDR);
+    put_u64(out, nonce);
+    put_str(out, addr);
+}
+
+/// Decode a [`TAG_RING_ADDR`] frame: `(nonce, listener address)`.
+pub fn decode_ring_addr(frame: &[u8]) -> Result<(u64, String)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-addr tag")?;
+    anyhow::ensure!(tag == TAG_RING_ADDR, "expected RingAddr frame, got tag {tag:#x}");
+    let nonce = c.u64("ring-addr nonce")?;
+    Ok((nonce, get_str(&mut c, "ring-addr address")?))
+}
+
+/// Encode a [`TAG_RING_PEERS`] frame: the successor to connect to
+/// (empty = none) and whether a predecessor will dial in. The nonce is
+/// echoed in the worker's [`TAG_RING_READY`] confirmation.
+pub fn encode_ring_peers(nonce: u64, succ_addr: &str, accept: bool, out: &mut Vec<u8>) {
+    put_u32(out, TAG_RING_PEERS);
+    put_u64(out, nonce);
+    put_str(out, succ_addr);
+    out.push(accept as u8);
+}
+
+/// Decode a [`TAG_RING_PEERS`] frame: `(nonce, successor, accept)`.
+pub fn decode_ring_peers(frame: &[u8]) -> Result<(u64, String, bool)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-peers tag")?;
+    anyhow::ensure!(tag == TAG_RING_PEERS, "expected RingPeers frame, got tag {tag:#x}");
+    let nonce = c.u64("ring-peers nonce")?;
+    let addr = get_str(&mut c, "ring-peers successor")?;
+    let accept = c.u8("ring-peers accept flag")? != 0;
+    Ok((nonce, addr, accept))
+}
+
+/// Encode a [`TAG_RING_READY`] acknowledgment. `seq` names what is
+/// being acknowledged — the negotiation nonce for link setup, the batch
+/// step for an applied update — so stale acks from an aborted attempt
+/// can never satisfy a later barrier.
+pub fn encode_ring_ready(seq: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_RING_READY);
+    put_u64(out, seq);
+}
+
+/// Decode a [`TAG_RING_READY`] frame: the acknowledged sequence value.
+pub fn decode_ring_ready(frame: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-ready tag")?;
+    anyhow::ensure!(tag == TAG_RING_READY, "expected RingReady frame, got tag {tag:#x}");
+    c.u64("ring-ready seq")
+}
+
+/// Encode a [`TAG_RING_EXEC`] frame.
+pub fn encode_ring_exec(msg: &RingExec, out: &mut Vec<u8>) {
+    put_u32(out, TAG_RING_EXEC);
+    put_u64(out, msg.step);
+    put_f32(out, msg.lr);
+    put_u32(out, msg.n_micros);
+    out.push(msg.has_in as u8);
+    out.push(msg.is_last as u8);
+    let (role, hops) = match msg.cast {
+        CastRole::Member => (0u8, 0u32),
+        CastRole::Leader { hops } => (1, hops),
+        CastRole::Origin { hops } => (2, hops),
+    };
+    out.push(role);
+    put_u32(out, hops);
+    put_masks(out, &msg.union);
+}
+
+/// Decode a [`TAG_RING_EXEC`] frame.
+pub fn decode_ring_exec(frame: &[u8]) -> Result<RingExec> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-exec tag")?;
+    anyhow::ensure!(tag == TAG_RING_EXEC, "expected RingExec frame, got tag {tag:#x}");
+    let step = c.u64("ring-exec step")?;
+    let lr = c.f32("ring-exec lr")?;
+    let n_micros = c.u32("ring-exec micro count")?;
+    anyhow::ensure!(n_micros > 0, "ring-exec with zero micro-batches");
+    let has_in = c.u8("ring-exec has-in flag")? != 0;
+    let is_last = c.u8("ring-exec is-last flag")? != 0;
+    let role = c.u8("ring-exec cast role")?;
+    let hops = c.u32("ring-exec cast hops")?;
+    let cast = match role {
+        0 => CastRole::Member,
+        1 => CastRole::Leader { hops },
+        2 => CastRole::Origin { hops },
+        r => anyhow::bail!("unknown ring-exec cast role {r}"),
+    };
+    let union = get_masks(&mut c, "ring-exec union masks")?;
+    Ok(RingExec { step, lr, n_micros, has_in, is_last, cast, union })
+}
+
+/// Encode a [`TAG_RING_RESET`] frame naming the abandoned step.
+pub fn encode_ring_reset(step: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_RING_RESET);
+    put_u64(out, step);
+}
+
+/// Decode a [`TAG_RING_RESET`] frame: the abandoned step.
+pub fn decode_ring_reset(frame: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-reset tag")?;
+    anyhow::ensure!(tag == TAG_RING_RESET, "expected RingReset frame, got tag {tag:#x}");
+    c.u64("ring-reset step")
+}
+
+/// Encode a [`TAG_RING_FINAL`] header; the caller appends the final
+/// gradient blob. Returns the blob's offset (12).
+pub fn encode_ring_final_header(step: u64, out: &mut Vec<u8>) -> usize {
+    put_u32(out, TAG_RING_FINAL);
+    put_u64(out, step);
+    out.len()
+}
+
+/// Decode a [`TAG_RING_FINAL`] frame: `(step, grad blob offset)`.
+pub fn decode_ring_final(frame: &[u8]) -> Result<(u64, usize)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-final tag")?;
+    anyhow::ensure!(tag == TAG_RING_FINAL, "expected RingFinal frame, got tag {tag:#x}");
+    let step = c.u64("ring-final step")?;
+    Ok((step, c.offset()))
+}
+
+/// Encode a [`TAG_RING_CASTD`] header (aggregator → leader distribute);
+/// the caller appends the final gradient blob. Returns the blob offset.
+pub fn encode_ring_castd_header(step: u64, hops: u32, out: &mut Vec<u8>) -> usize {
+    put_u32(out, TAG_RING_CASTD);
+    put_u64(out, step);
+    put_u32(out, hops);
+    out.len()
+}
+
+/// Decode a [`TAG_RING_CASTD`] frame: `(step, hops, grad offset)`.
+pub fn decode_ring_castd(frame: &[u8]) -> Result<(u64, u32, usize)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-castd tag")?;
+    anyhow::ensure!(tag == TAG_RING_CASTD, "expected RingCastDown frame, got tag {tag:#x}");
+    let step = c.u64("ring-castd step")?;
+    let hops = c.u32("ring-castd hops")?;
+    Ok((step, hops, c.offset()))
+}
+
+/// Encode a worker↔worker [`TAG_RING_PART`] blob header (partial chain
+/// sum); the caller appends the gradient payload. Returns the offset.
+pub fn encode_ring_part_header(step: u64, out: &mut Vec<u8>) -> usize {
+    put_u32(out, TAG_RING_PART);
+    put_u64(out, step);
+    out.len()
+}
+
+/// Decode a [`TAG_RING_PART`] blob: `(step, grad offset)`.
+pub fn decode_ring_part(frame: &[u8]) -> Result<(u64, usize)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-part tag")?;
+    anyhow::ensure!(tag == TAG_RING_PART, "expected RingPart blob, got tag {tag:#x}");
+    let step = c.u64("ring-part step")?;
+    Ok((step, c.offset()))
+}
+
+/// Encode a worker↔worker [`TAG_RING_CAST`] blob header (distribute);
+/// the caller appends the gradient payload. Returns the offset.
+pub fn encode_ring_cast_header(step: u64, hops: u32, out: &mut Vec<u8>) -> usize {
+    put_u32(out, TAG_RING_CAST);
+    put_u64(out, step);
+    put_u32(out, hops);
+    out.len()
+}
+
+/// Decode a [`TAG_RING_CAST`] blob: `(step, hops, grad offset)`.
+pub fn decode_ring_cast(frame: &[u8]) -> Result<(u64, u32, usize)> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("ring-cast tag")?;
+    anyhow::ensure!(tag == TAG_RING_CAST, "expected RingCast blob, got tag {tag:#x}");
+    let step = c.u64("ring-cast step")?;
+    let hops = c.u32("ring-cast hops")?;
+    Ok((step, hops, c.offset()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -644,6 +975,8 @@ mod tests {
             lora_rank: 4,
             seed: 0xDEAD_BEEF_u64,
             precision: WirePrecision::F16,
+            compress: WireCompression::TopK { pct: 25 },
+            ring: true,
             overlap: false,
             sim_wire_ms_per_mib: 2.25,
             heartbeat_ms: 750,
@@ -652,6 +985,8 @@ mod tests {
         encode_init(&msg, &mut frame);
         assert_eq!(peek_tag(&frame).unwrap(), TAG_INIT);
         let back = decode_init(&frame).unwrap();
+        assert_eq!(back.compress, WireCompression::TopK { pct: 25 });
+        assert!(back.ring);
         assert_eq!(back.worker, 2);
         assert_eq!(back.spec.config.dim, msg.spec.config.dim);
         assert_eq!(back.spec.config.tokens, msg.spec.config.tokens);
@@ -723,8 +1058,9 @@ mod tests {
         encode_ctrl(TAG_RESET, &mut f);
         assert_eq!(peek_tag(&f).unwrap(), TAG_RESET);
         f.clear();
-        encode_bye(7, 123, &mut f);
-        assert_eq!(decode_bye(&f).unwrap(), (7, 123));
+        let bye = ByeMsg { fresh: 7, reused: 123, ring_sent: 4096, ring_recv: 2048 };
+        encode_bye(&bye, &mut f);
+        assert_eq!(decode_bye(&f).unwrap(), bye);
         f.clear();
         let poff = encode_deltas_header(&mut f);
         f.extend_from_slice(&[1, 2, 3]);
@@ -749,6 +1085,8 @@ mod tests {
             lora_rank: 0,
             seed: 1,
             precision: WirePrecision::F32,
+            compress: WireCompression::None,
+            ring: false,
             overlap: true,
             sim_wire_ms_per_mib: 0.0,
             heartbeat_ms: 0,
@@ -763,13 +1101,15 @@ mod tests {
         put_u32(&mut f, u32::MAX); // job count far beyond the frame
         let err = decode_compute(&f).unwrap_err().to_string();
         assert!(err.contains("corrupt count"), "got: {err}");
-        // An Up frame with no gradient tail is rejected.
+        // A metric-only Up frame (exactly the header) is valid — ring
+        // mode sends them — but anything shorter is rejected.
         let mut f = Vec::new();
         encode_up_header(
             &UpHdr { micro: 0, loss: 0.0, n_correct: 0.0, ms: 0.0, step: 0 },
             &mut f,
         );
-        assert!(decode_up(&f).is_err());
+        assert!(decode_up(&f).is_ok());
+        assert!(decode_up(&f[..f.len() - 1]).is_err());
         // A tensor shape whose element product wraps usize must be
         // rejected, not wrapped into a small bogus length.
         let mut f = Vec::new();
@@ -875,6 +1215,112 @@ mod tests {
                 return Err("state vectors must round-trip bitwise".into());
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_frames_round_trip() {
+        let mut f = Vec::new();
+        encode_ring_listen(true, 11, &mut f);
+        assert_eq!(decode_ring_listen(&f).unwrap(), (true, 11));
+        f.clear();
+        encode_ring_addr(11, "127.0.0.1:45001", &mut f);
+        assert_eq!(decode_ring_addr(&f).unwrap(), (11, "127.0.0.1:45001".to_string()));
+        f.clear();
+        encode_ring_peers(11, "chan://7", true, &mut f);
+        assert_eq!(decode_ring_peers(&f).unwrap(), (11, "chan://7".to_string(), true));
+        f.clear();
+        encode_ring_ready(42, &mut f);
+        assert_eq!(decode_ring_ready(&f).unwrap(), 42);
+        f.clear();
+        let exec = RingExec {
+            step: 42,
+            lr: 0.05,
+            n_micros: 6,
+            has_in: true,
+            is_last: false,
+            cast: CastRole::Leader { hops: 3 },
+            union: masks(2, 2),
+        };
+        encode_ring_exec(&exec, &mut f);
+        let back = decode_ring_exec(&f).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.lr, 0.05);
+        assert_eq!(back.n_micros, 6);
+        assert!(back.has_in && !back.is_last);
+        assert_eq!(back.cast, CastRole::Leader { hops: 3 });
+        assert_eq!(back.union.fingerprint(), exec.union.fingerprint());
+        f.clear();
+        encode_ring_reset(9, &mut f);
+        assert_eq!(decode_ring_reset(&f).unwrap(), 9);
+        // Payload-bearing frames return the exact tail offset.
+        f.clear();
+        let off = encode_ring_final_header(3, &mut f);
+        f.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(decode_ring_final(&f).unwrap(), (3, off));
+        assert_eq!(&f[off..], &[1, 2, 3]);
+        f.clear();
+        let off = encode_ring_castd_header(3, 2, &mut f);
+        f.push(7);
+        assert_eq!(decode_ring_castd(&f).unwrap(), (3, 2, off));
+        f.clear();
+        let off = encode_ring_part_header(8, &mut f);
+        f.push(9);
+        assert_eq!(decode_ring_part(&f).unwrap(), (8, off));
+        f.clear();
+        let off = encode_ring_cast_header(8, 1, &mut f);
+        f.push(9);
+        assert_eq!(decode_ring_cast(&f).unwrap(), (8, 1, off));
+    }
+
+    #[test]
+    fn ring_frames_reject_malformed() {
+        // Wrong tag for every decoder.
+        let mut f = Vec::new();
+        encode_ctrl(TAG_RESET, &mut f);
+        assert!(decode_ring_listen(&f).is_err());
+        assert!(decode_ring_addr(&f).is_err());
+        assert!(decode_ring_peers(&f).is_err());
+        assert!(decode_ring_ready(&f).is_err());
+        assert!(decode_ring_exec(&f).is_err());
+        assert!(decode_ring_reset(&f).is_err());
+        assert!(decode_ring_final(&f).is_err());
+        assert!(decode_ring_castd(&f).is_err());
+        assert!(decode_ring_part(&f).is_err());
+        assert!(decode_ring_cast(&f).is_err());
+        // Oversized address count cannot demand a huge allocation.
+        let mut f = Vec::new();
+        put_u32(&mut f, TAG_RING_ADDR);
+        put_u64(&mut f, 1); // nonce
+        put_u32(&mut f, u32::MAX);
+        let err = decode_ring_addr(&f).unwrap_err().to_string();
+        assert!(err.contains("corrupt count"), "got: {err}");
+        // Zero-micro exec and unknown cast role reject.
+        let mut f = Vec::new();
+        let exec = RingExec {
+            step: 1,
+            lr: 0.1,
+            n_micros: 1,
+            has_in: false,
+            is_last: true,
+            cast: CastRole::Origin { hops: 0 },
+            union: MaskPair::ones(2, 2),
+        };
+        encode_ring_exec(&exec, &mut f);
+        let mut zero = f.clone();
+        zero[16..20].copy_from_slice(&0u32.to_le_bytes()); // n_micros = 0
+        assert!(decode_ring_exec(&zero).is_err());
+        let mut bad_role = f.clone();
+        bad_role[22] = 9; // cast role byte
+        assert!(decode_ring_exec(&bad_role).is_err());
+        // Every strict prefix of an exec frame errors cleanly.
+        crate::util::proptest::check("ring-exec-truncation", 40, |g| {
+            let cut = g.usize_in(0, f.len() - 1);
+            if decode_ring_exec(&f[..cut]).is_err() {
+                Ok(())
+            } else {
+                Err(format!("{cut}-byte prefix decoded"))
+            }
         });
     }
 

@@ -77,8 +77,8 @@ use anyhow::{Context, Result};
 use super::allreduce::{ExchangeMode, OrderedReducer};
 use super::checkpoint::Checkpoint;
 use super::fault::{FaultAction, FaultPlan};
-use super::grads::{BufPool, GradCodec, WirePrecision, WireStats};
-use super::proto::{self, InitMsg, MicroJob, UpHdr};
+use super::grads::{BufPool, GradCodec, WireCompression, WirePrecision, WireStats};
+use super::proto::{self, CastRole, InitMsg, MicroJob, RingExec, UpHdr};
 use super::transport::{
     accept_workers, channel_pair, listen, liveness_window, BlobRx, BlobTx, SpawnMode, StatsCell,
     TcpTransport, Transport, TransportKind, TransportStats,
@@ -127,8 +127,24 @@ pub struct DistConfig {
     /// bytes; the aggregate gradient is then requantized before
     /// *anyone* (aggregator included) applies it, so all replicas still
     /// agree bitwise with each other — only with the serial trainer do
-    /// they diverge. Masked-allreduce only.
+    /// they diverge. Gradient exchanges only (not parameter-server).
     pub wire_precision: WirePrecision,
+    /// Lossy payload compression under the precision layer: `None`
+    /// (bitwise reference, default), `Int8`/`Int4` quantization with
+    /// per-slice scales and worker-side error feedback, or `TopK`
+    /// sparsification. Every replica — aggregator included — applies
+    /// the exact bytes that crossed the wire, so the cluster stays
+    /// internally bitwise consistent; only against the serial f32
+    /// trainer do lossy modes diverge (boundedly, via error feedback).
+    /// Gradient exchanges only (masked-allreduce / ring /
+    /// hierarchical), not the parameter-server delta broadcast.
+    pub compress: WireCompression,
+    /// Group size for [`ExchangeMode::Hierarchical`]: the chain over
+    /// the live workers is cut into contiguous groups of this size and
+    /// each group's leader receives the reduced gradient directly from
+    /// the aggregator, then casts it intra-group. `0` picks ⌈√K⌉.
+    /// Ignored by the other exchange modes.
+    pub ring_group: usize,
     /// Simulated NIC cost in milliseconds per MiB of *actual encoded
     /// message*, slept on the uplink path (sender thread when
     /// overlapping, compute thread when serialized). 0 disables it.
@@ -186,6 +202,8 @@ impl DistConfig {
             transport: TransportKind::Channel,
             overlap: true,
             wire_precision: WirePrecision::F32,
+            compress: WireCompression::None,
+            ring_group: 0,
             sim_wire_ms_per_mib: 0.0,
             calibrate: true,
             heartbeat_ms: 500,
@@ -222,7 +240,8 @@ pub struct DistReport {
     pub train: TrainReport,
     /// Worker replicas that executed the run.
     pub n_workers: usize,
-    /// Exchange topology label (`masked-allreduce` / `param-server`).
+    /// Exchange topology label (`masked-allreduce` / `param-server` /
+    /// `ring` / `hierarchical`).
     pub exchange: String,
     /// Transport label (`channel` / `tcp`).
     pub transport: String,
@@ -240,6 +259,18 @@ pub struct DistReport {
     /// length prefixes: the bytes that actually crossed the socket,
     /// reported next to the modeled bytes by `benches/dist_step.rs`.
     pub socket: TransportStats,
+    /// Per-link transport totals in link-creation order (worker slots
+    /// first; rejoins append). Each entry carries the per-frame-class
+    /// byte breakdown, so "what did worker 3's Deltas channel cost"
+    /// is answerable without re-running.
+    pub socket_links: Vec<TransportStats>,
+    /// Per-worker `(sent, recv)` bytes over worker↔worker ring links
+    /// (from Bye frames; all zeros for the star topologies). This is
+    /// the traffic the aggregator's own sockets never see — the bench
+    /// adds it to the per-node totals when checking ring flatness.
+    pub ring_bytes: Vec<(u64, u64)>,
+    /// Wire-compression label (`none` / `int8` / `int4` / `topk:P`).
+    pub compress: String,
     /// Uplink gradient bytes saved vs the unmasked schedule (measured).
     pub grad_savings: f64,
     /// What the simulated engine *modeled* for the same schedules, for
@@ -290,8 +321,12 @@ pub struct DistReport {
 enum Arrival {
     /// One computed micro-batch gradient (frame tail holds the blob).
     Up { worker: usize, hdr: UpHdr, frame: Vec<u8> },
-    /// Shutdown acknowledgment with the worker's local pool counters.
-    Bye { worker: usize, fresh: u64, reused: u64 },
+    /// A ring control frame (Addr / Ready / Final) forwarded verbatim —
+    /// the ring orchestrator decodes it against the step it is waiting
+    /// on; anything stale is dropped there, not here.
+    Ring { worker: usize, frame: Vec<u8> },
+    /// Shutdown acknowledgment with the worker's local counters.
+    Bye { worker: usize, msg: proto::ByeMsg },
     /// The link died or produced an undecodable frame. Surfaced as an
     /// error by whoever is waiting — a lost worker can never hang the
     /// barrier.
@@ -348,10 +383,13 @@ fn reader_loop(
                     return;
                 }
             },
+            Ok(proto::TAG_RING_ADDR) | Ok(proto::TAG_RING_READY) | Ok(proto::TAG_RING_FINAL) => {
+                tx.send(Arrival::Ring { worker, frame }).is_ok()
+            }
             Ok(proto::TAG_BYE) => {
                 match proto::decode_bye(&frame) {
-                    Ok((fresh, reused)) => {
-                        let _ = tx.send(Arrival::Bye { worker, fresh, reused });
+                    Ok(msg) => {
+                        let _ = tx.send(Arrival::Bye { worker, msg });
                     }
                     Err(e) => {
                         let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
@@ -426,6 +464,13 @@ pub struct DistTrainer {
     /// Summed worker-side pool counters from Bye frames.
     bye_fresh: u64,
     bye_reused: u64,
+    /// Per-worker `(sent, recv)` bytes over worker↔worker ring links,
+    /// reported in Bye frames (the aggregator never sees that traffic
+    /// on its own sockets).
+    bye_ring: Vec<(u64, u64)>,
+    /// Ring links must be (re)negotiated before the next exchange —
+    /// set at start and on every membership change.
+    ring_dirty: bool,
     /// Monotone batch step stamped into Compute frames; stale or
     /// duplicate gradient uplinks are dropped by comparing against it.
     step: u64,
@@ -459,6 +504,59 @@ fn reader_liveness(heartbeat_ms: u64, misses: u32) -> Duration {
     }
 }
 
+/// Contiguous ascending micro-batch blocks for a ring exchange: entry
+/// `p` is chain position `p`'s `[start, end)` range over `n` micros.
+/// The first `n % k` positions take one extra micro; blocks may be
+/// empty when `n < k` (the worker still relays the chain sum).
+/// Contiguity in chain order is what keeps the fold bitwise equal to
+/// the serial ascending reduction.
+fn ring_blocks(k: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for p in 0..k {
+        let len = base + usize::from(p < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Contiguous chain-position groups for the hierarchical topology:
+/// `[start, end)` ranges over the live list. `group = 0` picks ⌈√k⌉,
+/// the per-node-traffic optimum for a two-level scheme.
+fn ring_groups(k: usize, group: usize) -> Vec<(usize, usize)> {
+    let g = if group == 0 {
+        let mut r = 1;
+        while r * r < k {
+            r += 1;
+        }
+        r
+    } else {
+        group.min(k)
+    };
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < k {
+        out.push((start, (start + g).min(k)));
+        start += g;
+    }
+    out
+}
+
+/// What one bounded wait on the arrival queue produced for the ring
+/// orchestrator.
+enum RingCtrl {
+    /// A ring control frame (Addr / Ready / Final) from `worker`.
+    Frame(usize, Vec<u8>),
+    /// A worker that was live a moment ago is gone (already evicted
+    /// here; at least one survivor remains).
+    LostLive,
+    /// The local wait window passed without a frame.
+    TimedOut,
+}
+
 impl DistTrainer {
     /// Build the cluster: an aggregator replica plus `cfg.workers`
     /// worker replicas — threads over channels, threads over loopback
@@ -470,10 +568,23 @@ impl DistTrainer {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker replica");
         anyhow::ensure!(
             cfg.wire_precision == WirePrecision::F32
-                || cfg.exchange == ExchangeMode::MaskedAllReduce,
-            "f16 wire precision supports masked-allreduce only (the \
+                || cfg.exchange != ExchangeMode::ParamServer,
+            "f16 wire precision supports gradient exchanges only (the \
              parameter-server update is applied server-side before \
              encoding, so its deltas cannot be requantized consistently)"
+        );
+        anyhow::ensure!(
+            cfg.compress == WireCompression::None || cfg.exchange != ExchangeMode::ParamServer,
+            "wire compression applies to gradient exchanges only, not \
+             the parameter-server delta broadcast (deltas are applied \
+             server-side before encoding)"
+        );
+        anyhow::ensure!(
+            cfg.wire_precision == WirePrecision::F32
+                || matches!(cfg.compress, WireCompression::None | WireCompression::TopK { .. }),
+            "int8/int4 quantization replaces the value encoding and \
+             cannot stack on the f16 wire (top-k composes — its kept \
+             values ride at the wire precision)"
         );
         let mut cfg = cfg;
         cfg.train.update = UpdateMode::BatchAccum;
@@ -491,7 +602,8 @@ impl DistTrainer {
         // Shared with the serial trainer so the two drivers cannot
         // drift on partition/dataset setup.
         let setup = prepare_run(agg.config(), &cfg.train)?;
-        let codec = GradCodec::new(&agg).with_precision(cfg.wire_precision);
+        let codec =
+            GradCodec::new(&agg).with_precision(cfg.wire_precision).with_compression(cfg.compress);
         let buf_pool = Arc::new(BufPool::new());
         let k = cfg.workers;
 
@@ -612,6 +724,8 @@ impl DistTrainer {
                 lora_rank: cfg.train.lora_rank,
                 seed: cfg.train.seed,
                 precision: cfg.wire_precision,
+                compress: cfg.compress,
+                ring: cfg.exchange.is_ring(),
                 overlap: cfg.overlap,
                 sim_wire_ms_per_mib: cfg.sim_wire_ms_per_mib,
                 heartbeat_ms: cfg.heartbeat_ms,
@@ -663,6 +777,8 @@ impl DistTrainer {
             shut_down: false,
             bye_fresh: 0,
             bye_reused: 0,
+            bye_ring: vec![(0, 0); k],
+            ring_dirty: true,
             step: 0,
             cur_batch: 0,
             evictions: 0,
@@ -768,6 +884,7 @@ impl DistTrainer {
             kind: "evict".to_string(),
         });
         self.membership_dirty = true;
+        self.ring_dirty = true;
         crate::warn_!("dist worker {worker} evicted: {why}");
     }
 
@@ -857,6 +974,9 @@ impl DistTrainer {
         masks: &[MaskPair],
         stats: &mut WireStats,
     ) -> Result<BatchOut> {
+        if self.cfg.exchange.is_ring() {
+            return self.exec_batch_ring(micros, masks, stats);
+        }
         let n = micros.len();
         assert_eq!(masks.len(), n, "one mask pair per micro-batch");
         let k = self.links.len();
@@ -951,6 +1071,11 @@ impl DistTrainer {
                         )?;
                     }
                 }
+                Ok(Arrival::Ring { frame, .. }) => {
+                    // A straggling ring frame from a previous mode or
+                    // attempt — nothing waits on it here.
+                    self.buf_pool.give_back(frame);
+                }
                 Ok(Arrival::Bye { worker, .. }) => {
                     anyhow::bail!("dist worker {worker} sent an unexpected Bye mid-batch")
                 }
@@ -990,7 +1115,9 @@ impl DistTrainer {
                 let union = MaskPair::union(masks);
                 let mut gbuf = self.buf_pool.checkout();
                 self.codec.encode_into(0, &union, &acc, &mut gbuf);
-                if self.codec.precision() == WirePrecision::F32 {
+                if self.codec.precision() == WirePrecision::F32
+                    && self.codec.compression() == WireCompression::None
+                {
                     self.agg.apply_grads(&acc, lr)?;
                 } else {
                     // Lossy wire: every replica must apply the exact
@@ -1017,8 +1144,491 @@ impl DistTrainer {
                 self.broadcast(&master, payload, stats)?;
                 self.buf_pool.give_back(master);
             }
+            ExchangeMode::Ring | ExchangeMode::Hierarchical => {
+                unreachable!("ring modes are dispatched to exec_batch_ring above")
+            }
         }
         Ok(BatchOut { outs, worker_ms, micro_ms })
+    }
+
+    /// One bounded wait on the arrival queue while running a ring
+    /// barrier. Gradient uplinks are stale here (recycled), losses
+    /// evict inline, and the batch `deadline` turns silence into a
+    /// descriptive error — a ring barrier can never hang the trainer.
+    fn ring_ctrl_recv(&mut self, until: Instant, deadline: Instant) -> Result<RingCtrl> {
+        loop {
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "batch deadline ({} ms) passed mid-ring-exchange — aborting",
+                self.cfg.batch_timeout_ms
+            );
+            if now >= until {
+                return Ok(RingCtrl::TimedOut);
+            }
+            let wait = (until - now).min(Duration::from_millis(100)).min(deadline - now);
+            match self.arrivals.recv_timeout(wait) {
+                Ok(Arrival::Ring { worker, frame }) => return Ok(RingCtrl::Frame(worker, frame)),
+                Ok(Arrival::Up { frame, .. }) => self.buf_pool.give_back(frame),
+                Ok(Arrival::Lost { worker, error }) => {
+                    let was_live = self.links[worker].is_some();
+                    self.evict(worker, &error);
+                    anyhow::ensure!(
+                        self.live_workers() > 0,
+                        "dist worker {worker} lost mid-ring-exchange with no survivors: {error}"
+                    );
+                    if was_live {
+                        return Ok(RingCtrl::LostLive);
+                    }
+                }
+                Ok(Arrival::Bye { worker, .. }) => {
+                    anyhow::bail!("dist worker {worker} sent an unexpected Bye mid-ring-exchange")
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("every dist worker link closed mid-ring-exchange")
+                }
+            }
+        }
+    }
+
+    /// Best-effort control send on `w`'s downlink; a failure evicts the
+    /// worker. Returns whether the frame reached the transport.
+    fn ring_send(&mut self, w: usize, frame: Vec<u8>, what: &str) -> bool {
+        let Some(link) = self.links[w].as_mut() else {
+            self.buf_pool.give_back(frame);
+            return false;
+        };
+        match link.send_blob(frame) {
+            Ok(()) => true,
+            Err(e) => {
+                self.evict(w, &format!("{what} send failed: {e:#}"));
+                false
+            }
+        }
+    }
+
+    /// Abort the in-flight exchange attempt: Reset(`step`) to every
+    /// live worker (anyone blocked inside the exchange falls back to
+    /// its main loop) and force a link renegotiation before the next
+    /// attempt.
+    fn ring_reset_live(&mut self, step: u64) -> Result<()> {
+        self.ring_dirty = true;
+        for w in 0..self.links.len() {
+            if self.links[w].is_none() {
+                continue;
+            }
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_ring_reset(step, &mut frame);
+            self.ring_send(w, frame, "ring reset");
+        }
+        anyhow::ensure!(
+            self.live_workers() > 0,
+            "every dist worker link is gone (all ring resets failed)"
+        );
+        Ok(())
+    }
+
+    /// (Re)build the worker↔worker ring links over `live` (chain
+    /// order). Each worker opens a listener (Addr), learns its
+    /// successor (Peers), dials/accepts, and confirms (Ready). Every
+    /// frame echoes this round's nonce, so stragglers from an aborted
+    /// round can never satisfy this one. Returns `false` when
+    /// membership changed mid-round — the caller restarts the attempt
+    /// over the new live set.
+    fn ring_negotiate(&mut self, live: &[usize], deadline: Instant) -> Result<bool> {
+        self.step += 1;
+        let nonce = self.step;
+        let tcp = !matches!(self.cfg.transport, TransportKind::Channel);
+        for &w in live {
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_ring_listen(tcp, nonce, &mut frame);
+            if !self.ring_send(w, frame, "ring listen") {
+                return Ok(false);
+            }
+        }
+        let mut addrs: Vec<Option<String>> = vec![None; self.links.len()];
+        let mut pending = live.len();
+        while pending > 0 {
+            match self.ring_ctrl_recv(deadline, deadline)? {
+                RingCtrl::Frame(w, frame) => {
+                    let parsed = proto::decode_ring_addr(&frame);
+                    self.buf_pool.give_back(frame);
+                    // Anything that is not this round's Addr (a stale
+                    // Ready, a Final from an aborted exchange) is noise.
+                    if let Ok((n, addr)) = parsed {
+                        if n == nonce && addrs[w].is_none() {
+                            addrs[w] = Some(addr);
+                            pending -= 1;
+                        }
+                    }
+                }
+                RingCtrl::LostLive => return Ok(false),
+                RingCtrl::TimedOut => {}
+            }
+        }
+        let m = live.len();
+        let hier = self.cfg.exchange == ExchangeMode::Hierarchical;
+        for (p, &w) in live.iter().enumerate() {
+            let (succ, accept) = if m == 1 {
+                (String::new(), false)
+            } else if hier {
+                // Reduce runs the full chain; the tail has no wrap
+                // link (the aggregator gates the distribute leg) and
+                // the head accepts no dial-in.
+                let succ = if p + 1 < m {
+                    addrs[live[p + 1]].clone().unwrap_or_default()
+                } else {
+                    String::new()
+                };
+                (succ, p > 0)
+            } else {
+                // Plain ring: the wrap link (tail -> head) carries the
+                // distribute cast, so everyone dials and accepts.
+                (addrs[live[(p + 1) % m]].clone().unwrap_or_default(), true)
+            };
+            let mut frame = self.buf_pool.checkout();
+            proto::encode_ring_peers(nonce, &succ, accept, &mut frame);
+            if !self.ring_send(w, frame, "ring peers") {
+                return Ok(false);
+            }
+        }
+        let mut ready = vec![false; self.links.len()];
+        let mut pending = m;
+        while pending > 0 {
+            match self.ring_ctrl_recv(deadline, deadline)? {
+                RingCtrl::Frame(w, frame) => {
+                    let seq = proto::decode_ring_ready(&frame);
+                    self.buf_pool.give_back(frame);
+                    if matches!(seq, Ok(s) if s == nonce) && !ready[w] {
+                        ready[w] = true;
+                        pending -= 1;
+                    }
+                }
+                RingCtrl::LostLive => return Ok(false),
+                RingCtrl::TimedOut => {}
+            }
+        }
+        self.ring_dirty = false;
+        Ok(true)
+    }
+
+    /// Execute one batch in ring mode: dispatch each live worker its
+    /// whole contiguous micro block, collect the per-micro metrics,
+    /// (re)negotiate the worker↔worker links if membership changed,
+    /// then run the chain reduce and distribute the result — the plain
+    /// ring casts from the chain tail around the wrap link; the
+    /// hierarchical variant routes the final sum through the
+    /// aggregator to each group leader, which casts intra-group.
+    ///
+    /// Any membership change before the tail produces its Final aborts
+    /// the attempt with a Reset and restarts it over the survivors —
+    /// sound because no replica applies anything until the distribute
+    /// leg begins. After that point the applied bytes are pinned:
+    /// recovery re-delivers exactly them (idempotently, keyed by step)
+    /// instead of recomputing.
+    fn exec_batch_ring(
+        &mut self,
+        micros: &[(Tensor, Vec<i32>)],
+        masks: &[MaskPair],
+        stats: &mut WireStats,
+    ) -> Result<BatchOut> {
+        let n = micros.len();
+        assert_eq!(masks.len(), n, "one mask pair per micro-batch");
+        let k = self.links.len();
+        let union = MaskPair::union(masks);
+        let lr = self.cfg.train.lr;
+        let dense = self.codec.dense_len();
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.batch_timeout_ms.max(1));
+        let stall = Duration::from_millis(self.cfg.stall_reassign_ms.max(1));
+        let grace = stall;
+        let hier = self.cfg.exchange == ExchangeMode::Hierarchical;
+        'attempt: loop {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "batch deadline ({} ms) passed with the ring exchange incomplete — aborting",
+                self.cfg.batch_timeout_ms
+            );
+            anyhow::ensure!(self.live_workers() > 0, "no live dist workers left to run a batch");
+            let mut outs = vec![(0.0f32, 0.0f32); n];
+            let mut worker_ms = vec![0.0f64; k];
+            let mut micro_ms = vec![0.0f64; n];
+            self.step += 1;
+            let step = self.step;
+            let live: Vec<usize> = (0..k).filter(|&w| self.links[w].is_some()).collect();
+            let m = live.len();
+            let tail = live[m - 1];
+            let blocks = ring_blocks(m, n);
+            // One Compute frame per worker carrying its whole block
+            // (possibly empty — the worker still relays the chain). A
+            // worker *replaces* its held gradients per frame, so a
+            // restarted attempt with re-balanced blocks
+            // self-corrects.
+            let mut owner = vec![usize::MAX; n];
+            for (&w, &(s, e)) in live.iter().zip(&blocks) {
+                owner[s..e].fill(w);
+                let jobs: Vec<MicroJob> = (s..e)
+                    .map(|i| MicroJob {
+                        micro: i,
+                        x: micros[i].0.clone(),
+                        y: micros[i].1.clone(),
+                        masks: masks[i].clone(),
+                    })
+                    .collect();
+                let mut frame = self.buf_pool.checkout();
+                proto::encode_compute(step, &jobs, &mut frame);
+                if !self.ring_send(w, frame, "ring compute dispatch") {
+                    continue 'attempt;
+                }
+            }
+            // Metric barrier: one metric-only Up per micro (gradients
+            // stay on the workers). A loss or stall evicts and
+            // restarts the attempt — blocks are contiguous chain
+            // shares, so there is no per-micro reassignment here.
+            let mut arrived = vec![false; n];
+            let mut n_arrived = 0;
+            while n_arrived < n {
+                let now = Instant::now();
+                anyhow::ensure!(
+                    now < deadline,
+                    "batch deadline ({} ms) passed with incomplete metrics — aborting",
+                    self.cfg.batch_timeout_ms
+                );
+                match self.arrivals.recv_timeout(stall.min(deadline - now)) {
+                    Ok(Arrival::Up { worker, hdr, frame }) => {
+                        self.buf_pool.give_back(frame);
+                        if hdr.step != step || arrived[hdr.micro] {
+                            continue;
+                        }
+                        arrived[hdr.micro] = true;
+                        n_arrived += 1;
+                        worker_ms[worker] += hdr.ms;
+                        outs[hdr.micro] = (hdr.loss, hdr.n_correct);
+                        micro_ms[hdr.micro] = hdr.ms;
+                    }
+                    Ok(Arrival::Ring { frame, .. }) => self.buf_pool.give_back(frame),
+                    Ok(Arrival::Lost { worker, error }) => {
+                        let was_live = self.links[worker].is_some();
+                        self.evict(worker, &error);
+                        anyhow::ensure!(
+                            self.live_workers() > 0,
+                            "dist worker {worker} lost mid-batch with no survivors: {error}"
+                        );
+                        if was_live {
+                            self.reassigned_micros +=
+                                (0..n).filter(|&i| owner[i] == worker && !arrived[i]).count();
+                            continue 'attempt;
+                        }
+                    }
+                    Ok(Arrival::Bye { worker, .. }) => {
+                        anyhow::bail!("dist worker {worker} sent an unexpected Bye mid-batch")
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // Quiet past the stall window: evict the owners
+                        // of every missing micro and restart on the
+                        // survivors.
+                        let mut missing = 0;
+                        for (&w, &(s, e)) in live.iter().zip(&blocks) {
+                            let miss = (s..e).filter(|&i| !arrived[i]).count();
+                            if miss > 0 && self.links[w].is_some() {
+                                missing += miss;
+                                self.evict(
+                                    w,
+                                    &format!(
+                                        "silent past the {} ms stall window with {miss} \
+                                         micro-batch(es) outstanding in a ring exchange",
+                                        self.cfg.stall_reassign_ms
+                                    ),
+                                );
+                            }
+                        }
+                        anyhow::ensure!(
+                            self.live_workers() > 0,
+                            "every dist worker stalled mid-ring-exchange"
+                        );
+                        self.reassigned_micros += missing;
+                        continue 'attempt;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        anyhow::bail!("every dist worker link closed mid-batch")
+                    }
+                }
+            }
+            // Straggler feedback (same EMA as the star path): only
+            // workers that delivered metrics update.
+            for (&w, &(s, e)) in live.iter().zip(&blocks) {
+                if e > s && worker_ms[w] > 0.0 {
+                    let per_task = worker_ms[w] / (e - s) as f64;
+                    self.ema_ms[w] = 0.8 * self.ema_ms[w] + 0.2 * per_task;
+                }
+            }
+            if self.ring_dirty && !self.ring_negotiate(&live, deadline)? {
+                continue 'attempt;
+            }
+            // Role assignment. The chain runs 0 -> m-1 in both modes;
+            // the distribute leg differs (see the method docs). The
+            // tail is dispatched *last*: an Exec send failure therefore
+            // guarantees no Final was produced, so Reset + restart is
+            // sound.
+            let groups = if hier { ring_groups(m, self.cfg.ring_group) } else { vec![(0, m)] };
+            let mut leaders: Vec<(usize, u32)> = Vec::new();
+            let mut execs: Vec<(usize, RingExec)> = Vec::with_capacity(m);
+            for (p, &w) in live.iter().enumerate() {
+                let cast = if m == 1 {
+                    CastRole::Origin { hops: 0 }
+                } else if hier {
+                    let (gs, ge) = *groups
+                        .iter()
+                        .find(|&&(gs, ge)| p >= gs && p < ge)
+                        .expect("ring groups cover every chain position");
+                    if p == gs {
+                        let hops = (ge - gs - 1) as u32;
+                        leaders.push((w, hops));
+                        CastRole::Leader { hops }
+                    } else {
+                        CastRole::Member
+                    }
+                } else if p == m - 1 {
+                    CastRole::Origin { hops: (m - 1) as u32 }
+                } else {
+                    CastRole::Member
+                };
+                let exec = RingExec {
+                    step,
+                    lr,
+                    n_micros: n as u32,
+                    has_in: p > 0,
+                    is_last: p == m - 1,
+                    cast,
+                    union: union.clone(),
+                };
+                execs.push((w, exec));
+            }
+            for (w, exec) in execs {
+                let mut frame = self.buf_pool.checkout();
+                proto::encode_ring_exec(&exec, &mut frame);
+                if !self.ring_send(w, frame, "ring exec dispatch") {
+                    self.ring_reset_live(step)?;
+                    continue 'attempt;
+                }
+            }
+            // Wait for the chain tail's Final. Apply acks
+            // (Ready(step)) can already arrive here — the plain ring's
+            // cast leg overlaps the Final's trip to the aggregator.
+            let mut acked = vec![false; k];
+            let mut until = deadline;
+            let (fin_frame, fin_off) = loop {
+                match self.ring_ctrl_recv(until, deadline)? {
+                    RingCtrl::Frame(w, frame) => match proto::peek_tag(&frame) {
+                        Ok(proto::TAG_RING_FINAL) => {
+                            if let Ok((s, off)) = proto::decode_ring_final(&frame) {
+                                if s == step {
+                                    break (frame, off);
+                                }
+                            }
+                            self.buf_pool.give_back(frame);
+                        }
+                        Ok(proto::TAG_RING_READY) => {
+                            let seq = proto::decode_ring_ready(&frame);
+                            self.buf_pool.give_back(frame);
+                            if matches!(seq, Ok(s) if s == step) {
+                                acked[w] = true;
+                            }
+                        }
+                        _ => self.buf_pool.give_back(frame),
+                    },
+                    RingCtrl::LostLive => {
+                        // The chain may already have completed past the
+                        // lost worker — give the Final a grace window
+                        // before deciding.
+                        until = Instant::now() + grace;
+                    }
+                    RingCtrl::TimedOut => {
+                        // No Final within the grace window. If the tail
+                        // is gone in plain-ring mode it may have cast
+                        // the update before dying — bail rather than
+                        // diverge. Otherwise nothing was applied
+                        // anywhere (the tail gates the plain-ring cast;
+                        // the aggregator gates the hierarchical one),
+                        // so a full redo is sound.
+                        anyhow::ensure!(
+                            hier || self.links[tail].is_some(),
+                            "ring chain tail (worker {tail}) was lost mid-exchange; the update \
+                             may have been partially distributed — aborting instead of diverging"
+                        );
+                        self.ring_reset_live(step)?;
+                        continue 'attempt;
+                    }
+                }
+            };
+            let payload = fin_frame.len() - fin_off;
+            stats.record_up(payload, dense);
+            // Apply on the aggregator replica: decode the *exact*
+            // bytes every worker decodes (this is what keeps lossy
+            // wires mutually consistent), scale by 1/n, apply.
+            let mut acc = self.agg.zeros_like_params();
+            self.codec.decode_add(&fin_frame[fin_off..], &union, &mut acc)?;
+            let scale = 1.0 / n as f32;
+            for t in acc.iter_mut() {
+                t.scale(scale);
+            }
+            self.agg.apply_grads(&acc, lr)?;
+            // Hierarchical distribute: the same final bytes to every
+            // group leader, which casts them intra-group.
+            if hier && m > 1 {
+                for &(w, hops) in &leaders {
+                    if self.links[w].is_none() {
+                        continue;
+                    }
+                    let mut frame = self.buf_pool.checkout();
+                    proto::encode_ring_castd_header(step, hops, &mut frame);
+                    frame.extend_from_slice(&fin_frame[fin_off..]);
+                    stats.record_down(payload);
+                    self.ring_send(w, frame, "ring cast-down");
+                }
+            }
+            // Ack barrier: every live replica confirms the applied
+            // step. A broken cast chain (loss, stall) is healed by
+            // re-delivering the pinned bytes directly — Reset first so
+            // anyone still inside the exchange falls back to the main
+            // loop (per-link FIFO orders the direct CastDown after
+            // it); applies are idempotent per step.
+            let mut until = Instant::now() + grace;
+            loop {
+                let pending = (0..k).filter(|&w| self.links[w].is_some() && !acked[w]).count();
+                if pending == 0 {
+                    break;
+                }
+                match self.ring_ctrl_recv(until, deadline)? {
+                    RingCtrl::Frame(w, frame) => {
+                        if matches!(proto::peek_tag(&frame), Ok(proto::TAG_RING_READY)) {
+                            if let Ok(s) = proto::decode_ring_ready(&frame) {
+                                if s == step {
+                                    acked[w] = true;
+                                }
+                            }
+                        }
+                        self.buf_pool.give_back(frame);
+                    }
+                    RingCtrl::LostLive | RingCtrl::TimedOut => {
+                        self.ring_reset_live(step)?;
+                        for w in 0..k {
+                            if self.links[w].is_none() || acked[w] {
+                                continue;
+                            }
+                            let mut frame = self.buf_pool.checkout();
+                            proto::encode_ring_castd_header(step, 0, &mut frame);
+                            frame.extend_from_slice(&fin_frame[fin_off..]);
+                            stats.record_down(payload);
+                            self.ring_send(w, frame, "ring cast-down retry");
+                        }
+                        until = Instant::now() + grace;
+                    }
+                }
+            }
+            self.buf_pool.give_back(fin_frame);
+            return Ok(BatchOut { outs, worker_ms, micro_ms });
+        }
     }
 
     /// Distributed synthetic pre-training (all-ones masks), mirroring
@@ -1091,14 +1701,19 @@ impl DistTrainer {
         }
         while !awaiting.is_empty() {
             match self.arrivals.recv_timeout(Duration::from_secs(60)) {
-                Ok(Arrival::Bye { worker, fresh, reused }) => {
+                Ok(Arrival::Bye { worker, msg }) => {
                     awaiting.retain(|&w| w != worker);
-                    self.bye_fresh += fresh;
-                    self.bye_reused += reused;
+                    self.bye_fresh += msg.fresh;
+                    self.bye_reused += msg.reused;
+                    if let Some(slot) = self.bye_ring.get_mut(worker) {
+                        slot.0 += msg.ring_sent;
+                        slot.1 += msg.ring_recv;
+                    }
                 }
-                Ok(Arrival::Up { frame, .. }) => {
-                    // A straggling duplicate from a reassignment racing
-                    // the shutdown: stale by construction, recycle it.
+                Ok(Arrival::Up { frame, .. }) | Ok(Arrival::Ring { frame, .. }) => {
+                    // A straggling duplicate from a reassignment (or a
+                    // ring ack) racing the shutdown: stale by
+                    // construction, recycle it.
                     self.buf_pool.give_back(frame);
                 }
                 Ok(Arrival::Lost { worker, error }) => {
@@ -1248,6 +1863,8 @@ impl DistTrainer {
             lora_rank: self.cfg.train.lora_rank,
             seed: self.cfg.train.seed,
             precision: self.cfg.wire_precision,
+            compress: self.cfg.compress,
+            ring: self.cfg.exchange.is_ring(),
             overlap: self.cfg.overlap,
             sim_wire_ms_per_mib: self.cfg.sim_wire_ms_per_mib,
             heartbeat_ms: self.cfg.heartbeat_ms,
@@ -1284,6 +1901,7 @@ impl DistTrainer {
             kind: "join".to_string(),
         });
         self.membership_dirty = true;
+        self.ring_dirty = true;
         crate::info!("dist worker {w} rejoined at batch {}", self.cur_batch);
         Ok(())
     }
@@ -1562,8 +2180,11 @@ impl DistTrainer {
         // the worker-side pool counters and the final socket totals.
         self.shutdown_workers()?;
         let mut socket = TransportStats::default();
+        let mut socket_links = Vec::with_capacity(self.link_stats.len());
         for cell in &self.link_stats {
-            socket.merge(&cell.snapshot());
+            let snap = cell.snapshot();
+            socket.merge(&snap);
+            socket_links.push(snap);
         }
         // In channel mode every party shares the aggregator's pool (one
         // set of counters); in TCP mode each process pools locally and
@@ -1613,9 +2234,12 @@ impl DistTrainer {
             n_workers: k,
             exchange: self.cfg.exchange.label().to_string(),
             transport: self.cfg.transport.label().to_string(),
+            compress: self.cfg.compress.label(),
             wire: stats,
             pretrain_wire: pretrain_stats,
             socket,
+            socket_links,
+            ring_bytes: self.bye_ring.clone(),
             modeled_wire_bytes,
             mean_step_ms: step_ms_sum / n_batches,
             worker_busy_ms: worker_usage.busy_ms().to_vec(),
@@ -1815,6 +2439,101 @@ mod tests {
     fn worker_count_must_be_positive() {
         let provider = small_provider();
         assert!(DistTrainer::new(&provider, DistConfig::new(quick_cfg(), 0)).is_err());
+    }
+
+    #[test]
+    fn ring_blocks_and_groups_partition_cleanly() {
+        for k in 1..=9 {
+            for n in 0..=13 {
+                let b = ring_blocks(k, n);
+                assert_eq!(b.len(), k);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[k - 1].1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "blocks must be contiguous");
+                }
+                let sizes: Vec<usize> = b.iter().map(|&(s, e)| e - s).collect();
+                let min = *sizes.iter().min().unwrap();
+                let max = *sizes.iter().max().unwrap();
+                assert!(max - min <= 1, "near-equal blocks, got {sizes:?}");
+            }
+            for group in 0..=k {
+                let g = ring_groups(k, group);
+                assert_eq!(g[0].0, 0);
+                assert_eq!(g[g.len() - 1].1, k);
+                for w in g.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "groups must be contiguous");
+                }
+            }
+        }
+        assert_eq!(ring_groups(4, 0), vec![(0, 2), (2, 4)]);
+        assert_eq!(ring_groups(5, 0), vec![(0, 3), (3, 5)]);
+        assert_eq!(ring_groups(3, 5), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn ring_exchange_matches_star_bitwise() {
+        // The chain fold adds the same f32 values in the same ascending
+        // micro order as the ordered star reduce, and the uncompressed
+        // codec round-trips bits exactly — trajectories and parameters
+        // must be identical across all three topologies.
+        let provider = small_provider();
+        let run = |exchange| {
+            let dcfg = DistConfig { exchange, ..DistConfig::new(quick_cfg(), 2) };
+            let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
+            let r = dt.run().unwrap();
+            let w = dt.backend().param("b00_wqkv").unwrap();
+            (r, w)
+        };
+        let (star, w_star) = run(ExchangeMode::MaskedAllReduce);
+        let (ring, w_ring) = run(ExchangeMode::Ring);
+        let (hier, w_hier) = run(ExchangeMode::Hierarchical);
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&star.train.loss_curve), bits(&ring.train.loss_curve));
+        assert_eq!(bits(&star.train.loss_curve), bits(&hier.train.loss_curve));
+        assert_eq!(w_star, w_ring, "ring must not move a single parameter bit");
+        assert_eq!(w_star, w_hier, "hierarchical must not move a single parameter bit");
+        assert_eq!(ring.exchange, "ring");
+        assert_eq!(ring.compress, "none");
+        assert_eq!(ring.ring_bytes.len(), 2);
+    }
+
+    #[test]
+    fn int8_wire_trains_and_shrinks_uplink() {
+        let provider = small_provider();
+        let run = |compress| {
+            let dcfg = DistConfig { compress, ..DistConfig::new(quick_cfg(), 2) };
+            DistTrainer::new(&provider, dcfg).unwrap().run().unwrap()
+        };
+        let dense = run(WireCompression::None);
+        let q8 = run(WireCompression::Int8);
+        assert!(q8.train.final_train_loss.is_finite());
+        assert_eq!(q8.compress, "int8");
+        let ratio = dense.wire.up_bytes as f64 / q8.wire.up_bytes as f64;
+        assert!(ratio > 3.0, "int8 must shrink the uplink roughly 4x, got {ratio:.2}");
+    }
+
+    #[test]
+    fn compression_guards_reject_inconsistent_configs() {
+        let provider = small_provider();
+        let bad = DistConfig {
+            compress: WireCompression::Int8,
+            exchange: ExchangeMode::ParamServer,
+            ..DistConfig::new(quick_cfg(), 2)
+        };
+        assert!(DistTrainer::new(&provider, bad).is_err(), "compression needs grad exchange");
+        let bad = DistConfig {
+            compress: WireCompression::Int4,
+            wire_precision: WirePrecision::F16,
+            ..DistConfig::new(quick_cfg(), 2)
+        };
+        assert!(DistTrainer::new(&provider, bad).is_err(), "int4 cannot stack on f16");
+        let ok = DistConfig {
+            compress: WireCompression::TopK { pct: 10 },
+            wire_precision: WirePrecision::F16,
+            ..DistConfig::new(quick_cfg(), 2)
+        };
+        assert!(DistTrainer::new(&provider, ok).is_ok(), "top-k composes with the f16 wire");
     }
 
     #[test]

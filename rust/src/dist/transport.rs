@@ -41,16 +41,18 @@
 //! and a peer that closes mid-frame surfaces as a truncation error
 //! instead of a hang.
 
+use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::grads::BufPool;
+use super::proto;
 
 /// Hard cap on one frame's payload size (256 MiB). Far above any real
 /// message (a dense small-model gradient is a few MiB); its only job is
@@ -130,41 +132,116 @@ pub trait Transport: BlobTx + BlobRx {
     fn stats(&self) -> TransportStats;
 }
 
+/// Display names of the per-frame-tag traffic classes tracked by
+/// [`StatsCell`] / [`TransportStats`], indexed by the value
+/// [`frame_class`] returns. One entry per control-protocol frame kind
+/// (all ten `TAG_RING_*` negotiation/exchange tags fold into a single
+/// `ring` class), plus `barrier` for the empty handshake token and
+/// `other` for anything with an unrecognized leading tag.
+pub const FRAME_CLASSES: [&str; 16] = [
+    "init", "compute", "apply", "deltas", "reset", "shutdown", "up", "bye", "ping", "pong",
+    "join", "evict", "state", "ring", "barrier", "other",
+];
+
+/// Number of traffic classes (length of [`FRAME_CLASSES`]).
+pub const N_FRAME_CLASSES: usize = FRAME_CLASSES.len();
+
+/// Classify a frame by peeking its leading `[tag: u32 LE]` — every
+/// control-protocol frame starts with one (see [`super::proto`]), and
+/// the only tagless frame the runtime produces is the empty barrier
+/// token. Returns an index into [`FRAME_CLASSES`].
+pub fn frame_class(blob: &[u8]) -> usize {
+    if blob.is_empty() {
+        return 14; // barrier
+    }
+    if blob.len() < 4 {
+        return 15; // other
+    }
+    let tag = u32::from_le_bytes([blob[0], blob[1], blob[2], blob[3]]);
+    match tag {
+        proto::TAG_INIT => 0,
+        proto::TAG_COMPUTE => 1,
+        proto::TAG_APPLY => 2,
+        proto::TAG_DELTAS => 3,
+        proto::TAG_RESET => 4,
+        proto::TAG_SHUTDOWN => 5,
+        proto::TAG_UP => 6,
+        proto::TAG_BYE => 7,
+        proto::TAG_PING => 8,
+        proto::TAG_PONG => 9,
+        proto::TAG_JOIN => 10,
+        proto::TAG_EVICT => 11,
+        proto::TAG_STATE => 12,
+        proto::TAG_RING_LISTEN
+        | proto::TAG_RING_PEERS
+        | proto::TAG_RING_EXEC
+        | proto::TAG_RING_RESET
+        | proto::TAG_RING_CASTD
+        | proto::TAG_RING_ADDR
+        | proto::TAG_RING_FINAL
+        | proto::TAG_RING_READY
+        | proto::TAG_RING_PART
+        | proto::TAG_RING_CAST => 13,
+        _ => 15, // other
+    }
+}
+
 /// Shared live counters of one link's traffic (both halves increment
-/// the same cell after a split).
+/// the same cell after a split). Alongside the aggregate totals, each
+/// frame's bytes are attributed to its [`frame_class`] so compression
+/// wins show up per channel (`compute` vs `up` vs `ring` …), not just
+/// in aggregate.
 #[derive(Debug, Default)]
 pub struct StatsCell {
     frames_sent: AtomicU64,
     frames_recv: AtomicU64,
     bytes_sent: AtomicU64,
     bytes_recv: AtomicU64,
+    class_sent: [AtomicU64; N_FRAME_CLASSES],
+    class_recv: [AtomicU64; N_FRAME_CLASSES],
 }
 
 impl StatsCell {
-    fn record_sent(&self, bytes: usize) {
+    /// `bytes` is the whole on-wire frame (payload + framing overhead);
+    /// `blob` is the payload, peeked for its leading tag.
+    fn record_sent(&self, bytes: usize, blob: &[u8]) {
         self.frames_sent.fetch_add(1, Ordering::Relaxed);
         self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.class_sent[frame_class(blob)].fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
-    fn record_recv(&self, bytes: usize) {
+    fn record_recv(&self, bytes: usize, blob: &[u8]) {
         self.frames_recv.fetch_add(1, Ordering::Relaxed);
         self.bytes_recv.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.class_recv[frame_class(blob)].fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     /// Current totals.
     pub fn snapshot(&self) -> TransportStats {
+        let mut class_sent = [0u64; N_FRAME_CLASSES];
+        let mut class_recv = [0u64; N_FRAME_CLASSES];
+        for (dst, src) in class_sent.iter_mut().zip(self.class_sent.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        for (dst, src) in class_recv.iter_mut().zip(self.class_recv.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
         TransportStats {
             frames_sent: self.frames_sent.load(Ordering::Relaxed),
             frames_recv: self.frames_recv.load(Ordering::Relaxed),
             bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
             bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            class_sent,
+            class_recv,
         }
     }
 }
 
 /// Measured transport-layer traffic: whole frames including the TCP
 /// length prefixes — the bytes that actually cross the socket, reported
-/// next to the modeled bytes in `benches/dist_step.rs`.
+/// next to the modeled bytes in `benches/dist_step.rs`. The `class_*`
+/// arrays break the same byte totals down by frame tag (indexed per
+/// [`FRAME_CLASSES`]); they always sum to the aggregate counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TransportStats {
     /// Frames sent.
@@ -175,6 +252,10 @@ pub struct TransportStats {
     pub bytes_sent: u64,
     /// Bytes received (payload + framing overhead).
     pub bytes_recv: u64,
+    /// Bytes sent, attributed per frame class ([`FRAME_CLASSES`]).
+    pub class_sent: [u64; N_FRAME_CLASSES],
+    /// Bytes received, attributed per frame class.
+    pub class_recv: [u64; N_FRAME_CLASSES],
 }
 
 impl TransportStats {
@@ -184,11 +265,36 @@ impl TransportStats {
         self.frames_recv += other.frames_recv;
         self.bytes_sent += other.bytes_sent;
         self.bytes_recv += other.bytes_recv;
+        for (dst, src) in self.class_sent.iter_mut().zip(other.class_sent.iter()) {
+            *dst += src;
+        }
+        for (dst, src) in self.class_recv.iter_mut().zip(other.class_recv.iter()) {
+            *dst += src;
+        }
     }
 
     /// Total bytes moved in both directions.
     pub fn total_bytes(&self) -> u64 {
         self.bytes_sent + self.bytes_recv
+    }
+
+    /// (sent, received) bytes for one named frame class. Unknown names
+    /// report zero rather than panicking — callers probe by label.
+    pub fn class_bytes(&self, name: &str) -> (u64, u64) {
+        match FRAME_CLASSES.iter().position(|c| *c == name) {
+            Some(i) => (self.class_sent[i], self.class_recv[i]),
+            None => (0, 0),
+        }
+    }
+
+    /// Iterate the non-zero classes as `(name, sent, recv)` — the shape
+    /// the JSON report wants, omitting channels a run never used.
+    pub fn classes(&self) -> impl Iterator<Item = (&'static str, u64, u64)> + '_ {
+        FRAME_CLASSES
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.class_sent[i] != 0 || self.class_recv[i] != 0)
+            .map(|(i, name)| (*name, self.class_sent[i], self.class_recv[i]))
     }
 }
 
@@ -289,7 +395,7 @@ struct ChannelRx {
 }
 
 fn channel_send(tx: &mpsc::Sender<Vec<u8>>, stats: &StatsCell, blob: Vec<u8>) -> Result<()> {
-    stats.record_sent(blob.len());
+    stats.record_sent(blob.len(), &blob);
     tx.send(blob)
         .map_err(|_| anyhow::anyhow!("channel transport: peer receiver hung up"))
 }
@@ -298,7 +404,7 @@ fn channel_recv(rx: &mpsc::Receiver<Vec<u8>>, stats: &StatsCell) -> Result<Vec<u
     let blob = rx
         .recv()
         .map_err(|_| anyhow::anyhow!("channel transport: peer sender hung up"))?;
-    stats.record_recv(blob.len());
+    stats.record_recv(blob.len(), &blob);
     Ok(blob)
 }
 
@@ -309,7 +415,7 @@ fn channel_recv_timeout(
 ) -> Result<Option<Vec<u8>>> {
     match rx.recv_timeout(timeout) {
         Ok(blob) => {
-            stats.record_recv(blob.len());
+            stats.record_recv(blob.len(), &blob);
             Ok(Some(blob))
         }
         Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
@@ -434,7 +540,7 @@ fn tcp_send(
     let len = (blob.len() as u32).to_le_bytes();
     writer.write_all(&len).context("writing frame length prefix")?;
     writer.write_all(&blob).context("writing frame body")?;
-    stats.record_sent(4 + blob.len());
+    stats.record_sent(4 + blob.len(), &blob);
     pool.give_back(blob);
     Ok(())
 }
@@ -455,7 +561,7 @@ fn tcp_recv(reader: &mut TcpStream, pool: &BufPool, stats: &StatsCell) -> Result
     reader
         .read_exact(&mut buf)
         .with_context(|| format!("reading {len}-byte frame body (peer closed mid-frame?)"))?;
-    stats.record_recv(4 + len);
+    stats.record_recv(4 + len, &buf);
     Ok(buf)
 }
 
@@ -528,7 +634,7 @@ fn tcp_recv_timeout_inner(
             Err(e) => return Err(e).context("reading frame body"),
         }
     }
-    stats.record_recv(4 + len);
+    stats.record_recv(4 + len, &buf);
     Ok(Some(buf))
 }
 
@@ -641,6 +747,149 @@ pub fn accept_workers(
         }
     }
     Ok(streams)
+}
+
+// ---------------------------------------------------------------------------
+// Ring links (worker ↔ worker)
+// ---------------------------------------------------------------------------
+//
+// Ring exchange needs direct worker↔worker links, negotiated by the
+// aggregator: each worker opens a listener, reports its address, and is
+// then told which peer to dial. Over TCP the address is a real
+// `host:port`; in channel mode (workers are threads of one process)
+// addresses are `chan://N` tokens resolved through a process-global
+// rendezvous registry, so the negotiation protocol is identical across
+// transports and the trainer never special-cases the wiring.
+
+/// Process-global rendezvous for channel-mode ring links: token →
+/// queue of endpoints pushed by connectors, popped by the listener.
+fn ring_registry() -> &'static Mutex<HashMap<String, Vec<ChannelTransport>>> {
+    static REG: OnceLock<Mutex<HashMap<String, Vec<ChannelTransport>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Register a channel-mode ring listener and return its `chan://N`
+/// address token (process-unique; concurrent tests never collide).
+pub fn channel_ring_listen() -> String {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let token = format!("chan://{}", NEXT.fetch_add(1, Ordering::Relaxed));
+    ring_registry()
+        .lock()
+        .expect("ring rendezvous registry poisoned")
+        .insert(token.clone(), Vec::new());
+    token
+}
+
+/// Drop a channel-mode ring listener registration (called when links
+/// are torn down for renegotiation, so stale tokens do not accumulate
+/// across membership changes).
+pub fn channel_ring_close(addr: &str) {
+    ring_registry()
+        .lock()
+        .expect("ring rendezvous registry poisoned")
+        .remove(addr);
+}
+
+fn channel_ring_connect(addr: &str) -> Result<ChannelTransport> {
+    let (ours, theirs) = channel_pair();
+    let mut reg = ring_registry().lock().expect("ring rendezvous registry poisoned");
+    let queue = reg
+        .get_mut(addr)
+        .ok_or_else(|| anyhow::anyhow!("no ring listener registered at {addr}"))?;
+    queue.push(theirs);
+    Ok(ours)
+}
+
+fn channel_ring_accept(addr: &str, timeout: Duration) -> Result<ChannelTransport> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        {
+            let mut reg = ring_registry().lock().expect("ring rendezvous registry poisoned");
+            match reg.get_mut(addr) {
+                Some(queue) if !queue.is_empty() => return Ok(queue.remove(0)),
+                Some(_) => {}
+                None => anyhow::bail!("ring listener at {addr} was closed while accepting"),
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "timed out waiting for a ring peer to dial {addr} within {timeout:?}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A worker's listening endpoint for its incoming ring link, either
+/// flavor behind one face. Created on [`proto::TAG_RING_LISTEN`]; the
+/// address from [`RingListener::addr`] travels to the aggregator, which
+/// forwards it to the predecessor via [`proto::TAG_RING_PEERS`].
+pub enum RingListener {
+    /// Real socket on an ephemeral loopback/interface port.
+    Tcp(TcpListener, SocketAddr),
+    /// Channel-mode rendezvous token.
+    Channel(String),
+}
+
+impl RingListener {
+    /// Open a listener of the requested flavor. TCP binds
+    /// `127.0.0.1:0` — ring links are loopback-scoped for now, matching
+    /// the multi-process CI topology.
+    pub fn open(tcp: bool) -> Result<RingListener> {
+        if tcp {
+            let (listener, addr) = listen("127.0.0.1:0")?;
+            Ok(RingListener::Tcp(listener, addr))
+        } else {
+            Ok(RingListener::Channel(channel_ring_listen()))
+        }
+    }
+
+    /// The dialable address (`host:port` or `chan://N`).
+    pub fn addr(&self) -> String {
+        match self {
+            RingListener::Tcp(_, addr) => addr.to_string(),
+            RingListener::Channel(token) => token.clone(),
+        }
+    }
+
+    /// Accept exactly one inbound ring link, failing after `timeout`.
+    pub fn accept(&self, timeout: Duration, pool: Arc<BufPool>) -> Result<Box<dyn Transport>> {
+        match self {
+            RingListener::Tcp(listener, _) => {
+                let stream = accept_workers(listener, 1, timeout)
+                    .context("accepting ring predecessor link")?
+                    .pop()
+                    .expect("accept_workers returned n streams");
+                Ok(Box::new(TcpTransport::from_stream(stream, pool)?))
+            }
+            RingListener::Channel(token) => {
+                Ok(Box::new(channel_ring_accept(token, timeout)?))
+            }
+        }
+    }
+}
+
+impl Drop for RingListener {
+    fn drop(&mut self) {
+        if let RingListener::Channel(token) = self {
+            channel_ring_close(token);
+        }
+    }
+}
+
+/// Dial a peer worker's ring listener — `chan://N` tokens resolve
+/// through the in-process rendezvous, anything else is a TCP address
+/// (with the same patient retry loop as the aggregator connect, since
+/// the successor's listener may be a few frames behind ours).
+pub fn ring_connect(
+    addr: &str,
+    timeout: Duration,
+    pool: Arc<BufPool>,
+) -> Result<Box<dyn Transport>> {
+    if addr.starts_with("chan://") {
+        Ok(Box::new(channel_ring_connect(addr)?))
+    } else {
+        Ok(Box::new(TcpTransport::connect(addr, timeout, pool)?))
+    }
 }
 
 #[cfg(test)]
@@ -895,6 +1144,115 @@ mod tests {
         };
         assert!(err.contains("stalled mid-frame"), "got: {err}");
         drop(h.join().unwrap());
+    }
+
+    #[test]
+    fn frame_bytes_are_attributed_per_tag_class() {
+        let (mut a, mut b) = channel_pair();
+        // A compute-tagged frame, an up-tagged frame, a barrier token,
+        // and one unrecognized tag.
+        let mut compute = proto::TAG_COMPUTE.to_le_bytes().to_vec();
+        compute.extend_from_slice(&[0u8; 8]);
+        a.send_blob(compute).unwrap();
+        a.send_blob(Vec::new()).unwrap();
+        a.send_blob(0xDEAD_BEEFu32.to_le_bytes().to_vec()).unwrap();
+        let mut up = proto::TAG_UP.to_le_bytes().to_vec();
+        up.extend_from_slice(&[0u8; 16]);
+        b.send_blob(up).unwrap();
+        for _ in 0..3 {
+            b.recv_blob().unwrap();
+        }
+        a.recv_blob().unwrap();
+        let sa = a.stats();
+        assert_eq!(sa.class_bytes("compute"), (12, 0));
+        // A channel-mode barrier token is zero payload bytes, so it
+        // only moves the frame counter, never the class bytes.
+        assert_eq!(sa.class_bytes("barrier"), (0, 0));
+        assert_eq!(sa.class_bytes("other"), (4, 0));
+        assert_eq!(sa.class_bytes("up"), (0, 20));
+        assert_eq!(sa.class_bytes("no-such-class"), (0, 0));
+        // The breakdown always sums back to the aggregate counters.
+        assert_eq!(sa.class_sent.iter().sum::<u64>(), sa.bytes_sent);
+        assert_eq!(sa.class_recv.iter().sum::<u64>(), sa.bytes_recv);
+        // Receiver sees the mirror image.
+        let sb = b.stats();
+        assert_eq!(sb.class_bytes("compute"), (0, 12));
+        assert_eq!(sb.class_bytes("up"), (20, 0));
+        // Non-zero-class iterator skips unused channels.
+        let used: Vec<&str> = sb.classes().map(|(name, _, _)| name).collect();
+        assert!(used.contains(&"compute") && used.contains(&"up"));
+        assert!(!used.contains(&"deltas"));
+    }
+
+    #[test]
+    fn frame_class_covers_ring_tags_and_short_frames() {
+        let barrier = frame_class(&[]);
+        assert_eq!(FRAME_CLASSES[barrier], "barrier");
+        // Shorter than a tag: unclassifiable, not a panic.
+        assert_eq!(FRAME_CLASSES[frame_class(&[1, 2])], "other");
+        for tag in [
+            proto::TAG_RING_LISTEN,
+            proto::TAG_RING_PEERS,
+            proto::TAG_RING_EXEC,
+            proto::TAG_RING_RESET,
+            proto::TAG_RING_CASTD,
+            proto::TAG_RING_ADDR,
+            proto::TAG_RING_FINAL,
+            proto::TAG_RING_READY,
+            proto::TAG_RING_PART,
+            proto::TAG_RING_CAST,
+        ] {
+            assert_eq!(FRAME_CLASSES[frame_class(&tag.to_le_bytes())], "ring");
+        }
+        assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_STATE.to_le_bytes())], "state");
+        assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_PING.to_le_bytes())], "ping");
+    }
+
+    #[test]
+    fn channel_ring_rendezvous_connects_listener_to_dialer() {
+        let listener = RingListener::open(false).unwrap();
+        let addr = listener.addr();
+        assert!(addr.starts_with("chan://"), "got {addr}");
+        let dialer_addr = addr.clone();
+        let h = std::thread::spawn(move || {
+            let mut link = ring_connect(&dialer_addr, Duration::from_secs(5), pool()).unwrap();
+            link.send_blob(vec![0xAA, 0xBB]).unwrap();
+            link.recv_blob().unwrap()
+        });
+        let mut accepted = listener.accept(Duration::from_secs(5), pool()).unwrap();
+        assert_eq!(accepted.recv_blob().unwrap(), vec![0xAA, 0xBB]);
+        accepted.send_blob(vec![0xCC]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![0xCC]);
+    }
+
+    #[test]
+    fn channel_ring_rendezvous_rejects_unknown_and_times_out() {
+        // Dialing a token nobody registered is an immediate error.
+        assert!(ring_connect("chan://no-such-token", Duration::from_secs(1), pool()).is_err());
+        // A listener nobody dials times out instead of hanging.
+        let listener = RingListener::open(false).unwrap();
+        let err = listener
+            .accept(Duration::from_millis(60), pool())
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("timed out"), "got: {err}");
+        // Dropping the listener releases its token: dialing now fails.
+        let addr = listener.addr();
+        drop(listener);
+        assert!(ring_connect(&addr, Duration::from_secs(1), pool()).is_err());
+    }
+
+    #[test]
+    fn tcp_ring_listener_round_trips() {
+        let listener = RingListener::open(true).unwrap();
+        let addr = listener.addr();
+        let h = std::thread::spawn(move || {
+            let mut link = ring_connect(&addr, Duration::from_secs(10), pool()).unwrap();
+            link.send_blob(b"ring".to_vec()).unwrap();
+        });
+        let mut accepted = listener.accept(Duration::from_secs(10), pool()).unwrap();
+        assert_eq!(accepted.recv_blob().unwrap(), b"ring".to_vec());
+        h.join().unwrap();
     }
 
     #[test]

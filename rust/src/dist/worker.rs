@@ -25,6 +25,22 @@
 //! actions trigger on the worker's gradient-send counter at *queueing*
 //! time, which keeps every chaos scenario deterministic even under the
 //! overlap pipeline.
+//!
+//! ## Ring mode
+//!
+//! When `InitMsg.ring` is set the worker *holds* its computed
+//! micro-gradients locally (each `Compute` frame **replaces** the held
+//! set for its step, so reassignment can never double-count a micro)
+//! and sends metric-only `Up` frames. Gradients then move over direct
+//! worker↔worker links: the aggregator negotiates them with
+//! `RingListen`/`RingPeers` frames, and a `RingExec` frame drives one
+//! exchange — receive the predecessor's partial sum, fold own micros in
+//! ascending order (through the codec, so the bits match the star
+//! reduce exactly), forward, and finally apply the distributed result.
+//! Every apply is acknowledged with a `RingReady` frame so the
+//! aggregator can hold the next batch until all replicas moved in
+//! lockstep; a `RingReset` aborts an in-flight exchange (the worker
+//! drops its links and waits for renegotiation).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
@@ -42,12 +58,16 @@ use crate::tensor::Tensor;
 use super::fault::{FaultAction, FaultPlan};
 use super::grads::{BufPool, GradCodec};
 use super::proto::{
-    decode_apply, decode_compute, decode_deltas, decode_init, decode_pong, decode_state,
-    encode_bye, encode_join, encode_ping, encode_up_header, peek_tag, InitMsg, UpHdr,
-    PROTO_VERSION, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT, TAG_PONG, TAG_RESET,
-    TAG_SHUTDOWN, TAG_STATE, UP_GRAD_OFF,
+    decode_apply, decode_compute, decode_deltas, decode_init, decode_pong, decode_ring_cast,
+    decode_ring_castd, decode_ring_exec, decode_ring_listen, decode_ring_part, decode_ring_peers,
+    decode_ring_reset, decode_state, encode_bye, encode_join, encode_ping, encode_ring_addr,
+    encode_ring_cast_header, encode_ring_final_header, encode_ring_part_header, encode_ring_ready,
+    encode_up_header, peek_tag, ByeMsg, CastRole, InitMsg, RingExec, UpHdr, PROTO_VERSION,
+    TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT, TAG_PONG, TAG_RESET, TAG_RING_CASTD,
+    TAG_RING_EXEC, TAG_RING_LISTEN, TAG_RING_PEERS, TAG_RING_RESET, TAG_SHUTDOWN, TAG_STATE,
+    UP_GRAD_OFF,
 };
-use super::transport::{BlobRx, BlobTx, Transport};
+use super::transport::{ring_connect, BlobRx, BlobTx, RingListener, Transport};
 
 /// The uplink half, shared between the compute/sender path and the
 /// heartbeat thread. Every send takes the lock only for the actual
@@ -84,6 +104,428 @@ enum Flow {
     /// Abrupt exit: no Bye, just drop the link (scripted kill or an
     /// eviction notice) — the aggregator sees the peer vanish.
     Die,
+    /// Run one ring exchange (needs the receive half, so it cannot run
+    /// inside the frame handler).
+    Ring(RingExec),
+}
+
+/// Gradients held for the ring exchange of one step: `(step, entries)`
+/// where each entry is `(micro, masks, grads)`. A `Compute` frame for a
+/// step replaces the whole set, so the held micros are always exactly
+/// the aggregator's latest block assignment.
+type HeldStep = (u64, Vec<(usize, MaskPair, Vec<Tensor>)>);
+
+/// The worker's ring-collective state: negotiated links, the cached
+/// marching orders of the newest exchange (for the aggregator's
+/// direct-cast recovery path), and byte counters that survive link
+/// teardown (reported in the Bye frame).
+struct RingState {
+    listener: Option<RingListener>,
+    /// Link to the ring successor (we send).
+    out: Option<Box<dyn Transport>>,
+    /// Link from the ring predecessor (we receive).
+    inl: Option<Box<dyn Transport>>,
+    /// The newest `RingExec` — kept so a post-abort `RingCastDown` on
+    /// the main link can still be applied (`lr`/`n_micros`/union live
+    /// here, not in the cast frame).
+    last_exec: Option<RingExec>,
+    /// Highest step whose reduced gradient was applied; makes the
+    /// apply idempotent when the recovery path re-delivers a cast.
+    last_applied: u64,
+    sent: u64,
+    recv: u64,
+}
+
+impl RingState {
+    fn new() -> RingState {
+        RingState {
+            listener: None,
+            out: None,
+            inl: None,
+            last_exec: None,
+            last_applied: 0,
+            sent: 0,
+            recv: 0,
+        }
+    }
+
+    fn fold(&mut self, link: Box<dyn Transport>) {
+        let s = link.stats();
+        self.sent += s.bytes_sent;
+        self.recv += s.bytes_recv;
+    }
+
+    fn drop_out(&mut self) {
+        if let Some(l) = self.out.take() {
+            self.fold(l);
+        }
+    }
+
+    fn drop_in(&mut self) {
+        if let Some(l) = self.inl.take() {
+            self.fold(l);
+        }
+    }
+
+    /// Tear down both peer links and the listener (reset or
+    /// renegotiation); the byte counters keep accumulating.
+    fn drop_links(&mut self) {
+        self.drop_out();
+        self.drop_in();
+        self.listener = None;
+    }
+
+    /// Send a blob to the ring successor. `false` means the successor
+    /// is gone — the caller falls back to waiting for the aggregator's
+    /// reset instead of dying (the failure detector owns membership).
+    fn send_out(&mut self, blob: Vec<u8>) -> bool {
+        match self.out.as_mut() {
+            Some(out) => match out.send_blob(blob) {
+                Ok(()) => true,
+                Err(_) => {
+                    self.drop_out();
+                    false
+                }
+            },
+            None => false,
+        }
+    }
+}
+
+/// How one ring exchange ended.
+enum RingOutcome {
+    /// Exchange complete, update applied and acknowledged.
+    Done,
+    /// Aggregator reset the exchange; links were dropped and the serve
+    /// loop resumes (renegotiation frames follow).
+    Aborted,
+    /// Eviction notice mid-exchange.
+    Die,
+    /// Shutdown frame mid-exchange.
+    Shutdown,
+}
+
+/// A frame from the *aggregator* link observed while a ring exchange is
+/// in flight.
+enum MainEvent {
+    /// Heartbeat ack or a stale frame — keep waiting.
+    Ignore,
+    /// Reset for this (or a newer) step.
+    Abort,
+    Die,
+    Shutdown,
+    /// Hierarchical distribute: the final gradient, aggregator → leader.
+    Castd { hops: u32, blob: Vec<u8>, off: usize },
+}
+
+/// Classify one main-link frame received mid-exchange. Consumes the
+/// frame (recycled unless returned inside the event).
+fn ring_main_event(frame: Vec<u8>, step: u64, pool: &BufPool) -> Result<MainEvent> {
+    match peek_tag(&frame)? {
+        TAG_PONG => {
+            decode_pong(&frame)?;
+            pool.give_back(frame);
+            Ok(MainEvent::Ignore)
+        }
+        TAG_RING_RESET => {
+            let s = decode_ring_reset(&frame)?;
+            pool.give_back(frame);
+            Ok(if s >= step { MainEvent::Abort } else { MainEvent::Ignore })
+        }
+        TAG_EVICT => {
+            pool.give_back(frame);
+            Ok(MainEvent::Die)
+        }
+        TAG_SHUTDOWN => {
+            pool.give_back(frame);
+            Ok(MainEvent::Shutdown)
+        }
+        TAG_RING_CASTD => {
+            let (s, hops, off) = decode_ring_castd(&frame)?;
+            if s == step {
+                Ok(MainEvent::Castd { hops, blob: frame, off })
+            } else {
+                pool.give_back(frame);
+                Ok(MainEvent::Ignore)
+            }
+        }
+        tag => anyhow::bail!("unexpected frame tag {tag:#x} on the main link mid-ring-exchange"),
+    }
+}
+
+/// What a wait on the predecessor link produced.
+enum LinkWait {
+    Blob { blob: Vec<u8>, off: usize, hops: u32 },
+    Abort,
+    Die,
+    Shutdown,
+}
+
+/// Wait for the predecessor's next ring blob (`RingPart` during the
+/// reduce leg, `RingCast` during the distribute leg), alternating with
+/// short polls of the aggregator link so a reset, eviction, or shutdown
+/// is honored promptly. A dead predecessor is not fatal: its link is
+/// dropped and the wait continues on the main link only — the
+/// aggregator's failure detector will reset the exchange.
+fn ring_wait_link(
+    ring: &mut RingState,
+    rx: &mut dyn BlobRx,
+    pool: &BufPool,
+    step: u64,
+    want_cast: bool,
+) -> Result<LinkWait> {
+    loop {
+        let main_window =
+            if ring.inl.is_some() { Duration::from_millis(1) } else { Duration::from_millis(50) };
+        if let Some(frame) = rx.recv_blob_timeout(main_window)? {
+            match ring_main_event(frame, step, pool)? {
+                MainEvent::Ignore => {}
+                MainEvent::Abort => return Ok(LinkWait::Abort),
+                MainEvent::Die => return Ok(LinkWait::Die),
+                MainEvent::Shutdown => return Ok(LinkWait::Shutdown),
+                MainEvent::Castd { .. } => {
+                    anyhow::bail!("cast-down arrived while waiting on a ring peer blob")
+                }
+            }
+        }
+        let Some(inl) = ring.inl.as_mut() else { continue };
+        match inl.recv_blob_timeout(Duration::from_millis(50)) {
+            Ok(None) => {}
+            Ok(Some(blob)) => {
+                let (s, off, hops) = if want_cast {
+                    let (s, hops, off) = decode_ring_cast(&blob)?;
+                    (s, off, hops)
+                } else {
+                    let (s, off) = decode_ring_part(&blob)?;
+                    (s, off, 0)
+                };
+                if s < step {
+                    // A leftover blob from an aborted attempt.
+                    pool.give_back(blob);
+                    continue;
+                }
+                anyhow::ensure!(s == step, "ring blob for future step {s} during step {step}");
+                return Ok(LinkWait::Blob { blob, off, hops });
+            }
+            Err(_) => {
+                // Predecessor died mid-exchange; wait for the reset.
+                ring.drop_in();
+            }
+        }
+    }
+}
+
+/// After a dead successor swallowed a send: hold position until the
+/// aggregator resets the exchange (or evicts / shuts us down).
+fn ring_wait_abort(rx: &mut dyn BlobRx, pool: &BufPool, step: u64) -> Result<RingOutcome> {
+    loop {
+        if let Some(frame) = rx.recv_blob_timeout(Duration::from_millis(50))? {
+            match ring_main_event(frame, step, pool)? {
+                MainEvent::Ignore => {}
+                MainEvent::Abort => return Ok(RingOutcome::Aborted),
+                MainEvent::Die => return Ok(RingOutcome::Die),
+                MainEvent::Shutdown => return Ok(RingOutcome::Shutdown),
+                // The aggregator has not noticed the dead peer yet; the
+                // reset will follow. The blob inside was recycled by
+                // the event classifier only for stale steps, so recycle
+                // this one here.
+                MainEvent::Castd { blob, .. } => pool.give_back(blob),
+            }
+        }
+    }
+}
+
+/// Decode the final reduced gradient, scale it to the batch mean, and
+/// apply — exactly the serial trainer's op order (`sum → ×1/n →
+/// apply`), on the exact bytes every replica decodes. Idempotent per
+/// step (the recovery path may deliver the same cast twice); always
+/// acknowledged with a `RingReady` so the aggregator can hold the next
+/// batch until every replica has moved.
+fn ring_apply(
+    be: &mut NativeBackend,
+    codec: &GradCodec,
+    exec: &RingExec,
+    payload: &[u8],
+    last_applied: &mut u64,
+    tx: &SharedTx,
+    pool: &BufPool,
+) -> Result<()> {
+    if *last_applied < exec.step {
+        let mut acc = be.zeros_like_params();
+        codec
+            .decode_add(payload, &exec.union, &mut acc)
+            .context("decoding the ring-reduced gradient")?;
+        let scale = 1.0 / exec.n_micros as f32;
+        for t in acc.iter_mut() {
+            t.scale(scale);
+        }
+        be.apply_grads(&acc, exec.lr).context("applying the ring-reduced gradient")?;
+        *last_applied = exec.step;
+    }
+    let mut ack = pool.checkout();
+    encode_ring_ready(exec.step, &mut ack);
+    send_shared(tx, ack).context("acknowledging the ring apply")
+}
+
+/// Run one ring exchange end to end: reduce leg (receive partial, fold
+/// held micros, forward or finish), then distribute leg (cast per the
+/// assigned [`CastRole`]) and the local apply.
+#[allow(clippy::too_many_arguments)]
+fn ring_exec(
+    be: &mut NativeBackend,
+    codec: &GradCodec,
+    exec: &RingExec,
+    held: &Option<HeldStep>,
+    ef: &mut Option<Vec<Tensor>>,
+    ring: &mut RingState,
+    rx: &mut dyn BlobRx,
+    tx: &SharedTx,
+    pool: &BufPool,
+) -> Result<RingOutcome> {
+    let step = exec.step;
+    let union = &exec.union;
+    // --- Reduce leg: partial sum in chain order -----------------------
+    let mut acc = be.zeros_like_params();
+    if exec.has_in {
+        match ring_wait_link(ring, rx, pool, step, false)? {
+            LinkWait::Blob { blob, off, .. } => {
+                codec
+                    .decode_add(&blob[off..], union, &mut acc)
+                    .context("decoding the predecessor's partial sum")?;
+                pool.give_back(blob);
+            }
+            LinkWait::Abort => return Ok(RingOutcome::Aborted),
+            LinkWait::Die => return Ok(RingOutcome::Die),
+            LinkWait::Shutdown => return Ok(RingOutcome::Shutdown),
+        }
+    }
+    // Fold the held micros in ascending order through an encode→decode
+    // round trip: the accumulator sees the exact bits the star
+    // aggregator would have reduced (masked slices only, plus any
+    // precision/compression loss and error feedback).
+    if let Some((hstep, entries)) = held {
+        if *hstep == step {
+            let mut order: Vec<usize> = (0..entries.len()).collect();
+            order.sort_by_key(|&i| entries[i].0);
+            let mut tmp = pool.checkout();
+            for i in order {
+                let (micro, masks, grads) = &entries[i];
+                codec.encode_into_ef(
+                    *micro,
+                    masks,
+                    grads,
+                    ef.as_mut().map(|v| v.as_mut_slice()),
+                    &mut tmp,
+                );
+                codec
+                    .decode_add(&tmp, masks, &mut acc)
+                    .context("folding a held micro-gradient")?;
+            }
+            pool.give_back(tmp);
+        }
+    }
+    // Ship the updated partial (or hand the finished sum up).
+    let mut payload = pool.checkout();
+    codec.encode_into(0, union, &acc, &mut payload);
+    let delivered = if exec.is_last {
+        let mut frame = pool.checkout();
+        encode_ring_final_header(step, &mut frame);
+        frame.extend_from_slice(&payload);
+        send_shared(tx, frame).context("sending the ring final to the aggregator")?;
+        true
+    } else {
+        let mut frame = pool.checkout();
+        encode_ring_part_header(step, &mut frame);
+        frame.extend_from_slice(&payload);
+        ring.send_out(frame)
+    };
+    if !delivered {
+        pool.give_back(payload);
+        return ring_wait_abort(rx, pool, step);
+    }
+    // --- Distribute leg + apply ---------------------------------------
+    match exec.cast {
+        CastRole::Origin { hops } => {
+            if hops > 0 {
+                let mut frame = pool.checkout();
+                encode_ring_cast_header(step, hops, &mut frame);
+                frame.extend_from_slice(&payload);
+                if !ring.send_out(frame) {
+                    pool.give_back(payload);
+                    return ring_wait_abort(rx, pool, step);
+                }
+            }
+            ring_apply(be, codec, exec, &payload, &mut ring.last_applied, tx, pool)?;
+            pool.give_back(payload);
+        }
+        CastRole::Leader { hops } => {
+            pool.give_back(payload);
+            // The final bytes come straight from the aggregator.
+            loop {
+                let Some(frame) = rx.recv_blob_timeout(Duration::from_millis(50))? else {
+                    continue;
+                };
+                match ring_main_event(frame, step, pool)? {
+                    MainEvent::Ignore => {}
+                    MainEvent::Abort => return Ok(RingOutcome::Aborted),
+                    MainEvent::Die => return Ok(RingOutcome::Die),
+                    MainEvent::Shutdown => return Ok(RingOutcome::Shutdown),
+                    MainEvent::Castd { hops: _, blob, off } => {
+                        if hops > 0 {
+                            let mut fwd = pool.checkout();
+                            encode_ring_cast_header(step, hops, &mut fwd);
+                            fwd.extend_from_slice(&blob[off..]);
+                            if !ring.send_out(fwd) {
+                                pool.give_back(blob);
+                                return ring_wait_abort(rx, pool, step);
+                            }
+                        }
+                        ring_apply(
+                            be,
+                            codec,
+                            exec,
+                            &blob[off..],
+                            &mut ring.last_applied,
+                            tx,
+                            pool,
+                        )?;
+                        pool.give_back(blob);
+                        break;
+                    }
+                }
+            }
+        }
+        CastRole::Member => {
+            pool.give_back(payload);
+            match ring_wait_link(ring, rx, pool, step, true)? {
+                LinkWait::Blob { mut blob, off, hops } => {
+                    ring_apply(
+                        be,
+                        codec,
+                        exec,
+                        &blob[off..],
+                        &mut ring.last_applied,
+                        tx,
+                        pool,
+                    )?;
+                    if hops > 1 {
+                        // Decrement the hop count in place; the gradient
+                        // bytes travel on verbatim.
+                        blob[12..16].copy_from_slice(&(hops - 1).to_le_bytes());
+                        if !ring.send_out(blob) {
+                            return ring_wait_abort(rx, pool, step);
+                        }
+                    } else {
+                        pool.give_back(blob);
+                    }
+                }
+                LinkWait::Abort => return Ok(RingOutcome::Aborted),
+                LinkWait::Die => return Ok(RingOutcome::Die),
+                LinkWait::Shutdown => return Ok(RingOutcome::Shutdown),
+            }
+        }
+    }
+    Ok(RingOutcome::Done)
 }
 
 /// Scripted-fault progress: actions trigger on the gradient-send
@@ -154,12 +596,15 @@ fn sim_wire_delay(bytes: usize, ms_per_mib: f64) {
 
 /// Encode one computed gradient into a recycled buffer (Up header +
 /// codec payload as the frame tail), pay the optional simulated NIC
-/// outside the uplink lock, and upload it.
+/// outside the uplink lock, and upload it. `ef` is the worker's
+/// error-feedback residual state, threaded through every lossy encode
+/// so quantization error carries to the next step instead of vanishing.
 fn encode_and_send(
     codec: &GradCodec,
     pool: &BufPool,
     wire_ms_per_mib: f64,
     tx: &SharedTx,
+    ef: &mut Option<Vec<Tensor>>,
     c: Computed,
 ) -> Result<()> {
     let mut frame = pool.checkout();
@@ -173,7 +618,13 @@ fn encode_and_send(
         },
         &mut frame,
     );
-    codec.encode_append(c.micro, &c.masks, &c.grads, &mut frame);
+    codec.encode_append_ef(
+        c.micro,
+        &c.masks,
+        &c.grads,
+        ef.as_mut().map(|v| v.as_mut_slice()),
+        &mut frame,
+    );
     sim_wire_delay(frame.len() - UP_GRAD_OFF, wire_ms_per_mib);
     send_shared(tx, frame)
 }
@@ -185,12 +636,52 @@ fn handle_frame(
     be: &mut NativeBackend,
     codec: &GradCodec,
     init: &InitMsg,
-    pool: &BufPool,
+    pool: &Arc<BufPool>,
     sender_tx: &Option<mpsc::SyncSender<Computed>>,
     tx: &SharedTx,
     faults: &mut FaultState,
+    ring: &mut RingState,
+    held: &mut Option<HeldStep>,
+    ef: &mut Option<Vec<Tensor>>,
 ) -> Result<Flow> {
     match peek_tag(frame)? {
+        TAG_COMPUTE if init.ring => {
+            // Ring mode: compute, hold the gradients for the exchange,
+            // and report metrics only. The frame's job list REPLACES
+            // the held set for its step — reassignment after a stall or
+            // eviction resends whole blocks, so a micro can never be
+            // folded twice.
+            let (step, jobs) = decode_compute(frame)?;
+            let mut entries = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                let verdict = faults.on_grad_send();
+                if let SendVerdict::Die = verdict {
+                    return Ok(Flow::Die);
+                }
+                let t0 = Instant::now();
+                let (out, grads) = be
+                    .grad_step(&job.x, &job.y, &job.masks)
+                    .context("native grad step on worker")?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                if !matches!(verdict, SendVerdict::Drop) {
+                    let mut up = pool.checkout();
+                    encode_up_header(
+                        &UpHdr {
+                            micro: job.micro,
+                            loss: out.loss,
+                            n_correct: out.n_correct,
+                            ms,
+                            step,
+                        },
+                        &mut up,
+                    );
+                    send_shared(tx, up).context("sending metric-only Up")?;
+                }
+                entries.push((job.micro, job.masks, grads));
+            }
+            *held = Some((step, entries));
+            Ok(Flow::Continue)
+        }
         TAG_COMPUTE => {
             let (step, jobs) = decode_compute(frame)?;
             for job in jobs {
@@ -220,10 +711,75 @@ fn handle_frame(
                         .send(c)
                         .map_err(|_| anyhow::anyhow!("sender thread exited early"))?,
                     None => {
-                        encode_and_send(codec, pool, init.sim_wire_ms_per_mib, tx, c)?
+                        encode_and_send(codec, pool, init.sim_wire_ms_per_mib, tx, ef, c)?
                     }
                 }
             }
+            Ok(Flow::Continue)
+        }
+        TAG_RING_LISTEN => {
+            let (tcp, nonce) = decode_ring_listen(frame)?;
+            // A fresh negotiation tears down everything from the old
+            // topology first: stale links must not deliver stale blobs
+            // into the next exchange.
+            ring.drop_links();
+            let listener = RingListener::open(tcp).context("opening ring listener")?;
+            let mut reply = pool.checkout();
+            encode_ring_addr(nonce, &listener.addr(), &mut reply);
+            ring.listener = Some(listener);
+            send_shared(tx, reply).context("sending ring listener address")?;
+            Ok(Flow::Continue)
+        }
+        TAG_RING_PEERS => {
+            let (nonce, succ, accept) = decode_ring_peers(frame)?;
+            // Connect-then-accept is deadlock-free because the
+            // aggregator only sends Peers after every listener is up.
+            if !succ.is_empty() {
+                let link = ring_connect(&succ, Duration::from_secs(10), Arc::clone(pool))
+                    .context("dialing ring successor")?;
+                ring.out = Some(link);
+            }
+            if accept {
+                let listener = ring
+                    .listener
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("ring peers before a listener was opened"))?;
+                let link = listener
+                    .accept(Duration::from_secs(10), Arc::clone(pool))
+                    .context("accepting ring predecessor")?;
+                ring.inl = Some(link);
+            }
+            let mut reply = pool.checkout();
+            encode_ring_ready(nonce, &mut reply);
+            send_shared(tx, reply).context("confirming ring links")?;
+            Ok(Flow::Continue)
+        }
+        TAG_RING_EXEC => Ok(Flow::Ring(decode_ring_exec(frame)?)),
+        TAG_RING_RESET => {
+            // A reset outside an exchange: the aggregator is about to
+            // renegotiate — drop the old topology, keep the held
+            // gradients (a re-dispatch will replace them).
+            decode_ring_reset(frame)?;
+            ring.drop_links();
+            Ok(Flow::Continue)
+        }
+        TAG_RING_CASTD => {
+            // Recovery path: the exchange aborted mid-distribute, and
+            // the aggregator re-delivers the final bytes directly. The
+            // apply is idempotent, the ack unconditional.
+            let (step, _hops, off) = decode_ring_castd(frame)?;
+            let exec = ring
+                .last_exec
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("direct cast before any ring exchange"))?;
+            anyhow::ensure!(
+                exec.step == step,
+                "direct cast for step {step} but the last exchange was step {}",
+                exec.step
+            );
+            let mut last = ring.last_applied;
+            ring_apply(be, codec, &exec, &frame[off..], &mut last, tx, pool)?;
+            ring.last_applied = last;
             Ok(Flow::Continue)
         }
         TAG_APPLY => {
@@ -286,7 +842,9 @@ pub fn run_worker_with_faults(
     let init = decode_init(&frame)?;
     pool.give_back(frame);
     let be = NativeBackend::new(&init.spec, init.lora_rank, init.spec.micro_batch, init.seed);
-    let codec = Arc::new(GradCodec::new(&be).with_precision(init.precision));
+    let codec = Arc::new(
+        GradCodec::new(&be).with_precision(init.precision).with_compression(init.compress),
+    );
     // Replica built: release the aggregator's handshake.
     link.barrier().context("worker handshake barrier")?;
     let (tx, rx) = link.split();
@@ -305,6 +863,13 @@ fn serve(
 ) -> Result<()> {
     let tx: SharedTx = Arc::new(Mutex::new(tx));
     let mut faults = FaultState::new(plan);
+    let mut ring = RingState::new();
+    let mut held: Option<HeldStep> = None;
+    // Error-feedback residuals exist once per worker for lossy wires;
+    // with the overlap sender thread they live (and mutate) there.
+    let mut ef: Option<Vec<Tensor>> =
+        if codec.compression().is_lossy() { Some(be.zeros_like_params()) } else { None };
+    let use_sender = init.overlap && !init.ring;
 
     // Heartbeat thread: pings every `heartbeat_ms` until stopped (or
     // the uplink dies — then the aggregator already knows more than a
@@ -346,18 +911,20 @@ fn serve(
     };
 
     // With overlap a dedicated sender thread drains the one-slot queue;
-    // it shares the uplink with the heartbeat via the mutex.
-    let (sender_tx, sender_handle) = if init.overlap {
+    // it shares the uplink with the heartbeat via the mutex. Ring mode
+    // never uploads gradients, so there is nothing to pipeline.
+    let (sender_tx, sender_handle) = if use_sender {
         let (stx, srx) = mpsc::sync_channel::<Computed>(1);
         let codec = Arc::clone(&codec);
         let pool = Arc::clone(&pool);
         let tx = Arc::clone(&tx);
         let wire_ms = init.sim_wire_ms_per_mib;
+        let mut ef = ef.take();
         let handle = thread::Builder::new()
             .name(format!("d2ft-dist-{}-tx", init.worker))
             .spawn(move || {
                 while let Ok(c) = srx.recv() {
-                    if encode_and_send(&codec, &pool, wire_ms, &tx, c).is_err() {
+                    if encode_and_send(&codec, &pool, wire_ms, &tx, &mut ef, c).is_err() {
                         // Aggregator gone: stop draining; the compute
                         // thread will notice on its own half.
                         break;
@@ -380,7 +947,19 @@ fn serve(
                 break;
             }
         };
-        let flow = handle_frame(&frame, &mut be, &codec, init, &pool, &sender_tx, &tx, &mut faults);
+        let flow = handle_frame(
+            &frame,
+            &mut be,
+            &codec,
+            init,
+            &pool,
+            &sender_tx,
+            &tx,
+            &mut faults,
+            &mut ring,
+            &mut held,
+            &mut ef,
+        );
         pool.give_back(frame);
         match flow {
             Ok(Flow::Continue) => continue,
@@ -388,6 +967,33 @@ fn serve(
             Ok(Flow::Die) => {
                 dying = true;
                 break;
+            }
+            Ok(Flow::Ring(exec)) => {
+                // Cache the orders first: the recovery cast path needs
+                // them even if this exchange aborts.
+                ring.last_exec = Some(exec.clone());
+                match ring_exec(
+                    &mut be,
+                    &codec,
+                    &exec,
+                    &held,
+                    &mut ef,
+                    &mut ring,
+                    rx.as_mut(),
+                    &tx,
+                    &pool,
+                ) {
+                    Ok(RingOutcome::Done) | Ok(RingOutcome::Aborted) => continue,
+                    Ok(RingOutcome::Shutdown) => break,
+                    Ok(RingOutcome::Die) => {
+                        dying = true;
+                        break;
+                    }
+                    Err(e) => {
+                        result = Err(e.context("running ring exchange"));
+                        break;
+                    }
+                }
             }
             Err(e) => {
                 result = Err(e);
@@ -408,13 +1014,23 @@ fn serve(
     if let Some(h) = hb_handle {
         h.join().expect("joining dist heartbeat thread");
     }
+    // Fold any live ring links into the byte counters before reporting.
+    ring.drop_links();
     if dying {
         // Abrupt exit: no Bye — dropping the uplink is the message.
         return Ok(());
     }
     if result.is_ok() {
         let mut bye = pool.checkout();
-        encode_bye(pool.fresh_allocs(), pool.reuses(), &mut bye);
+        encode_bye(
+            &ByeMsg {
+                fresh: pool.fresh_allocs(),
+                reused: pool.reuses(),
+                ring_sent: ring.sent,
+                ring_recv: ring.recv,
+            },
+            &mut bye,
+        );
         result = send_shared(&tx, bye).context("sending Bye");
     }
     result

@@ -66,7 +66,23 @@ fn cli() -> Cli {
             "0",
             "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas)",
         )
-        .flag("exchange", "allreduce", "dist gradient exchange: allreduce | ps (parameter server)")
+        .flag(
+            "exchange",
+            "allreduce",
+            "dist gradient exchange: allreduce | ps (parameter server) | ring | hier \
+             (two-level ring through group leaders)",
+        )
+        .flag(
+            "compress",
+            "none",
+            "dist gradient wire compression: none | int8 | int4 (quantized, error feedback) | \
+             topk[:PCT] (top-k sparsification)",
+        )
+        .flag(
+            "ring-group",
+            "0",
+            "hier exchange: workers per group (0 = ceil(sqrt(K)))",
+        )
         .flag(
             "threads",
             "1",
@@ -343,6 +359,8 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         transport,
         overlap: !args.get_bool("no-overlap"),
         wire_precision: d2ft::dist::WirePrecision::parse(args.get("wire"))?,
+        compress: d2ft::dist::WireCompression::parse(args.get("compress"))?,
+        ring_group: args.get_usize("ring-group")?,
         calibrate: !args.get_bool("no-calibrate"),
         heartbeat_ms: args.get_u64("heartbeat-ms")?,
         liveness_misses: args.get_usize("liveness-misses")? as u32,
@@ -362,7 +380,10 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     let t = &r.train;
     println!("backend              {} (dist)", t.backend);
     println!("scheduler            {}", t.scheduler);
-    println!("workers              {} ({}, {} transport)", r.n_workers, r.exchange, r.transport);
+    println!(
+        "workers              {} ({}, {} transport, {} wire)",
+        r.n_workers, r.exchange, r.transport, r.compress
+    );
     println!("batches              {}", t.batches);
     println!("final train loss     {:.4}", t.final_train_loss);
     println!("test top-1           {}", pct(t.test_top1));
@@ -376,6 +397,13 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         pct(r.grad_savings)
     );
     println!("bytes downlink       {}", fmt_bytes(r.wire.down_bytes));
+    let ring_total: u64 = r.ring_bytes.iter().map(|&(tx, rx)| tx + rx).sum();
+    if ring_total > 0 {
+        println!(
+            "bytes ring links     {} (worker<->worker, off the aggregator)",
+            fmt_bytes(ring_total)
+        );
+    }
     println!("bytes modeled        {}", fmt_bytes(r.modeled_wire_bytes));
     println!(
         "bytes transport      {} out / {} in over {} frames (whole frames incl. control)",
@@ -435,8 +463,21 @@ fn dist_report_json(r: &d2ft::dist::DistReport) -> String {
             ])
         })
         .collect();
+    let socket_classes = r
+        .socket
+        .classes()
+        .map(|(name, sent, recv)| {
+            obj(vec![("class", s(name)), ("sent", num(sent as f64)), ("recv", num(recv as f64))])
+        })
+        .collect();
+    let ring_bytes = r
+        .ring_bytes
+        .iter()
+        .map(|&(sent, recv)| obj(vec![("sent", num(sent as f64)), ("recv", num(recv as f64))]))
+        .collect();
     obj(vec![
-        ("schema", s("d2ft-dist-report-v1")),
+        ("schema", s("d2ft-dist-report-v2")),
+        ("compress", s(&r.compress)),
         ("workers", num(r.n_workers as f64)),
         ("live_workers", num(r.live_workers as f64)),
         ("transport", s(&r.transport)),
@@ -452,6 +493,10 @@ fn dist_report_json(r: &d2ft::dist::DistReport) -> String {
         ("checkpoints_written", num(r.checkpoints_written as f64)),
         ("grad_bytes_up", num(r.wire.up_bytes as f64)),
         ("grad_bytes_down", num(r.wire.down_bytes as f64)),
+        ("socket_bytes_sent", num(r.socket.bytes_sent as f64)),
+        ("socket_bytes_recv", num(r.socket.bytes_recv as f64)),
+        ("socket_classes", arr(socket_classes)),
+        ("ring_bytes", arr(ring_bytes)),
         ("membership", arr(membership)),
     ])
     .to_string_pretty()

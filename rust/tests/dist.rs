@@ -3,8 +3,9 @@
 //! 1. **Determinism** — `DistTrainer` with K ∈ {1, 2, 4} live worker
 //!    replicas produces *bitwise* the same loss trajectory, eval
 //!    accuracy, and final parameters as the serial
-//!    `coordinator::Trainer` under `UpdateMode::BatchAccum`, in both
-//!    exchange topologies. Real threads, real gradient bytes, zero
+//!    `coordinator::Trainer` under `UpdateMode::BatchAccum`, in all
+//!    four exchange topologies (star allreduce, parameter server, ring,
+//!    hierarchical ring). Real threads, real gradient bytes, zero
 //!    numeric divergence — with the comm/compute pipeline **on** (the
 //!    default) and the parallel matmul kernels engaged (the spec below
 //!    sets `threads: 2`), as well as on the serialized `--no-overlap`
@@ -128,6 +129,53 @@ fn param_server_matches_allreduce_bitwise() {
     // PS ships dense deltas downlink; masked allreduce ships the union
     // mask, which can never be larger.
     assert!(ra.wire.down_bytes <= rp.wire.down_bytes);
+}
+
+#[test]
+fn ring_and_hierarchical_match_serial_bitwise() {
+    // The chain fold adds the same values in the same ascending
+    // micro-batch order as the ordered star reduce, and every replica
+    // (aggregator included) applies the exact final bytes that crossed
+    // the wire — so both collective topologies must stay bitwise
+    // serial, including with more workers than micro-batches (workers
+    // holding empty blocks still join the chain).
+    let provider = NativeProvider::new(small_spec());
+    let mut serial = Trainer::new(&provider, cfg(SchedulerKind::D2ft)).unwrap();
+    let rs = serial.run().unwrap();
+    let serial_w = serial.backend().param("b00_wqkv").unwrap();
+    let serial_head = serial.backend().param("z_head_w").unwrap();
+    for exchange in [ExchangeMode::Ring, ExchangeMode::Hierarchical] {
+        for k in [1usize, 2, 4, 7] {
+            let dcfg = DistConfig { exchange, ..DistConfig::new(cfg(SchedulerKind::D2ft), k) };
+            let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
+            let rd = dt.run().unwrap();
+            assert_eq!(
+                bits(&rs.loss_curve),
+                bits(&rd.train.loss_curve),
+                "{exchange:?} K={k}: loss trajectory must stay bitwise serial"
+            );
+            assert_eq!(
+                rs.test_top1.to_bits(),
+                rd.train.test_top1.to_bits(),
+                "{exchange:?} K={k}: eval accuracy"
+            );
+            assert_eq!(
+                serial_w,
+                dt.backend().param("b00_wqkv").unwrap(),
+                "{exchange:?} K={k}: body weights"
+            );
+            assert_eq!(
+                serial_head,
+                dt.backend().param("z_head_w").unwrap(),
+                "{exchange:?} K={k}: classifier"
+            );
+            if k > 1 {
+                // The partials really rode worker<->worker links.
+                let moved: u64 = rd.ring_bytes.iter().map(|&(tx, rx)| tx + rx).sum();
+                assert!(moved > 0, "{exchange:?} K={k}: ring links carried no bytes");
+            }
+        }
+    }
 }
 
 #[test]

@@ -16,8 +16,11 @@
 //!
 //! Scenarios run over in-process channels and real loopback TCP (the
 //! K ∈ {2, 4} × {channel, tcp} matrix), plus one genuine SIGKILL of a
-//! forked `repro dist-worker` subprocess. Every run is guarded by an
-//! outer timeout — no fault may hang the aggregator.
+//! forked `repro dist-worker` subprocess. The kill and stall scenarios
+//! repeat under the ring/hierarchical exchanges, where recovery
+//! additionally tears down and renegotiates the worker↔worker chain.
+//! Every run is guarded by an outer timeout — no fault may hang the
+//! aggregator.
 #![cfg(feature = "native")]
 
 use std::process::Command;
@@ -29,7 +32,8 @@ use d2ft::backend::native::{NativeProvider, NativeSpec};
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
 use d2ft::data::SyntheticKind;
 use d2ft::dist::{
-    Checkpoint, DistConfig, DistReport, DistTrainer, FaultPlan, SpawnMode, TransportKind,
+    Checkpoint, DistConfig, DistReport, DistTrainer, ExchangeMode, FaultPlan, SpawnMode,
+    TransportKind,
 };
 use d2ft::runtime::ModelConfig;
 use d2ft::schedule::Budget;
@@ -174,6 +178,77 @@ fn kill_mid_epoch_completes_bitwise_on_survivors() {
             assert_eq!(sw, w, "{tag}: body weights bitwise vs serial");
             assert_eq!(sh, h, "{tag}: classifier bitwise vs serial");
         }
+    }
+}
+
+#[test]
+fn ring_kill_mid_epoch_reforms_the_chain_on_survivors() {
+    // The collective exchanges must survive the same faults as the
+    // star. A worker dying mid-batch surfaces at the metric barrier
+    // before any Exec is issued; the attempt restarts on survivors,
+    // the chain is renegotiated (fresh nonce, fresh links), and
+    // nothing the dead worker partially folded can leak into the
+    // update — bitwise vs the fault-free serial reference.
+    let (curve, sw, sh) = serial_reference(fault_cfg(4));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        for (exchange, k) in [
+            (ExchangeMode::Ring, 2usize),
+            (ExchangeMode::Ring, 4),
+            (ExchangeMode::Hierarchical, 4),
+        ] {
+            let dcfg = DistConfig {
+                transport: transport.clone(),
+                exchange,
+                faults: vec![(0, FaultPlan::parse("kill-after-micro=2").unwrap())],
+                ..chaos(fault_cfg(4), k)
+            };
+            let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+            let tag = format!("{} {} K={k}", r.exchange, r.transport);
+            assert_eq!(r.evictions, 1, "{tag}: the killed worker must be evicted");
+            assert_eq!(r.joins, 0, "{tag}");
+            assert_eq!(r.live_workers, k - 1, "{tag}: survivors finish the run");
+            assert!(
+                r.reassigned_micros > 0,
+                "{tag}: the lost worker's block must re-run on survivors"
+            );
+            assert_eq!(r.membership.len(), 1, "{tag}");
+            assert_eq!(r.membership[0].kind, "evict", "{tag}");
+            assert_eq!(
+                bits(&curve),
+                bits(&r.train.loss_curve),
+                "{tag}: chain recovery must not change a single bit of the trajectory"
+            );
+            assert_eq!(sw, w, "{tag}: body weights bitwise vs serial");
+            assert_eq!(sh, h, "{tag}: classifier bitwise vs serial");
+        }
+    }
+}
+
+#[test]
+fn ring_stall_past_the_window_reassigns_via_eviction() {
+    // In the star exchange a stalled micro-batch is duplicated without
+    // eviction; a ring attempt cannot carry a silent member (the chain
+    // fold would wait on its partial forever), so the stall window
+    // evicts it, the attempt restarts on the survivor, and the
+    // trajectory still cannot move by a bit.
+    let (curve, sw, sh) = serial_reference(fault_cfg(2));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        let dcfg = DistConfig {
+            transport,
+            exchange: ExchangeMode::Ring,
+            faults: vec![(1, FaultPlan::parse("stall-ms=1500@1").unwrap())],
+            ..chaos(fault_cfg(2), 2)
+        };
+        let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+        let tag = format!("ring {}", r.transport);
+        assert_eq!(r.evictions, 1, "{tag}: a silent chain member must be evicted");
+        assert_eq!(r.live_workers, 1, "{tag}: the survivor finishes the run");
+        assert!(r.reassigned_micros > 0, "{tag}: its block must re-run on the survivor");
+        assert_eq!(r.membership.len(), 1, "{tag}");
+        assert_eq!(r.membership[0].kind, "evict", "{tag}");
+        assert_eq!(bits(&curve), bits(&r.train.loss_curve), "{tag}: bitwise vs serial");
+        assert_eq!(sw, w, "{tag}: body weights");
+        assert_eq!(sh, h, "{tag}: classifier");
     }
 }
 

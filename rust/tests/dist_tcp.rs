@@ -11,7 +11,8 @@
 //! 2. **Failure modes** — a worker that drops its connection mid-epoch
 //!    is evicted and its work re-runs on the survivor (bitwise equal to
 //!    the serial reference, never a hung barrier); a malformed uplink
-//!    frame, a garbled Join, or a protocol-version mismatch is rejected
+//!    frame, a gradient tail whose compression flags disagree with the
+//!    codec, a garbled Join, or a protocol-version mismatch is rejected
 //!    with a descriptive error rather than a panic or a misparse.
 //!
 //! Hermetic: native backend only, loopback sockets only.
@@ -27,7 +28,7 @@ use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
 use d2ft::data::SyntheticKind;
 use d2ft::dist::{
     run_worker, BlobRx, BlobTx, BufPool, DistConfig, DistReport, DistTrainer, SpawnMode,
-    TcpTransport, Transport, TransportKind, WirePrecision,
+    TcpTransport, Transport, TransportKind, WireCompression, WirePrecision,
 };
 use d2ft::runtime::ModelConfig;
 use d2ft::schedule::Budget;
@@ -198,12 +199,17 @@ fn free_addr() -> String {
 /// Launch a trainer over external-worker TCP in a thread, reporting
 /// its run() result through a channel (so a hang fails the test by
 /// timeout instead of blocking forever).
-fn spawn_trainer(addr: String, workers: usize) -> mpsc::Receiver<anyhow::Result<DistReport>> {
+fn spawn_trainer(
+    addr: String,
+    workers: usize,
+    compress: WireCompression,
+) -> mpsc::Receiver<anyhow::Result<DistReport>> {
     let (tx, rx) = mpsc::channel();
     thread::spawn(move || {
         let provider = NativeProvider::new(small_spec());
         let dcfg = DistConfig {
             transport: TransportKind::Tcp { listen: addr, spawn: SpawnMode::External },
+            compress,
             ..DistConfig::new(cfg(), workers)
         };
         let result = DistTrainer::new(&provider, dcfg).and_then(|mut dt| dt.run());
@@ -231,7 +237,7 @@ fn worker_disconnect_mid_epoch_recovers_on_the_survivor() {
     let mut serial = Trainer::new(&provider, cfg()).unwrap();
     let rs = serial.run().unwrap();
     let addr = free_addr();
-    let result_rx = spawn_trainer(addr.clone(), 2);
+    let result_rx = spawn_trainer(addr.clone(), 2, WireCompression::None);
     // One honest worker: the real run_worker loop over a real socket.
     // It must finish cleanly — its sibling's death is not its problem.
     let honest_addr = addr.clone();
@@ -271,7 +277,7 @@ fn worker_disconnect_mid_epoch_recovers_on_the_survivor() {
 #[test]
 fn malformed_uplink_frame_is_rejected_descriptively() {
     let addr = free_addr();
-    let result_rx = spawn_trainer(addr.clone(), 1);
+    let result_rx = spawn_trainer(addr.clone(), 1, WireCompression::None);
     // The lone worker completes the handshake, then answers its first
     // compute job with garbage instead of a gradient frame.
     {
@@ -295,9 +301,54 @@ fn malformed_uplink_frame_is_rejected_descriptively() {
 }
 
 #[test]
+fn mismatched_compression_flags_are_rejected_descriptively() {
+    // The aggregator runs an int8 wire; the worker answers every
+    // dispatched micro-batch with a well-formed Up header whose
+    // gradient tail claims the f32/none format (right magic, wrong
+    // flags). The codec must refuse the format mismatch descriptively
+    // instead of misparsing the payload as quantized slices.
+    let addr = free_addr();
+    let result_rx = spawn_trainer(addr.clone(), 1, WireCompression::Int8);
+    {
+        let mut t = connect_and_join(&addr);
+        let _init = t.recv_blob().expect("init frame");
+        t.barrier().expect("handshake barrier");
+        let job = t.recv_blob().expect("first compute frame");
+        let (step, jobs) = d2ft::dist::proto::decode_compute(&job).expect("compute frame");
+        assert!(!jobs.is_empty(), "the lone worker must own every micro-batch");
+        // Answer every micro so the batch barrier completes and the
+        // ordered reduce actually decodes the tails.
+        for j in &jobs {
+            let hdr = d2ft::dist::proto::UpHdr {
+                micro: j.micro,
+                loss: 1.0,
+                n_correct: 0.0,
+                ms: 1.0,
+                step,
+            };
+            let mut up = Vec::new();
+            d2ft::dist::proto::encode_up_header(&hdr, &mut up);
+            up.extend_from_slice(&0x4432_4647u32.to_le_bytes()); // gradient magic
+            up.extend_from_slice(&0u32.to_le_bytes()); // flags: f32/none, codec is int8
+            up.extend_from_slice(&[0u8; 20]); // micro + fingerprint + elem count
+            t.send_blob(up).expect("sending mismatched gradient frame");
+        }
+        thread::sleep(Duration::from_millis(200));
+    }
+    let result = result_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("trainer must reject the frame, not hang");
+    let err = format!("{:#}", result.expect_err("run must fail"));
+    assert!(
+        err.contains("wire format mismatch"),
+        "error must identify the compression mismatch, got: {err}"
+    );
+}
+
+#[test]
 fn malformed_join_is_rejected_at_the_handshake() {
     let addr = free_addr();
-    let result_rx = spawn_trainer(addr.clone(), 1);
+    let result_rx = spawn_trainer(addr.clone(), 1, WireCompression::None);
     // The connecting link opens with garbage instead of a Join frame.
     {
         let pool = Arc::new(BufPool::new());
@@ -319,7 +370,7 @@ fn malformed_join_is_rejected_at_the_handshake() {
 #[test]
 fn protocol_version_mismatch_is_rejected_descriptively() {
     let addr = free_addr();
-    let result_rx = spawn_trainer(addr.clone(), 1);
+    let result_rx = spawn_trainer(addr.clone(), 1, WireCompression::None);
     // A well-formed Join from the future: right frame, wrong version.
     {
         let pool = Arc::new(BufPool::new());
