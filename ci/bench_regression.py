@@ -18,7 +18,9 @@ gate compares host-normalized and scale-free metrics:
   deterministic given the seeds, so absolute slack);
 * ``compression.int8_ratio`` / ``compression.topk10_ratio`` /
   ``compression.ring_int8_chain_ratio`` — measured byte reduction of the
-  compressed wire modes vs f32 (deterministic, absolute slack).
+  compressed wire modes vs f32 (deterministic, absolute slack);
+* ``tracing.overhead_ratio`` — traced/untraced mean step time (the bench
+  itself hard-asserts <= 1.05; the gate keeps a refreshed baseline honest).
 
 A baseline carrying ``"provisional": true`` (committed before any trusted CI
 run existed) reports violations as warnings and exits 0. The committed
@@ -45,6 +47,7 @@ CHECKS = [
     ("compression.int8_ratio", "higher", "absolute:0.10"),
     ("compression.topk10_ratio", "higher", "absolute:0.25"),
     ("compression.ring_int8_chain_ratio", "higher", "absolute:0.25"),
+    ("tracing.overhead_ratio", "lower", "absolute:0.03"),
 ]
 
 

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Validate a ``--trace-out`` artifact from a live dist run.
+
+The merged Chrome trace-event JSON is a CI-gated contract: CI runs a real
+K-worker TCP ring with ``--trace-out`` and this script asserts the artifact
+a human would drop into Perfetto actually carries the full step timeline:
+
+* well-formed JSON with a non-empty ``traceEvents`` array and a numeric
+  ``truncatedEvents`` counter;
+* one named lane (a ``process_name`` metadata event) per process: the
+  aggregator (pid 0) plus at least ``--workers`` worker lanes;
+* worker lanes carry real work: ``compute`` spans recorded on the worker
+  side of the transport, not just aggregator bookkeeping;
+* every required category present (``--require-cats``, comma-separated;
+  the default covers any topology — ring runs add ``ring``, star runs
+  add ``agg``/``codec``);
+* complete-span events (``ph == "X"``) have a numeric ``dur >= 0``;
+* non-metadata timestamps are monotone non-decreasing — the cross-process
+  clock normalization and merge sort actually happened.
+
+Usage:
+
+    python3 ci/trace_check.py trace.json --workers 4 \
+        [--require-cats compute,step,ring,net]
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"trace_check: FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="merged Chrome trace-event JSON (--trace-out)")
+    ap.add_argument("--workers", type=int, required=True,
+                    help="worker count K of the traced run (expects K+1 lanes)")
+    ap.add_argument("--require-cats", default="compute,step,net",
+                    help="comma-separated categories that must appear")
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return fail("traceEvents missing or empty")
+    truncated = doc.get("truncatedEvents")
+    if not isinstance(truncated, (int, float)):
+        return fail("truncatedEvents counter missing")
+
+    lanes = set()
+    named_lanes = set()
+    compute_lanes = set()
+    cats = set()
+    spans = 0
+    last_ts = float("-inf")
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        pid = e.get("pid")
+        if not isinstance(pid, int):
+            return fail(f"event {i}: non-integer pid {pid!r}")
+        lanes.add(pid)
+        if ph == "M":
+            if e.get("name") == "process_name":
+                named_lanes.add(pid)
+            continue
+        cat = e.get("cat")
+        if not cat:
+            return fail(f"event {i}: missing category")
+        cats.add(cat)
+        if cat == "compute":
+            compute_lanes.add(pid)
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            return fail(f"event {i}: non-numeric ts {ts!r}")
+        if ts < last_ts:
+            return fail(f"event {i}: ts {ts} < previous {last_ts} — merge not sorted")
+        last_ts = ts
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                return fail(f"event {i}: span with bad dur {dur!r}")
+            spans += 1
+
+    want_lanes = args.workers + 1
+    if len(lanes) < want_lanes:
+        return fail(f"expected >= {want_lanes} lanes (aggregator + {args.workers} "
+                    f"workers), saw pids {sorted(lanes)}")
+    if 0 not in lanes:
+        return fail("aggregator lane (pid 0) missing")
+    unnamed = lanes - named_lanes
+    if unnamed:
+        return fail(f"lanes without process_name metadata: {sorted(unnamed)}")
+    worker_compute = compute_lanes - {0}
+    if len(worker_compute) < args.workers:
+        return fail(f"expected compute spans on {args.workers} worker lanes, "
+                    f"saw them on {sorted(worker_compute)}")
+    if spans == 0:
+        return fail("no complete spans (ph X) recorded")
+    missing = [c for c in args.require_cats.split(",") if c and c not in cats]
+    if missing:
+        return fail(f"missing categories {missing} (saw {sorted(cats)})")
+
+    print(f"trace_check: OK: {len(events)} events, {spans} spans, "
+          f"{len(lanes)} lanes {sorted(lanes)}, categories {sorted(cats)}, "
+          f"{int(truncated)} truncated")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

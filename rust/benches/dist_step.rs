@@ -486,6 +486,49 @@ fn main() {
         calib.encode_buf_reused
     );
 
+    // --- tracing overhead: armed recorder vs disarmed ----------------------
+    // The step tracer must be cheap enough to leave on: every span is
+    // two `Instant` reads and one ring-buffer slot, and a disarmed site
+    // is a single relaxed atomic load. Best-of-3 mean step time, traced
+    // vs untraced, on the same 50%-budget K=4 run; the gate is <= 5%.
+    let trace_path =
+        std::env::temp_dir().join(format!("d2ft_bench_trace_{}.json", std::process::id()));
+    let run_traced = |trace: bool, trace_path: &std::path::Path| -> f64 {
+        (0..3)
+            .map(|_| {
+                let dcfg = DistConfig {
+                    trace_out: trace.then(|| trace_path.to_path_buf()),
+                    ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+                };
+                DistTrainer::new(&provider, dcfg)
+                    .expect("building tracing-bench trainer")
+                    .run()
+                    .expect("tracing-bench run")
+                    .mean_step_ms
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let untraced_ms = run_traced(false, &trace_path);
+    let traced_ms = run_traced(true, &trace_path);
+    let trace_overhead = traced_ms / untraced_ms;
+    println!(
+        "tracing overhead: untraced {untraced_ms:.3}ms/step vs traced {traced_ms:.3}ms/step \
+         ({:.1}%)",
+        (trace_overhead - 1.0) * 100.0
+    );
+    let trace_text = std::fs::read_to_string(&trace_path).expect("reading bench trace artifact");
+    assert!(
+        trace_text.contains("traceEvents"),
+        "the traced bench run must write a Chrome trace artifact"
+    );
+    std::fs::remove_file(&trace_path).ok();
+    assert!(
+        trace_overhead <= 1.05,
+        "armed tracing must cost <= 5% of step time, got {:.1}% \
+         (untraced {untraced_ms:.3}ms, traced {traced_ms:.3}ms)",
+        (trace_overhead - 1.0) * 100.0
+    );
+
     let wire = |r: &DistReport| {
         obj(vec![
             ("up_bytes", num(r.wire.up_bytes as f64)),
@@ -568,6 +611,14 @@ fn main() {
                 ("makespan_drift", num(calib.train.makespan_drift)),
                 ("encode_buf_fresh", num(calib.encode_buf_fresh as f64)),
                 ("encode_buf_reused", num(calib.encode_buf_reused as f64)),
+            ]),
+        ),
+        (
+            "tracing",
+            obj(vec![
+                ("untraced_mean_step_ms", num(untraced_ms)),
+                ("traced_mean_step_ms", num(traced_ms)),
+                ("overhead_ratio", num(trace_overhead)),
             ]),
         ),
         ("overlap_threads_sweep", arr(sweep)),

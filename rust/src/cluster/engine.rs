@@ -330,6 +330,7 @@ impl Engine {
             table.n_subnets, self.n_devices,
             "schedule table rows != engine devices"
         );
+        let _sp = crate::obs::trace::span("model", "engine_execute");
         let t0 = Instant::now();
         let mut reports: Vec<DeviceReport> = Vec::with_capacity(self.n_devices);
         if self.txs.is_empty() {

@@ -132,6 +132,7 @@ impl OrderedReducer {
     ) -> Result<()> {
         anyhow::ensure!(self.is_complete(), "reduce before barrier completion");
         anyhow::ensure!(masks.len() == self.slots.len(), "one mask pair per micro");
+        let _sp = crate::obs::trace::span("reduce", "ordered_reduce");
         for (i, slot) in self.slots.iter().enumerate() {
             let (frame, off) = slot.as_ref().unwrap();
             let micro = codec.decode_add(&frame[*off..], &masks[i], acc)?;

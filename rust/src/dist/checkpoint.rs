@@ -181,6 +181,7 @@ impl Checkpoint {
     /// Write the checkpoint to `path` atomically enough for a crash
     /// between epochs: encode fully in memory, then one `write`.
     pub fn save(&self, path: &Path) -> Result<()> {
+        let _sp = crate::obs::trace::span("ckpt", "save");
         std::fs::write(path, self.encode())
             .with_context(|| format!("writing checkpoint {}", path.display()))
     }

@@ -710,6 +710,7 @@ impl GradCodec {
         if let Some(r) = ef.as_deref() {
             assert_eq!(r.len(), self.params.len(), "residual tensor count");
         }
+        let _sp = crate::obs::trace::span("codec", "encode");
         let act = self.active(masks);
         let n_elems = self.payload_elems_with(&act);
         out.reserve(HEADER_BYTES + self.payload_bytes_with(&act).unwrap_or(0));
@@ -860,6 +861,7 @@ impl GradCodec {
     ) -> Result<usize> {
         anyhow::ensure!(acc.len() == self.params.len(), "accumulator count");
         anyhow::ensure!(bytes.len() >= HEADER_BYTES, "message shorter than header");
+        let _sp = crate::obs::trace::span("codec", "decode_add");
         let word = |lo: usize| -> [u8; 4] { bytes[lo..lo + 4].try_into().unwrap() };
         let magic = u32::from_le_bytes(word(0));
         anyhow::ensure!(magic == MAGIC_GRAD, "bad gradient-message magic {magic:#x}");

@@ -79,6 +79,15 @@
 //!   deterministically in-process or over TCP; epoch-boundary
 //!   [`checkpoint::Checkpoint`]s make a killed run resumable bitwise
 //!   (`tests/dist_fault.rs`).
+//!
+//! The runtime is instrumented end to end with [`crate::obs`]:
+//! `DistConfig::trace_out` arms the cross-process step tracer (worker
+//! buffers ship home in `TAG_TRACE` frames and merge into one
+//! Perfetto-loadable timeline), and `DistConfig::metrics` publishes the
+//! wire/socket/membership counters and the step-latency histogram into
+//! a live [`crate::obs::Registry`]. Both are observation-only: every
+//! bitwise determinism contract above holds with them on or off
+//! (`tests/obs.rs`).
 
 pub mod allreduce;
 pub mod checkpoint;

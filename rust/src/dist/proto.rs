@@ -88,11 +88,19 @@ pub const TAG_RING_PART: u32 = 0x4451;
 /// (apply locally, forward while `hops > 0`).
 pub const TAG_RING_CAST: u32 = 0x4452;
 
+/// Worker → aggregator: a drained trace-event batch (sent at epoch
+/// boundaries when the run traces; see [`crate::obs::trace`]). Purely
+/// observational — the aggregator tolerates its absence, so a v3
+/// worker that never sends one still interoperates.
+pub const TAG_TRACE: u32 = 0x4461;
+
 /// Control-protocol version carried in [`TAG_JOIN`]; the aggregator
 /// rejects a mismatched worker descriptively instead of misparsing
 /// its frames. v3 added the ring-collective frames, the compressed
-/// wire, and the ring/compress fields of [`InitMsg`].
-pub const PROTO_VERSION: u32 = 3;
+/// wire, and the ring/compress fields of [`InitMsg`]; v4 added the
+/// [`TAG_TRACE`] frame and the trace/clock-anchor fields of
+/// [`InitMsg`].
+pub const PROTO_VERSION: u32 = 4;
 
 /// Byte offset of the embedded gradient blob in a [`TAG_UP`] frame:
 /// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8) + step (8).
@@ -300,6 +308,14 @@ pub struct InitMsg {
     /// Heartbeat interval the worker must ping at (milliseconds);
     /// 0 disables the heartbeat thread entirely.
     pub heartbeat_ms: u64,
+    /// Arm the worker's trace recorder and ship drained batches back
+    /// in [`TAG_TRACE`] frames at epoch boundaries.
+    pub trace: bool,
+    /// The aggregator's trace clock at Init-encode time (µs since its
+    /// trace epoch). The worker records its own clock at decode time;
+    /// the difference is the offset that maps worker timestamps onto
+    /// the aggregator timeline in the merged trace.
+    pub clock_anchor_us: u64,
 }
 
 /// One unit of worker compute: run micro-batch `micro` under `masks`.
@@ -366,6 +382,8 @@ pub fn encode_init(msg: &InitMsg, out: &mut Vec<u8>) {
     out.push(msg.overlap as u8);
     put_f64(out, msg.sim_wire_ms_per_mib);
     put_u64(out, msg.heartbeat_ms);
+    out.push(msg.trace as u8);
+    put_u64(out, msg.clock_anchor_us);
 }
 
 /// Decode an [`InitMsg`] frame.
@@ -417,6 +435,8 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
     let overlap = c.u8("overlap flag")? != 0;
     let sim_wire_ms_per_mib = c.f64("sim wire ms")?;
     let heartbeat_ms = c.u64("heartbeat interval")?;
+    let trace = c.u8("trace flag")? != 0;
+    let clock_anchor_us = c.u64("trace clock anchor")?;
     Ok(InitMsg {
         worker,
         spec,
@@ -428,6 +448,8 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
         overlap,
         sim_wire_ms_per_mib,
         heartbeat_ms,
+        trace,
+        clock_anchor_us,
     })
 }
 
@@ -585,6 +607,89 @@ pub fn decode_bye(frame: &[u8]) -> Result<ByeMsg> {
         ring_sent: c.u64("bye ring sent")?,
         ring_recv: c.u64("bye ring recv")?,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Observability frames: drained trace batches
+// ---------------------------------------------------------------------------
+
+/// A worker's drained trace batch, carried in a [`TAG_TRACE`] frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMsg {
+    /// Sending worker's id.
+    pub worker: usize,
+    /// Signed clock offset (µs) that maps the sender's timestamps onto
+    /// the aggregator timeline (`aggregator_anchor - local_anchor`,
+    /// both taken at the Init handshake).
+    pub offset_us: i64,
+    /// Events the sender's rings overwrote since its previous drain.
+    pub truncated: u64,
+    /// The drained events, sender-local timestamps.
+    pub events: Vec<crate::obs::trace::WireEvent>,
+}
+
+/// Smallest possible encoded trace event (empty name and category):
+/// two string lengths + kind byte + timestamp + payload + tid + lane.
+const TRACE_EVENT_MIN_BYTES: usize = 4 + 4 + 1 + 8 + 8 + 4 + 4;
+
+/// Encode a [`TAG_TRACE`] frame from locally drained events.
+pub fn encode_trace(
+    worker: usize,
+    offset_us: i64,
+    truncated: u64,
+    events: &[crate::obs::trace::Event],
+    out: &mut Vec<u8>,
+) {
+    use crate::obs::trace::EventKind;
+    put_u32(out, TAG_TRACE);
+    put_u32(out, worker as u32);
+    put_u64(out, offset_us as u64);
+    put_u64(out, truncated);
+    put_u32(out, events.len() as u32);
+    for e in events {
+        put_str(out, e.name);
+        put_str(out, e.cat);
+        let (kind, payload) = match e.kind {
+            EventKind::Span { dur_us } => (0u8, dur_us),
+            EventKind::Instant => (1, 0),
+            EventKind::Counter { value } => (2, value.to_bits()),
+        };
+        out.push(kind);
+        put_u64(out, e.ts_us);
+        put_u64(out, payload);
+        put_u32(out, e.tid);
+        put_u32(out, e.lane);
+    }
+}
+
+/// Decode a [`TAG_TRACE`] frame.
+pub fn decode_trace(frame: &[u8]) -> Result<TraceMsg> {
+    use crate::obs::trace::{EventKind, WireEvent};
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("trace tag")?;
+    anyhow::ensure!(tag == TAG_TRACE, "expected Trace frame, got tag {tag:#x}");
+    let worker = c.u32("trace worker")? as usize;
+    let offset_us = c.u64("trace clock offset")? as i64;
+    let truncated = c.u64("trace truncation count")?;
+    let n = c.count(TRACE_EVENT_MIN_BYTES, "trace event count")?;
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = get_str(&mut c, "trace event name")?;
+        let cat = get_str(&mut c, "trace event category")?;
+        let kind_code = c.u8("trace event kind")?;
+        let ts_us = c.u64("trace event ts")?;
+        let payload = c.u64("trace event payload")?;
+        let tid = c.u32("trace event tid")?;
+        let lane = c.u32("trace event lane")?;
+        let kind = match kind_code {
+            0 => EventKind::Span { dur_us: payload },
+            1 => EventKind::Instant,
+            2 => EventKind::Counter { value: f64::from_bits(payload) },
+            k => anyhow::bail!("unknown trace event kind {k}"),
+        };
+        events.push(WireEvent { name, cat, kind, ts_us, tid, lane });
+    }
+    Ok(TraceMsg { worker, offset_us, truncated, events })
 }
 
 // ---------------------------------------------------------------------------
@@ -980,6 +1085,8 @@ mod tests {
             overlap: false,
             sim_wire_ms_per_mib: 2.25,
             heartbeat_ms: 750,
+            trace: true,
+            clock_anchor_us: 123_456_789,
         };
         let mut frame = Vec::new();
         encode_init(&msg, &mut frame);
@@ -1000,6 +1107,8 @@ mod tests {
         assert!(!back.overlap);
         assert_eq!(back.sim_wire_ms_per_mib, 2.25);
         assert_eq!(back.heartbeat_ms, 750);
+        assert!(back.trace);
+        assert_eq!(back.clock_anchor_us, 123_456_789);
     }
 
     #[test]
@@ -1090,6 +1199,8 @@ mod tests {
             overlap: true,
             sim_wire_ms_per_mib: 0.0,
             heartbeat_ms: 0,
+            trace: false,
+            clock_anchor_us: 0,
         };
         let mut full = Vec::new();
         encode_init(&msg, &mut full);
@@ -1123,6 +1234,74 @@ mod tests {
         }
         let err = decode_compute(&f).unwrap_err().to_string();
         assert!(err.contains("overflow") || err.contains("corrupt count"), "got: {err}");
+    }
+
+    #[test]
+    fn trace_frames_round_trip_and_reject_malformed() {
+        use crate::obs::trace::{Event, EventKind};
+        let events = [
+            Event {
+                name: "grad_step",
+                cat: "compute",
+                kind: EventKind::Span { dur_us: 480 },
+                ts_us: 1000,
+                tid: 2,
+                lane: 3,
+            },
+            Event {
+                name: "ping",
+                cat: "hb",
+                kind: EventKind::Instant,
+                ts_us: 1500,
+                tid: 1,
+                lane: 3,
+            },
+            Event {
+                name: "queue_depth",
+                cat: "reduce",
+                kind: EventKind::Counter { value: -2.5 },
+                ts_us: 1700,
+                tid: 2,
+                lane: 3,
+            },
+        ];
+        let mut f = Vec::new();
+        encode_trace(2, -987_654, 41, &events, &mut f);
+        assert_eq!(peek_tag(&f).unwrap(), TAG_TRACE);
+        let back = decode_trace(&f).unwrap();
+        assert_eq!(back.worker, 2);
+        assert_eq!(back.offset_us, -987_654, "signed offsets survive the u64 transit");
+        assert_eq!(back.truncated, 41);
+        assert_eq!(back.events.len(), 3);
+        for (orig, got) in events.iter().zip(&back.events) {
+            assert_eq!(got, &orig.to_wire());
+        }
+        // Empty batches are valid (a quiet epoch still flushes).
+        let mut empty = Vec::new();
+        encode_trace(0, 0, 0, &[], &mut empty);
+        assert!(decode_trace(&empty).unwrap().events.is_empty());
+        // Wrong tag, truncation, corrupt count, bad kind all reject.
+        let mut g = Vec::new();
+        encode_ctrl(TAG_RESET, &mut g);
+        assert!(decode_trace(&g).unwrap_err().to_string().contains("expected Trace"));
+        assert!(decode_trace(&f[..f.len() - 3]).is_err());
+        let mut huge = Vec::new();
+        put_u32(&mut huge, TAG_TRACE);
+        put_u32(&mut huge, 0);
+        put_u64(&mut huge, 0);
+        put_u64(&mut huge, 0);
+        put_u32(&mut huge, u32::MAX); // event count far beyond the frame
+        let err = decode_trace(&huge).unwrap_err().to_string();
+        assert!(err.contains("corrupt count"), "got: {err}");
+        // The last event's kind byte sits exactly kind+ts+payload+
+        // tid+lane = 25 bytes from the frame end.
+        let mut bad = f.clone();
+        let kind_off = bad.len() - 25;
+        bad[kind_off] = 9;
+        assert!(
+            decode_trace(&bad).unwrap_err().to_string().contains("unknown trace event kind"),
+            "kind byte offset arithmetic must hit the last event's kind"
+        );
     }
 
     #[test]

@@ -68,7 +68,7 @@ use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
 use std::process::{Child, Command};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -93,7 +93,10 @@ use crate::cluster::{
 use crate::coordinator::{build_scheduler, prepare_run, TrainReport, TrainerConfig, UpdateMode};
 use crate::data::{Batcher, Dataset, DatasetSpec, SyntheticKind};
 use crate::metrics::{rel_drift, DeviceUsage, Meter};
+use crate::obs::metrics::Registry;
+use crate::obs::trace;
 use crate::partition::Partition;
+use crate::util::json::{arr, num, obj, s, Json};
 use crate::schedule::{MaskPair, Scheduler};
 use crate::scores::ScoreBook;
 use crate::tensor::Tensor;
@@ -188,6 +191,18 @@ pub struct DistConfig {
     /// momentum, and score cache, skip pretraining, and continue at
     /// the recorded batch — bitwise identical to the uninterrupted run.
     pub resume_from: Option<PathBuf>,
+    /// Write a merged Chrome trace-event JSON (aggregator + every
+    /// worker lane, clocks normalized via the Init handshake) here at
+    /// the end of the run — open it in Perfetto. `None` (the default)
+    /// leaves the recorder disarmed: every `span!`/`instant!` site then
+    /// costs a single relaxed atomic load. Tracing is observation-only;
+    /// the loss trajectory is bitwise identical either way.
+    pub trace_out: Option<PathBuf>,
+    /// Metrics registry this run publishes into — step-latency
+    /// histogram, wire/socket byte counters, membership counters — the
+    /// same instance `--metrics-addr` serves live over HTTP. `None`
+    /// (the default) skips publishing entirely. Observation-only.
+    pub metrics: Option<Arc<Registry>>,
 }
 
 impl DistConfig {
@@ -214,6 +229,8 @@ impl DistConfig {
             checkpoint_dir: None,
             checkpoint_every: 1,
             resume_from: None,
+            trace_out: None,
+            metrics: None,
         }
     }
 }
@@ -316,6 +333,71 @@ pub struct DistReport {
     pub membership: Vec<MembershipEvent>,
 }
 
+impl DistReport {
+    /// Serialize the parts of the report the chaos CI step inspects —
+    /// loss/accuracy, membership churn, byte totals, and the recovery
+    /// counters — as JSON (the `--report-json` artifact).
+    ///
+    /// The shape is a contract: `schema_version` gates consumers, and
+    /// `tests/dist_report_schema.rs` pins the exact key set. Adding a
+    /// key means bumping the version and updating that golden test; the
+    /// legacy `schema` string stays for scripts that match on it.
+    pub fn to_json(&self) -> Json {
+        let membership = self
+            .membership
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("batch", num(e.batch as f64)),
+                    ("worker", num(e.worker as f64)),
+                    ("kind", s(&e.kind)),
+                ])
+            })
+            .collect();
+        let socket_classes = self
+            .socket
+            .classes()
+            .map(|(name, sent, recv)| {
+                obj(vec![
+                    ("class", s(name)),
+                    ("sent", num(sent as f64)),
+                    ("recv", num(recv as f64)),
+                ])
+            })
+            .collect();
+        let ring_bytes = self
+            .ring_bytes
+            .iter()
+            .map(|&(sent, recv)| obj(vec![("sent", num(sent as f64)), ("recv", num(recv as f64))]))
+            .collect();
+        obj(vec![
+            ("schema", s("d2ft-dist-report-v2")),
+            ("schema_version", num(2.0)),
+            ("compress", s(&self.compress)),
+            ("workers", num(self.n_workers as f64)),
+            ("live_workers", num(self.live_workers as f64)),
+            ("transport", s(&self.transport)),
+            ("exchange", s(&self.exchange)),
+            ("batches", num(self.train.batches as f64)),
+            ("epochs", num(self.epochs as f64)),
+            ("final_train_loss", num(self.train.final_train_loss)),
+            ("test_top1", num(self.train.test_top1)),
+            ("evictions", num(self.evictions as f64)),
+            ("joins", num(self.joins as f64)),
+            ("reassigned_micros", num(self.reassigned_micros as f64)),
+            ("knapsack_resolves", num(self.knapsack_resolves as f64)),
+            ("checkpoints_written", num(self.checkpoints_written as f64)),
+            ("grad_bytes_up", num(self.wire.up_bytes as f64)),
+            ("grad_bytes_down", num(self.wire.down_bytes as f64)),
+            ("socket_bytes_sent", num(self.socket.bytes_sent as f64)),
+            ("socket_bytes_recv", num(self.socket.bytes_recv as f64)),
+            ("socket_classes", arr(socket_classes)),
+            ("ring_bytes", arr(ring_bytes)),
+            ("membership", arr(membership)),
+        ])
+    }
+}
+
 /// What a reader thread forwards from one worker's link into the
 /// aggregator's single arrival queue.
 enum Arrival {
@@ -345,6 +427,7 @@ fn reader_loop(
     tx: mpsc::Sender<Arrival>,
     liveness: Duration,
     pool: Arc<BufPool>,
+    traces: Arc<Mutex<Vec<proto::TraceMsg>>>,
 ) {
     loop {
         let frame = match rx.recv_blob_timeout(liveness) {
@@ -385,6 +468,21 @@ fn reader_loop(
             },
             Ok(proto::TAG_RING_ADDR) | Ok(proto::TAG_RING_READY) | Ok(proto::TAG_RING_FINAL) => {
                 tx.send(Arrival::Ring { worker, frame }).is_ok()
+            }
+            Ok(proto::TAG_TRACE) => {
+                // Observability side-channel: collect the worker's trace
+                // batch for the end-of-run merge. A malformed trace frame
+                // is dropped with a warning rather than surfaced as Lost —
+                // observation must never evict a worker.
+                match proto::decode_trace(&frame) {
+                    Ok(msg) => match traces.lock() {
+                        Ok(mut sink) => sink.push(msg),
+                        Err(poisoned) => poisoned.into_inner().push(msg),
+                    },
+                    Err(e) => crate::warn_!("worker {worker}: dropping bad trace frame: {e:#}"),
+                }
+                pool.give_back(frame);
+                continue;
             }
             Ok(proto::TAG_BYE) => {
                 match proto::decode_bye(&frame) {
@@ -486,6 +584,10 @@ pub struct DistTrainer {
     /// Set on evict/join; the next scheduled batch counts a
     /// membership-triggered knapsack re-solve and resets the EMAs.
     membership_dirty: bool,
+    /// Worker trace batches shipped over `TAG_TRACE` frames (reader
+    /// threads push as they arrive; [`DistTrainer::write_trace_artifact`]
+    /// drains at the end of the run).
+    trace_sink: Arc<Mutex<Vec<proto::TraceMsg>>>,
 }
 
 /// The scripted fault plan for worker `w` (empty when none).
@@ -606,6 +708,14 @@ impl DistTrainer {
             GradCodec::new(&agg).with_precision(cfg.wire_precision).with_compression(cfg.compress);
         let buf_pool = Arc::new(BufPool::new());
         let k = cfg.workers;
+
+        // Arm the trace recorder before any worker thread spawns so
+        // channel-mode workers (which share this process's recorder)
+        // never miss their earliest events. Lane 0 is the aggregator.
+        if cfg.trace_out.is_some() {
+            trace::set_enabled(true);
+        }
+        trace::set_lane(0);
 
         // --- launch the workers and connect one link per worker -------
         let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(k);
@@ -729,6 +839,8 @@ impl DistTrainer {
                 overlap: cfg.overlap,
                 sim_wire_ms_per_mib: cfg.sim_wire_ms_per_mib,
                 heartbeat_ms: cfg.heartbeat_ms,
+                trace: cfg.trace_out.is_some(),
+                clock_anchor_us: trace::now_us(),
             };
             let mut frame = buf_pool.checkout();
             proto::encode_init(&msg, &mut frame);
@@ -741,6 +853,7 @@ impl DistTrainer {
         // --- split the links; reader threads fan uplinks in -----------
         let liveness = reader_liveness(cfg.heartbeat_ms, cfg.liveness_misses);
         let (arr_tx, arrivals) = mpsc::channel::<Arrival>();
+        let trace_sink: Arc<Mutex<Vec<proto::TraceMsg>>> = Arc::new(Mutex::new(Vec::new()));
         let mut links = Vec::with_capacity(k);
         let mut readers = Vec::with_capacity(k);
         for (w, link) in transports.into_iter().enumerate() {
@@ -748,9 +861,10 @@ impl DistTrainer {
             links.push(Some(tx));
             let fan_in = arr_tx.clone();
             let pool = Arc::clone(&buf_pool);
+            let traces = Arc::clone(&trace_sink);
             let handle = thread::Builder::new()
                 .name(format!("d2ft-dist-{w}-rx"))
-                .spawn(move || reader_loop(w, rx, fan_in, liveness, pool))
+                .spawn(move || reader_loop(w, rx, fan_in, liveness, pool, traces))
                 .context("spawning dist reader thread")?;
             readers.push(handle);
         }
@@ -788,6 +902,7 @@ impl DistTrainer {
             checkpoints_written: 0,
             membership: Vec::new(),
             membership_dirty: false,
+            trace_sink,
         })
     }
 
@@ -885,6 +1000,7 @@ impl DistTrainer {
         });
         self.membership_dirty = true;
         self.ring_dirty = true;
+        trace::instant("ctrl", "evict");
         crate::warn_!("dist worker {worker} evicted: {why}");
     }
 
@@ -901,6 +1017,7 @@ impl DistTrainer {
     /// A failed send evicts that worker instead of failing the batch —
     /// the survivors already have everything they need.
     fn broadcast(&mut self, master: &[u8], payload: usize, stats: &mut WireStats) -> Result<()> {
+        let _sp = trace::span("net", "broadcast");
         let mut dead: Vec<(usize, String)> = Vec::new();
         for (w, slot) in self.links.iter_mut().enumerate() {
             let Some(link) = slot else { continue };
@@ -981,6 +1098,7 @@ impl DistTrainer {
         assert_eq!(masks.len(), n, "one mask pair per micro-batch");
         let k = self.links.len();
         anyhow::ensure!(self.live_workers() > 0, "no live dist workers left to run a batch");
+        let _sp = trace::span("step", "exec_batch");
         self.step += 1;
         let step = self.step;
         // Every job is retained (and shipped one per frame) so a lost
@@ -997,24 +1115,27 @@ impl DistTrainer {
             .collect();
         let mut owner = self.assign(n);
         let mut tasks_per_worker = vec![0usize; k];
-        for i in 0..n {
-            loop {
-                let w = owner[i];
-                if self.links[w].is_none() {
-                    owner[i] = self.pick_live(w).ok_or_else(|| {
-                        anyhow::anyhow!("no live dist workers left to dispatch micro-batch {i}")
-                    })?;
-                    continue;
-                }
-                let mut frame = self.buf_pool.checkout();
-                proto::encode_compute(step, std::slice::from_ref(&all_jobs[i]), &mut frame);
-                let sent = self.links[w].as_mut().unwrap().send_blob(frame);
-                match sent {
-                    Ok(()) => {
-                        tasks_per_worker[w] += 1;
-                        break;
+        {
+            let _sp = trace::span("agg", "dispatch");
+            for i in 0..n {
+                loop {
+                    let w = owner[i];
+                    if self.links[w].is_none() {
+                        owner[i] = self.pick_live(w).ok_or_else(|| {
+                            anyhow::anyhow!("no live dist workers left to dispatch micro-batch {i}")
+                        })?;
+                        continue;
                     }
-                    Err(e) => self.evict(w, &format!("compute dispatch failed: {e:#}")),
+                    let mut frame = self.buf_pool.checkout();
+                    proto::encode_compute(step, std::slice::from_ref(&all_jobs[i]), &mut frame);
+                    let sent = self.links[w].as_mut().unwrap().send_blob(frame);
+                    match sent {
+                        Ok(()) => {
+                            tasks_per_worker[w] += 1;
+                            break;
+                        }
+                        Err(e) => self.evict(w, &format!("compute dispatch failed: {e:#}")),
+                    }
                 }
             }
         }
@@ -1030,6 +1151,7 @@ impl DistTrainer {
         let dense = self.codec.dense_len();
         let deadline = Instant::now() + Duration::from_millis(self.cfg.batch_timeout_ms.max(1));
         let stall = Duration::from_millis(self.cfg.stall_reassign_ms.max(1));
+        let barrier_sp = trace::span("agg", "barrier");
         while !reducer.is_complete() {
             let now = Instant::now();
             anyhow::ensure!(
@@ -1091,6 +1213,7 @@ impl DistTrainer {
                 }
             }
         }
+        drop(barrier_sp);
         // Straggler feedback: EMA of measured ms per task. Only workers
         // that actually delivered gradients update — a silent worker
         // (stalled, dying) measured 0 ms, which would read as *fast*.
@@ -1109,6 +1232,7 @@ impl DistTrainer {
         for blob in reducer.into_blobs() {
             self.buf_pool.give_back(blob);
         }
+        let _apply_sp = trace::span("agg", "apply");
         let lr = self.cfg.train.lr;
         match self.cfg.exchange {
             ExchangeMode::MaskedAllReduce => {
@@ -1237,6 +1361,7 @@ impl DistTrainer {
     /// membership changed mid-round — the caller restarts the attempt
     /// over the new live set.
     fn ring_negotiate(&mut self, live: &[usize], deadline: Instant) -> Result<bool> {
+        let _sp = trace::span("ring", "negotiate");
         self.step += 1;
         let nonce = self.step;
         let tcp = !matches!(self.cfg.transport, TransportKind::Channel);
@@ -1335,6 +1460,7 @@ impl DistTrainer {
     ) -> Result<BatchOut> {
         let n = micros.len();
         assert_eq!(masks.len(), n, "one mask pair per micro-batch");
+        let _sp = trace::span("step", "exec_batch_ring");
         let k = self.links.len();
         let union = MaskPair::union(masks);
         let lr = self.cfg.train.lr;
@@ -1868,6 +1994,8 @@ impl DistTrainer {
             overlap: self.cfg.overlap,
             sim_wire_ms_per_mib: self.cfg.sim_wire_ms_per_mib,
             heartbeat_ms: self.cfg.heartbeat_ms,
+            trace: self.cfg.trace_out.is_some(),
+            clock_anchor_us: trace::now_us(),
         };
         let mut frame = self.buf_pool.checkout();
         proto::encode_init(&msg, &mut frame);
@@ -1887,9 +2015,10 @@ impl DistTrainer {
         let fan_in = self.arr_tx.clone();
         let liveness = reader_liveness(self.cfg.heartbeat_ms, self.cfg.liveness_misses);
         let pool = Arc::clone(&self.buf_pool);
+        let traces = Arc::clone(&self.trace_sink);
         let handle = thread::Builder::new()
             .name(format!("d2ft-dist-{w}-rx"))
-            .spawn(move || reader_loop(w, rx, fan_in, liveness, pool))
+            .spawn(move || reader_loop(w, rx, fan_in, liveness, pool, traces))
             .context("spawning rejoined dist reader thread")?;
         self.readers.push(handle);
         self.links[w] = Some(tx);
@@ -1919,6 +2048,7 @@ impl DistTrainer {
         if epoch % self.cfg.checkpoint_every.max(1) != 0 {
             return Ok(());
         }
+        let _sp = trace::span("ckpt", "write");
         let (params, momentum) = self.agg.export_state_flat();
         let ck = Checkpoint { epoch, batch, params, momentum, score_books: score_cache.to_vec() };
         std::fs::create_dir_all(&dir)
@@ -1928,11 +2058,103 @@ impl DistTrainer {
         Ok(())
     }
 
+    /// Publish the run's live counters into `reg`. Every series is a
+    /// snapshot store (not an increment), so republishing after every
+    /// batch is idempotent and cheap — the registry is lock-per-lookup,
+    /// the values are relaxed atomics.
+    fn publish_metrics(
+        &self,
+        reg: &Registry,
+        stats: &WireStats,
+        pretrain: &WireStats,
+        epochs: usize,
+    ) {
+        reg.store("d2ft_wire_up_bytes", stats.up_bytes);
+        reg.store("d2ft_wire_down_bytes", stats.down_bytes);
+        reg.store("d2ft_wire_dense_up_bytes", stats.dense_up_bytes);
+        reg.store("d2ft_wire_up_msgs", stats.up_msgs);
+        reg.store("d2ft_wire_down_msgs", stats.down_msgs);
+        reg.store("d2ft_pretrain_wire_up_bytes", pretrain.up_bytes);
+        reg.store("d2ft_pretrain_wire_down_bytes", pretrain.down_bytes);
+        let mut socket = TransportStats::default();
+        for cell in &self.link_stats {
+            socket.merge(&cell.snapshot());
+        }
+        reg.store("d2ft_socket_bytes_sent", socket.bytes_sent);
+        reg.store("d2ft_socket_bytes_recv", socket.bytes_recv);
+        reg.store("d2ft_socket_frames_sent", socket.frames_sent);
+        reg.store("d2ft_socket_frames_recv", socket.frames_recv);
+        for (name, sent, recv) in socket.classes() {
+            reg.store(&format!("d2ft_socket_class_sent_bytes{{class=\"{name}\"}}"), sent);
+            reg.store(&format!("d2ft_socket_class_recv_bytes{{class=\"{name}\"}}"), recv);
+        }
+        reg.store("d2ft_evictions_total", self.evictions as u64);
+        reg.store("d2ft_joins_total", self.joins as u64);
+        reg.store("d2ft_reassigned_micros_total", self.reassigned_micros as u64);
+        reg.store("d2ft_knapsack_resolves_total", self.knapsack_resolves as u64);
+        reg.store("d2ft_checkpoints_written_total", self.checkpoints_written as u64);
+        reg.store("d2ft_epochs_total", epochs as u64);
+        reg.set("d2ft_workers_live", self.live_workers() as f64);
+        reg.set("d2ft_workers_total", self.links.len() as f64);
+        reg.store("d2ft_encode_buf_fresh", self.buf_pool.fresh_allocs());
+        reg.store("d2ft_encode_buf_reused", self.buf_pool.reuses());
+    }
+
+    /// Merge the aggregator's own drained rings with every worker trace
+    /// batch shipped over `TAG_TRACE` and write the Chrome trace-event
+    /// JSON to `cfg.trace_out`. Worker clocks are normalized onto the
+    /// aggregator timeline with the per-worker offset measured at the
+    /// Init handshake. No-op when tracing is off.
+    fn write_trace_artifact(&mut self) -> Result<()> {
+        let Some(path) = self.cfg.trace_out.clone() else {
+            return Ok(());
+        };
+        let local = trace::drain();
+        let mut truncated = local.truncated;
+        let mut events: Vec<trace::WireEvent> =
+            local.events.iter().map(|e| e.to_wire()).collect();
+        let msgs = {
+            let mut sink = match self.trace_sink.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            std::mem::take(&mut *sink)
+        };
+        for msg in msgs {
+            truncated += msg.truncated;
+            for mut e in msg.events {
+                // Channel-mode workers share this process's recorder, so
+                // a worker's drain may carry lane-0 (aggregator) events —
+                // those are already on the aggregator clock and must not
+                // be shifted.
+                if e.lane != 0 {
+                    e.ts_us = (e.ts_us as i64 + msg.offset_us).max(0) as u64;
+                }
+                events.push(e);
+            }
+        }
+        events.sort_by_key(|e| e.ts_us);
+        let doc = trace::chrome_trace_json(&events, truncated);
+        std::fs::write(&path, doc.to_string_compact())
+            .with_context(|| format!("writing trace artifact to {}", path.display()))?;
+        crate::info!("wrote {} trace events to {}", events.len(), path.display());
+        trace::set_enabled(false);
+        Ok(())
+    }
+
     /// Run the full distributed fine-tuning loop.
     pub fn run(&mut self) -> Result<DistReport> {
         let cfg = self.cfg.train.clone();
         let mb = self.agg.micro_batch();
         let k = self.links.len();
+        // Publish a zeroed snapshot up front so an early scrape of the
+        // live endpoint sees the full metric schema, not whatever
+        // happened to be touched yet.
+        let reg = self.cfg.metrics.clone();
+        if let Some(reg) = &reg {
+            self.publish_metrics(reg, &WireStats::default(), &WireStats::default(), 0);
+            reg.observe("d2ft_step_latency_ms", f64::NAN); // create the series, record nothing
+        }
         // Resume, if configured: install the checkpoint's parameters,
         // momentum, and score cache on the aggregator, ship the same
         // bits to every worker as a State frame, and skip pretraining
@@ -2071,7 +2293,12 @@ impl DistTrainer {
                 let masks = table.all_masks(&self.partition);
                 let ts = Instant::now();
                 let out = self.exec_batch(&micros, &masks, &mut stats)?;
-                step_ms_sum += ts.elapsed().as_secs_f64() * 1e3;
+                let step_ms = ts.elapsed().as_secs_f64() * 1e3;
+                step_ms_sum += step_ms;
+                if let Some(reg) = &reg {
+                    reg.observe("d2ft_step_latency_ms", step_ms);
+                    self.publish_metrics(reg, &stats, &pretrain_stats, epochs_done);
+                }
                 for &(loss, n_correct) in &out.outs {
                     meter.push(loss, n_correct, mb);
                     loss_curve.push(loss);
@@ -2167,6 +2394,15 @@ impl DistTrainer {
             self.broadcast_pong(epochs_done as u64);
             self.write_checkpoint(epochs_done, batch_idx, &score_cache)?;
             self.maybe_rejoin(epochs_done)?;
+            if let Some(reg) = &reg {
+                reg.set("d2ft_calib_scale_full", calib_scale_full);
+                reg.set("d2ft_calib_scale_fwd", calib_scale_fwd);
+                reg.set(
+                    "d2ft_makespan_drift",
+                    if drift_n > 0 { drift_sum / drift_n as f64 } else { 0.0 },
+                );
+                self.publish_metrics(reg, &stats, &pretrain_stats, epochs_done);
+            }
         }
         // A run that ends mid-epoch still reports the partial epoch's
         // drift (it just never feeds another calibration).
@@ -2179,6 +2415,12 @@ impl DistTrainer {
         // Tear the cluster down *inside* run so the report can fold in
         // the worker-side pool counters and the final socket totals.
         self.shutdown_workers()?;
+        // Every worker's Bye has been seen, so (per-link FIFO) every
+        // shipped trace batch is already in the sink: merge and write.
+        self.write_trace_artifact()?;
+        if let Some(reg) = &reg {
+            self.publish_metrics(reg, &stats, &pretrain_stats, epochs_done);
+        }
         let mut socket = TransportStats::default();
         let mut socket_links = Vec::with_capacity(self.link_stats.len());
         for cell in &self.link_stats {

@@ -136,11 +136,12 @@ pub trait Transport: BlobTx + BlobRx {
 /// [`StatsCell`] / [`TransportStats`], indexed by the value
 /// [`frame_class`] returns. One entry per control-protocol frame kind
 /// (all ten `TAG_RING_*` negotiation/exchange tags fold into a single
-/// `ring` class), plus `barrier` for the empty handshake token and
-/// `other` for anything with an unrecognized leading tag.
-pub const FRAME_CLASSES: [&str; 16] = [
+/// `ring` class), `trace` for the observability side-channel, plus
+/// `barrier` for the empty handshake token and `other` for anything
+/// with an unrecognized leading tag.
+pub const FRAME_CLASSES: [&str; 17] = [
     "init", "compute", "apply", "deltas", "reset", "shutdown", "up", "bye", "ping", "pong",
-    "join", "evict", "state", "ring", "barrier", "other",
+    "join", "evict", "state", "ring", "trace", "barrier", "other",
 ];
 
 /// Number of traffic classes (length of [`FRAME_CLASSES`]).
@@ -152,10 +153,10 @@ pub const N_FRAME_CLASSES: usize = FRAME_CLASSES.len();
 /// token. Returns an index into [`FRAME_CLASSES`].
 pub fn frame_class(blob: &[u8]) -> usize {
     if blob.is_empty() {
-        return 14; // barrier
+        return 15; // barrier
     }
     if blob.len() < 4 {
-        return 15; // other
+        return 16; // other
     }
     let tag = u32::from_le_bytes([blob[0], blob[1], blob[2], blob[3]]);
     match tag {
@@ -182,7 +183,8 @@ pub fn frame_class(blob: &[u8]) -> usize {
         | proto::TAG_RING_READY
         | proto::TAG_RING_PART
         | proto::TAG_RING_CAST => 13,
-        _ => 15, // other
+        proto::TAG_TRACE => 14,
+        _ => 16, // other
     }
 }
 
@@ -537,6 +539,7 @@ fn tcp_send(
         "refusing to send a {}-byte frame (cap {MAX_FRAME})",
         blob.len()
     );
+    let _sp = crate::obs::trace::span("net", "tcp_send");
     let len = (blob.len() as u32).to_le_bytes();
     writer.write_all(&len).context("writing frame length prefix")?;
     writer.write_all(&blob).context("writing frame body")?;
@@ -546,6 +549,7 @@ fn tcp_send(
 }
 
 fn tcp_recv(reader: &mut TcpStream, pool: &BufPool, stats: &StatsCell) -> Result<Vec<u8>> {
+    let _sp = crate::obs::trace::span("net", "tcp_recv");
     let mut hdr = [0u8; 4];
     reader
         .read_exact(&mut hdr)
@@ -635,6 +639,7 @@ fn tcp_recv_timeout_inner(
         }
     }
     stats.record_recv(4 + len, &buf);
+    crate::obs::trace::instant("net", "frame_recv");
     Ok(Some(buf))
 }
 
@@ -1206,6 +1211,7 @@ mod tests {
         }
         assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_STATE.to_le_bytes())], "state");
         assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_PING.to_le_bytes())], "ping");
+        assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_TRACE.to_le_bytes())], "trace");
     }
 
     #[test]

@@ -55,6 +55,8 @@ use crate::backend::Backend;
 use crate::schedule::MaskPair;
 use crate::tensor::Tensor;
 
+use crate::obs::trace;
+
 use super::fault::{FaultAction, FaultPlan};
 use super::grads::{BufPool, GradCodec};
 use super::proto::{
@@ -62,10 +64,10 @@ use super::proto::{
     decode_ring_castd, decode_ring_exec, decode_ring_listen, decode_ring_part, decode_ring_peers,
     decode_ring_reset, decode_state, encode_bye, encode_join, encode_ping, encode_ring_addr,
     encode_ring_cast_header, encode_ring_final_header, encode_ring_part_header, encode_ring_ready,
-    encode_up_header, peek_tag, ByeMsg, CastRole, InitMsg, RingExec, UpHdr, PROTO_VERSION,
-    TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT, TAG_PONG, TAG_RESET, TAG_RING_CASTD,
-    TAG_RING_EXEC, TAG_RING_LISTEN, TAG_RING_PEERS, TAG_RING_RESET, TAG_SHUTDOWN, TAG_STATE,
-    UP_GRAD_OFF,
+    encode_trace, encode_up_header, peek_tag, ByeMsg, CastRole, InitMsg, RingExec, UpHdr,
+    PROTO_VERSION, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT, TAG_PONG, TAG_RESET,
+    TAG_RING_CASTD, TAG_RING_EXEC, TAG_RING_LISTEN, TAG_RING_PEERS, TAG_RING_RESET, TAG_SHUTDOWN,
+    TAG_STATE, UP_GRAD_OFF,
 };
 use super::transport::{ring_connect, BlobRx, BlobTx, RingListener, Transport};
 
@@ -80,6 +82,21 @@ fn send_shared(tx: &SharedTx, frame: Vec<u8>) -> Result<()> {
         Ok(mut guard) => guard.send_blob(frame),
         Err(poisoned) => poisoned.into_inner().send_blob(frame),
     }
+}
+
+/// Drain this process's trace rings and ship them home in a
+/// `TAG_TRACE` frame (no-op unless the Init armed tracing). Called on
+/// every epoch beacon (Pong) and once more before the Bye, so the
+/// aggregator holds the full worker timeline by the time it writes the
+/// merged artifact.
+fn flush_trace(init: &InitMsg, offset_us: i64, tx: &SharedTx, pool: &BufPool) -> Result<()> {
+    if !init.trace {
+        return Ok(());
+    }
+    let batch = trace::drain();
+    let mut frame = pool.checkout();
+    encode_trace(init.worker, offset_us, batch.truncated, &batch.events, &mut frame);
+    send_shared(tx, frame).context("sending trace batch")
 }
 
 /// Compute-thread → sender-thread handoff (overlap mode): one computed
@@ -384,6 +401,7 @@ fn ring_exec(
 ) -> Result<RingOutcome> {
     let step = exec.step;
     let union = &exec.union;
+    let _sp = trace::span("ring", "ring_exec");
     // --- Reduce leg: partial sum in chain order -----------------------
     let mut acc = be.zeros_like_params();
     if exec.has_in {
@@ -443,6 +461,7 @@ fn ring_exec(
         pool.give_back(payload);
         return ring_wait_abort(rx, pool, step);
     }
+    trace::instant("ring", if exec.is_last { "final_sent" } else { "part_forwarded" });
     // --- Distribute leg + apply ---------------------------------------
     match exec.cast {
         CastRole::Origin { hops } => {
@@ -454,6 +473,7 @@ fn ring_exec(
                     pool.give_back(payload);
                     return ring_wait_abort(rx, pool, step);
                 }
+                trace::instant("ring", "cast_originated");
             }
             ring_apply(be, codec, exec, &payload, &mut ring.last_applied, tx, pool)?;
             pool.give_back(payload);
@@ -515,6 +535,7 @@ fn ring_exec(
                         if !ring.send_out(blob) {
                             return ring_wait_abort(rx, pool, step);
                         }
+                        trace::instant("ring", "cast_forwarded");
                     } else {
                         pool.give_back(blob);
                     }
@@ -636,6 +657,7 @@ fn handle_frame(
     be: &mut NativeBackend,
     codec: &GradCodec,
     init: &InitMsg,
+    trace_offset_us: i64,
     pool: &Arc<BufPool>,
     sender_tx: &Option<mpsc::SyncSender<Computed>>,
     tx: &SharedTx,
@@ -659,9 +681,11 @@ fn handle_frame(
                     return Ok(Flow::Die);
                 }
                 let t0 = Instant::now();
-                let (out, grads) = be
-                    .grad_step(&job.x, &job.y, &job.masks)
-                    .context("native grad step on worker")?;
+                let (out, grads) = {
+                    let _sp = trace::span("compute", "grad_step");
+                    be.grad_step(&job.x, &job.y, &job.masks)
+                        .context("native grad step on worker")?
+                };
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
                 if !matches!(verdict, SendVerdict::Drop) {
                     let mut up = pool.checkout();
@@ -690,9 +714,11 @@ fn handle_frame(
                     return Ok(Flow::Die);
                 }
                 let t0 = Instant::now();
-                let (out, grads) = be
-                    .grad_step(&job.x, &job.y, &job.masks)
-                    .context("native grad step on worker")?;
+                let (out, grads) = {
+                    let _sp = trace::span("compute", "grad_step");
+                    be.grad_step(&job.x, &job.y, &job.masks)
+                        .context("native grad step on worker")?
+                };
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
                 if let SendVerdict::Drop = verdict {
                     continue;
@@ -723,6 +749,7 @@ fn handle_frame(
             // topology first: stale links must not deliver stale blobs
             // into the next exchange.
             ring.drop_links();
+            trace::instant("ring", "negotiate_listen");
             let listener = RingListener::open(tcp).context("opening ring listener")?;
             let mut reply = pool.checkout();
             encode_ring_addr(nonce, &listener.addr(), &mut reply);
@@ -752,6 +779,7 @@ fn handle_frame(
             let mut reply = pool.checkout();
             encode_ring_ready(nonce, &mut reply);
             send_shared(tx, reply).context("confirming ring links")?;
+            trace::instant("ring", "negotiate_ready");
             Ok(Flow::Continue)
         }
         TAG_RING_EXEC => Ok(Flow::Ring(decode_ring_exec(frame)?)),
@@ -805,7 +833,11 @@ fn handle_frame(
             Ok(Flow::Continue)
         }
         TAG_PONG => {
+            // The Pong doubles as the epoch beacon: flush the local
+            // trace rings home so the merged artifact stays bounded by
+            // one epoch of events per worker.
             decode_pong(frame)?;
+            flush_trace(init, trace_offset_us, tx, pool)?;
             Ok(Flow::Continue)
         }
         TAG_RESET => {
@@ -841,6 +873,17 @@ pub fn run_worker_with_faults(
     let frame = link.recv_blob().context("waiting for Init")?;
     let init = decode_init(&frame)?;
     pool.give_back(frame);
+    // Clock handshake: the Init carries the aggregator's trace clock
+    // at encode time; sampling ours at decode time gives the offset
+    // that maps local timestamps onto the aggregator timeline (transit
+    // is treated as zero — exact in-process, sub-ms on loopback).
+    let trace_offset_us = if init.trace {
+        trace::set_enabled(true);
+        init.clock_anchor_us as i64 - trace::now_us() as i64
+    } else {
+        0
+    };
+    trace::set_lane(init.worker as u32 + 1);
     let be = NativeBackend::new(&init.spec, init.lora_rank, init.spec.micro_batch, init.seed);
     let codec = Arc::new(
         GradCodec::new(&be).with_precision(init.precision).with_compression(init.compress),
@@ -848,7 +891,7 @@ pub fn run_worker_with_faults(
     // Replica built: release the aggregator's handshake.
     link.barrier().context("worker handshake barrier")?;
     let (tx, rx) = link.split();
-    serve(be, codec, &init, rx, tx, pool, plan)
+    serve(be, codec, &init, trace_offset_us, rx, tx, pool, plan)
 }
 
 /// The post-handshake serve loop (compute thread).
@@ -856,6 +899,7 @@ fn serve(
     mut be: NativeBackend,
     codec: Arc<GradCodec>,
     init: &InitMsg,
+    trace_offset_us: i64,
     mut rx: Box<dyn BlobRx>,
     tx: Box<dyn BlobTx>,
     pool: Arc<BufPool>,
@@ -880,10 +924,12 @@ fn serve(
         let pool = Arc::clone(&pool);
         let stop = Arc::clone(&hb_stop);
         let interval = Duration::from_millis(init.heartbeat_ms);
+        let lane = init.worker as u32 + 1;
         Some(
             thread::Builder::new()
                 .name(format!("d2ft-dist-{}-hb", init.worker))
                 .spawn(move || {
+                    trace::set_lane(lane);
                     let mut seq = 0u64;
                     'beat: loop {
                         // Sleep in slices so shutdown joins promptly.
@@ -899,6 +945,7 @@ fn serve(
                         let mut ping = pool.checkout();
                         encode_ping(seq, &mut ping);
                         seq += 1;
+                        trace::instant("hb", "ping");
                         if send_shared(&tx, ping).is_err() {
                             break;
                         }
@@ -920,9 +967,11 @@ fn serve(
         let tx = Arc::clone(&tx);
         let wire_ms = init.sim_wire_ms_per_mib;
         let mut ef = ef.take();
+        let lane = init.worker as u32 + 1;
         let handle = thread::Builder::new()
             .name(format!("d2ft-dist-{}-tx", init.worker))
             .spawn(move || {
+                trace::set_lane(lane);
                 while let Ok(c) = srx.recv() {
                     if encode_and_send(&codec, &pool, wire_ms, &tx, &mut ef, c).is_err() {
                         // Aggregator gone: stop draining; the compute
@@ -952,6 +1001,7 @@ fn serve(
             &mut be,
             &codec,
             init,
+            trace_offset_us,
             &pool,
             &sender_tx,
             &tx,
@@ -1019,6 +1069,11 @@ fn serve(
     if dying {
         // Abrupt exit: no Bye — dropping the uplink is the message.
         return Ok(());
+    }
+    if result.is_ok() {
+        // Final flush: whatever recorded since the last epoch beacon
+        // still reaches the merged artifact.
+        result = flush_trace(init, trace_offset_us, &tx, &pool);
     }
     if result.is_ok() {
         let mut bye = pool.checkout();

@@ -60,6 +60,7 @@ pub mod data;
 pub mod dist;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod schedule;

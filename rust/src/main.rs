@@ -116,6 +116,18 @@ fn cli() -> Cli {
         .flag("report-json", "", "train --dist: write the DistReport as JSON to this path")
         .flag("checkpoint-dir", "", "train --dist: write epoch-boundary checkpoints here")
         .flag("resume", "", "train --dist: resume from a checkpoint file (skips pre-training)")
+        .flag(
+            "trace-out",
+            "",
+            "train --dist: write a merged Chrome trace-event JSON here (open in Perfetto; \
+             one lane per worker plus the aggregator)",
+        )
+        .flag(
+            "metrics-addr",
+            "",
+            "train --dist: serve live Prometheus metrics on this address \
+             (e.g. 127.0.0.1:9464; /metrics text + /json dump)",
+        )
         .switch(
             "no-spawn",
             "tcp transport: do not fork dist-worker subprocesses; wait for external workers",
@@ -354,6 +366,17 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         let v = args.get(flag);
         (!v.is_empty()).then(|| std::path::PathBuf::from(v))
     };
+    // The registry is shared with the trainer; starting the server
+    // before the run means a scrape mid-training sees live values.
+    let registry = std::sync::Arc::new(d2ft::obs::Registry::new());
+    let metrics_addr = args.get("metrics-addr");
+    let _metrics_server = if metrics_addr.is_empty() {
+        None
+    } else {
+        let srv = d2ft::obs::MetricsServer::start(metrics_addr, std::sync::Arc::clone(&registry))?;
+        d2ft::info!("serving metrics at http://{}/metrics", srv.addr());
+        Some(srv)
+    };
     let dcfg = DistConfig {
         exchange: ExchangeMode::parse(args.get("exchange"))?,
         transport,
@@ -367,13 +390,15 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         faults: parse_worker_plans(args.get("fault"))?,
         checkpoint_dir: to_path("checkpoint-dir"),
         resume_from: to_path("resume"),
+        trace_out: to_path("trace-out"),
+        metrics: Some(std::sync::Arc::clone(&registry)),
         ..DistConfig::new(cfg, workers)
     };
     let mut trainer = DistTrainer::new(&provider, dcfg)?;
     let r = trainer.run()?;
     let report_path = args.get("report-json");
     if !report_path.is_empty() {
-        std::fs::write(report_path, dist_report_json(&r))
+        std::fs::write(report_path, r.to_json().to_string_pretty())
             .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;
         d2ft::info!("wrote dist report to {report_path}");
     }
@@ -443,61 +468,4 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
 #[cfg(not(feature = "native"))]
 fn run_dist(_args: &d2ft::util::cli::Args, _cfg: TrainerConfig) -> Result<()> {
     anyhow::bail!("--dist needs the `native` feature (rebuild with default features)")
-}
-
-/// Serialize the parts of a [`d2ft::dist::DistReport`] the chaos CI
-/// step inspects — loss/accuracy, membership churn, and the recovery
-/// counters — as pretty-printed JSON for `--report-json`.
-#[cfg(feature = "native")]
-fn dist_report_json(r: &d2ft::dist::DistReport) -> String {
-    use d2ft::util::json::{arr, num, obj, s};
-
-    let membership = r
-        .membership
-        .iter()
-        .map(|e| {
-            obj(vec![
-                ("batch", num(e.batch as f64)),
-                ("worker", num(e.worker as f64)),
-                ("kind", s(&e.kind)),
-            ])
-        })
-        .collect();
-    let socket_classes = r
-        .socket
-        .classes()
-        .map(|(name, sent, recv)| {
-            obj(vec![("class", s(name)), ("sent", num(sent as f64)), ("recv", num(recv as f64))])
-        })
-        .collect();
-    let ring_bytes = r
-        .ring_bytes
-        .iter()
-        .map(|&(sent, recv)| obj(vec![("sent", num(sent as f64)), ("recv", num(recv as f64))]))
-        .collect();
-    obj(vec![
-        ("schema", s("d2ft-dist-report-v2")),
-        ("compress", s(&r.compress)),
-        ("workers", num(r.n_workers as f64)),
-        ("live_workers", num(r.live_workers as f64)),
-        ("transport", s(&r.transport)),
-        ("exchange", s(&r.exchange)),
-        ("batches", num(r.train.batches as f64)),
-        ("epochs", num(r.epochs as f64)),
-        ("final_train_loss", num(r.train.final_train_loss)),
-        ("test_top1", num(r.train.test_top1)),
-        ("evictions", num(r.evictions as f64)),
-        ("joins", num(r.joins as f64)),
-        ("reassigned_micros", num(r.reassigned_micros as f64)),
-        ("knapsack_resolves", num(r.knapsack_resolves as f64)),
-        ("checkpoints_written", num(r.checkpoints_written as f64)),
-        ("grad_bytes_up", num(r.wire.up_bytes as f64)),
-        ("grad_bytes_down", num(r.wire.down_bytes as f64)),
-        ("socket_bytes_sent", num(r.socket.bytes_sent as f64)),
-        ("socket_bytes_recv", num(r.socket.bytes_recv as f64)),
-        ("socket_classes", arr(socket_classes)),
-        ("ring_bytes", arr(ring_bytes)),
-        ("membership", arr(membership)),
-    ])
-    .to_string_pretty()
 }

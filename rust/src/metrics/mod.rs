@@ -302,6 +302,32 @@ mod tests {
     }
 
     #[test]
+    fn device_usage_single_device_is_always_balanced() {
+        let mut u = DeviceUsage::new(1);
+        u.record(&[5.0]);
+        u.record(&[2.0]);
+        // One device IS the straggler and the mean: imbalance must be
+        // exactly 0, utilization exactly 1.
+        assert_eq!(u.imbalance(), 0.0);
+        assert!((u.mean_utilization() - 1.0).abs() < 1e-12);
+        assert_eq!(u.n_devices(), 1);
+    }
+
+    #[test]
+    fn device_usage_all_zero_busy_times() {
+        let mut u = DeviceUsage::new(3);
+        u.record(&[0.0, 0.0, 0.0]);
+        u.record(&[0.0, 0.0, 0.0]);
+        // Zero mean busy time must not divide by zero: a cluster that
+        // did no work is reported balanced and idle, not NaN.
+        assert_eq!(u.imbalance(), 0.0);
+        assert_eq!(u.utilization(), vec![0.0; 3]);
+        assert_eq!(u.mean_utilization(), 0.0);
+        assert_eq!(u.total_makespan_ms(), 0.0);
+        assert_eq!(u.steps(), 2);
+    }
+
+    #[test]
     fn ema_converges() {
         let mut e = Ema::new(0.5);
         e.push(0.0);

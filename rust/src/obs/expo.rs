@@ -1,0 +1,169 @@
+//! Live metrics exposition: a tiny std-only HTTP endpoint serving a
+//! [`Registry`](super::metrics::Registry) as Prometheus text
+//! (`GET /metrics`, also at `/`) or a JSON dump (`GET /json`).
+//!
+//! One accept thread, one short-lived handler per connection,
+//! `HTTP/1.0` + `Connection: close` semantics — enough for a scraper
+//! or `curl`, with zero dependencies and no interference with the
+//! training hot path (the registry is read via atomic loads and one
+//! brief map lock per render).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::Result;
+
+use super::metrics::Registry;
+
+/// Handle for a running exposition server. Dropping it (or calling
+/// [`stop`](MetricsServer::stop)) shuts the accept loop down.
+#[derive(Debug)]
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks an ephemeral
+    /// port) and serve `reg` until stopped.
+    pub fn start(addr: &str, reg: Arc<Registry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("metrics endpoint bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("d2ft-metrics-http".into())
+            .spawn(move || accept_loop(listener, reg, stop2))?;
+        Ok(MetricsServer { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (useful when started on port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the server thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, reg: Arc<Registry>, stop: Arc<AtomicBool>) {
+    loop {
+        let conn = listener.accept();
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn {
+            Ok((stream, _)) => {
+                // Serve inline: requests are single-line GETs and the
+                // render is microseconds; no per-connection thread.
+                let _ = handle_conn(stream, &reg);
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, reg: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf)?;
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let path = req
+        .lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("/");
+    let (status, ctype, body) = if path == "/json" {
+        (
+            "200 OK",
+            "application/json",
+            reg.to_json().to_string_pretty(),
+        )
+    } else if path == "/" || path == "/metrics" {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            reg.render_prometheus(),
+        )
+    } else {
+        ("404 Not Found", "text/plain", format!("no such path: {path}\n"))
+    };
+    let resp = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("read response");
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn scrape_parses_as_prometheus_and_json() {
+        let reg = Arc::new(Registry::new());
+        reg.inc("d2ft_wire_up_bytes_total", 1234);
+        reg.set("d2ft_workers_live", 4.0);
+        reg.observe("d2ft_step_latency_ms", 12.5);
+        let server = MetricsServer::start("127.0.0.1:0", Arc::clone(&reg)).expect("start");
+        let addr = server.addr();
+
+        let (head, body) = http_get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+        assert!(head.contains("text/plain"), "{head}");
+        assert!(body.contains("d2ft_wire_up_bytes_total 1234"), "{body}");
+        assert!(body.contains("d2ft_workers_live 4"), "{body}");
+        assert!(body.contains("d2ft_step_latency_ms_count 1"), "{body}");
+        for line in body.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, val) = line.rsplit_once(' ').expect("metric line");
+            val.parse::<f64>().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        }
+
+        // Live update is visible on the next scrape.
+        reg.inc("d2ft_wire_up_bytes_total", 1);
+        let (_, body2) = http_get(addr, "/metrics");
+        assert!(body2.contains("d2ft_wire_up_bytes_total 1235"), "{body2}");
+
+        let (jhead, jbody) = http_get(addr, "/json");
+        assert!(jhead.contains("application/json"), "{jhead}");
+        let doc = Json::parse(&jbody).expect("json dump parses");
+        assert_eq!(
+            doc.get("counters").unwrap().usize_at("d2ft_wire_up_bytes_total").unwrap(),
+            1235
+        );
+
+        let (nf, _) = http_get(addr, "/nope");
+        assert!(nf.starts_with("HTTP/1.0 404"), "{nf}");
+
+        drop(server); // stop + join must not hang
+    }
+}

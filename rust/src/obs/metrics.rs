@@ -1,0 +1,530 @@
+//! Metrics registry: counters, gauges, and log-bucket histograms with
+//! dependency-free p50/p90/p99, rendered as Prometheus text or JSON.
+//!
+//! A [`Registry`] is an instantiable, thread-safe name → metric map.
+//! The dist trainer owns one per run (so parallel test runs never mix
+//! values) and publishes into it at epoch boundaries and report time;
+//! the `--metrics-addr` HTTP endpoint ([`super::expo`]) serves the
+//! same instance live. A process-wide [`global`] registry exists for
+//! ad-hoc counters outside any run.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`s shared
+//! out of the registry: grab one once and update it lock-free on the
+//! hot path; the registry lock is only taken on lookup and render.
+//!
+//! Naming: keys are Prometheus metric names, optionally with a literal
+//! label set appended (`d2ft_socket_class_sent_bytes_total{class="grad-up"}`).
+//! The renderer groups keys by base name so labeled series share one
+//! `# TYPE` header.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{num, obj, Json};
+
+/// Monotone counter (u64).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `d`.
+    pub fn inc(&self, d: u64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite with an absolute value (for counters mirrored from an
+    /// external accumulator like `WireStats` — publishing a snapshot
+    /// must be idempotent, not additive).
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Instantaneous value (f64, stored as bits in an atomic).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge(AtomicU64::new(0.0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of log-spaced histogram buckets.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Smallest power-of-two bucket exponent: bucket `i` spans
+/// `[2^(i + HIST_MIN_EXP), 2^(i + 1 + HIST_MIN_EXP))`, so bucket 0
+/// absorbs everything below ~1 µs (in ms units) and the top bucket
+/// absorbs every overflow.
+pub const HIST_MIN_EXP: i32 = -21;
+
+/// Lock-free log-bucket histogram: power-of-two buckets over f64
+/// samples, with exact count/sum/min/max. Percentiles come from the
+/// bucket upper bounds clamped to the observed [min, max], so a
+/// one-sample histogram reports that sample at every quantile and an
+/// overflowing sample reports the true max rather than a bucket bound.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+fn f64_update(cell: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for a sample (0 for non-positive or tiny values,
+    /// the top bucket for anything beyond the covered range).
+    pub fn bucket_index(v: f64) -> usize {
+        if v <= 0.0 || v.is_nan() {
+            return 0;
+        }
+        let e = v.log2().floor() as i64 - HIST_MIN_EXP as i64;
+        e.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Record one sample. NaN samples are ignored (a poisoned timing
+    /// must not wedge min/max forever).
+    pub fn observe(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        f64_update(&self.sum_bits, |s| s + v);
+        f64_update(&self.min_bits, |m| m.min(v));
+        f64_update(&self.max_bits, |m| m.max(v));
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Smallest sample (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        let m = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// Largest sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        let m = f64::from_bits(self.max_bits.load(Ordering::Relaxed));
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the upper bound of the
+    /// bucket where the cumulative count crosses `q`, clamped to the
+    /// observed `[min, max]`. Empty histograms report 0.0.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                let upper = 2.0f64.powi(i as i32 + 1 + HIST_MIN_EXP);
+                return upper.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A thread-safe name → metric map; see the module docs.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Get-or-create the counter `name`. A name registered under a
+    /// different kind is replaced (last writer wins; the old handle
+    /// keeps working but is no longer rendered).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.lock();
+        if let Some(Metric::Counter(c)) = m.get(name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(Counter::default());
+        m.insert(name.to_string(), Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.lock();
+        if let Some(Metric::Gauge(g)) = m.get(name) {
+            return Arc::clone(g);
+        }
+        let g = Arc::new(Gauge::default());
+        m.insert(name.to_string(), Metric::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    /// Get-or-create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.lock();
+        if let Some(Metric::Histogram(h)) = m.get(name) {
+            return Arc::clone(h);
+        }
+        let h = Arc::new(Histogram::default());
+        m.insert(name.to_string(), Metric::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    /// Convenience: add `d` to counter `name`.
+    pub fn inc(&self, name: &str, d: u64) {
+        self.counter(name).inc(d);
+    }
+
+    /// Convenience: overwrite counter `name` with a snapshot value.
+    pub fn store(&self, name: &str, v: u64) {
+        self.counter(name).store(v);
+    }
+
+    /// Convenience: set gauge `name`.
+    pub fn set(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Convenience: record a histogram sample under `name`.
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histogram(name).observe(v);
+    }
+
+    /// Read counter `name` back (None if absent or a different kind).
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        match self.lock().get(name) {
+            Some(Metric::Counter(c)) => Some(c.get()),
+            _ => None,
+        }
+    }
+
+    /// Read gauge `name` back (None if absent or a different kind).
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        match self.lock().get(name) {
+            Some(Metric::Gauge(g)) => Some(g.get()),
+            _ => None,
+        }
+    }
+
+    /// Render every metric in the Prometheus text exposition format.
+    /// Histograms render as summaries (p50/p90/p99 quantile series
+    /// plus `_count` and `_sum`).
+    pub fn render_prometheus(&self) -> String {
+        let snapshot: Vec<(String, Metric)> =
+            self.lock().iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, metric) in &snapshot {
+            let base = name.split('{').next().unwrap_or(name).to_string();
+            let fresh_base = base != last_base;
+            match metric {
+                Metric::Counter(c) => {
+                    if fresh_base {
+                        out.push_str(&format!("# TYPE {base} counter\n"));
+                    }
+                    out.push_str(&format!("{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    if fresh_base {
+                        out.push_str(&format!("# TYPE {base} gauge\n"));
+                    }
+                    out.push_str(&format!("{name} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    if fresh_base {
+                        out.push_str(&format!("# TYPE {base} summary\n"));
+                    }
+                    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        out.push_str(&format!(
+                            "{base}{{quantile=\"{label}\"}} {}\n",
+                            h.percentile(q)
+                        ));
+                    }
+                    out.push_str(&format!("{base}_count {}\n", h.count()));
+                    out.push_str(&format!("{base}_sum {}\n", h.sum()));
+                }
+            }
+            last_base = base;
+        }
+        out
+    }
+
+    /// Render every metric as one JSON object (the `/json` dump).
+    pub fn to_json(&self) -> Json {
+        let snapshot: Vec<(String, Metric)> =
+            self.lock().iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for (name, metric) in &snapshot {
+            match metric {
+                Metric::Counter(c) => {
+                    counters.insert(name.clone(), num(c.get() as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(name.clone(), num(g.get()));
+                }
+                Metric::Histogram(h) => {
+                    hists.insert(
+                        name.clone(),
+                        obj(vec![
+                            ("count", num(h.count() as f64)),
+                            ("sum", num(h.sum())),
+                            ("min", num(h.min())),
+                            ("max", num(h.max())),
+                            ("p50", num(h.percentile(0.5))),
+                            ("p90", num(h.percentile(0.9))),
+                            ("p99", num(h.percentile(0.99))),
+                        ]),
+                    );
+                }
+            }
+        }
+        obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+/// The process-wide default registry (ad-hoc counters outside any
+/// run's private registry).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let r = Registry::new();
+        r.inc("a_total", 3);
+        r.inc("a_total", 4);
+        assert_eq!(r.counter_value("a_total"), Some(7));
+        r.store("a_total", 5);
+        assert_eq!(r.counter_value("a_total"), Some(5));
+        r.set("g", 2.5);
+        assert_eq!(r.gauge_value("g"), Some(2.5));
+        assert_eq!(r.counter_value("missing"), None);
+        assert_eq!(r.gauge_value("a_total"), None, "kind mismatch reads as absent");
+    }
+
+    #[test]
+    fn histogram_empty_is_zero_everywhere() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn histogram_one_sample_reports_it_at_every_quantile() {
+        let h = Histogram::default();
+        h.observe(5.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 5.0);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 5.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_clamps_to_observed_max() {
+        let h = Histogram::default();
+        // Far beyond the covered range: lands in the top bucket, whose
+        // upper bound would be astronomically large — the quantile must
+        // clamp to the true max instead.
+        h.observe(1.0e30);
+        assert_eq!(Histogram::bucket_index(1.0e30), HIST_BUCKETS - 1);
+        assert_eq!(h.percentile(0.99), 1.0e30);
+        // Non-positive and tiny samples land in bucket 0; quantiles
+        // stay inside the observed [min, max].
+        let h = Histogram::default();
+        h.observe(-3.0);
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(-3.0), 0);
+        assert_eq!(h.percentile(0.5), -3.0, "single negative sample reports itself");
+        h.observe(0.0);
+        assert_eq!(h.count(), 2);
+        let p = h.percentile(0.5);
+        assert!((-3.0..=0.0).contains(&p), "quantile inside [min, max], got {p}");
+        // NaN is ignored outright.
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn histogram_percentiles_order_sensibly() {
+        let h = Histogram::default();
+        // 100 samples spread over two decades.
+        for i in 1..=100u32 {
+            h.observe(i as f64);
+        }
+        let (p50, p90, p99) = (h.percentile(0.5), h.percentile(0.9), h.percentile(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!((32.0..=100.0).contains(&p50), "p50 bucket bound, got {p50}");
+        assert!(p99 <= 100.0, "clamped to max, got {p99}");
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050.0);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        let r = Arc::new(Registry::new());
+        let threads = 8;
+        let per = 1000;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let c = r.counter("hits_total");
+                    let h = r.histogram("lat_ms");
+                    for i in 0..per {
+                        c.inc(1);
+                        h.observe((t * per + i) as f64 % 17.0 + 0.5);
+                        r.set("last", i as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter_value("hits_total"), Some((threads * per) as u64));
+        let h = r.histogram("lat_ms");
+        assert_eq!(h.count(), (threads * per) as u64);
+        let expect: f64 =
+            (0..threads * per).map(|k| (k % 17) as f64 + 0.5).sum();
+        assert!((h.sum() - expect).abs() < 1e-6, "atomic f64 sum drifted: {}", h.sum());
+        assert!(r.gauge_value("last").is_some());
+    }
+
+    #[test]
+    fn prometheus_text_renders_and_groups_labels() {
+        let r = Registry::new();
+        r.inc("d2ft_bytes_total{class=\"grad-up\"}", 10);
+        r.inc("d2ft_bytes_total{class=\"ring\"}", 20);
+        r.set("d2ft_workers_live", 4.0);
+        let h = r.histogram("d2ft_step_latency_ms");
+        h.observe(12.0);
+        h.observe(15.0);
+        let text = r.render_prometheus();
+        assert_eq!(
+            text.matches("# TYPE d2ft_bytes_total counter").count(),
+            1,
+            "labeled series share one TYPE header:\n{text}"
+        );
+        assert!(text.contains("d2ft_bytes_total{class=\"grad-up\"} 10"), "{text}");
+        assert!(text.contains("d2ft_bytes_total{class=\"ring\"} 20"), "{text}");
+        assert!(text.contains("# TYPE d2ft_workers_live gauge"), "{text}");
+        assert!(text.contains("d2ft_step_latency_ms{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("d2ft_step_latency_ms_count 2"), "{text}");
+        // Every non-comment line is "name[{labels}] value" with a
+        // float-parseable value.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("line has a value");
+            val.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+        }
+    }
+
+    #[test]
+    fn json_dump_mirrors_the_registry() {
+        let r = Registry::new();
+        r.inc("c_total", 2);
+        r.set("g", 1.25);
+        r.observe("h_ms", 3.0);
+        let doc = r.to_json();
+        assert_eq!(doc.get("counters").unwrap().usize_at("c_total").unwrap(), 2);
+        assert_eq!(doc.get("gauges").unwrap().get("g").unwrap().as_f64().unwrap(), 1.25);
+        let h = doc.get("histograms").unwrap().get("h_ms").unwrap();
+        assert_eq!(h.usize_at("count").unwrap(), 1);
+        assert_eq!(h.get("p50").unwrap().as_f64().unwrap(), 3.0);
+    }
+}

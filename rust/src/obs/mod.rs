@@ -1,0 +1,34 @@
+//! Unified observability layer: tracing, metrics, and exposition.
+//!
+//! Three pillars, all dependency-free:
+//!
+//! - [`trace`] — a per-thread ring-buffer span recorder. Arm it with
+//!   [`trace::set_enabled`], record with the [`span!`](crate::span)
+//!   and [`instant!`](crate::instant) macros (cheap no-ops while
+//!   disabled), drain everything with [`trace::drain`], and render a
+//!   Chrome trace-event JSON with [`trace::chrome_trace_json`] that
+//!   loads directly in Perfetto / `chrome://tracing`. Worker processes
+//!   ship their buffers back to the aggregator in `TAG_TRACE` frames
+//!   at epoch boundaries; the merge normalizes clocks via anchors
+//!   exchanged in the Init handshake.
+//! - [`metrics`] — counters, gauges, and log-bucket histograms
+//!   (p50/p90/p99 without dependencies) behind a [`metrics::Registry`]
+//!   of named handles. The dist trainer publishes its run stats —
+//!   wire bytes, per-class socket traffic, step latency, membership —
+//!   into a per-run registry that also backs the `DistReport` JSON.
+//! - [`expo`] — a std-only HTTP endpoint ([`expo::MetricsServer`])
+//!   serving a registry live as Prometheus text (`/metrics`) and JSON
+//!   (`/json`); enabled with `--metrics-addr`.
+//!
+//! The whole layer is observation-only: nothing here feeds back into
+//! scheduling, gradient math, or the wire encode path, so the bitwise
+//! serial ≡ channel ≡ tcp ≡ ring contract is unaffected whether
+//! tracing is armed or not.
+
+pub mod expo;
+pub mod metrics;
+pub mod trace;
+
+pub use expo::MetricsServer;
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::{SpanGuard, TraceBatch, WireEvent};

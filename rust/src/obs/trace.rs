@@ -1,0 +1,552 @@
+//! Cross-process step tracing: per-thread ring-buffer span recording
+//! with bounded memory, merged into one Chrome trace-event JSON.
+//!
+//! Recording is a **cheap no-op when disabled**: every recording call
+//! starts with one relaxed atomic load and returns immediately unless
+//! [`set_enabled`] armed the recorder (the dist trainer arms it when
+//! `--trace-out` is given, and workers arm it from their `InitMsg`).
+//! When enabled, each thread appends into its *own* fixed-capacity ring
+//! (registered once, on first use, under a short-lived global lock), so
+//! hot-path recording never contends across threads — the only other
+//! party that ever touches a thread's ring is [`drain`], which runs at
+//! epoch boundaries.
+//!
+//! Memory is bounded by construction: a ring holds at most
+//! [`RING_CAPACITY`] events and overwrites the oldest beyond that,
+//! counting every overwrite so the merged trace can report truncation
+//! instead of silently losing history.
+//!
+//! ## Event model
+//!
+//! Three kinds, mirroring the Chrome trace-event phases the merged
+//! artifact uses: a **span** (`ph: "X"`, start + duration), an
+//! **instant** (`ph: "i"`), and a **counter** sample (`ph: "C"`).
+//! Every event carries the recording thread's stable `tid`, and a
+//! `lane` — the process-level timeline it belongs to (0 = aggregator,
+//! `w + 1` = worker `w`), set per thread via [`set_lane`] so channel
+//! workers (threads of the aggregator process) and TCP workers
+//! (separate processes) land in the same per-worker Perfetto rows.
+//!
+//! ## Clocks
+//!
+//! Timestamps are microseconds since a process-local [`Instant`] epoch
+//! ([`now_us`]). Worker clocks are normalized at the Init handshake:
+//! the aggregator stamps its own anchor into the `InitMsg`, the worker
+//! records the local time it decoded it, and ships the signed offset
+//! with every [`TraceBatch`] — the merge maps every worker event onto
+//! the aggregator timeline (transit time is treated as zero, which is
+//! exact in-process and sub-millisecond on loopback).
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Maximum events held per thread ring; the oldest events are
+/// overwritten (and counted as truncated) beyond this.
+pub const RING_CAPACITY: usize = 16384;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+
+thread_local! {
+    static LANE: Cell<u32> = const { Cell::new(0) };
+    static TID: Cell<u32> = const { Cell::new(0) };
+    static LOCAL_RING: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+fn epoch() -> &'static Instant {
+    EPOCH.get_or_init(Instant::now)
+}
+
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Arm or disarm the recorder process-wide. Arming also pins the
+/// process clock epoch so [`now_us`] is monotone from here on.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// Whether recording is currently armed (one relaxed load — this is
+/// the entire disabled-path cost of every recording call).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the process trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Assign this thread's process lane (0 = aggregator, `w + 1` =
+/// worker `w`). Threads record into lane 0 until told otherwise.
+pub fn set_lane(lane: u32) {
+    LANE.with(|l| l.set(lane));
+}
+
+fn lane() -> u32 {
+    LANE.with(|l| l.get())
+}
+
+fn tid() -> u32 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+/// What one recorded event *is* (mirrors the Chrome phases).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A duration span (`ph: "X"`): `dur_us` starting at the event's
+    /// timestamp.
+    Span {
+        /// Span length in microseconds.
+        dur_us: u64,
+    },
+    /// A point-in-time marker (`ph: "i"`).
+    Instant,
+    /// A sampled counter value (`ph: "C"`).
+    Counter {
+        /// The sampled value.
+        value: f64,
+    },
+}
+
+/// One recorded event. `name`/`cat` are `&'static str` so the hot
+/// recording path never allocates; [`Event::to_wire`] owns them for
+/// transport and merging.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Event name (e.g. `"grad_step"`).
+    pub name: &'static str,
+    /// Event category (e.g. `"compute"`, `"net"`, `"ring"`).
+    pub cat: &'static str,
+    /// Span / instant / counter.
+    pub kind: EventKind,
+    /// Microseconds since the recording process's trace epoch.
+    pub ts_us: u64,
+    /// Stable per-thread id (small integers, first-use order).
+    pub tid: u32,
+    /// Process lane: 0 = aggregator, `w + 1` = worker `w`.
+    pub lane: u32,
+}
+
+impl Event {
+    /// Owned form for transport and cross-process merging.
+    pub fn to_wire(&self) -> WireEvent {
+        WireEvent {
+            name: self.name.to_string(),
+            cat: self.cat.to_string(),
+            kind: self.kind,
+            ts_us: self.ts_us,
+            tid: self.tid,
+            lane: self.lane,
+        }
+    }
+}
+
+/// An [`Event`] with owned strings — what crosses the wire in a
+/// `TAG_TRACE` frame and what the Chrome merge consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireEvent {
+    /// Event name.
+    pub name: String,
+    /// Event category.
+    pub cat: String,
+    /// Span / instant / counter.
+    pub kind: EventKind,
+    /// Microseconds since the *recording* process's trace epoch (the
+    /// merge applies the batch's clock offset).
+    pub ts_us: u64,
+    /// Stable per-thread id within the recording process.
+    pub tid: u32,
+    /// Process lane: 0 = aggregator, `w + 1` = worker `w`.
+    pub lane: u32,
+}
+
+/// Everything one [`drain`] produced: the events (chronological) and
+/// how many older events the rings overwrote to stay bounded.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBatch {
+    /// Drained events, ascending by timestamp.
+    pub events: Vec<Event>,
+    /// Events lost to ring overwrites since the previous drain.
+    pub truncated: u64,
+}
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Oldest-element index once the buffer is full (next overwrite
+    /// target); 0 while still filling.
+    head: usize,
+    truncated: u64,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { buf: Vec::new(), head: 0, truncated: 0 }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.buf.len() < RING_CAPACITY {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % RING_CAPACITY;
+            self.truncated += 1;
+        }
+    }
+
+    fn drain(&mut self) -> (Vec<Event>, u64) {
+        let mut out = std::mem::take(&mut self.buf);
+        // Rotate a wrapped ring back to chronological order.
+        if self.head > 0 && self.head <= out.len() {
+            out.rotate_left(self.head);
+        }
+        self.head = 0;
+        (out, std::mem::take(&mut self.truncated))
+    }
+}
+
+fn with_local_ring(f: impl FnOnce(&mut Ring)) {
+    LOCAL_RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let ring = Arc::new(Mutex::new(Ring::new()));
+            match rings().lock() {
+                Ok(mut all) => all.push(Arc::clone(&ring)),
+                Err(poisoned) => poisoned.into_inner().push(Arc::clone(&ring)),
+            }
+            *slot = Some(ring);
+        }
+        let ring = slot.as_ref().expect("local ring just installed");
+        match ring.lock() {
+            Ok(mut g) => f(&mut g),
+            Err(poisoned) => f(&mut poisoned.into_inner()),
+        }
+    });
+}
+
+/// Record an instant marker (no-op unless [`enabled`]).
+pub fn instant(cat: &'static str, name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    let e = Event {
+        name,
+        cat,
+        kind: EventKind::Instant,
+        ts_us: now_us(),
+        tid: tid(),
+        lane: lane(),
+    };
+    with_local_ring(|r| r.push(e));
+}
+
+/// Record a counter sample (no-op unless [`enabled`]).
+pub fn counter(cat: &'static str, name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let e = Event {
+        name,
+        cat,
+        kind: EventKind::Counter { value },
+        ts_us: now_us(),
+        tid: tid(),
+        lane: lane(),
+    };
+    with_local_ring(|r| r.push(e));
+}
+
+/// Open a span; the returned guard records one [`EventKind::Span`]
+/// covering its lifetime when dropped. Disabled-at-open spans stay
+/// no-ops for their whole life (enable/disable races cannot produce
+/// half-recorded spans).
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    let armed = enabled();
+    SpanGuard { name, cat, start_us: if armed { now_us() } else { 0 }, armed }
+}
+
+/// Live span handle from [`span`]; records on drop.
+#[must_use = "a span guard records its duration when dropped — bind it to a variable"]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    armed: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let e = Event {
+            name: self.name,
+            cat: self.cat,
+            kind: EventKind::Span { dur_us: now_us().saturating_sub(self.start_us) },
+            ts_us: self.start_us,
+            tid: tid(),
+            lane: lane(),
+        };
+        with_local_ring(|r| r.push(e));
+    }
+}
+
+/// Open a trace span (sugar over [`crate::obs::trace::span`]); bind
+/// the guard: `let _t = span!("net", "tcp_send");`.
+#[macro_export]
+macro_rules! span {
+    ($cat:expr, $name:expr) => {
+        $crate::obs::trace::span($cat, $name)
+    };
+}
+
+/// Record a trace instant (sugar over [`crate::obs::trace::instant`]).
+#[macro_export]
+macro_rules! instant {
+    ($cat:expr, $name:expr) => {
+        $crate::obs::trace::instant($cat, $name)
+    };
+}
+
+/// Drain every thread's ring (destructive): all events recorded since
+/// the previous drain, chronological, plus the total truncation count.
+/// Workers call this at epoch boundaries to ship their buffers home;
+/// the aggregator calls it once more before writing the merged trace.
+pub fn drain() -> TraceBatch {
+    let mut batch = TraceBatch::default();
+    let all = match rings().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    for ring in all.iter() {
+        let (events, truncated) = match ring.lock() {
+            Ok(mut g) => g.drain(),
+            Err(poisoned) => poisoned.into_inner().drain(),
+        };
+        batch.events.extend(events);
+        batch.truncated += truncated;
+    }
+    batch.events.sort_by_key(|e| e.ts_us);
+    batch
+}
+
+/// Render merged events as a Chrome trace-event JSON document
+/// (`chrome://tracing` / Perfetto "JSON" format): one `pid` lane per
+/// process (aggregator = 0), `ph: "M"` metadata naming each lane, and
+/// the events sorted by normalized timestamp. `truncated` lands in a
+/// top-level field so a clipped trace is identifiable.
+pub fn chrome_trace_json(events: &[WireEvent], truncated: u64) -> Json {
+    let mut lanes: Vec<u32> = events.iter().map(|e| e.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    let mut out = Vec::with_capacity(events.len() + 2 * lanes.len());
+    for &lane in &lanes {
+        let label =
+            if lane == 0 { "aggregator".to_string() } else { format!("worker {}", lane - 1) };
+        out.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(lane as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s(&label))])),
+        ]));
+        out.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_sort_index")),
+            ("pid", num(lane as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("sort_index", num(lane as f64))])),
+        ]));
+    }
+    let mut sorted: Vec<&WireEvent> = events.iter().collect();
+    sorted.sort_by_key(|e| e.ts_us);
+    for e in sorted {
+        let mut fields = vec![
+            ("name", s(&e.name)),
+            ("cat", s(&e.cat)),
+            ("pid", num(e.lane as f64)),
+            ("tid", num(e.tid as f64)),
+            ("ts", num(e.ts_us as f64)),
+        ];
+        match e.kind {
+            EventKind::Span { dur_us } => {
+                fields.push(("ph", s("X")));
+                fields.push(("dur", num(dur_us as f64)));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", s("i")));
+                fields.push(("s", s("t")));
+            }
+            EventKind::Counter { value } => {
+                fields.push(("ph", s("C")));
+                fields.push(("args", obj(vec![("value", num(value))])));
+            }
+        }
+        out.push(obj(fields));
+    }
+    obj(vec![
+        ("traceEvents", arr(out)),
+        ("displayTimeUnit", s("ms")),
+        ("truncatedEvents", num(truncated as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global state; tests that arm/drain it
+    // serialize on this lock so the parallel test harness cannot make
+    // them steal each other's events.
+    pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        match LOCK.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = test_lock();
+        set_enabled(false);
+        let _ = drain();
+        instant("t", "nothing");
+        counter("t", "nope", 1.0);
+        {
+            let _sp = span("t", "invisible");
+        }
+        let batch = drain();
+        assert!(batch.events.is_empty(), "disabled recorder must record nothing");
+        assert_eq!(batch.truncated, 0);
+    }
+
+    #[test]
+    fn spans_instants_and_counters_record_in_order() {
+        let _g = test_lock();
+        set_enabled(true);
+        let _ = drain();
+        {
+            let _sp = span("cat", "outer");
+            instant("cat", "mark");
+            counter("cat", "gauge", 2.5);
+        }
+        set_enabled(false);
+        let batch = drain();
+        assert_eq!(batch.events.len(), 3);
+        assert_eq!(batch.truncated, 0);
+        // The span records at drop, so it carries the earliest ts but
+        // lands last in ring order; drain sorts by ts.
+        assert!(batch.events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        let names: Vec<&str> = batch.events.iter().map(|e| e.name).collect();
+        assert!(names.contains(&"outer") && names.contains(&"mark") && names.contains(&"gauge"));
+        let sp = batch.events.iter().find(|e| e.name == "outer").unwrap();
+        assert!(matches!(sp.kind, EventKind::Span { .. }));
+        let c = batch.events.iter().find(|e| e.name == "gauge").unwrap();
+        assert_eq!(c.kind, EventKind::Counter { value: 2.5 });
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_truncation() {
+        let _g = test_lock();
+        set_enabled(true);
+        let _ = drain();
+        let extra = 100;
+        for _ in 0..RING_CAPACITY + extra {
+            instant("t", "tick");
+        }
+        set_enabled(false);
+        let batch = drain();
+        assert_eq!(batch.events.len(), RING_CAPACITY, "ring must stay bounded");
+        assert_eq!(batch.truncated as usize, extra, "overwrites must be counted");
+        assert!(
+            batch.events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us),
+            "a wrapped ring must drain chronologically"
+        );
+        // The drained window is the *newest* RING_CAPACITY events.
+        let empty = drain();
+        assert!(empty.events.is_empty());
+    }
+
+    #[test]
+    fn lanes_tag_events_per_thread() {
+        let _g = test_lock();
+        set_enabled(true);
+        let _ = drain();
+        instant("t", "agg_side");
+        std::thread::spawn(|| {
+            set_lane(3);
+            instant("t", "worker_side");
+        })
+        .join()
+        .unwrap();
+        set_enabled(false);
+        let batch = drain();
+        let agg = batch.events.iter().find(|e| e.name == "agg_side").unwrap();
+        let wrk = batch.events.iter().find(|e| e.name == "worker_side").unwrap();
+        assert_eq!(agg.lane, 0);
+        assert_eq!(wrk.lane, 3);
+        assert_ne!(agg.tid, wrk.tid, "threads must get distinct tids");
+    }
+
+    #[test]
+    fn chrome_json_shape_holds() {
+        let events = vec![
+            Event {
+                name: "grad_step",
+                cat: "compute",
+                kind: EventKind::Span { dur_us: 120 },
+                ts_us: 10,
+                tid: 1,
+                lane: 1,
+            }
+            .to_wire(),
+            Event {
+                name: "evict",
+                cat: "ctrl",
+                kind: EventKind::Instant,
+                ts_us: 40,
+                tid: 2,
+                lane: 0,
+            }
+            .to_wire(),
+        ];
+        let doc = chrome_trace_json(&events, 7);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 lanes x 2 metadata + 2 events.
+        assert_eq!(evs.len(), 6);
+        assert_eq!(back.get("truncatedEvents").unwrap().as_usize().unwrap(), 7);
+        let span_ev = evs
+            .iter()
+            .find(|e| e.str_at("name").map(|n| n == "grad_step").unwrap_or(false))
+            .unwrap();
+        assert_eq!(span_ev.str_at("ph").unwrap(), "X");
+        assert_eq!(span_ev.usize_at("dur").unwrap(), 120);
+        assert_eq!(span_ev.usize_at("pid").unwrap(), 1);
+        let names: Vec<String> = evs
+            .iter()
+            .filter(|e| e.str_at("ph").map(|p| p == "M").unwrap_or(false))
+            .filter(|e| e.str_at("name").map(|n| n == "process_name").unwrap_or(false))
+            .map(|e| e.get("args").unwrap().str_at("name").unwrap())
+            .collect();
+        assert!(names.contains(&"aggregator".to_string()));
+        assert!(names.contains(&"worker 0".to_string()));
+    }
+}

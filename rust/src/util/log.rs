@@ -1,7 +1,11 @@
 //! Leveled stderr logger with wall-clock-relative timestamps.
 //!
-//! Level is process-global (`D2FT_LOG=debug|info|warn|error`, default
-//! info). The macros are cheap when the level is filtered out.
+//! Level is process-global (`D2FT_LOG=debug|info|warn|error`,
+//! case-insensitive, default info; an unrecognized value warns once
+//! listing the valid names rather than being silently ignored). The
+//! macros are cheap when the level is filtered out. Every emitted
+//! message also lands as an `obs::trace` instant when tracing is armed,
+//! so log lines show up inline on the Perfetto timeline.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -23,16 +27,48 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(1);
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Parse a level name, case-insensitively. `None` for anything that is
+/// not one of `debug|info|warn|error`.
+pub fn parse_level(name: &str) -> Option<Level> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
+    }
+}
+
 /// Initialize from the environment; call once at startup (idempotent).
 pub fn init() {
     START.get_or_init(Instant::now);
-    let lvl = match std::env::var("D2FT_LOG").as_deref() {
-        Ok("debug") => Level::Debug,
-        Ok("warn") => Level::Warn,
-        Ok("error") => Level::Error,
-        _ => Level::Info,
+    let lvl = match std::env::var("D2FT_LOG") {
+        Ok(raw) => match parse_level(&raw) {
+            Some(lvl) => lvl,
+            None => {
+                warn_bad_level(&raw);
+                Level::Info
+            }
+        },
+        Err(_) => Level::Info,
     };
     set_level(lvl);
+}
+
+/// Warn exactly once per process about an unrecognized `D2FT_LOG`
+/// value, listing the valid names (init is called from several entry
+/// points and must stay idempotent on stderr too).
+fn warn_bad_level(raw: &str) {
+    static WARNED: OnceLock<()> = OnceLock::new();
+    WARNED.get_or_init(|| {
+        log(
+            Level::Warn,
+            format_args!(
+                "D2FT_LOG={raw:?} is not a log level; valid values are \
+                 debug|info|warn|error (case-insensitive), defaulting to info"
+            ),
+        );
+    });
 }
 
 /// Set the process-global level.
@@ -46,6 +82,8 @@ pub fn enabled(lvl: Level) -> bool {
 }
 
 /// Emit one message (used by the `debug!`/`info!`/`warn_!` macros).
+/// When trace recording is armed, the emission is mirrored as a trace
+/// instant in the `log` category so it appears on the step timeline.
 pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(lvl) {
         return;
@@ -57,6 +95,15 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
         Level::Warn => "WRN",
         Level::Error => "ERR",
     };
+    crate::obs::trace::instant(
+        "log",
+        match lvl {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        },
+    );
     eprintln!("[{t:9.3}s {tag}] {args}");
 }
 
@@ -88,5 +135,17 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(enabled(Level::Error));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn level_names_parse_case_insensitively() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("DEBUG"), Some(Level::Debug));
+        assert_eq!(parse_level("Info"), Some(Level::Info));
+        assert_eq!(parse_level(" warn "), Some(Level::Warn));
+        assert_eq!(parse_level("ERROR"), Some(Level::Error));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level("2"), None);
     }
 }

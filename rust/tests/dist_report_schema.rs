@@ -1,0 +1,100 @@
+//! Golden test for the `--report-json` artifact shape.
+//!
+//! The dist report JSON is a contract consumed outside this crate (the
+//! chaos CI step greps its counters, dashboards parse its byte totals),
+//! so its key set is pinned here exactly. Changing the shape must be a
+//! conscious act: add/remove the key below AND bump `schema_version` in
+//! [`DistReport::to_json`].
+#![cfg(feature = "native")]
+
+use d2ft::backend::native::{NativeProvider, NativeSpec};
+use d2ft::coordinator::{SchedulerKind, TrainerConfig, UpdateMode};
+use d2ft::data::SyntheticKind;
+use d2ft::dist::{DistConfig, DistTrainer};
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::Budget;
+use d2ft::util::json::Json;
+
+/// The pinned v2 key set, sorted (JSON objects render in BTreeMap
+/// order, so this is also the serialization order).
+const GOLDEN_KEYS: &[&str] = &[
+    "batches",
+    "checkpoints_written",
+    "compress",
+    "epochs",
+    "evictions",
+    "exchange",
+    "final_train_loss",
+    "grad_bytes_down",
+    "grad_bytes_up",
+    "joins",
+    "knapsack_resolves",
+    "live_workers",
+    "membership",
+    "reassigned_micros",
+    "ring_bytes",
+    "schema",
+    "schema_version",
+    "socket_bytes_recv",
+    "socket_bytes_sent",
+    "socket_classes",
+    "test_top1",
+    "transport",
+    "workers",
+];
+
+#[test]
+fn report_json_key_set_and_version_are_pinned() {
+    let provider = NativeProvider::new(NativeSpec {
+        config: ModelConfig {
+            img_size: 8,
+            patch: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            lora_rank: 0,
+            head_dim: 8,
+            tokens: 5,
+        },
+        micro_batch: 2,
+        mb_variants: vec![],
+        lora_ranks: vec![2],
+        lora_standard_rank: 2,
+        init_seed: 0x90CD,
+        threads: 1,
+    });
+    let cfg = TrainerConfig {
+        train_size: 40,
+        test_size: 16,
+        batches: 2,
+        pretrain_batches: 1,
+        update: UpdateMode::BatchAccum,
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar10Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 3, 1),
+        )
+    };
+    let mut dt = DistTrainer::new(&provider, DistConfig::new(cfg, 2)).unwrap();
+    let report = dt.run().unwrap();
+
+    // Round-trip through text: the golden contract is about the bytes
+    // a consumer parses, not the in-memory Json value.
+    let text = report.to_json().to_string_pretty();
+    let doc = Json::parse(&text).unwrap();
+    let keys: Vec<&str> = doc.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys, GOLDEN_KEYS,
+        "report-JSON key set drifted — bump schema_version and update this golden list"
+    );
+    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-dist-report-v2");
+    assert_eq!(doc.usize_at("schema_version").unwrap(), 2);
+    assert_eq!(doc.usize_at("workers").unwrap(), 2);
+    assert_eq!(doc.usize_at("live_workers").unwrap(), 2);
+    // Spot-check value kinds a consumer depends on.
+    doc.get("final_train_loss").unwrap().as_f64().unwrap();
+    doc.get("socket_classes").unwrap().as_arr().unwrap();
+    doc.get("membership").unwrap().as_arr().unwrap();
+}

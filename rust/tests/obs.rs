@@ -1,0 +1,177 @@
+//! The observability layer's two contracts, end to end:
+//!
+//! 1. **Observation-only** — arming the step tracer and the metrics
+//!    registry must not change the numerics: a traced dist run produces
+//!    a bitwise identical loss trajectory and final parameters to an
+//!    untraced one.
+//! 2. **Artifact shape** — the merged `--trace-out` document is valid
+//!    Chrome trace-event JSON: per-lane `process_name` metadata for the
+//!    aggregator and every worker, compute/step spans with durations,
+//!    and the registry exposes the wire/step-latency series the CI
+//!    scrape asserts on.
+//!
+//! Everything runs in ONE test function: the trace recorder is
+//! process-global, and the integration-test harness runs `#[test]`s in
+//! parallel threads — a second armed run in this binary would bleed
+//! events into the first run's drain.
+#![cfg(feature = "native")]
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use d2ft::backend::native::{NativeProvider, NativeSpec};
+use d2ft::coordinator::{SchedulerKind, TrainerConfig, UpdateMode};
+use d2ft::data::SyntheticKind;
+use d2ft::dist::{DistConfig, DistTrainer};
+use d2ft::obs::Registry;
+use d2ft::runtime::ModelConfig;
+use d2ft::schedule::Budget;
+use d2ft::util::json::Json;
+
+fn small_provider() -> NativeProvider {
+    NativeProvider::new(NativeSpec {
+        config: ModelConfig {
+            img_size: 8,
+            patch: 4,
+            dim: 16,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            lora_rank: 0,
+            head_dim: 8,
+            tokens: 5,
+        },
+        micro_batch: 2,
+        mb_variants: vec![],
+        lora_ranks: vec![2],
+        lora_standard_rank: 2,
+        init_seed: 0x0B5,
+        threads: 1,
+    })
+}
+
+fn cfg() -> TrainerConfig {
+    TrainerConfig {
+        train_size: 80,
+        test_size: 16,
+        batches: 3,
+        pretrain_batches: 1,
+        update: UpdateMode::BatchAccum,
+        ..TrainerConfig::quick(
+            SyntheticKind::Cifar10Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 3, 1),
+        )
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn tracing_and_metrics_are_observation_only_and_artifact_is_well_formed() {
+    let provider = small_provider();
+
+    // Reference: plain K=2 channel run, recorder disarmed.
+    let mut plain = DistTrainer::new(&provider, DistConfig::new(cfg(), 2)).unwrap();
+    let r_plain = plain.run().unwrap();
+    let w_plain = plain.backend().param("b00_wqkv").unwrap();
+    drop(plain);
+
+    // Same run, fully observed: trace artifact + metrics registry.
+    let trace_path =
+        std::env::temp_dir().join(format!("d2ft_obs_trace_{}.json", std::process::id()));
+    let registry = Arc::new(Registry::new());
+    let dcfg = DistConfig {
+        trace_out: Some(trace_path.clone()),
+        metrics: Some(Arc::clone(&registry)),
+        ..DistConfig::new(cfg(), 2)
+    };
+    let mut traced = DistTrainer::new(&provider, dcfg).unwrap();
+    let r_traced = traced.run().unwrap();
+    let w_traced = traced.backend().param("b00_wqkv").unwrap();
+    drop(traced);
+
+    // --- contract 1: observation changed nothing -------------------
+    assert_eq!(
+        bits(&r_plain.train.loss_curve),
+        bits(&r_traced.train.loss_curve),
+        "tracing must not change the loss trajectory"
+    );
+    assert_eq!(
+        r_plain.train.test_top1.to_bits(),
+        r_traced.train.test_top1.to_bits(),
+        "tracing must not change eval accuracy"
+    );
+    assert_eq!(w_plain, w_traced, "tracing must not change the final parameters");
+
+    // --- contract 2a: the trace artifact is well-formed ------------
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "a traced run must record events");
+    doc.get("truncatedEvents").unwrap().as_f64().unwrap();
+
+    let mut lanes = BTreeSet::new();
+    let mut named_lanes = BTreeSet::new();
+    let mut cats = BTreeSet::new();
+    let mut span_with_dur = 0usize;
+    let mut last_ts = f64::NEG_INFINITY;
+    for e in events {
+        let ph = e.str_at("ph").unwrap();
+        let pid = e.get("pid").unwrap().as_usize().unwrap();
+        lanes.insert(pid);
+        if ph == "M" {
+            if e.str_at("name").unwrap() == "process_name" {
+                named_lanes.insert(pid);
+            }
+            continue;
+        }
+        cats.insert(e.str_at("cat").unwrap());
+        if ph == "X" {
+            e.get("dur").unwrap().as_f64().unwrap();
+            span_with_dur += 1;
+        }
+        // Non-metadata events are emitted sorted by normalized ts.
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "trace timestamps must be monotone after the merge");
+        last_ts = ts;
+    }
+    // Aggregator lane plus one lane per worker, each named.
+    for lane in [0usize, 1, 2] {
+        assert!(lanes.contains(&lane), "missing lane {lane} (pids seen: {lanes:?})");
+        assert!(named_lanes.contains(&lane), "lane {lane} has no process_name metadata");
+    }
+    assert!(span_with_dur > 0, "expected at least one completed span");
+    for cat in ["compute", "step", "agg", "codec"] {
+        assert!(cats.contains(cat), "expected category {cat:?} (saw: {cats:?})");
+    }
+    std::fs::remove_file(&trace_path).ok();
+
+    // --- contract 2b: the registry carries the run's series --------
+    assert!(
+        registry.counter_value("d2ft_wire_up_bytes").unwrap() > 0,
+        "uplink bytes must be published"
+    );
+    assert_eq!(
+        registry.counter_value("d2ft_evictions_total"),
+        Some(0),
+        "a clean run publishes zero evictions"
+    );
+    assert_eq!(registry.gauge_value("d2ft_workers_live"), Some(2.0));
+    let prom = registry.render_prometheus();
+    for series in
+        ["d2ft_step_latency_ms", "d2ft_socket_bytes_sent", "d2ft_wire_up_bytes", "quantile=\"0.9\""]
+    {
+        assert!(prom.contains(series), "Prometheus text must carry {series:?}:\n{prom}");
+    }
+    let json = registry.to_json();
+    let hist = json.get("histograms").unwrap().get("d2ft_step_latency_ms").unwrap();
+    assert_eq!(
+        hist.get("count").unwrap().as_usize().unwrap(),
+        3,
+        "one step-latency sample per fine-tuning batch"
+    );
+}
