@@ -16,7 +16,8 @@
 //! end — a truncated, corrupt, or foreign file produces a descriptive
 //! error, never a panic or a garbage resume.
 
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -54,7 +55,7 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn fnv64(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
@@ -193,6 +194,201 @@ impl Checkpoint {
         Checkpoint::decode(&bytes)
             .with_context(|| format!("parsing checkpoint {}", path.display()))
     }
+
+    /// Write the checkpoint to `path` crash-atomically: encode to a
+    /// `.tmp` sibling, fsync it, then rename over the target. A crash
+    /// at any point leaves either the previous checkpoint intact or
+    /// the new one complete — never a half-written file under the real
+    /// name (the leftover `.tmp`, if any, is ignored by loaders).
+    pub fn save_atomic(&self, path: &Path) -> Result<()> {
+        let _sp = crate::obs::trace::span("ckpt", "save");
+        write_atomic(path, &self.encode())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+}
+
+/// The tmp-write + fsync + rename dance shared by checkpoints and
+/// progress records.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow::anyhow!("atomic write target {} has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    // Durability of the rename itself needs the directory synced; best
+    // effort — a failure here degrades crash-durability, not
+    // correctness of what a reader observes.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Epoch number parsed from a rotated checkpoint file name
+/// (`ckpt_e{N}.d2ck`), `None` for anything else (including `.tmp`
+/// leftovers from an interrupted atomic write).
+fn ckpt_epoch(name: &str) -> Option<usize> {
+    name.strip_prefix("ckpt_e")?.strip_suffix(".d2ck")?.parse().ok()
+}
+
+/// Path of the epoch-`e` checkpoint inside a checkpoint directory.
+pub fn ckpt_path(dir: &Path, epoch: usize) -> PathBuf {
+    dir.join(format!("ckpt_e{epoch}.d2ck"))
+}
+
+/// Delete all but the `retain` newest `ckpt_e{N}.d2ck` files in `dir`.
+/// Returns how many were removed. Foreign files and `.tmp` leftovers
+/// are never touched.
+pub fn rotate(dir: &Path, retain: usize) -> Result<usize> {
+    let mut epochs: Vec<usize> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| ckpt_epoch(&e.file_name().to_string_lossy()))
+        .collect();
+    epochs.sort_unstable_by(|a, b| b.cmp(a));
+    let mut removed = 0;
+    for &e in epochs.iter().skip(retain.max(1)) {
+        if std::fs::remove_file(ckpt_path(dir, e)).is_ok() {
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// Find the newest *loadable* checkpoint in `dir`: scan `ckpt_e{N}`
+/// names newest-first and return the first that decodes, skipping any
+/// corrupt or truncated newer one — which is what makes a crash during
+/// (or right before) a checkpoint write recoverable from the previous
+/// epoch.
+pub fn latest_valid(dir: &Path) -> Result<Option<(PathBuf, Checkpoint)>> {
+    let mut epochs: Vec<usize> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| ckpt_epoch(&e.file_name().to_string_lossy()))
+        .collect();
+    epochs.sort_unstable_by(|a, b| b.cmp(a));
+    for e in epochs {
+        let path = ckpt_path(dir, e);
+        match Checkpoint::load(&path) {
+            Ok(ck) => return Ok(Some((path, ck))),
+            Err(err) => {
+                eprintln!("[resume] skipping unreadable checkpoint {}: {err:#}", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+// ---------------------------------------------------------------------------
+// Progress record: step-granular position between epoch checkpoints
+// ---------------------------------------------------------------------------
+
+/// File name of the progress record inside a checkpoint directory.
+pub const PROGRESS_FILE: &str = "progress.d2pr";
+
+/// Progress-record magic: `D2PR` little-endian.
+const PR_MAGIC: u32 = u32::from_le_bytes(*b"D2PR");
+/// Progress-record format version.
+const PR_VERSION: u32 = 1;
+
+/// A tiny step-granular position record, rewritten (atomically) after
+/// every batch. It does NOT carry state — resume always replays from
+/// the last epoch checkpoint — but it tells a restarted aggregator
+/// where the crash landed and how many restarts the run has absorbed,
+/// and gives operators a live progress probe that is always loadable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Progress {
+    /// Epochs fully completed.
+    pub epoch: usize,
+    /// Batches completed within the current epoch.
+    pub batch: usize,
+    /// Global step counter after the last completed batch.
+    pub step: u64,
+    /// Aggregator restarts absorbed so far in this run.
+    pub restarts: u32,
+}
+
+impl Progress {
+    /// Serialize to the `D2PR` byte format (header + fields + fnv64).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(36);
+        put_u32(&mut out, PR_MAGIC);
+        put_u32(&mut out, PR_VERSION);
+        put_u32(&mut out, self.epoch as u32);
+        put_u32(&mut out, self.batch as u32);
+        put_u64(&mut out, self.step);
+        put_u32(&mut out, self.restarts);
+        let sum = fnv64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse a `D2PR` byte blob.
+    pub fn decode(bytes: &[u8]) -> Result<Progress> {
+        anyhow::ensure!(
+            bytes.len() >= 8,
+            "progress record is {} bytes — too short to hold its checksum",
+            bytes.len()
+        );
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual = fnv64(body);
+        anyhow::ensure!(
+            stored == actual,
+            "progress record checksum mismatch — the file is corrupt or truncated"
+        );
+        let mut c = Cursor::new(body);
+        let magic = c.u32("progress magic")?;
+        anyhow::ensure!(
+            magic == PR_MAGIC,
+            "not a d2ft progress record: bad magic {magic:#010x} (expected {PR_MAGIC:#010x})"
+        );
+        let version = c.u32("progress version")?;
+        anyhow::ensure!(
+            version == PR_VERSION,
+            "unsupported progress record version {version} (this build reads {PR_VERSION})"
+        );
+        Ok(Progress {
+            epoch: c.u32("progress epoch")? as usize,
+            batch: c.u32("progress batch")? as usize,
+            step: c.u64("progress step")?,
+            restarts: c.u32("progress restarts")?,
+        })
+    }
+
+    /// Atomically (re)write the record at `dir/progress.d2pr`.
+    pub fn save_atomic(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(PROGRESS_FILE);
+        write_atomic(&path, &self.encode())
+            .with_context(|| format!("writing progress record {}", path.display()))
+    }
+
+    /// Load the record from `dir/progress.d2pr` if one exists and is
+    /// valid; `Ok(None)` when absent, an error when present but
+    /// unreadable.
+    pub fn load(dir: &Path) -> Result<Option<Progress>> {
+        let path = dir.join(PROGRESS_FILE);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", path.display()));
+            }
+        };
+        Progress::decode(&bytes)
+            .with_context(|| format!("parsing progress record {}", path.display()))
+            .map(Some)
+    }
 }
 
 #[cfg(test)]
@@ -271,5 +467,95 @@ mod tests {
         foreign.extend_from_slice(&sum.to_le_bytes());
         let err = Checkpoint::decode(&foreign).unwrap_err().to_string();
         assert!(err.contains("bad magic"), "got: {err}");
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("d2ft-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn at_epoch(epoch: usize) -> Checkpoint {
+        let mut ck = sample();
+        ck.epoch = epoch;
+        ck
+    }
+
+    #[test]
+    fn atomic_save_survives_a_crash_between_tmp_write_and_rename() {
+        let dir = temp_dir("ckpt-atomic");
+        let path = ckpt_path(&dir, 1);
+        at_epoch(1).save_atomic(&path).unwrap();
+        // Simulate a crash mid-upgrade: the NEXT save died after
+        // writing its tmp file but before the rename. The tmp sibling
+        // is garbage; the previous checkpoint must remain loadable and
+        // must be what the resume scan picks.
+        std::fs::write(dir.join("ckpt_e2.d2ck.tmp"), b"half-written").unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.epoch, 1);
+        let (picked, ck) = latest_valid(&dir).unwrap().expect("previous checkpoint loadable");
+        assert_eq!(picked, path);
+        assert_eq!(ck.epoch, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_retains_only_the_newest_checkpoints() {
+        let dir = temp_dir("ckpt-rotate");
+        for e in 0..5 {
+            at_epoch(e).save_atomic(&ckpt_path(&dir, e)).unwrap();
+        }
+        let removed = rotate(&dir, 2).unwrap();
+        assert_eq!(removed, 3);
+        assert!(!ckpt_path(&dir, 0).exists());
+        assert!(!ckpt_path(&dir, 2).exists());
+        assert!(ckpt_path(&dir, 3).exists());
+        assert!(ckpt_path(&dir, 4).exists());
+        // Idempotent: a second rotation removes nothing more.
+        assert_eq!(rotate(&dir, 2).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_scan_skips_a_corrupt_newest_checkpoint() {
+        let dir = temp_dir("ckpt-scan");
+        at_epoch(1).save_atomic(&ckpt_path(&dir, 1)).unwrap();
+        at_epoch(2).save_atomic(&ckpt_path(&dir, 2)).unwrap();
+        // Corrupt the newest in place (torn write after the rename —
+        // e.g. a dying disk); the scan must fall back to epoch 1.
+        let newest = ckpt_path(&dir, 2);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (picked, ck) = latest_valid(&dir).unwrap().expect("older checkpoint valid");
+        assert_eq!(picked, ckpt_path(&dir, 1));
+        assert_eq!(ck.epoch, 1);
+        // An empty/garbage-only dir resumes as None, not an error.
+        let empty = temp_dir("ckpt-scan-empty");
+        assert!(latest_valid(&empty).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+
+    #[test]
+    fn progress_records_round_trip_and_reject_corruption() {
+        let pr = Progress { epoch: 3, batch: 7, step: 131, restarts: 2 };
+        assert_eq!(Progress::decode(&pr.encode()).unwrap(), pr);
+        let mut bad = pr.encode();
+        bad[9] ^= 0x01;
+        let err = Progress::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+
+        let dir = temp_dir("progress");
+        assert_eq!(Progress::load(&dir).unwrap(), None);
+        pr.save_atomic(&dir).unwrap();
+        assert_eq!(Progress::load(&dir).unwrap(), Some(pr));
+        // Overwrites are atomic replacements, not appends.
+        let pr2 = Progress { epoch: 3, batch: 8, step: 132, restarts: 2 };
+        pr2.save_atomic(&dir).unwrap();
+        assert_eq!(Progress::load(&dir).unwrap(), Some(pr2));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -14,11 +14,20 @@
 //!          | 'stall-ms=' MS '@' N      # sleep MS ms once, before send N
 //!          | 'drop-uplink=' N          # compute but drop gradient send N
 //!          | 'rejoin-at-epoch=' E      # (trainer-side) respawn at epoch E
+//!          | 'reset-after-frame=' N    # network: fail send N like a TCP reset
+//!          | 'corrupt-frame=' N        # network: damage frame N's CRC trailer
+//!          | 'delay-ms=' MS '@' N      # network: sleep MS ms before frame N
+//!          | 'partition-ms=' MS '@' E  # network: both directions dead for MS
+//!                                      #   ms starting at frame E, then heal
 //! ```
 //!
-//! Counting is in *gradient sends*: deterministic under the overlap
-//! pipeline because actions trigger at queueing time, before any
-//! timing-dependent interleaving.
+//! Compute verbs count in *gradient sends*: deterministic under the
+//! overlap pipeline because actions trigger at queueing time, before
+//! any timing-dependent interleaving. Network verbs count in *outbound
+//! frames* on the aggregator link (handshake, heartbeats, and trace
+//! flushes included) and are acted out by
+//! [`super::transport::FlakyTransport`], which wraps the worker's
+//! transport when a plan carries any of them.
 
 use anyhow::Result;
 
@@ -39,6 +48,26 @@ pub enum FaultAction {
     DropUplinkFrame(usize),
     /// Trainer-side: respawn this worker at the start of epoch `e`.
     RejoinAtEpoch(usize),
+    /// Network: fail outbound frame `n` as a connection reset would,
+    /// and surface one matching error on the receive half.
+    ResetAfterFrame(usize),
+    /// Network: deliver outbound frame `n` with a damaged CRC trailer.
+    CorruptFrame(usize),
+    /// Network: sleep `ms` milliseconds before outbound frame `at`.
+    DelayMs {
+        /// Delay duration in milliseconds.
+        ms: u64,
+        /// Outbound frame index the delay precedes.
+        at: usize,
+    },
+    /// Network: both directions fail from outbound frame `at` for `ms`
+    /// wall-clock milliseconds, then the link heals.
+    PartitionMs {
+        /// Partition duration in milliseconds.
+        ms: u64,
+        /// Outbound frame index that opens the partition.
+        at: usize,
+    },
 }
 
 impl std::fmt::Display for FaultAction {
@@ -48,6 +77,10 @@ impl std::fmt::Display for FaultAction {
             FaultAction::StallMs { after_micro, ms } => write!(f, "stall-ms={ms}@{after_micro}"),
             FaultAction::DropUplinkFrame(n) => write!(f, "drop-uplink={n}"),
             FaultAction::RejoinAtEpoch(e) => write!(f, "rejoin-at-epoch={e}"),
+            FaultAction::ResetAfterFrame(n) => write!(f, "reset-after-frame={n}"),
+            FaultAction::CorruptFrame(n) => write!(f, "corrupt-frame={n}"),
+            FaultAction::DelayMs { ms, at } => write!(f, "delay-ms={ms}@{at}"),
+            FaultAction::PartitionMs { ms, at } => write!(f, "partition-ms={ms}@{at}"),
         }
     }
 }
@@ -76,6 +109,8 @@ impl FaultPlan {
                 "kill-after-micro" => FaultAction::KillAfterMicro(parse_num(val, part)?),
                 "drop-uplink" => FaultAction::DropUplinkFrame(parse_num(val, part)?),
                 "rejoin-at-epoch" => FaultAction::RejoinAtEpoch(parse_num(val, part)?),
+                "reset-after-frame" => FaultAction::ResetAfterFrame(parse_num(val, part)?),
+                "corrupt-frame" => FaultAction::CorruptFrame(parse_num(val, part)?),
                 "stall-ms" => {
                     let (ms, at) = val.split_once('@').ok_or_else(|| {
                         anyhow::anyhow!("stall action {part:?} needs 'stall-ms=MS@N'")
@@ -85,9 +120,28 @@ impl FaultPlan {
                         ms: parse_num::<u64>(ms, part)?,
                     }
                 }
+                "delay-ms" => {
+                    let (ms, at) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("delay action {part:?} needs 'delay-ms=MS@N'")
+                    })?;
+                    FaultAction::DelayMs {
+                        ms: parse_num::<u64>(ms, part)?,
+                        at: parse_num(at, part)?,
+                    }
+                }
+                "partition-ms" => {
+                    let (ms, at) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("partition action {part:?} needs 'partition-ms=MS@E'")
+                    })?;
+                    FaultAction::PartitionMs {
+                        ms: parse_num::<u64>(ms, part)?,
+                        at: parse_num(at, part)?,
+                    }
+                }
                 _ => anyhow::bail!(
                     "unknown fault action {key:?} \
-                     (kill-after-micro|stall-ms|drop-uplink|rejoin-at-epoch)"
+                     (kill-after-micro|stall-ms|drop-uplink|rejoin-at-epoch\
+                     |reset-after-frame|corrupt-frame|delay-ms|partition-ms)"
                 ),
             };
             actions.push(action);
@@ -153,6 +207,29 @@ mod tests {
         let s = plan.to_string();
         assert_eq!(s, "kill-after-micro=2;stall-ms=200@1;drop-uplink=4;rejoin-at-epoch=1");
         assert_eq!(FaultPlan::parse(&s).unwrap(), plan);
+    }
+
+    #[test]
+    fn network_verbs_round_trip_through_display() {
+        let plan = FaultPlan {
+            actions: vec![
+                FaultAction::ResetAfterFrame(5),
+                FaultAction::CorruptFrame(3),
+                FaultAction::DelayMs { ms: 40, at: 2 },
+                FaultAction::PartitionMs { ms: 250, at: 7 },
+            ],
+        };
+        let s = plan.to_string();
+        assert_eq!(s, "reset-after-frame=5;corrupt-frame=3;delay-ms=40@2;partition-ms=250@7");
+        assert_eq!(FaultPlan::parse(&s).unwrap(), plan);
+        // Mixed compute + network verbs coexist in one plan.
+        let mixed = FaultPlan::parse("kill-after-micro=4;corrupt-frame=1").unwrap();
+        assert_eq!(mixed.actions.len(), 2);
+        // Malformed network verbs error descriptively.
+        let err = FaultPlan::parse("delay-ms=40").unwrap_err().to_string();
+        assert!(err.contains("delay-ms=MS@N"), "got: {err}");
+        let err = FaultPlan::parse("partition-ms=9").unwrap_err().to_string();
+        assert!(err.contains("partition-ms=MS@E"), "got: {err}");
     }
 
     #[test]

@@ -75,10 +75,22 @@
 //!   the same fixed reduction order, so recovery — like everything
 //!   else here — cannot change the numerics. Scripted
 //!   [`fault::FaultPlan`]s (`kill-after-micro=N`, `stall-ms=M@N`,
-//!   `drop-uplink=N`, `rejoin-at-epoch=E`) inject failures
-//!   deterministically in-process or over TCP; epoch-boundary
-//!   [`checkpoint::Checkpoint`]s make a killed run resumable bitwise
-//!   (`tests/dist_fault.rs`).
+//!   `drop-uplink=N`, `rejoin-at-epoch=E`, plus the network-layer
+//!   verbs `reset-after-frame=N`, `corrupt-frame=N`, `delay-ms=M@N`,
+//!   `partition-ms=M@E`) inject failures deterministically in-process
+//!   or over TCP; epoch-boundary [`checkpoint::Checkpoint`]s make a
+//!   killed run resumable bitwise (`tests/dist_fault.rs`).
+//!   The coordinator itself is a survivable component, not a single
+//!   point of failure: checkpoints are written atomically (tmp +
+//!   rename + fsync) and rotated, a step-granular
+//!   [`checkpoint::Progress`] record tracks the last completed batch
+//!   *between* epoch checkpoints, and `--resume <dir>` restarts a
+//!   killed aggregator mid-epoch. Workers that outlive it keep
+//!   redialing with capped exponential backoff
+//!   ([`worker::run_worker_reconnecting`]) and re-`Join` carrying an
+//!   incarnation token, so the restarted run converges bitwise to the
+//!   uninterrupted one. Every TCP frame carries a CRC32C trailer;
+//!   a corrupt arrival is NACKed for a resend, never an eviction.
 //!
 //! The runtime is instrumented end to end with [`crate::obs`]:
 //! `DistConfig::trace_out` arms the cross-process step tracer (worker
@@ -99,12 +111,12 @@ pub mod transport;
 pub mod worker;
 
 pub use allreduce::{ExchangeMode, OrderedReducer};
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{ckpt_path, latest_valid, rotate, Checkpoint, Progress};
 pub use fault::{parse_worker_plans, FaultAction, FaultPlan};
 pub use grads::{BufPool, GradCodec, WireCompression, WirePrecision, WireStats};
 pub use trainer::{DistConfig, DistReport, DistTrainer, MembershipEvent};
 pub use transport::{
-    liveness_window, BlobRx, BlobTx, SpawnMode, TcpTransport, Transport, TransportKind,
-    TransportStats,
+    is_corrupt_frame_err, liveness_window, BlobRx, BlobTx, FlakyState, FlakyTransport, SpawnMode,
+    TcpTransport, Transport, TransportKind, TransportStats,
 };
-pub use worker::{run_worker, run_worker_with_faults};
+pub use worker::{run_worker, run_worker_reconnecting, run_worker_with_faults, Backoff};

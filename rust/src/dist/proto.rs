@@ -57,6 +57,11 @@ pub const TAG_EVICT: u32 = 0x4424;
 /// params + momentum) — sent on rejoin and on checkpoint resume so a
 /// late worker becomes a bitwise replica of the aggregator.
 pub const TAG_STATE: u32 = 0x4425;
+/// Aggregator → worker: your last frame arrived corrupt (CRC trailer
+/// mismatch) — resend the retained Up for the named step. Corruption
+/// thus degrades to a retry instead of an eviction; the step stamp
+/// keeps a duplicate resend idempotent at the reducer.
+pub const TAG_NACK: u32 = 0x4426;
 /// Aggregator → worker: open a ring listener (ring-link negotiation,
 /// step 1); reply with [`TAG_RING_ADDR`].
 pub const TAG_RING_LISTEN: u32 = 0x4431;
@@ -99,8 +104,11 @@ pub const TAG_TRACE: u32 = 0x4461;
 /// its frames. v3 added the ring-collective frames, the compressed
 /// wire, and the ring/compress fields of [`InitMsg`]; v4 added the
 /// [`TAG_TRACE`] frame and the trace/clock-anchor fields of
-/// [`InitMsg`].
-pub const PROTO_VERSION: u32 = 4;
+/// [`InitMsg`]; v5 added CRC32C frame trailers (see
+/// [`super::transport`]), the [`TAG_NACK`] resend request, the
+/// incarnation/worker/last-step fields of [`JoinMsg`], and the
+/// incarnation field of [`InitMsg`].
+pub const PROTO_VERSION: u32 = 5;
 
 /// Byte offset of the embedded gradient blob in a [`TAG_UP`] frame:
 /// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8) + step (8).
@@ -316,6 +324,11 @@ pub struct InitMsg {
     /// the difference is the offset that maps worker timestamps onto
     /// the aggregator timeline in the merged trace.
     pub clock_anchor_us: u64,
+    /// The run's incarnation token (a fingerprint of the run identity,
+    /// stable across aggregator restarts). A worker echoes it in every
+    /// later [`JoinMsg`] so a restarted aggregator can tell a surviving
+    /// replica of *this* run from a stray dialer of some other run.
+    pub incarnation: u64,
 }
 
 /// One unit of worker compute: run micro-batch `micro` under `masks`.
@@ -384,6 +397,7 @@ pub fn encode_init(msg: &InitMsg, out: &mut Vec<u8>) {
     put_u64(out, msg.heartbeat_ms);
     out.push(msg.trace as u8);
     put_u64(out, msg.clock_anchor_us);
+    put_u64(out, msg.incarnation);
 }
 
 /// Decode an [`InitMsg`] frame.
@@ -437,6 +451,7 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
     let heartbeat_ms = c.u64("heartbeat interval")?;
     let trace = c.u8("trace flag")? != 0;
     let clock_anchor_us = c.u64("trace clock anchor")?;
+    let incarnation = c.u64("incarnation token")?;
     Ok(InitMsg {
         worker,
         spec,
@@ -450,6 +465,7 @@ pub fn decode_init(frame: &[u8]) -> Result<InitMsg> {
         heartbeat_ms,
         trace,
         clock_anchor_us,
+        incarnation,
     })
 }
 
@@ -737,25 +753,82 @@ pub fn decode_pong(frame: &[u8]) -> Result<u64> {
     Ok(seq)
 }
 
-/// Encode a [`TAG_JOIN`] membership request carrying the worker's
-/// protocol version.
-pub fn encode_join(version: u32, out: &mut Vec<u8>) {
-    put_u32(out, TAG_JOIN);
-    put_u32(out, version);
+/// A worker's membership request, carried in [`TAG_JOIN`]. A fresh
+/// worker sends `incarnation = 0`, `worker = u32::MAX`, `last_step =
+/// 0`; a worker redialing after a link drop or an aggregator restart
+/// echoes the incarnation token and worker id from its last Init (and
+/// the last step it answered), which is how the control plane tells a
+/// reconnect from a first connect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JoinMsg {
+    /// The worker's [`PROTO_VERSION`].
+    pub version: u32,
+    /// Incarnation token from the last Init (0 = never initialized).
+    pub incarnation: u64,
+    /// Worker id from the last Init ([`u32::MAX`] = fresh).
+    pub worker: u32,
+    /// Last aggregator step this worker answered (0 = none).
+    pub last_step: u64,
 }
 
-/// Decode a [`TAG_JOIN`] frame: the worker's protocol version.
-pub fn decode_join(frame: &[u8]) -> Result<u32> {
+impl JoinMsg {
+    /// A first-connect Join from a worker with no prior identity.
+    pub fn fresh(version: u32) -> JoinMsg {
+        JoinMsg { version, incarnation: 0, worker: u32::MAX, last_step: 0 }
+    }
+}
+
+/// Encode a [`TAG_JOIN`] membership request.
+pub fn encode_join(msg: &JoinMsg, out: &mut Vec<u8>) {
+    put_u32(out, TAG_JOIN);
+    put_u32(out, msg.version);
+    put_u64(out, msg.incarnation);
+    put_u32(out, msg.worker);
+    put_u64(out, msg.last_step);
+}
+
+/// Decode a [`TAG_JOIN`] frame. A short pre-v5 Join (tag + version
+/// only) still decodes — as a fresh join — so the version-mismatch
+/// rejection downstream stays descriptive instead of a truncation
+/// error.
+pub fn decode_join(frame: &[u8]) -> Result<JoinMsg> {
     let mut c = Cursor::new(frame);
     let tag = c.u32("join tag")?;
     anyhow::ensure!(tag == TAG_JOIN, "expected Join frame, got tag {tag:#x}");
     let version = c.u32("join protocol version")?;
+    if c.remaining() == 0 {
+        return Ok(JoinMsg::fresh(version));
+    }
+    let incarnation = c.u64("join incarnation")?;
+    let worker = c.u32("join worker id")?;
+    let last_step = c.u64("join last step")?;
     anyhow::ensure!(
         c.remaining() == 0,
-        "oversized Join frame: {} trailing bytes after the version",
+        "oversized Join frame: {} trailing bytes after the last step",
         c.remaining()
     );
-    Ok(version)
+    Ok(JoinMsg { version, incarnation, worker, last_step })
+}
+
+/// Encode a [`TAG_NACK`] resend request naming the corrupt frame's
+/// expected step.
+pub fn encode_nack(step: u64, out: &mut Vec<u8>) {
+    put_u32(out, TAG_NACK);
+    put_u64(out, step);
+}
+
+/// Decode a [`TAG_NACK`] frame: the step whose frame arrived corrupt.
+pub fn decode_nack(frame: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("nack tag")?;
+    anyhow::ensure!(tag == TAG_NACK, "expected Nack frame, got tag {tag:#x}");
+    let step = c.u64("nack step")?;
+    anyhow::ensure!(
+        c.remaining() == 0,
+        "oversized Nack frame: {} trailing bytes after the step",
+        c.remaining()
+    );
+    Ok(step)
 }
 
 /// Encode a [`TAG_EVICT`] notice naming the evicted worker.
@@ -1087,6 +1160,7 @@ mod tests {
             heartbeat_ms: 750,
             trace: true,
             clock_anchor_us: 123_456_789,
+            incarnation: 0xFEED_F00D_u64,
         };
         let mut frame = Vec::new();
         encode_init(&msg, &mut frame);
@@ -1109,6 +1183,7 @@ mod tests {
         assert_eq!(back.heartbeat_ms, 750);
         assert!(back.trace);
         assert_eq!(back.clock_anchor_us, 123_456_789);
+        assert_eq!(back.incarnation, 0xFEED_F00D_u64);
     }
 
     #[test]
@@ -1201,6 +1276,7 @@ mod tests {
             heartbeat_ms: 0,
             trace: false,
             clock_anchor_us: 0,
+            incarnation: 0,
         };
         let mut full = Vec::new();
         encode_init(&msg, &mut full);
@@ -1314,8 +1390,27 @@ mod tests {
         encode_pong(u64::MAX, &mut f);
         assert_eq!(decode_pong(&f).unwrap(), u64::MAX);
         f.clear();
-        encode_join(PROTO_VERSION, &mut f);
-        assert_eq!(decode_join(&f).unwrap(), PROTO_VERSION);
+        let join =
+            JoinMsg { version: PROTO_VERSION, incarnation: 0xABCD, worker: 3, last_step: 17 };
+        encode_join(&join, &mut f);
+        assert_eq!(decode_join(&f).unwrap(), join);
+        f.clear();
+        encode_join(&JoinMsg::fresh(PROTO_VERSION), &mut f);
+        let fresh = decode_join(&f).unwrap();
+        assert_eq!(fresh.version, PROTO_VERSION);
+        assert_eq!(fresh.incarnation, 0);
+        assert_eq!(fresh.worker, u32::MAX);
+        // A pre-v5 Join (tag + version only) still decodes as fresh so
+        // the version mismatch downstream reads as a version error.
+        let legacy = &f[..8];
+        let back = decode_join(legacy).unwrap();
+        assert_eq!(back, JoinMsg::fresh(PROTO_VERSION));
+        f.clear();
+        encode_nack(99, &mut f);
+        assert_eq!(peek_tag(&f).unwrap(), TAG_NACK);
+        assert_eq!(decode_nack(&f).unwrap(), 99);
+        f.push(0xEE);
+        assert!(decode_nack(&f).unwrap_err().to_string().contains("oversized"));
         f.clear();
         encode_evict(3, &mut f);
         assert_eq!(decode_evict(&f).unwrap(), 3);
@@ -1372,10 +1467,20 @@ mod tests {
                 return Err("pong seq mismatch".into());
             }
             f.clear();
-            let v = g.rng().next_u64() as u32;
-            encode_join(v, &mut f);
-            if decode_join(&f).map_err(|e| e.to_string())? != v {
-                return Err("join version mismatch".into());
+            let join = JoinMsg {
+                version: g.rng().next_u64() as u32,
+                incarnation: g.rng().next_u64(),
+                worker: g.rng().next_u64() as u32,
+                last_step: g.rng().next_u64(),
+            };
+            encode_join(&join, &mut f);
+            if decode_join(&f).map_err(|e| e.to_string())? != join {
+                return Err("join round-trip mismatch".into());
+            }
+            f.clear();
+            encode_nack(seq, &mut f);
+            if decode_nack(&f).map_err(|e| e.to_string())? != seq {
+                return Err("nack step mismatch".into());
             }
             f.clear();
             let w = g.usize_in(0, 1 << 16);
@@ -1507,11 +1612,20 @@ mod tests {
     fn property_truncated_control_frames_never_panic() {
         crate::util::proptest::check("proto-ctrl-truncation", 80, |g| {
             let mut f = Vec::new();
-            match g.usize_in(0, 4) {
+            match g.usize_in(0, 5) {
                 0 => encode_ping(g.rng().next_u64(), &mut f),
                 1 => encode_pong(g.rng().next_u64(), &mut f),
-                2 => encode_join(g.rng().next_u64() as u32, &mut f),
+                2 => encode_join(
+                    &JoinMsg {
+                        version: g.rng().next_u64() as u32,
+                        incarnation: g.rng().next_u64(),
+                        worker: g.rng().next_u64() as u32,
+                        last_step: g.rng().next_u64(),
+                    },
+                    &mut f,
+                ),
                 3 => encode_evict(g.usize_in(0, 64), &mut f),
+                4 => encode_nack(g.rng().next_u64(), &mut f),
                 _ => {
                     let params = g.vec(g.usize_in(0, 8), |g| g.f32_in(-1.0, 1.0));
                     let momentum = g.vec(g.usize_in(0, 8), |g| g.f32_in(-1.0, 1.0));
@@ -1520,12 +1634,16 @@ mod tests {
             }
             let cut = g.usize_in(0, f.len().saturating_sub(1));
             // Decoding any strict prefix must error (decoders are total:
-            // no panic, no misparse of a short frame as a success).
+            // no panic, no misparse of a short frame as a success) —
+            // with one documented exception: an 8-byte Join prefix IS
+            // the legacy pre-v5 Join and decodes as a fresh join.
             let slice = &f[..cut];
+            let legacy_join = cut == 8 && peek_tag(slice).map(|t| t == TAG_JOIN).unwrap_or(false);
             let all_err = decode_ping(slice).is_err()
                 && decode_pong(slice).is_err()
-                && decode_join(slice).is_err()
+                && (legacy_join || decode_join(slice).is_err())
                 && decode_evict(slice).is_err()
+                && decode_nack(slice).is_err()
                 && decode_state(slice).is_err();
             if all_err {
                 Ok(())

@@ -25,6 +25,24 @@
 //! per-link order, so the trainer is **bitwise identical across
 //! transports** — `tests/dist_tcp.rs` pins serial ≡ channel ≡ tcp.
 //!
+//! ## Surviving the coordinator
+//!
+//! The aggregator is no longer the one process that must not die.
+//! Epoch checkpoints are written atomically (tmp + fsync + rename,
+//! rotated to `checkpoint_retain`), a step-granular `progress.d2pr`
+//! record is rewritten after every batch, and `resume_from` pointed at
+//! the checkpoint *directory* restarts from the newest loadable
+//! checkpoint — re-executing the tail deterministically, so the
+//! resumed trajectory is bitwise the uninterrupted one. TCP workers
+//! that outlive the aggregator redial with capped exponential backoff
+//! ([`super::worker::run_worker_reconnecting`]) and re-Join carrying
+//! the incarnation token from their last Init; the restarted
+//! aggregator counts those as `reconnects`, re-ships State, and
+//! continues. Mid-run, a dropped link gets one `try_reconnect` accept
+//! window before eviction, and a frame that fails its CRC32C trailer
+//! surfaces as [`Arrival::Corrupt`] — answered with a NACK for a
+//! resend, never an eviction.
+//!
 //! ## Determinism
 //!
 //! Every micro-batch gradient is computed by exactly one worker whose
@@ -75,15 +93,16 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::allreduce::{ExchangeMode, OrderedReducer};
-use super::checkpoint::Checkpoint;
+use super::checkpoint::{ckpt_path, fnv64, latest_valid, rotate, Checkpoint, Progress};
 use super::fault::{FaultAction, FaultPlan};
 use super::grads::{BufPool, GradCodec, WireCompression, WirePrecision, WireStats};
 use super::proto::{self, CastRole, InitMsg, MicroJob, RingExec, UpHdr};
 use super::transport::{
-    accept_workers, channel_pair, listen, liveness_window, BlobRx, BlobTx, SpawnMode, StatsCell,
-    TcpTransport, Transport, TransportKind, TransportStats,
+    accept_workers, channel_pair, frame_class, is_corrupt_frame_err, listen, liveness_window,
+    BlobRx, BlobTx, FlakyState, FlakyTransport, SpawnMode, StatsCell, TcpTransport, Transport,
+    TransportKind, TransportStats, FRAME_CLASSES,
 };
-use super::worker::{run_worker, run_worker_with_faults};
+use super::worker::{run_worker, run_worker_reconnecting, run_worker_with_faults};
 use crate::backend::native::NativeSpec;
 use crate::backend::native::{NativeBackend, NativeProvider};
 use crate::backend::Backend;
@@ -183,14 +202,30 @@ pub struct DistConfig {
     /// empty in production runs.
     pub faults: Vec<(usize, FaultPlan)>,
     /// Directory for epoch-boundary checkpoints (`ckpt_e{N}.d2ck`);
-    /// `None` disables checkpointing.
+    /// `None` disables checkpointing. The same directory holds the
+    /// step-granular `progress.d2pr` record, rewritten (atomically)
+    /// after every completed batch.
     pub checkpoint_dir: Option<PathBuf>,
     /// Write a checkpoint every N completed epochs (min 1).
     pub checkpoint_every: usize,
-    /// Resume from this checkpoint file: install its parameters,
-    /// momentum, and score cache, skip pretraining, and continue at
-    /// the recorded batch — bitwise identical to the uninterrupted run.
+    /// Epoch checkpoints kept after rotation (min 1): every successful
+    /// write deletes `ckpt_e*.d2ck` files older than the newest N, so a
+    /// long run cannot fill the disk.
+    pub checkpoint_retain: usize,
+    /// Resume a crashed run. A *directory* resumes from its newest
+    /// loadable checkpoint plus the `progress.d2pr` restart counter —
+    /// the `--resume` crash-recovery path; a *file* is the legacy exact
+    /// checkpoint form. Either way the run installs the checkpoint's
+    /// parameters, momentum, and score cache, skips pretraining, and
+    /// re-executes deterministically from the checkpoint's batch —
+    /// bitwise identical to the uninterrupted run.
     pub resume_from: Option<PathBuf>,
+    /// Crash simulation (tests only): stop dead — no shutdown
+    /// handshake, `run` returns an error — right after completing this
+    /// many batches, with that batch's progress record already on disk.
+    /// Deterministic stand-in for SIGKILL in the in-process
+    /// crash/`--resume` bitwise matrix.
+    pub halt_after_batch: Option<usize>,
     /// Write a merged Chrome trace-event JSON (aggregator + every
     /// worker lane, clocks normalized via the Init handshake) here at
     /// the end of the run — open it in Perfetto. `None` (the default)
@@ -228,7 +263,9 @@ impl DistConfig {
             faults: Vec::new(),
             checkpoint_dir: None,
             checkpoint_every: 1,
+            checkpoint_retain: 2,
             resume_from: None,
+            halt_after_batch: None,
             trace_out: None,
             metrics: None,
         }
@@ -318,6 +355,21 @@ pub struct DistReport {
     pub evictions: usize,
     /// Workers that (re)joined mid-run via the elastic handshake.
     pub joins: usize,
+    /// Worker links that re-attached instead of being evicted: mid-run
+    /// redials accepted inside the liveness window, plus handshake
+    /// Joins that presented a learned identity (a surviving worker
+    /// redialing into a restarted aggregator).
+    pub reconnects: usize,
+    /// Frames that failed their CRC32C trailer check on an
+    /// aggregator-side link. Each one is NACKed for a resend — never
+    /// fatal, never an eviction by itself.
+    pub frames_corrupt: usize,
+    /// NACK frames sent asking a worker to resend its retained
+    /// gradient after a corrupt arrival.
+    pub resends: usize,
+    /// Aggregator generations before this one (from the progress
+    /// record's restart counter); 0 for an uninterrupted run.
+    pub aggregator_restarts: usize,
     /// Micro-batches re-dispatched to a survivor after a loss or stall
     /// (duplicates are bitwise harmless; see the module docs).
     pub reassigned_micros: usize,
@@ -371,19 +423,23 @@ impl DistReport {
             .map(|&(sent, recv)| obj(vec![("sent", num(sent as f64)), ("recv", num(recv as f64))]))
             .collect();
         obj(vec![
-            ("schema", s("d2ft-dist-report-v2")),
-            ("schema_version", num(2.0)),
+            ("schema", s("d2ft-dist-report-v3")),
+            ("schema_version", num(3.0)),
             ("compress", s(&self.compress)),
             ("workers", num(self.n_workers as f64)),
             ("live_workers", num(self.live_workers as f64)),
             ("transport", s(&self.transport)),
             ("exchange", s(&self.exchange)),
+            ("aggregator_restarts", num(self.aggregator_restarts as f64)),
             ("batches", num(self.train.batches as f64)),
             ("epochs", num(self.epochs as f64)),
             ("final_train_loss", num(self.train.final_train_loss)),
+            ("frames_corrupt", num(self.frames_corrupt as f64)),
             ("test_top1", num(self.train.test_top1)),
             ("evictions", num(self.evictions as f64)),
             ("joins", num(self.joins as f64)),
+            ("reconnects", num(self.reconnects as f64)),
+            ("resends", num(self.resends as f64)),
             ("reassigned_micros", num(self.reassigned_micros as f64)),
             ("knapsack_resolves", num(self.knapsack_resolves as f64)),
             ("checkpoints_written", num(self.checkpoints_written as f64)),
@@ -409,6 +465,11 @@ enum Arrival {
     Ring { worker: usize, frame: Vec<u8> },
     /// Shutdown acknowledgment with the worker's local counters.
     Bye { worker: usize, msg: proto::ByeMsg },
+    /// One frame failed its CRC32C trailer check. The stream itself is
+    /// intact — the length prefix framed the damaged bytes — so the
+    /// reader keeps draining the link; the trainer answers with a NACK
+    /// so the worker resends its retained gradient.
+    Corrupt { worker: usize },
     /// The link died or produced an undecodable frame. Surfaced as an
     /// error by whoever is waiting — a lost worker can never hang the
     /// barrier.
@@ -436,13 +497,30 @@ fn reader_loop(
                 let _ = tx.send(Arrival::Lost {
                     worker,
                     error: format!(
-                        "no frame or heartbeat for {liveness:?} — missed liveness deadline"
+                        "no frame or heartbeat from worker {worker} ({}) for {liveness:?} — \
+                         missed liveness deadline",
+                        rx.peer()
                     ),
                 });
                 return;
             }
+            Err(e) if is_corrupt_frame_err(&e) => {
+                // The framing survived (only payload bits are bad), so
+                // this is retryable: report it and keep draining.
+                crate::warn_!(
+                    "worker {worker} ({}): dropped a corrupt frame: {e:#}",
+                    rx.peer()
+                );
+                if tx.send(Arrival::Corrupt { worker }).is_err() {
+                    return;
+                }
+                continue;
+            }
             Err(e) => {
-                let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                let _ = tx.send(Arrival::Lost {
+                    worker,
+                    error: format!("recv from worker {worker} ({}) failed: {e:#}", rx.peer()),
+                });
                 return;
             }
         };
@@ -462,7 +540,14 @@ fn reader_loop(
             Ok(proto::TAG_UP) => match proto::decode_up(&frame) {
                 Ok(hdr) => tx.send(Arrival::Up { worker, hdr, frame }).is_ok(),
                 Err(e) => {
-                    let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                    let _ = tx.send(Arrival::Lost {
+                        worker,
+                        error: format!(
+                            "decoding a {} frame from worker {worker} ({}): {e:#}",
+                            FRAME_CLASSES[frame_class(&frame)],
+                            rx.peer()
+                        ),
+                    });
                     return;
                 }
             },
@@ -490,7 +575,14 @@ fn reader_loop(
                         let _ = tx.send(Arrival::Bye { worker, msg });
                     }
                     Err(e) => {
-                        let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                        let _ = tx.send(Arrival::Lost {
+                            worker,
+                            error: format!(
+                                "decoding a {} frame from worker {worker} ({}): {e:#}",
+                                FRAME_CLASSES[frame_class(&frame)],
+                                rx.peer()
+                            ),
+                        });
                     }
                 }
                 return;
@@ -498,12 +590,23 @@ fn reader_loop(
             Ok(tag) => {
                 let _ = tx.send(Arrival::Lost {
                     worker,
-                    error: format!("unexpected frame tag {tag:#x} on the uplink"),
+                    error: format!(
+                        "unexpected frame tag {tag:#x} ({} class) from worker {worker} ({}) \
+                         on the uplink",
+                        FRAME_CLASSES[frame_class(&frame)],
+                        rx.peer()
+                    ),
                 });
                 return;
             }
             Err(e) => {
-                let _ = tx.send(Arrival::Lost { worker, error: format!("{e:#}") });
+                let _ = tx.send(Arrival::Lost {
+                    worker,
+                    error: format!(
+                        "reading the frame tag from worker {worker} ({}): {e:#}",
+                        rx.peer()
+                    ),
+                });
                 return;
             }
         };
@@ -577,9 +680,18 @@ pub struct DistTrainer {
     /// Control-plane counters for the report.
     evictions: usize,
     joins: usize,
+    reconnects: usize,
+    frames_corrupt: usize,
+    resends: usize,
+    /// Prior aggregator generations (progress record + 1 on resume).
+    aggregator_restarts: usize,
     reassigned_micros: usize,
     knapsack_resolves: usize,
     checkpoints_written: usize,
+    /// The run-identity fingerprint stamped into every Init: stable
+    /// across aggregator restarts of the same config, so a surviving
+    /// worker's redial Join (which echoes it) reads as a reconnect.
+    incarnation: u64,
     membership: Vec<MembershipEvent>,
     /// Set on evict/join; the next scheduled batch counts a
     /// membership-triggered knapsack re-solve and resets the EMAs.
@@ -717,6 +829,23 @@ impl DistTrainer {
         }
         trace::set_lane(0);
 
+        // Fingerprint of the run identity: any aggregator process
+        // running this config computes the same token (never 0 — that
+        // is the fresh-Join sentinel), so a worker that outlives one
+        // aggregator presents a Join the next generation recognizes as
+        // a reconnect rather than a fresh dial.
+        let incarnation = {
+            let id = format!(
+                "d2ft:{}:{}:{}:{}:{}",
+                cfg.train.seed,
+                cfg.workers,
+                cfg.train.batches,
+                cfg.train.lora_rank,
+                cfg.exchange.label()
+            );
+            fnv64(id.as_bytes()).max(1)
+        };
+
         // --- launch the workers and connect one link per worker -------
         let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(k);
         let mut link_stats = Vec::with_capacity(k);
@@ -732,11 +861,19 @@ impl DistTrainer {
                     // versa, so the recycle loop closes in-process.
                     let pool = Arc::clone(&buf_pool);
                     let plan = plan_for(&cfg.faults, w);
+                    // Network fault verbs act at the transport layer:
+                    // wrap the worker's end in the scripted flaky shim.
+                    let flaky = FlakyState::from_plan(&plan);
                     let handle = thread::Builder::new()
                         .name(format!("d2ft-dist-{w}"))
                         .spawn(move || {
-                            if let Err(e) = run_worker_with_faults(Box::new(worker_end), pool, plan)
-                            {
+                            let link: Box<dyn Transport> = match flaky {
+                                Some(state) => {
+                                    Box::new(FlakyTransport::wrap(Box::new(worker_end), state))
+                                }
+                                None => Box::new(worker_end),
+                            };
+                            if let Err(e) = run_worker_with_faults(link, pool, plan) {
                                 crate::warn_!("dist worker {w} exited with error: {e:#}");
                             }
                         })
@@ -757,14 +894,18 @@ impl DistTrainer {
                                 .name(format!("d2ft-dist-{w}"))
                                 .spawn(move || {
                                     // Worker-local pool, exactly like a
-                                    // separate process would have.
+                                    // separate process would have. The
+                                    // reconnecting loop makes a link drop
+                                    // a redial (backoff + jitter), not a
+                                    // death — the aggregator's held
+                                    // listener re-accepts it.
                                     let pool = Arc::new(BufPool::new());
-                                    let res = TcpTransport::connect(
+                                    let res = run_worker_reconnecting(
                                         &dial,
-                                        Duration::from_secs(30),
-                                        Arc::clone(&pool),
-                                    )
-                                    .and_then(|t| run_worker_with_faults(Box::new(t), pool, plan));
+                                        pool,
+                                        plan,
+                                        Duration::from_secs(60),
+                                    );
                                     if let Err(e) = res {
                                         crate::warn_!("dist worker {w} exited with error: {e:#}");
                                     }
@@ -813,6 +954,7 @@ impl DistTrainer {
         // --- handshake: Join in, version-check, Init out, barrier -----
         // (Per-link Join→Init first, barriers after, so the K replica
         // builds still run concurrently.)
+        let mut reconnects = 0usize;
         for (w, link) in transports.iter_mut().enumerate() {
             let join = link
                 .recv_blob_timeout(Duration::from_secs(60))
@@ -820,14 +962,28 @@ impl DistTrainer {
                 .ok_or_else(|| {
                     anyhow::anyhow!("worker {w} sent no Join within the 60s handshake deadline")
                 })?;
-            let version =
+            let jm =
                 proto::decode_join(&join).with_context(|| format!("handshaking worker {w}"))?;
             buf_pool.give_back(join);
             anyhow::ensure!(
-                version == proto::PROTO_VERSION,
-                "worker {w} speaks dist protocol version {version}, this aggregator speaks {}",
+                jm.version == proto::PROTO_VERSION,
+                "worker {w} speaks dist protocol version {}, this aggregator speaks {}",
+                jm.version,
                 proto::PROTO_VERSION
             );
+            // A Join that already carries an identity is a surviving
+            // worker's redial landing on a restarted aggregator — the
+            // crash-recovery path, not a fresh dial.
+            if jm.incarnation != 0 || jm.worker != u32::MAX {
+                reconnects += 1;
+                crate::info!(
+                    "worker slot {w}: a surviving worker reconnected \
+                     (incarnation {:#x}, previously worker {}, last step {})",
+                    jm.incarnation,
+                    jm.worker,
+                    jm.last_step
+                );
+            }
             let msg = InitMsg {
                 worker: w,
                 spec: spec.clone(),
@@ -841,6 +997,7 @@ impl DistTrainer {
                 heartbeat_ms: cfg.heartbeat_ms,
                 trace: cfg.trace_out.is_some(),
                 clock_anchor_us: trace::now_us(),
+                incarnation,
             };
             let mut frame = buf_pool.checkout();
             proto::encode_init(&msg, &mut frame);
@@ -897,9 +1054,14 @@ impl DistTrainer {
             cur_batch: 0,
             evictions: 0,
             joins: 0,
+            reconnects,
+            frames_corrupt: 0,
+            resends: 0,
+            aggregator_restarts: 0,
             reassigned_micros: 0,
             knapsack_resolves: 0,
             checkpoints_written: 0,
+            incarnation,
             membership: Vec::new(),
             membership_dirty: false,
             trace_sink,
@@ -1177,6 +1339,20 @@ impl DistTrainer {
                 }
                 Ok(Arrival::Lost { worker, error }) => {
                     let was_live = self.links[worker].is_some();
+                    if was_live && self.try_reconnect(worker, &error) {
+                        // The returning session lost whatever was in
+                        // flight on the old link; its share of the
+                        // barrier re-dispatches (possibly right back to
+                        // it — bitwise identical either way).
+                        self.redispatch_unfilled(
+                            &reducer,
+                            &all_jobs,
+                            step,
+                            &mut owner,
+                            Some(worker),
+                        )?;
+                        continue;
+                    }
                     self.evict(worker, &error);
                     if self.live_workers() == 0 {
                         anyhow::bail!(
@@ -1184,6 +1360,39 @@ impl DistTrainer {
                         );
                     }
                     if was_live {
+                        self.redispatch_unfilled(
+                            &reducer,
+                            &all_jobs,
+                            step,
+                            &mut owner,
+                            Some(worker),
+                        )?;
+                    }
+                }
+                Ok(Arrival::Corrupt { worker }) => {
+                    // A damaged frame (CRC trailer mismatch). The link
+                    // is alive and framed — ask the worker to resend
+                    // its retained gradient; the step stamp makes any
+                    // duplicate idempotent, and the stall-reassign path
+                    // backstops a resend that cannot fill the hole.
+                    self.frames_corrupt += 1;
+                    trace::instant("ctrl", "nack");
+                    let mut nack_err: Option<String> = None;
+                    if let Some(link) = self.links[worker].as_mut() {
+                        let mut frame = self.buf_pool.checkout();
+                        proto::encode_nack(step, &mut frame);
+                        match link.send_blob(frame) {
+                            Ok(()) => self.resends += 1,
+                            Err(e) => nack_err = Some(format!("NACK send failed: {e:#}")),
+                        }
+                    }
+                    if let Some(why) = nack_err {
+                        self.evict(worker, &why);
+                        if self.live_workers() == 0 {
+                            anyhow::bail!(
+                                "dist worker {worker} lost mid-batch with no survivors: {why}"
+                            );
+                        }
                         self.redispatch_unfilled(
                             &reducer,
                             &all_jobs,
@@ -1294,6 +1503,11 @@ impl DistTrainer {
             match self.arrivals.recv_timeout(wait) {
                 Ok(Arrival::Ring { worker, frame }) => return Ok(RingCtrl::Frame(worker, frame)),
                 Ok(Arrival::Up { frame, .. }) => self.buf_pool.give_back(frame),
+                Ok(Arrival::Corrupt { .. }) => {
+                    // Counted only: the ring exchange re-delivers its
+                    // own frames (Reset + restart), so no NACK here.
+                    self.frames_corrupt += 1;
+                }
                 Ok(Arrival::Lost { worker, error }) => {
                     let was_live = self.links[worker].is_some();
                     self.evict(worker, &error);
@@ -1533,6 +1747,11 @@ impl DistTrainer {
                         micro_ms[hdr.micro] = hdr.ms;
                     }
                     Ok(Arrival::Ring { frame, .. }) => self.buf_pool.give_back(frame),
+                    Ok(Arrival::Corrupt { .. }) => {
+                        // Metric Ups re-arrive with the attempt restart
+                        // if needed; count and keep waiting.
+                        self.frames_corrupt += 1;
+                    }
                     Ok(Arrival::Lost { worker, error }) => {
                         let was_live = self.links[worker].is_some();
                         self.evict(worker, &error);
@@ -1842,6 +2061,10 @@ impl DistTrainer {
                     // construction, recycle it.
                     self.buf_pool.give_back(frame);
                 }
+                Ok(Arrival::Corrupt { .. }) => {
+                    // Nothing left to resend during teardown; count it.
+                    self.frames_corrupt += 1;
+                }
                 Ok(Arrival::Lost { worker, error }) => {
                     if awaiting.contains(&worker) {
                         crate::warn_!("dist worker {worker} died during shutdown: {error}");
@@ -1966,21 +2189,38 @@ impl DistTrainer {
                 Box::new(t)
             }
         };
-        // Handshake, synchronously on the new link: Join in, Init out,
-        // barrier, then the authoritative State.
+        self.handshake_and_attach(w, transport)?;
+        self.joins += 1;
+        self.membership.push(MembershipEvent {
+            batch: self.cur_batch,
+            worker: w,
+            kind: "join".to_string(),
+        });
+        crate::info!("dist worker {w} rejoined at batch {}", self.cur_batch);
+        Ok(())
+    }
+
+    /// Shared tail of the elastic rejoin and the mid-run reconnect:
+    /// Join in (version-checked), Init out, handshake barrier, then the
+    /// authoritative State snapshot — the returning replica
+    /// re-synchronizes to the aggregator's current (start-of-batch)
+    /// parameters, so re-attachment is bitwise neutral. Splits the link
+    /// into slot `w` and attaches a reader thread.
+    fn handshake_and_attach(&mut self, w: usize, mut transport: Box<dyn Transport>) -> Result<()> {
         let join = transport
             .recv_blob_timeout(Duration::from_secs(60))
-            .with_context(|| format!("waiting for Join from rejoining worker {w}"))?
+            .with_context(|| format!("waiting for Join from returning worker {w}"))?
             .ok_or_else(|| {
-                anyhow::anyhow!("rejoining worker {w} sent no Join within the 60s deadline")
+                anyhow::anyhow!("returning worker {w} sent no Join within the 60s deadline")
             })?;
-        let version = proto::decode_join(&join)
-            .with_context(|| format!("handshaking rejoining worker {w}"))?;
+        let jm = proto::decode_join(&join)
+            .with_context(|| format!("handshaking returning worker {w}"))?;
         self.buf_pool.give_back(join);
         anyhow::ensure!(
-            version == proto::PROTO_VERSION,
-            "rejoining worker {w} speaks dist protocol version {version}, \
+            jm.version == proto::PROTO_VERSION,
+            "returning worker {w} speaks dist protocol version {}, \
              this aggregator speaks {}",
+            jm.version,
             proto::PROTO_VERSION
         );
         let msg = InitMsg {
@@ -1996,21 +2236,22 @@ impl DistTrainer {
             heartbeat_ms: self.cfg.heartbeat_ms,
             trace: self.cfg.trace_out.is_some(),
             clock_anchor_us: trace::now_us(),
+            incarnation: self.incarnation,
         };
         let mut frame = self.buf_pool.checkout();
         proto::encode_init(&msg, &mut frame);
         transport
             .send_blob(frame)
-            .with_context(|| format!("sending Init to rejoining worker {w}"))?;
+            .with_context(|| format!("sending Init to returning worker {w}"))?;
         transport
             .barrier()
-            .with_context(|| format!("handshake barrier with rejoining worker {w}"))?;
+            .with_context(|| format!("handshake barrier with returning worker {w}"))?;
         let (params, momentum) = self.agg.export_state_flat();
         let mut frame = self.buf_pool.checkout();
         proto::encode_state(&params, &momentum, &mut frame);
         transport
             .send_blob(frame)
-            .with_context(|| format!("sending State to rejoining worker {w}"))?;
+            .with_context(|| format!("sending State to returning worker {w}"))?;
         let (tx, rx) = transport.split();
         let fan_in = self.arr_tx.clone();
         let liveness = reader_liveness(self.cfg.heartbeat_ms, self.cfg.liveness_misses);
@@ -2019,20 +2260,90 @@ impl DistTrainer {
         let handle = thread::Builder::new()
             .name(format!("d2ft-dist-{w}-rx"))
             .spawn(move || reader_loop(w, rx, fan_in, liveness, pool, traces))
-            .context("spawning rejoined dist reader thread")?;
+            .context("spawning dist reader thread for a returning worker")?;
         self.readers.push(handle);
         self.links[w] = Some(tx);
         self.ema_ms[w] = 1.0;
-        self.joins += 1;
-        self.membership.push(MembershipEvent {
-            batch: self.cur_batch,
-            worker: w,
-            kind: "join".to_string(),
-        });
         self.membership_dirty = true;
         self.ring_dirty = true;
-        crate::info!("dist worker {w} rejoined at batch {}", self.cur_batch);
         Ok(())
+    }
+
+    /// Mid-run link recovery: a `Lost` worker whose process may still
+    /// be alive (the TCP redial loop) gets one chance to re-attach
+    /// before eviction. Holds the accept window open briefly — the
+    /// worker's capped backoff redials well inside it — then replays
+    /// the rejoin handshake so the returning replica re-synchronizes.
+    /// Returns `false` (the caller evicts) on the channel transport,
+    /// without a held listener, or when no redial lands in time. A
+    /// transient drop inside the liveness window therefore heals with
+    /// **zero evictions** and `reconnects + 1`.
+    fn try_reconnect(&mut self, w: usize, why: &str) -> bool {
+        if !matches!(self.cfg.transport, TransportKind::Tcp { .. }) {
+            return false;
+        }
+        let window = reader_liveness(self.cfg.heartbeat_ms, self.cfg.liveness_misses)
+            .min(Duration::from_secs(10));
+        if self.listener.is_none() {
+            return false;
+        }
+        crate::warn_!(
+            "dist worker {w} link dropped ({why}); holding the accept window {window:?} \
+             for a redial"
+        );
+        // A redial *window*, not a single accept: a worker riding out a
+        // partition dials, fails its Join mid-partition, drops the
+        // socket, and dials again after backoff — every failed attempt
+        // burns one accepted stream, so keep accepting until the
+        // deadline instead of giving up on the first corpse.
+        let deadline = Instant::now() + window;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return false;
+            }
+            let Some((listener, _)) = self.listener.as_ref() else {
+                return false;
+            };
+            let stream = match accept_workers(listener, 1, remaining) {
+                Ok(mut v) => match v.pop() {
+                    Some(s) => s,
+                    None => return false,
+                },
+                Err(_) => return false,
+            };
+            let transport: Box<dyn Transport> =
+                match TcpTransport::from_stream(stream, Arc::clone(&self.buf_pool)) {
+                    Ok(t) => {
+                        self.link_stats.push(t.stats_cell());
+                        Box::new(t)
+                    }
+                    Err(e) => {
+                        crate::warn_!("dist worker {w} redial produced a bad stream: {e:#}");
+                        continue;
+                    }
+                };
+            match self.handshake_and_attach(w, transport) {
+                Ok(()) => {
+                    self.reconnects += 1;
+                    self.membership.push(MembershipEvent {
+                        batch: self.cur_batch,
+                        worker: w,
+                        kind: "reconnect".to_string(),
+                    });
+                    trace::instant("ctrl", "reconnect");
+                    crate::info!("dist worker {w} reconnected at batch {}", self.cur_batch);
+                    return true;
+                }
+                Err(e) => {
+                    crate::warn_!(
+                        "dist worker {w} reconnect handshake failed ({e:#}); \
+                         holding the window for another redial"
+                    );
+                    continue;
+                }
+            }
+        }
     }
 
     /// Write the epoch-boundary checkpoint when configured.
@@ -2053,9 +2364,32 @@ impl DistTrainer {
         let ck = Checkpoint { epoch, batch, params, momentum, score_books: score_cache.to_vec() };
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-        ck.save(&dir.join(format!("ckpt_e{epoch}.d2ck")))?;
+        // Atomic replace (tmp + fsync + rename): a crash mid-write can
+        // never leave a truncated newest checkpoint shadowing a good
+        // older one — `latest_valid` always finds something loadable.
+        ck.save_atomic(&ckpt_path(&dir, epoch))?;
+        rotate(&dir, self.cfg.checkpoint_retain)?;
         self.checkpoints_written += 1;
         Ok(())
+    }
+
+    /// Rewrite the step-granular progress record (atomic replace) after
+    /// a completed batch — the breadcrumb `--resume` uses to count
+    /// aggregator generations and report where the crash landed. No-op
+    /// without a checkpoint directory.
+    fn write_progress(&self, epoch: usize, batch: usize) -> Result<()> {
+        let Some(dir) = self.cfg.checkpoint_dir.as_ref() else {
+            return Ok(());
+        };
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let pr = Progress {
+            epoch,
+            batch,
+            step: self.step,
+            restarts: self.aggregator_restarts as u32,
+        };
+        pr.save_atomic(dir)
     }
 
     /// Publish the run's live counters into `reg`. Every series is a
@@ -2090,6 +2424,10 @@ impl DistTrainer {
         }
         reg.store("d2ft_evictions_total", self.evictions as u64);
         reg.store("d2ft_joins_total", self.joins as u64);
+        reg.store("d2ft_reconnects_total", self.reconnects as u64);
+        reg.store("d2ft_frames_corrupt_total", self.frames_corrupt as u64);
+        reg.store("d2ft_resends_total", self.resends as u64);
+        reg.store("d2ft_aggregator_restarts_total", self.aggregator_restarts as u64);
         reg.store("d2ft_reassigned_micros_total", self.reassigned_micros as u64);
         reg.store("d2ft_knapsack_resolves_total", self.knapsack_resolves as u64);
         reg.store("d2ft_checkpoints_written_total", self.checkpoints_written as u64);
@@ -2166,7 +2504,38 @@ impl DistTrainer {
         let mut resumed_scores: Vec<Option<ScoreBook>> = Vec::new();
         let resuming = self.cfg.resume_from.is_some();
         if let Some(path) = self.cfg.resume_from.clone() {
-            let ck = Checkpoint::load(&path)?;
+            // A directory is the crash-recovery form: scan it for the
+            // newest *loadable* epoch checkpoint (a corrupt or
+            // half-written newest file is skipped, not fatal) and read
+            // the progress record for the restart counter. A file path
+            // is the legacy exact-checkpoint form. Either way the run
+            // re-executes from the checkpoint's batch; that replay is
+            // deterministic, so the trajectory converges bitwise to
+            // the uninterrupted run's.
+            let ck = if path.is_dir() {
+                let (found, ck) = latest_valid(&path)?.ok_or_else(|| {
+                    anyhow::anyhow!("no loadable checkpoint in {}", path.display())
+                })?;
+                match Progress::load(&path)? {
+                    Some(pr) => {
+                        self.aggregator_restarts = pr.restarts as usize + 1;
+                        crate::info!(
+                            "progress record: crashed at epoch {}, batch {}, step {} — \
+                             this is aggregator generation {}",
+                            pr.epoch,
+                            pr.batch,
+                            pr.step,
+                            self.aggregator_restarts + 1
+                        );
+                    }
+                    None => self.aggregator_restarts = 1,
+                }
+                crate::info!("resuming from {}", found.display());
+                ck
+            } else {
+                self.aggregator_restarts = 1;
+                Checkpoint::load(&path)?
+            };
             self.agg
                 .import_state_flat(&ck.params, &ck.momentum)
                 .context("installing checkpoint state on the aggregator")?;
@@ -2333,6 +2702,22 @@ impl DistTrainer {
                 }
                 batch_idx += 1;
                 epoch_pos += 1;
+                // Step-granular breadcrumb between epoch checkpoints —
+                // after the batch, so a crash right here resumes with
+                // this batch recorded as done.
+                self.write_progress(epochs_done, batch_idx)?;
+                if let Some(halt) = self.cfg.halt_after_batch {
+                    if batch_idx >= halt {
+                        // Crash simulation: die with the progress
+                        // record on disk and no shutdown handshake
+                        // (Drop tears the cluster down) — the
+                        // deterministic in-process stand-in for
+                        // SIGKILLing the aggregator.
+                        anyhow::bail!(
+                            "halted after batch {batch_idx} (halt_after_batch crash simulation)"
+                        );
+                    }
+                }
             }
             // ---- epoch boundary: drift report + recalibration --------
             // Means over the epoch (not single batches) so host noise
@@ -2492,6 +2877,10 @@ impl DistTrainer {
             live_workers: self.live_workers(),
             evictions: self.evictions,
             joins: self.joins,
+            reconnects: self.reconnects,
+            frames_corrupt: self.frames_corrupt,
+            resends: self.resends,
+            aggregator_restarts: self.aggregator_restarts,
             reassigned_micros: self.reassigned_micros,
             knapsack_resolves: self.knapsack_resolves,
             epochs: epochs_done,

@@ -33,13 +33,27 @@
 //!
 //! ## Framing (TCP)
 //!
-//! `[len: u32 LE][payload: len bytes]`. A zero-length frame is the
-//! barrier token (see [`Transport::barrier`]); the control protocol
-//! ([`super::proto`]) never produces one. A length prefix above
-//! [`MAX_FRAME`] is rejected before any allocation, so a corrupt or
-//! malicious prefix surfaces as a descriptive error instead of an OOM,
-//! and a peer that closes mid-frame surfaces as a truncation error
+//! `[len: u32 LE][payload: len bytes][crc: u32 LE]`. A zero-length
+//! frame is the barrier token (see [`Transport::barrier`]); the control
+//! protocol ([`super::proto`]) never produces one. A length prefix
+//! above [`MAX_FRAME`] is rejected before any allocation, so a corrupt
+//! or malicious prefix surfaces as a descriptive error instead of an
+//! OOM, and a peer that closes mid-frame surfaces as a truncation error
 //! instead of a hang.
+//!
+//! ## Corruption detection (PROTO_VERSION 5)
+//!
+//! Every frame carries a CRC32C (Castagnoli) trailer over its payload,
+//! verified and stripped on receive — on both transports, so the
+//! corruption-handling paths are exercised identically in-process and
+//! over a socket. A trailer mismatch is a *retryable* error, not a
+//! poisoned stream: the length prefix already delimited the frame, so
+//! the next frame reads cleanly and the receiver can ask the sender to
+//! repeat the damaged one (the aggregator's NACK/resend path). Callers
+//! distinguish it with [`is_corrupt_frame_err`]. [`BlobTx::
+//! send_blob_corrupt`] deliberately seals a frame with a damaged
+//! trailer — the hook [`FlakyTransport`] uses to inject wire corruption
+//! deterministically.
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -51,6 +65,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::fault::{FaultAction, FaultPlan};
 use super::grads::BufPool;
 use super::proto;
 
@@ -60,12 +75,95 @@ use super::proto;
 /// allocation.
 pub const MAX_FRAME: usize = 256 * 1024 * 1024;
 
+// ---------------------------------------------------------------------------
+// CRC32C frame trailers
+// ---------------------------------------------------------------------------
+
+/// Reflected CRC32C (Castagnoli) lookup table, built at compile time —
+/// no dependency, no runtime init.
+const CRC32C_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0x82F6_3B78 } else { crc >> 1 };
+            j += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32C (Castagnoli, reflected, init/xorout `!0`) of `bytes` — the
+/// checksum in every frame trailer. Software table implementation; the
+/// per-frame cost is noise next to the gradient encode it protects.
+pub fn crc32c(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32C_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Marker text present in every CRC-trailer failure — the contract
+/// [`is_corrupt_frame_err`] keys on.
+const CRC_MISMATCH: &str = "frame CRC32C mismatch";
+
+/// True when `e` is a frame-corruption error (CRC trailer mismatch):
+/// the frame boundary was intact, so the link is still framed and the
+/// right response is a NACK/resend, not an eviction.
+pub fn is_corrupt_frame_err(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains(CRC_MISMATCH)
+}
+
+/// Append the CRC32C trailer over the payload. `damage` flips the
+/// stored checksum — the deterministic corruption injection used by
+/// [`BlobTx::send_blob_corrupt`].
+fn seal_crc(blob: &mut Vec<u8>, damage: bool) {
+    let mut crc = crc32c(blob);
+    if damage {
+        crc = !crc;
+    }
+    blob.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Verify and strip the CRC32C trailer in place.
+fn unseal_crc(blob: &mut Vec<u8>) -> Result<()> {
+    anyhow::ensure!(
+        blob.len() >= 4,
+        "{CRC_MISMATCH}: {}-byte frame is too short to carry a trailer",
+        blob.len()
+    );
+    let body = blob.len() - 4;
+    let stored = u32::from_le_bytes(blob[body..].try_into().unwrap());
+    let actual = crc32c(&blob[..body]);
+    anyhow::ensure!(
+        stored == actual,
+        "{CRC_MISMATCH}: stored {stored:#010x}, computed {actual:#010x} \
+         over {body} payload bytes"
+    );
+    blob.truncate(body);
+    Ok(())
+}
+
 /// The send half of a transport link.
 pub trait BlobTx: Send {
     /// Send one blob to the peer. Consumes the buffer: delivered as-is
     /// (channel) or written to the socket and recycled into the
     /// transport's pool (TCP). Fails when the peer is gone.
     fn send_blob(&mut self, blob: Vec<u8>) -> Result<()>;
+
+    /// Send one blob whose CRC trailer is deliberately damaged, so the
+    /// receiver's corruption detector fires. Fault-injection seam only
+    /// (see [`FlakyTransport`]); the default falls back to a clean
+    /// send, so wrappers that cannot reach the framing layer degrade to
+    /// no-ops instead of breaking the run.
+    fn send_blob_corrupt(&mut self, blob: Vec<u8>) -> Result<()> {
+        self.send_blob(blob)
+    }
 }
 
 /// The receive half of a transport link.
@@ -85,6 +183,13 @@ pub trait BlobRx: Send {
     fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
         let _ = timeout;
         self.recv_blob().map(Some)
+    }
+
+    /// Human-readable peer label for error messages — the socket's
+    /// remote address over TCP, `chan` in-process. Exists so a failed
+    /// receive can name *which* link broke without a trace dive.
+    fn peer(&self) -> String {
+        "peer".to_string()
     }
 }
 
@@ -139,9 +244,9 @@ pub trait Transport: BlobTx + BlobRx {
 /// `ring` class), `trace` for the observability side-channel, plus
 /// `barrier` for the empty handshake token and `other` for anything
 /// with an unrecognized leading tag.
-pub const FRAME_CLASSES: [&str; 17] = [
+pub const FRAME_CLASSES: [&str; 18] = [
     "init", "compute", "apply", "deltas", "reset", "shutdown", "up", "bye", "ping", "pong",
-    "join", "evict", "state", "ring", "trace", "barrier", "other",
+    "join", "evict", "nack", "state", "ring", "trace", "barrier", "other",
 ];
 
 /// Number of traffic classes (length of [`FRAME_CLASSES`]).
@@ -153,10 +258,10 @@ pub const N_FRAME_CLASSES: usize = FRAME_CLASSES.len();
 /// token. Returns an index into [`FRAME_CLASSES`].
 pub fn frame_class(blob: &[u8]) -> usize {
     if blob.is_empty() {
-        return 15; // barrier
+        return 16; // barrier
     }
     if blob.len() < 4 {
-        return 16; // other
+        return 17; // other
     }
     let tag = u32::from_le_bytes([blob[0], blob[1], blob[2], blob[3]]);
     match tag {
@@ -172,7 +277,8 @@ pub fn frame_class(blob: &[u8]) -> usize {
         proto::TAG_PONG => 9,
         proto::TAG_JOIN => 10,
         proto::TAG_EVICT => 11,
-        proto::TAG_STATE => 12,
+        proto::TAG_NACK => 12,
+        proto::TAG_STATE => 13,
         proto::TAG_RING_LISTEN
         | proto::TAG_RING_PEERS
         | proto::TAG_RING_EXEC
@@ -182,9 +288,9 @@ pub fn frame_class(blob: &[u8]) -> usize {
         | proto::TAG_RING_FINAL
         | proto::TAG_RING_READY
         | proto::TAG_RING_PART
-        | proto::TAG_RING_CAST => 13,
-        proto::TAG_TRACE => 14,
-        _ => 16, // other
+        | proto::TAG_RING_CAST => 14,
+        proto::TAG_TRACE => 15,
+        _ => 17, // other
     }
 }
 
@@ -396,16 +502,26 @@ struct ChannelRx {
     stats: Arc<StatsCell>,
 }
 
-fn channel_send(tx: &mpsc::Sender<Vec<u8>>, stats: &StatsCell, blob: Vec<u8>) -> Result<()> {
+/// Stats count *payload* bytes on the channel path (the CRC trailer is
+/// framing overhead the in-process wire never charges for), so the
+/// measured byte totals stay comparable across PRs.
+fn channel_send(
+    tx: &mpsc::Sender<Vec<u8>>,
+    stats: &StatsCell,
+    mut blob: Vec<u8>,
+    damage: bool,
+) -> Result<()> {
     stats.record_sent(blob.len(), &blob);
+    seal_crc(&mut blob, damage);
     tx.send(blob)
         .map_err(|_| anyhow::anyhow!("channel transport: peer receiver hung up"))
 }
 
 fn channel_recv(rx: &mpsc::Receiver<Vec<u8>>, stats: &StatsCell) -> Result<Vec<u8>> {
-    let blob = rx
+    let mut blob = rx
         .recv()
         .map_err(|_| anyhow::anyhow!("channel transport: peer sender hung up"))?;
+    unseal_crc(&mut blob)?;
     stats.record_recv(blob.len(), &blob);
     Ok(blob)
 }
@@ -416,7 +532,8 @@ fn channel_recv_timeout(
     timeout: Duration,
 ) -> Result<Option<Vec<u8>>> {
     match rx.recv_timeout(timeout) {
-        Ok(blob) => {
+        Ok(mut blob) => {
+            unseal_crc(&mut blob)?;
             stats.record_recv(blob.len(), &blob);
             Ok(Some(blob))
         }
@@ -429,7 +546,11 @@ fn channel_recv_timeout(
 
 impl BlobTx for ChannelTransport {
     fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
-        channel_send(&self.tx, &self.stats, blob)
+        channel_send(&self.tx, &self.stats, blob, false)
+    }
+
+    fn send_blob_corrupt(&mut self, blob: Vec<u8>) -> Result<()> {
+        channel_send(&self.tx, &self.stats, blob, true)
     }
 }
 
@@ -440,6 +561,10 @@ impl BlobRx for ChannelTransport {
 
     fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
         channel_recv_timeout(&self.rx, &self.stats, timeout)
+    }
+
+    fn peer(&self) -> String {
+        "chan".to_string()
     }
 }
 
@@ -463,7 +588,11 @@ impl Transport for ChannelTransport {
 
 impl BlobTx for ChannelTx {
     fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
-        channel_send(&self.tx, &self.stats, blob)
+        channel_send(&self.tx, &self.stats, blob, false)
+    }
+
+    fn send_blob_corrupt(&mut self, blob: Vec<u8>) -> Result<()> {
+        channel_send(&self.tx, &self.stats, blob, true)
     }
 }
 
@@ -474,6 +603,10 @@ impl BlobRx for ChannelRx {
 
     fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
         channel_recv_timeout(&self.rx, &self.stats, timeout)
+    }
+
+    fn peer(&self) -> String {
+        "chan".to_string()
     }
 }
 
@@ -489,6 +622,7 @@ pub struct TcpTransport {
     writer: TcpStream,
     pool: Arc<BufPool>,
     stats: Arc<StatsCell>,
+    peer: String,
 }
 
 impl TcpTransport {
@@ -497,8 +631,9 @@ impl TcpTransport {
     /// message).
     pub fn from_stream(stream: TcpStream, pool: Arc<BufPool>) -> Result<TcpTransport> {
         stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".to_string());
         let reader = stream.try_clone().context("cloning TCP stream")?;
-        Ok(TcpTransport { reader, writer: stream, pool, stats: Arc::default() })
+        Ok(TcpTransport { reader, writer: stream, pool, stats: Arc::default(), peer })
     }
 
     /// Connect to an aggregator, retrying until `timeout` — workers are
@@ -528,11 +663,14 @@ impl TcpTransport {
     }
 }
 
+/// On-wire stats count the whole frame: 4-byte length prefix + payload
+/// + 4-byte CRC trailer — the bytes that actually cross the socket.
 fn tcp_send(
     writer: &mut TcpStream,
     pool: &BufPool,
     stats: &StatsCell,
     blob: Vec<u8>,
+    damage: bool,
 ) -> Result<()> {
     anyhow::ensure!(
         blob.len() <= MAX_FRAME,
@@ -540,10 +678,15 @@ fn tcp_send(
         blob.len()
     );
     let _sp = crate::obs::trace::span("net", "tcp_send");
+    let mut crc = crc32c(&blob);
+    if damage {
+        crc = !crc;
+    }
     let len = (blob.len() as u32).to_le_bytes();
     writer.write_all(&len).context("writing frame length prefix")?;
     writer.write_all(&blob).context("writing frame body")?;
-    stats.record_sent(4 + blob.len(), &blob);
+    writer.write_all(&crc.to_le_bytes()).context("writing frame CRC trailer")?;
+    stats.record_sent(8 + blob.len(), &blob);
     pool.give_back(blob);
     Ok(())
 }
@@ -565,7 +708,20 @@ fn tcp_recv(reader: &mut TcpStream, pool: &BufPool, stats: &StatsCell) -> Result
     reader
         .read_exact(&mut buf)
         .with_context(|| format!("reading {len}-byte frame body (peer closed mid-frame?)"))?;
-    stats.record_recv(4 + len, &buf);
+    let mut tail = [0u8; 4];
+    reader
+        .read_exact(&mut tail)
+        .context("reading frame CRC trailer (peer closed mid-frame?)")?;
+    let stored = u32::from_le_bytes(tail);
+    let actual = crc32c(&buf);
+    if stored != actual {
+        pool.give_back(buf);
+        anyhow::bail!(
+            "{CRC_MISMATCH}: stored {stored:#010x}, computed {actual:#010x} \
+             over {len} payload bytes"
+        );
+    }
+    stats.record_recv(8 + len, &buf);
     Ok(buf)
 }
 
@@ -638,7 +794,29 @@ fn tcp_recv_timeout_inner(
             Err(e) => return Err(e).context("reading frame body"),
         }
     }
-    stats.record_recv(4 + len, &buf);
+    let mut tail = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match reader.read(&mut tail[got..]) {
+            Ok(0) => anyhow::bail!("reading frame CRC trailer (peer closed mid-frame?)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if io_timed_out(&e) => {
+                anyhow::bail!("peer stalled mid-frame: {got} of 4 CRC trailer bytes, then silence")
+            }
+            Err(e) => return Err(e).context("reading frame CRC trailer"),
+        }
+    }
+    let stored = u32::from_le_bytes(tail);
+    let actual = crc32c(&buf);
+    if stored != actual {
+        pool.give_back(buf);
+        anyhow::bail!(
+            "{CRC_MISMATCH}: stored {stored:#010x}, computed {actual:#010x} \
+             over {len} payload bytes"
+        );
+    }
+    stats.record_recv(8 + len, &buf);
     crate::obs::trace::instant("net", "frame_recv");
     Ok(Some(buf))
 }
@@ -653,11 +831,16 @@ struct TcpRx {
     reader: TcpStream,
     pool: Arc<BufPool>,
     stats: Arc<StatsCell>,
+    peer: String,
 }
 
 impl BlobTx for TcpTransport {
     fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
-        tcp_send(&mut self.writer, &self.pool, &self.stats, blob)
+        tcp_send(&mut self.writer, &self.pool, &self.stats, blob, false)
+    }
+
+    fn send_blob_corrupt(&mut self, blob: Vec<u8>) -> Result<()> {
+        tcp_send(&mut self.writer, &self.pool, &self.stats, blob, true)
     }
 }
 
@@ -669,14 +852,18 @@ impl BlobRx for TcpTransport {
     fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
         tcp_recv_timeout(&mut self.reader, &self.pool, &self.stats, timeout)
     }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
 }
 
 impl Transport for TcpTransport {
     fn split(self: Box<Self>) -> (Box<dyn BlobTx>, Box<dyn BlobRx>) {
-        let TcpTransport { reader, writer, pool, stats } = *self;
+        let TcpTransport { reader, writer, pool, stats, peer } = *self;
         (
             Box::new(TcpTx { writer, pool: Arc::clone(&pool), stats: Arc::clone(&stats) }),
-            Box::new(TcpRx { reader, pool, stats }),
+            Box::new(TcpRx { reader, pool, stats, peer }),
         )
     }
 
@@ -691,7 +878,11 @@ impl Transport for TcpTransport {
 
 impl BlobTx for TcpTx {
     fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
-        tcp_send(&mut self.writer, &self.pool, &self.stats, blob)
+        tcp_send(&mut self.writer, &self.pool, &self.stats, blob, false)
+    }
+
+    fn send_blob_corrupt(&mut self, blob: Vec<u8>) -> Result<()> {
+        tcp_send(&mut self.writer, &self.pool, &self.stats, blob, true)
     }
 }
 
@@ -703,6 +894,10 @@ impl BlobRx for TcpRx {
     fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
         tcp_recv_timeout(&mut self.reader, &self.pool, &self.stats, timeout)
     }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -711,9 +906,24 @@ impl BlobRx for TcpRx {
 
 /// Bind the aggregator's listener and report the resolved address
 /// (resolves port 0 to the ephemeral port workers must dial).
+///
+/// `AddrInUse` is retried for up to 30 s: a restarted aggregator
+/// (`--resume` after a crash) rebinds the same fixed port its workers
+/// are redialing, and the dead incarnation's connections can hold it
+/// in `TIME_WAIT` for a while. Any other bind error is immediate.
 pub fn listen(addr: &str) -> Result<(TcpListener, SocketAddr)> {
-    let listener =
-        TcpListener::bind(addr).with_context(|| format!("binding dist listener on {addr}"))?;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let listener = loop {
+        match TcpListener::bind(addr) {
+            Ok(l) => break l,
+            Err(e) if e.kind() == ErrorKind::AddrInUse && Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("binding dist listener on {addr}"));
+            }
+        }
+    };
     let local = listener.local_addr().context("resolving listener address")?;
     Ok((listener, local))
 }
@@ -752,6 +962,250 @@ pub fn accept_workers(
         }
     }
     Ok(streams)
+}
+
+// ---------------------------------------------------------------------------
+// FlakyTransport (deterministic network-fault injection)
+// ---------------------------------------------------------------------------
+
+/// Shared script + progress of one worker's network faults. Lives in an
+/// `Arc` *outside* the transport it wraps, so the script survives a
+/// reconnect: a redialed link wrapped with the same state continues the
+/// frame count instead of re-arming spent verbs.
+pub struct FlakyState {
+    inner: Mutex<FlakyScript>,
+}
+
+#[derive(Default)]
+struct FlakyScript {
+    /// Frames offered to `send_blob` so far (monotonic across redials).
+    sent: u64,
+    /// `reset-after-frame=N`: error the send at frame N, once, and arm
+    /// one receive-side error so both halves observe the reset.
+    reset_at: Option<u64>,
+    rx_reset_pending: bool,
+    /// `corrupt-frame=N`: deliver frame N with a damaged CRC trailer.
+    corrupt_at: Option<u64>,
+    /// `delay-ms=MS@N`: sleep MS ms before sending frame N.
+    delay: Option<(u64, u64)>,
+    /// `partition-ms=MS@E`: from frame E, both directions fail for MS
+    /// wall-clock milliseconds, then the link heals.
+    partition: Option<(u64, u64)>,
+    partition_until: Option<Instant>,
+}
+
+/// What the script decided for one outbound frame.
+enum SendRuling {
+    Clean,
+    Corrupt,
+    Fail(&'static str),
+}
+
+impl FlakyState {
+    /// Extract the network verbs of `plan`. `None` when the plan holds
+    /// no network actions — the common case, costing nothing.
+    pub fn from_plan(plan: &FaultPlan) -> Option<Arc<FlakyState>> {
+        let mut script = FlakyScript::default();
+        let mut any = false;
+        for a in &plan.actions {
+            match *a {
+                FaultAction::ResetAfterFrame(n) => {
+                    script.reset_at = Some(n as u64);
+                    any = true;
+                }
+                FaultAction::CorruptFrame(n) => {
+                    script.corrupt_at = Some(n as u64);
+                    any = true;
+                }
+                FaultAction::DelayMs { ms, at } => {
+                    script.delay = Some((ms, at as u64));
+                    any = true;
+                }
+                FaultAction::PartitionMs { ms, at } => {
+                    script.partition = Some((ms, at as u64));
+                    any = true;
+                }
+                _ => {}
+            }
+        }
+        any.then(|| Arc::new(FlakyState { inner: Mutex::new(script) }))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FlakyScript> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Consult (and advance) the script for the next outbound frame.
+    /// Returns the ruling plus an optional pre-send sleep.
+    fn on_send(&self) -> (SendRuling, Option<Duration>) {
+        let mut s = self.lock();
+        let idx = s.sent;
+        s.sent += 1;
+        if let Some((ms, at)) = s.partition {
+            if idx >= at && s.partition_until.is_none() {
+                s.partition = None;
+                s.partition_until = Some(Instant::now() + Duration::from_millis(ms));
+            }
+        }
+        if let Some(until) = s.partition_until {
+            if Instant::now() < until {
+                return (SendRuling::Fail("flaky transport: partitioned"), None);
+            }
+            s.partition_until = None;
+        }
+        if s.reset_at == Some(idx) {
+            s.reset_at = None;
+            s.rx_reset_pending = true;
+            return (SendRuling::Fail("flaky transport: connection reset by script"), None);
+        }
+        let sleep = match s.delay {
+            Some((ms, at)) if at == idx => {
+                s.delay = None;
+                Some(Duration::from_millis(ms))
+            }
+            _ => None,
+        };
+        if s.corrupt_at == Some(idx) {
+            s.corrupt_at = None;
+            return (SendRuling::Corrupt, sleep);
+        }
+        (SendRuling::Clean, sleep)
+    }
+
+    /// Receive-side script check, consulted *before* touching the inner
+    /// transport so queued in-flight frames survive a scripted reset.
+    fn on_recv(&self) -> Option<&'static str> {
+        let mut s = self.lock();
+        if s.rx_reset_pending {
+            s.rx_reset_pending = false;
+            return Some("flaky transport: connection reset by script");
+        }
+        if let Some(until) = s.partition_until {
+            if Instant::now() < until {
+                return Some("flaky transport: partitioned");
+            }
+            s.partition_until = None;
+        }
+        None
+    }
+}
+
+/// A [`Transport`] wrapper that acts out the network verbs of a
+/// [`FaultPlan`] — scripted resets, CRC corruption, delays, and timed
+/// partitions — against a real inner transport, deterministically by
+/// frame index instead of by packet luck. Wraps the *worker* side of
+/// the aggregator link; the aggregator sees genuine symptoms (a dead
+/// read, a CRC mismatch) through its ordinary failure detector.
+pub struct FlakyTransport {
+    inner: Box<dyn Transport>,
+    state: Arc<FlakyState>,
+}
+
+impl FlakyTransport {
+    /// Wrap `inner` under the shared fault script.
+    pub fn wrap(inner: Box<dyn Transport>, state: Arc<FlakyState>) -> FlakyTransport {
+        FlakyTransport { inner, state }
+    }
+}
+
+fn flaky_send<T: BlobTx + ?Sized>(
+    tx: &mut T,
+    state: &FlakyState,
+    blob: Vec<u8>,
+) -> Result<()> {
+    let (ruling, sleep) = state.on_send();
+    if let Some(d) = sleep {
+        std::thread::sleep(d);
+    }
+    match ruling {
+        SendRuling::Clean => tx.send_blob(blob),
+        SendRuling::Corrupt => tx.send_blob_corrupt(blob),
+        SendRuling::Fail(why) => Err(anyhow::anyhow!(why)),
+    }
+}
+
+impl BlobTx for FlakyTransport {
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
+        flaky_send(self.inner.as_mut(), &self.state, blob)
+    }
+}
+
+impl BlobRx for FlakyTransport {
+    fn recv_blob(&mut self) -> Result<Vec<u8>> {
+        if let Some(why) = self.state.on_recv() {
+            anyhow::bail!(why);
+        }
+        self.inner.recv_blob()
+    }
+
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        if let Some(why) = self.state.on_recv() {
+            anyhow::bail!(why);
+        }
+        self.inner.recv_blob_timeout(timeout)
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+impl Transport for FlakyTransport {
+    fn split(self: Box<Self>) -> (Box<dyn BlobTx>, Box<dyn BlobRx>) {
+        let FlakyTransport { inner, state } = *self;
+        let (tx, rx) = inner.split();
+        (
+            Box::new(FlakyTx { tx, state: Arc::clone(&state) }),
+            Box::new(FlakyRx { rx, state }),
+        )
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+struct FlakyTx {
+    tx: Box<dyn BlobTx>,
+    state: Arc<FlakyState>,
+}
+
+struct FlakyRx {
+    rx: Box<dyn BlobRx>,
+    state: Arc<FlakyState>,
+}
+
+impl BlobTx for FlakyTx {
+    fn send_blob(&mut self, blob: Vec<u8>) -> Result<()> {
+        flaky_send(self.tx.as_mut(), &self.state, blob)
+    }
+}
+
+impl BlobRx for FlakyRx {
+    fn recv_blob(&mut self) -> Result<Vec<u8>> {
+        if let Some(why) = self.state.on_recv() {
+            anyhow::bail!(why);
+        }
+        self.rx.recv_blob()
+    }
+
+    fn recv_blob_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        if let Some(why) = self.state.on_recv() {
+            anyhow::bail!(why);
+        }
+        self.rx.recv_blob_timeout(timeout)
+    }
+
+    fn peer(&self) -> String {
+        self.rx.peer()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -980,8 +1434,9 @@ mod tests {
         let s = t.stats();
         assert_eq!(s.frames_sent, 4);
         assert_eq!(s.frames_recv, 4);
-        // Framing overhead is counted: 4-byte prefix per frame.
-        assert_eq!(s.bytes_sent, 4 * 4 + (3 + 4 + 5 + 6));
+        // Framing overhead is counted: 4-byte prefix + 4-byte CRC
+        // trailer per frame.
+        assert_eq!(s.bytes_sent, 8 * 4 + (3 + 4 + 5 + 6));
     }
 
     #[test]
@@ -1259,6 +1714,176 @@ mod tests {
         let mut accepted = listener.accept(Duration::from_secs(10), pool()).unwrap();
         assert_eq!(accepted.recv_blob().unwrap(), b"ring".to_vec());
         h.join().unwrap();
+    }
+
+    #[test]
+    fn crc32c_matches_the_reference_vector() {
+        // RFC 3720 test vector for CRC32C (Castagnoli).
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(&[]), 0);
+        // Sensitive to single-bit flips.
+        assert_ne!(crc32c(b"133456789"), crc32c(b"123456789"));
+    }
+
+    #[test]
+    fn corrupt_channel_frame_is_retryable_not_poisonous() {
+        let (mut a, mut b) = channel_pair();
+        a.send_blob_corrupt(vec![1, 2, 3]).unwrap();
+        a.send_blob(vec![4, 5]).unwrap();
+        let err = b.recv_blob().unwrap_err();
+        assert!(is_corrupt_frame_err(&err), "got: {err:#}");
+        // The frame boundary held: the next frame reads cleanly.
+        assert_eq!(b.recv_blob().unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn corrupt_tcp_frame_is_retryable_not_poisonous() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(
+                &addr.to_string(),
+                Duration::from_secs(10),
+                pool(),
+            )
+            .unwrap();
+            t.send_blob_corrupt(b"damaged".to_vec()).unwrap();
+            t.send_blob(b"clean".to_vec()).unwrap();
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        let err = t.recv_blob().unwrap_err();
+        assert!(is_corrupt_frame_err(&err), "got: {err:#}");
+        // The length prefix delimited the bad frame; the stream is
+        // still framed and the next frame arrives intact — corruption
+        // is a resend, not a desync. Both timed and blocking reads.
+        assert_eq!(t.recv_blob().unwrap(), b"clean".to_vec());
+        h.join().unwrap();
+        // Non-CRC errors are not classified as corruption.
+        assert!(!is_corrupt_frame_err(&anyhow::anyhow!("peer disconnected")));
+    }
+
+    #[test]
+    fn tcp_timed_recv_detects_corruption_too() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(
+                &addr.to_string(),
+                Duration::from_secs(10),
+                pool(),
+            )
+            .unwrap();
+            t.send_blob_corrupt(vec![7; 32]).unwrap();
+            t.send_blob(vec![8; 5]).unwrap();
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let mut t = TcpTransport::from_stream(stream, pool()).unwrap();
+        let err = loop {
+            match t.recv_blob_timeout(Duration::from_millis(100)) {
+                Ok(None) => continue,
+                Ok(Some(b)) => panic!("corrupt frame decoded cleanly: {b:?}"),
+                Err(e) => break e,
+            }
+        };
+        assert!(is_corrupt_frame_err(&err), "got: {err:#}");
+        let next = loop {
+            if let Some(b) = t.recv_blob_timeout(Duration::from_millis(100)).unwrap() {
+                break b;
+            }
+        };
+        assert_eq!(next, vec![8; 5]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_peer_labels_name_the_remote_address() {
+        let (listener, addr) = listen("127.0.0.1:0").unwrap();
+        let h = std::thread::spawn(move || {
+            let t = TcpTransport::connect(&addr.to_string(), Duration::from_secs(10), pool())
+                .unwrap();
+            assert!(t.peer().starts_with("127.0.0.1:"), "got {}", t.peer());
+            // Keep the link open until the main thread is done probing.
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let stream = accept_workers(&listener, 1, Duration::from_secs(10))
+            .unwrap()
+            .pop()
+            .unwrap();
+        let t = TcpTransport::from_stream(stream, pool()).unwrap();
+        assert!(t.peer().starts_with("127.0.0.1:"), "got {}", t.peer());
+        let (_tx, rx) = (Box::new(t) as Box<dyn Transport>).split();
+        assert!(rx.peer().starts_with("127.0.0.1:"), "got {}", rx.peer());
+        let (a, _b) = channel_pair();
+        assert_eq!((Box::new(a) as Box<dyn Transport>).split().1.peer(), "chan");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flaky_reset_fires_once_on_both_halves_then_heals() {
+        let plan = FaultPlan::parse("reset-after-frame=1").unwrap();
+        let state = FlakyState::from_plan(&plan).unwrap();
+        let (a, mut b) = channel_pair();
+        let mut f = FlakyTransport::wrap(Box::new(a), Arc::clone(&state));
+        f.send_blob(vec![0]).unwrap(); // frame 0: clean
+        let err = f.send_blob(vec![1]).unwrap_err(); // frame 1: reset
+        assert!(err.to_string().contains("reset"), "got: {err}");
+        // The receive half observes the same reset exactly once...
+        assert!(f.recv_blob_timeout(Duration::from_millis(10)).is_err());
+        // ...then the link heals: frame 0 is still queued at the peer,
+        // and new sends flow again.
+        assert_eq!(b.recv_blob().unwrap(), vec![0]);
+        f.send_blob(vec![2]).unwrap();
+        assert_eq!(b.recv_blob().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn flaky_corrupt_and_delay_route_by_frame_index() {
+        let plan = FaultPlan::parse("corrupt-frame=1;delay-ms=30@2").unwrap();
+        let state = FlakyState::from_plan(&plan).unwrap();
+        let (a, mut b) = channel_pair();
+        let mut f = FlakyTransport::wrap(Box::new(a), state);
+        f.send_blob(vec![0]).unwrap();
+        f.send_blob(vec![1]).unwrap(); // scripted CRC damage
+        let t0 = Instant::now();
+        f.send_blob(vec![2]).unwrap(); // scripted 30ms delay
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(b.recv_blob().unwrap(), vec![0]);
+        let err = b.recv_blob().unwrap_err();
+        assert!(is_corrupt_frame_err(&err), "got: {err:#}");
+        assert_eq!(b.recv_blob().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn flaky_partition_blocks_both_ways_then_expires() {
+        let plan = FaultPlan::parse("partition-ms=60@1").unwrap();
+        let state = FlakyState::from_plan(&plan).unwrap();
+        let (a, mut b) = channel_pair();
+        let mut f = FlakyTransport::wrap(Box::new(a), state);
+        f.send_blob(vec![0]).unwrap();
+        // Frame 1 opens the partition window: both directions fail.
+        assert!(f.send_blob(vec![1]).is_err());
+        assert!(f.recv_blob_timeout(Duration::from_millis(5)).is_err());
+        std::thread::sleep(Duration::from_millis(80));
+        // Healed: traffic flows both ways again.
+        f.send_blob(vec![2]).unwrap();
+        b.send_blob(vec![9]).unwrap();
+        assert_eq!(b.recv_blob().unwrap(), vec![0]);
+        assert_eq!(b.recv_blob().unwrap(), vec![2]);
+        assert_eq!(f.recv_blob().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn flaky_state_only_arms_on_network_verbs() {
+        assert!(FlakyState::from_plan(&FaultPlan::default()).is_none());
+        let compute_only = FaultPlan::parse("kill-after-micro=2;stall-ms=10@1").unwrap();
+        assert!(FlakyState::from_plan(&compute_only).is_none());
+        let mixed = FaultPlan::parse("kill-after-micro=9;corrupt-frame=3").unwrap();
+        assert!(FlakyState::from_plan(&mixed).is_some());
     }
 
     #[test]

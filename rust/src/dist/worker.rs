@@ -26,6 +26,15 @@
 //! time, which keeps every chaos scenario deterministic even under the
 //! overlap pipeline.
 //!
+//! [`run_worker_reconnecting`] is the durable TCP entry point: it
+//! redials a broken link with capped exponential [`Backoff`] + jitter,
+//! re-presenting the [`WorkerSession`] identity (worker id +
+//! incarnation token) learned from the first Init — which is how a
+//! worker outlives both transient resets and a full aggregator
+//! restart. A corrupt inbound frame at the aggregator comes back as a
+//! `Nack`, answered by resending the retained last Up frame; the step
+//! stamp makes an unnecessary resend harmless.
+//!
 //! ## Ring mode
 //!
 //! When `InitMsg.ring` is set the worker *holds* its computed
@@ -60,16 +69,19 @@ use crate::obs::trace;
 use super::fault::{FaultAction, FaultPlan};
 use super::grads::{BufPool, GradCodec};
 use super::proto::{
-    decode_apply, decode_compute, decode_deltas, decode_init, decode_pong, decode_ring_cast,
-    decode_ring_castd, decode_ring_exec, decode_ring_listen, decode_ring_part, decode_ring_peers,
-    decode_ring_reset, decode_state, encode_bye, encode_join, encode_ping, encode_ring_addr,
-    encode_ring_cast_header, encode_ring_final_header, encode_ring_part_header, encode_ring_ready,
-    encode_trace, encode_up_header, peek_tag, ByeMsg, CastRole, InitMsg, RingExec, UpHdr,
-    PROTO_VERSION, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT, TAG_PONG, TAG_RESET,
-    TAG_RING_CASTD, TAG_RING_EXEC, TAG_RING_LISTEN, TAG_RING_PEERS, TAG_RING_RESET, TAG_SHUTDOWN,
-    TAG_STATE, UP_GRAD_OFF,
+    decode_apply, decode_compute, decode_deltas, decode_init, decode_nack, decode_pong,
+    decode_ring_cast, decode_ring_castd, decode_ring_exec, decode_ring_listen, decode_ring_part,
+    decode_ring_peers, decode_ring_reset, decode_state, encode_bye, encode_join, encode_ping,
+    encode_ring_addr, encode_ring_cast_header, encode_ring_final_header, encode_ring_part_header,
+    encode_ring_ready, encode_trace, encode_up_header, peek_tag, ByeMsg, CastRole, InitMsg,
+    JoinMsg, RingExec, UpHdr, PROTO_VERSION, TAG_APPLY, TAG_COMPUTE, TAG_DELTAS, TAG_EVICT,
+    TAG_NACK, TAG_PONG, TAG_RESET, TAG_RING_CASTD, TAG_RING_EXEC, TAG_RING_LISTEN, TAG_RING_PEERS,
+    TAG_RING_RESET, TAG_SHUTDOWN, TAG_STATE, UP_GRAD_OFF,
 };
-use super::transport::{ring_connect, BlobRx, BlobTx, RingListener, Transport};
+use super::transport::{
+    ring_connect, BlobRx, BlobTx, FlakyState, FlakyTransport, RingListener, TcpTransport,
+    Transport,
+};
 
 /// The uplink half, shared between the compute/sender path and the
 /// heartbeat thread. Every send takes the lock only for the actual
@@ -615,17 +627,34 @@ fn sim_wire_delay(bytes: usize, ms_per_mib: f64) {
     }
 }
 
+/// The last Up frame's bytes, kept for a NACK resend. One slot is
+/// enough: the aggregator detects corruption on arrival and NACKs
+/// before the worker computes the next micro, and a duplicate resend
+/// is dropped idempotently by its step stamp anyway.
+type Retained = Arc<Mutex<Vec<u8>>>;
+
+fn retain_frame(retained: &Retained, frame: &[u8]) {
+    let mut slot = match retained.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    slot.clear();
+    slot.extend_from_slice(frame);
+}
+
 /// Encode one computed gradient into a recycled buffer (Up header +
 /// codec payload as the frame tail), pay the optional simulated NIC
 /// outside the uplink lock, and upload it. `ef` is the worker's
 /// error-feedback residual state, threaded through every lossy encode
 /// so quantization error carries to the next step instead of vanishing.
+/// A copy of the encoded frame is retained for a NACK resend.
 fn encode_and_send(
     codec: &GradCodec,
     pool: &BufPool,
     wire_ms_per_mib: f64,
     tx: &SharedTx,
     ef: &mut Option<Vec<Tensor>>,
+    retained: &Retained,
     c: Computed,
 ) -> Result<()> {
     let mut frame = pool.checkout();
@@ -646,6 +675,7 @@ fn encode_and_send(
         ef.as_mut().map(|v| v.as_mut_slice()),
         &mut frame,
     );
+    retain_frame(retained, &frame);
     sim_wire_delay(frame.len() - UP_GRAD_OFF, wire_ms_per_mib);
     send_shared(tx, frame)
 }
@@ -665,6 +695,7 @@ fn handle_frame(
     ring: &mut RingState,
     held: &mut Option<HeldStep>,
     ef: &mut Option<Vec<Tensor>>,
+    retained: &Retained,
 ) -> Result<Flow> {
     match peek_tag(frame)? {
         TAG_COMPUTE if init.ring => {
@@ -699,6 +730,7 @@ fn handle_frame(
                         },
                         &mut up,
                     );
+                    retain_frame(retained, &up);
                     send_shared(tx, up).context("sending metric-only Up")?;
                 }
                 entries.push((job.micro, job.masks, grads));
@@ -736,9 +768,15 @@ fn handle_frame(
                     Some(stx) => stx
                         .send(c)
                         .map_err(|_| anyhow::anyhow!("sender thread exited early"))?,
-                    None => {
-                        encode_and_send(codec, pool, init.sim_wire_ms_per_mib, tx, ef, c)?
-                    }
+                    None => encode_and_send(
+                        codec,
+                        pool,
+                        init.sim_wire_ms_per_mib,
+                        tx,
+                        ef,
+                        retained,
+                        c,
+                    )?,
                 }
             }
             Ok(Flow::Continue)
@@ -840,6 +878,29 @@ fn handle_frame(
             flush_trace(init, trace_offset_us, tx, pool)?;
             Ok(Flow::Continue)
         }
+        TAG_NACK => {
+            // The aggregator saw our last frame arrive corrupt: resend
+            // the retained copy. No retained frame (e.g. the corrupt
+            // frame was a heartbeat) is fine — the stall detector
+            // re-dispatches lost work, and the NACK itself told us
+            // nothing was poisoned.
+            let step = decode_nack(frame)?;
+            let copy = {
+                let slot = match retained.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                slot.clone()
+            };
+            if !copy.is_empty() {
+                trace::instant("hb", "nack_resend");
+                let mut resend = pool.checkout();
+                resend.extend_from_slice(&copy);
+                send_shared(tx, resend)
+                    .with_context(|| format!("resending after a NACK for step {step}"))?;
+            }
+            Ok(Flow::Continue)
+        }
         TAG_RESET => {
             be.reset_momentum().context("resetting momentum")?;
             Ok(Flow::Continue)
@@ -847,6 +908,77 @@ fn handle_frame(
         TAG_EVICT => Ok(Flow::Die),
         TAG_SHUTDOWN => Ok(Flow::Shutdown),
         tag => anyhow::bail!("worker received unexpected frame tag {tag:#x}"),
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter, driving the
+/// redial loop of [`run_worker_reconnecting`]. `next_delay` is pure
+/// computation over internal state — no clock, no sleeping — so tests
+/// assert the whole schedule against a virtual clock without waiting
+/// out a single delay.
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    attempt: u32,
+    rng: u64,
+}
+
+impl Backoff {
+    /// A schedule starting at `base_ms`, doubling per attempt, capped
+    /// at `cap_ms`. `seed` drives the jitter stream deterministically.
+    pub fn new(base_ms: u64, cap_ms: u64, seed: u64) -> Backoff {
+        Backoff { base_ms: base_ms.max(1), cap_ms: cap_ms.max(1), attempt: 0, rng: seed | 1 }
+    }
+
+    /// The next delay: `min(cap, base << attempt)` jittered uniformly
+    /// into `[raw/2, raw]` (decorrelating a fleet of workers redialing
+    /// a restarted aggregator without ever under-waiting by more than
+    /// half a step).
+    pub fn next_delay(&mut self) -> Duration {
+        let shift = self.attempt.min(16);
+        let raw = self.base_ms.checked_shl(shift).unwrap_or(u64::MAX).min(self.cap_ms).max(1);
+        self.attempt = self.attempt.saturating_add(1);
+        // LCG (Knuth MMIX constants); take high bits for the jitter.
+        self.rng = self
+            .rng
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let frac = (self.rng >> 33) as f64 / (1u64 << 31) as f64; // [0, 1)
+        let ms = raw / 2 + ((raw as f64 / 2.0) * frac) as u64;
+        Duration::from_millis(ms.clamp(raw / 2, raw))
+    }
+
+    /// Reset after a successful connection: the next outage starts the
+    /// schedule from `base_ms` again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// The identity a worker carries across link incarnations: its worker
+/// id, the run's incarnation token (both learned from the first Init),
+/// and the last aggregator step it answered. A redial presents these
+/// in its Join so the aggregator recognizes a returning replica.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerSession {
+    worker: u32,
+    incarnation: u64,
+    last_step: u64,
+}
+
+impl WorkerSession {
+    /// A fresh session: no identity yet (`worker = u32::MAX`).
+    pub fn fresh() -> WorkerSession {
+        WorkerSession { worker: u32::MAX, incarnation: 0, last_step: 0 }
+    }
+
+    fn join_msg(&self) -> JoinMsg {
+        JoinMsg {
+            version: PROTO_VERSION,
+            incarnation: self.incarnation,
+            worker: self.worker,
+            last_step: self.last_step,
+        }
     }
 }
 
@@ -860,19 +992,91 @@ pub fn run_worker(link: Box<dyn Transport>, pool: Arc<BufPool>) -> Result<()> {
 /// [`run_worker`] with a scripted [`FaultPlan`] acted out against the
 /// gradient-send counter (see [`super::fault`] for the grammar).
 pub fn run_worker_with_faults(
+    link: Box<dyn Transport>,
+    pool: Arc<BufPool>,
+    plan: FaultPlan,
+) -> Result<()> {
+    let mut session = WorkerSession::fresh();
+    run_worker_session(link, pool, plan, &mut session)
+}
+
+/// Keep a TCP worker alive across link failures: dial `addr`, serve,
+/// and on a link error (drop, reset, aggregator restart) redial with
+/// [`Backoff`] for up to `redial_window` — re-presenting the learned
+/// [`WorkerSession`] identity in each Join. A clean exit (shutdown,
+/// eviction, scripted death) never redials. Network fault verbs in
+/// `plan` wrap every dialed link in one shared
+/// [`FlakyTransport`] script, so the scripted fault sequence spans
+/// redials instead of restarting on each.
+pub fn run_worker_reconnecting(
+    addr: &str,
+    pool: Arc<BufPool>,
+    plan: FaultPlan,
+    redial_window: Duration,
+) -> Result<()> {
+    let flaky = FlakyState::from_plan(&plan);
+    let mut session = WorkerSession::fresh();
+    // Seed from the dial address so a fleet's jitter streams diverge.
+    let mut backoff = Backoff::new(50, 2_000, super::checkpoint::fnv64(addr.as_bytes()));
+    let start = Instant::now();
+    loop {
+        let link: Box<dyn Transport> = match TcpTransport::connect(
+            addr,
+            Duration::from_secs(10),
+            Arc::clone(&pool),
+        ) {
+            Ok(l) => match &flaky {
+                Some(state) => Box::new(FlakyTransport::wrap(Box::new(l), Arc::clone(state))),
+                None => Box::new(l),
+            },
+            Err(e) => {
+                if start.elapsed() >= redial_window {
+                    return Err(e.context("dialing the aggregator beyond the redial window"));
+                }
+                thread::sleep(backoff.next_delay());
+                continue;
+            }
+        };
+        match run_worker_session(link, Arc::clone(&pool), plan.clone(), &mut session) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                if start.elapsed() >= redial_window {
+                    return Err(e.context("worker link failed beyond the redial window"));
+                }
+                let delay = backoff.next_delay();
+                eprintln!(
+                    "[dist-worker] link to {addr} failed ({e:#}); redialing in {}ms",
+                    delay.as_millis()
+                );
+                thread::sleep(delay);
+            }
+        }
+    }
+}
+
+/// One link incarnation: Join (with the session's identity), Init,
+/// handshake barrier, then the serve loop. Updates `session` from the
+/// Init so a later redial presents the learned identity.
+fn run_worker_session(
     mut link: Box<dyn Transport>,
     pool: Arc<BufPool>,
     plan: FaultPlan,
+    session: &mut WorkerSession,
 ) -> Result<()> {
     // Announce ourselves first: the Join frame carries the protocol
     // version so a mismatched worker is rejected descriptively at the
     // aggregator instead of misparsing frames mid-run.
     let mut join = pool.checkout();
-    encode_join(PROTO_VERSION, &mut join);
+    encode_join(&session.join_msg(), &mut join);
     link.send_blob(join).context("sending Join")?;
     let frame = link.recv_blob().context("waiting for Init")?;
     let init = decode_init(&frame)?;
     pool.give_back(frame);
+    // Learn (or confirm) our identity: a redial after this point
+    // presents these in its Join, which is how the aggregator tells a
+    // returning replica from a fresh dialer.
+    session.worker = init.worker as u32;
+    session.incarnation = init.incarnation;
     // Clock handshake: the Init carries the aggregator's trace clock
     // at encode time; sampling ours at decode time gives the offset
     // that maps local timestamps onto the aggregator timeline (transit
@@ -909,6 +1113,9 @@ fn serve(
     let mut faults = FaultState::new(plan);
     let mut ring = RingState::new();
     let mut held: Option<HeldStep> = None;
+    // Last Up frame, kept for NACK resends (shared with the overlap
+    // sender thread, which is where Up frames are encoded in that mode).
+    let retained: Retained = Arc::new(Mutex::new(Vec::new()));
     // Error-feedback residuals exist once per worker for lossy wires;
     // with the overlap sender thread they live (and mutate) there.
     let mut ef: Option<Vec<Tensor>> =
@@ -968,12 +1175,15 @@ fn serve(
         let wire_ms = init.sim_wire_ms_per_mib;
         let mut ef = ef.take();
         let lane = init.worker as u32 + 1;
+        let retained = Arc::clone(&retained);
         let handle = thread::Builder::new()
             .name(format!("d2ft-dist-{}-tx", init.worker))
             .spawn(move || {
                 trace::set_lane(lane);
                 while let Ok(c) = srx.recv() {
-                    if encode_and_send(&codec, &pool, wire_ms, &tx, &mut ef, c).is_err() {
+                    if encode_and_send(&codec, &pool, wire_ms, &tx, &mut ef, &retained, c)
+                        .is_err()
+                    {
                         // Aggregator gone: stop draining; the compute
                         // thread will notice on its own half.
                         break;
@@ -1009,6 +1219,7 @@ fn serve(
             &mut ring,
             &mut held,
             &mut ef,
+            &retained,
         );
         pool.give_back(frame);
         match flow {
@@ -1089,4 +1300,58 @@ fn serve(
         result = send_shared(&tx, bye).context("sending Bye");
     }
     result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_within_bounds() {
+        let mut b = Backoff::new(50, 2_000, 7);
+        let mut prev_raw = 0u64;
+        for attempt in 0..12 {
+            let raw = 50u64.checked_shl(attempt.min(16)).unwrap_or(u64::MAX).min(2_000);
+            let d = b.next_delay().as_millis() as u64;
+            assert!(
+                d >= raw / 2 && d <= raw,
+                "attempt {attempt}: delay {d}ms outside [{}, {raw}]",
+                raw / 2
+            );
+            assert!(raw >= prev_raw, "raw schedule must be monotonic");
+            prev_raw = raw;
+        }
+        // Deep into the schedule every delay is pinned to the cap band.
+        for _ in 0..20 {
+            let d = b.next_delay().as_millis() as u64;
+            assert!((1_000..=2_000).contains(&d), "capped delay {d}ms outside [1000, 2000]");
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed_and_resets() {
+        let schedule = |seed: u64| -> Vec<u128> {
+            let mut b = Backoff::new(10, 500, seed);
+            (0..8).map(|_| b.next_delay().as_millis()).collect()
+        };
+        assert_eq!(schedule(42), schedule(42), "same seed, same jitter stream");
+        assert_ne!(schedule(1), schedule(2), "different seeds must decorrelate");
+        let mut b = Backoff::new(10, 500, 9);
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        b.reset();
+        let d = b.next_delay().as_millis() as u64;
+        assert!((5..=10).contains(&d), "reset must restart from the base: got {d}ms");
+    }
+
+    #[test]
+    fn fresh_sessions_join_with_no_identity() {
+        let s = WorkerSession::fresh();
+        let j = s.join_msg();
+        assert_eq!(j.version, PROTO_VERSION);
+        assert_eq!(j.incarnation, 0);
+        assert_eq!(j.worker, u32::MAX);
+        assert_eq!(j.last_step, 0);
+    }
 }

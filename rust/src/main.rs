@@ -108,14 +108,32 @@ fn cli() -> Cli {
             "fault",
             "",
             "scripted faults: train --dist takes `W:PLAN,...`, dist-worker takes `PLAN` \
-             (PLAN = kill-after-micro=N | stall-ms=M@N | drop-uplink=N | rejoin-at-epoch=E, \
-             ';'-joined)",
+             (PLAN = kill-after-micro=N | stall-ms=M@N | drop-uplink=N | rejoin-at-epoch=E | \
+             reset-after-frame=N | corrupt-frame=N | delay-ms=M@N | partition-ms=M@E, \
+             ';'-joined; the last four act at the network layer)",
         )
         .flag("heartbeat-ms", "500", "dist worker heartbeat interval in ms (0 = disabled)")
         .flag("liveness-misses", "4", "missed heartbeats before a dist worker is declared lost")
         .flag("report-json", "", "train --dist: write the DistReport as JSON to this path")
         .flag("checkpoint-dir", "", "train --dist: write epoch-boundary checkpoints here")
-        .flag("resume", "", "train --dist: resume from a checkpoint file (skips pre-training)")
+        .flag(
+            "checkpoint-retain",
+            "2",
+            "train --dist: epoch checkpoints kept after rotation (older ones are deleted)",
+        )
+        .flag(
+            "resume",
+            "",
+            "train --dist: resume from a checkpoint file, or from a checkpoint *directory* \
+             (crash recovery: picks the newest loadable checkpoint + the progress record); \
+             skips pre-training",
+        )
+        .flag(
+            "halt-after-batch",
+            "",
+            "train --dist: crash simulation — exit abruptly right after completing this many \
+             batches (progress record on disk, no shutdown handshake); pair with --resume",
+        )
         .flag(
             "trace-out",
             "",
@@ -308,7 +326,7 @@ fn main() -> Result<()> {
 /// the same invocation serves any run — including one on another host.
 #[cfg(feature = "native")]
 fn run_dist_worker(args: &d2ft::util::cli::Args) -> Result<()> {
-    use d2ft::dist::{run_worker_with_faults, BufPool, FaultPlan, TcpTransport};
+    use d2ft::dist::{run_worker_reconnecting, BufPool, FaultPlan};
     use std::sync::Arc;
 
     let addr = args.get("connect");
@@ -318,10 +336,11 @@ fn run_dist_worker(args: &d2ft::util::cli::Args) -> Result<()> {
     );
     let plan = FaultPlan::parse(args.get("fault"))?;
     let pool = Arc::new(BufPool::new());
-    let transport =
-        TcpTransport::connect(addr, std::time::Duration::from_secs(60), Arc::clone(&pool))?;
-    d2ft::info!("dist-worker connected to {addr}");
-    run_worker_with_faults(Box::new(transport), pool, plan)?;
+    // The redial window lets this worker outlive an aggregator restart:
+    // a dropped link is retried with capped backoff until the window
+    // expires, so `--resume` on the aggregator side picks the same
+    // replica back up instead of spawning a fresh one.
+    run_worker_reconnecting(addr, pool, plan, std::time::Duration::from_secs(60))?;
     d2ft::info!("dist-worker shut down cleanly");
     Ok(())
 }
@@ -389,7 +408,18 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         liveness_misses: args.get_usize("liveness-misses")? as u32,
         faults: parse_worker_plans(args.get("fault"))?,
         checkpoint_dir: to_path("checkpoint-dir"),
+        checkpoint_retain: args.get_usize("checkpoint-retain")?,
         resume_from: to_path("resume"),
+        halt_after_batch: {
+            let v = args.get("halt-after-batch");
+            if v.is_empty() {
+                None
+            } else {
+                Some(v.parse::<usize>().map_err(|e| {
+                    anyhow::anyhow!("--halt-after-batch {v:?}: {e} (expected a batch count)")
+                })?)
+            }
+        },
         trace_out: to_path("trace-out"),
         metrics: Some(std::sync::Arc::clone(&registry)),
         ..DistConfig::new(cfg, workers)
@@ -444,6 +474,11 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
     println!("straggler (measured) {:.3}ms/batch", t.straggler_ms);
     println!("worker utilization   {}", pct(r.worker_utilization));
     println!("worker imbalance     {:.4}", r.worker_imbalance);
+    println!(
+        "recovery             {} evictions, {} joins, {} reconnects, {} corrupt frames, \
+         {} resends, {} aggregator restarts",
+        r.evictions, r.joins, r.reconnects, r.frames_corrupt, r.resends, r.aggregator_restarts
+    );
     if t.calib_epochs > 0 {
         println!(
             "exec-time calib      x{:.3} (p_f x{:.3}, p_o x{:.3}) over {} epochs; \

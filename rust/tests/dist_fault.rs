@@ -21,6 +21,15 @@
 //! additionally tears down and renegotiates the worker↔worker chain.
 //! Every run is guarded by an outer timeout — no fault may hang the
 //! aggregator.
+//!
+//! PR 9 extends the matrix to the coordinator itself: an aggregator
+//! "crash" mid-epoch (the deterministic `halt_after_batch` simulation —
+//! progress record on disk, no shutdown handshake) followed by a
+//! `resume_from` directory restart must converge bitwise to the
+//! uninterrupted run, for K ∈ {2, 4} over both transports; and the
+//! network-layer fault verbs (`reset-after-frame`, `corrupt-frame`,
+//! `partition-ms`) must heal via reconnect/NACK-resend with **zero**
+//! evictions and zero numeric drift.
 #![cfg(feature = "native")]
 
 use std::process::Command;
@@ -138,6 +147,16 @@ fn wait_run(rx: &mpsc::Receiver<RunOut>, secs: u64) -> (DistReport, Tensor, Tens
     rx.recv_timeout(Duration::from_secs(secs))
         .expect("dist fault run must finish, not hang")
         .expect("dist fault run must succeed")
+}
+
+/// Like [`wait_run`] for scenarios that *script a crash*: the run must
+/// fail (not hang, not succeed) and the error text comes back for
+/// inspection.
+fn wait_halt(rx: &mpsc::Receiver<RunOut>, secs: u64) -> String {
+    let out = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .expect("halted dist run must finish, not hang");
+    format!("{:#}", out.expect_err("a scripted halt must surface as an error"))
 }
 
 /// Reserve a loopback address that is almost certainly free.
@@ -420,4 +439,160 @@ fn sigkill_subprocess_worker_is_evicted_and_the_run_completes() {
     for mut child in honest {
         child.wait().expect("reaping honest dist-worker");
     }
+}
+
+#[test]
+fn aggregator_crash_and_resume_matches_the_uninterrupted_run_bitwise() {
+    // The coordinator dies mid-epoch-2 (the deterministic
+    // `halt_after_batch` crash simulation: the batch-5 progress record
+    // is on disk, no shutdown handshake ran) and a fresh aggregator
+    // restarts from the checkpoint *directory* — newest loadable epoch
+    // checkpoint plus the progress record's restart counter. The
+    // resumed tail must replay the fault-free serial reference
+    // bitwise, params included, for K ∈ {2, 4} over both transports.
+    let (curve, sw, sh) = serial_reference(fault_cfg(8));
+    for (label, transport) in [("chan", TransportKind::Channel), ("tcp", tcp_threads())] {
+        for k in [2usize, 4] {
+            let dir = std::env::temp_dir()
+                .join(format!("d2ft-agg-crash-{}-{label}-{k}", std::process::id()));
+            std::fs::remove_dir_all(&dir).ok();
+            let tag = format!("{label} K={k}");
+
+            let mut dcfg = chaos(fault_cfg(8), k);
+            dcfg.transport = transport.clone();
+            dcfg.checkpoint_dir = Some(dir.clone());
+            dcfg.halt_after_batch = Some(5);
+            let err = wait_halt(&spawn_run(dcfg), 180);
+            assert!(err.contains("halted after batch 5"), "{tag}: got: {err}");
+            assert!(
+                dir.join("ckpt_e1.d2ck").exists(),
+                "{tag}: the epoch-1 checkpoint must have survived the crash"
+            );
+            assert!(
+                dir.join("progress.d2pr").exists(),
+                "{tag}: the progress record must have survived the crash"
+            );
+
+            let mut dcfg = chaos(fault_cfg(8), k);
+            dcfg.transport = transport.clone();
+            dcfg.checkpoint_dir = Some(dir.clone());
+            dcfg.resume_from = Some(dir.clone());
+            let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+            assert_eq!(
+                r.aggregator_restarts, 1,
+                "{tag}: the restart generation must come from the progress record"
+            );
+            assert_eq!(r.epochs, 2, "{tag}: resume must finish the configured run");
+            assert_eq!(
+                bits(&curve[4..]),
+                bits(&r.train.loss_curve),
+                "{tag}: the resumed tail must replay the uninterrupted run bitwise"
+            );
+            assert_eq!(sw, w, "{tag}: body weights bitwise vs serial");
+            assert_eq!(sh, h, "{tag}: classifier bitwise vs serial");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn checkpoint_rotation_keeps_only_the_retained_tail() {
+    // Four epochs with `checkpoint_retain = 2`: only the two newest
+    // epoch checkpoints may remain on disk, and the survivors must
+    // still be loadable (rotation deletes, never touches the keepers).
+    let dir = std::env::temp_dir().join(format!("d2ft-fault-rotate-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut dcfg = chaos(fault_cfg(16), 2);
+    dcfg.checkpoint_dir = Some(dir.clone());
+    dcfg.checkpoint_retain = 2;
+    let (r, _, _) = wait_run(&spawn_run(dcfg), 180);
+    assert_eq!(r.epochs, 4);
+    assert_eq!(r.checkpoints_written, 4, "every epoch boundary checkpoints");
+    for (epoch, expect) in [(1, false), (2, false), (3, true), (4, true)] {
+        let p = dir.join(format!("ckpt_e{epoch}.d2ck"));
+        assert_eq!(p.exists(), expect, "rotation with retain=2: {}", p.display());
+    }
+    Checkpoint::load(&dir.join("ckpt_e4.d2ck")).expect("retained checkpoint must load");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn transient_reset_reconnects_without_eviction() {
+    // Worker 1's link is scripted to die once mid-run — a connection
+    // reset, not a process crash. The surviving worker process redials
+    // with backoff inside the aggregator's accept window and re-Joins
+    // under its learned identity: a reconnect, not an eviction, and
+    // not a bit of numeric drift.
+    let (curve, sw, sh) = serial_reference(fault_cfg(4));
+    let dcfg = DistConfig {
+        transport: tcp_threads(),
+        faults: vec![(1, FaultPlan::parse("reset-after-frame=6").unwrap())],
+        ..chaos(fault_cfg(4), 2)
+    };
+    let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+    assert_eq!(r.evictions, 0, "a transient reset must heal, not evict");
+    assert!(r.reconnects >= 1, "the redial must be counted, got {}", r.reconnects);
+    assert_eq!(r.live_workers, 2, "membership must converge back to full");
+    assert!(
+        r.membership.iter().any(|e| e.kind == "reconnect"),
+        "membership log must record the reconnect, got kinds {:?}",
+        r.membership.iter().map(|e| e.kind.as_str()).collect::<Vec<_>>()
+    );
+    assert_eq!(bits(&curve), bits(&r.train.loss_curve), "bitwise vs serial");
+    assert_eq!(sw, w, "body weights");
+    assert_eq!(sh, h, "classifier");
+}
+
+#[test]
+fn corrupt_frame_is_nacked_and_resent_not_evicted() {
+    // Worker 1's 7th outbound frame is delivered with a damaged CRC32C
+    // trailer. The aggregator must detect it, answer with a NACK (the
+    // worker resends its retained frame; the stall window backstops the
+    // case where the damaged frame was not the retained one), and the
+    // run must finish with zero evictions and zero numeric drift —
+    // over both the channel and TCP framing.
+    let (curve, sw, sh) = serial_reference(fault_cfg(4));
+    for transport in [TransportKind::Channel, tcp_threads()] {
+        let dcfg = DistConfig {
+            transport,
+            faults: vec![(1, FaultPlan::parse("corrupt-frame=7").unwrap())],
+            ..chaos(fault_cfg(4), 2)
+        };
+        let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+        let tag = &r.transport;
+        assert_eq!(r.evictions, 0, "{tag}: corruption is retryable, never an eviction");
+        assert!(r.frames_corrupt >= 1, "{tag}: the damaged trailer must be detected");
+        assert!(r.resends >= 1, "{tag}: the corrupt arrival must be NACKed for a resend");
+        assert_eq!(r.live_workers, 2, "{tag}");
+        assert_eq!(bits(&curve), bits(&r.train.loss_curve), "{tag}: bitwise vs serial");
+        assert_eq!(sw, w, "{tag}: body weights");
+        assert_eq!(sh, h, "{tag}: classifier");
+    }
+}
+
+#[test]
+fn partition_then_heal_converges_membership_without_eviction() {
+    // From its 6th outbound frame, worker 1's link fails in both
+    // directions for 300 ms, then heals — shorter than the
+    // aggregator's 1 s accept window, so the post-heal redial must
+    // land as a reconnect while the failed mid-partition dial attempts
+    // are consumed and discarded by the accept loop.
+    let (curve, sw, sh) = serial_reference(fault_cfg(4));
+    let dcfg = DistConfig {
+        transport: tcp_threads(),
+        faults: vec![(1, FaultPlan::parse("partition-ms=300@6").unwrap())],
+        ..chaos(fault_cfg(4), 2)
+    };
+    let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
+    assert_eq!(r.evictions, 0, "a healed partition must not cost the worker its seat");
+    assert!(r.reconnects >= 1, "got {} reconnects", r.reconnects);
+    assert_eq!(r.live_workers, 2, "membership must converge back to full");
+    assert!(
+        r.membership.iter().any(|e| e.kind == "reconnect"),
+        "membership log must record the reconnect, got kinds {:?}",
+        r.membership.iter().map(|e| e.kind.as_str()).collect::<Vec<_>>()
+    );
+    assert_eq!(bits(&curve), bits(&r.train.loss_curve), "bitwise vs serial");
+    assert_eq!(sw, w, "body weights");
+    assert_eq!(sh, h, "classifier");
 }

@@ -15,9 +15,12 @@ use d2ft::runtime::ModelConfig;
 use d2ft::schedule::Budget;
 use d2ft::util::json::Json;
 
-/// The pinned v2 key set, sorted (JSON objects render in BTreeMap
-/// order, so this is also the serialization order).
+/// The pinned v3 key set, sorted (JSON objects render in BTreeMap
+/// order, so this is also the serialization order). v3 added the
+/// crash-recovery counters: `aggregator_restarts`, `frames_corrupt`,
+/// `reconnects`, `resends`.
 const GOLDEN_KEYS: &[&str] = &[
+    "aggregator_restarts",
     "batches",
     "checkpoints_written",
     "compress",
@@ -25,6 +28,7 @@ const GOLDEN_KEYS: &[&str] = &[
     "evictions",
     "exchange",
     "final_train_loss",
+    "frames_corrupt",
     "grad_bytes_down",
     "grad_bytes_up",
     "joins",
@@ -32,6 +36,8 @@ const GOLDEN_KEYS: &[&str] = &[
     "live_workers",
     "membership",
     "reassigned_micros",
+    "reconnects",
+    "resends",
     "ring_bytes",
     "schema",
     "schema_version",
@@ -89,12 +95,18 @@ fn report_json_key_set_and_version_are_pinned() {
         keys, GOLDEN_KEYS,
         "report-JSON key set drifted — bump schema_version and update this golden list"
     );
-    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-dist-report-v2");
-    assert_eq!(doc.usize_at("schema_version").unwrap(), 2);
+    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-dist-report-v3");
+    assert_eq!(doc.usize_at("schema_version").unwrap(), 3);
     assert_eq!(doc.usize_at("workers").unwrap(), 2);
     assert_eq!(doc.usize_at("live_workers").unwrap(), 2);
     // Spot-check value kinds a consumer depends on.
     doc.get("final_train_loss").unwrap().as_f64().unwrap();
     doc.get("socket_classes").unwrap().as_arr().unwrap();
     doc.get("membership").unwrap().as_arr().unwrap();
+    // The recovery counters the chaos CI step greps must exist and be
+    // zero on a fault-free run.
+    assert_eq!(doc.usize_at("aggregator_restarts").unwrap(), 0);
+    assert_eq!(doc.usize_at("reconnects").unwrap(), 0);
+    assert_eq!(doc.usize_at("frames_corrupt").unwrap(), 0);
+    assert_eq!(doc.usize_at("resends").unwrap(), 0);
 }

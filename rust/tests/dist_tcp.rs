@@ -225,7 +225,10 @@ fn connect_and_join(addr: &str) -> TcpTransport {
     let mut t =
         TcpTransport::connect(addr, Duration::from_secs(10), pool).expect("mock worker connect");
     let mut join = Vec::new();
-    d2ft::dist::proto::encode_join(d2ft::dist::proto::PROTO_VERSION, &mut join);
+    d2ft::dist::proto::encode_join(
+        &d2ft::dist::proto::JoinMsg::fresh(d2ft::dist::proto::PROTO_VERSION),
+        &mut join,
+    );
     t.send_blob(join).expect("sending Join");
     t
 }
@@ -377,7 +380,10 @@ fn protocol_version_mismatch_is_rejected_descriptively() {
         let mut t = TcpTransport::connect(&addr, Duration::from_secs(10), pool)
             .expect("worker connect");
         let mut join = Vec::new();
-        d2ft::dist::proto::encode_join(d2ft::dist::proto::PROTO_VERSION + 7, &mut join);
+        d2ft::dist::proto::encode_join(
+            &d2ft::dist::proto::JoinMsg::fresh(d2ft::dist::proto::PROTO_VERSION + 7),
+            &mut join,
+        );
         t.send_blob(join).expect("sending wrong-version Join");
         thread::sleep(Duration::from_millis(200));
     }
