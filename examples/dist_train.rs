@@ -41,19 +41,17 @@ fn main() -> anyhow::Result<()> {
     spec.threads = args.get_usize("threads")?;
     let provider = NativeProvider::new(spec);
     let workers = args.get_usize("workers")?.max(1);
-    let cfg = TrainerConfig {
-        train_size: 240,
-        test_size: 48,
-        batches: args.get_usize("batches")?,
-        pretrain_batches: 2,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar100Like,
-            SchedulerKind::D2ft,
-            // The paper's 50%-communication budget: 2 p_f + 1 p_o of 5.
-            Budget::uniform(5, 2, 1),
-        )
-    };
+    let cfg = TrainerConfig::builder()
+        .dataset(SyntheticKind::Cifar100Like)
+        .scheduler(SchedulerKind::D2ft)
+        // The paper's 50%-communication budget: 2 p_f + 1 p_o of 5.
+        .budget(Budget::uniform(5, 2, 1))
+        .train_size(240)
+        .test_size(48)
+        .batches(args.get_usize("batches")?)
+        .pretrain_batches(2)
+        .update(UpdateMode::BatchAccum)
+        .build()?;
 
     // Serial reference (same batch-accumulation semantics).
     let mut serial = Trainer::new(&provider, cfg.clone())?;
@@ -70,12 +68,11 @@ fn main() -> anyhow::Result<()> {
         }
         kind => kind,
     };
-    let dcfg = DistConfig {
-        exchange: ExchangeMode::parse(args.get("exchange"))?,
-        transport,
-        overlap: !args.get_bool("no-overlap"),
-        ..DistConfig::new(cfg, workers)
-    };
+    let dcfg = DistConfig::builder(cfg, workers)
+        .exchange(ExchangeMode::parse(args.get("exchange"))?)
+        .transport(transport)
+        .overlap(!args.get_bool("no-overlap"))
+        .build()?;
     let mut dist = DistTrainer::new(&provider, dcfg)?;
     let rd = dist.run()?;
 

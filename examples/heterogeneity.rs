@@ -28,14 +28,12 @@ fn main() -> anyhow::Result<()> {
     )?;
     let mc = provider.model_config().clone();
     let batches = args.get_usize("batches")?;
-    let base = TrainerConfig {
-        batches,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar100Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 2, 2),
-        )
-    };
+    let base = TrainerConfig::builder()
+        .dataset(SyntheticKind::Cifar100Like)
+        .scheduler(SchedulerKind::D2ft)
+        .budget(Budget::uniform(5, 2, 2))
+        .batches(batches)
+        .build()?;
 
     // Memory heterogeneity: merged 2-head subnets.
     let n_large = args.get_usize("large-memory")?;
@@ -46,10 +44,9 @@ fn main() -> anyhow::Result<()> {
         part.n_subnets() + 2,
         mc.body_subnets() + 2
     );
-    let mut trainer = Trainer::new(provider.as_ref(), TrainerConfig {
-        hetero: Some(mem_spec),
-        ..base.clone()
-    })?;
+    let mut mem_cfg = base.clone();
+    mem_cfg.hetero = Some(mem_spec);
+    let mut trainer = Trainer::new(provider.as_ref(), mem_cfg)?;
     let r_mem = trainer.run()?;
     println!(
         "  top-1 {} | workload var {:.3} | makespan {:.2}ms",
@@ -62,10 +59,9 @@ fn main() -> anyhow::Result<()> {
     let n_fast = args.get_usize("high-speed")?;
     let cpu_spec = HeteroSpec::compute(n_fast);
     println!("compute heterogeneity: {n_fast} high-speed devices (3pf+1po), rest slow (2pf+2po)");
-    let mut trainer = Trainer::new(provider.as_ref(), TrainerConfig {
-        hetero: Some(cpu_spec.clone()),
-        ..base.clone()
-    })?;
+    let mut cpu_cfg = base.clone();
+    cpu_cfg.hetero = Some(cpu_spec.clone());
+    let mut trainer = Trainer::new(provider.as_ref(), cpu_cfg)?;
     let r_cpu = trainer.run()?;
     println!(
         "  top-1 {} | compute {} | comm {}",

@@ -43,13 +43,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     let budget = Budget::uniform(5, args.get_usize("budget-full")?, args.get_usize("budget-fwd")?);
-    let cfg = TrainerConfig {
-        batches: args.get_usize("batches")?,
-        lr: 0.05,
-        eval_every: 10,
-        lora_rank: rank,
-        ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
-    };
+    let cfg = TrainerConfig::builder()
+        .dataset(SyntheticKind::CarsLike)
+        .scheduler(SchedulerKind::D2ft)
+        .budget(budget.clone())
+        .batches(args.get_usize("batches")?)
+        .lr(0.05)
+        .eval_every(10)
+        .lora_rank(rank)
+        .build()?;
     println!(
         "D2FT-LoRA on Cars-like @ compute {} (of standard LoRA) / comm {}",
         pct(budget.compute_fraction(0.4)),
@@ -63,12 +65,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Standard LoRA reference at the same rank (100% budget).
-    let std_cfg = TrainerConfig {
-        scheduler: SchedulerKind::Standard,
-        budget: Budget::uniform(5, 5, 0),
-        eval_every: 0,
-        ..cfg
-    };
+    let mut std_cfg = cfg;
+    std_cfg.scheduler = SchedulerKind::Standard;
+    std_cfg.budget = Budget::uniform(5, 5, 0);
+    std_cfg.eval_every = 0;
     let mut trainer = Trainer::new(provider.as_ref(), std_cfg)?;
     let rs = trainer.run()?;
     println!("Standard LoRA: top-1 {} | train loss {:.4}", pct(rs.test_top1), rs.final_train_loss);

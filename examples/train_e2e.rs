@@ -39,25 +39,21 @@ fn main() -> anyhow::Result<()> {
         std::path::Path::new(args.get("artifacts")),
     )?;
     let budget = Budget::uniform(5, args.get_usize("budget-full")?, args.get_usize("budget-fwd")?);
-    let base = TrainerConfig {
-        dataset: SyntheticKind::parse(args.get("dataset"))?,
-        train_size: args.get_usize("train-size")?,
-        test_size: 160,
-        micros_per_batch: 5,
-        batches: args.get_usize("batches")?,
-        lr: args.get_f32("lr")?,
-        budget: budget.clone(),
-        scheduler: SchedulerKind::D2ft,
-        scores: Default::default(),
-        exec: ExecMode::Parallel { workers: 0 },
-        partition_group: 1,
-        hetero: None,
-        seed: args.get_u64("seed")?,
-        pretrain_batches: args.get_usize("pretrain-batches")?,
-        eval_every: 10,
-        lora_rank: 0,
-        update: UpdateMode::PerMicro,
-    };
+    let base = TrainerConfig::builder()
+        .dataset(SyntheticKind::parse(args.get("dataset"))?)
+        .train_size(args.get_usize("train-size")?)
+        .test_size(160)
+        .micros_per_batch(5)
+        .batches(args.get_usize("batches")?)
+        .lr(args.get_f32("lr")?)
+        .budget(budget.clone())
+        .scheduler(SchedulerKind::D2ft)
+        .exec(ExecMode::Parallel { workers: 0 })
+        .seed(args.get_u64("seed")?)
+        .pretrain_batches(args.get_usize("pretrain-batches")?)
+        .eval_every(10)
+        .update(UpdateMode::PerMicro)
+        .build()?;
 
     println!(
         "== D2FT ({}) @ compute {} / comm {} ==",
@@ -96,11 +92,9 @@ fn main() -> anyhow::Result<()> {
 
     if !args.get_bool("skip-standard") {
         println!("\n== Standard fine-tuning (100% budget) ==");
-        let std_cfg = TrainerConfig {
-            scheduler: SchedulerKind::Standard,
-            eval_every: 0,
-            ..base
-        };
+        let mut std_cfg = base;
+        std_cfg.scheduler = SchedulerKind::Standard;
+        std_cfg.eval_every = 0;
         let mut trainer = Trainer::new(provider.as_ref(), std_cfg)?;
         let rs = trainer.run()?;
         println!(

@@ -51,16 +51,20 @@ fn main() {
     let provider = NativeProvider::default();
     // No pretrain: `DistReport::wire` already excludes pretrain
     // traffic, so this only keeps the runs short.
-    let base = |scheduler, budget| TrainerConfig {
-        train_size: 240,
-        test_size: 24,
-        batches: BATCHES,
-        pretrain_batches: 0,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(SyntheticKind::Cifar100Like, scheduler, budget)
+    let base = |scheduler, budget| {
+        let mut c = TrainerConfig::quick(SyntheticKind::Cifar100Like, scheduler, budget);
+        c.train_size = 240;
+        c.test_size = 24;
+        c.batches = BATCHES;
+        c.pretrain_batches = 0;
+        c.update = UpdateMode::BatchAccum;
+        c
     };
     let run = |scheduler, budget, workers: usize, exchange| -> DistReport {
-        let dcfg = DistConfig { exchange, ..DistConfig::new(base(scheduler, budget), workers) };
+        let dcfg = DistConfig::builder(base(scheduler, budget), workers)
+            .exchange(exchange)
+            .build()
+            .expect("dist config");
         DistTrainer::new(&provider, dcfg)
             .expect("building dist trainer")
             .run()
@@ -118,13 +122,13 @@ fn main() {
     // payloads plus framing, job dispatch, and broadcasts — next to the
     // engine's modeled figure.
     let tcp = {
-        let dcfg = DistConfig {
-            transport: TransportKind::Tcp {
+        let dcfg = DistConfig::builder(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+            .transport(TransportKind::Tcp {
                 listen: "127.0.0.1:0".to_string(),
                 spawn: SpawnMode::Threads,
-            },
-            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
-        };
+            })
+            .build()
+            .expect("tcp config");
         DistTrainer::new(&provider, dcfg)
             .expect("building tcp trainer")
             .run()
@@ -168,11 +172,12 @@ fn main() {
         } else {
             TransportKind::Channel
         };
-        let dcfg = DistConfig {
-            exchange,
-            transport,
-            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), workers)
-        };
+        let dcfg =
+            DistConfig::builder(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), workers)
+                .exchange(exchange)
+                .transport(transport)
+                .build()
+                .expect("ring config");
         DistTrainer::new(&provider, dcfg)
             .expect("building ring trainer")
             .run()
@@ -257,10 +262,10 @@ fn main() {
     // reduction order are unchanged, so `up_bytes` is directly
     // comparable against the f32 run above.
     let run_compress = |compress| -> DistReport {
-        let dcfg = DistConfig {
-            compress,
-            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
-        };
+        let dcfg = DistConfig::builder(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+            .compress(compress)
+            .build()
+            .expect("compressed config");
         DistTrainer::new(&provider, dcfg)
             .expect("building compressed trainer")
             .run()
@@ -290,11 +295,11 @@ fn main() {
     // README quickstart / CI configuration) shrinks the chain traffic
     // too, and error feedback keeps every lossy trajectory training.
     let ring_q8 = {
-        let dcfg = DistConfig {
-            exchange: ExchangeMode::Ring,
-            compress: WireCompression::Int8,
-            ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
-        };
+        let dcfg = DistConfig::builder(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+            .exchange(ExchangeMode::Ring)
+            .compress(WireCompression::Int8)
+            .build()
+            .expect("ring+int8 config");
         DistTrainer::new(&provider, dcfg)
             .expect("building ring+int8 trainer")
             .run()
@@ -354,29 +359,30 @@ fn main() {
 
     // 12 micro-batches over K=4 workers = 3-deep pipelines per worker;
     // the Standard schedule keeps every message dense (max wire).
-    let overlap_cfg = || TrainerConfig {
-        train_size: 240,
-        test_size: 24,
-        batches: 4,
-        pretrain_batches: 0,
-        micros_per_batch: 12,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(
+    let overlap_cfg = || {
+        let mut c = TrainerConfig::quick(
             SyntheticKind::Cifar100Like,
             SchedulerKind::Standard,
             Budget::uniform(12, 12, 0),
-        )
+        );
+        c.train_size = 240;
+        c.test_size = 24;
+        c.batches = 4;
+        c.pretrain_batches = 0;
+        c.micros_per_batch = 12;
+        c.update = UpdateMode::BatchAccum;
+        c
     };
     let run_overlap = |overlap: bool, workers: usize| -> f64 {
         // Best of 2 runs: makespans are wall-clock, so take the less
         // disturbed sample of each mode.
         (0..2)
             .map(|_| {
-                let dcfg = DistConfig {
-                    overlap,
-                    sim_wire_ms_per_mib: wire_ms_per_mib,
-                    ..DistConfig::new(overlap_cfg(), workers)
-                };
+                let dcfg = DistConfig::builder(overlap_cfg(), workers)
+                    .overlap(overlap)
+                    .sim_wire_ms_per_mib(wire_ms_per_mib)
+                    .build()
+                    .expect("overlap config");
                 DistTrainer::new(&provider, dcfg)
                     .expect("building overlap trainer")
                     .run()
@@ -403,16 +409,16 @@ fn main() {
     // wash on small hosts — the JSON shows whichever way it lands).
     let mut sweep = Vec::new();
     for threads in [1usize, 2] {
-        let tp = NativeProvider::new(NativeSpec { threads, ..NativeSpec::tiny() });
+        let tspec = NativeSpec::builder().threads(threads).build().expect("sweep spec");
+        let tp = NativeProvider::new(tspec);
         for overlap in [true, false] {
-            let dcfg = DistConfig {
-                overlap,
-                sim_wire_ms_per_mib: wire_ms_per_mib,
-                ..DistConfig::new(
-                    TrainerConfig { batches: 2, ..overlap_cfg() },
-                    4,
-                )
-            };
+            let mut short_cfg = overlap_cfg();
+            short_cfg.batches = 2;
+            let dcfg = DistConfig::builder(short_cfg, 4)
+                .overlap(overlap)
+                .sim_wire_ms_per_mib(wire_ms_per_mib)
+                .build()
+                .expect("sweep config");
             let r = DistTrainer::new(&tp, dcfg)
                 .expect("building sweep trainer")
                 .run()
@@ -435,18 +441,16 @@ fn main() {
     // residual drift. One retry because both sides are wall-clock on a
     // shared host (the retained run is printed either way).
     let calib_run = || -> DistReport {
-        let cfg = TrainerConfig {
-            train_size: 100, // 5 batches/epoch at mb 4 x 5 micros
-            test_size: 24,
-            batches: 10,
-            pretrain_batches: 1, // warmup: epoch 1 starts hot
-            update: UpdateMode::BatchAccum,
-            ..TrainerConfig::quick(
-                SyntheticKind::Cifar100Like,
-                SchedulerKind::D2ft,
-                Budget::uniform(5, 2, 1),
-            )
-        };
+        let mut cfg = TrainerConfig::quick(
+            SyntheticKind::Cifar100Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(5, 2, 1),
+        );
+        cfg.train_size = 100; // 5 batches/epoch at mb 4 x 5 micros
+        cfg.test_size = 24;
+        cfg.batches = 10;
+        cfg.pretrain_batches = 1; // warmup: epoch 1 starts hot
+        cfg.update = UpdateMode::BatchAccum;
         DistTrainer::new(&provider, DistConfig::new(cfg, 4))
             .expect("building calibration trainer")
             .run()
@@ -496,10 +500,11 @@ fn main() {
     let run_traced = |trace: bool, trace_path: &std::path::Path| -> f64 {
         (0..3)
             .map(|_| {
-                let dcfg = DistConfig {
-                    trace_out: trace.then(|| trace_path.to_path_buf()),
-                    ..DistConfig::new(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
-                };
+                let dcfg =
+                    DistConfig::builder(base(SchedulerKind::D2ft, Budget::uniform(5, 2, 1)), 4)
+                        .trace_out(trace.then(|| trace_path.to_path_buf()))
+                        .build()
+                        .expect("tracing-bench config");
                 DistTrainer::new(&provider, dcfg)
                     .expect("building tracing-bench trainer")
                     .run()

@@ -57,7 +57,14 @@ const MOMENTUM: f32 = 0.9;
 /// The native model family: one [`ModelConfig`] plus the variants
 /// (micro-batch sizes, LoRA ranks) the provider can open — the
 /// dependency-free analogue of an artifact set's `index.json`.
+///
+/// `#[non_exhaustive]`: construct via a preset ([`NativeSpec::tiny`],
+/// [`NativeSpec::small`], [`NativeSpec::preset`]) or the
+/// [`NativeSpec::builder`] — fields stay pub for reading and targeted
+/// mutation, but the struct-literal form is reserved to this module and
+/// the builder ([`crate::config`]).
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct NativeSpec {
     /// Model configuration (the `lora_rank` field is per-backend).
     pub config: ModelConfig,
@@ -135,6 +142,12 @@ impl NativeSpec {
             init_seed: 0xD2F7,
             threads: 1,
         }
+    }
+
+    /// Builder seeded with [`NativeSpec::tiny`]; override fields one at
+    /// a time (see [`crate::config::NativeSpecBuilder`]).
+    pub fn builder() -> crate::config::NativeSpecBuilder {
+        crate::config::NativeSpecBuilder::new()
     }
 
     /// Parse a `--model` preset label (`mini`/`tiny` or `small`).
@@ -1120,6 +1133,57 @@ impl NativeBackend {
                 self.params[i].len()
             );
             self.params[i].data_mut().copy_from_slice(s);
+        }
+        Ok(())
+    }
+
+    /// Export only the *trainable* optimizer state — per-slot parameter
+    /// and momentum tensors in canonical order, with zero-length
+    /// placeholders on frozen slots. In LoRA mode this is the per-head
+    /// adapters plus the classifier head: the few-KiB payload the
+    /// multi-tenant service hot-swaps between jobs (the shared frozen
+    /// base never leaves the replica). The shapes match exactly what
+    /// `dist::GradCodec::encode_dense_append` serializes and
+    /// `decode_dense` returns, so the serve wire path reuses the
+    /// gradient codec unchanged.
+    pub fn export_trainable(&self) -> (Vec<Tensor>, Vec<Tensor>) {
+        let pack = |src: &[Tensor]| -> Vec<Tensor> {
+            src.iter()
+                .zip(&self.trainable)
+                .map(|(t, &tr)| if tr { t.clone() } else { Tensor::zeros(&[0]) })
+                .collect()
+        };
+        (pack(&self.params), pack(&self.momentum))
+    }
+
+    /// Install trainable state exported by [`Self::export_trainable`]
+    /// (or decoded by `GradCodec::decode_dense`) on a backend built
+    /// from the same spec at the same LoRA rank. Frozen slots are left
+    /// untouched — the resident base parameters — and their placeholder
+    /// entries are ignored.
+    pub fn import_trainable(&mut self, params: &[Tensor], momentum: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.params.len() && momentum.len() == self.momentum.len(),
+            "trainable state has {}/{} slots, model has {}",
+            params.len(),
+            momentum.len(),
+            self.params.len()
+        );
+        for i in 0..self.params.len() {
+            if !self.trainable[i] {
+                continue;
+            }
+            anyhow::ensure!(
+                params[i].len() == self.params[i].len()
+                    && momentum[i].len() == self.momentum[i].len(),
+                "trainable slot {} ({}) has {} elements, model needs {}",
+                i,
+                self.names[i],
+                params[i].len(),
+                self.params[i].len()
+            );
+            self.params[i].data_mut().copy_from_slice(params[i].data());
+            self.momentum[i].data_mut().copy_from_slice(momentum[i].data());
         }
         Ok(())
     }

@@ -1,0 +1,779 @@
+//! Builder-style construction for every run-configuration struct, plus
+//! [`JobSpec`] — the serialized twin of [`TrainerConfigBuilder`] that
+//! the CLI `--config` path and the serve control plane share.
+//!
+//! [`crate::coordinator::TrainerConfig`], `crate::dist::DistConfig`,
+//! and [`crate::backend::native::NativeSpec`] are `#[non_exhaustive]`
+//! pub-field structs: readable anywhere, *constructed* only here. Every
+//! in-repo construction site — `main.rs`, tests, benches, examples, the
+//! experiments, and the multi-tenant service — goes through a builder,
+//! so defaults live in exactly one place and validation runs at
+//! `build()` instead of deep inside a training loop. This module is the
+//! single home of the bare struct literals (the grep-clean contract
+//! pinned by the API-redesign issue).
+
+use anyhow::Result;
+
+#[cfg(feature = "native")]
+use crate::backend::native::NativeSpec;
+use crate::cluster::{ExecMode, HeteroSpec};
+use crate::coordinator::{SchedulerKind, TrainerConfig, UpdateMode};
+use crate::data::SyntheticKind;
+#[cfg(feature = "native")]
+use crate::dist::DistConfig;
+#[cfg(feature = "native")]
+use crate::runtime::ModelConfig;
+use crate::schedule::Budget;
+use crate::scores::ScoreConfig;
+use crate::util::json::{num, obj, s, Json};
+
+// ---------------------------------------------------------------------------
+// TrainerConfig builder
+// ---------------------------------------------------------------------------
+
+/// Builder for [`TrainerConfig`]. Starts from the quick-run defaults
+/// (the values `TrainerConfig::quick` has always used); every setter
+/// overrides one knob; [`TrainerConfigBuilder::build`] validates the
+/// combination and returns the frozen config.
+#[derive(Clone, Debug)]
+pub struct TrainerConfigBuilder {
+    cfg: TrainerConfig,
+}
+
+impl Default for TrainerConfigBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainerConfigBuilder {
+    /// Builder seeded with the quick-run defaults: cifar10-like data,
+    /// the D2FT scheduler at the paper's 3+1-of-5 budget, 480/120
+    /// train/test examples, 24 batches after 12 pretrain batches.
+    pub fn new() -> TrainerConfigBuilder {
+        TrainerConfigBuilder {
+            // The one TrainerConfig literal in the repo.
+            cfg: TrainerConfig {
+                dataset: SyntheticKind::Cifar10Like,
+                train_size: 480,
+                test_size: 120,
+                micros_per_batch: 5,
+                batches: 24,
+                lr: 0.03,
+                budget: Budget::uniform(5, 3, 1),
+                scheduler: SchedulerKind::D2ft,
+                scores: ScoreConfig::default(),
+                // A bounded pool: the trainer runs the engine at its
+                // accounting operating point, where per-device threads
+                // (the `--workers 0` paper placement) buy nothing over a
+                // small pool — results are bitwise identical either way.
+                exec: ExecMode::Parallel { workers: 8 },
+                partition_group: 1,
+                hetero: None,
+                seed: 17,
+                pretrain_batches: 12,
+                eval_every: 0,
+                lora_rank: 0,
+                micro_batch: None,
+                update: UpdateMode::PerMicro,
+            },
+        }
+    }
+
+    /// Synthetic dataset preset to fine-tune on.
+    pub fn dataset(mut self, v: SyntheticKind) -> Self {
+        self.cfg.dataset = v;
+        self
+    }
+
+    /// Training examples to generate.
+    pub fn train_size(mut self, v: usize) -> Self {
+        self.cfg.train_size = v;
+        self
+    }
+
+    /// Test examples to generate.
+    pub fn test_size(mut self, v: usize) -> Self {
+        self.cfg.test_size = v;
+        self
+    }
+
+    /// Micro-batches per batch (paper: 5).
+    pub fn micros_per_batch(mut self, v: usize) -> Self {
+        self.cfg.micros_per_batch = v;
+        self
+    }
+
+    /// Fine-tuning batches to run.
+    pub fn batches(mut self, v: usize) -> Self {
+        self.cfg.batches = v;
+        self
+    }
+
+    /// SGD-momentum learning rate.
+    pub fn lr(mut self, v: f32) -> Self {
+        self.cfg.lr = v;
+        self
+    }
+
+    /// Per-device operation budget.
+    pub fn budget(mut self, v: Budget) -> Self {
+        self.cfg.budget = v;
+        self
+    }
+
+    /// Scheduling policy (D2FT or a baseline).
+    pub fn scheduler(mut self, v: SchedulerKind) -> Self {
+        self.cfg.scheduler = v;
+        self
+    }
+
+    /// Contribution metrics feeding the bi-level knapsack.
+    pub fn scores(mut self, v: ScoreConfig) -> Self {
+        self.cfg.scores = v;
+        self
+    }
+
+    /// Cluster execution mode (parallel engine or serial reference).
+    pub fn exec(mut self, v: ExecMode) -> Self {
+        self.cfg.exec = v;
+        self
+    }
+
+    /// Head-group size for the partition (1 = per-head).
+    pub fn partition_group(mut self, v: usize) -> Self {
+        self.cfg.partition_group = v;
+        self
+    }
+
+    /// Device heterogeneity configuration (`None` = homogeneous).
+    pub fn hetero(mut self, v: Option<HeteroSpec>) -> Self {
+        self.cfg.hetero = v;
+        self
+    }
+
+    /// Run seed (data order, random baselines, parameter init).
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+
+    /// Synthetic pre-training batches before fine-tuning.
+    pub fn pretrain_batches(mut self, v: usize) -> Self {
+        self.cfg.pretrain_batches = v;
+        self
+    }
+
+    /// Evaluate every N batches (0 = only at the end).
+    pub fn eval_every(mut self, v: usize) -> Self {
+        self.cfg.eval_every = v;
+        self
+    }
+
+    /// LoRA adapter rank (0 = full fine-tuning).
+    pub fn lora_rank(mut self, v: usize) -> Self {
+        self.cfg.lora_rank = v;
+        self
+    }
+
+    /// Open the backend at a micro-batch-size *variant* trainstep
+    /// (Table VI) instead of the provider default — this absorbs the
+    /// old `Trainer::new_with_micro_batch` entry point.
+    pub fn micro_batch(mut self, v: usize) -> Self {
+        self.cfg.micro_batch = Some(v);
+        self
+    }
+
+    /// Update semantics: per-micro (sequential) or batch-accumulated
+    /// (the data-parallel reference the dist runtime distributes).
+    pub fn update(mut self, v: UpdateMode) -> Self {
+        self.cfg.update = v;
+        self
+    }
+
+    /// Validate the combination and freeze it into a [`TrainerConfig`].
+    pub fn build(self) -> Result<TrainerConfig> {
+        let c = &self.cfg;
+        anyhow::ensure!(c.train_size > 0, "train_size must be >= 1");
+        anyhow::ensure!(c.test_size > 0, "test_size must be >= 1");
+        anyhow::ensure!(c.micros_per_batch > 0, "micros_per_batch must be >= 1");
+        anyhow::ensure!(
+            c.lr.is_finite() && c.lr > 0.0,
+            "lr must be a positive finite number, got {}",
+            c.lr
+        );
+        anyhow::ensure!(
+            c.budget.n_full + c.budget.n_fwd <= c.budget.n_micro,
+            "budget ({} p_f + {} p_o) exceeds its {} micro-batches",
+            c.budget.n_full,
+            c.budget.n_fwd,
+            c.budget.n_micro
+        );
+        if let Some(mb) = c.micro_batch {
+            anyhow::ensure!(mb > 0, "micro_batch variant must be >= 1");
+        }
+        Ok(self.cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NativeSpec builder
+// ---------------------------------------------------------------------------
+
+/// Builder for [`NativeSpec`]. Starts from a preset (default
+/// [`NativeSpec::tiny`]) and overrides individual fields — the form the
+/// tests use to shrink the model without writing a struct literal.
+#[cfg(feature = "native")]
+#[derive(Clone, Debug, Default)]
+pub struct NativeSpecBuilder {
+    spec: NativeSpec,
+}
+
+#[cfg(feature = "native")]
+impl NativeSpecBuilder {
+    /// Builder seeded with [`NativeSpec::tiny`].
+    pub fn new() -> NativeSpecBuilder {
+        NativeSpecBuilder { spec: NativeSpec::tiny() }
+    }
+
+    /// Builder seeded with a named preset (`mini`/`tiny` or `small`).
+    pub fn preset(name: &str) -> Result<NativeSpecBuilder> {
+        Ok(NativeSpecBuilder { spec: NativeSpec::preset(name)? })
+    }
+
+    /// Replace the model configuration wholesale.
+    pub fn config(mut self, mc: ModelConfig) -> Self {
+        self.spec.config = mc;
+        self
+    }
+
+    /// Default trainstep micro-batch size.
+    pub fn micro_batch(mut self, v: usize) -> Self {
+        self.spec.micro_batch = v;
+        self
+    }
+
+    /// Alternative micro-batch sizes advertised for Table VI.
+    pub fn mb_variants(mut self, v: Vec<usize>) -> Self {
+        self.spec.mb_variants = v;
+        self
+    }
+
+    /// LoRA ranks the provider advertises.
+    pub fn lora_ranks(mut self, v: Vec<usize>) -> Self {
+        self.spec.lora_ranks = v;
+        self
+    }
+
+    /// The rank used by default for LoRA experiments.
+    pub fn lora_standard_rank(mut self, v: usize) -> Self {
+        self.spec.lora_standard_rank = v;
+        self
+    }
+
+    /// Base seed mixed into parameter initialization.
+    pub fn init_seed(mut self, v: u64) -> Self {
+        self.spec.init_seed = v;
+        self
+    }
+
+    /// Kernel threads for the matmul row-parallel path (0 = auto).
+    pub fn threads(mut self, v: usize) -> Self {
+        self.spec.threads = v;
+        self
+    }
+
+    /// Validate and freeze into a [`NativeSpec`].
+    pub fn build(self) -> Result<NativeSpec> {
+        let sp = &self.spec;
+        anyhow::ensure!(sp.micro_batch > 0, "micro_batch must be >= 1");
+        anyhow::ensure!(
+            sp.config.img_size % sp.config.patch == 0,
+            "img_size {} must be divisible by patch {}",
+            sp.config.img_size,
+            sp.config.patch
+        );
+        anyhow::ensure!(sp.config.depth > 0 && sp.config.heads > 0, "model needs >= 1 block/head");
+        Ok(self.spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DistConfig builder
+// ---------------------------------------------------------------------------
+
+/// Builder for `DistConfig`. Seeded with a [`TrainerConfig`] and the
+/// default cluster knobs (channel transport, overlap on, lossless f32
+/// wire, calibration on); [`DistConfigBuilder::build`] validates.
+#[cfg(feature = "native")]
+#[derive(Clone, Debug)]
+pub struct DistConfigBuilder {
+    cfg: DistConfig,
+}
+
+#[cfg(feature = "native")]
+impl DistConfigBuilder {
+    /// Builder over `train` with `workers` replicas and default knobs.
+    pub fn new(train: TrainerConfig, workers: usize) -> DistConfigBuilder {
+        use crate::dist::{ExchangeMode, TransportKind, WireCompression, WirePrecision};
+        DistConfigBuilder {
+            // The one DistConfig literal in the repo.
+            cfg: DistConfig {
+                train,
+                workers,
+                exchange: ExchangeMode::MaskedAllReduce,
+                transport: TransportKind::Channel,
+                overlap: true,
+                wire_precision: WirePrecision::F32,
+                compress: WireCompression::None,
+                ring_group: 0,
+                sim_wire_ms_per_mib: 0.0,
+                calibrate: true,
+                heartbeat_ms: 500,
+                liveness_misses: 4,
+                stall_reassign_ms: 5000,
+                batch_timeout_ms: 120_000,
+                faults: Vec::new(),
+                checkpoint_dir: None,
+                checkpoint_every: 1,
+                checkpoint_retain: 2,
+                resume_from: None,
+                halt_after_batch: None,
+                trace_out: None,
+                metrics: None,
+            },
+        }
+    }
+
+    /// Worker replica count (>= 1).
+    pub fn workers(mut self, v: usize) -> Self {
+        self.cfg.workers = v;
+        self
+    }
+
+    /// Gradient exchange topology.
+    pub fn exchange(mut self, v: crate::dist::ExchangeMode) -> Self {
+        self.cfg.exchange = v;
+        self
+    }
+
+    /// Frame transport: in-process channels or TCP.
+    pub fn transport(mut self, v: crate::dist::TransportKind) -> Self {
+        self.cfg.transport = v;
+        self
+    }
+
+    /// Pipeline encode+upload behind the next task's compute.
+    pub fn overlap(mut self, v: bool) -> Self {
+        self.cfg.overlap = v;
+        self
+    }
+
+    /// Gradient payload precision on the wire.
+    pub fn wire_precision(mut self, v: crate::dist::WirePrecision) -> Self {
+        self.cfg.wire_precision = v;
+        self
+    }
+
+    /// Lossy payload compression under the precision layer.
+    pub fn compress(mut self, v: crate::dist::WireCompression) -> Self {
+        self.cfg.compress = v;
+        self
+    }
+
+    /// Group size for the hierarchical exchange (0 picks ⌈√K⌉).
+    pub fn ring_group(mut self, v: usize) -> Self {
+        self.cfg.ring_group = v;
+        self
+    }
+
+    /// Simulated NIC cost (ms per MiB of encoded message).
+    pub fn sim_wire_ms_per_mib(mut self, v: f64) -> Self {
+        self.cfg.sim_wire_ms_per_mib = v;
+        self
+    }
+
+    /// Recalibrate the modeled exec-time tables at epoch boundaries.
+    pub fn calibrate(mut self, v: bool) -> Self {
+        self.cfg.calibrate = v;
+        self
+    }
+
+    /// Worker heartbeat interval in ms (0 disables liveness eviction).
+    pub fn heartbeat_ms(mut self, v: u64) -> Self {
+        self.cfg.heartbeat_ms = v;
+        self
+    }
+
+    /// Missed heartbeat intervals before a silent link is declared dead.
+    pub fn liveness_misses(mut self, v: u32) -> Self {
+        self.cfg.liveness_misses = v;
+        self
+    }
+
+    /// Straggler reassignment deadline (ms) on an incomplete barrier.
+    pub fn stall_reassign_ms(mut self, v: u64) -> Self {
+        self.cfg.stall_reassign_ms = v;
+        self
+    }
+
+    /// Hard per-batch deadline (ms).
+    pub fn batch_timeout_ms(mut self, v: u64) -> Self {
+        self.cfg.batch_timeout_ms = v;
+        self
+    }
+
+    /// Scripted fault plans per worker slot (tests/chaos only).
+    pub fn faults(mut self, v: Vec<(usize, crate::dist::FaultPlan)>) -> Self {
+        self.cfg.faults = v;
+        self
+    }
+
+    /// Directory for epoch-boundary checkpoints (`None` disables).
+    pub fn checkpoint_dir(mut self, v: Option<std::path::PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = v;
+        self
+    }
+
+    /// Write a checkpoint every N completed epochs (min 1).
+    pub fn checkpoint_every(mut self, v: usize) -> Self {
+        self.cfg.checkpoint_every = v;
+        self
+    }
+
+    /// Epoch checkpoints kept after rotation (min 1).
+    pub fn checkpoint_retain(mut self, v: usize) -> Self {
+        self.cfg.checkpoint_retain = v;
+        self
+    }
+
+    /// Resume from a checkpoint file or crash-recovery directory.
+    pub fn resume_from(mut self, v: Option<std::path::PathBuf>) -> Self {
+        self.cfg.resume_from = v;
+        self
+    }
+
+    /// Crash simulation: stop dead after this many completed batches.
+    pub fn halt_after_batch(mut self, v: Option<usize>) -> Self {
+        self.cfg.halt_after_batch = v;
+        self
+    }
+
+    /// Write a merged Chrome trace-event JSON here at the end of the run.
+    pub fn trace_out(mut self, v: Option<std::path::PathBuf>) -> Self {
+        self.cfg.trace_out = v;
+        self
+    }
+
+    /// Metrics registry this run publishes into.
+    pub fn metrics(mut self, v: Option<std::sync::Arc<crate::obs::metrics::Registry>>) -> Self {
+        self.cfg.metrics = v;
+        self
+    }
+
+    /// Validate the combination and freeze it into a `DistConfig`.
+    pub fn build(self) -> Result<DistConfig> {
+        let c = &self.cfg;
+        anyhow::ensure!(c.workers >= 1, "a dist run needs >= 1 worker replica");
+        anyhow::ensure!(c.checkpoint_every >= 1, "checkpoint_every must be >= 1");
+        anyhow::ensure!(c.checkpoint_retain >= 1, "checkpoint_retain must be >= 1");
+        if c.heartbeat_ms > 0 {
+            anyhow::ensure!(
+                c.liveness_misses >= 1,
+                "liveness_misses must be >= 1 when heartbeats are on"
+            );
+        }
+        Ok(self.cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobSpec — the serialized twin of the trainer builder
+// ---------------------------------------------------------------------------
+
+/// Current `JobSpec` JSON schema label.
+pub const JOB_SPEC_SCHEMA: &str = "d2ft-job-spec-v1";
+
+/// One tenant's fine-tuning request, as data: the serde-free serialized
+/// twin of [`TrainerConfigBuilder`]. The CLI's `--config run.json`
+/// loads one, `repro job submit` sends one to the serve control plane,
+/// and both funnel into [`JobSpec::to_trainer_config`] — a single
+/// validated construction path for flags and service submissions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Tenant identity (meter key; the service enforces `--max-tenants`
+    /// distinct values).
+    pub tenant: String,
+    /// Native model preset the job expects (`tiny` / `small`). The
+    /// service rejects jobs whose preset differs from the fleet's.
+    pub model: String,
+    /// Dataset preset (CLI token: `c10` / `c100` / `cars`).
+    pub dataset: SyntheticKind,
+    /// Scheduling policy (CLI token, e.g. `d2ft`).
+    pub scheduler: SchedulerKind,
+    /// LoRA adapter rank. The service requires >= 1 (a rank-0 job is
+    /// full fine-tuning — not multiplexable over a shared base).
+    pub lora_rank: usize,
+    /// Micro-batches per batch.
+    pub micros_per_batch: usize,
+    /// `p_f` (full) slots per device per batch.
+    pub budget_full: usize,
+    /// `p_o` (forward-only) slots per device per batch.
+    pub budget_fwd: usize,
+    /// Step quota: fine-tuning batches the job is entitled to run.
+    pub batches: usize,
+    /// Synthetic pre-training batches before fine-tuning.
+    pub pretrain_batches: usize,
+    /// Training examples to generate.
+    pub train_size: usize,
+    /// Test examples to generate.
+    pub test_size: usize,
+    /// SGD-momentum learning rate.
+    pub lr: f32,
+    /// Run seed (data order, baseline randomness, adapter init).
+    pub seed: u64,
+    /// Admission priority (higher wins; ties break by arrival order).
+    pub priority: u32,
+}
+
+impl JobSpec {
+    /// A small default job for `tenant`: cifar10-like data, rank-2
+    /// adapters, the D2FT scheduler at the paper's 3+1-of-5 budget.
+    pub fn default_for(tenant: &str) -> JobSpec {
+        JobSpec {
+            tenant: tenant.to_string(),
+            model: "tiny".to_string(),
+            dataset: SyntheticKind::Cifar10Like,
+            scheduler: SchedulerKind::D2ft,
+            lora_rank: 2,
+            micros_per_batch: 5,
+            budget_full: 3,
+            budget_fwd: 1,
+            batches: 8,
+            pretrain_batches: 2,
+            train_size: 80,
+            test_size: 16,
+            lr: 0.03,
+            seed: 17,
+            priority: 1,
+        }
+    }
+
+    /// Serialize for the wire / `--config` file.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", s(JOB_SPEC_SCHEMA)),
+            ("tenant", s(&self.tenant)),
+            ("model", s(&self.model)),
+            ("dataset", s(self.dataset.cli_label())),
+            ("scheduler", s(&self.scheduler.cli_label())),
+            ("lora_rank", num(self.lora_rank as f64)),
+            ("micros_per_batch", num(self.micros_per_batch as f64)),
+            ("budget_full", num(self.budget_full as f64)),
+            ("budget_fwd", num(self.budget_fwd as f64)),
+            ("batches", num(self.batches as f64)),
+            ("pretrain_batches", num(self.pretrain_batches as f64)),
+            ("train_size", num(self.train_size as f64)),
+            ("test_size", num(self.test_size as f64)),
+            ("lr", num(self.lr as f64)),
+            ("seed", num(self.seed as f64)),
+            ("priority", num(self.priority as f64)),
+        ])
+    }
+
+    /// Deserialize from a parsed JSON document. Every key except
+    /// `tenant` is optional and falls back to the
+    /// [`JobSpec::default_for`] value, so a `--config` file only states
+    /// what it overrides.
+    pub fn from_json(doc: &Json) -> Result<JobSpec> {
+        let tenant = doc
+            .str_at("tenant")
+            .map_err(|_| anyhow::anyhow!("job spec needs a \"tenant\" string"))?;
+        let mut spec = JobSpec::default_for(&tenant);
+        if let Some(v) = doc.opt("model") {
+            spec.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.opt("dataset") {
+            spec.dataset = SyntheticKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.opt("scheduler") {
+            spec.scheduler = SchedulerKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.opt("lora_rank") {
+            spec.lora_rank = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("micros_per_batch") {
+            spec.micros_per_batch = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("budget_full") {
+            spec.budget_full = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("budget_fwd") {
+            spec.budget_fwd = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("batches") {
+            spec.batches = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("pretrain_batches") {
+            spec.pretrain_batches = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("train_size") {
+            spec.train_size = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("test_size") {
+            spec.test_size = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("lr") {
+            spec.lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = doc.opt("seed") {
+            spec.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = doc.opt("priority") {
+            spec.priority = v.as_f64()? as u32;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse from JSON text (the `--config` file / control-plane body).
+    pub fn parse(text: &str) -> Result<JobSpec> {
+        JobSpec::from_json(&Json::parse(text)?)
+    }
+
+    /// Structural validation shared by every entry path.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.tenant.is_empty(), "tenant must be non-empty");
+        anyhow::ensure!(self.micros_per_batch >= 1, "micros_per_batch must be >= 1");
+        anyhow::ensure!(
+            self.budget_full + self.budget_fwd <= self.micros_per_batch,
+            "budget ({} p_f + {} p_o) exceeds {} micro-batches",
+            self.budget_full,
+            self.budget_fwd,
+            self.micros_per_batch
+        );
+        anyhow::ensure!(self.batches >= 1, "step quota (batches) must be >= 1");
+        anyhow::ensure!(self.train_size >= 1 && self.test_size >= 1, "dataset sizes must be >= 1");
+        anyhow::ensure!(self.lr.is_finite() && self.lr > 0.0, "lr must be positive and finite");
+        NativeSpecPresetCheck::check(&self.model)?;
+        Ok(())
+    }
+
+    /// The per-device operation budget this spec encodes.
+    pub fn budget(&self) -> Budget {
+        Budget::uniform(self.micros_per_batch, self.budget_full, self.budget_fwd)
+    }
+
+    /// Lower into a validated [`TrainerConfig`] via the builder — the
+    /// single construction path shared by CLI flags and the service.
+    pub fn to_trainer_config(&self) -> Result<TrainerConfig> {
+        self.validate()?;
+        TrainerConfig::builder()
+            .dataset(self.dataset)
+            .scheduler(self.scheduler)
+            .budget(self.budget())
+            .micros_per_batch(self.micros_per_batch)
+            .batches(self.batches)
+            .pretrain_batches(self.pretrain_batches)
+            .train_size(self.train_size)
+            .test_size(self.test_size)
+            .lr(self.lr)
+            .seed(self.seed)
+            .lora_rank(self.lora_rank)
+            .build()
+    }
+}
+
+/// Preset-name validation that works with and without the `native`
+/// feature (the spec travels through feature-free client code).
+struct NativeSpecPresetCheck;
+
+impl NativeSpecPresetCheck {
+    fn check(name: &str) -> Result<()> {
+        match name.to_ascii_lowercase().as_str() {
+            "mini" | "tiny" | "small" | "vit-small" => Ok(()),
+            other => anyhow::bail!("unknown model preset {other:?} (mini|small)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trainer_builder_defaults_validate() {
+        let cfg = TrainerConfig::builder().build().unwrap();
+        assert_eq!(cfg.micros_per_batch, 5);
+        assert_eq!(cfg.batches, 24);
+        assert_eq!(cfg.update, UpdateMode::PerMicro);
+        assert!(cfg.micro_batch.is_none());
+    }
+
+    #[test]
+    fn trainer_builder_rejects_bad_lr() {
+        assert!(TrainerConfig::builder().lr(0.0).build().is_err());
+        assert!(TrainerConfig::builder().lr(f32::NAN).build().is_err());
+    }
+
+    #[test]
+    fn trainer_builder_rejects_overfull_budget() {
+        let err = TrainerConfig::builder()
+            .budget(Budget { n_micro: 4, n_full: 3, n_fwd: 2, per_device: Vec::new() })
+            .build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn job_spec_round_trips_through_json() {
+        let mut spec = JobSpec::default_for("alice");
+        spec.lora_rank = 4;
+        spec.scheduler = SchedulerKind::Random;
+        spec.dataset = SyntheticKind::CarsLike;
+        spec.priority = 9;
+        let text = spec.to_json().to_string_pretty();
+        let back = JobSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn job_spec_partial_json_fills_defaults() {
+        let back = JobSpec::parse(r#"{"tenant":"bob","batches":3}"#).unwrap();
+        assert_eq!(back.tenant, "bob");
+        assert_eq!(back.batches, 3);
+        assert_eq!(back.lora_rank, JobSpec::default_for("bob").lora_rank);
+    }
+
+    #[test]
+    fn job_spec_rejects_missing_tenant_and_bad_budget() {
+        assert!(JobSpec::parse(r#"{"batches":3}"#).is_err());
+        assert!(JobSpec::parse(r#"{"tenant":"x","budget_full":9}"#).is_err());
+    }
+
+    #[test]
+    fn job_spec_lowers_through_the_builder() {
+        let cfg = JobSpec::default_for("alice").to_trainer_config().unwrap();
+        assert_eq!(cfg.lora_rank, 2);
+        assert_eq!(cfg.batches, 8);
+        assert_eq!(cfg.budget.n_full, 3);
+    }
+
+    #[cfg(feature = "native")]
+    #[test]
+    fn dist_builder_defaults_and_validation() {
+        let train = TrainerConfig::builder().build().unwrap();
+        let d = DistConfig::builder(train.clone(), 3).build().unwrap();
+        assert_eq!(d.workers, 3);
+        assert!(d.overlap);
+        assert!(DistConfig::builder(train, 0).build().is_err());
+    }
+
+    #[cfg(feature = "native")]
+    #[test]
+    fn native_spec_builder_checks_patch_divisibility() {
+        let mut mc = NativeSpec::tiny().config;
+        mc.img_size = 10;
+        mc.patch = 4;
+        assert!(NativeSpec::builder().config(mc).build().is_err());
+    }
+}

@@ -79,6 +79,24 @@ impl SchedulerKind {
             SchedulerKind::Scaler(_) => "Scaler",
         }
     }
+
+    /// The CLI token for this policy — the inverse of
+    /// [`SchedulerKind::parse`], used when a config is serialized back
+    /// out (e.g. a `JobSpec` travelling to the serve control plane).
+    pub fn cli_label(&self) -> String {
+        match self {
+            SchedulerKind::D2ft => "d2ft".to_string(),
+            SchedulerKind::D2ftPaperMerge => "d2ft-paper-merge".to_string(),
+            SchedulerKind::Standard => "standard".to_string(),
+            SchedulerKind::Random => "random".to_string(),
+            SchedulerKind::DPruningM => "dpruning-m".to_string(),
+            SchedulerKind::DPruningMG => "dpruning-mg".to_string(),
+            SchedulerKind::MoeGshard => "moe".to_string(),
+            SchedulerKind::Scaler(Lambda::Max) => "scaler-max".to_string(),
+            SchedulerKind::Scaler(Lambda::Min) => "scaler-min".to_string(),
+            SchedulerKind::Scaler(Lambda::Const(c)) => format!("scaler-{c}"),
+        }
+    }
 }
 
 /// How parameter updates are applied within one scheduled batch.
@@ -108,7 +126,14 @@ impl UpdateMode {
 }
 
 /// Full configuration of one fine-tuning run.
+///
+/// `#[non_exhaustive]`: construct via [`TrainerConfig::builder`] (or
+/// the [`TrainerConfig::quick`] shorthand) — fields stay pub for
+/// reading and targeted mutation, but the struct-literal form is
+/// reserved to the builder module so defaults and validation live in
+/// one place ([`crate::config`]).
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct TrainerConfig {
     /// Which synthetic dataset preset to fine-tune on.
     pub dataset: SyntheticKind,
@@ -147,6 +172,11 @@ pub struct TrainerConfig {
     pub eval_every: usize,
     /// LoRA adapter rank the backend should open (0 = full fine-tuning).
     pub lora_rank: usize,
+    /// Open the backend at this micro-batch-size *variant* trainstep
+    /// (Table VI) instead of the provider default. Set via the
+    /// builder's `micro_batch` knob — this absorbed the old
+    /// `Trainer::new_with_micro_batch` entry point.
+    pub micro_batch: Option<usize>,
     /// Whether updates apply per micro-batch (sequential, the seed
     /// semantics) or once per batch from accumulated gradients (the
     /// data-parallel semantics `dist::DistTrainer` distributes).
@@ -154,31 +184,20 @@ pub struct TrainerConfig {
 }
 
 impl TrainerConfig {
+    /// Builder seeded with the quick-run defaults; every construction
+    /// site goes through it (see [`crate::config`]).
+    pub fn builder() -> crate::config::TrainerConfigBuilder {
+        crate::config::TrainerConfigBuilder::new()
+    }
+
     /// Short-run defaults used by the experiments and tests.
     pub fn quick(dataset: SyntheticKind, scheduler: SchedulerKind, budget: Budget) -> Self {
-        TrainerConfig {
-            dataset,
-            train_size: 480,
-            test_size: 120,
-            micros_per_batch: 5,
-            batches: 24,
-            lr: 0.03,
-            budget,
-            scheduler,
-            scores: ScoreConfig::default(),
-            // A bounded pool: the trainer runs the engine at its
-            // accounting operating point, where per-device threads (the
-            // `--workers 0` paper placement) buy nothing over a small
-            // pool — results are bitwise identical either way.
-            exec: ExecMode::Parallel { workers: 8 },
-            partition_group: 1,
-            hetero: None,
-            seed: 17,
-            pretrain_batches: 12,
-            eval_every: 0,
-            lora_rank: 0,
-            update: UpdateMode::PerMicro,
-        }
+        TrainerConfig::builder()
+            .dataset(dataset)
+            .scheduler(scheduler)
+            .budget(budget)
+            .build()
+            .expect("quick-run defaults always validate")
     }
 }
 
@@ -407,22 +426,7 @@ impl<'a> Trainer<'a> {
     pub fn new(provider: &'a dyn BackendProvider, cfg: TrainerConfig) -> Result<Trainer<'a>> {
         let sel = BackendSel {
             lora_rank: cfg.lora_rank,
-            micro_batch: None,
-            seed: cfg.seed,
-        };
-        Self::with_backend(provider.open(&sel)?, cfg)
-    }
-
-    /// Trainer over a micro-batch-size *variant* trainstep (Table VI):
-    /// same model, different per-step batch size.
-    pub fn new_with_micro_batch(
-        provider: &'a dyn BackendProvider,
-        cfg: TrainerConfig,
-        micro_batch: usize,
-    ) -> Result<Trainer<'a>> {
-        let sel = BackendSel {
-            lora_rank: cfg.lora_rank,
-            micro_batch: Some(micro_batch),
+            micro_batch: cfg.micro_batch,
             seed: cfg.seed,
         };
         Self::with_backend(provider.open(&sel)?, cfg)

@@ -39,6 +39,18 @@ impl SyntheticKind {
         })
     }
 
+    /// The CLI token for this preset — the inverse of
+    /// [`SyntheticKind::parse`], used when a config is serialized back
+    /// out (e.g. a `JobSpec` travelling to the serve control plane).
+    pub fn cli_label(self) -> &'static str {
+        match self {
+            SyntheticKind::Cifar10Like => "c10",
+            SyntheticKind::Cifar100Like => "c100",
+            SyntheticKind::CarsLike => "cars",
+            SyntheticKind::Pretrain => "pretrain",
+        }
+    }
+
     /// Display label for reports.
     pub fn label(self) -> &'static str {
         match self {

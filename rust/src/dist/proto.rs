@@ -99,6 +99,14 @@ pub const TAG_RING_CAST: u32 = 0x4452;
 /// worker that never sends one still interoperates.
 pub const TAG_TRACE: u32 = 0x4461;
 
+/// Serve → replica: one admitted round of a tenant job — adapter +
+/// mask state to hot-swap in and the batch range to run (the
+/// multi-tenant service's tenant-tagged frame; see [`JobRoundMsg`]).
+pub const TAG_JOB_ROUND: u32 = 0x4471;
+/// Replica → serve: round outcome — trained adapter state, solved
+/// masks (fresh rounds), losses and step timings (see [`JobDoneMsg`]).
+pub const TAG_JOB_DONE: u32 = 0x4472;
+
 /// Control-protocol version carried in [`TAG_JOIN`]; the aggregator
 /// rejects a mismatched worker descriptively instead of misparsing
 /// its frames. v3 added the ring-collective frames, the compressed
@@ -107,8 +115,9 @@ pub const TAG_TRACE: u32 = 0x4461;
 /// [`InitMsg`]; v5 added CRC32C frame trailers (see
 /// [`super::transport`]), the [`TAG_NACK`] resend request, the
 /// incarnation/worker/last-step fields of [`JoinMsg`], and the
-/// incarnation field of [`InitMsg`].
-pub const PROTO_VERSION: u32 = 5;
+/// incarnation field of [`InitMsg`]; v6 added the tenant-tagged
+/// [`TAG_JOB_ROUND`] / [`TAG_JOB_DONE`] frames of the serve layer.
+pub const PROTO_VERSION: u32 = 6;
 
 /// Byte offset of the embedded gradient blob in a [`TAG_UP`] frame:
 /// tag (4) + micro (4) + loss (4) + n_correct (4) + ms (8) + step (8).
@@ -883,6 +892,218 @@ pub fn decode_state(frame: &[u8]) -> Result<(Vec<f32>, Vec<f32>)> {
 }
 
 // ---------------------------------------------------------------------------
+// Tenant-tagged job frames: the multi-tenant serve layer's hot-swap wire
+// ---------------------------------------------------------------------------
+
+fn put_blob(out: &mut Vec<u8>, b: &[u8]) {
+    put_u64(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+fn get_blob(c: &mut Cursor<'_>, what: &str) -> Result<Vec<u8>> {
+    let n = c.u64(what)? as usize;
+    anyhow::ensure!(
+        n <= c.remaining(),
+        "corrupt count: {what} claims {n} bytes but only {} remain",
+        c.remaining()
+    );
+    Ok(c.take(n, what)?.to_vec())
+}
+
+fn put_mask_list(out: &mut Vec<u8>, masks: &[MaskPair]) {
+    put_u32(out, masks.len() as u32);
+    for m in masks {
+        put_masks(out, m);
+    }
+}
+
+fn get_mask_list(c: &mut Cursor<'_>, what: &str) -> Result<Vec<MaskPair>> {
+    let n = c.count(8, what)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_masks(c, what)?);
+    }
+    Ok(out)
+}
+
+/// One admitted round of a tenant job, server → replica: which job,
+/// which adapter state to install (a `GradCodec` dense blob — frozen
+/// base parameters never ride this frame), the per-micro mask schedule,
+/// and the batch range to run. A `fresh` round carries no state: the
+/// replica starts from its pristine trainable snapshot, runs the spec's
+/// synthetic pretraining, and *solves* the mask schedule (probe →
+/// scores → scheduler), returning it in the [`JobDoneMsg`].
+#[derive(Clone, Debug)]
+pub struct JobRoundMsg {
+    /// Service-assigned job id (the tenant tag every serve frame carries).
+    pub job_id: u64,
+    /// Tenant identity, for per-link accounting at the replica.
+    pub tenant: String,
+    /// LoRA rank the replica must open (picks its per-rank backend).
+    pub lora_rank: usize,
+    /// First round of the job: start from pristine state, pretrain,
+    /// and solve the schedule instead of installing shipped state.
+    pub fresh: bool,
+    /// Run the job's final evaluation after this round's batches.
+    pub finalize: bool,
+    /// Global fine-tuning batch index this round starts at.
+    pub start_batch: usize,
+    /// Fine-tuning batches to run this round (0 is legal on a fresh
+    /// round: pretrain + schedule-solve only).
+    pub n_batches: usize,
+    /// The job's serialized `JobSpec` (dataset, sizes, seed, lr,
+    /// budget, scheduler) — the replica reconstructs data and schedule
+    /// deterministically from it.
+    pub spec_json: String,
+    /// Per-micro mask schedule (empty on a fresh round; fixed for the
+    /// job's lifetime afterwards — the paper's select-once policy).
+    pub masks: Vec<MaskPair>,
+    /// Trainable parameter state (`GradCodec` dense blob; empty on fresh).
+    pub params: Vec<u8>,
+    /// Trainable momentum state (same encoding; empty on fresh).
+    pub momentum: Vec<u8>,
+}
+
+/// Round outcome, replica → server: the trained adapter state coming
+/// back, the solved mask schedule (fresh rounds), per-batch step
+/// latencies, and the loss/accuracy samples the per-job report meters.
+#[derive(Clone, Debug)]
+pub struct JobDoneMsg {
+    /// Echoed job id.
+    pub job_id: u64,
+    /// Whether the round executed; on `false`, `error` says why and
+    /// the state blobs are empty.
+    pub ok: bool,
+    /// Failure description (empty when `ok`).
+    pub error: String,
+    /// Fine-tuning batches completed this round.
+    pub batches_done: usize,
+    /// Per-micro training losses in execution order.
+    pub losses: Vec<f32>,
+    /// Correct predictions over this round's training micro-batches.
+    pub n_correct: u64,
+    /// Examples seen over this round's training micro-batches.
+    pub n_seen: u64,
+    /// Measured wall time of each fine-tuning batch (ms).
+    pub step_ms: Vec<f64>,
+    /// The job's mask schedule (populated on fresh rounds where the
+    /// replica solved it; echoed empty otherwise).
+    pub masks: Vec<MaskPair>,
+    /// Trained adapter parameter state (`GradCodec` dense blob).
+    pub params: Vec<u8>,
+    /// Trained adapter momentum state (same encoding).
+    pub momentum: Vec<u8>,
+    /// Full-model state baseline in bytes (params + momentum, f32) —
+    /// what a non-LoRA tenant swap would have shipped; the metering
+    /// denominator for the adapter-savings claim.
+    pub dense_state_bytes: u64,
+    /// Test top-1 after a `finalize` round (-1.0 otherwise).
+    pub test_top1: f64,
+    /// Test loss after a `finalize` round (-1.0 otherwise).
+    pub test_loss: f64,
+}
+
+/// Encode a [`JobRoundMsg`] (appends to `out`; caller clears).
+pub fn encode_job_round(msg: &JobRoundMsg, out: &mut Vec<u8>) {
+    put_u32(out, TAG_JOB_ROUND);
+    put_u64(out, msg.job_id);
+    put_str(out, &msg.tenant);
+    put_u32(out, msg.lora_rank as u32);
+    out.push(msg.fresh as u8);
+    out.push(msg.finalize as u8);
+    put_u32(out, msg.start_batch as u32);
+    put_u32(out, msg.n_batches as u32);
+    put_str(out, &msg.spec_json);
+    put_mask_list(out, &msg.masks);
+    put_blob(out, &msg.params);
+    put_blob(out, &msg.momentum);
+}
+
+/// Decode a [`TAG_JOB_ROUND`] frame.
+pub fn decode_job_round(frame: &[u8]) -> Result<JobRoundMsg> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("job-round tag")?;
+    anyhow::ensure!(tag == TAG_JOB_ROUND, "expected JobRound frame, got tag {tag:#x}");
+    Ok(JobRoundMsg {
+        job_id: c.u64("job id")?,
+        tenant: get_str(&mut c, "job tenant")?,
+        lora_rank: c.u32("job lora rank")? as usize,
+        fresh: c.u8("job fresh flag")? != 0,
+        finalize: c.u8("job finalize flag")? != 0,
+        start_batch: c.u32("job start batch")? as usize,
+        n_batches: c.u32("job n_batches")? as usize,
+        spec_json: get_str(&mut c, "job spec")?,
+        masks: get_mask_list(&mut c, "job masks")?,
+        params: get_blob(&mut c, "job params")?,
+        momentum: get_blob(&mut c, "job momentum")?,
+    })
+}
+
+/// Encode a [`JobDoneMsg`] (appends to `out`; caller clears).
+pub fn encode_job_done(msg: &JobDoneMsg, out: &mut Vec<u8>) {
+    put_u32(out, TAG_JOB_DONE);
+    put_u64(out, msg.job_id);
+    out.push(msg.ok as u8);
+    put_str(out, &msg.error);
+    put_u32(out, msg.batches_done as u32);
+    put_u32(out, msg.losses.len() as u32);
+    for &l in &msg.losses {
+        put_f32(out, l);
+    }
+    put_u64(out, msg.n_correct);
+    put_u64(out, msg.n_seen);
+    put_u32(out, msg.step_ms.len() as u32);
+    for &ms in &msg.step_ms {
+        put_f64(out, ms);
+    }
+    put_mask_list(out, &msg.masks);
+    put_blob(out, &msg.params);
+    put_blob(out, &msg.momentum);
+    put_u64(out, msg.dense_state_bytes);
+    put_f64(out, msg.test_top1);
+    put_f64(out, msg.test_loss);
+}
+
+/// Decode a [`TAG_JOB_DONE`] frame.
+pub fn decode_job_done(frame: &[u8]) -> Result<JobDoneMsg> {
+    let mut c = Cursor::new(frame);
+    let tag = c.u32("job-done tag")?;
+    anyhow::ensure!(tag == TAG_JOB_DONE, "expected JobDone frame, got tag {tag:#x}");
+    let job_id = c.u64("job id")?;
+    let ok = c.u8("job ok flag")? != 0;
+    let error = get_str(&mut c, "job error")?;
+    let batches_done = c.u32("job batches done")? as usize;
+    let n_losses = c.count(4, "job losses")?;
+    let mut losses = Vec::with_capacity(n_losses);
+    for _ in 0..n_losses {
+        losses.push(c.f32("job loss")?);
+    }
+    let n_correct = c.u64("job n_correct")?;
+    let n_seen = c.u64("job n_seen")?;
+    let n_ms = c.count(8, "job step times")?;
+    let mut step_ms = Vec::with_capacity(n_ms);
+    for _ in 0..n_ms {
+        step_ms.push(c.f64("job step ms")?);
+    }
+    Ok(JobDoneMsg {
+        job_id,
+        ok,
+        error,
+        batches_done,
+        losses,
+        n_correct,
+        n_seen,
+        step_ms,
+        masks: get_mask_list(&mut c, "job masks")?,
+        params: get_blob(&mut c, "job params")?,
+        momentum: get_blob(&mut c, "job momentum")?,
+        dense_state_bytes: c.u64("job dense state bytes")?,
+        test_top1: c.f64("job test top1")?,
+        test_loss: c.f64("job test loss")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Ring-collective frames: link negotiation + exchange
 // ---------------------------------------------------------------------------
 
@@ -1651,5 +1872,98 @@ mod tests {
                 Err(format!("a {cut}-byte prefix of a control frame decoded successfully"))
             }
         });
+    }
+
+    #[test]
+    fn job_frames_round_trip_and_reject_truncation() {
+        let round = JobRoundMsg {
+            job_id: 7,
+            tenant: "acme".to_string(),
+            lora_rank: 2,
+            fresh: false,
+            finalize: true,
+            start_batch: 4,
+            n_batches: 3,
+            spec_json: "{\"tenant\": \"acme\"}".to_string(),
+            masks: vec![MaskPair::ones(2, 2), MaskPair::ones(2, 2)],
+            params: vec![1, 2, 3, 4],
+            momentum: vec![5, 6],
+        };
+        let mut f = Vec::new();
+        encode_job_round(&round, &mut f);
+        let back = decode_job_round(&f).unwrap();
+        assert_eq!(back.job_id, 7);
+        assert_eq!(back.tenant, "acme");
+        assert_eq!(back.lora_rank, 2);
+        assert!(!back.fresh && back.finalize);
+        assert_eq!((back.start_batch, back.n_batches), (4, 3));
+        assert_eq!(back.spec_json, round.spec_json);
+        assert_eq!(back.masks.len(), 2);
+        assert_eq!(back.params, vec![1, 2, 3, 4]);
+        assert_eq!(back.momentum, vec![5, 6]);
+        crate::util::proptest::check("job-round-truncation", 60, |g| {
+            let cut = g.usize_in(0, f.len() - 1);
+            if decode_job_round(&f[..cut]).is_err() {
+                Ok(())
+            } else {
+                Err(format!("{cut}-byte prefix decoded"))
+            }
+        });
+
+        let done = JobDoneMsg {
+            job_id: 7,
+            ok: true,
+            error: String::new(),
+            batches_done: 3,
+            losses: vec![0.5, 0.25, 0.125],
+            n_correct: 11,
+            n_seen: 48,
+            step_ms: vec![1.5, 2.5, 3.5],
+            masks: vec![MaskPair::ones(2, 2)],
+            params: vec![9, 8, 7],
+            momentum: vec![6],
+            dense_state_bytes: 4096,
+            test_top1: 0.75,
+            test_loss: 0.5,
+        };
+        let mut f = Vec::new();
+        encode_job_done(&done, &mut f);
+        let back = decode_job_done(&f).unwrap();
+        assert_eq!(back.job_id, 7);
+        assert!(back.ok);
+        assert_eq!(back.batches_done, 3);
+        assert_eq!(back.losses, vec![0.5, 0.25, 0.125]);
+        assert_eq!((back.n_correct, back.n_seen), (11, 48));
+        assert_eq!(back.step_ms, vec![1.5, 2.5, 3.5]);
+        assert_eq!(back.masks.len(), 1);
+        assert_eq!(back.params, vec![9, 8, 7]);
+        assert_eq!(back.momentum, vec![6]);
+        assert_eq!(back.dense_state_bytes, 4096);
+        assert_eq!((back.test_top1, back.test_loss), (0.75, 0.5));
+        crate::util::proptest::check("job-done-truncation", 60, |g| {
+            let cut = g.usize_in(0, f.len() - 1);
+            if decode_job_done(&f[..cut]).is_err() {
+                Ok(())
+            } else {
+                Err(format!("{cut}-byte prefix decoded"))
+            }
+        });
+
+        // A blob length claiming more bytes than the frame holds is a
+        // corrupt count, never an allocation or a panic.
+        let mut f = Vec::new();
+        put_u32(&mut f, TAG_JOB_ROUND);
+        put_u64(&mut f, 1);
+        put_str(&mut f, "t");
+        put_u32(&mut f, 0); // rank
+        f.push(1); // fresh
+        f.push(0); // finalize
+        put_u32(&mut f, 0);
+        put_u32(&mut f, 0);
+        put_str(&mut f, "{}");
+        put_u32(&mut f, 0); // masks
+        put_u64(&mut f, u64::MAX); // params blob claims u64::MAX bytes
+        let err = decode_job_round(&f).unwrap_err().to_string();
+        assert!(err.contains("corrupt count"), "got: {err}");
     }
 }

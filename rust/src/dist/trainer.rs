@@ -115,14 +115,20 @@ use crate::metrics::{rel_drift, DeviceUsage, Meter};
 use crate::obs::metrics::Registry;
 use crate::obs::trace;
 use crate::partition::Partition;
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::Json;
 use crate::schedule::{MaskPair, Scheduler};
 use crate::scores::ScoreBook;
 use crate::tensor::Tensor;
 
 /// Configuration of one distributed run: the full serial trainer config
 /// plus the cluster shape.
+///
+/// `#[non_exhaustive]`: construct via [`DistConfig::builder`] (or the
+/// [`DistConfig::new`] default shorthand) — fields stay pub for reading
+/// and targeted mutation, but the struct-literal form is reserved to
+/// the builder module ([`crate::config`]).
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct DistConfig {
     /// The training run (dataset, schedule, budget, seed, ...). The
     /// update mode is forced to [`UpdateMode::BatchAccum`] — the only
@@ -241,34 +247,25 @@ pub struct DistConfig {
 }
 
 impl DistConfig {
+    /// Builder over `train` with `workers` replicas; every construction
+    /// site goes through it (see [`crate::config`]).
+    pub fn builder(train: TrainerConfig, workers: usize) -> crate::config::DistConfigBuilder {
+        crate::config::DistConfigBuilder::new(train, workers)
+    }
+
     /// Masked-allreduce cluster of `workers` replicas with the default
     /// performance knobs: in-process channel transport, overlap on,
     /// lossless f32 wire, no simulated NIC, calibration on.
+    ///
+    /// Unlike [`DistConfig::builder`] this never fails: a zero worker
+    /// count is preserved so `DistTrainer::new` can reject it with its
+    /// own descriptive error (tests rely on that path).
     pub fn new(train: TrainerConfig, workers: usize) -> DistConfig {
-        DistConfig {
-            train,
-            workers,
-            exchange: ExchangeMode::MaskedAllReduce,
-            transport: TransportKind::Channel,
-            overlap: true,
-            wire_precision: WirePrecision::F32,
-            compress: WireCompression::None,
-            ring_group: 0,
-            sim_wire_ms_per_mib: 0.0,
-            calibrate: true,
-            heartbeat_ms: 500,
-            liveness_misses: 4,
-            stall_reassign_ms: 5000,
-            batch_timeout_ms: 120_000,
-            faults: Vec::new(),
-            checkpoint_dir: None,
-            checkpoint_every: 1,
-            checkpoint_retain: 2,
-            resume_from: None,
-            halt_after_batch: None,
-            trace_out: None,
-            metrics: None,
-        }
+        let mut cfg = DistConfig::builder(train, workers.max(1))
+            .build()
+            .expect("default dist knobs always validate");
+        cfg.workers = workers;
+        cfg
     }
 }
 
@@ -395,62 +392,7 @@ impl DistReport {
     /// key means bumping the version and updating that golden test; the
     /// legacy `schema` string stays for scripts that match on it.
     pub fn to_json(&self) -> Json {
-        let membership = self
-            .membership
-            .iter()
-            .map(|e| {
-                obj(vec![
-                    ("batch", num(e.batch as f64)),
-                    ("worker", num(e.worker as f64)),
-                    ("kind", s(&e.kind)),
-                ])
-            })
-            .collect();
-        let socket_classes = self
-            .socket
-            .classes()
-            .map(|(name, sent, recv)| {
-                obj(vec![
-                    ("class", s(name)),
-                    ("sent", num(sent as f64)),
-                    ("recv", num(recv as f64)),
-                ])
-            })
-            .collect();
-        let ring_bytes = self
-            .ring_bytes
-            .iter()
-            .map(|&(sent, recv)| obj(vec![("sent", num(sent as f64)), ("recv", num(recv as f64))]))
-            .collect();
-        obj(vec![
-            ("schema", s("d2ft-dist-report-v3")),
-            ("schema_version", num(3.0)),
-            ("compress", s(&self.compress)),
-            ("workers", num(self.n_workers as f64)),
-            ("live_workers", num(self.live_workers as f64)),
-            ("transport", s(&self.transport)),
-            ("exchange", s(&self.exchange)),
-            ("aggregator_restarts", num(self.aggregator_restarts as f64)),
-            ("batches", num(self.train.batches as f64)),
-            ("epochs", num(self.epochs as f64)),
-            ("final_train_loss", num(self.train.final_train_loss)),
-            ("frames_corrupt", num(self.frames_corrupt as f64)),
-            ("test_top1", num(self.train.test_top1)),
-            ("evictions", num(self.evictions as f64)),
-            ("joins", num(self.joins as f64)),
-            ("reconnects", num(self.reconnects as f64)),
-            ("resends", num(self.resends as f64)),
-            ("reassigned_micros", num(self.reassigned_micros as f64)),
-            ("knapsack_resolves", num(self.knapsack_resolves as f64)),
-            ("checkpoints_written", num(self.checkpoints_written as f64)),
-            ("grad_bytes_up", num(self.wire.up_bytes as f64)),
-            ("grad_bytes_down", num(self.wire.down_bytes as f64)),
-            ("socket_bytes_sent", num(self.socket.bytes_sent as f64)),
-            ("socket_bytes_recv", num(self.socket.bytes_recv as f64)),
-            ("socket_classes", arr(socket_classes)),
-            ("ring_bytes", arr(ring_bytes)),
-            ("membership", arr(membership)),
-        ])
+        crate::report::dist_report_json(self)
     }
 }
 
@@ -2921,9 +2863,7 @@ impl Drop for DistTrainer {
 mod tests {
     use super::*;
     use crate::backend::native::NativeSpec;
-    use crate::coordinator::SchedulerKind;
     use crate::runtime::ModelConfig;
-    use crate::schedule::Budget;
 
     fn small_provider() -> NativeProvider {
         NativeProvider::new(NativeSpec {
@@ -2949,17 +2889,15 @@ mod tests {
     }
 
     fn quick_cfg() -> TrainerConfig {
-        TrainerConfig {
-            train_size: 60,
-            test_size: 12,
-            batches: 2,
-            pretrain_batches: 1,
-            ..TrainerConfig::quick(
-                crate::data::SyntheticKind::Cifar10Like,
-                SchedulerKind::D2ft,
-                Budget::uniform(5, 3, 1),
-            )
-        }
+        // Builder defaults are the quick-run defaults (cifar10-like,
+        // D2FT, 3+1-of-5 budget); only the run length shrinks.
+        TrainerConfig::builder()
+            .train_size(60)
+            .test_size(12)
+            .batches(2)
+            .pretrain_batches(1)
+            .build()
+            .unwrap()
     }
 
     #[test]
@@ -2991,7 +2929,7 @@ mod tests {
         // bit-equal with the pipeline on and off.
         let provider = small_provider();
         let run = |overlap: bool| {
-            let dcfg = DistConfig { overlap, ..DistConfig::new(quick_cfg(), 3) };
+            let dcfg = DistConfig::builder(quick_cfg(), 3).overlap(overlap).build().unwrap();
             let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
             let r = dt.run().unwrap();
             let w = dt.backend().param("b00_wqkv").unwrap();
@@ -3044,8 +2982,7 @@ mod tests {
     fn f16_wire_halves_measured_bytes_and_trains() {
         let provider = small_provider();
         let run = |prec| {
-            let dcfg =
-                DistConfig { wire_precision: prec, ..DistConfig::new(quick_cfg(), 2) };
+            let dcfg = DistConfig::builder(quick_cfg(), 2).wire_precision(prec).build().unwrap();
             DistTrainer::new(&provider, dcfg).unwrap().run().unwrap()
         };
         let r32 = run(WirePrecision::F32);
@@ -3058,11 +2995,11 @@ mod tests {
             "f16 must roughly halve the measured uplink, got {ratio:.3}"
         );
         // f16 + parameter server is rejected up front.
-        let bad = DistConfig {
-            wire_precision: WirePrecision::F16,
-            exchange: ExchangeMode::ParamServer,
-            ..DistConfig::new(quick_cfg(), 2)
-        };
+        let bad = DistConfig::builder(quick_cfg(), 2)
+            .wire_precision(WirePrecision::F16)
+            .exchange(ExchangeMode::ParamServer)
+            .build()
+            .unwrap();
         assert!(DistTrainer::new(&provider, bad).is_err());
     }
 
@@ -3110,7 +3047,7 @@ mod tests {
         // must be identical across all three topologies.
         let provider = small_provider();
         let run = |exchange| {
-            let dcfg = DistConfig { exchange, ..DistConfig::new(quick_cfg(), 2) };
+            let dcfg = DistConfig::builder(quick_cfg(), 2).exchange(exchange).build().unwrap();
             let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
             let r = dt.run().unwrap();
             let w = dt.backend().param("b00_wqkv").unwrap();
@@ -3133,7 +3070,7 @@ mod tests {
     fn int8_wire_trains_and_shrinks_uplink() {
         let provider = small_provider();
         let run = |compress| {
-            let dcfg = DistConfig { compress, ..DistConfig::new(quick_cfg(), 2) };
+            let dcfg = DistConfig::builder(quick_cfg(), 2).compress(compress).build().unwrap();
             DistTrainer::new(&provider, dcfg).unwrap().run().unwrap()
         };
         let dense = run(WireCompression::None);
@@ -3147,23 +3084,23 @@ mod tests {
     #[test]
     fn compression_guards_reject_inconsistent_configs() {
         let provider = small_provider();
-        let bad = DistConfig {
-            compress: WireCompression::Int8,
-            exchange: ExchangeMode::ParamServer,
-            ..DistConfig::new(quick_cfg(), 2)
-        };
+        let bad = DistConfig::builder(quick_cfg(), 2)
+            .compress(WireCompression::Int8)
+            .exchange(ExchangeMode::ParamServer)
+            .build()
+            .unwrap();
         assert!(DistTrainer::new(&provider, bad).is_err(), "compression needs grad exchange");
-        let bad = DistConfig {
-            compress: WireCompression::Int4,
-            wire_precision: WirePrecision::F16,
-            ..DistConfig::new(quick_cfg(), 2)
-        };
+        let bad = DistConfig::builder(quick_cfg(), 2)
+            .compress(WireCompression::Int4)
+            .wire_precision(WirePrecision::F16)
+            .build()
+            .unwrap();
         assert!(DistTrainer::new(&provider, bad).is_err(), "int4 cannot stack on f16");
-        let ok = DistConfig {
-            compress: WireCompression::TopK { pct: 10 },
-            wire_precision: WirePrecision::F16,
-            ..DistConfig::new(quick_cfg(), 2)
-        };
+        let ok = DistConfig::builder(quick_cfg(), 2)
+            .compress(WireCompression::TopK { pct: 10 })
+            .wire_precision(WirePrecision::F16)
+            .build()
+            .unwrap();
         assert!(DistTrainer::new(&provider, ok).is_ok(), "top-k composes with the f16 wire");
     }
 

@@ -241,12 +241,14 @@ pub trait Transport: BlobTx + BlobRx {
 /// [`StatsCell`] / [`TransportStats`], indexed by the value
 /// [`frame_class`] returns. One entry per control-protocol frame kind
 /// (all ten `TAG_RING_*` negotiation/exchange tags fold into a single
-/// `ring` class), `trace` for the observability side-channel, plus
-/// `barrier` for the empty handshake token and `other` for anything
-/// with an unrecognized leading tag.
-pub const FRAME_CLASSES: [&str; 18] = [
+/// `ring` class), `trace` for the observability side-channel, `job`
+/// for the multi-tenant serve layer's tenant-tagged adapter hot-swap
+/// frames (`TAG_JOB_ROUND` / `TAG_JOB_DONE`), plus `barrier` for the
+/// empty handshake token and `other` for anything with an
+/// unrecognized leading tag.
+pub const FRAME_CLASSES: [&str; 19] = [
     "init", "compute", "apply", "deltas", "reset", "shutdown", "up", "bye", "ping", "pong",
-    "join", "evict", "nack", "state", "ring", "trace", "barrier", "other",
+    "join", "evict", "nack", "state", "ring", "trace", "job", "barrier", "other",
 ];
 
 /// Number of traffic classes (length of [`FRAME_CLASSES`]).
@@ -258,10 +260,10 @@ pub const N_FRAME_CLASSES: usize = FRAME_CLASSES.len();
 /// token. Returns an index into [`FRAME_CLASSES`].
 pub fn frame_class(blob: &[u8]) -> usize {
     if blob.is_empty() {
-        return 16; // barrier
+        return 17; // barrier
     }
     if blob.len() < 4 {
-        return 17; // other
+        return 18; // other
     }
     let tag = u32::from_le_bytes([blob[0], blob[1], blob[2], blob[3]]);
     match tag {
@@ -290,7 +292,8 @@ pub fn frame_class(blob: &[u8]) -> usize {
         | proto::TAG_RING_PART
         | proto::TAG_RING_CAST => 14,
         proto::TAG_TRACE => 15,
-        _ => 17, // other
+        proto::TAG_JOB_ROUND | proto::TAG_JOB_DONE => 16,
+        _ => 18, // other
     }
 }
 
@@ -1667,6 +1670,8 @@ mod tests {
         assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_STATE.to_le_bytes())], "state");
         assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_PING.to_le_bytes())], "ping");
         assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_TRACE.to_le_bytes())], "trace");
+        assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_JOB_ROUND.to_le_bytes())], "job");
+        assert_eq!(FRAME_CLASSES[frame_class(&proto::TAG_JOB_DONE.to_le_bytes())], "job");
     }
 
     #[test]

@@ -25,10 +25,9 @@ pub(super) fn figure_methods() -> Vec<SchedulerKind> {
 fn accuracy_sweep(ctx: &ExperimentCtx, dataset: SyntheticKind, title: &str) -> Result<String> {
     let mut out = section(title);
     // Standard fine-tuning reference (100% budget).
-    let std_cfg = TrainerConfig {
-        batches: ctx.batches(16),
-        ..TrainerConfig::quick(dataset, SchedulerKind::Standard, Budget::uniform(5, 5, 0))
-    };
+    let mut std_cfg =
+        TrainerConfig::quick(dataset, SchedulerKind::Standard, Budget::uniform(5, 5, 0));
+    std_cfg.batches = ctx.batches(16);
     let std_report = run_one(ctx, std_cfg)?;
     out.push_str(&format!(
         "Standard fine-tuning: top-1 {} (compute 100%, comm 100%)\n\n",
@@ -39,10 +38,8 @@ fn accuracy_sweep(ctx: &ExperimentCtx, dataset: SyntheticKind, title: &str) -> R
     ]);
     for (label, budget) in budget_points() {
         for method in figure_methods() {
-            let cfg = TrainerConfig {
-                batches: ctx.batches(16),
-                ..TrainerConfig::quick(dataset, method, budget.clone())
-            };
+            let mut cfg = TrainerConfig::quick(dataset, method, budget.clone());
+            cfg.batches = ctx.batches(16);
             let r = run_one(ctx, cfg)?;
             table.row(&[
                 r.scheduler.clone(),
@@ -96,10 +93,11 @@ pub fn fig3(ctx: &ExperimentCtx) -> Result<String> {
 
     // Standard LoRA reference at the standard rank.
     let n_micro = 5;
-    let base_cfg = |sched, budget, rank| TrainerConfig {
-        batches: ctx.batches(16),
-        lora_rank: rank,
-        ..TrainerConfig::quick(dataset, sched, budget)
+    let base_cfg = |sched, budget, rank| {
+        let mut c = TrainerConfig::quick(dataset, sched, budget);
+        c.batches = ctx.batches(16);
+        c.lora_rank = rank;
+        c
     };
     let r_std = run_one(
         ctx,

@@ -67,11 +67,9 @@ pub fn table1(ctx: &ExperimentCtx) -> Result<String> {
     for m in methods {
         // Variance is a property of the schedule, not of convergence:
         // a short run suffices.
-        let cfg = TrainerConfig {
-            batches: ctx.batches(4),
-            pretrain_batches: 2,
-            ..TrainerConfig::quick(SyntheticKind::Cifar100Like, m, budget.clone())
-        };
+        let mut cfg = TrainerConfig::quick(SyntheticKind::Cifar100Like, m, budget.clone());
+        cfg.batches = ctx.batches(4);
+        cfg.pretrain_batches = 2;
         let r = run_one(ctx, cfg)?;
         table.row(&[
             r.scheduler.clone(),
@@ -97,10 +95,8 @@ pub fn table2(ctx: &ExperimentCtx) -> Result<String> {
     let mut out = section("Table II — execution time (V100-calibrated model) + top-1 @60%");
     let mut table = Table::new(&["Methods", "Makespan", "Mean device time", "Top-1"]);
     for m in methods {
-        let cfg = TrainerConfig {
-            batches: ctx.batches(16),
-            ..TrainerConfig::quick(SyntheticKind::Cifar100Like, m, budget.clone())
-        };
+        let mut cfg = TrainerConfig::quick(SyntheticKind::Cifar100Like, m, budget.clone());
+        cfg.batches = ctx.batches(16);
         let r = run_one(ctx, cfg)?;
         table.row(&[
             r.scheduler.clone(),
@@ -131,11 +127,10 @@ pub fn table3(ctx: &ExperimentCtx) -> Result<String> {
     let mut out = section("Table III — contribution-score metric combinations (Cars-like)");
     let mut table = Table::new(&["Backward score", "Forward score", "Top-1 accuracy"]);
     for (backward, forward) in combos {
-        let cfg = TrainerConfig {
-            batches: ctx.batches(16),
-            scores: ScoreConfig { backward, forward },
-            ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
-        };
+        let mut cfg =
+            TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone());
+        cfg.batches = ctx.batches(16);
+        cfg.scores = ScoreConfig { backward, forward };
         let r = run_one(ctx, cfg)?;
         table.row(&[backward.name().into(), forward.name().into(), pct(r.test_top1)]);
     }
@@ -203,11 +198,10 @@ pub fn table5(ctx: &ExperimentCtx) -> Result<String> {
     let groups: Vec<usize> = (1..=3).filter(|g| heads % g == 0).collect();
     let analogues = ["74", "38", "26"];
     for (gi, g) in groups.iter().enumerate() {
-        let cfg = TrainerConfig {
-            batches: ctx.batches(16),
-            partition_group: *g,
-            ..TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, budget.clone())
-        };
+        let mut cfg =
+            TrainerConfig::quick(SyntheticKind::Cifar100Like, SchedulerKind::D2ft, budget.clone());
+        cfg.batches = ctx.batches(16);
+        cfg.partition_group = *g;
         let n_subnets = mc.depth * heads / g + 2;
         let r = run_one(ctx, cfg)?;
         table.row(&[
@@ -234,27 +228,22 @@ pub fn table6(ctx: &ExperimentCtx) -> Result<String> {
         let micros = 80 / mbs;
         let n_full = micros * 2 / 5;
         let n_fwd = micros * 2 / 5;
-        let cfg = TrainerConfig {
-            // fewer batches here: each batch is 80/mbs micro-steps, so
-            // the total trainstep count stays comparable across rows.
-            batches: ctx.batches(8),
-            micros_per_batch: micros,
-            budget: Budget::uniform(micros, n_full, n_fwd),
-            ..TrainerConfig::quick(
-                SyntheticKind::Cifar100Like,
-                SchedulerKind::D2ft,
-                Budget::uniform(micros, n_full, n_fwd),
-            )
-        };
-        let r = if mbs == base_mb {
-            run_one(ctx, cfg)?
-        } else {
+        let mut cfg = TrainerConfig::quick(
+            SyntheticKind::Cifar100Like,
+            SchedulerKind::D2ft,
+            Budget::uniform(micros, n_full, n_fwd),
+        );
+        // fewer batches here: each batch is 80/mbs micro-steps, so
+        // the total trainstep count stays comparable across rows.
+        cfg.batches = ctx.batches(8);
+        cfg.micros_per_batch = micros;
+        if mbs != base_mb {
             // Variant models share parameters; only the per-step batch
             // size differs (a lowered trainstep variant on XLA, a plain
             // argument on the native backend).
-            let mut trainer = Trainer::new_with_micro_batch(ctx.provider, cfg, mbs)?;
-            trainer.run()?
-        };
+            cfg.micro_batch = Some(mbs);
+        }
+        let r = run_one(ctx, cfg)?;
         table.row(&[mbs.to_string(), micros.to_string(), pct(r.test_top1)]);
     }
     out.push_str(&table.render());
@@ -268,14 +257,12 @@ pub fn table7(ctx: &ExperimentCtx) -> Result<String> {
     let mut out = section("Table VII — memory heterogeneity (CIFAR-100-like)");
     let mut table = Table::new(&["Large-memory devices", "Devices total", "Top-1 accuracy"]);
     // homogeneous reference
-    let base = TrainerConfig {
-        batches: ctx.batches(16),
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar100Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 2, 2),
-        )
-    };
+    let mut base = TrainerConfig::quick(
+        SyntheticKind::Cifar100Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 2, 2),
+    );
+    base.batches = ctx.batches(16);
     let r0 = run_one(ctx, base.clone())?;
     table.row(&["0 (homogeneous)".into(), format!("{}", mc.body_subnets() + 2), pct(r0.test_top1)]);
     // Up to half the body subnets merge into 2-head devices; the paper's
@@ -285,7 +272,8 @@ pub fn table7(ctx: &ExperimentCtx) -> Result<String> {
     let mut settings: Vec<usize> = [9usize, 14, 19].iter().map(|&n| n.min(max_large)).collect();
     settings.dedup();
     for n_large in settings {
-        let cfg = TrainerConfig { hetero: Some(HeteroSpec::memory(n_large)), ..base.clone() };
+        let mut cfg = base.clone();
+        cfg.hetero = Some(HeteroSpec::memory(n_large));
         let r = run_one(ctx, cfg)?;
         let devices = mc.body_subnets() - n_large + 2;
         table.row(&[n_large.to_string(), devices.to_string(), pct(r.test_top1)]);
@@ -300,21 +288,20 @@ pub fn table8(ctx: &ExperimentCtx) -> Result<String> {
     let mc = ctx.provider.model_config().clone();
     let mut out = section("Table VIII — computational heterogeneity (CIFAR-100-like)");
     let mut table = Table::new(&["High-speed devices", "Top-1 accuracy"]);
-    let base = TrainerConfig {
-        batches: ctx.batches(16),
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar100Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 2, 2),
-        )
-    };
+    let mut base = TrainerConfig::quick(
+        SyntheticKind::Cifar100Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 2, 2),
+    );
+    base.batches = ctx.batches(16);
     let r0 = run_one(ctx, base.clone())?;
     table.row(&["0 (homogeneous)".into(), pct(r0.test_top1)]);
     let max_fast = mc.body_subnets();
     let mut settings: Vec<usize> = [9usize, 14, 19].iter().map(|&n| n.min(max_fast)).collect();
     settings.dedup();
     for n_fast in settings {
-        let cfg = TrainerConfig { hetero: Some(HeteroSpec::compute(n_fast)), ..base.clone() };
+        let mut cfg = base.clone();
+        cfg.hetero = Some(HeteroSpec::compute(n_fast));
         let r = run_one(ctx, cfg)?;
         table.row(&[n_fast.to_string(), pct(r.test_top1)]);
     }
@@ -329,10 +316,9 @@ pub fn table9(ctx: &ExperimentCtx) -> Result<String> {
     let mut table = Table::new(&["Forward setting", "Computational cost", "Top-1 accuracy"]);
     for n_po in 0..=4usize {
         let budget = Budget::uniform(5, 1, n_po);
-        let cfg = TrainerConfig {
-            batches: ctx.batches(16),
-            ..TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone())
-        };
+        let mut cfg =
+            TrainerConfig::quick(SyntheticKind::CarsLike, SchedulerKind::D2ft, budget.clone());
+        cfg.batches = ctx.batches(16);
         let r = run_one(ctx, cfg)?;
         table.row(&[
             format!("{n_po}p_o"),
@@ -359,10 +345,8 @@ pub fn table10(ctx: &ExperimentCtx) -> Result<String> {
         (SchedulerKind::Scaler(Lambda::Const(0.1)), "0.1"),
     ];
     for (kind, lam) in rows {
-        let cfg = TrainerConfig {
-            batches: ctx.batches(16),
-            ..TrainerConfig::quick(SyntheticKind::Cifar100Like, kind, budget.clone())
-        };
+        let mut cfg = TrainerConfig::quick(SyntheticKind::Cifar100Like, kind, budget.clone());
+        cfg.batches = ctx.batches(16);
         let r = run_one(ctx, cfg)?;
         let name = if matches!(kind, SchedulerKind::D2ft) { "Bi-level" } else { "Scaler" };
         table.row(&[name.into(), lam.into(), pct(r.test_top1)]);

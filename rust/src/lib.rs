@@ -54,6 +54,7 @@
 
 pub mod backend;
 pub mod cluster;
+pub mod config;
 pub mod coordinator;
 pub mod data;
 #[cfg(feature = "native")]
@@ -62,9 +63,12 @@ pub mod experiments;
 pub mod metrics;
 pub mod obs;
 pub mod partition;
+pub mod report;
 pub mod runtime;
 pub mod schedule;
 pub mod scores;
+#[cfg(feature = "native")]
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   repro train       [flags]   one fine-tuning run, any scheduler
-//!   repro dist-worker --connect host:port   join a TCP dist cluster
+//!   repro serve       [flags]   multi-tenant LoRA fine-tuning service
+//!   repro job <action> --connect host:port   submit | status | result | shutdown
+//!   repro dist-worker --connect host:port    join a TCP dist cluster
 //!   repro experiment  <id>      regenerate a paper table/figure
 //!   repro list                  list experiments
 //!   repro info                  backend/model summary
@@ -16,11 +18,18 @@
 //! — with `--no-spawn` — waits for workers launched by hand (on this
 //! machine or any other) via `repro dist-worker --connect host:port`.
 //! Numerics are bitwise identical across transports.
+//!
+//! `repro train --config run.json` reads a serialized `JobSpec` as run
+//! defaults; flags given explicitly on the command line still win.
+//! `repro serve --listen host:port --max-tenants N` runs the job-spec
+//! service; `repro job submit --connect host:port --spec job.json`
+//! talks to it over one-JSON-object-per-line.
 
 use anyhow::Result;
 
 use d2ft::backend::{provider_for, BackendKind, BackendProvider};
 use d2ft::cluster::ExecMode;
+use d2ft::config::JobSpec;
 use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
 use d2ft::data::SyntheticKind;
 use d2ft::experiments::{list_experiments, run_experiment, ExperimentCtx};
@@ -28,11 +37,18 @@ use d2ft::metrics::{fmt_bytes, pct};
 use d2ft::schedule::Budget;
 use d2ft::scores::{Metric, ScoreConfig};
 use d2ft::util::cli::Cli;
+use d2ft::util::json::{num, obj, s, Json};
 
 fn cli() -> Cli {
     Cli::new("repro", "D2FT: Distributed Dynamic Fine-Tuning (paper reproduction)")
-        .positional("command", "train | dist-worker | experiment <id> | list | info")
-        .positional("experiment-id", "experiment id for `experiment`")
+        .positional(
+            "command",
+            "train | serve | job <action> | dist-worker | experiment <id> | list | info",
+        )
+        .positional(
+            "arg",
+            "experiment id for `experiment`; submit|status|result|shutdown for `job`",
+        )
         .flag(
             "backend",
             "native",
@@ -40,6 +56,18 @@ fn cli() -> Cli {
         )
         .flag("model", "mini", "native model preset: mini | small (ViT-small-like, 74 subnets)")
         .flag("artifacts", "artifacts", "artifacts directory (xla backend only; make artifacts)")
+        .flag(
+            "threads",
+            "1",
+            "matmul kernel threads (native backend; 1 = serial default, 0 = auto/per-core)",
+        )
+        .flag("scale", "1.0", "experiment run-length scale factor")
+        .section("RUN")
+        .flag(
+            "config",
+            "",
+            "JSON JobSpec file supplying run defaults (explicit flags still win)",
+        )
         .flag("dataset", "c100", "c10 | c100 | cars")
         .flag(
             "scheduler",
@@ -58,13 +86,23 @@ fn cli() -> Cli {
         .flag("backward-score", "weightmag", "fisher|gradmag|taylor|weightmag")
         .flag("forward-score", "fisher", "fisher|gradmag|taylor|weightmag")
         .flag("partition-group", "1", "heads per subnet (Table V)")
-        .flag("scale", "1.0", "experiment run-length scale factor")
         .flag("lora-rank", "0", "LoRA adapter rank (0 = full FT)")
         .flag("eval-every", "0", "evaluate test top-1 every N batches")
+        .switch("serial", "serial cluster execution (reference path; same metrics)")
+        .switch(
+            "batch-accum",
+            "one aggregated update per batch (the dist semantics) instead of per-micro",
+        )
+        .section("DIST & WIRE")
+        .switch(
+            "dist",
+            "real data-parallel training: worker replicas + masked-gradient exchange (native)",
+        )
         .flag(
             "workers",
             "0",
-            "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas)",
+            "engine worker threads (0 = one per simulated device; with --dist: 0 = 4 replicas; \
+             with serve: 0 = 2 replicas)",
         )
         .flag(
             "exchange",
@@ -84,11 +122,6 @@ fn cli() -> Cli {
             "hier exchange: workers per group (0 = ceil(sqrt(K)))",
         )
         .flag(
-            "threads",
-            "1",
-            "matmul kernel threads (native backend; 1 = serial default, 0 = auto/per-core)",
-        )
-        .flag(
             "wire",
             "f32",
             "dist gradient wire precision: f32 (lossless) | f16 (half the bytes, lossy)",
@@ -96,14 +129,28 @@ fn cli() -> Cli {
         .flag(
             "transport",
             "channel",
-            "dist frame transport: channel (in-process) | tcp (worker processes over sockets)",
+            "dist/serve link transport: channel (in-process) | tcp (real sockets)",
         )
         .flag(
             "listen",
             "127.0.0.1:0",
-            "tcp transport: aggregator bind address (port 0 = ephemeral)",
+            "bind address: the tcp aggregator (dist) or the control plane (serve); port 0 = \
+             ephemeral",
         )
-        .flag("connect", "", "dist-worker: aggregator address to join (host:port)")
+        .flag("connect", "", "dist-worker / job: server address to reach (host:port)")
+        .switch(
+            "no-spawn",
+            "tcp transport: do not fork dist-worker subprocesses; wait for external workers",
+        )
+        .switch(
+            "no-overlap",
+            "serialize each dist worker's encode+upload after its compute (default overlaps)",
+        )
+        .switch(
+            "no-calibrate",
+            "keep the paper's V100 exec-time model instead of recalibrating from measured times",
+        )
+        .section("FAULTS & RECOVERY")
         .flag(
             "fault",
             "",
@@ -114,7 +161,6 @@ fn cli() -> Cli {
         )
         .flag("heartbeat-ms", "500", "dist worker heartbeat interval in ms (0 = disabled)")
         .flag("liveness-misses", "4", "missed heartbeats before a dist worker is declared lost")
-        .flag("report-json", "", "train --dist: write the DistReport as JSON to this path")
         .flag("checkpoint-dir", "", "train --dist: write epoch-boundary checkpoints here")
         .flag(
             "checkpoint-retain",
@@ -134,6 +180,12 @@ fn cli() -> Cli {
             "train --dist: crash simulation — exit abruptly right after completing this many \
              batches (progress record on disk, no shutdown handshake); pair with --resume",
         )
+        .section("OBSERVABILITY")
+        .flag(
+            "report-json",
+            "",
+            "write the run/service report as JSON to this path (train, train --dist, serve)",
+        )
         .flag(
             "trace-out",
             "",
@@ -143,31 +195,21 @@ fn cli() -> Cli {
         .flag(
             "metrics-addr",
             "",
-            "train --dist: serve live Prometheus metrics on this address \
-             (e.g. 127.0.0.1:9464; /metrics text + /json dump)",
-        )
-        .switch(
-            "no-spawn",
-            "tcp transport: do not fork dist-worker subprocesses; wait for external workers",
-        )
-        .switch("serial", "serial cluster execution (reference path; same metrics)")
-        .switch(
-            "dist",
-            "real data-parallel training: worker replicas + masked-gradient exchange (native)",
-        )
-        .switch(
-            "no-overlap",
-            "serialize each dist worker's encode+upload after its compute (default overlaps)",
-        )
-        .switch(
-            "no-calibrate",
-            "keep the paper's V100 exec-time model instead of recalibrating from measured times",
-        )
-        .switch(
-            "batch-accum",
-            "one aggregated update per batch (the dist semantics) instead of per-micro",
+            "serve live Prometheus metrics on this address (train --dist and serve; \
+             e.g. 127.0.0.1:9464; /metrics text + /json dump)",
         )
         .switch("quiet", "suppress info logging")
+        .section("SERVE & JOBS")
+        .flag("max-tenants", "4", "serve: distinct tenants with active jobs at once")
+        .flag("round-batches", "4", "serve: max fine-tuning batches per admitted round")
+        .flag(
+            "round-micros",
+            "32",
+            "serve: per-replica micro-step capacity per admission round (knapsack bin size)",
+        )
+        .flag("job-id", "0", "job status|result: which job to query")
+        .flag("spec", "", "job submit: JSON JobSpec file to submit")
+        .flag("tenant", "", "job submit: shorthand for a default spec under this tenant")
 }
 
 fn main() -> Result<()> {
@@ -182,14 +224,14 @@ fn main() -> Result<()> {
     if args.get_bool("quiet") {
         d2ft::util::log::set_level(d2ft::util::log::Level::Warn);
     }
-    let open_provider = || -> Result<Box<dyn BackendProvider>> {
+    let open_provider_for = |model: &str| -> Result<Box<dyn BackendProvider>> {
         let kind = BackendKind::parse(args.get("backend"))?;
-        let model = args.get("model");
         match kind {
             #[cfg(feature = "native")]
             BackendKind::Native => {
-                let mut spec = d2ft::backend::native::NativeSpec::preset(model)?;
-                spec.threads = args.get_usize("threads")?;
+                let spec = d2ft::config::NativeSpecBuilder::preset(model)?
+                    .threads(args.get_usize("threads")?)
+                    .build()?;
                 Ok(Box::new(d2ft::backend::native::NativeProvider::new(spec)))
             }
             _ => {
@@ -201,6 +243,7 @@ fn main() -> Result<()> {
             }
         }
     };
+    let open_provider = || open_provider_for(args.get("model"));
     let command = args.positional(0).unwrap_or("info").to_string();
     match command.as_str() {
         "list" => {
@@ -240,6 +283,8 @@ fn main() -> Result<()> {
             Ok(())
         }
         "dist-worker" => run_dist_worker(&args),
+        "serve" => run_serve(&args),
+        "job" => run_job(&args),
         "experiment" => {
             let id = args
                 .positional(1)
@@ -253,48 +298,20 @@ fn main() -> Result<()> {
             Ok(())
         }
         "train" => {
-            let micros = args.get_usize("micros")?;
-            let budget = Budget::uniform(
-                micros,
-                args.get_usize("n-full")?,
-                args.get_usize("n-fwd")?,
-            );
-            let cfg = TrainerConfig {
-                dataset: SyntheticKind::parse(args.get("dataset"))?,
-                train_size: args.get_usize("train-size")?,
-                test_size: args.get_usize("test-size")?,
-                micros_per_batch: micros,
-                batches: args.get_usize("batches")?,
-                lr: args.get_f32("lr")?,
-                budget,
-                scheduler: SchedulerKind::parse(args.get("scheduler"))?,
-                scores: ScoreConfig {
-                    backward: Metric::parse(args.get("backward-score"))?,
-                    forward: Metric::parse(args.get("forward-score"))?,
-                },
-                exec: if args.get_bool("serial") {
-                    ExecMode::Serial
-                } else {
-                    ExecMode::Parallel { workers: args.get_usize("workers")? }
-                },
-                partition_group: args.get_usize("partition-group")?,
-                hetero: None,
-                seed: args.get_u64("seed")?,
-                pretrain_batches: args.get_usize("pretrain-batches")?,
-                eval_every: args.get_usize("eval-every")?,
-                lora_rank: args.get_usize("lora-rank")?,
-                update: if args.get_bool("batch-accum") || args.get_bool("dist") {
-                    UpdateMode::BatchAccum
-                } else {
-                    UpdateMode::PerMicro
-                },
-            };
+            let (cfg, model) = train_config(&args)?;
             if args.get_bool("dist") {
-                return run_dist(&args, cfg);
+                return run_dist(&args, cfg, &model);
             }
-            let provider = open_provider()?;
+            let provider = open_provider_for(&model)?;
             let mut trainer = Trainer::new(provider.as_ref(), cfg)?;
             let r = trainer.run()?;
+            let report_path = args.get("report-json");
+            if !report_path.is_empty() {
+                let doc = d2ft::report::train_report_json(&r);
+                std::fs::write(report_path, doc.to_string_pretty())
+                    .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;
+                d2ft::info!("wrote train report to {report_path}");
+            }
             println!("backend              {}", r.backend);
             println!("scheduler            {}", r.scheduler);
             println!("batches              {}", r.batches);
@@ -318,6 +335,81 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// Resolve `repro train`'s run configuration: `--config` (a serialized
+/// [`JobSpec`]) supplies defaults, explicitly-passed flags override
+/// them, and everything funnels through the [`TrainerConfig`] builder.
+/// Returns the config plus the model preset to open.
+fn train_config(args: &d2ft::util::cli::Args) -> Result<(TrainerConfig, String)> {
+    let path = args.get("config");
+    let file_spec: Option<JobSpec> = if path.is_empty() {
+        None
+    } else {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading --config {path}: {e}"))?;
+        Some(JobSpec::parse(&text)?)
+    };
+    // A flag wins when passed explicitly, or when there is no config
+    // file to defer to.
+    let fromcli = |flag: &str| args.is_set(flag) || file_spec.is_none();
+    let spec = file_spec.clone().unwrap_or_else(|| JobSpec::default_for("cli"));
+
+    let micros =
+        if fromcli("micros") { args.get_usize("micros")? } else { spec.micros_per_batch };
+    let n_full = if fromcli("n-full") { args.get_usize("n-full")? } else { spec.budget_full };
+    let n_fwd = if fromcli("n-fwd") { args.get_usize("n-fwd")? } else { spec.budget_fwd };
+    let model = if args.is_set("model") || file_spec.is_none() {
+        args.get("model").to_string()
+    } else {
+        spec.model.clone()
+    };
+    let cfg = TrainerConfig::builder()
+        .dataset(if fromcli("dataset") {
+            SyntheticKind::parse(args.get("dataset"))?
+        } else {
+            spec.dataset
+        })
+        .train_size(if fromcli("train-size") {
+            args.get_usize("train-size")?
+        } else {
+            spec.train_size
+        })
+        .test_size(if fromcli("test-size") { args.get_usize("test-size")? } else { spec.test_size })
+        .micros_per_batch(micros)
+        .batches(if fromcli("batches") { args.get_usize("batches")? } else { spec.batches })
+        .lr(if fromcli("lr") { args.get_f32("lr")? } else { spec.lr })
+        .budget(Budget::uniform(micros, n_full, n_fwd))
+        .scheduler(if fromcli("scheduler") {
+            SchedulerKind::parse(args.get("scheduler"))?
+        } else {
+            spec.scheduler
+        })
+        .scores(ScoreConfig {
+            backward: Metric::parse(args.get("backward-score"))?,
+            forward: Metric::parse(args.get("forward-score"))?,
+        })
+        .exec(if args.get_bool("serial") {
+            ExecMode::Serial
+        } else {
+            ExecMode::Parallel { workers: args.get_usize("workers")? }
+        })
+        .partition_group(args.get_usize("partition-group")?)
+        .seed(if fromcli("seed") { args.get_u64("seed")? } else { spec.seed })
+        .pretrain_batches(if fromcli("pretrain-batches") {
+            args.get_usize("pretrain-batches")?
+        } else {
+            spec.pretrain_batches
+        })
+        .eval_every(args.get_usize("eval-every")?)
+        .lora_rank(if fromcli("lora-rank") { args.get_usize("lora-rank")? } else { spec.lora_rank })
+        .update(if args.get_bool("batch-accum") || args.get_bool("dist") {
+            UpdateMode::BatchAccum
+        } else {
+            UpdateMode::PerMicro
+        })
+        .build()?;
+    Ok((cfg, model))
 }
 
 /// `repro dist-worker --connect host:port`: join a TCP dist cluster as
@@ -350,9 +442,118 @@ fn run_dist_worker(_args: &d2ft::util::cli::Args) -> Result<()> {
     anyhow::bail!("dist-worker needs the `native` feature (rebuild with default features)")
 }
 
+/// `repro serve`: run the multi-tenant fine-tuning service until a
+/// control-plane client sends `shutdown`, then write the metering
+/// report.
+#[cfg(feature = "native")]
+fn run_serve(args: &d2ft::util::cli::Args) -> Result<()> {
+    use d2ft::serve::{serve, ServeConfig};
+
+    let registry = std::sync::Arc::new(d2ft::obs::Registry::new());
+    let metrics_addr = args.get("metrics-addr");
+    let _metrics_server = if metrics_addr.is_empty() {
+        None
+    } else {
+        let srv = d2ft::obs::MetricsServer::start(metrics_addr, std::sync::Arc::clone(&registry))?;
+        d2ft::info!("serving metrics at http://{}/metrics", srv.addr());
+        Some(srv)
+    };
+    let mut cfg = ServeConfig::new();
+    cfg.model = args.get("model").to_string();
+    cfg.workers = match args.get_usize("workers")? {
+        0 => 2,
+        w => w,
+    };
+    cfg.max_tenants = args.get_usize("max-tenants")?;
+    cfg.round_batches = args.get_usize("round-batches")?;
+    cfg.round_micros = args.get_usize("round-micros")?;
+    cfg.tcp = args.get("transport").eq_ignore_ascii_case("tcp");
+    cfg.control = Some(args.get("listen").to_string());
+    cfg.metrics = Some(std::sync::Arc::clone(&registry));
+    let replicas = cfg.workers;
+    let model = cfg.model.clone();
+    let mut handle = serve(cfg)?;
+    let addr = handle.control_addr().unwrap_or("?").to_string();
+    println!("serve listening on {addr}");
+    d2ft::info!("serve up: {replicas} replicas of {model}; submit via --connect {addr}");
+    handle.wait_for_shutdown_request();
+    handle.shutdown();
+    let report = handle.report_json();
+    let report_path = args.get("report-json");
+    if !report_path.is_empty() {
+        std::fs::write(report_path, report.to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {report_path}: {e}"))?;
+        d2ft::info!("wrote serve report to {report_path}");
+    }
+    let jobs = report.opt("jobs").and_then(|j| j.as_arr().ok()).map(|a| a.len()).unwrap_or(0);
+    println!("serve shut down after {jobs} jobs");
+    Ok(())
+}
+
+#[cfg(not(feature = "native"))]
+fn run_serve(_args: &d2ft::util::cli::Args) -> Result<()> {
+    anyhow::bail!("serve needs the `native` feature (rebuild with default features)")
+}
+
+/// `repro job submit|status|result|shutdown --connect host:port`: one
+/// newline-delimited JSON request to a running `repro serve`.
+fn run_job(args: &d2ft::util::cli::Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let action = args
+        .positional(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro job <submit|status|result|shutdown>"))?
+        .to_string();
+    let addr = args.get("connect");
+    anyhow::ensure!(
+        !addr.is_empty(),
+        "usage: repro job {action} --connect <host:port> (the serve --listen address)"
+    );
+    let request = match action.as_str() {
+        "submit" => {
+            let spec_path = args.get("spec");
+            let spec = if !spec_path.is_empty() {
+                let text = std::fs::read_to_string(spec_path)
+                    .map_err(|e| anyhow::anyhow!("reading --spec {spec_path}: {e}"))?;
+                JobSpec::parse(&text)?
+            } else {
+                let tenant = args.get("tenant");
+                anyhow::ensure!(
+                    !tenant.is_empty(),
+                    "job submit needs --spec <file.json> or --tenant <name>"
+                );
+                JobSpec::default_for(tenant)
+            };
+            obj(vec![("cmd", s("submit")), ("spec", spec.to_json())])
+        }
+        "status" | "result" => obj(vec![
+            ("cmd", s(&action)),
+            ("job_id", num(args.get_u64("job-id")? as f64)),
+        ]),
+        "shutdown" => obj(vec![("cmd", s("shutdown"))]),
+        other => anyhow::bail!("unknown job action {other:?} (submit|status|result|shutdown)"),
+    };
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to serve at {addr}: {e}"))?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(request.to_string_compact().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    anyhow::ensure!(!reply.trim().is_empty(), "serve closed the connection without replying");
+    let doc = Json::parse(reply.trim())?;
+    let ok = doc.opt("ok").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    if ok == 0.0 {
+        anyhow::bail!("serve refused: {}", doc.str_at("error").unwrap_or_default());
+    }
+    println!("{}", doc.to_string_pretty());
+    Ok(())
+}
+
 /// `repro train --dist`: the real data-parallel runtime (native only).
 #[cfg(feature = "native")]
-fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
+fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig, model: &str) -> Result<()> {
     use d2ft::backend::native::{NativeProvider, NativeSpec};
     use d2ft::dist::{
         parse_worker_plans, DistConfig, DistTrainer, ExchangeMode, SpawnMode, TransportKind,
@@ -363,8 +564,7 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
             == d2ft::backend::BackendKind::Native,
         "--dist runs on the native backend (worker replicas need Send numerics)"
     );
-    let mut spec = NativeSpec::preset(args.get("model"))?;
-    spec.threads = args.get_usize("threads")?;
+    let spec = NativeSpec::builder_preset(model)?.threads(args.get_usize("threads")?).build()?;
     let provider = NativeProvider::new(spec);
     let workers = match args.get_usize("workers")? {
         0 => 4,
@@ -396,21 +596,21 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
         d2ft::info!("serving metrics at http://{}/metrics", srv.addr());
         Some(srv)
     };
-    let dcfg = DistConfig {
-        exchange: ExchangeMode::parse(args.get("exchange"))?,
-        transport,
-        overlap: !args.get_bool("no-overlap"),
-        wire_precision: d2ft::dist::WirePrecision::parse(args.get("wire"))?,
-        compress: d2ft::dist::WireCompression::parse(args.get("compress"))?,
-        ring_group: args.get_usize("ring-group")?,
-        calibrate: !args.get_bool("no-calibrate"),
-        heartbeat_ms: args.get_u64("heartbeat-ms")?,
-        liveness_misses: args.get_usize("liveness-misses")? as u32,
-        faults: parse_worker_plans(args.get("fault"))?,
-        checkpoint_dir: to_path("checkpoint-dir"),
-        checkpoint_retain: args.get_usize("checkpoint-retain")?,
-        resume_from: to_path("resume"),
-        halt_after_batch: {
+    let dcfg = DistConfig::builder(cfg, workers)
+        .exchange(ExchangeMode::parse(args.get("exchange"))?)
+        .transport(transport)
+        .overlap(!args.get_bool("no-overlap"))
+        .wire_precision(d2ft::dist::WirePrecision::parse(args.get("wire"))?)
+        .compress(d2ft::dist::WireCompression::parse(args.get("compress"))?)
+        .ring_group(args.get_usize("ring-group")?)
+        .calibrate(!args.get_bool("no-calibrate"))
+        .heartbeat_ms(args.get_u64("heartbeat-ms")?)
+        .liveness_misses(args.get_usize("liveness-misses")? as u32)
+        .faults(parse_worker_plans(args.get("fault"))?)
+        .checkpoint_dir(to_path("checkpoint-dir"))
+        .checkpoint_retain(args.get_usize("checkpoint-retain")?)
+        .resume_from(to_path("resume"))
+        .halt_after_batch({
             let v = args.get("halt-after-batch");
             if v.is_empty() {
                 None
@@ -419,11 +619,10 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
                     anyhow::anyhow!("--halt-after-batch {v:?}: {e} (expected a batch count)")
                 })?)
             }
-        },
-        trace_out: to_path("trace-out"),
-        metrics: Some(std::sync::Arc::clone(&registry)),
-        ..DistConfig::new(cfg, workers)
-    };
+        })
+        .trace_out(to_path("trace-out"))
+        .metrics(Some(std::sync::Arc::clone(&registry)))
+        .build()?;
     let mut trainer = DistTrainer::new(&provider, dcfg)?;
     let r = trainer.run()?;
     let report_path = args.get("report-json");
@@ -501,6 +700,6 @@ fn run_dist(args: &d2ft::util::cli::Args, cfg: TrainerConfig) -> Result<()> {
 }
 
 #[cfg(not(feature = "native"))]
-fn run_dist(_args: &d2ft::util::cli::Args, _cfg: TrainerConfig) -> Result<()> {
+fn run_dist(_args: &d2ft::util::cli::Args, _cfg: TrainerConfig, _model: &str) -> Result<()> {
     anyhow::bail!("--dist needs the `native` feature (rebuild with default features)")
 }

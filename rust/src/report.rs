@@ -1,0 +1,214 @@
+//! The one versioned home of every report-JSON artifact.
+//!
+//! Three reports leave this crate as JSON contracts consumed outside it
+//! (CI greps, dashboards, the serve control plane): the serial
+//! [`TrainReport`], the distributed `DistReport`, and the per-tenant
+//! [`JobReport`] the multi-tenant service emits. All three share one
+//! [`SCHEMA_VERSION`] and the key-writer helpers below, and
+//! `tests/dist_report_schema.rs` pins each key set exactly — adding or
+//! removing a key means bumping the version and updating that golden
+//! test in the same change.
+
+use crate::coordinator::TrainReport;
+#[cfg(feature = "native")]
+use crate::dist::DistReport;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Schema version shared by every report artifact. v4 unified the
+/// emitters here and added the train and per-job report schemas next to
+/// the dist report (previously versioned alone as v3).
+pub const SCHEMA_VERSION: usize = 4;
+
+/// `(key, number)` writer — the shared idiom of every emitter below.
+fn knum(key: &'static str, v: f64) -> (&'static str, Json) {
+    (key, num(v))
+}
+
+/// `(key, string)` writer.
+fn kstr(key: &'static str, v: &str) -> (&'static str, Json) {
+    (key, s(v))
+}
+
+/// The two schema keys every report leads with. `kind` is the artifact
+/// family (`train` / `dist` / `job`).
+fn schema_pair(kind: &str) -> [(&'static str, Json); 2] {
+    [
+        ("schema", s(&format!("d2ft-{kind}-report-v{SCHEMA_VERSION}"))),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+    ]
+}
+
+/// Serialize a serial [`TrainReport`] (`repro train --report-json`
+/// without `--dist`). Scalars only — the loss/eval curves are run
+/// artifacts, not part of the schema contract.
+pub fn train_report_json(r: &TrainReport) -> Json {
+    let mut pairs: Vec<(&str, Json)> = schema_pair("train").to_vec();
+    pairs.extend([
+        kstr("scheduler", &r.scheduler),
+        kstr("backend", &r.backend),
+        kstr("engine", &r.engine),
+        knum("batches", r.batches as f64),
+        knum("final_train_loss", r.final_train_loss),
+        knum("test_top1", r.test_top1),
+        knum("test_loss", r.test_loss),
+        knum("compute_fraction", r.compute_fraction),
+        knum("comm_fraction", r.comm_fraction),
+        knum("workload_variance", r.workload_variance),
+        knum("sample_count_variance", r.sample_count_variance),
+        knum("mean_exec_ms", r.mean_exec_ms),
+        knum("makespan_ms", r.makespan_ms),
+        knum("utilization", r.utilization),
+        knum("imbalance", r.imbalance),
+        knum("straggler_ms", r.straggler_ms),
+        knum("wall_s", r.wall_s),
+        knum("calib_scale", r.calib_scale),
+        knum("calib_scale_full", r.calib_scale_full),
+        knum("calib_scale_fwd", r.calib_scale_fwd),
+        knum("calib_epochs", r.calib_epochs as f64),
+        knum("makespan_drift", r.makespan_drift),
+    ]);
+    obj(pairs)
+}
+
+/// Serialize a `DistReport` (the `--report-json` artifact of a dist
+/// run): loss/accuracy, membership churn, byte totals, and the recovery
+/// counters the chaos CI step inspects.
+#[cfg(feature = "native")]
+pub fn dist_report_json(r: &DistReport) -> Json {
+    let membership = r
+        .membership
+        .iter()
+        .map(|e| {
+            obj(vec![
+                knum("batch", e.batch as f64),
+                knum("worker", e.worker as f64),
+                kstr("kind", &e.kind),
+            ])
+        })
+        .collect();
+    let socket_classes = r
+        .socket
+        .classes()
+        .map(|(name, sent, recv)| {
+            obj(vec![kstr("class", name), knum("sent", sent as f64), knum("recv", recv as f64)])
+        })
+        .collect();
+    let ring_bytes = r
+        .ring_bytes
+        .iter()
+        .map(|&(sent, recv)| obj(vec![knum("sent", sent as f64), knum("recv", recv as f64)]))
+        .collect();
+    let mut pairs: Vec<(&str, Json)> = schema_pair("dist").to_vec();
+    pairs.extend([
+        kstr("compress", &r.compress),
+        knum("workers", r.n_workers as f64),
+        knum("live_workers", r.live_workers as f64),
+        kstr("transport", &r.transport),
+        kstr("exchange", &r.exchange),
+        knum("aggregator_restarts", r.aggregator_restarts as f64),
+        knum("batches", r.train.batches as f64),
+        knum("epochs", r.epochs as f64),
+        knum("final_train_loss", r.train.final_train_loss),
+        knum("frames_corrupt", r.frames_corrupt as f64),
+        knum("test_top1", r.train.test_top1),
+        knum("evictions", r.evictions as f64),
+        knum("joins", r.joins as f64),
+        knum("reconnects", r.reconnects as f64),
+        knum("resends", r.resends as f64),
+        knum("reassigned_micros", r.reassigned_micros as f64),
+        knum("knapsack_resolves", r.knapsack_resolves as f64),
+        knum("checkpoints_written", r.checkpoints_written as f64),
+        knum("grad_bytes_up", r.wire.up_bytes as f64),
+        knum("grad_bytes_down", r.wire.down_bytes as f64),
+        knum("socket_bytes_sent", r.socket.bytes_sent as f64),
+        knum("socket_bytes_recv", r.socket.bytes_recv as f64),
+        ("socket_classes", arr(socket_classes)),
+        ("ring_bytes", arr(ring_bytes)),
+        ("membership", arr(membership)),
+    ]);
+    obj(pairs)
+}
+
+/// Everything the multi-tenant service meters for one job: lifecycle,
+/// per-tenant wire bytes (vs the full-state dense baseline), hot-swap
+/// counts, and step-latency percentiles. Emitted per job by the serve
+/// report and returned by `repro job result`.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    /// Service-assigned job id.
+    pub job_id: u64,
+    /// Tenant that submitted the job (the metering key).
+    pub tenant: String,
+    /// Terminal lifecycle state label (`completed` / `failed`) or the
+    /// live state when queried mid-run.
+    pub state: String,
+    /// Failure description; empty unless `state == "failed"`.
+    pub error: String,
+    /// LoRA adapter rank the job trained.
+    pub lora_rank: usize,
+    /// Admission priority the job was submitted with.
+    pub priority: u32,
+    /// Step quota (fine-tuning batches requested).
+    pub batches_quota: usize,
+    /// Fine-tuning batches actually completed.
+    pub batches_done: usize,
+    /// Service rounds the job was admitted into.
+    pub rounds: usize,
+    /// Times the job was preempted back to the queue by admission.
+    pub preemptions: usize,
+    /// Adapter hot-swaps onto a replica (one per admitted round).
+    pub replica_swaps: usize,
+    /// Bytes shipped server→replica for this job (adapter + mask
+    /// state inside `job` frames).
+    pub bytes_up: u64,
+    /// Bytes returned replica→server (trained adapter state).
+    pub bytes_down: u64,
+    /// The dense baseline: full model params+momentum in f32, the
+    /// traffic a non-LoRA tenant swap would have cost per round.
+    pub dense_state_bytes: u64,
+    /// `1 - measured/dense` over all rounds (the LoRA multiplexing
+    /// win; 0 when nothing moved).
+    pub adapter_savings: f64,
+    /// Median per-batch step latency (ms) across the job's batches.
+    pub step_ms_p50: f64,
+    /// 99th-percentile per-batch step latency (ms).
+    pub step_ms_p99: f64,
+    /// Mean training loss over the job's fine-tuning batches.
+    pub final_train_loss: f64,
+    /// Test top-1 after the final batch (-1.0 until finalized — the
+    /// JSON layer has no NaN).
+    pub test_top1: f64,
+    /// Test loss after the final batch (-1.0 until finalized).
+    pub test_loss: f64,
+    /// Wall-clock from submission to terminal state (ms).
+    pub wall_ms: f64,
+}
+
+/// Serialize a [`JobReport`] (the per-tenant metering contract).
+pub fn job_report_json(r: &JobReport) -> Json {
+    let mut pairs: Vec<(&str, Json)> = schema_pair("job").to_vec();
+    pairs.extend([
+        knum("job_id", r.job_id as f64),
+        kstr("tenant", &r.tenant),
+        kstr("state", &r.state),
+        kstr("error", &r.error),
+        knum("lora_rank", r.lora_rank as f64),
+        knum("priority", r.priority as f64),
+        knum("batches_quota", r.batches_quota as f64),
+        knum("batches_done", r.batches_done as f64),
+        knum("rounds", r.rounds as f64),
+        knum("preemptions", r.preemptions as f64),
+        knum("replica_swaps", r.replica_swaps as f64),
+        knum("bytes_up", r.bytes_up as f64),
+        knum("bytes_down", r.bytes_down as f64),
+        knum("dense_state_bytes", r.dense_state_bytes as f64),
+        knum("adapter_savings", r.adapter_savings),
+        knum("step_ms_p50", r.step_ms_p50),
+        knum("step_ms_p99", r.step_ms_p99),
+        knum("final_train_loss", r.final_train_loss),
+        knum("test_top1", r.test_top1),
+        knum("test_loss", r.test_loss),
+        knum("wall_ms", r.wall_ms),
+    ]);
+    obj(pairs)
+}

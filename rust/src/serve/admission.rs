@@ -1,0 +1,179 @@
+//! Round-based admission control: multiple-knapsack over live replica
+//! capacity.
+//!
+//! Each service round, every waiting job (queued, preempted, or between
+//! rounds) becomes a knapsack *item* whose weight is the micro-steps its
+//! next round would cost, and every live replica is a *bin* whose
+//! capacity is the per-round micro-step allowance. Bins are solved in
+//! replica order with [`crate::schedule::knapsack::knapsack_01`] — the
+//! same exact solver the D2FT scheduler uses per device, reused at the
+//! job granularity. Values encode priority-then-FIFO: a higher-priority
+//! job always outranks a lower one, and ties break by submission
+//! sequence, so the plan is a pure function of its inputs and two
+//! services fed the same submissions admit identically.
+
+use crate::schedule::knapsack::knapsack_01;
+
+/// One admission candidate: a job with work remaining.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    /// Job id (the service's key for the admitted round).
+    pub job_id: u64,
+    /// Submission sequence number (FIFO tie-break; unique per job).
+    pub seq: u64,
+    /// Admission priority (higher wins).
+    pub priority: u32,
+    /// Micro-steps the job's next round costs.
+    pub micros: usize,
+    /// Whether the job ran in the previous round (losing admission
+    /// while `running` is a preemption, not a mere wait).
+    pub running: bool,
+}
+
+/// One replica's capacity this round.
+#[derive(Clone, Copy, Debug)]
+pub struct Bin {
+    /// Replica index the admitted jobs are dispatched to.
+    pub replica: usize,
+    /// Micro-steps this replica can absorb this round.
+    pub capacity_micros: usize,
+}
+
+/// The admission decision for one round.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RoundPlan {
+    /// `(job_id, replica)` assignments, in bin order then knapsack
+    /// pick order — the dispatch order the server uses verbatim.
+    pub admitted: Vec<(u64, usize)>,
+    /// Previously-running jobs that lost admission this round.
+    pub preempted: Vec<u64>,
+    /// Jobs whose single-round cost exceeds every bin outright — they
+    /// can never run on this fleet and should be failed, not starved.
+    pub oversized: Vec<u64>,
+}
+
+/// Priority-then-FIFO knapsack value: one priority step dominates any
+/// sequence-number difference, and among equal priorities an earlier
+/// submission is strictly more valuable.
+fn value_of(c: &Candidate) -> f64 {
+    c.priority as f64 * 1e9 + (1e9 - c.seq.min(999_999_999) as f64)
+}
+
+/// Solve one round of admissions. Pure and deterministic: no clocks, no
+/// randomness — the plan depends only on `candidates` and `bins`.
+pub fn plan_round(candidates: &[Candidate], bins: &[Bin]) -> RoundPlan {
+    let max_capacity = bins.iter().map(|b| b.capacity_micros).max().unwrap_or(0);
+    let mut plan = RoundPlan::default();
+    let mut remaining: Vec<Candidate> = Vec::with_capacity(candidates.len());
+    for c in candidates {
+        if c.micros > max_capacity {
+            plan.oversized.push(c.job_id);
+        } else {
+            remaining.push(*c);
+        }
+    }
+    for bin in bins {
+        if remaining.is_empty() {
+            break;
+        }
+        let values: Vec<f64> = remaining.iter().map(value_of).collect();
+        let weights: Vec<usize> = remaining.iter().map(|c| c.micros).collect();
+        let (_, picks) = knapsack_01(&values, &weights, bin.capacity_micros);
+        let mut kept = Vec::with_capacity(remaining.len());
+        for (c, picked) in remaining.into_iter().zip(picks) {
+            if picked {
+                plan.admitted.push((c.job_id, bin.replica));
+            } else {
+                kept.push(c);
+            }
+        }
+        remaining = kept;
+    }
+    for c in remaining {
+        if c.running {
+            plan.preempted.push(c.job_id);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(job_id: u64, seq: u64, priority: u32, micros: usize) -> Candidate {
+        Candidate { job_id, seq, priority, micros, running: false }
+    }
+
+    fn bins(caps: &[usize]) -> Vec<Bin> {
+        caps.iter()
+            .enumerate()
+            .map(|(replica, &capacity_micros)| Bin { replica, capacity_micros })
+            .collect()
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_not_starved() {
+        // A job demanding more micro-steps than any replica offers can
+        // never be admitted — it must surface as oversized.
+        let plan = plan_round(&[cand(1, 0, 5, 10), cand(2, 1, 1, 4)], &bins(&[4, 4]));
+        assert_eq!(plan.oversized, vec![1]);
+        assert_eq!(plan.admitted, vec![(2, 0)]);
+        assert!(plan.preempted.is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_bins_admit_nothing() {
+        let mut running = cand(7, 0, 9, 5);
+        running.running = true;
+        let plan = plan_round(&[running, cand(8, 1, 1, 5)], &bins(&[0, 0]));
+        assert!(plan.admitted.is_empty());
+        // Everything is oversized relative to a zero-capacity fleet.
+        assert_eq!(plan.oversized, vec![7, 8]);
+    }
+
+    #[test]
+    fn priority_wins_then_fifo_breaks_ties_deterministically() {
+        // One slot; the high-priority latecomer beats both early
+        // low-priority jobs, regardless of candidate order.
+        let a = cand(1, 0, 1, 5);
+        let b = cand(2, 1, 1, 5);
+        let hi = cand(3, 2, 4, 5);
+        let plan = plan_round(&[a, b, hi], &bins(&[5]));
+        assert_eq!(plan.admitted, vec![(3, 0)]);
+        let plan2 = plan_round(&[hi, b, a], &bins(&[5]));
+        assert_eq!(plan2.admitted, vec![(3, 0)]);
+        // Equal priority: the earlier sequence number wins, stably.
+        let plan3 = plan_round(&[b, a], &bins(&[5]));
+        assert_eq!(plan3.admitted, vec![(1, 0)]);
+        for _ in 0..8 {
+            assert_eq!(plan_round(&[b, a], &bins(&[5])), plan3);
+        }
+    }
+
+    #[test]
+    fn running_job_is_preempted_at_round_boundary_by_priority() {
+        // The running low-priority job loses its slot to a
+        // higher-priority arrival and is reported preempted.
+        let mut low = cand(1, 0, 1, 5);
+        low.running = true;
+        let hi = cand(2, 1, 8, 5);
+        let plan = plan_round(&[low, hi], &bins(&[5]));
+        assert_eq!(plan.admitted, vec![(2, 0)]);
+        assert_eq!(plan.preempted, vec![1]);
+        // With capacity for both there is no preemption.
+        let plan2 = plan_round(&[low, hi], &bins(&[5, 5]));
+        assert_eq!(plan2.admitted.len(), 2);
+        assert!(plan2.preempted.is_empty());
+    }
+
+    #[test]
+    fn one_bin_can_pack_multiple_small_jobs() {
+        let plan = plan_round(
+            &[cand(1, 0, 1, 3), cand(2, 1, 1, 3), cand(3, 2, 1, 3)],
+            &bins(&[6]),
+        );
+        assert_eq!(plan.admitted.len(), 2);
+        assert!(plan.admitted.iter().all(|&(_, r)| r == 0));
+    }
+}

@@ -1,0 +1,32 @@
+//! Multi-tenant LoRA fine-tuning service over the dist transport.
+//!
+//! The serving claim this layer demonstrates: because D2FT fine-tunes
+//! LoRA adapters under per-head mask schedules — the dense base model
+//! is frozen — one resident replica fleet can time-multiplex many
+//! tenants by hot-swapping only adapter + mask state between rounds.
+//! Three pieces:
+//!
+//! - [`admission`]: the round-based admission controller. Live
+//!   replicas are knapsack bins, tenant jobs are items (priority-then-
+//!   FIFO values), solved per round with the scheduler's own
+//!   `knapsack_01` — a pure, deterministic plan.
+//! - [`replica`]: the worker loop. Keeps one backend resident per
+//!   `(model, rank, seed)`, installs a tenant's adapter state, runs its
+//!   admitted batch range bit-deterministically from the `JobSpec`, and
+//!   ships trained state back.
+//! - [`server`]: the job queue, scheduler thread, per-tenant metering,
+//!   and the newline-JSON control plane behind `repro serve` /
+//!   `repro job`.
+//!
+//! A [`crate::config::JobSpec`] enters via [`ServerHandle::submit`] (or
+//! the control plane), moves Queued → Running ⇄ Preempted → Completed /
+//! Failed, and exits as a [`crate::report::JobReport`] whose byte
+//! meters quantify the adapter-vs-dense traffic savings.
+
+pub mod admission;
+pub mod replica;
+pub mod server;
+
+pub use admission::{plan_round, Bin, Candidate, RoundPlan};
+pub use replica::run_replica;
+pub use server::{serve, JobState, ServeConfig, ServerHandle};

@@ -1,0 +1,356 @@
+//! The replica side of the multi-tenant service: one long-lived worker
+//! process (or thread) that keeps *base* model state resident and
+//! hot-swaps per-tenant LoRA adapter state between rounds.
+//!
+//! A replica owns one [`NativeBackend`] per `(model, lora_rank, seed)`
+//! combination it has served — the frozen base parameters and the
+//! momentum slots of non-trainable tensors never change under LoRA
+//! fine-tuning (the optimizer skips frozen slots entirely), so swapping
+//! a tenant in is exactly: install its trainable params + momentum,
+//! run its batches, export trainable state back. Only adapter-sized
+//! blobs ever cross the wire; the dense base never moves after replica
+//! start. That is the serving-side payoff of the paper's LoRA + partial
+//! (mask-scheduled) fine-tuning: many tenants multiplex one resident
+//! model.
+//!
+//! Determinism contract: a job's arithmetic is a pure function of its
+//! `JobSpec`. The replica rebuilds datasets, batch order, the pretrain
+//! trajectory, and (on the fresh round) the probe → score → schedule
+//! pipeline from the spec alone, and the F32 dense codec round-trips
+//! state bit-exactly — so a job sliced into rounds across replicas
+//! produces *bitwise* the same adapter as the same spec run in one
+//! uninterrupted pass. `tests/serve.rs` pins this.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::native::{NativeBackend, NativeSpec};
+use crate::backend::Backend;
+use crate::config::JobSpec;
+use crate::coordinator::{build_scheduler, prepare_run, TrainerConfig};
+use crate::data::{Batcher, Dataset};
+use crate::dist::grads::GradCodec;
+use crate::dist::proto::{self, JobDoneMsg, JobRoundMsg};
+use crate::dist::transport::Transport;
+use crate::metrics::Meter;
+use crate::partition::Partition;
+use crate::schedule::MaskPair;
+use crate::scores::ScoreBook;
+use crate::tensor::Tensor;
+
+/// One resident backend: base params stay put, tenants swap through.
+struct Slot {
+    backend: NativeBackend,
+    codec: GradCodec,
+    /// Trainable state exactly as constructed — the start line every
+    /// fresh job round is reset to before its own pretraining.
+    pristine_params: Vec<Tensor>,
+    pristine_momentum: Vec<Tensor>,
+    /// Full-model params + momentum in f32 bytes: the dense baseline a
+    /// non-LoRA swap would ship, reported for the metering denominator.
+    dense_state_bytes: u64,
+}
+
+/// Per-job reusable setup (partition + generated datasets), rebuilt
+/// deterministically from the spec and cached across the job's rounds.
+struct JobData {
+    cfg: TrainerConfig,
+    partition: Partition,
+    train: Dataset,
+    test: Dataset,
+}
+
+/// Replica-resident state across rounds: backend slots keyed by
+/// `(model, lora_rank, seed)` and job setup keyed by job id.
+#[derive(Default)]
+struct ReplicaState {
+    slots: HashMap<(String, usize, u64), Slot>,
+    data: HashMap<u64, JobData>,
+}
+
+impl ReplicaState {
+    fn slot_for(&mut self, spec: &JobSpec, lora_rank: usize) -> Result<&mut Slot> {
+        let key = (spec.model.to_ascii_lowercase(), lora_rank, spec.seed);
+        if !self.slots.contains_key(&key) {
+            let nspec = NativeSpec::preset(&spec.model)?;
+            anyhow::ensure!(
+                nspec.lora_ranks.contains(&lora_rank),
+                "lora rank {lora_rank} not in the {:?} preset's supported set {:?}",
+                spec.model,
+                nspec.lora_ranks
+            );
+            let backend = NativeBackend::new(&nspec, lora_rank, nspec.micro_batch, spec.seed);
+            let codec = GradCodec::new(&backend);
+            let (pristine_params, pristine_momentum) = backend.export_trainable();
+            let elems: u64 =
+                (0..backend.n_param_tensors()).map(|i| backend.param_elems(i) as u64).sum();
+            let dense_state_bytes = elems * 4 * 2;
+            self.slots.insert(
+                key.clone(),
+                Slot { backend, codec, pristine_params, pristine_momentum, dense_state_bytes },
+            );
+        }
+        Ok(self.slots.get_mut(&key).unwrap())
+    }
+
+    fn data_for(&mut self, job_id: u64, spec: &JobSpec, mc_slot: &Slot) -> Result<&JobData> {
+        if !self.data.contains_key(&job_id) {
+            let cfg = spec.to_trainer_config()?;
+            let setup = prepare_run(mc_slot.backend.config(), &cfg)?;
+            self.data.insert(
+                job_id,
+                JobData { cfg, partition: setup.partition, train: setup.train, test: setup.test },
+            );
+        }
+        Ok(self.data.get(&job_id).unwrap())
+    }
+
+    /// Execute one admitted round, converting any failure into an
+    /// `ok: false` reply — a bad spec must fail *that job*, never the
+    /// replica loop serving every other tenant.
+    fn run_round(&mut self, msg: &JobRoundMsg) -> JobDoneMsg {
+        match self.try_round(msg) {
+            Ok(done) => done,
+            Err(e) => JobDoneMsg {
+                job_id: msg.job_id,
+                ok: false,
+                error: format!("{e:#}"),
+                batches_done: 0,
+                losses: Vec::new(),
+                n_correct: 0,
+                n_seen: 0,
+                step_ms: Vec::new(),
+                masks: Vec::new(),
+                params: Vec::new(),
+                momentum: Vec::new(),
+                dense_state_bytes: 0,
+                test_top1: -1.0,
+                test_loss: -1.0,
+            },
+        }
+    }
+
+    fn try_round(&mut self, msg: &JobRoundMsg) -> Result<JobDoneMsg> {
+        let spec = JobSpec::parse(&msg.spec_json)?;
+        anyhow::ensure!(
+            spec.lora_rank == msg.lora_rank,
+            "frame lora rank {} disagrees with spec rank {}",
+            msg.lora_rank,
+            spec.lora_rank
+        );
+        // Split the borrow: take the slot out, run, put it back — the
+        // round needs the slot mutably and the data cache immutably.
+        let key = {
+            let _ = self.slot_for(&spec, msg.lora_rank)?;
+            (spec.model.to_ascii_lowercase(), msg.lora_rank, spec.seed)
+        };
+        let mut slot = self.slots.remove(&key).unwrap();
+        let result = self.round_on_slot(&mut slot, msg, &spec);
+        self.slots.insert(key, slot);
+        if msg.finalize && result.as_ref().map(|d| d.ok).unwrap_or(false) {
+            self.data.remove(&msg.job_id);
+        }
+        result
+    }
+
+    fn round_on_slot(
+        &mut self,
+        slot: &mut Slot,
+        msg: &JobRoundMsg,
+        spec: &JobSpec,
+    ) -> Result<JobDoneMsg> {
+        self.data_for(msg.job_id, spec, slot)?;
+        let data = self.data.get(&msg.job_id).unwrap();
+        let cfg = &data.cfg;
+        let mb = slot.backend.micro_batch();
+        let micros_per_batch = cfg.micros_per_batch;
+
+        // --- install state -------------------------------------------------
+        let masks: Vec<MaskPair>;
+        if msg.fresh {
+            slot.backend.import_trainable(&slot.pristine_params, &slot.pristine_momentum)?;
+            pretrain(&mut slot.backend, cfg)?;
+            masks = solve_schedule(&mut slot.backend, cfg, &data.partition, &data.train)?;
+        } else {
+            anyhow::ensure!(
+                msg.masks.len() == micros_per_batch,
+                "resumed round carries {} masks for {} micro-batches",
+                msg.masks.len(),
+                micros_per_batch
+            );
+            let params = slot.codec.decode_dense(&msg.params)?;
+            let momentum = slot.codec.decode_dense(&msg.momentum)?;
+            slot.backend.import_trainable(&params, &momentum)?;
+            masks = msg.masks.clone();
+        }
+
+        // --- run the admitted batch range ----------------------------------
+        let end = msg.start_batch + msg.n_batches;
+        let mut g = 0usize;
+        let mut losses = Vec::new();
+        let mut step_ms = Vec::new();
+        let mut n_correct = 0u64;
+        let mut n_seen = 0u64;
+        let mut batches_done = 0usize;
+        'outer: while g < end {
+            // Same order every epoch — identical to the serial Trainer's
+            // epoch loop, which is what makes round-sliced ≡ one-pass.
+            let mut batcher = Batcher::new(&data.train, mb, micros_per_batch, cfg.seed);
+            let mut any = false;
+            while let Some(micros) = batcher.next_batch() {
+                any = true;
+                if g >= end {
+                    break 'outer;
+                }
+                if g >= msg.start_batch {
+                    let t0 = Instant::now();
+                    for ((x, y), m) in micros.iter().zip(&masks) {
+                        let out = slot.backend.step(x, y, m, cfg.lr)?;
+                        losses.push(out.loss);
+                        n_correct += out.n_correct as u64;
+                        n_seen += mb as u64;
+                    }
+                    step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    batches_done += 1;
+                }
+                g += 1;
+            }
+            anyhow::ensure!(
+                any,
+                "train split yields zero full batches \
+                 ({} examples < {} micro-batch x {} micros)",
+                data.train.len(),
+                mb,
+                micros_per_batch
+            );
+        }
+
+        // --- finalize + export ---------------------------------------------
+        let (test_top1, test_loss) = if msg.finalize {
+            evaluate(&slot.backend, &data.test)?
+        } else {
+            (-1.0, -1.0)
+        };
+        let (params, momentum) = slot.backend.export_trainable();
+        Ok(JobDoneMsg {
+            job_id: msg.job_id,
+            ok: true,
+            error: String::new(),
+            batches_done,
+            losses,
+            n_correct,
+            n_seen,
+            step_ms,
+            masks,
+            params: slot.codec.encode_dense(&params),
+            momentum: slot.codec.encode_dense(&momentum),
+            dense_state_bytes: slot.dense_state_bytes,
+            test_top1,
+            test_loss,
+        })
+    }
+}
+
+/// Synthetic pre-training from the pristine snapshot — mirrors the
+/// serial `Trainer::pretrain` exactly (same dataset seed offset, ones
+/// masks, per-micro updates, momentum reset at the boundary).
+fn pretrain(backend: &mut NativeBackend, cfg: &TrainerConfig) -> Result<()> {
+    if cfg.pretrain_batches == 0 {
+        return Ok(());
+    }
+    let (img, depth, heads) = {
+        let mc = backend.config();
+        (mc.img_size, mc.depth, mc.heads)
+    };
+    let mb = backend.micro_batch();
+    let n = cfg.pretrain_batches * cfg.micros_per_batch * mb;
+    let pre = crate::data::DatasetSpec::preset(
+        crate::data::SyntheticKind::Pretrain,
+        img,
+        n,
+        cfg.seed ^ 0x5A,
+    )
+    .generate("train");
+    let mut batcher = Batcher::new(&pre, mb, cfg.micros_per_batch, cfg.seed);
+    let ones = MaskPair::ones(depth, heads);
+    while let Some(micros) = batcher.next_batch() {
+        for (x, y) in &micros {
+            backend.step(x, y, &ones, cfg.lr)?;
+        }
+    }
+    backend.reset_momentum()
+}
+
+/// The select-once schedule solve of a fresh round: probe the first
+/// fine-tuning batch, build the score book, run the spec's scheduler
+/// once, and freeze the per-micro masks for the job's lifetime (the
+/// paper computes contribution scores once before fine-tuning, §II-A3).
+fn solve_schedule(
+    backend: &mut NativeBackend,
+    cfg: &TrainerConfig,
+    partition: &Partition,
+    train: &Dataset,
+) -> Result<Vec<MaskPair>> {
+    let mb = backend.micro_batch();
+    let mut batcher = Batcher::new(train, mb, cfg.micros_per_batch, cfg.seed);
+    let micros = batcher.next_batch().ok_or_else(|| {
+        anyhow::anyhow!(
+            "train split yields zero full batches ({} examples < {} x {})",
+            train.len(),
+            mb,
+            cfg.micros_per_batch
+        )
+    })?;
+    let mut scheduler = build_scheduler(cfg.scheduler, cfg.scores, cfg.seed);
+    let book = if scheduler.needs_scores() {
+        let probes: Vec<Tensor> =
+            micros.iter().map(|(x, y)| backend.score_probe(x, y)).collect::<Result<_>>()?;
+        ScoreBook::from_probes(partition, &probes)
+    } else {
+        ScoreBook::zeros(partition.n_subnets(), micros.len())
+    };
+    let table = scheduler.schedule(&book, &cfg.budget);
+    Ok((0..micros.len()).map(|i| table.masks_for_micro(partition, i)).collect())
+}
+
+/// Full-forward evaluation over the job's test split (mirrors the
+/// serial `Trainer::evaluate`).
+fn evaluate(backend: &NativeBackend, test: &Dataset) -> Result<(f64, f64)> {
+    let mb = backend.eval_micro_batch();
+    let mut meter = Meter::new();
+    let mut i = 0;
+    while i + mb <= test.len() {
+        let idxs: Vec<usize> = (i..i + mb).collect();
+        let (x, y) = test.gather(&idxs);
+        let out = backend.eval(&x, &y, None)?;
+        meter.push(out.loss, out.n_correct, mb);
+        i += mb;
+    }
+    Ok((meter.top1(), meter.mean_loss()))
+}
+
+/// Serve one link until shutdown: decode each admitted round, run it,
+/// reply with a [`JobDoneMsg`]. The server may pack several rounds onto
+/// this replica back-to-back (one frame per job, in dispatch order);
+/// they execute sequentially in frame order. Returns on a clean
+/// [`proto::TAG_SHUTDOWN`]; errors out on link failure or protocol
+/// desync — job-level failures travel inside the reply instead.
+pub fn run_replica(mut transport: Box<dyn Transport>) -> Result<()> {
+    let mut state = ReplicaState::default();
+    loop {
+        let frame = transport.recv_blob()?;
+        match proto::peek_tag(&frame)? {
+            proto::TAG_JOB_ROUND => {
+                let msg = proto::decode_job_round(&frame)?;
+                let done = state.run_round(&msg);
+                let mut out = Vec::new();
+                proto::encode_job_done(&done, &mut out);
+                transport.send_blob(out)?;
+            }
+            proto::TAG_SHUTDOWN => return Ok(()),
+            other => anyhow::bail!("replica got unexpected frame tag {other:#x}"),
+        }
+    }
+}

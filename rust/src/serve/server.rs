@@ -1,0 +1,882 @@
+//! The service side of multi-tenant fine-tuning: a job queue, the
+//! round-based admission scheduler, replica link management, and the
+//! per-tenant metering report.
+//!
+//! Lifecycle of a job: `submit` validates the [`JobSpec`] against the
+//! fleet (model preset, adapter rank, tenant cap) and queues it; every
+//! service *round* the admission controller packs waiting jobs onto
+//! live replicas ([`crate::serve::admission::plan_round`] — devices are
+//! bins, tenant jobs are items); admitted jobs get a tenant-tagged
+//! `JobRound` frame carrying only their adapter + mask state (hot-swap
+//! — the resident base model never moves); the replies fold trained
+//! state, losses, and step latencies back into the job record. A job
+//! that loses its slot to a higher-priority arrival is *preempted* at
+//! the round boundary — its state lives in the server between rounds,
+//! so resumption is exact. `Completed` / `Failed` are terminal and wake
+//! every waiter.
+//!
+//! Everything the service meters per tenant — frame bytes up/down
+//! against the dense full-state baseline, hot-swap counts, step-latency
+//! percentiles — lands in a [`JobReport`] and the aggregate
+//! [`ServerHandle::report_json`] artifact the CI smoke step inspects.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::backend::native::NativeSpec;
+use crate::config::JobSpec;
+use crate::dist::grads::BufPool;
+use crate::dist::proto::{self, JobDoneMsg, JobRoundMsg};
+use crate::dist::transport::{self, TcpTransport, Transport};
+use crate::obs::metrics::Registry;
+use crate::report::{job_report_json, JobReport};
+use crate::schedule::MaskPair;
+use crate::serve::admission::{plan_round, Bin, Candidate};
+use crate::serve::replica::run_replica;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::{info, warn_};
+
+/// How the service runs (see `repro serve`). Plain data — construct,
+/// adjust fields, pass to [`serve`].
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Model preset every replica keeps resident (`mini|tiny|small`);
+    /// submissions naming a different preset are rejected.
+    pub model: String,
+    /// Replicas (worker backends) to run.
+    pub workers: usize,
+    /// Cap on *distinct* tenants with non-terminal jobs at once.
+    pub max_tenants: usize,
+    /// Max fine-tuning batches one admitted round runs per job.
+    pub round_batches: usize,
+    /// Per-replica micro-step capacity per round (the knapsack bin
+    /// size; a job whose single batch exceeds this can never run).
+    pub round_micros: usize,
+    /// Route replica links over real TCP sockets (loopback) instead of
+    /// in-process channels — same bytes, real wire.
+    pub tcp: bool,
+    /// Control-plane listen address (e.g. `127.0.0.1:0`); `None` runs
+    /// without a TCP control plane (library/API use only).
+    pub control: Option<String>,
+    /// Metrics registry for per-tenant byte counters and step-latency
+    /// histograms; `None` meters into the job records only.
+    pub metrics: Option<Arc<Registry>>,
+}
+
+impl ServeConfig {
+    /// Defaults: `tiny` model, 2 replicas, 4 tenants, 4-batch rounds
+    /// with a 32-micro-step bin, in-process channel links, no control
+    /// plane, no registry.
+    pub fn new() -> ServeConfig {
+        ServeConfig {
+            model: "tiny".to_string(),
+            workers: 2,
+            max_tenants: 4,
+            round_batches: 4,
+            round_micros: 32,
+            tcp: false,
+            control: None,
+            metrics: None,
+        }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Where a job is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for first admission.
+    Queued,
+    /// Admitted this round (or holding state between rounds).
+    Running,
+    /// Lost its slot to admission; resumes exactly where it stopped.
+    Preempted,
+    /// Step quota reached; final evaluation done. Terminal.
+    Completed,
+    /// Rejected, oversized, or broken (spec error, dead replica).
+    /// Terminal; see the report's `error`.
+    Failed,
+}
+
+impl JobState {
+    /// Report label (`queued` / `running` / ...).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Preempted => "preempted",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Whether the job still wants admission.
+    fn active(&self) -> bool {
+        matches!(self, JobState::Queued | JobState::Running | JobState::Preempted)
+    }
+}
+
+/// Everything the server holds for one job between rounds.
+struct Job {
+    id: u64,
+    seq: u64,
+    spec: JobSpec,
+    spec_json: String,
+    state: JobState,
+    error: String,
+    batches_done: usize,
+    rounds: usize,
+    preemptions: usize,
+    swaps: usize,
+    bytes_up: u64,
+    bytes_down: u64,
+    dense_state_bytes: u64,
+    losses: Vec<f32>,
+    step_ms: Vec<f64>,
+    masks: Vec<MaskPair>,
+    params: Vec<u8>,
+    momentum: Vec<u8>,
+    test_top1: f64,
+    test_loss: f64,
+    submitted: Instant,
+    wall_ms: f64,
+}
+
+/// Mutex-guarded server state.
+struct Shared {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+/// The server core shared by the API handle, the scheduler thread, and
+/// the control plane.
+struct Inner {
+    state: Mutex<Shared>,
+    cv: Condvar,
+    cfg: ServeConfig,
+    /// Replica micro-batch size (from the model preset) — submit-time
+    /// dataset validation needs it.
+    micro_batch: usize,
+}
+
+impl Inner {
+    fn submit(&self, spec: &JobSpec) -> Result<u64> {
+        spec.validate()?;
+        anyhow::ensure!(
+            spec.model.eq_ignore_ascii_case(&self.cfg.model),
+            "this service hosts the {:?} preset; job asks for {:?}",
+            self.cfg.model,
+            spec.model
+        );
+        anyhow::ensure!(
+            spec.lora_rank >= 1,
+            "rank 0 is full fine-tuning — the service multiplexes LoRA adapters \
+             (pick a rank from the model's supported set)"
+        );
+        anyhow::ensure!(
+            spec.train_size >= self.micro_batch * spec.micros_per_batch,
+            "train_size {} yields zero full batches ({} micro-batch x {} micros)",
+            spec.train_size,
+            self.micro_batch,
+            spec.micros_per_batch
+        );
+        let mut st = self.state.lock().expect("serve state lock");
+        anyhow::ensure!(!st.shutdown, "service is shutting down");
+        let active_tenants: std::collections::BTreeSet<&str> = st
+            .jobs
+            .values()
+            .filter(|j| j.state.active())
+            .map(|j| j.spec.tenant.as_str())
+            .collect();
+        anyhow::ensure!(
+            active_tenants.contains(spec.tenant.as_str())
+                || active_tenants.len() < self.cfg.max_tenants,
+            "tenant cap reached ({} active, max {})",
+            active_tenants.len(),
+            self.cfg.max_tenants
+        );
+        let id = st.next_id;
+        st.next_id += 1;
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.jobs.insert(
+            id,
+            Job {
+                id,
+                seq,
+                spec: spec.clone(),
+                spec_json: spec.to_json().to_string_compact(),
+                state: JobState::Queued,
+                error: String::new(),
+                batches_done: 0,
+                rounds: 0,
+                preemptions: 0,
+                swaps: 0,
+                bytes_up: 0,
+                bytes_down: 0,
+                dense_state_bytes: 0,
+                losses: Vec::new(),
+                step_ms: Vec::new(),
+                masks: Vec::new(),
+                params: Vec::new(),
+                momentum: Vec::new(),
+                test_top1: -1.0,
+                test_loss: -1.0,
+                submitted: Instant::now(),
+                wall_ms: 0.0,
+            },
+        );
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    fn report(&self, id: u64) -> Option<JobReport> {
+        let st = self.state.lock().expect("serve state lock");
+        st.jobs.get(&id).map(job_report)
+    }
+
+    fn wait(&self, id: u64, timeout: Duration) -> Result<JobReport> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("serve state lock");
+        loop {
+            match st.jobs.get(&id) {
+                None => anyhow::bail!("no such job {id}"),
+                Some(j) if !j.state.active() => return Ok(job_report(j)),
+                Some(_) => {}
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            anyhow::ensure!(!left.is_zero(), "timed out waiting for job {id}");
+            let (guard, _) = self.cv.wait_timeout(st, left).expect("serve state lock");
+            st = guard;
+        }
+    }
+
+    fn final_state(&self, id: u64) -> Option<(Vec<u8>, Vec<u8>)> {
+        let st = self.state.lock().expect("serve state lock");
+        st.jobs
+            .get(&id)
+            .filter(|j| j.state == JobState::Completed)
+            .map(|j| (j.params.clone(), j.momentum.clone()))
+    }
+
+    fn report_json(&self) -> Json {
+        let st = self.state.lock().expect("serve state lock");
+        let jobs: Vec<Json> =
+            st.jobs.values().map(|j| job_report_json(&job_report(j))).collect();
+        let mut tenants: BTreeMap<&str, (u64, u64, usize)> = BTreeMap::new();
+        for j in st.jobs.values() {
+            let e = tenants.entry(j.spec.tenant.as_str()).or_default();
+            e.0 += j.bytes_up;
+            e.1 += j.bytes_down;
+            e.2 += 1;
+        }
+        let tenants: Vec<Json> = tenants
+            .into_iter()
+            .map(|(t, (up, down, n))| {
+                obj(vec![
+                    ("tenant", s(t)),
+                    ("bytes_up", num(up as f64)),
+                    ("bytes_down", num(down as f64)),
+                    ("jobs", num(n as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("model", s(&self.cfg.model)),
+            ("workers", num(self.cfg.workers as f64)),
+            ("jobs", arr(jobs)),
+            ("tenants", arr(tenants)),
+        ])
+    }
+
+    fn request_shutdown(&self) {
+        let mut st = self.state.lock().expect("serve state lock");
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    fn shutdown_requested(&self) -> bool {
+        self.state.lock().expect("serve state lock").shutdown
+    }
+
+    /// Fail every non-terminal job with `why` (fleet gone, shutdown).
+    fn fail_active(&self, why: &str) {
+        let mut st = self.state.lock().expect("serve state lock");
+        for j in st.jobs.values_mut() {
+            if j.state.active() {
+                j.state = JobState::Failed;
+                j.error = why.to_string();
+                j.wall_ms = j.submitted.elapsed().as_secs_f64() * 1e3;
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Batches the job's next admitted round would run: bounded by its
+/// remaining quota, the round cap, and what fits one bin.
+fn round_len(job: &Job, cfg: &ServeConfig) -> usize {
+    let remaining = job.spec.batches.saturating_sub(job.batches_done);
+    let fits_bin = cfg.round_micros / job.spec.micros_per_batch.max(1);
+    remaining.min(cfg.round_batches).min(fits_bin)
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn job_report(j: &Job) -> JobReport {
+    let mut sorted = j.step_ms.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite step latencies"));
+    let moved = (j.bytes_up + j.bytes_down) as f64;
+    let dense = 2.0 * j.rounds as f64 * j.dense_state_bytes as f64;
+    let adapter_savings =
+        if dense > 0.0 { (1.0 - moved / dense).max(0.0) } else { 0.0 };
+    let final_train_loss = if j.losses.is_empty() {
+        0.0
+    } else {
+        j.losses.iter().map(|&l| l as f64).sum::<f64>() / j.losses.len() as f64
+    };
+    let wall_ms = if j.state.active() {
+        j.submitted.elapsed().as_secs_f64() * 1e3
+    } else {
+        j.wall_ms
+    };
+    JobReport {
+        job_id: j.id,
+        tenant: j.spec.tenant.clone(),
+        state: j.state.label().to_string(),
+        error: j.error.clone(),
+        lora_rank: j.spec.lora_rank,
+        priority: j.spec.priority,
+        batches_quota: j.spec.batches,
+        batches_done: j.batches_done,
+        rounds: j.rounds,
+        preemptions: j.preemptions,
+        replica_swaps: j.swaps,
+        bytes_up: j.bytes_up,
+        bytes_down: j.bytes_down,
+        dense_state_bytes: j.dense_state_bytes,
+        adapter_savings,
+        step_ms_p50: pct(&sorted, 0.50),
+        step_ms_p99: pct(&sorted, 0.99),
+        final_train_loss,
+        test_top1: j.test_top1,
+        test_loss: j.test_loss,
+        wall_ms,
+    }
+}
+
+/// Metric-name-safe tenant id (the registry has no label support, so
+/// per-tenant series are name-mangled).
+fn sanitize(tenant: &str) -> String {
+    tenant
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// One frame headed to one replica this round.
+struct Dispatch {
+    job_id: u64,
+    replica: usize,
+    frame: Vec<u8>,
+}
+
+/// The admission/dispatch loop (one thread). Owns the replica links.
+fn scheduler_loop(inner: Arc<Inner>, mut links: Vec<Option<Box<dyn Transport>>>) {
+    loop {
+        // --- gather this round's candidates --------------------------------
+        let (cands, shutdown) = {
+            let st = inner.state.lock().expect("serve state lock");
+            let cands: Vec<Candidate> = st
+                .jobs
+                .values()
+                .filter(|j| j.state.active())
+                .map(|j| Candidate {
+                    job_id: j.id,
+                    seq: j.seq,
+                    priority: j.spec.priority,
+                    micros: j.spec.micros_per_batch * round_len(j, &inner.cfg).max(1),
+                    running: j.state == JobState::Running,
+                })
+                .collect();
+            (cands, st.shutdown)
+        };
+        if shutdown {
+            if !cands.is_empty() {
+                inner.fail_active("service shut down before the job finished");
+            }
+            break;
+        }
+        if cands.is_empty() {
+            let st = inner.state.lock().expect("serve state lock");
+            let _ = inner.cv.wait_timeout(st, Duration::from_millis(50));
+            continue;
+        }
+        let bins: Vec<Bin> = links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_some())
+            .map(|(replica, _)| Bin { replica, capacity_micros: inner.cfg.round_micros })
+            .collect();
+        if bins.is_empty() {
+            inner.fail_active("every replica link is dead");
+            break;
+        }
+        let plan = plan_round(&cands, &bins);
+
+        // --- apply the plan and build the dispatch frames ------------------
+        let mut dispatches: Vec<Dispatch> = Vec::new();
+        {
+            let mut st = inner.state.lock().expect("serve state lock");
+            for id in &plan.oversized {
+                if let Some(j) = st.jobs.get_mut(id) {
+                    j.state = JobState::Failed;
+                    j.error = format!(
+                        "one batch of {} micro-steps exceeds the {}-micro-step \
+                         round capacity of every replica",
+                        j.spec.micros_per_batch, inner.cfg.round_micros
+                    );
+                    j.wall_ms = j.submitted.elapsed().as_secs_f64() * 1e3;
+                }
+            }
+            for id in &plan.preempted {
+                if let Some(j) = st.jobs.get_mut(id) {
+                    j.state = JobState::Preempted;
+                    j.preemptions += 1;
+                }
+            }
+            for &(id, replica) in &plan.admitted {
+                let j = st.jobs.get_mut(&id).expect("admitted job exists");
+                let n_batches = round_len(j, &inner.cfg);
+                let fresh = j.params.is_empty();
+                let finalize = j.batches_done + n_batches >= j.spec.batches;
+                let msg = JobRoundMsg {
+                    job_id: id,
+                    tenant: j.spec.tenant.clone(),
+                    lora_rank: j.spec.lora_rank,
+                    fresh,
+                    finalize,
+                    start_batch: j.batches_done,
+                    n_batches,
+                    spec_json: j.spec_json.clone(),
+                    masks: if fresh { Vec::new() } else { j.masks.clone() },
+                    params: if fresh { Vec::new() } else { j.params.clone() },
+                    momentum: if fresh { Vec::new() } else { j.momentum.clone() },
+                };
+                let mut frame = Vec::new();
+                proto::encode_job_round(&msg, &mut frame);
+                j.state = JobState::Running;
+                j.rounds += 1;
+                j.swaps += 1;
+                j.bytes_up += frame.len() as u64;
+                if let Some(reg) = &inner.cfg.metrics {
+                    reg.inc(
+                        &format!("serve_tenant_{}_bytes_up", sanitize(&j.spec.tenant)),
+                        frame.len() as u64,
+                    );
+                    reg.inc("serve_rounds_total", 1);
+                }
+                dispatches.push(Dispatch { job_id: id, replica, frame });
+            }
+            inner.cv.notify_all();
+        }
+        if dispatches.is_empty() {
+            // Plan admitted nothing (all oversized/preempted churn); the
+            // state changes above are the round's only effect.
+            continue;
+        }
+
+        // --- ship all frames, then collect one reply per frame -------------
+        let mut per: Vec<Vec<usize>> = vec![Vec::new(); links.len()];
+        for (di, d) in dispatches.iter().enumerate() {
+            per[d.replica].push(di);
+        }
+        for (r, idxs) in per.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let mut pending = idxs.clone();
+            let mut failed: Option<String> = None;
+            if let Some(link) = links[r].as_mut() {
+                for &di in idxs {
+                    let frame = std::mem::take(&mut dispatches[di].frame);
+                    if let Err(e) = link.send_blob(frame) {
+                        failed = Some(format!("replica {r} link failed on send: {e:#}"));
+                        break;
+                    }
+                }
+                if failed.is_none() {
+                    for &di in idxs {
+                        let reply = match link.recv_blob() {
+                            Ok(b) => b,
+                            Err(e) => {
+                                failed =
+                                    Some(format!("replica {r} link failed on recv: {e:#}"));
+                                break;
+                            }
+                        };
+                        let done = match proto::decode_job_done(&reply) {
+                            Ok(d) => d,
+                            Err(e) => {
+                                failed = Some(format!("replica {r} protocol desync: {e:#}"));
+                                break;
+                            }
+                        };
+                        if done.job_id != dispatches[di].job_id {
+                            failed = Some(format!(
+                                "replica {r} answered job {} out of order (expected {})",
+                                done.job_id, dispatches[di].job_id
+                            ));
+                            break;
+                        }
+                        pending.retain(|&p| p != di);
+                        fold_reply(&inner, &done, reply.len() as u64);
+                    }
+                }
+            }
+            if let Some(why) = failed {
+                warn_!("{why}");
+                links[r] = None;
+                let mut st = inner.state.lock().expect("serve state lock");
+                for &di in &pending {
+                    if let Some(j) = st.jobs.get_mut(&dispatches[di].job_id) {
+                        if j.state.active() {
+                            j.state = JobState::Failed;
+                            j.error = why.clone();
+                            j.wall_ms = j.submitted.elapsed().as_secs_f64() * 1e3;
+                        }
+                    }
+                }
+                inner.cv.notify_all();
+            }
+        }
+    }
+
+    // Drain: clean shutdown frame to every live replica.
+    for link in links.iter_mut().flatten() {
+        let mut f = Vec::new();
+        proto::encode_ctrl(proto::TAG_SHUTDOWN, &mut f);
+        let _ = link.send_blob(f);
+    }
+}
+
+/// Fold one replica reply into its job record.
+fn fold_reply(inner: &Inner, done: &JobDoneMsg, reply_bytes: u64) {
+    if let Some(reg) = &inner.cfg.metrics {
+        for &ms in &done.step_ms {
+            reg.observe("serve_step_ms", ms);
+        }
+    }
+    let mut st = inner.state.lock().expect("serve state lock");
+    let Some(j) = st.jobs.get_mut(&done.job_id) else {
+        return;
+    };
+    j.bytes_down += reply_bytes;
+    if let Some(reg) = &inner.cfg.metrics {
+        reg.inc(
+            &format!("serve_tenant_{}_bytes_down", sanitize(&j.spec.tenant)),
+            reply_bytes,
+        );
+    }
+    if !done.ok {
+        j.state = JobState::Failed;
+        j.error = done.error.clone();
+        j.wall_ms = j.submitted.elapsed().as_secs_f64() * 1e3;
+    } else {
+        j.batches_done += done.batches_done;
+        j.losses.extend_from_slice(&done.losses);
+        j.step_ms.extend_from_slice(&done.step_ms);
+        if j.masks.is_empty() {
+            j.masks = done.masks.clone();
+        }
+        j.params = done.params.clone();
+        j.momentum = done.momentum.clone();
+        j.dense_state_bytes = done.dense_state_bytes;
+        if done.test_top1 >= 0.0 {
+            j.test_top1 = done.test_top1;
+            j.test_loss = done.test_loss;
+        }
+        if j.batches_done >= j.spec.batches {
+            j.state = JobState::Completed;
+            j.wall_ms = j.submitted.elapsed().as_secs_f64() * 1e3;
+        }
+    }
+    inner.cv.notify_all();
+}
+
+/// A running service: submit jobs, await reports, shut down. Dropping
+/// the handle without [`ServerHandle::shutdown`] aborts the process's
+/// replica threads unjoined — call shutdown.
+pub struct ServerHandle {
+    inner: Arc<Inner>,
+    scheduler: Option<JoinHandle<()>>,
+    replicas: Vec<JoinHandle<()>>,
+    control: Option<JoinHandle<()>>,
+    control_addr: Option<String>,
+}
+
+impl ServerHandle {
+    /// Queue a job. Validates the spec against the fleet and the tenant
+    /// cap; returns the job id.
+    pub fn submit(&self, spec: &JobSpec) -> Result<u64> {
+        self.inner.submit(spec)
+    }
+
+    /// Current metering report for a job (`None`: unknown id).
+    pub fn report(&self, id: u64) -> Option<JobReport> {
+        self.inner.report(id)
+    }
+
+    /// Block until the job reaches a terminal state and return its
+    /// report; errors on timeout or unknown id.
+    pub fn wait(&self, id: u64, timeout: Duration) -> Result<JobReport> {
+        self.inner.wait(id, timeout)
+    }
+
+    /// The completed job's trained adapter state `(params, momentum)`
+    /// as codec blobs — the bitwise-isolation probe the tests compare.
+    pub fn final_state(&self, id: u64) -> Option<(Vec<u8>, Vec<u8>)> {
+        self.inner.final_state(id)
+    }
+
+    /// Aggregate service report: every job's report plus per-tenant
+    /// byte totals.
+    pub fn report_json(&self) -> Json {
+        self.inner.report_json()
+    }
+
+    /// Control-plane address when one is listening (pass to
+    /// `repro job --connect`).
+    pub fn control_addr(&self) -> Option<&str> {
+        self.control_addr.as_deref()
+    }
+
+    /// Block until a control-plane client requests shutdown (no-op
+    /// without a control plane).
+    pub fn wait_for_shutdown_request(&mut self) {
+        if let Some(h) = self.control.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the service: drain the scheduler, shut replicas down, join
+    /// every thread. Queued/running jobs that never finished are failed.
+    pub fn shutdown(&mut self) {
+        self.inner.request_shutdown();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        for h in self.replicas.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.control.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start the service: spawn `cfg.workers` replicas (threads over
+/// channel or loopback-TCP links), the admission scheduler, and — when
+/// configured — the TCP control plane.
+pub fn serve(cfg: ServeConfig) -> Result<ServerHandle> {
+    anyhow::ensure!(cfg.workers >= 1, "need at least one replica");
+    anyhow::ensure!(cfg.max_tenants >= 1, "need room for at least one tenant");
+    anyhow::ensure!(cfg.round_batches >= 1, "rounds must run at least one batch");
+    let nspec = NativeSpec::preset(&cfg.model)?;
+    let micro_batch = nspec.micro_batch;
+
+    let mut links: Vec<Option<Box<dyn Transport>>> = Vec::with_capacity(cfg.workers);
+    let mut replicas = Vec::with_capacity(cfg.workers);
+    if cfg.tcp {
+        let (listener, addr) = transport::listen("127.0.0.1:0")?;
+        let addr = addr.to_string();
+        for r in 0..cfg.workers {
+            let addr = addr.clone();
+            replicas.push(std::thread::spawn(move || {
+                let run = || -> Result<()> {
+                    let t = TcpTransport::connect(
+                        &addr,
+                        Duration::from_secs(10),
+                        Arc::new(BufPool::new()),
+                    )?;
+                    run_replica(Box::new(t))
+                };
+                if let Err(e) = run() {
+                    warn_!("replica {r} exited: {e:#}");
+                }
+            }));
+        }
+        let streams = transport::accept_workers(&listener, cfg.workers, Duration::from_secs(10))?;
+        let pool = Arc::new(BufPool::new());
+        for stream in streams {
+            links.push(Some(Box::new(TcpTransport::from_stream(stream, Arc::clone(&pool))?)));
+        }
+    } else {
+        for r in 0..cfg.workers {
+            let (server_end, replica_end) = transport::channel_pair();
+            replicas.push(std::thread::spawn(move || {
+                if let Err(e) = run_replica(Box::new(replica_end)) {
+                    warn_!("replica {r} exited: {e:#}");
+                }
+            }));
+            links.push(Some(Box::new(server_end)));
+        }
+    }
+
+    let inner = Arc::new(Inner {
+        state: Mutex::new(Shared {
+            jobs: BTreeMap::new(),
+            next_id: 1,
+            next_seq: 0,
+            shutdown: false,
+        }),
+        cv: Condvar::new(),
+        cfg: cfg.clone(),
+        micro_batch,
+    });
+
+    let sched_inner = Arc::clone(&inner);
+    let scheduler = std::thread::spawn(move || scheduler_loop(sched_inner, links));
+
+    let (control, control_addr) = match &cfg.control {
+        Some(addr) => {
+            let (listener, bound) = transport::listen(addr)?;
+            let bound = bound.to_string();
+            info!("serve control plane listening on {bound}");
+            let ctrl_inner = Arc::clone(&inner);
+            let h = std::thread::spawn(move || control_loop(ctrl_inner, listener));
+            (Some(h), Some(bound))
+        }
+        None => (None, None),
+    };
+
+    Ok(ServerHandle { inner, scheduler: Some(scheduler), replicas, control, control_addr })
+}
+
+/// Accept control-plane clients until shutdown. One JSON object per
+/// line in, one per line out (`repro job` speaks this).
+fn control_loop(inner: Arc<Inner>, listener: std::net::TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if inner.shutdown_requested() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                if handle_control_conn(&inner, stream) {
+                    // Client asked for shutdown; stop accepting.
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve one control connection; returns true when the client
+/// requested service shutdown.
+fn handle_control_conn(inner: &Inner, stream: TcpStream) -> bool {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return false,
+    };
+    let reader = BufReader::new(stream);
+    let mut wants_shutdown = false;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = control_request(inner, &line, &mut wants_shutdown);
+        let text = reply.to_string_compact();
+        if writer.write_all(text.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+        let _ = writer.flush();
+        if wants_shutdown {
+            break;
+        }
+    }
+    wants_shutdown
+}
+
+fn control_err(e: impl std::fmt::Display) -> Json {
+    obj(vec![("ok", num(0.0)), ("error", s(&format!("{e:#}")))])
+}
+
+/// Dispatch one control-plane request line.
+fn control_request(inner: &Inner, line: &str, wants_shutdown: &mut bool) -> Json {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return control_err(e),
+    };
+    let cmd = match doc.str_at("cmd") {
+        Ok(c) => c,
+        Err(_) => return control_err("request needs a \"cmd\" string"),
+    };
+    match cmd.as_str() {
+        "submit" => {
+            let Some(spec_doc) = doc.opt("spec") else {
+                return control_err("submit needs a \"spec\" object");
+            };
+            match JobSpec::from_json(spec_doc).and_then(|spec| inner.submit(&spec)) {
+                Ok(id) => obj(vec![("ok", num(1.0)), ("job_id", num(id as f64))]),
+                Err(e) => control_err(e),
+            }
+        }
+        "status" => match doc.usize_at("job_id") {
+            Ok(id) => match inner.report(id as u64) {
+                Some(r) => obj(vec![("ok", num(1.0)), ("report", job_report_json(&r))]),
+                None => control_err(format!("no such job {id}")),
+            },
+            Err(_) => control_err("status needs a numeric \"job_id\""),
+        },
+        "result" => match doc.usize_at("job_id") {
+            Ok(id) => match inner.wait(id as u64, Duration::from_secs(600)) {
+                Ok(r) => obj(vec![("ok", num(1.0)), ("report", job_report_json(&r))]),
+                Err(e) => control_err(e),
+            },
+            Err(_) => control_err("result needs a numeric \"job_id\""),
+        },
+        "report" => obj(vec![("ok", num(1.0)), ("report", inner.report_json())]),
+        "shutdown" => {
+            inner.request_shutdown();
+            *wants_shutdown = true;
+            obj(vec![("ok", num(1.0))])
+        }
+        other => control_err(format!("unknown cmd {other:?}")),
+    }
+}

@@ -20,6 +20,8 @@ pub struct Cli {
     program: &'static str,
     about: &'static str,
     flags: Vec<FlagSpec>,
+    /// `(first flag index, title)` — section headers for `usage()`.
+    sections: Vec<(usize, &'static str)>,
     positional: Vec<(&'static str, &'static str)>,
 }
 
@@ -27,13 +29,21 @@ pub struct Cli {
 pub struct Args {
     values: BTreeMap<String, String>,
     bools: BTreeMap<String, bool>,
+    set: std::collections::BTreeSet<String>,
     positional: Vec<String>,
 }
 
 impl Cli {
     /// Parser for `program` with a one-line description.
     pub fn new(program: &'static str, about: &'static str) -> Self {
-        Cli { program, about, flags: Vec::new(), positional: Vec::new() }
+        Cli { program, about, flags: Vec::new(), sections: Vec::new(), positional: Vec::new() }
+    }
+
+    /// Start a named flag group; every flag declared after this call
+    /// (until the next `section`) renders under the title in `--help`.
+    pub fn section(mut self, title: &'static str) -> Self {
+        self.sections.push((self.flags.len(), title));
+        self
     }
 
     /// Declare `--name <value>` with a default.
@@ -72,7 +82,10 @@ impl Cli {
             out.push_str(&format!(" <{p}>"));
         }
         out.push_str(" [flags]\n\nFLAGS:\n");
-        for f in &self.flags {
+        for (i, f) in self.flags.iter().enumerate() {
+            if let Some(&(_, title)) = self.sections.iter().find(|&&(at, _)| at == i) {
+                out.push_str(&format!("\n{title}:\n"));
+            }
             let head = if f.is_bool {
                 format!("  --{}", f.name)
             } else if let Some(d) = &f.default {
@@ -92,6 +105,7 @@ impl Cli {
     pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
         let mut values = BTreeMap::new();
         let mut bools = BTreeMap::new();
+        let mut set = std::collections::BTreeSet::new();
         let mut positional = Vec::new();
         for f in &self.flags {
             if f.is_bool {
@@ -126,6 +140,7 @@ impl Cli {
                     };
                     values.insert(name.to_string(), v);
                 }
+                set.insert(name.to_string());
             } else {
                 positional.push(arg);
             }
@@ -138,7 +153,7 @@ impl Cli {
         if positional.len() > self.positional.len() {
             bail!("unexpected positional args {positional:?}\n\n{}", self.usage());
         }
-        Ok(Args { values, bools, positional })
+        Ok(Args { values, bools, set, positional })
     }
 
     /// Parse the process args.
@@ -176,6 +191,13 @@ impl Args {
     /// Boolean switch value (false if absent).
     pub fn get_bool(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    /// Whether the user passed `--name` explicitly (vs taking the
+    /// default). Lets `--config` files fill defaults without clobbering
+    /// flags given on the command line.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.set.contains(name)
     }
 
     /// The `i`-th positional argument, if given.
@@ -230,6 +252,30 @@ mod tests {
     #[test]
     fn unknown_flag_rejected() {
         assert!(cli().parse_from(argv(&["--nope", "1", "--dataset", "x"])).is_err());
+    }
+
+    #[test]
+    fn is_set_tracks_explicit_flags_only() {
+        let a = cli().parse_from(argv(&["--dataset", "c10", "--steps=5", "--verbose"])).unwrap();
+        assert!(a.is_set("steps"));
+        assert!(a.is_set("dataset"));
+        assert!(a.is_set("verbose"));
+        assert!(!a.is_set("lr")); // default taken, not passed
+    }
+
+    #[test]
+    fn sections_render_in_usage() {
+        let c = Cli::new("t", "test")
+            .section("RUN")
+            .flag("steps", "1", "steps")
+            .section("WIRE")
+            .flag("compress", "none", "codec");
+        let u = c.usage();
+        let run = u.find("RUN:").expect("RUN header");
+        let wire = u.find("WIRE:").expect("WIRE header");
+        let steps = u.find("--steps").unwrap();
+        let compress = u.find("--compress").unwrap();
+        assert!(run < steps && steps < wire && wire < compress);
     }
 
     #[test]

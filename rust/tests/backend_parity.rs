@@ -15,17 +15,16 @@ use d2ft::runtime::ParamStore;
 use d2ft::schedule::Budget;
 
 fn short_cfg() -> TrainerConfig {
-    TrainerConfig {
-        train_size: 160,
-        test_size: 32,
-        batches: 3,
-        pretrain_batches: 1,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar10Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 3, 1),
-        )
-    }
+    TrainerConfig::builder()
+        .dataset(SyntheticKind::Cifar10Like)
+        .scheduler(SchedulerKind::D2ft)
+        .budget(Budget::uniform(5, 3, 1))
+        .train_size(160)
+        .test_size(32)
+        .batches(3)
+        .pretrain_batches(1)
+        .build()
+        .expect("short config")
 }
 
 #[test]
@@ -89,15 +88,16 @@ fn loss_trajectories_track_from_shared_init() {
     // A native spec over the artifact set's exact model configuration;
     // parameter names/shapes mirror the manifest convention, so the
     // blob imports directly.
-    let spec = NativeSpec {
-        config: manifest.config.clone(),
-        micro_batch: manifest.micro_batch,
-        mb_variants: manifest.mb_variants.clone(),
-        lora_ranks: vec![],
-        lora_standard_rank: 0,
-        init_seed: 0,
-        threads: 1,
-    };
+    let spec = NativeSpec::builder()
+        .config(manifest.config.clone())
+        .micro_batch(manifest.micro_batch)
+        .mb_variants(manifest.mb_variants.clone())
+        .lora_ranks(vec![])
+        .lora_standard_rank(0)
+        .init_seed(0)
+        .threads(1)
+        .build()
+        .expect("parity spec");
     let mut native_be = NativeBackend::new(&spec, 0, manifest.micro_batch, 17);
     native_be
         .import_params(&store)

@@ -28,8 +28,8 @@ use d2ft::schedule::{Budget, MaskPair};
 use d2ft::util::proptest::check;
 
 fn small_spec() -> NativeSpec {
-    NativeSpec {
-        config: ModelConfig {
+    NativeSpec::builder()
+        .config(ModelConfig {
             img_size: 8,
             patch: 4,
             dim: 16,
@@ -40,27 +40,28 @@ fn small_spec() -> NativeSpec {
             lora_rank: 0,
             head_dim: 8,
             tokens: 5,
-        },
-        micro_batch: 2,
-        mb_variants: vec![],
-        lora_ranks: vec![2],
-        lora_standard_rank: 2,
-        init_seed: 0xD157,
+        })
+        .micro_batch(2)
+        .mb_variants(vec![])
+        .lora_ranks(vec![2])
+        .lora_standard_rank(2)
+        .init_seed(0xD157)
         // Acceptance: the bitwise serial ≡ dist contract must hold with
         // the parallel kernels engaged (threads > 1) and overlap on.
-        threads: 2,
-    }
+        .threads(2)
+        .build()
+        .expect("small spec")
 }
 
 fn cfg(scheduler: SchedulerKind) -> TrainerConfig {
-    TrainerConfig {
-        train_size: 120,
-        test_size: 24,
-        batches: 3,
-        pretrain_batches: 1,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(SyntheticKind::Cifar10Like, scheduler, Budget::uniform(5, 3, 1))
-    }
+    let mut c =
+        TrainerConfig::quick(SyntheticKind::Cifar10Like, scheduler, Budget::uniform(5, 3, 1));
+    c.train_size = 120;
+    c.test_size = 24;
+    c.batches = 3;
+    c.pretrain_batches = 1;
+    c.update = UpdateMode::BatchAccum;
+    c
 }
 
 fn bits(xs: &[f32]) -> Vec<u32> {
@@ -113,7 +114,8 @@ fn dist_trainer_matches_serial_trainer_bitwise() {
 fn param_server_matches_allreduce_bitwise() {
     let provider = NativeProvider::new(small_spec());
     let run = |exchange| {
-        let dcfg = DistConfig { exchange, ..DistConfig::new(cfg(SchedulerKind::D2ft), 2) };
+        let dcfg =
+            DistConfig::builder(cfg(SchedulerKind::D2ft), 2).exchange(exchange).build().unwrap();
         let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
         let r = dt.run().unwrap();
         (r, dt.backend().param("b01_wo").unwrap())
@@ -146,7 +148,10 @@ fn ring_and_hierarchical_match_serial_bitwise() {
     let serial_head = serial.backend().param("z_head_w").unwrap();
     for exchange in [ExchangeMode::Ring, ExchangeMode::Hierarchical] {
         for k in [1usize, 2, 4, 7] {
-            let dcfg = DistConfig { exchange, ..DistConfig::new(cfg(SchedulerKind::D2ft), k) };
+            let dcfg = DistConfig::builder(cfg(SchedulerKind::D2ft), k)
+                .exchange(exchange)
+                .build()
+                .unwrap();
             let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
             let rd = dt.run().unwrap();
             assert_eq!(
@@ -188,7 +193,8 @@ fn serialized_uplink_matches_pipelined_bitwise() {
     let mut serial = Trainer::new(&provider, cfg(SchedulerKind::D2ft)).unwrap();
     let rs = serial.run().unwrap();
     for overlap in [true, false] {
-        let dcfg = DistConfig { overlap, ..DistConfig::new(cfg(SchedulerKind::D2ft), 4) };
+        let dcfg =
+            DistConfig::builder(cfg(SchedulerKind::D2ft), 4).overlap(overlap).build().unwrap();
         let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
         let rd = dt.run().unwrap();
         assert_eq!(
@@ -214,10 +220,10 @@ fn param_server_with_idle_worker_stays_bitwise_serial() {
     let provider = NativeProvider::new(small_spec());
     let mut serial = Trainer::new(&provider, cfg(SchedulerKind::D2ft)).unwrap();
     let rs = serial.run().unwrap();
-    let dcfg = DistConfig {
-        exchange: ExchangeMode::ParamServer,
-        ..DistConfig::new(cfg(SchedulerKind::D2ft), 7)
-    };
+    let dcfg = DistConfig::builder(cfg(SchedulerKind::D2ft), 7)
+        .exchange(ExchangeMode::ParamServer)
+        .build()
+        .unwrap();
     let mut dt = DistTrainer::new(&provider, dcfg).unwrap();
     let rd = dt.run().unwrap();
     assert_eq!(rd.n_workers, 7);

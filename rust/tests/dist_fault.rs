@@ -49,8 +49,8 @@ use d2ft::schedule::Budget;
 use d2ft::tensor::Tensor;
 
 fn small_spec() -> NativeSpec {
-    NativeSpec {
-        config: ModelConfig {
+    NativeSpec::builder()
+        .config(ModelConfig {
             img_size: 8,
             patch: 4,
             dim: 16,
@@ -61,14 +61,15 @@ fn small_spec() -> NativeSpec {
             lora_rank: 0,
             head_dim: 8,
             tokens: 5,
-        },
-        micro_batch: 2,
-        mb_variants: vec![],
-        lora_ranks: vec![2],
-        lora_standard_rank: 2,
-        init_seed: 0xFA17,
-        threads: 1,
-    }
+        })
+        .micro_batch(2)
+        .mb_variants(vec![])
+        .lora_ranks(vec![2])
+        .lora_standard_rank(2)
+        .init_seed(0xFA17)
+        .threads(1)
+        .build()
+        .expect("small spec")
 }
 
 /// `train_size` 40 with micro-batch 2 × 5 micros = exactly 4 batches
@@ -77,18 +78,17 @@ fn small_spec() -> NativeSpec {
 /// pretraining: fault plans count gradient sends, and a kill scheduled
 /// "after micro 2" should mean fine-tuning micro 2, predictably.
 fn fault_cfg(batches: usize) -> TrainerConfig {
-    TrainerConfig {
-        train_size: 40,
-        test_size: 12,
-        batches,
-        pretrain_batches: 0,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar10Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 3, 1),
-        )
-    }
+    let mut c = TrainerConfig::quick(
+        SyntheticKind::Cifar10Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 3, 1),
+    );
+    c.train_size = 40;
+    c.test_size = 12;
+    c.batches = batches;
+    c.pretrain_batches = 0;
+    c.update = UpdateMode::BatchAccum;
+    c
 }
 
 /// Chaos-tuned control-plane knobs: fast heartbeats, a liveness window
@@ -172,11 +172,9 @@ fn kill_mid_epoch_completes_bitwise_on_survivors() {
     let (curve, sw, sh) = serial_reference(fault_cfg(4));
     for transport in [TransportKind::Channel, tcp_threads()] {
         for k in [2usize, 4] {
-            let dcfg = DistConfig {
-                transport: transport.clone(),
-                faults: vec![(0, FaultPlan::parse("kill-after-micro=2").unwrap())],
-                ..chaos(fault_cfg(4), k)
-            };
+            let mut dcfg = chaos(fault_cfg(4), k);
+            dcfg.transport = transport.clone();
+            dcfg.faults = vec![(0, FaultPlan::parse("kill-after-micro=2").unwrap())];
             let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
             let tag = format!("{} K={k}", r.transport);
             assert_eq!(r.evictions, 1, "{tag}: the killed worker must be evicted");
@@ -215,12 +213,10 @@ fn ring_kill_mid_epoch_reforms_the_chain_on_survivors() {
             (ExchangeMode::Ring, 4),
             (ExchangeMode::Hierarchical, 4),
         ] {
-            let dcfg = DistConfig {
-                transport: transport.clone(),
-                exchange,
-                faults: vec![(0, FaultPlan::parse("kill-after-micro=2").unwrap())],
-                ..chaos(fault_cfg(4), k)
-            };
+            let mut dcfg = chaos(fault_cfg(4), k);
+            dcfg.transport = transport.clone();
+            dcfg.exchange = exchange;
+            dcfg.faults = vec![(0, FaultPlan::parse("kill-after-micro=2").unwrap())];
             let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
             let tag = format!("{} {} K={k}", r.exchange, r.transport);
             assert_eq!(r.evictions, 1, "{tag}: the killed worker must be evicted");
@@ -252,12 +248,10 @@ fn ring_stall_past_the_window_reassigns_via_eviction() {
     // trajectory still cannot move by a bit.
     let (curve, sw, sh) = serial_reference(fault_cfg(2));
     for transport in [TransportKind::Channel, tcp_threads()] {
-        let dcfg = DistConfig {
-            transport,
-            exchange: ExchangeMode::Ring,
-            faults: vec![(1, FaultPlan::parse("stall-ms=1500@1").unwrap())],
-            ..chaos(fault_cfg(2), 2)
-        };
+        let mut dcfg = chaos(fault_cfg(2), 2);
+        dcfg.transport = transport;
+        dcfg.exchange = ExchangeMode::Ring;
+        dcfg.faults = vec![(1, FaultPlan::parse("stall-ms=1500@1").unwrap())];
         let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
         let tag = format!("ring {}", r.transport);
         assert_eq!(r.evictions, 1, "{tag}: a silent chain member must be evicted");
@@ -278,11 +272,9 @@ fn stall_is_reassigned_not_evicted() {
         // 1.5 s stall vs a 300 ms stall window: the barrier must
         // duplicate the stalled micro long before the slow copy lands,
         // while the heartbeat thread keeps the liveness detector quiet.
-        let dcfg = DistConfig {
-            transport,
-            faults: vec![(1, FaultPlan::parse("stall-ms=1500@1").unwrap())],
-            ..chaos(fault_cfg(2), 2)
-        };
+        let mut dcfg = chaos(fault_cfg(2), 2);
+        dcfg.transport = transport;
+        dcfg.faults = vec![(1, FaultPlan::parse("stall-ms=1500@1").unwrap())];
         let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
         let tag = &r.transport;
         assert_eq!(r.evictions, 0, "{tag}: slow-but-alive must not be evicted");
@@ -299,11 +291,9 @@ fn stall_is_reassigned_not_evicted() {
 fn dropped_uplink_frame_is_recovered_without_eviction() {
     let (curve, sw, sh) = serial_reference(fault_cfg(2));
     for transport in [TransportKind::Channel, tcp_threads()] {
-        let dcfg = DistConfig {
-            transport,
-            faults: vec![(0, FaultPlan::parse("drop-uplink=1").unwrap())],
-            ..chaos(fault_cfg(2), 2)
-        };
+        let mut dcfg = chaos(fault_cfg(2), 2);
+        dcfg.transport = transport;
+        dcfg.faults = vec![(0, FaultPlan::parse("drop-uplink=1").unwrap())];
         let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
         let tag = &r.transport;
         assert_eq!(r.evictions, 0, "{tag}: a lost frame is not a lost worker");
@@ -323,11 +313,9 @@ fn kill_then_rejoin_converges_with_fresh_state() {
         // so the bitwise assertion below doubles as proof that the
         // State transfer (params + momentum) actually installed.
         let plan = FaultPlan::parse("kill-after-micro=2;rejoin-at-epoch=1").unwrap();
-        let dcfg = DistConfig {
-            transport: transport.clone(),
-            faults: vec![(0, plan)],
-            ..chaos(fault_cfg(8), 2)
-        };
+        let mut dcfg = chaos(fault_cfg(8), 2);
+        dcfg.transport = transport.clone();
+        dcfg.faults = vec![(0, plan)];
         let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
         let tag = format!("{}", r.transport);
         assert_eq!(r.evictions, 1, "{tag}");
@@ -399,10 +387,8 @@ fn sigkill_subprocess_worker_is_evicted_and_the_run_completes() {
     let exe = env!("CARGO_BIN_EXE_repro");
     let (curve, sw, sh) = serial_reference(fault_cfg(8));
     let addr = free_addr();
-    let dcfg = DistConfig {
-        transport: TransportKind::Tcp { listen: addr.clone(), spawn: SpawnMode::External },
-        ..chaos(fault_cfg(8), 4)
-    };
+    let mut dcfg = chaos(fault_cfg(8), 4);
+    dcfg.transport = TransportKind::Tcp { listen: addr.clone(), spawn: SpawnMode::External };
     let rx = spawn_run(dcfg);
     // Three honest workers plus one victim, all real `repro
     // dist-worker` subprocesses over real sockets. The victim's
@@ -524,11 +510,9 @@ fn transient_reset_reconnects_without_eviction() {
     // under its learned identity: a reconnect, not an eviction, and
     // not a bit of numeric drift.
     let (curve, sw, sh) = serial_reference(fault_cfg(4));
-    let dcfg = DistConfig {
-        transport: tcp_threads(),
-        faults: vec![(1, FaultPlan::parse("reset-after-frame=6").unwrap())],
-        ..chaos(fault_cfg(4), 2)
-    };
+    let mut dcfg = chaos(fault_cfg(4), 2);
+    dcfg.transport = tcp_threads();
+    dcfg.faults = vec![(1, FaultPlan::parse("reset-after-frame=6").unwrap())];
     let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
     assert_eq!(r.evictions, 0, "a transient reset must heal, not evict");
     assert!(r.reconnects >= 1, "the redial must be counted, got {}", r.reconnects);
@@ -553,11 +537,9 @@ fn corrupt_frame_is_nacked_and_resent_not_evicted() {
     // over both the channel and TCP framing.
     let (curve, sw, sh) = serial_reference(fault_cfg(4));
     for transport in [TransportKind::Channel, tcp_threads()] {
-        let dcfg = DistConfig {
-            transport,
-            faults: vec![(1, FaultPlan::parse("corrupt-frame=7").unwrap())],
-            ..chaos(fault_cfg(4), 2)
-        };
+        let mut dcfg = chaos(fault_cfg(4), 2);
+        dcfg.transport = transport;
+        dcfg.faults = vec![(1, FaultPlan::parse("corrupt-frame=7").unwrap())];
         let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
         let tag = &r.transport;
         assert_eq!(r.evictions, 0, "{tag}: corruption is retryable, never an eviction");
@@ -578,11 +560,9 @@ fn partition_then_heal_converges_membership_without_eviction() {
     // land as a reconnect while the failed mid-partition dial attempts
     // are consumed and discarded by the accept loop.
     let (curve, sw, sh) = serial_reference(fault_cfg(4));
-    let dcfg = DistConfig {
-        transport: tcp_threads(),
-        faults: vec![(1, FaultPlan::parse("partition-ms=300@6").unwrap())],
-        ..chaos(fault_cfg(4), 2)
-    };
+    let mut dcfg = chaos(fault_cfg(4), 2);
+    dcfg.transport = tcp_threads();
+    dcfg.faults = vec![(1, FaultPlan::parse("partition-ms=300@6").unwrap())];
     let (r, w, h) = wait_run(&spawn_run(dcfg), 180);
     assert_eq!(r.evictions, 0, "a healed partition must not cost the worker its seat");
     assert!(r.reconnects >= 1, "got {} reconnects", r.reconnects);

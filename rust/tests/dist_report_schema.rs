@@ -1,25 +1,28 @@
-//! Golden test for the `--report-json` artifact shape.
+//! Golden tests for every `--report-json` artifact shape.
 //!
-//! The dist report JSON is a contract consumed outside this crate (the
-//! chaos CI step greps its counters, dashboards parse its byte totals),
-//! so its key set is pinned here exactly. Changing the shape must be a
-//! conscious act: add/remove the key below AND bump `schema_version` in
-//! [`DistReport::to_json`].
+//! All three report families (serial train, dist, per-tenant job) are
+//! JSON contracts consumed outside this crate — the chaos CI step greps
+//! the dist counters, the serve smoke asserts on job metering bytes,
+//! dashboards parse the byte totals — so each key set is pinned here
+//! exactly. Changing any shape must be a conscious act: add/remove the
+//! key below AND bump [`d2ft::report::SCHEMA_VERSION`] (shared by all
+//! three emitters in `src/report.rs`).
 #![cfg(feature = "native")]
 
 use d2ft::backend::native::{NativeProvider, NativeSpec};
-use d2ft::coordinator::{SchedulerKind, TrainerConfig, UpdateMode};
+use d2ft::coordinator::{SchedulerKind, Trainer, TrainerConfig, UpdateMode};
 use d2ft::data::SyntheticKind;
 use d2ft::dist::{DistConfig, DistTrainer};
+use d2ft::report::{job_report_json, train_report_json, JobReport, SCHEMA_VERSION};
 use d2ft::runtime::ModelConfig;
 use d2ft::schedule::Budget;
 use d2ft::util::json::Json;
 
-/// The pinned v3 key set, sorted (JSON objects render in BTreeMap
-/// order, so this is also the serialization order). v3 added the
-/// crash-recovery counters: `aggregator_restarts`, `frames_corrupt`,
-/// `reconnects`, `resends`.
-const GOLDEN_KEYS: &[&str] = &[
+/// The pinned dist-report key set, sorted (JSON objects render in
+/// BTreeMap order, so this is also the serialization order). v3 added
+/// the crash-recovery counters; v4 moved the emitter into the unified
+/// `report` module alongside the train and job schemas.
+const DIST_KEYS: &[&str] = &[
     "aggregator_restarts",
     "batches",
     "checkpoints_written",
@@ -49,10 +52,66 @@ const GOLDEN_KEYS: &[&str] = &[
     "workers",
 ];
 
-#[test]
-fn report_json_key_set_and_version_are_pinned() {
-    let provider = NativeProvider::new(NativeSpec {
-        config: ModelConfig {
+/// The pinned serial train-report key set (`repro train --report-json`
+/// without `--dist`), sorted.
+const TRAIN_KEYS: &[&str] = &[
+    "backend",
+    "batches",
+    "calib_epochs",
+    "calib_scale",
+    "calib_scale_full",
+    "calib_scale_fwd",
+    "comm_fraction",
+    "compute_fraction",
+    "engine",
+    "final_train_loss",
+    "imbalance",
+    "makespan_drift",
+    "makespan_ms",
+    "mean_exec_ms",
+    "sample_count_variance",
+    "scheduler",
+    "schema",
+    "schema_version",
+    "straggler_ms",
+    "test_loss",
+    "test_top1",
+    "utilization",
+    "wall_s",
+    "workload_variance",
+];
+
+/// The pinned per-tenant job-report key set (the serve metering
+/// contract), sorted.
+const JOB_KEYS: &[&str] = &[
+    "adapter_savings",
+    "batches_done",
+    "batches_quota",
+    "bytes_down",
+    "bytes_up",
+    "dense_state_bytes",
+    "error",
+    "final_train_loss",
+    "job_id",
+    "lora_rank",
+    "preemptions",
+    "priority",
+    "replica_swaps",
+    "rounds",
+    "schema",
+    "schema_version",
+    "state",
+    "step_ms_p50",
+    "step_ms_p99",
+    "tenant",
+    "test_loss",
+    "test_top1",
+    "wall_ms",
+];
+
+fn small_provider() -> NativeProvider {
+    let spec = NativeSpec::builder()
+        .config(ModelConfig {
             img_size: 8,
             patch: 4,
             dim: 16,
@@ -63,40 +122,54 @@ fn report_json_key_set_and_version_are_pinned() {
             lora_rank: 0,
             head_dim: 8,
             tokens: 5,
-        },
-        micro_batch: 2,
-        mb_variants: vec![],
-        lora_ranks: vec![2],
-        lora_standard_rank: 2,
-        init_seed: 0x90CD,
-        threads: 1,
-    });
-    let cfg = TrainerConfig {
-        train_size: 40,
-        test_size: 16,
-        batches: 2,
-        pretrain_batches: 1,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar10Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 3, 1),
-        )
-    };
-    let mut dt = DistTrainer::new(&provider, DistConfig::new(cfg, 2)).unwrap();
+        })
+        .micro_batch(2)
+        .mb_variants(vec![])
+        .lora_ranks(vec![2])
+        .lora_standard_rank(2)
+        .init_seed(0x90CD)
+        .threads(1)
+        .build()
+        .expect("schema spec");
+    NativeProvider::new(spec)
+}
+
+fn small_cfg() -> TrainerConfig {
+    let mut c = TrainerConfig::quick(
+        SyntheticKind::Cifar10Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 3, 1),
+    );
+    c.train_size = 40;
+    c.test_size = 16;
+    c.batches = 2;
+    c.pretrain_batches = 1;
+    c.update = UpdateMode::BatchAccum;
+    c
+}
+
+/// Round-trip a report through text and return its sorted key list —
+/// the golden contract is about the bytes a consumer parses, not the
+/// in-memory Json value.
+fn keys_of(doc: &Json) -> Vec<String> {
+    doc.as_obj().unwrap().keys().cloned().collect()
+}
+
+#[test]
+fn dist_report_key_set_and_version_are_pinned() {
+    let provider = small_provider();
+    let mut dt = DistTrainer::new(&provider, DistConfig::new(small_cfg(), 2)).unwrap();
     let report = dt.run().unwrap();
 
-    // Round-trip through text: the golden contract is about the bytes
-    // a consumer parses, not the in-memory Json value.
     let text = report.to_json().to_string_pretty();
     let doc = Json::parse(&text).unwrap();
-    let keys: Vec<&str> = doc.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
     assert_eq!(
-        keys, GOLDEN_KEYS,
-        "report-JSON key set drifted — bump schema_version and update this golden list"
+        keys_of(&doc),
+        DIST_KEYS,
+        "dist report-JSON key set drifted — bump SCHEMA_VERSION and update this golden list"
     );
-    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-dist-report-v3");
-    assert_eq!(doc.usize_at("schema_version").unwrap(), 3);
+    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-dist-report-v4");
+    assert_eq!(doc.usize_at("schema_version").unwrap(), SCHEMA_VERSION);
     assert_eq!(doc.usize_at("workers").unwrap(), 2);
     assert_eq!(doc.usize_at("live_workers").unwrap(), 2);
     // Spot-check value kinds a consumer depends on.
@@ -109,4 +182,67 @@ fn report_json_key_set_and_version_are_pinned() {
     assert_eq!(doc.usize_at("reconnects").unwrap(), 0);
     assert_eq!(doc.usize_at("frames_corrupt").unwrap(), 0);
     assert_eq!(doc.usize_at("resends").unwrap(), 0);
+}
+
+#[test]
+fn train_report_key_set_and_version_are_pinned() {
+    let provider = small_provider();
+    let mut t = Trainer::new(&provider, small_cfg()).unwrap();
+    let report = t.run().unwrap();
+
+    let text = train_report_json(&report).to_string_pretty();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(
+        keys_of(&doc),
+        TRAIN_KEYS,
+        "train report-JSON key set drifted — bump SCHEMA_VERSION and update this golden list"
+    );
+    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-train-report-v4");
+    assert_eq!(doc.usize_at("schema_version").unwrap(), SCHEMA_VERSION);
+    assert_eq!(doc.usize_at("batches").unwrap(), 2);
+    assert_eq!(doc.str_at("backend").unwrap(), "native");
+    doc.get("final_train_loss").unwrap().as_f64().unwrap();
+    doc.get("wall_s").unwrap().as_f64().unwrap();
+}
+
+#[test]
+fn job_report_key_set_and_version_are_pinned() {
+    // The job schema is pinned off a literal report: the serve
+    // integration tests exercise live values, while this golden cares
+    // only about the serialized key set.
+    let report = JobReport {
+        job_id: 7,
+        tenant: "acme".into(),
+        state: "completed".into(),
+        error: String::new(),
+        lora_rank: 2,
+        priority: 1,
+        batches_quota: 8,
+        batches_done: 8,
+        rounds: 2,
+        preemptions: 0,
+        replica_swaps: 2,
+        bytes_up: 4096,
+        bytes_down: 4096,
+        dense_state_bytes: 1 << 20,
+        adapter_savings: 0.99,
+        step_ms_p50: 1.5,
+        step_ms_p99: 3.0,
+        final_train_loss: 2.2,
+        test_top1: 0.25,
+        test_loss: 2.1,
+        wall_ms: 120.0,
+    };
+    let text = job_report_json(&report).to_string_pretty();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(
+        keys_of(&doc),
+        JOB_KEYS,
+        "job report-JSON key set drifted — bump SCHEMA_VERSION and update this golden list"
+    );
+    assert_eq!(doc.str_at("schema").unwrap(), "d2ft-job-report-v4");
+    assert_eq!(doc.usize_at("schema_version").unwrap(), SCHEMA_VERSION);
+    assert_eq!(doc.str_at("tenant").unwrap(), "acme");
+    assert_eq!(doc.usize_at("bytes_up").unwrap(), 4096);
+    doc.get("adapter_savings").unwrap().as_f64().unwrap();
 }

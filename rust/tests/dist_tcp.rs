@@ -35,8 +35,8 @@ use d2ft::schedule::Budget;
 use d2ft::tensor::Tensor;
 
 fn small_spec() -> NativeSpec {
-    NativeSpec {
-        config: ModelConfig {
+    NativeSpec::builder()
+        .config(ModelConfig {
             img_size: 8,
             patch: 4,
             dim: 16,
@@ -47,29 +47,29 @@ fn small_spec() -> NativeSpec {
             lora_rank: 0,
             head_dim: 8,
             tokens: 5,
-        },
-        micro_batch: 2,
-        mb_variants: vec![],
-        lora_ranks: vec![2],
-        lora_standard_rank: 2,
-        init_seed: 0x7C9,
-        threads: 1,
-    }
+        })
+        .micro_batch(2)
+        .mb_variants(vec![])
+        .lora_ranks(vec![2])
+        .lora_standard_rank(2)
+        .init_seed(0x7C9)
+        .threads(1)
+        .build()
+        .expect("small spec")
 }
 
 fn cfg() -> TrainerConfig {
-    TrainerConfig {
-        train_size: 80,
-        test_size: 16,
-        batches: 2,
-        pretrain_batches: 1,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar10Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 3, 1),
-        )
-    }
+    let mut c = TrainerConfig::quick(
+        SyntheticKind::Cifar10Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 3, 1),
+    );
+    c.train_size = 80;
+    c.test_size = 16;
+    c.batches = 2;
+    c.pretrain_batches = 1;
+    c.update = UpdateMode::BatchAccum;
+    c
 }
 
 /// Loopback TCP with in-process worker threads: every socket byte is
@@ -91,12 +91,12 @@ fn run_dist(
     overlap: bool,
     wire: WirePrecision,
 ) -> (DistReport, Tensor, Tensor) {
-    let dcfg = DistConfig {
-        transport,
-        overlap,
-        wire_precision: wire,
-        ..DistConfig::new(cfg(), workers)
-    };
+    let dcfg = DistConfig::builder(cfg(), workers)
+        .transport(transport)
+        .overlap(overlap)
+        .wire_precision(wire)
+        .build()
+        .expect("dist config");
     let mut dt = DistTrainer::new(provider, dcfg).expect("building dist trainer");
     let r = dt.run().expect("dist run");
     let w = dt.backend().param("b00_wqkv").unwrap();
@@ -207,11 +207,11 @@ fn spawn_trainer(
     let (tx, rx) = mpsc::channel();
     thread::spawn(move || {
         let provider = NativeProvider::new(small_spec());
-        let dcfg = DistConfig {
-            transport: TransportKind::Tcp { listen: addr, spawn: SpawnMode::External },
-            compress,
-            ..DistConfig::new(cfg(), workers)
-        };
+        let dcfg = DistConfig::builder(cfg(), workers)
+            .transport(TransportKind::Tcp { listen: addr, spawn: SpawnMode::External })
+            .compress(compress)
+            .build()
+            .expect("dist config");
         let result = DistTrainer::new(&provider, dcfg).and_then(|mut dt| dt.run());
         let _ = tx.send(result);
     });

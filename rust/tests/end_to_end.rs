@@ -14,13 +14,16 @@ use d2ft::data::SyntheticKind;
 use d2ft::schedule::Budget;
 
 fn short_cfg(scheduler: SchedulerKind, budget: Budget) -> TrainerConfig {
-    TrainerConfig {
-        train_size: 160,
-        test_size: 32,
-        batches: 3,
-        pretrain_batches: 1,
-        ..TrainerConfig::quick(SyntheticKind::Cifar10Like, scheduler, budget)
-    }
+    TrainerConfig::builder()
+        .dataset(SyntheticKind::Cifar10Like)
+        .scheduler(scheduler)
+        .budget(budget)
+        .train_size(160)
+        .test_size(32)
+        .batches(3)
+        .pretrain_batches(1)
+        .build()
+        .expect("short config")
 }
 
 #[test]
@@ -42,18 +45,17 @@ fn coordinator_suite() {
     println!("d2ft short run OK");
 
     // --- model learns on easy data over a slightly longer run ------------
-    let cfg = TrainerConfig {
-        batches: 14,
-        pretrain_batches: 8,
-        train_size: 240,
-        test_size: 40,
-        lr: 0.05,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar10Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 3, 1),
-        )
-    };
+    let cfg = TrainerConfig::builder()
+        .dataset(SyntheticKind::Cifar10Like)
+        .scheduler(SchedulerKind::D2ft)
+        .budget(Budget::uniform(5, 3, 1))
+        .batches(14)
+        .pretrain_batches(8)
+        .train_size(240)
+        .test_size(40)
+        .lr(0.05)
+        .build()
+        .expect("learning config");
     let mut t = Trainer::new(&provider, cfg).unwrap();
     let r = t.run().unwrap();
     // 10-way task on a 196-logit head: chance is far below 12%.
@@ -80,10 +82,8 @@ fn coordinator_suite() {
 
     // --- heterogeneity: merged partition trains --------------------------
     let body = provider.spec().config.body_subnets();
-    let cfg = TrainerConfig {
-        hetero: Some(HeteroSpec::memory(5)),
-        ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
-    };
+    let mut cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2));
+    cfg.hetero = Some(HeteroSpec::memory(5));
     let mut t = Trainer::new(&provider, cfg).unwrap();
     assert_eq!(t.partition().n_subnets(), body - 5);
     let r = t.run().unwrap();
@@ -91,17 +91,16 @@ fn coordinator_suite() {
     println!("hetero OK");
 
     // --- partition granularity wiring ------------------------------------
-    let cfg = TrainerConfig {
-        partition_group: 2,
-        ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2))
-    };
+    let mut cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 2, 2));
+    cfg.partition_group = 2;
     let t = Trainer::new(&provider, cfg).unwrap();
     assert_eq!(t.partition().n_subnets(), body / 2);
     println!("partition-group OK");
 
     // --- micro-batch variant (Table VI wiring) ---------------------------
-    let cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1));
-    let mut t = Trainer::new_with_micro_batch(&provider, cfg, 2).unwrap();
+    let mut cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1));
+    cfg.micro_batch = Some(2);
+    let mut t = Trainer::new(&provider, cfg).unwrap();
     assert_eq!(t.backend().micro_batch(), 2);
     let r = t.run().unwrap();
     assert!(r.final_train_loss.is_finite());
@@ -109,10 +108,8 @@ fn coordinator_suite() {
 
     // --- LoRA run: adapters train, base weights frozen --------------------
     let rank = provider.spec().lora_standard_rank;
-    let cfg = TrainerConfig {
-        lora_rank: rank,
-        ..short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1))
-    };
+    let mut cfg = short_cfg(SchedulerKind::D2ft, Budget::uniform(5, 3, 1));
+    cfg.lora_rank = rank;
     let mut t = Trainer::new(&provider, cfg).unwrap();
     let base_before = t.backend().param("b00_wqkv").unwrap();
     let adapter_before = t.backend().param("b00_lora_bq").unwrap();

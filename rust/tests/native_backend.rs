@@ -16,8 +16,8 @@ use d2ft::util::proptest::check;
 
 /// Small-but-structured spec: 2 blocks x 2 heads, 5 tokens.
 fn spec() -> NativeSpec {
-    NativeSpec {
-        config: ModelConfig {
+    NativeSpec::builder()
+        .config(ModelConfig {
             img_size: 8,
             patch: 4,
             dim: 16,
@@ -28,14 +28,15 @@ fn spec() -> NativeSpec {
             lora_rank: 0,
             head_dim: 8,
             tokens: 5,
-        },
-        micro_batch: 2,
-        mb_variants: vec![4],
-        lora_ranks: vec![1, 2, 4],
-        lora_standard_rank: 2,
-        init_seed: 0xD2F7,
-        threads: 1,
-    }
+        })
+        .micro_batch(2)
+        .mb_variants(vec![4])
+        .lora_ranks(vec![1, 2, 4])
+        .lora_standard_rank(2)
+        .init_seed(0xD2F7)
+        .threads(1)
+        .build()
+        .expect("test spec")
 }
 
 /// Same family at a different depth: parameters shared with `spec()`

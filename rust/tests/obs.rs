@@ -29,8 +29,8 @@ use d2ft::schedule::Budget;
 use d2ft::util::json::Json;
 
 fn small_provider() -> NativeProvider {
-    NativeProvider::new(NativeSpec {
-        config: ModelConfig {
+    let spec = NativeSpec::builder()
+        .config(ModelConfig {
             img_size: 8,
             patch: 4,
             dim: 16,
@@ -41,29 +41,30 @@ fn small_provider() -> NativeProvider {
             lora_rank: 0,
             head_dim: 8,
             tokens: 5,
-        },
-        micro_batch: 2,
-        mb_variants: vec![],
-        lora_ranks: vec![2],
-        lora_standard_rank: 2,
-        init_seed: 0x0B5,
-        threads: 1,
-    })
+        })
+        .micro_batch(2)
+        .mb_variants(vec![])
+        .lora_ranks(vec![2])
+        .lora_standard_rank(2)
+        .init_seed(0x0B5)
+        .threads(1)
+        .build()
+        .expect("obs spec");
+    NativeProvider::new(spec)
 }
 
 fn cfg() -> TrainerConfig {
-    TrainerConfig {
-        train_size: 80,
-        test_size: 16,
-        batches: 3,
-        pretrain_batches: 1,
-        update: UpdateMode::BatchAccum,
-        ..TrainerConfig::quick(
-            SyntheticKind::Cifar10Like,
-            SchedulerKind::D2ft,
-            Budget::uniform(5, 3, 1),
-        )
-    }
+    let mut c = TrainerConfig::quick(
+        SyntheticKind::Cifar10Like,
+        SchedulerKind::D2ft,
+        Budget::uniform(5, 3, 1),
+    );
+    c.train_size = 80;
+    c.test_size = 16;
+    c.batches = 3;
+    c.pretrain_batches = 1;
+    c.update = UpdateMode::BatchAccum;
+    c
 }
 
 fn bits(xs: &[f32]) -> Vec<u32> {
@@ -84,11 +85,11 @@ fn tracing_and_metrics_are_observation_only_and_artifact_is_well_formed() {
     let trace_path =
         std::env::temp_dir().join(format!("d2ft_obs_trace_{}.json", std::process::id()));
     let registry = Arc::new(Registry::new());
-    let dcfg = DistConfig {
-        trace_out: Some(trace_path.clone()),
-        metrics: Some(Arc::clone(&registry)),
-        ..DistConfig::new(cfg(), 2)
-    };
+    let dcfg = DistConfig::builder(cfg(), 2)
+        .trace_out(Some(trace_path.clone()))
+        .metrics(Some(Arc::clone(&registry)))
+        .build()
+        .expect("observed config");
     let mut traced = DistTrainer::new(&provider, dcfg).unwrap();
     let r_traced = traced.run().unwrap();
     let w_traced = traced.backend().param("b00_wqkv").unwrap();

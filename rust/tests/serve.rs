@@ -1,0 +1,210 @@
+//! The multi-tenant service's contracts, end to end:
+//!
+//! 1. **Bitwise tenant isolation** — two tenants fine-tuning
+//!    concurrently through one service (shared replicas, interleaved
+//!    rounds, adapter hot-swap between them) produce *bitwise* the same
+//!    trained adapter state as each job run alone in its own service.
+//!    The replica rebuilds every job's arithmetic from its `JobSpec`
+//!    (datasets, batch order, pretrain trajectory, select-once masks)
+//!    and the F32 dense codec round-trips state exactly, so co-tenancy
+//!    must be invisible in the bits.
+//! 2. **Admission + metering** — submissions are validated against the
+//!    fleet (model preset, rank >= 1, tenant cap), completed jobs meter
+//!    non-zero adapter bytes far below the dense full-state baseline,
+//!    and the aggregate report carries per-tenant byte totals.
+//! 3. **Transport parity** — the same jobs complete over real loopback
+//!    TCP replica links, and the control plane speaks the newline-JSON
+//!    protocol `repro job` uses.
+#![cfg(feature = "native")]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use d2ft::config::JobSpec;
+use d2ft::serve::{serve, ServeConfig};
+use d2ft::util::json::Json;
+
+const WAIT: Duration = Duration::from_secs(300);
+
+/// A short two-round job (8-batch quota over 4-batch rounds) so the
+/// adapter state round-trips server <-> replica mid-job.
+fn job(tenant: &str, seed: u64, rank: usize) -> JobSpec {
+    let mut s = JobSpec::default_for(tenant);
+    s.seed = seed;
+    s.lora_rank = rank;
+    s.pretrain_batches = 1;
+    s
+}
+
+/// Run one job alone in a fresh single-tenant service and return its
+/// completed adapter state.
+fn solo_state(spec: &JobSpec) -> (Vec<u8>, Vec<u8>) {
+    let mut handle = serve(ServeConfig::new()).expect("solo service");
+    let id = handle.submit(spec).expect("solo submit");
+    let r = handle.wait(id, WAIT).expect("solo job terminates");
+    assert_eq!(r.state, "completed", "solo run failed: {}", r.error);
+    let state = handle.final_state(id).expect("completed job exports state");
+    handle.shutdown();
+    state
+}
+
+#[test]
+fn concurrent_tenants_match_solo_runs_bitwise() {
+    let alice = job("alice", 101, 2);
+    let bob = job("bob", 202, 4);
+
+    // Both tenants through one service: different seeds, different
+    // adapter ranks, interleaved admission rounds on shared replicas.
+    let mut handle = serve(ServeConfig::new()).expect("shared service");
+    let a = handle.submit(&alice).expect("submit alice");
+    let b = handle.submit(&bob).expect("submit bob");
+    let ra = handle.wait(a, WAIT).expect("alice terminates");
+    let rb = handle.wait(b, WAIT).expect("bob terminates");
+    assert_eq!(ra.state, "completed", "alice failed: {}", ra.error);
+    assert_eq!(rb.state, "completed", "bob failed: {}", rb.error);
+    let state_a = handle.final_state(a).expect("alice state");
+    let state_b = handle.final_state(b).expect("bob state");
+
+    // Metering: both jobs ran their full quota across two rounds and
+    // shipped only adapter-sized blobs against the dense baseline.
+    for r in [&ra, &rb] {
+        assert_eq!(r.batches_done, r.batches_quota);
+        assert_eq!(r.rounds, 2, "8-batch quota over 4-batch rounds");
+        assert_eq!(r.replica_swaps, 2, "one hot-swap per admitted round");
+        assert!(r.bytes_up > 0 && r.bytes_down > 0, "adapter bytes must be metered");
+        assert!(r.dense_state_bytes > 0);
+        assert!(
+            r.adapter_savings > 0.5,
+            "tenant {}: adapter swap should be far below a dense swap (savings {})",
+            r.tenant,
+            r.adapter_savings
+        );
+        assert!(r.step_ms_p50 > 0.0 && r.step_ms_p99 >= r.step_ms_p50);
+        assert!(r.test_top1 >= 0.0, "finalized job carries an eval");
+        assert!(r.final_train_loss > 0.0 && r.final_train_loss.is_finite());
+    }
+    // Higher rank => strictly more adapter parameters on the wire.
+    assert!(rb.bytes_down > ra.bytes_down, "rank-4 state must outweigh rank-2 state");
+
+    // Aggregate report: per-tenant byte totals, both tenants present.
+    let report = handle.report_json();
+    let tenants = report.get("tenants").unwrap().as_arr().unwrap();
+    assert_eq!(tenants.len(), 2);
+    for t in tenants {
+        assert!(t.get("bytes_up").unwrap().as_f64().unwrap() > 0.0);
+        assert!(t.get("bytes_down").unwrap().as_f64().unwrap() > 0.0);
+    }
+    handle.shutdown();
+
+    // The isolation pin: co-tenancy is invisible in the bits.
+    assert_eq!(state_a, solo_state(&alice), "alice's adapter drifted under co-tenancy");
+    assert_eq!(state_b, solo_state(&bob), "bob's adapter drifted under co-tenancy");
+}
+
+#[test]
+fn submissions_are_validated_and_tenant_cap_enforced() {
+    let mut cfg = ServeConfig::new();
+    cfg.max_tenants = 1;
+    let handle = serve(cfg).expect("service");
+
+    // Wrong model preset for the fleet.
+    let mut wrong_model = job("carol", 7, 2);
+    wrong_model.model = "small".to_string();
+    assert!(handle.submit(&wrong_model).is_err(), "fleet hosts tiny, job asks small");
+
+    // Rank 0 is full fine-tuning — not multiplexable.
+    let mut full_ft = job("carol", 7, 2);
+    full_ft.lora_rank = 0;
+    assert!(handle.submit(&full_ft).is_err(), "rank-0 jobs must be rejected");
+
+    // A rank outside the preset's supported set fails the job at the
+    // replica (spec error, not a service crash).
+    // First occupy the single tenant slot...
+    let mut carol = job("carol", 7, 2);
+    carol.batches = 4;
+    let id = handle.submit(&carol).expect("carol fits the cap");
+    // ...a second distinct tenant bounces off the cap while carol is
+    // active (she may finish quickly, so tolerate either outcome only
+    // for the *same* tenant re-submitting).
+    let dave = job("dave", 8, 2);
+    let dave_res = handle.submit(&dave);
+    if let Ok(dave_id) = dave_res {
+        // Carol already finished; dave legitimately took the slot.
+        handle.wait(dave_id, WAIT).expect("dave terminates");
+    }
+    let r = handle.wait(id, WAIT).expect("carol terminates");
+    assert_eq!(r.state, "completed", "carol failed: {}", r.error);
+}
+
+#[test]
+fn unsupported_rank_fails_the_job_not_the_service() {
+    let handle = serve(ServeConfig::new()).expect("service");
+    let mut odd = job("erin", 9, 3); // tiny supports ranks {1, 2, 4, 8}
+    odd.batches = 4;
+    let id = handle.submit(&odd).expect("rank validity is a replica concern");
+    let r = handle.wait(id, WAIT).expect("job terminates");
+    assert_eq!(r.state, "failed");
+    assert!(r.error.contains("rank"), "error names the rank: {}", r.error);
+
+    // The service keeps serving after the failed job.
+    let ok = job("erin", 9, 2);
+    let id2 = handle.submit(&ok).expect("submit after failure");
+    let r2 = handle.wait(id2, WAIT).expect("job terminates");
+    assert_eq!(r2.state, "completed", "follow-up failed: {}", r2.error);
+}
+
+#[test]
+fn tcp_links_and_control_plane_smoke() {
+    let mut cfg = ServeConfig::new();
+    cfg.tcp = true;
+    cfg.control = Some("127.0.0.1:0".to_string());
+    let mut handle = serve(cfg).expect("tcp service");
+    let addr = handle.control_addr().expect("control plane bound").to_string();
+
+    // Submit over the control socket exactly as `repro job` does: one
+    // compact JSON object per line, one reply per line.
+    let mut spec = job("frank", 33, 2);
+    spec.batches = 4;
+    let stream = TcpStream::connect(&addr).expect("connect control plane");
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+    let req = format!(
+        "{}\n",
+        d2ft::util::json::obj(vec![
+            ("cmd", d2ft::util::json::s("submit")),
+            ("spec", spec.to_json()),
+        ])
+        .to_string_compact()
+    );
+    writer.write_all(req.as_bytes()).expect("send submit");
+    writer.flush().expect("flush");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read reply");
+    let doc = Json::parse(&line).expect("reply is JSON");
+    assert_eq!(doc.get("ok").unwrap().as_f64().unwrap(), 1.0, "submit rejected: {line}");
+    let id = doc.usize_at("job_id").expect("reply carries the job id") as u64;
+
+    // `result` blocks until terminal and returns the job report.
+    let req = format!(
+        "{}\n",
+        d2ft::util::json::obj(vec![
+            ("cmd", d2ft::util::json::s("result")),
+            ("job_id", d2ft::util::json::num(id as f64)),
+        ])
+        .to_string_compact()
+    );
+    writer.write_all(req.as_bytes()).expect("send result");
+    writer.flush().expect("flush");
+    line.clear();
+    reader.read_line(&mut line).expect("read result");
+    let doc = Json::parse(&line).expect("result is JSON");
+    assert_eq!(doc.get("ok").unwrap().as_f64().unwrap(), 1.0, "result errored: {line}");
+    let report = doc.get("report").unwrap();
+    assert_eq!(report.str_at("state").unwrap(), "completed");
+    assert_eq!(report.str_at("schema").unwrap(), "d2ft-job-report-v4");
+    assert!(report.get("bytes_up").unwrap().as_f64().unwrap() > 0.0);
+    drop(reader);
+    drop(writer);
+    handle.shutdown();
+}
